@@ -1,0 +1,157 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): full pipeline on a
+//! real small workload, proving all three layers compose.
+//!
+//! Pipeline: generate corpus → persist to DFS sequence files → load →
+//! RepSN + JobSN with the **AOT-compiled XLA matcher** (PJRT; Layer 2/1)
+//! → match quality vs ground truth → cluster-simulated speedups.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example dedup_publications -- \
+//!     --n 50000 --window 10 --matcher xla
+//! ```
+
+use std::sync::Arc;
+
+use snmr::data::corpus::{generate, CorpusConfig};
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
+use snmr::er::matcher::{NativeScorer, PairScorer};
+use snmr::er::quality::Quality;
+use snmr::er::strategy::MatchStrategyConfig;
+use snmr::mapreduce::seqfile;
+use snmr::mapreduce::sim::{simulate_job_chain, ClusterSpec};
+use snmr::metrics::report::{write_report, Table};
+use snmr::runtime::matcher_exec::XlaMatcher;
+use snmr::sn::partition::RangePartition;
+use snmr::sn::types::{SnConfig, SnMode};
+use snmr::sn::{jobsn, repsn};
+use snmr::util::cli::{flag, Args};
+use snmr::util::humanize;
+use snmr::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(
+        &[
+            flag("n", "corpus size (default 50000)"),
+            flag("window", "SN window (default 10)"),
+            flag("matcher", "xla | native (default xla, falls back)"),
+            flag("maps", "map tasks (default 8)"),
+            flag("workers", "worker slots (default 2)"),
+        ],
+        false,
+    )
+    .map_err(anyhow::Error::msg)?;
+    let n = args.get_usize("n", 50_000).map_err(anyhow::Error::msg)?;
+    let window = args.get_usize("window", 10).map_err(anyhow::Error::msg)?;
+    let maps = args.get_usize("maps", 8).map_err(anyhow::Error::msg)?;
+    let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
+
+    // ---- 1. generate + persist (DFS sequence-file round trip) -----------
+    println!("== generate ({n} entities) ==");
+    let corpus = generate(&CorpusConfig {
+        n_entities: n,
+        dup_fraction: 0.15,
+        seed: 0xE2E,
+        ..Default::default()
+    });
+    let records: Vec<_> = corpus.entities.iter().map(|e| e.to_record()).collect();
+    let bytes = seqfile::write_records(&records, true)?;
+    println!(
+        "  {} entities → {} compressed",
+        humanize::commas(n as u64),
+        humanize::bytes(bytes.len() as u64)
+    );
+    let loaded = seqfile::read_records(&bytes)?;
+    let entities: Vec<_> = loaded
+        .iter()
+        .map(|(k, v)| snmr::er::Entity::from_record(k, v))
+        .collect::<anyhow::Result<_>>()?;
+    assert_eq!(entities.len(), n);
+
+    // ---- 2. matcher backend (XLA preferred) ------------------------------
+    let scorer: Arc<dyn PairScorer> = match args.get_or("matcher", "xla") {
+        "native" => Arc::new(NativeScorer::default()),
+        _ => match XlaMatcher::load(&snmr::runtime::artifact::default_dir()) {
+            Ok(m) => {
+                println!("  matcher: XLA/PJRT (batch {})", m.preferred_batch());
+                Arc::new(m)
+            }
+            Err(e) => {
+                println!("  matcher: native (XLA unavailable: {e})");
+                Arc::new(NativeScorer::default())
+            }
+        },
+    };
+
+    // ---- 3. run RepSN and JobSN ------------------------------------------
+    let key = TitlePrefixKey::new(2);
+    let partitioner = Arc::new(RangePartition::balanced(&entities, |e| key.key(e), 10));
+    let cfg = SnConfig {
+        window,
+        num_map_tasks: maps,
+        workers,
+        partitioner,
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Matching(MatchStrategyConfig {
+            threshold: snmr::er::matcher::THRESHOLD,
+            scorer,
+        }),
+    };
+    let truth = corpus.truth_pairs();
+    let mut table = Table::new(
+        "E2E dedup (matching mode)",
+        &["variant", "jobs", "matches", "comparisons", "wall_s", "precision", "recall", "f1"],
+    );
+    let mut profiles = Vec::new();
+    for (name, run) in [
+        ("RepSN", repsn::run as fn(&[snmr::er::Entity], &SnConfig) -> anyhow::Result<snmr::sn::SnResult>),
+        ("JobSN", jobsn::run as fn(&[snmr::er::Entity], &SnConfig) -> anyhow::Result<snmr::sn::SnResult>),
+    ] {
+        println!("== {name} ==");
+        let t0 = std::time::Instant::now();
+        let res = run(&entities, &cfg)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let predicted: Vec<_> = res.matches.iter().map(|m| m.pair).collect();
+        let q = Quality::evaluate(&predicted, &truth);
+        table.row(vec![
+            name.to_string(),
+            res.stats.len().to_string(),
+            res.matches.len().to_string(),
+            res.counters.get("sn.window_comparisons").to_string(),
+            format!("{wall:.2}"),
+            format!("{:.3}", q.precision()),
+            format!("{:.3}", q.recall()),
+            format!("{:.3}", q.f1()),
+        ]);
+        if name == "RepSN" {
+            profiles = res.profiles.clone();
+        }
+    }
+    println!("\n{}", table.render());
+
+    // ---- 4. simulated cluster speedups (Fig 8 methodology) ---------------
+    let mut sim = Table::new(
+        "RepSN on simulated paper-like clusters",
+        &["cores", "time_s", "speedup"],
+    );
+    let mut t1 = None;
+    for cores in [1usize, 2, 4, 8] {
+        let (_, total) = simulate_job_chain(&profiles, &ClusterSpec::paper_like(cores));
+        let t1v = *t1.get_or_insert(total);
+        sim.row(vec![
+            cores.to_string(),
+            format!("{total:.1}"),
+            format!("{:.2}", t1v / total),
+        ]);
+    }
+    println!("{}", sim.render());
+
+    let report = Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("window", Json::num(window as f64)),
+        ("results", table.to_json()),
+        ("simulated", sim.to_json()),
+    ]);
+    let path = write_report("e2e_dedup", &report)?;
+    println!("report written to {}", path.display());
+    Ok(())
+}

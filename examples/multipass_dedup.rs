@@ -1,0 +1,87 @@
+//! Multi-pass Sorted Neighborhood (§4's robustness extension): run RepSN
+//! twice with different blocking keys and union the results — dirty title
+//! prefixes no longer doom recall.
+//!
+//! ```bash
+//! cargo run --release --example multipass_dedup -- --n 10000
+//! ```
+
+use std::sync::Arc;
+
+use snmr::data::corpus::{generate, CorpusConfig};
+use snmr::data::noise::NoiseConfig;
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey, TitleSuffixKey};
+use snmr::er::quality::Quality;
+use snmr::er::strategy::MatchStrategyConfig;
+use snmr::sn::multipass;
+use snmr::sn::partition::RangePartition;
+use snmr::sn::types::{SnConfig, SnMode};
+use snmr::util::cli::{flag, Args};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[flag("n", "corpus size (default 10000)")], false)
+        .map_err(anyhow::Error::msg)?;
+    let n = args.get_usize("n", 10_000).map_err(anyhow::Error::msg)?;
+
+    // extra-dirty corpus: more first-word typos → prefix key suffers
+    let corpus = generate(&CorpusConfig {
+        n_entities: n,
+        dup_fraction: 0.15,
+        noise: NoiseConfig {
+            title_edits: 3.0,
+            ..Default::default()
+        },
+        seed: 0xD1127,
+        ..Default::default()
+    });
+    let truth = corpus.truth_pairs();
+    println!(
+        "corpus: {} entities, {} truth pairs (dirty titles)",
+        corpus.entities.len(),
+        truth.len()
+    );
+
+    let prefix = TitlePrefixKey::new(2);
+    let base = SnConfig {
+        window: 10,
+        num_map_tasks: 8,
+        workers: 2,
+        partitioner: Arc::new(RangePartition::balanced(
+            &corpus.entities,
+            |e| prefix.key(e),
+            10,
+        )),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Matching(MatchStrategyConfig::default()),
+    };
+    let keys: Vec<Arc<dyn BlockingKey>> = vec![
+        Arc::new(TitlePrefixKey::new(2)),
+        Arc::new(TitleSuffixKey),
+    ];
+    let res = multipass::run(&corpus.entities, &base, &keys)?;
+
+    for (i, (pass, newly)) in res.per_pass.iter().zip(&res.new_per_pass).enumerate() {
+        let predicted: Vec<_> = pass.matches.iter().map(|m| m.pair).collect();
+        let q = Quality::evaluate(&predicted, &truth);
+        println!(
+            "pass {} ({}): {} matches ({} new)  P {:.3}  R {:.3}",
+            i + 1,
+            keys[i].name(),
+            pass.matches.len(),
+            newly,
+            q.precision(),
+            q.recall()
+        );
+    }
+    let predicted: Vec<_> = res.union.matches.iter().map(|m| m.pair).collect();
+    let q = Quality::evaluate(&predicted, &truth);
+    println!(
+        "union: {} matches  P {:.3}  R {:.3}  F1 {:.3}",
+        predicted.len(),
+        q.precision(),
+        q.recall(),
+        q.f1()
+    );
+    println!("\nExpected: union recall > each single pass (multi-pass SN, §4).");
+    Ok(())
+}

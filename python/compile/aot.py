@@ -1,0 +1,129 @@
+"""AOT compile path: lower the L2 matcher to HLO **text** artifacts.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the ``xla`` crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text
+parser on the Rust side (``HloModuleProto::from_text_file``) reassigns ids
+and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Artifacts written (per batch-size variant B):
+
+    matcher_b{B}.hlo.txt        full two-matcher model (4 outputs)
+    title_matcher_b{B}.hlo.txt  title-only first-pass model (1 output)
+    manifest.json               shapes/dtypes/constants for the Rust loader
+
+The Rust runtime (`rust/src/runtime/artifact.rs`) reads ``manifest.json`` to
+discover variants and validate shapes at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import TITLE_LEN, BITMAP_WORDS
+
+# Batch-size variants compiled by default.  The L3 batcher picks the
+# smallest variant that fits a pair block, padding the tail.
+DEFAULT_BATCH_SIZES = (64, 256, 1024)
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_matcher(batch: int) -> str:
+    """Lower the full matcher for one batch-size variant."""
+    t = jax.ShapeDtypeStruct((batch, TITLE_LEN), jnp.int32)
+    v = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    g = jax.ShapeDtypeStruct((batch, BITMAP_WORDS), jnp.int32)
+    lowered = jax.jit(model.matcher).lower(t, t, v, v, g, g)
+    return to_hlo_text(lowered)
+
+
+def lower_title_matcher(batch: int) -> str:
+    """Lower the title-only first-pass matcher."""
+    t = jax.ShapeDtypeStruct((batch, TITLE_LEN), jnp.int32)
+    v = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lowered = jax.jit(model.title_matcher).lower(t, t, v, v)
+    return to_hlo_text(lowered)
+
+
+def build_manifest(batch_sizes) -> dict:
+    """Manifest consumed by rust/src/runtime/artifact.rs."""
+    return {
+        "version": MANIFEST_VERSION,
+        "title_len": TITLE_LEN,
+        "bitmap_words": BITMAP_WORDS,
+        "w_title": model.W_TITLE,
+        "w_abstract": model.W_ABSTRACT,
+        "threshold": model.THRESHOLD,
+        "variants": [
+            {
+                "batch": b,
+                "matcher": f"matcher_b{b}.hlo.txt",
+                "title_matcher": f"title_matcher_b{b}.hlo.txt",
+                "outputs": ["score", "sim_title", "sim_abstract", "skipped"],
+            }
+            for b in batch_sizes
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="directory to write artifacts into")
+    ap.add_argument("--out", default=None,
+                    help="(compat) single-file output; writes the b256 "
+                         "matcher there in addition to --out-dir")
+    ap.add_argument("--batch-sizes", default=",".join(
+        str(b) for b in DEFAULT_BATCH_SIZES))
+    args = ap.parse_args()
+
+    batch_sizes = [int(s) for s in args.batch_sizes.split(",") if s]
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for b in batch_sizes:
+        text = lower_matcher(b)
+        path = os.path.join(args.out_dir, f"matcher_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+        text = lower_title_matcher(b)
+        path = os.path.join(args.out_dir, f"title_matcher_b{b}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = build_manifest(batch_sizes)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+    if args.out:
+        # Back-compat with the scaffold Makefile's single-artifact target.
+        with open(args.out, "w") as f:
+            f.write(lower_matcher(256))
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

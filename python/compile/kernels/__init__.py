@@ -1,0 +1,34 @@
+"""Layer-1 Pallas kernels for the batched pair-similarity matcher.
+
+The matching strategy of the paper (edit distance on the title, trigram
+similarity on the abstract, weighted average, threshold 0.75) is the compute
+hot-spot of the whole entity-resolution workflow: Sorted Neighborhood
+produces ``(n - w/2) * (w - 1)`` candidate pairs and every one of them is
+scored.  These kernels score a *batch* of pairs at once so the Layer-3 Rust
+coordinator can amortize the PJRT dispatch overhead.
+
+Kernels
+-------
+``levenshtein``  batched edit-distance similarity over fixed-length,
+                 zero-padded integer code sequences (titles).
+``trigram``      batched Dice similarity over packed trigram bitmaps
+                 (abstracts), using ``lax.population_count``.
+
+Both are written with ``pl.pallas_call(..., interpret=True)``: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so interpret mode is the
+correctness path; TPU performance is estimated analytically in DESIGN.md §7.
+``ref.py`` holds the pure-``jnp`` oracles the kernels are tested against.
+"""
+
+from .levenshtein import levenshtein_similarity, TITLE_LEN
+from .trigram import trigram_dice, BITMAP_WORDS, BITMAP_BITS
+from . import ref
+
+__all__ = [
+    "levenshtein_similarity",
+    "trigram_dice",
+    "ref",
+    "TITLE_LEN",
+    "BITMAP_WORDS",
+    "BITMAP_BITS",
+]

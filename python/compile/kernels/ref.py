@@ -1,0 +1,116 @@
+"""Pure-``jnp`` (and pure-Python) correctness oracles for the L1 kernels.
+
+These are the ground truth the Pallas kernels are validated against in
+``python/tests/``.  Two tiers:
+
+* ``*_jnp``   — vectorized jnp implementations with *independent* structure
+  (no cummin trick, no pallas): used for allclose sweeps over shapes.
+* ``levenshtein_py`` — the textbook O(L^2) scalar DP: used to validate the
+  jnp oracle itself on small cases, closing the loop.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def levenshtein_py(a, b) -> int:
+    """Textbook Wagner–Fischer edit distance on Python sequences."""
+    la, lb = len(a), len(b)
+    prev = list(range(lb + 1))
+    for i in range(1, la + 1):
+        cur = [i] + [0] * lb
+        for j in range(1, lb + 1):
+            cost = 0 if a[i - 1] == b[j - 1] else 1
+            cur[j] = min(prev[j - 1] + cost, prev[j] + 1, cur[j - 1] + 1)
+        prev = cur
+    return prev[lb]
+
+
+def levenshtein_sim_py(a, b) -> float:
+    """Similarity form of :func:`levenshtein_py` (matches kernel contract)."""
+    m = max(len(a), len(b))
+    if m == 0:
+        return 1.0
+    return 1.0 - levenshtein_py(a, b) / m
+
+
+def levenshtein_similarity_jnp(a, b, la, lb):
+    """Vectorized oracle: per-lane full DP using a scan over rows.
+
+    Deliberately written *without* the min-plus cummin trick the kernel
+    uses: the insertion term is resolved with an inner ``fori_loop``, i.e. a
+    genuinely sequential scan, so a bug in the kernel's scan identity cannot
+    be mirrored here.
+    """
+    bsz, l = a.shape
+    js = jnp.arange(l + 1, dtype=jnp.int32)
+    prev = jnp.broadcast_to(js, (bsz, l + 1)).astype(jnp.int32)
+    lb_col = lb[:, None]
+    ans0 = jnp.take_along_axis(prev, lb_col, axis=1)[:, 0]
+
+    def row(i, carry):
+        prev, ans = carry
+        ai = jax.lax.dynamic_slice_in_dim(a, i - 1, 1, axis=1)
+        sub_cost = (ai != b).astype(jnp.int32)
+        diag = prev[:, :-1] + sub_cost
+        above = prev[:, 1:] + 1
+        e = jnp.minimum(diag, above)  # candidates for j=1..L
+
+        def inner(j, cur):
+            # cur[:, j] = min(e[:, j-1], cur[:, j-1] + 1)
+            left = jax.lax.dynamic_slice_in_dim(cur, j - 1, 1, axis=1)[:, 0]
+            ej = jax.lax.dynamic_slice_in_dim(e, j - 1, 1, axis=1)[:, 0]
+            val = jnp.minimum(ej, left + 1)
+            return jax.lax.dynamic_update_slice_in_dim(
+                cur, val[:, None], j, axis=1
+            )
+
+        cur0 = jnp.concatenate(
+            [jnp.full((bsz, 1), i, dtype=jnp.int32),
+             jnp.zeros((bsz, l), dtype=jnp.int32)],
+            axis=1,
+        )
+        cur = jax.lax.fori_loop(1, l + 1, inner, cur0)
+        picked = jnp.take_along_axis(cur, lb_col, axis=1)[:, 0]
+        ans = jnp.where(la == i, picked, ans)
+        return cur, ans
+
+    _, ans = jax.lax.fori_loop(1, l + 1, row, (prev, ans0))
+    denom = jnp.maximum(jnp.maximum(la, lb), 1).astype(jnp.float32)
+    sim = 1.0 - ans.astype(jnp.float32) / denom
+    return jnp.where(jnp.maximum(la, lb) == 0, 1.0, sim)
+
+
+def trigram_dice_jnp(a, b):
+    """Vectorized oracle for the bitmap Dice kernel.
+
+    Counts bits via an arithmetic popcount (bit-slicing), not
+    ``lax.population_count``, for implementation independence.
+    """
+
+    def popcount32(x):
+        x = x - ((x >> 1) & jnp.uint32(0x55555555))
+        x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+        x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+        return ((x * jnp.uint32(0x01010101)) >> 24) & jnp.uint32(0x3F)
+
+    ax = a.astype(jnp.uint32)
+    bx = b.astype(jnp.uint32)
+    inter = popcount32(ax & bx).astype(jnp.int32).sum(axis=1)
+    ca = popcount32(ax).astype(jnp.int32).sum(axis=1)
+    cb = popcount32(bx).astype(jnp.int32).sum(axis=1)
+    denom = (ca + cb).astype(jnp.float32)
+    dice = 2.0 * inter.astype(jnp.float32) / jnp.maximum(denom, 1.0)
+    return jnp.where(denom == 0.0, 1.0, dice)
+
+
+def matcher_ref(ta, tb, la, lb, ga, gb, *, w_title=0.5, w_abstract=0.5,
+                threshold=0.75):
+    """Full-matcher oracle mirroring ``model.matcher`` semantics."""
+    sim_t = levenshtein_similarity_jnp(ta, tb, la, lb)
+    sim_g = trigram_dice_jnp(ga, gb)
+    score = w_title * sim_t + w_abstract * sim_g
+    # Short-circuit accounting: pairs where matcher 1 alone already rules
+    # out reaching the threshold even with a perfect matcher-2 score.
+    skipped = (w_title * sim_t + w_abstract * 1.0) < threshold
+    return score, sim_t, sim_g, skipped.astype(jnp.float32)

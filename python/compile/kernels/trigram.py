@@ -1,0 +1,72 @@
+"""Batched trigram Dice similarity over packed bitmaps as a Pallas kernel.
+
+The paper's second matcher is "TriGram on abstract".  Exact trigram-set Dice
+requires variable-length set intersection — hostile to a vector machine.  We
+instead hash every character trigram of the (normalized) abstract into a
+fixed ``BITMAP_BITS``-bit Bloom-style bitmap **once**, Rust-side, at map
+time (``rust/src/runtime/encode.rs``), and compute
+
+    dice(A, B) = 2 * popcount(A & B) / (popcount(A) + popcount(B))
+
+over ``int32[B, W]`` packed words with ``lax.population_count``.  This is a
+pure elementwise + row-reduction kernel: one VMEM tile of ``(B_tile, W)``
+words per operand, VPU-bound, no MXU.  With 2048 bits the collision-induced
+Dice error for typical abstracts (~400 distinct trigrams) is < 2% — measured
+in ``rust/tests/`` against the exact set computation, and irrelevant for the
+reproduction since *both* the native and XLA matchers use the same bitmaps.
+
+Empty-vs-empty abstracts are defined as similarity 1.0 (identical), matching
+the reference oracle and the Rust native matcher.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Bitmap geometry.  Must match rust/src/runtime/encode.rs.
+BITMAP_BITS = 2048
+BITMAP_WORDS = BITMAP_BITS // 32  # 64 int32 words
+
+DEFAULT_BLOCK_B = 256
+
+
+def _trigram_kernel(a_ref, b_ref, out_ref):
+    """Kernel body: Dice over one batch tile of packed bitmaps."""
+    a = a_ref[...]
+    b = b_ref[...]
+    inter = jax.lax.population_count(a & b).sum(axis=1)
+    ca = jax.lax.population_count(a).sum(axis=1)
+    cb = jax.lax.population_count(b).sum(axis=1)
+    denom = (ca + cb).astype(jnp.float32)
+    dice = 2.0 * inter.astype(jnp.float32) / jnp.maximum(denom, 1.0)
+    out_ref[...] = jnp.where(denom == 0.0, 1.0, dice)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def trigram_dice(a, b, *, block_b: int = DEFAULT_BLOCK_B):
+    """Batched Dice similarity of packed trigram bitmaps.
+
+    Args:
+        a, b: ``int32[B, W]`` packed bitmaps (W = :data:`BITMAP_WORDS`).
+        block_b: batch tile size per grid step.
+
+    Returns:
+        ``float32[B]`` Dice coefficients in ``[0, 1]``.
+    """
+    bsz, w = a.shape
+    if bsz % block_b != 0:
+        block_b = bsz
+    grid = (bsz // block_b,)
+    return pl.pallas_call(
+        _trigram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, w), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bsz,), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,48 @@
+"""AOT lowering smoke tests: HLO text is produced and structurally sound."""
+
+import json
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def hlo_b64():
+    return aot.lower_matcher(64)
+
+
+def test_lowering_produces_hlo_text(hlo_b64):
+    assert "HloModule" in hlo_b64
+    assert "ENTRY" in hlo_b64
+    # 6 parameters: ta, tb, la, lb, ga, gb
+    assert hlo_b64.count("parameter(") >= 6
+
+
+def test_lowering_batch_shape_in_entry(hlo_b64):
+    # title operands show up with the requested batch size
+    assert "s32[64,64]" in hlo_b64
+    # the root is a tuple of four f32[64] outputs (return_tuple=True)
+    assert "f32[64]" in hlo_b64
+
+
+def test_title_matcher_lowering():
+    text = aot.lower_title_matcher(64)
+    assert "HloModule" in text
+    assert "s32[64,64]" in text
+
+
+def test_manifest_contents(tmp_path):
+    m = aot.build_manifest([64, 256])
+    assert m["title_len"] == 64
+    assert m["bitmap_words"] == 64
+    assert m["threshold"] == 0.75
+    assert [v["batch"] for v in m["variants"]] == [64, 256]
+    # round-trips as json
+    s = json.dumps(m)
+    assert json.loads(s) == m
+
+
+def test_no_custom_calls_in_hlo(hlo_b64):
+    """interpret=True must lower pallas to plain HLO (no Mosaic)."""
+    assert "custom-call" not in hlo_b64 or "mosaic" not in hlo_b64.lower()

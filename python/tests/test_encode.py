@@ -1,0 +1,87 @@
+"""Encoding spec tests (the executable contract with encode.rs)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import encode
+
+
+def test_char_codes():
+    assert encode.char_code("a") == 1
+    assert encode.char_code("z") == 26
+    assert encode.char_code("A") == 1  # case folded
+    assert encode.char_code("0") == 27
+    assert encode.char_code("9") == 36
+    assert encode.char_code(" ") == 37
+    assert encode.char_code("!") == 38
+    assert encode.char_code("ü") == 38
+
+
+def test_encode_title_pads_and_truncates():
+    codes, n = encode.encode_title("ab")
+    assert n == 2
+    assert codes[:2] == [1, 2]
+    assert codes[2:] == [0] * (encode.TITLE_LEN - 2)
+    long = "x" * 100
+    codes, n = encode.encode_title(long)
+    assert n == encode.TITLE_LEN
+    assert len(codes) == encode.TITLE_LEN
+
+
+def test_fnv1a64_known_vectors():
+    # Published FNV-1a 64 test vectors
+    assert encode.fnv1a64(b"") == 0xCBF29CE484222325
+    assert encode.fnv1a64(b"a") == 0xAF63DC4C8601EC8C
+    assert encode.fnv1a64(b"foobar") == 0x85944171F73967E8
+
+
+def test_normalize_text():
+    assert encode.normalize_text("Hello,   World!!") == "hello world"
+    assert encode.normalize_text("  a--b  ") == "a b"
+    assert encode.normalize_text("...") == ""
+    assert encode.normalize_text("Tab\tand\nnewline") == "tab and newline"
+
+
+def test_trigrams():
+    assert encode.trigrams("abcd") == ["abc", "bcd"]
+    assert encode.trigrams("ab") == ["ab"]
+    assert encode.trigrams("") == []
+    assert encode.trigrams("A  B") == ["a b"]
+
+
+def test_bitmap_determinism_and_popcount():
+    w1 = encode.encode_bitmap("some abstract text")
+    w2 = encode.encode_bitmap("some abstract text")
+    assert w1 == w2
+    bits = sum(bin(w & 0xFFFFFFFF).count("1") for w in w1)
+    grams = set(encode.trigrams("some abstract text"))
+    assert 0 < bits <= len(grams)
+
+
+def test_words_as_i32_roundtrip():
+    words = [0, 1, 0x7FFFFFFF, 0x80000000, 0xFFFFFFFF]
+    as_i32 = encode.words_as_i32(words)
+    assert as_i32 == [0, 1, 0x7FFFFFFF, -(1 << 31), -1]
+    back = [w & 0xFFFFFFFF for w in as_i32]
+    assert back == words
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.text(min_size=0, max_size=200))
+def test_encode_never_crashes_and_is_stable(s):
+    codes, n = encode.encode_title(s)
+    assert len(codes) == encode.TITLE_LEN
+    assert 0 <= n <= encode.TITLE_LEN
+    assert all(0 <= c <= 38 for c in codes)
+    assert encode.encode_bitmap(s) == encode.encode_bitmap(s)
+
+
+def test_golden_generation(tmp_path):
+    path = tmp_path / "golden.json"
+    encode.gen_golden(str(path))
+    import json
+    data = json.loads(path.read_text())
+    assert data["title_len"] == encode.TITLE_LEN
+    assert len(data["cases"]) == len(encode.GOLDEN_STRINGS)
+    empty = data["cases"][0]
+    assert empty["fnv1a64_hex"] == "cbf29ce484222325"

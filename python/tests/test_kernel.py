@@ -1,0 +1,197 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Three-tier validation chain:
+  scalar python DP  ⟷  jnp oracle (ref.py)  ⟷  Pallas kernel
+
+plus hypothesis sweeps over shapes, lengths, and alphabets.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    levenshtein_similarity,
+    trigram_dice,
+    ref,
+    TITLE_LEN,
+    BITMAP_WORDS,
+)
+from compile import encode
+
+
+def enc_batch(strings_a, strings_b):
+    """Encode two lists of strings into kernel input arrays."""
+    assert len(strings_a) == len(strings_b)
+    ta, la, tb, lb = [], [], [], []
+    for a, b in zip(strings_a, strings_b):
+        ca, na = encode.encode_title(a)
+        cb, nb = encode.encode_title(b)
+        ta.append(ca)
+        la.append(na)
+        tb.append(cb)
+        lb.append(nb)
+    return (
+        jnp.array(ta, jnp.int32),
+        jnp.array(tb, jnp.int32),
+        jnp.array(la, jnp.int32),
+        jnp.array(lb, jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tier 1: jnp oracle vs textbook scalar DP
+# ---------------------------------------------------------------------------
+
+KNOWN_DISTANCES = [
+    ("", "", 0),
+    ("a", "", 1),
+    ("", "abc", 3),
+    ("kitten", "sitting", 3),
+    ("flaw", "lawn", 2),
+    ("intention", "execution", 5),
+    ("abc", "abc", 0),
+    ("abc", "acb", 2),
+    ("sorted neighborhood", "sorted neighbourhood", 1),
+]
+
+
+@pytest.mark.parametrize("a,b,d", KNOWN_DISTANCES)
+def test_scalar_dp_known_distances(a, b, d):
+    assert ref.levenshtein_py(a, b) == d
+
+
+@pytest.mark.parametrize("a,b,d", KNOWN_DISTANCES)
+def test_jnp_oracle_matches_scalar(a, b, d):
+    ta, tb, la, lb = enc_batch([a], [b])
+    sim = np.asarray(ref.levenshtein_similarity_jnp(ta, tb, la, lb))[0]
+    m = max(len(a), len(b))
+    expect = 1.0 if m == 0 else 1.0 - d / m
+    assert sim == pytest.approx(expect, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Tier 2: Pallas kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+def test_kernel_matches_oracle_fixed_batch():
+    strings = [a for a, _, _ in KNOWN_DISTANCES]
+    others = [b for _, b, _ in KNOWN_DISTANCES]
+    # pad batch to 16 with self-pairs
+    while len(strings) < 16:
+        strings.append("padding title xyz")
+        others.append("padding title xyz")
+    ta, tb, la, lb = enc_batch(strings, others)
+    got = np.asarray(levenshtein_similarity(ta, tb, la, lb, block_b=8))
+    want = np.asarray(ref.levenshtein_similarity_jnp(ta, tb, la, lb))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_kernel_self_similarity_is_one():
+    strings = ["alpha beta", "x", "", "some very long title " * 3]
+    ta, tb, la, lb = enc_batch(strings, strings)
+    got = np.asarray(levenshtein_similarity(ta, tb, la, lb, block_b=4))
+    np.testing.assert_allclose(got, np.ones(4), atol=1e-6)
+
+
+text_strategy = st.text(
+    alphabet=st.sampled_from("abcdefgh 0123!?"), min_size=0, max_size=TITLE_LEN
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(text_strategy, text_strategy),
+                min_size=1, max_size=12))
+def test_kernel_hypothesis_sweep(pairs):
+    sa = [p[0] for p in pairs]
+    sb = [p[1] for p in pairs]
+    ta, tb, la, lb = enc_batch(sa, sb)
+    got = np.asarray(levenshtein_similarity(ta, tb, la, lb, block_b=len(sa)))
+    # compare against the scalar DP on the *encoded* sequences (encoding is
+    # lossy: case folding + 'other' buckets), not the raw strings
+    for i, (a, b) in enumerate(zip(sa, sb)):
+        ca = [encode.char_code(c) for c in a[:TITLE_LEN]]
+        cb = [encode.char_code(c) for c in b[:TITLE_LEN]]
+        m = max(len(ca), len(cb))
+        want = 1.0 if m == 0 else 1.0 - ref.levenshtein_py(ca, cb) / m
+        assert got[i] == pytest.approx(want, abs=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=33),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_kernel_random_codes_any_batch(bsz, seed):
+    """Shape sweep with raw random code arrays (no string path)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(1, 39, size=(bsz, TITLE_LEN)).astype(np.int32)
+    b = rng.integers(1, 39, size=(bsz, TITLE_LEN)).astype(np.int32)
+    la = rng.integers(0, TITLE_LEN + 1, size=bsz).astype(np.int32)
+    lb = rng.integers(0, TITLE_LEN + 1, size=bsz).astype(np.int32)
+    got = np.asarray(levenshtein_similarity(
+        jnp.array(a), jnp.array(b), jnp.array(la), jnp.array(lb),
+        block_b=bsz))
+    want = np.asarray(ref.levenshtein_similarity_jnp(
+        jnp.array(a), jnp.array(b), jnp.array(la), jnp.array(lb)))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Trigram kernel
+# ---------------------------------------------------------------------------
+
+def bitmaps(strings):
+    return jnp.array(
+        [encode.words_as_i32(encode.encode_bitmap(s)) for s in strings],
+        jnp.int32,
+    )
+
+
+def test_trigram_identical_is_one():
+    s = ["the quick brown fox jumps over the lazy dog", "a b c", ""]
+    a = bitmaps(s)
+    got = np.asarray(trigram_dice(a, a, block_b=3))
+    np.testing.assert_allclose(got, np.ones(3), atol=1e-6)
+
+
+def test_trigram_disjoint_is_zero():
+    a = bitmaps(["aaaa aaaa aaaa"])
+    b = bitmaps(["zzzz zzzz zzzz"])
+    got = np.asarray(trigram_dice(a, b, block_b=1))
+    assert got[0] == pytest.approx(0.0, abs=1e-6)
+
+
+def test_trigram_kernel_matches_oracle():
+    sa = ["data cleaning problems", "entity resolution survey",
+          "mapreduce simplified data processing", ""]
+    sb = ["data cleaning approaches", "entity matching survey",
+          "hadoop distributed file system", "x"]
+    a, b = bitmaps(sa), bitmaps(sb)
+    got = np.asarray(trigram_dice(a, b, block_b=4))
+    want = np.asarray(ref.trigram_dice_jnp(a, b))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=17),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_trigram_hypothesis_random_bitmaps(bsz, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-2**31, 2**31, size=(bsz, BITMAP_WORDS),
+                     dtype=np.int64).astype(np.int32)
+    b = rng.integers(-2**31, 2**31, size=(bsz, BITMAP_WORDS),
+                     dtype=np.int64).astype(np.int32)
+    got = np.asarray(trigram_dice(jnp.array(a), jnp.array(b), block_b=bsz))
+    want = np.asarray(ref.trigram_dice_jnp(jnp.array(a), jnp.array(b)))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_trigram_dice_against_exact_sets():
+    """Bitmap Dice approximates exact trigram-set Dice closely."""
+    sa = "efficient parallel set similarity joins using mapreduce"
+    sb = "efficient parallel set similarity joins with mapreduce"
+    ga, gb = set(encode.trigrams(sa)), set(encode.trigrams(sb))
+    exact = 2 * len(ga & gb) / (len(ga) + len(gb))
+    a, b = bitmaps([sa]), bitmaps([sb])
+    got = float(np.asarray(trigram_dice(a, b, block_b=1))[0])
+    assert got == pytest.approx(exact, abs=0.02)

@@ -1,0 +1,97 @@
+"""L2 matcher model: semantics, shapes, and oracle agreement."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from compile import encode, model
+from compile.kernels import ref
+
+
+def encode_pairs(pairs):
+    """[(title_a, abs_a, title_b, abs_b)] → model input arrays."""
+    ta, la, tb, lb, ga, gb = [], [], [], [], [], []
+    for t1, a1, t2, a2 in pairs:
+        c, n = encode.encode_title(t1)
+        ta.append(c)
+        la.append(n)
+        c, n = encode.encode_title(t2)
+        tb.append(c)
+        lb.append(n)
+        ga.append(encode.words_as_i32(encode.encode_bitmap(a1)))
+        gb.append(encode.words_as_i32(encode.encode_bitmap(a2)))
+    return (jnp.array(ta, jnp.int32), jnp.array(tb, jnp.int32),
+            jnp.array(la, jnp.int32), jnp.array(lb, jnp.int32),
+            jnp.array(ga, jnp.int32), jnp.array(gb, jnp.int32))
+
+
+PAIRS = [
+    # near-duplicate: same paper, minor title typo, same abstract
+    ("the merge purge problem for large databases",
+     "we present a method for merging large databases efficiently",
+     "the merge purge problem for large database",
+     "we present a method for merging large databases efficiently"),
+    # clear non-match
+    ("parallel sorted neighborhood blocking",
+     "cloud infrastructures enable parallel entity resolution",
+     "quantum chromodynamics on the lattice",
+     "we simulate gauge fields with monte carlo methods"),
+    # identical
+    ("data cleaning problems and current approaches",
+     "data quality problems appear in single and multiple sources",
+     "data cleaning problems and current approaches",
+     "data quality problems appear in single and multiple sources"),
+    # same title, different abstract
+    ("a survey of entity resolution",
+     "this survey covers blocking techniques in depth",
+     "a survey of entity resolution",
+     "completely different text about unrelated things here"),
+]
+
+
+def test_matcher_outputs_shapes_and_ranges():
+    args = encode_pairs(PAIRS)
+    score, sim_t, sim_g, skipped = model.matcher(*args)
+    for arr in (score, sim_t, sim_g, skipped):
+        assert arr.shape == (len(PAIRS),)
+        assert arr.dtype == jnp.float32
+    s = np.asarray(score)
+    assert ((s >= -1e-6) & (s <= 1 + 1e-6)).all()
+
+
+def test_matcher_decisions():
+    args = encode_pairs(PAIRS)
+    score, sim_t, sim_g, skipped = (np.asarray(x) for x in
+                                    model.matcher(*args))
+    # identical pair scores 1.0 and matches
+    assert score[2] == pytest.approx(1.0, abs=1e-6)
+    # near-duplicate matches
+    assert score[0] >= model.THRESHOLD
+    # clear non-match fails and is short-circuit-skippable
+    assert score[1] < model.THRESHOLD
+    assert skipped[1] == 1.0
+    # identical pair is never skipped
+    assert skipped[2] == 0.0
+
+
+def test_matcher_agrees_with_oracle():
+    args = encode_pairs(PAIRS)
+    got = tuple(np.asarray(x) for x in model.matcher(*args))
+    want = tuple(np.asarray(x) for x in ref.matcher_ref(*args))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=1e-6)
+
+
+def test_skipped_pairs_are_nonmatches():
+    """The short-circuit predicate must never skip a would-be match."""
+    args = encode_pairs(PAIRS)
+    score, _, _, skipped = (np.asarray(x) for x in model.matcher(*args))
+    assert not ((skipped == 1.0) & (score >= model.THRESHOLD)).any()
+
+
+def test_title_matcher_is_prefix_of_full():
+    args = encode_pairs(PAIRS)
+    (sim_t_only,) = model.title_matcher(args[0], args[1], args[2], args[3])
+    _, sim_t_full, _, _ = model.matcher(*args)
+    np.testing.assert_allclose(np.asarray(sim_t_only),
+                               np.asarray(sim_t_full), atol=1e-6)

@@ -1,0 +1,68 @@
+"""Hypothesis sweep of the full L2 matcher model against the oracle.
+
+Random raw tensor inputs (not just string-derived ones): arbitrary code
+arrays, lengths and bitmaps — the model must agree with ``matcher_ref``
+on every output, and its invariants (score decomposition, skip predicate
+soundness) must hold for all inputs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref, TITLE_LEN, BITMAP_WORDS
+
+
+def random_inputs(rng, bsz):
+    ta = rng.integers(0, 39, size=(bsz, TITLE_LEN)).astype(np.int32)
+    tb = rng.integers(0, 39, size=(bsz, TITLE_LEN)).astype(np.int32)
+    la = rng.integers(0, TITLE_LEN + 1, size=bsz).astype(np.int32)
+    lb = rng.integers(0, TITLE_LEN + 1, size=bsz).astype(np.int32)
+    ga = rng.integers(-2**31, 2**31, size=(bsz, BITMAP_WORDS),
+                      dtype=np.int64).astype(np.int32)
+    gb = rng.integers(-2**31, 2**31, size=(bsz, BITMAP_WORDS),
+                      dtype=np.int64).astype(np.int32)
+    return tuple(jnp.array(x) for x in (ta, tb, la, lb, ga, gb))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=9),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_model_matches_oracle_on_random_tensors(bsz, seed):
+    args = random_inputs(np.random.default_rng(seed), bsz)
+    got = tuple(np.asarray(x) for x in model.matcher(*args))
+    want = tuple(np.asarray(x) for x in ref.matcher_ref(*args))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=9),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_model_invariants(bsz, seed):
+    args = random_inputs(np.random.default_rng(seed), bsz)
+    score, sim_t, sim_g, skipped = (np.asarray(x) for x in
+                                    model.matcher(*args))
+    # score decomposition
+    np.testing.assert_allclose(
+        score, model.W_TITLE * sim_t + model.W_ABSTRACT * sim_g, atol=1e-6)
+    # similarity ranges
+    for arr in (sim_t, sim_g):
+        assert (arr >= -1e-6).all() and (arr <= 1 + 1e-6).all()
+    # skip predicate soundness: a skipped pair can never be a match
+    assert not ((skipped == 1.0) & (score >= model.THRESHOLD)).any()
+    # skip predicate definition
+    expect_skip = (model.W_TITLE * sim_t + model.W_ABSTRACT) < model.THRESHOLD
+    np.testing.assert_array_equal(skipped == 1.0, expect_skip)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_model_symmetry(seed):
+    """matcher(a, b) == matcher(b, a) on every output."""
+    ta, tb, la, lb, ga, gb = random_inputs(np.random.default_rng(seed), 6)
+    fwd = tuple(np.asarray(x) for x in model.matcher(ta, tb, la, lb, ga, gb))
+    rev = tuple(np.asarray(x) for x in model.matcher(tb, ta, lb, la, gb, ga))
+    for f, r in zip(fwd, rev):
+        np.testing.assert_allclose(f, r, atol=1e-6)

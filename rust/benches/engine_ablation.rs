@@ -1,0 +1,88 @@
+//! A2: engine ablations — sequence-file compression on/off, sort and
+//! shuffle-merge costs, and the per-job overhead that differentiates
+//! JobSN from RepSN.
+
+use std::time::Instant;
+
+use snmr::data::corpus::{generate, CorpusConfig};
+use snmr::mapreduce::seqfile;
+use snmr::mapreduce::shuffle::merge_sorted_runs;
+use snmr::metrics::report::{write_report, Table};
+use snmr::util::cli::{flag, switch, Args};
+use snmr::util::humanize;
+use snmr::util::json::Json;
+use snmr::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[switch("bench", "(cargo)"), flag("n", "corpus size (default 50000)")], false)
+        .map_err(anyhow::Error::msg)?;
+    let n = args.get_usize("n", 50_000).map_err(anyhow::Error::msg)?;
+
+    let corpus = generate(&CorpusConfig {
+        n_entities: n,
+        seed: 0xA2,
+        ..Default::default()
+    });
+    let records: Vec<_> = corpus.entities.iter().map(|e| e.to_record()).collect();
+
+    let mut table = Table::new("A2: engine component costs", &["component", "metric", "value"]);
+    let mut rows = Vec::new();
+    let push = |table: &mut Table, rows: &mut Vec<Json>, comp: &str, metric: &str, value: String| {
+        table.row(vec![comp.to_string(), metric.to_string(), value.clone()]);
+        rows.push(Json::obj(vec![
+            ("component", Json::str(comp)),
+            ("metric", Json::str(metric)),
+            ("value", Json::str(value)),
+        ]));
+    };
+
+    // --- sequence file: compressed vs raw ---------------------------------
+    for (name, compress) in [("seqfile(raw)", false), ("seqfile(deflate)", true)] {
+        let t0 = Instant::now();
+        let bytes = seqfile::write_records(&records, compress)?;
+        let wt = t0.elapsed();
+        let t0 = Instant::now();
+        let back = seqfile::read_records(&bytes)?;
+        let rt = t0.elapsed();
+        assert_eq!(back.len(), records.len());
+        push(&mut table, &mut rows, name, "size", humanize::bytes(bytes.len() as u64));
+        push(&mut table, &mut rows, name, "write", humanize::duration(wt));
+        push(&mut table, &mut rows, name, "read", humanize::duration(rt));
+    }
+
+    // --- map-side sort ------------------------------------------------------
+    let mut rng = Rng::new(1);
+    let mut keys: Vec<(String, u64)> = (0..n)
+        .map(|i| {
+            let e = &corpus.entities[i];
+            (format!("{:02}{}", rng.below(100), e.title), e.id)
+        })
+        .collect();
+    let t0 = Instant::now();
+    keys.sort_unstable();
+    push(&mut table, &mut rows, "map-sort", &format!("{n} composite keys"),
+         humanize::duration(t0.elapsed()));
+
+    // --- shuffle merge -------------------------------------------------------
+    let run_count = 8;
+    let runs: Vec<Vec<(u64, u64)>> = (0..run_count)
+        .map(|r| {
+            let mut v: Vec<(u64, u64)> = (0..n / run_count)
+                .map(|_| (rng.below(1_000_000), 0u64))
+                .collect();
+            v.sort_unstable();
+            let _ = r;
+            v
+        })
+        .collect();
+    let t0 = Instant::now();
+    let merged = merge_sorted_runs(runs);
+    push(&mut table, &mut rows, "shuffle-merge",
+         &format!("{} records / {run_count} runs", merged.len()),
+         humanize::duration(t0.elapsed()));
+
+    println!("{}", table.render());
+    let path = write_report("engine_ablation", &Json::Arr(rows))?;
+    eprintln!("report written to {}", path.display());
+    Ok(())
+}

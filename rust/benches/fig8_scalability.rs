@@ -1,0 +1,138 @@
+//! Figure 8: execution times and speedup of JobSN vs RepSN for window
+//! sizes 10 and 1000, on 1–8 cores.
+//!
+//! Methodology (DESIGN.md §3): the engine executes every task for real on
+//! this machine with `workers = 1` (interference-free per-task wall
+//! times); the cluster simulator then schedules those measured tasks onto
+//! paper-like clusters (N nodes × 2 cores, 2 map + 2 reduce slots/node,
+//! 6 s/job setup).  Corpus and window are scaled from the paper's 1.4 M ×
+//! w∈{10,1000} to keep the bench tractable; override with flags:
+//!
+//! ```bash
+//! cargo bench --bench fig8_scalability -- --n 200000 --windows 10,1000
+//! ```
+
+use std::sync::Arc;
+
+use snmr::data::corpus::{generate, CorpusConfig};
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
+use snmr::er::strategy::MatchStrategyConfig;
+use snmr::mapreduce::sim::{simulate_job_chain, ClusterSpec};
+use snmr::metrics::report::{write_report, Table};
+use snmr::sn::partition::RangePartition;
+use snmr::sn::types::{SnConfig, SnMode, SnResult};
+use snmr::sn::{jobsn, repsn, srp};
+use snmr::util::cli::{flag, switch, Args};
+use snmr::util::humanize;
+use snmr::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(
+        &[
+            switch("bench", "(passed by cargo bench; ignored)"),
+            flag("n", "corpus size (default 30000)"),
+            flag("windows", "comma list of window sizes (default 10,200)"),
+            flag("cores", "comma list of cores (default 1,2,4,8)"),
+            switch("blocking-only", "skip matching (blocking throughput only)"),
+        ],
+        false,
+    )
+    .map_err(anyhow::Error::msg)?;
+    let n = args.get_usize("n", 30_000).map_err(anyhow::Error::msg)?;
+    // paper: w ∈ {10, 1000} on 1.4M entities; default scales the large
+    // window to the default corpus so matching still dominates
+    let windows = args
+        .get_usize_list("windows", &[10, 200])
+        .map_err(anyhow::Error::msg)?;
+    let cores = args
+        .get_usize_list("cores", &[1, 2, 4, 8])
+        .map_err(anyhow::Error::msg)?;
+    let blocking_only = args.get_bool("blocking-only");
+
+    eprintln!("generating corpus (n={n})...");
+    let corpus = generate(&CorpusConfig {
+        n_entities: n,
+        seed: 0xF18,
+        ..Default::default()
+    });
+    let bk = TitlePrefixKey::new(2);
+    let partitioner = Arc::new(RangePartition::balanced(
+        &corpus.entities,
+        |e| bk.key(e),
+        10, // the paper's 10 manually balanced partitions
+    ));
+
+    let mut report_rows = Vec::new();
+    for &w in &windows {
+        let cfg = SnConfig {
+            window: w,
+            num_map_tasks: 8,
+            workers: 1,
+            partitioner: partitioner.clone(),
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            mode: if blocking_only {
+                SnMode::Blocking
+            } else {
+                SnMode::Matching(MatchStrategyConfig::default())
+            },
+        };
+        eprintln!("w={w}: running RepSN...");
+        let t0 = std::time::Instant::now();
+        let rep: SnResult = repsn::run(&corpus.entities, &cfg)?;
+        let rep_wall = t0.elapsed();
+        eprintln!("w={w}: running JobSN...");
+        let t0 = std::time::Instant::now();
+        let job: SnResult = jobsn::run(&corpus.entities, &cfg)?;
+        let job_wall = t0.elapsed();
+        eprintln!("w={w}: running SRP (lower bound)...");
+        let srp_res = srp::run(&corpus.entities, &cfg)?;
+
+        // sanity: identical pair/match sets
+        assert_eq!(rep.pair_set(), job.pair_set(), "JobSN != RepSN result");
+        assert!(srp_res.pair_set().len() <= rep.pair_set().len());
+
+        let mut table = Table::new(
+            &format!(
+                "Fig 8 (w={w}, n={n}): simulated cluster times (measured: \
+                 RepSN {} / JobSN {} single-threaded)",
+                humanize::duration(rep_wall),
+                humanize::duration(job_wall)
+            ),
+            &[
+                "cores", "JobSN_s", "RepSN_s", "JobSN_speedup", "RepSN_speedup",
+            ],
+        );
+        let mut job1 = None;
+        let mut rep1 = None;
+        for &c in &cores {
+            let spec = ClusterSpec::paper_like(c);
+            let (_, job_t) = simulate_job_chain(&job.profiles, &spec);
+            let (_, rep_t) = simulate_job_chain(&rep.profiles, &spec);
+            let j1 = *job1.get_or_insert(job_t);
+            let r1 = *rep1.get_or_insert(rep_t);
+            table.row(vec![
+                c.to_string(),
+                format!("{job_t:.1}"),
+                format!("{rep_t:.1}"),
+                format!("{:.2}", j1 / job_t),
+                format!("{:.2}", r1 / rep_t),
+            ]);
+            report_rows.push(Json::obj(vec![
+                ("window", Json::num(w as f64)),
+                ("cores", Json::num(c as f64)),
+                ("jobsn_s", Json::num(job_t)),
+                ("repsn_s", Json::num(rep_t)),
+            ]));
+        }
+        println!("{}", table.render());
+    }
+    let path = write_report(
+        "fig8_scalability",
+        &Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("rows", Json::Arr(report_rows)),
+        ]),
+    )?;
+    eprintln!("report written to {}", path.display());
+    Ok(())
+}

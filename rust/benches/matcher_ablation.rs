@@ -1,0 +1,106 @@
+//! A1: matcher-backend ablation — native (short-circuit), native (full)
+//! and the AOT XLA/PJRT matcher across batch sizes.
+//!
+//! Reports pair-scoring throughput; feeds the batch-size choice recorded
+//! in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use snmr::data::corpus::{generate, CorpusConfig};
+use snmr::er::matcher::{NativeScorer, PairScorer};
+use snmr::metrics::report::{write_report, Table};
+use snmr::runtime::encode::{encode_entity, Encoded};
+use snmr::runtime::matcher_exec::XlaMatcher;
+use snmr::runtime::two_phase::XlaTwoPhaseMatcher;
+use snmr::util::cli::{flag, switch, Args};
+use snmr::util::humanize;
+use snmr::util::json::Json;
+
+fn bench_scorer(scorer: &dyn PairScorer, pairs: &[(Encoded, Encoded)], chunk: usize) -> f64 {
+    let refs: Vec<(&Encoded, &Encoded)> = pairs.iter().map(|(a, b)| (a, b)).collect();
+    // warmup
+    let _ = scorer.score_pairs(&refs[..chunk.min(refs.len())]);
+    let t0 = Instant::now();
+    for c in refs.chunks(chunk) {
+        let s = scorer.score_pairs(c);
+        std::hint::black_box(&s);
+    }
+    pairs.len() as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(
+        &[
+            switch("bench", "(passed by cargo bench; ignored)"),
+            flag("pairs", "number of pairs to score (default 20000)"),
+        ],
+        false,
+    )
+    .map_err(anyhow::Error::msg)?;
+    let n_pairs = args.get_usize("pairs", 20_000).map_err(anyhow::Error::msg)?;
+
+    let corpus = generate(&CorpusConfig {
+        n_entities: n_pairs * 2,
+        dup_fraction: 0.3,
+        seed: 0xA1,
+        ..Default::default()
+    });
+    eprintln!("encoding {n_pairs} pairs...");
+    let pairs: Vec<(Encoded, Encoded)> = (0..n_pairs)
+        .map(|i| {
+            let a = &corpus.entities[2 * i];
+            let b = &corpus.entities[2 * i + 1];
+            (
+                encode_entity(&a.title, &a.abstract_text),
+                encode_entity(&b.title, &b.abstract_text),
+            )
+        })
+        .collect();
+
+    let mut table = Table::new(
+        &format!("A1: matcher throughput over {n_pairs} pairs"),
+        &["backend", "batch", "pairs_per_s"],
+    );
+    let mut rows = Vec::new();
+    let mut push = |table: &mut Table, rows: &mut Vec<Json>, name: &str, batch: usize, tput: f64| {
+        table.row(vec![
+            name.to_string(),
+            batch.to_string(),
+            humanize::rate(tput),
+        ]);
+        rows.push(Json::obj(vec![
+            ("backend", Json::str(name)),
+            ("batch", Json::num(batch as f64)),
+            ("pairs_per_s", Json::num(tput)),
+        ]));
+    };
+
+    let native_sc = NativeScorer { short_circuit: true };
+    let native_full = NativeScorer { short_circuit: false };
+    push(&mut table, &mut rows, "native(short-circuit)", 1,
+         bench_scorer(&native_sc, &pairs, 1024));
+    push(&mut table, &mut rows, "native(full)", 1,
+         bench_scorer(&native_full, &pairs, 1024));
+
+    match XlaMatcher::load(&snmr::runtime::artifact::default_dir()) {
+        Ok(xla) => {
+            for batch in [64usize, 256, 1024, 4096] {
+                let t = bench_scorer(&xla, &pairs, batch);
+                push(&mut table, &mut rows, "xla(pjrt-cpu)", batch, t);
+            }
+        }
+        Err(e) => eprintln!("skipping XLA backend (no artifacts): {e}"),
+    }
+    match XlaTwoPhaseMatcher::load(&snmr::runtime::artifact::default_dir()) {
+        Ok(two) => {
+            let t = bench_scorer(&two, &pairs, 1024);
+            push(&mut table, &mut rows, "xla(two-phase)", 1024, t);
+        }
+        Err(e) => eprintln!("skipping two-phase backend: {e}"),
+    }
+
+    println!("{}", table.render());
+    let path = write_report("matcher_ablation", &Json::Arr(rows))?;
+    eprintln!("report written to {}", path.display());
+    Ok(())
+}

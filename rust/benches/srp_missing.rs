@@ -1,0 +1,86 @@
+//! E6 (§4.1 claim): SRP alone misses exactly `(r−1)·w·(w−1)/2` boundary
+//! correspondences when every partition holds ≥ w entities — measured
+//! against sequential SN across an (n, r, w) sweep.
+
+use std::sync::Arc;
+
+use snmr::data::corpus::{generate, CorpusConfig};
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
+use snmr::metrics::report::{write_report, Table};
+use snmr::sn::partition::{partition_sizes, RangePartition};
+use snmr::sn::types::{SnConfig, SnMode};
+use snmr::sn::window::srp_missing_pairs;
+use snmr::sn::{seq, srp};
+use snmr::util::cli::{flag, switch, Args};
+use snmr::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[switch("bench", "(cargo)"), flag("n", "corpus size (default 20000)")], false)
+        .map_err(anyhow::Error::msg)?;
+    let n = args.get_usize("n", 20_000).map_err(anyhow::Error::msg)?;
+
+    let corpus = generate(&CorpusConfig {
+        n_entities: n,
+        seed: 0xE6,
+        ..Default::default()
+    });
+    let bk = TitlePrefixKey::new(2);
+
+    let mut table = Table::new(
+        "E6: SRP boundary loss vs (r−1)·w·(w−1)/2",
+        &["r", "w", "seq_pairs", "srp_pairs", "missing", "formula", "exact"],
+    );
+    let mut rows = Vec::new();
+    for r in [2usize, 4, 8] {
+        for w in [3usize, 10, 50] {
+            let partitioner = Arc::new(RangePartition::balanced(
+                &corpus.entities,
+                |e| bk.key(e),
+                r,
+            ));
+            // formula assumes every partition ≥ w entities — check
+            let sizes = partition_sizes(
+                corpus.entities.iter().map(|e| bk.key(e)),
+                partitioner.as_ref(),
+            );
+            let assumption = sizes.iter().all(|&s| s >= w);
+            let cfg = SnConfig {
+                window: w,
+                num_map_tasks: 4,
+                workers: 2,
+                partitioner,
+                blocking_key: Arc::new(TitlePrefixKey::new(2)),
+                mode: SnMode::Blocking,
+            };
+            let seq_pairs = seq::run_blocking(&corpus.entities, &bk, w).len();
+            let srp_pairs = srp::run(&corpus.entities, &cfg)?.pair_set().len();
+            let missing = seq_pairs - srp_pairs;
+            let formula = srp_missing_pairs(r, w);
+            let exact = missing == formula;
+            assert!(
+                !assumption || exact,
+                "formula violated with assumption held: r={r} w={w} \
+                 missing={missing} formula={formula}"
+            );
+            table.row(vec![
+                r.to_string(),
+                w.to_string(),
+                seq_pairs.to_string(),
+                srp_pairs.to_string(),
+                missing.to_string(),
+                formula.to_string(),
+                if exact { "yes".into() } else { format!("no (min part {})", sizes.iter().min().unwrap()) },
+            ]);
+            rows.push(Json::obj(vec![
+                ("r", Json::num(r as f64)),
+                ("w", Json::num(w as f64)),
+                ("missing", Json::num(missing as f64)),
+                ("formula", Json::num(formula as f64)),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+    let path = write_report("srp_missing", &Json::Arr(rows))?;
+    eprintln!("report written to {}", path.display());
+    Ok(())
+}

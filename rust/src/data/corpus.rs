@@ -1,0 +1,213 @@
+//! Seeded synthetic publication-corpus generator.
+//!
+//! Produces the workload shape the paper's experiments need (DESIGN.md §3
+//! documents the substitution for the unavailable CiteSeerX dump):
+//!
+//! * titles of 3–10 words whose *first* word follows a skewed starter
+//!   distribution → the 2-letter blocking-key histogram is realistically
+//!   non-uniform ("many publication titles start with 'a'"),
+//! * abstracts of 25–70 words over a shared vocabulary (Zipf-sampled) so
+//!   trigram similarity is informative,
+//! * injected duplicate clusters with typo noise and recorded ground
+//!   truth.
+
+use std::collections::BTreeSet;
+
+use crate::data::noise::{make_duplicate, NoiseConfig};
+use crate::data::truth::TruthSet;
+use crate::data::vocab;
+use crate::er::entity::Entity;
+use crate::util::rng::Rng;
+
+/// Corpus generation parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    /// Total number of entities (bases + duplicates).
+    pub n_entities: usize,
+    /// Fraction of entities that are duplicates of an earlier base.
+    pub dup_fraction: f64,
+    /// Maximum duplicates per cluster.
+    pub max_cluster_extra: usize,
+    /// Noise applied to duplicates.
+    pub noise: NoiseConfig,
+    /// PRNG seed — same seed ⇒ identical corpus.
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self {
+            n_entities: 10_000,
+            dup_fraction: 0.15,
+            max_cluster_extra: 3,
+            noise: NoiseConfig::default(),
+            seed: 0xC15E_5EED,
+        }
+    }
+}
+
+/// A generated corpus: entities plus ground truth.
+#[derive(Debug)]
+pub struct Corpus {
+    pub entities: Vec<Entity>,
+    pub truth: TruthSet,
+}
+
+impl Corpus {
+    /// Truth as a flat pair set (for quality evaluation).
+    pub fn truth_pairs(&self) -> BTreeSet<crate::er::entity::Pair> {
+        self.truth.pairs()
+    }
+}
+
+fn make_title(rng: &mut Rng) -> String {
+    let starter = vocab::TITLE_STARTERS[rng.zipf(vocab::TITLE_STARTERS.len(), 0.7)];
+    let n_words = rng.range(2, 9);
+    let mut words = vec![starter.to_string()];
+    for _ in 0..n_words {
+        words.push(vocab::CONTENT_WORDS[rng.zipf(vocab::CONTENT_WORDS.len(), 1.05)].to_string());
+    }
+    words.join(" ")
+}
+
+fn make_abstract(rng: &mut Rng) -> String {
+    let n_words = rng.range(25, 70);
+    let mut words = Vec::with_capacity(n_words);
+    for _ in 0..n_words {
+        words.push(vocab::CONTENT_WORDS[rng.zipf(vocab::CONTENT_WORDS.len(), 1.02)]);
+    }
+    words.join(" ")
+}
+
+fn make_authors(rng: &mut Rng) -> String {
+    let n = rng.range(1, 4);
+    (0..n)
+        .map(|_| {
+            format!(
+                "{} {}",
+                rng.pick(vocab::FIRST_NAMES),
+                rng.pick(vocab::LAST_NAMES)
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Generate a corpus.
+pub fn generate(cfg: &CorpusConfig) -> Corpus {
+    let mut rng = Rng::new(cfg.seed);
+    let mut entities: Vec<Entity> = Vec::with_capacity(cfg.n_entities);
+    let mut truth = TruthSet::new();
+    // base records eligible for duplication (index into entities, cluster)
+    let mut bases: Vec<usize> = Vec::new();
+    let mut next_id = 0u64;
+    while entities.len() < cfg.n_entities {
+        let duplicate = !bases.is_empty() && rng.chance(cfg.dup_fraction);
+        if duplicate {
+            let base_idx = *rng.pick(&bases);
+            let base = entities[base_idx].clone();
+            // limit cluster size
+            if truth.cluster_size(base.id) < cfg.max_cluster_extra {
+                let dup = make_duplicate(&base, next_id, &cfg.noise, &mut rng);
+                truth.link(base.id, dup.id);
+                entities.push(dup);
+                next_id += 1;
+                continue;
+            }
+        }
+        let e = Entity {
+            id: next_id,
+            title: make_title(&mut rng),
+            abstract_text: make_abstract(&mut rng),
+            authors: make_authors(&mut rng),
+            year: 1985 + rng.below(26) as u16,
+            venue: rng.pick(vocab::VENUES).to_string(),
+        };
+        bases.push(entities.len());
+        entities.push(e);
+        next_id += 1;
+    }
+    Corpus { entities, truth }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::blockkey::{BlockingKey, TitlePrefixKey};
+    use crate::sn::partition::{gini, partition_sizes, EvenPartition};
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = CorpusConfig {
+            n_entities: 500,
+            ..Default::default()
+        };
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.entities, b.entities);
+        assert_eq!(a.truth_pairs(), b.truth_pairs());
+        let c = generate(&CorpusConfig { seed: 1, ..cfg });
+        assert_ne!(a.entities, c.entities);
+    }
+
+    #[test]
+    fn duplicate_fraction_roughly_respected() {
+        let cfg = CorpusConfig {
+            n_entities: 5000,
+            dup_fraction: 0.2,
+            ..Default::default()
+        };
+        let corpus = generate(&cfg);
+        let n_dup_links = corpus.truth.n_links();
+        assert!(
+            (700..1300).contains(&n_dup_links),
+            "expected ~1000 duplicate links, got {n_dup_links}"
+        );
+    }
+
+    #[test]
+    fn key_distribution_is_skewed_but_covering() {
+        let corpus = generate(&CorpusConfig {
+            n_entities: 5000,
+            ..Default::default()
+        });
+        let bk = TitlePrefixKey::new(2);
+        let p = EvenPartition::ascii(8);
+        let sizes = partition_sizes(
+            corpus.entities.iter().map(|e| bk.key(e)),
+            &p,
+        );
+        let g = gini(&sizes);
+        // natural skew: clearly nonzero, not degenerate
+        assert!(g > 0.15, "corpus keys too uniform: g={g}, sizes={sizes:?}");
+        assert!(g < 0.9, "corpus keys degenerate: g={g}, sizes={sizes:?}");
+        assert!(sizes.iter().filter(|&&s| s > 0).count() >= 3);
+    }
+
+    #[test]
+    fn truth_pairs_reference_real_ids() {
+        let corpus = generate(&CorpusConfig {
+            n_entities: 1000,
+            ..Default::default()
+        });
+        let ids: BTreeSet<u64> = corpus.entities.iter().map(|e| e.id).collect();
+        assert_eq!(ids.len(), 1000, "ids must be unique");
+        for p in corpus.truth_pairs() {
+            assert!(ids.contains(&p.a) && ids.contains(&p.b));
+        }
+    }
+
+    #[test]
+    fn clusters_are_bounded() {
+        let cfg = CorpusConfig {
+            n_entities: 3000,
+            dup_fraction: 0.5,
+            max_cluster_extra: 2,
+            ..Default::default()
+        };
+        let corpus = generate(&cfg);
+        for (_, size) in corpus.truth.cluster_sizes() {
+            assert!(size <= 3, "cluster larger than base+2: {size}");
+        }
+    }
+}

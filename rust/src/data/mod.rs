@@ -1,0 +1,15 @@
+//! Synthetic publication corpus (the CiteSeerX substitute).
+//!
+//! The paper's dataset (1.4 M CiteSeerX records, csx.raw.txt) is no longer
+//! available; [`corpus`] generates a seeded corpus with the properties the
+//! experiments depend on: realistic title-prefix key distribution (many
+//! titles start with "a"/"the"), abstracts with shared vocabulary, and
+//! *injected duplicates* ([`noise`]) that give us the ground truth the
+//! original evaluation lacked.  [`skew`] reshapes blocking keys to hit the
+//! Table-1 skew targets (Even8_40 … Even8_85).
+
+pub mod corpus;
+pub mod noise;
+pub mod skew;
+pub mod truth;
+pub mod vocab;

@@ -1,0 +1,137 @@
+//! Blocking-key skew shaping for the §5.3 experiments.
+//!
+//! Table 1 evaluates Even8 variants where "40%, 55%, 70% and 85%,
+//! respectively, of all entities fall in the last partition" — produced by
+//! *modifying the blocking keys*.  We do the same: rewrite the first two
+//! title characters of randomly chosen entities to a prefix that the
+//! Even-8 partition function routes to its last partition.
+
+use crate::er::blockkey::BlockingKey;
+use crate::er::entity::Entity;
+use crate::sn::partition::PartitionFn;
+use crate::util::rng::Rng;
+
+/// Rewrite titles until `fraction` of all entities fall into the *last*
+/// partition of `p`.  Returns the number of entities rewritten.
+/// Deterministic for a given `(entities, fraction, seed)`.
+pub fn skew_to_last_partition(
+    entities: &mut [Entity],
+    blocking_key: &dyn BlockingKey,
+    p: &dyn PartitionFn,
+    fraction: f64,
+    seed: u64,
+) -> usize {
+    assert!((0.0..=1.0).contains(&fraction));
+    let last = p.num_partitions() - 1;
+    let n = entities.len();
+    let target = (fraction * n as f64).round() as usize;
+    let mut in_last: usize = entities
+        .iter()
+        .filter(|e| p.partition(&blocking_key.key(e)) == last)
+        .count();
+    if in_last >= target {
+        return 0;
+    }
+    let mut rng = Rng::new(seed ^ 0x5E3B_00C5);
+    // candidate order: deterministic shuffle of indices not in last
+    let mut candidates: Vec<usize> = (0..n)
+        .filter(|&i| p.partition(&blocking_key.key(&entities[i])) != last)
+        .collect();
+    rng.shuffle(&mut candidates);
+    let mut rewritten = 0;
+    for idx in candidates {
+        if in_last >= target {
+            break;
+        }
+        let e = &mut entities[idx];
+        // prefix that lands deep inside the last partition: "z" + letter
+        let c2 = (b'p' + rng.below(11) as u8) as char; // p..z
+        let rest: String = e.title.chars().skip(2).collect();
+        e.title = format!("z{c2}{rest}");
+        debug_assert_eq!(p.partition(&blocking_key.key(e)), last);
+        in_last += 1;
+        rewritten += 1;
+    }
+    rewritten
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate, CorpusConfig};
+    use crate::er::blockkey::TitlePrefixKey;
+    use crate::sn::partition::{gini, partition_sizes, EvenPartition};
+
+    fn fraction_in_last(entities: &[Entity], p: &EvenPartition) -> f64 {
+        let bk = TitlePrefixKey::new(2);
+        let last = p.num_partitions() - 1;
+        entities
+            .iter()
+            .filter(|e| p.partition(&bk.key(e)) == last)
+            .count() as f64
+            / entities.len() as f64
+    }
+
+    #[test]
+    fn hits_target_fractions() {
+        let corpus = generate(&CorpusConfig {
+            n_entities: 4000,
+            ..Default::default()
+        });
+        let p = EvenPartition::ascii(8);
+        let bk = TitlePrefixKey::new(2);
+        for target in [0.40, 0.55, 0.70, 0.85] {
+            let mut entities = corpus.entities.clone();
+            skew_to_last_partition(&mut entities, &bk, &p, target, 42);
+            let f = fraction_in_last(&entities, &p);
+            assert!(
+                (f - target).abs() < 0.01,
+                "target {target} reached {f}"
+            );
+        }
+    }
+
+    #[test]
+    fn gini_rises_with_skew() {
+        let corpus = generate(&CorpusConfig {
+            n_entities: 4000,
+            ..Default::default()
+        });
+        let p = EvenPartition::ascii(8);
+        let bk = TitlePrefixKey::new(2);
+        let mut last_g = -1.0;
+        for target in [0.40, 0.55, 0.70, 0.85] {
+            let mut entities = corpus.entities.clone();
+            skew_to_last_partition(&mut entities, &bk, &p, target, 42);
+            let sizes = partition_sizes(entities.iter().map(|e| bk.key(e)), &p);
+            let g = gini(&sizes);
+            assert!(g > last_g, "gini must increase: {last_g} → {g}");
+            last_g = g;
+        }
+        assert!(last_g > 0.6, "85% skew should give high gini, got {last_g}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let corpus = generate(&CorpusConfig {
+            n_entities: 1000,
+            ..Default::default()
+        });
+        let p = EvenPartition::ascii(8);
+        let bk = TitlePrefixKey::new(2);
+        let mut a = corpus.entities.clone();
+        let mut b = corpus.entities.clone();
+        skew_to_last_partition(&mut a, &bk, &p, 0.5, 7);
+        skew_to_last_partition(&mut b, &bk, &p, 0.5, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn noop_when_already_skewed() {
+        let mut entities: Vec<Entity> =
+            (0..100).map(|i| Entity::new(i, "zz title", "")).collect();
+        let p = EvenPartition::ascii(8);
+        let n = skew_to_last_partition(&mut entities, &TitlePrefixKey::new(2), &p, 0.5, 1);
+        assert_eq!(n, 0);
+    }
+}

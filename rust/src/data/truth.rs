@@ -1,0 +1,117 @@
+//! Ground-truth bookkeeping for injected duplicates.
+//!
+//! Duplicates form clusters (a base record and its noisy copies); the
+//! truth pair set is the union of all within-cluster pairs (transitive
+//! closure — if B and C both duplicate A, then (B, C) is also true).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::er::entity::Pair;
+
+/// Union-find-free cluster registry (clusters are tiny and append-only:
+/// a duplicate always links to an existing cluster's base).
+#[derive(Debug, Default)]
+pub struct TruthSet {
+    /// entity id → cluster id (the base entity's id).
+    cluster_of: BTreeMap<u64, u64>,
+    /// cluster id → member ids (including the base).
+    members: BTreeMap<u64, Vec<u64>>,
+    links: usize,
+}
+
+impl TruthSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `dup` as a duplicate of `base` (or of base's cluster).
+    pub fn link(&mut self, base: u64, dup: u64) {
+        let cluster = *self.cluster_of.get(&base).unwrap_or(&base);
+        self.cluster_of.entry(base).or_insert(cluster);
+        self.cluster_of.insert(dup, cluster);
+        let m = self.members.entry(cluster).or_insert_with(|| vec![cluster]);
+        if !m.contains(&dup) {
+            m.push(dup);
+        }
+        self.links += 1;
+    }
+
+    /// Number of explicit duplicate links registered.
+    pub fn n_links(&self) -> usize {
+        self.links
+    }
+
+    /// Size of the cluster containing `id` minus one (extra copies), 0 if
+    /// the entity is unclustered.
+    pub fn cluster_size(&self, id: u64) -> usize {
+        self.cluster_of
+            .get(&id)
+            .and_then(|c| self.members.get(c))
+            .map(|m| m.len().saturating_sub(1))
+            .unwrap_or(0)
+    }
+
+    /// Iterate `(cluster id, member count)`.
+    pub fn cluster_sizes(&self) -> impl Iterator<Item = (u64, usize)> + '_ {
+        self.members.iter().map(|(c, m)| (*c, m.len()))
+    }
+
+    /// The full truth pair set (within-cluster transitive closure).
+    pub fn pairs(&self) -> BTreeSet<Pair> {
+        let mut out = BTreeSet::new();
+        for members in self.members.values() {
+            for i in 0..members.len() {
+                for j in (i + 1)..members.len() {
+                    out.insert(Pair::new(members[i], members[j]));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transitive_closure() {
+        let mut t = TruthSet::new();
+        t.link(1, 2);
+        t.link(1, 3);
+        let pairs = t.pairs();
+        assert_eq!(pairs.len(), 3);
+        assert!(pairs.contains(&Pair::new(2, 3)));
+    }
+
+    #[test]
+    fn chained_link_through_duplicate() {
+        let mut t = TruthSet::new();
+        t.link(1, 2);
+        t.link(2, 3); // base is itself a duplicate → same cluster as 1
+        let pairs = t.pairs();
+        assert_eq!(pairs.len(), 3);
+        assert!(pairs.contains(&Pair::new(1, 3)));
+    }
+
+    #[test]
+    fn cluster_size_counts_extras() {
+        let mut t = TruthSet::new();
+        assert_eq!(t.cluster_size(7), 0);
+        t.link(7, 8);
+        assert_eq!(t.cluster_size(7), 1);
+        assert_eq!(t.cluster_size(8), 1);
+        t.link(7, 9);
+        assert_eq!(t.cluster_size(9), 2);
+    }
+
+    #[test]
+    fn disjoint_clusters_stay_disjoint() {
+        let mut t = TruthSet::new();
+        t.link(1, 2);
+        t.link(10, 11);
+        let pairs = t.pairs();
+        assert_eq!(pairs.len(), 2);
+        assert!(!pairs.contains(&Pair::new(2, 11)));
+    }
+}

@@ -1,0 +1,90 @@
+//! Vocabulary for the synthetic publication corpus.
+//!
+//! Title starter words are weighted so the blocking-key (2-letter title
+//! prefix) distribution is realistically skewed — the paper notes "many
+//! publication titles start with 'a'" when motivating its manual balanced
+//! partitioning.  Content words are CS-flavoured so abstracts share enough
+//! trigrams for the matcher to be meaningfully exercised.
+
+/// Common title-starting words (sampled Zipf-style: earlier = likelier).
+pub const TITLE_STARTERS: &[&str] = &[
+    "a", "the", "an", "on", "towards", "efficient", "parallel",
+    "adaptive", "automatic", "analysis", "learning", "distributed",
+    "scalable", "fast", "optimal", "robust", "dynamic", "improving",
+    "evaluation", "modeling", "mining", "using", "query", "data",
+    "incremental", "online", "practical", "secure", "self", "semantic",
+    "understanding", "visual", "web", "exploring", "beyond", "revisiting",
+    "approximate", "benchmarking", "composable", "declarative", "elastic",
+    "federated", "generalized", "hybrid", "interactive", "joint",
+    "knowledge", "lightweight", "managing", "novel", "optimizing",
+    "privacy", "quantifying", "ranking", "sampling", "transparent",
+    "unified", "validating", "workload", "cross", "yet", "zero",
+];
+
+/// Content words for titles and abstracts.
+pub const CONTENT_WORDS: &[&str] = &[
+    "entity", "resolution", "blocking", "matching", "duplicate", "record",
+    "linkage", "database", "databases", "cloud", "mapreduce", "hadoop",
+    "cluster", "clusters", "index", "indexing", "similarity", "string",
+    "distance", "window", "neighborhood", "sorted", "partition",
+    "partitioning", "skew", "balancing", "load", "reduce", "map", "join",
+    "joins", "query", "queries", "optimization", "processing", "parallel",
+    "distributed", "scalable", "performance", "evaluation", "framework",
+    "system", "systems", "algorithm", "algorithms", "approach", "method",
+    "methods", "technique", "techniques", "model", "models", "learning",
+    "classification", "detection", "analysis", "mining", "integration",
+    "quality", "cleaning", "schema", "xml", "graph", "graphs", "network",
+    "networks", "stream", "streams", "storage", "memory", "cache",
+    "transaction", "transactions", "workflow", "workflows", "service",
+    "services", "semantic", "ontology", "knowledge", "information",
+    "retrieval", "ranking", "search", "web", "text", "document",
+    "documents", "corpus", "language", "translation", "clustering",
+    "sampling", "estimation", "probabilistic", "bayesian", "inference",
+    "kernel", "vector", "feature", "features", "dimension", "reduction",
+    "compression", "encoding", "hashing", "bloom", "filter", "filters",
+    "trigram", "token", "tokens", "prefix", "suffix", "edit", "metric",
+    "benchmark", "benchmarks", "experiment", "experiments", "empirical",
+];
+
+/// Author first names / last names for the authors field.
+pub const FIRST_NAMES: &[&str] = &[
+    "lars", "andreas", "erhard", "hanna", "peter", "tim", "markus",
+    "rares", "michael", "chen", "jeffrey", "sanjay", "david", "jim",
+    "hung", "dongwon", "anika", "toralf", "daniel", "odej", "ali", "ruey",
+    "maria", "wei", "ying", "thomas", "anna", "sofia", "ivan", "petra",
+];
+
+pub const LAST_NAMES: &[&str] = &[
+    "kolb", "thor", "rahm", "koepcke", "christen", "churches", "hegland",
+    "vernica", "carey", "li", "dean", "ghemawat", "dewitt", "gray", "kim",
+    "lee", "gross", "kirsten", "warneke", "kao", "dasdan", "hsiao",
+    "garcia", "chen", "wang", "mueller", "schmidt", "novak", "petrov",
+    "fischer",
+];
+
+/// Venues.
+pub const VENUES: &[&str] = &[
+    "VLDB", "SIGMOD", "ICDE", "EDBT", "BTW", "CIKM", "KDD", "WWW", "TKDE",
+    "DKE", "PVLDB", "SOCC",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocabularies_nonempty_and_lowercase_titles() {
+        assert!(TITLE_STARTERS.len() > 40);
+        assert!(CONTENT_WORDS.len() > 100);
+        for w in TITLE_STARTERS.iter().chain(CONTENT_WORDS) {
+            assert!(!w.is_empty());
+            assert!(w.chars().all(|c| c.is_ascii_lowercase()), "bad word {w}");
+        }
+    }
+
+    #[test]
+    fn starters_are_skewed_toward_a_and_the() {
+        let a_like = TITLE_STARTERS.iter().filter(|w| w.starts_with('a')).count();
+        assert!(a_like >= 5, "title-prefix skew requires many 'a' starters");
+    }
+}

@@ -1,0 +1,232 @@
+//! Duplicate clustering: turn pairwise matches into entity clusters.
+//!
+//! Entity resolution ends with *clusters* of co-referent records, not raw
+//! pairs (§1: "determine all entities referring to the same real world
+//! object").  Match pairs are edges of an undirected graph; clusters are
+//! its connected components (transitive closure), computed with a
+//! union-find with path halving + union by size.
+//!
+//! Also provides the standard consistency check: a cluster's internal
+//! *density* (fraction of member pairs that were actually matched) — low
+//! density flags chains glued by borderline matches.
+
+use std::collections::BTreeMap;
+
+use super::entity::{Pair, ScoredPair};
+
+/// Union-find over arbitrary u64 entity ids.
+#[derive(Debug, Default)]
+pub struct UnionFind {
+    parent: BTreeMap<u64, u64>,
+    size: BTreeMap<u64, u64>,
+}
+
+impl UnionFind {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Find with path halving.
+    pub fn find(&mut self, x: u64) -> u64 {
+        let mut root = *self.parent.get(&x).unwrap_or(&x);
+        if root == x {
+            return x;
+        }
+        // find the root
+        while let Some(&p) = self.parent.get(&root) {
+            if p == root {
+                break;
+            }
+            root = p;
+        }
+        // path halving
+        let mut cur = x;
+        while cur != root {
+            let next = self.parent[&cur];
+            self.parent.insert(cur, root);
+            cur = next;
+        }
+        root
+    }
+
+    /// Union by size; returns the surviving root.
+    pub fn union(&mut self, a: u64, b: u64) -> u64 {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra == rb {
+            return ra;
+        }
+        let sa = *self.size.get(&ra).unwrap_or(&1);
+        let sb = *self.size.get(&rb).unwrap_or(&1);
+        let (big, small) = if sa >= sb { (ra, rb) } else { (rb, ra) };
+        self.parent.insert(small, big);
+        self.parent.entry(big).or_insert(big);
+        self.size.insert(big, sa + sb);
+        big
+    }
+
+    pub fn same(&mut self, a: u64, b: u64) -> bool {
+        self.find(a) == self.find(b)
+    }
+}
+
+/// One duplicate cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cluster {
+    /// Sorted member ids.
+    pub members: Vec<u64>,
+    /// Fraction of member pairs with an explicit match edge, in (0, 1].
+    pub density: f64,
+    /// Minimum score among the cluster's match edges.
+    pub min_score: f32,
+}
+
+/// Build clusters from scored match pairs.  Singletons are not reported.
+pub fn cluster_matches(matches: &[ScoredPair]) -> Vec<Cluster> {
+    let mut uf = UnionFind::new();
+    for m in matches {
+        uf.union(m.pair.a, m.pair.b);
+    }
+    // group members by root
+    let mut groups: BTreeMap<u64, Vec<u64>> = BTreeMap::new();
+    let mut ids: Vec<u64> = matches
+        .iter()
+        .flat_map(|m| [m.pair.a, m.pair.b])
+        .collect();
+    ids.sort_unstable();
+    ids.dedup();
+    for id in ids {
+        let root = uf.find(id);
+        groups.entry(root).or_default().push(id);
+    }
+    // per-cluster edge stats
+    let mut edge_count: BTreeMap<u64, (u64, f32)> = BTreeMap::new();
+    for m in matches {
+        let root = uf.find(m.pair.a);
+        let e = edge_count.entry(root).or_insert((0, f32::INFINITY));
+        e.0 += 1;
+        e.1 = e.1.min(m.score);
+    }
+    groups
+        .into_iter()
+        .map(|(root, mut members)| {
+            members.sort_unstable();
+            members.dedup();
+            let n = members.len() as u64;
+            let (edges, min_score) = edge_count.get(&root).copied().unwrap_or((0, 0.0));
+            Cluster {
+                density: if n >= 2 {
+                    edges as f64 / (n * (n - 1) / 2) as f64
+                } else {
+                    1.0
+                },
+                min_score,
+                members,
+            }
+        })
+        .collect()
+}
+
+/// Expand clusters back into the full transitive-closure pair set (what a
+/// downstream consumer deduplicates against).
+pub fn closure_pairs(clusters: &[Cluster]) -> Vec<Pair> {
+    let mut out = Vec::new();
+    for c in clusters {
+        for i in 0..c.members.len() {
+            for j in (i + 1)..c.members.len() {
+                out.push(Pair::new(c.members[i], c.members[j]));
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(a: u64, b: u64, score: f32) -> ScoredPair {
+        ScoredPair {
+            pair: Pair::new(a, b),
+            score,
+        }
+    }
+
+    #[test]
+    fn transitive_chain_forms_one_cluster() {
+        let clusters = cluster_matches(&[sp(1, 2, 0.9), sp(2, 3, 0.8), sp(3, 4, 0.85)]);
+        assert_eq!(clusters.len(), 1);
+        assert_eq!(clusters[0].members, vec![1, 2, 3, 4]);
+        // 3 edges of 6 possible
+        assert!((clusters[0].density - 0.5).abs() < 1e-9);
+        assert!((clusters[0].min_score - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn disjoint_components_stay_apart() {
+        let clusters = cluster_matches(&[sp(1, 2, 0.9), sp(10, 11, 0.95)]);
+        assert_eq!(clusters.len(), 2);
+        assert_eq!(clusters[0].members, vec![1, 2]);
+        assert_eq!(clusters[1].members, vec![10, 11]);
+        for c in &clusters {
+            assert_eq!(c.density, 1.0);
+        }
+    }
+
+    #[test]
+    fn closure_pairs_completes_triangles() {
+        let clusters = cluster_matches(&[sp(1, 2, 0.9), sp(2, 3, 0.9)]);
+        let pairs = closure_pairs(&clusters);
+        assert_eq!(
+            pairs,
+            vec![Pair::new(1, 2), Pair::new(1, 3), Pair::new(2, 3)]
+        );
+    }
+
+    #[test]
+    fn union_find_invariants() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        let mut uf = UnionFind::new();
+        let mut naive: Vec<std::collections::BTreeSet<u64>> = Vec::new();
+        for _ in 0..500 {
+            let a = rng.below(60);
+            let b = rng.below(60);
+            uf.union(a, b);
+            // naive merge
+            let ia = naive.iter().position(|s| s.contains(&a));
+            let ib = naive.iter().position(|s| s.contains(&b));
+            match (ia, ib) {
+                (None, None) => naive.push([a, b].into_iter().collect()),
+                (Some(i), None) => {
+                    naive[i].insert(b);
+                }
+                (None, Some(j)) => {
+                    naive[j].insert(a);
+                }
+                (Some(i), Some(j)) if i != j => {
+                    let merged: std::collections::BTreeSet<u64> =
+                        naive[i].union(&naive[j]).copied().collect();
+                    let (lo, hi) = (i.min(j), i.max(j));
+                    naive.remove(hi);
+                    naive[lo] = merged;
+                }
+                _ => {}
+            }
+        }
+        for x in 0..60 {
+            for y in 0..60 {
+                let same_naive = naive
+                    .iter()
+                    .any(|s| s.contains(&x) && s.contains(&y));
+                assert_eq!(uf.same(x, y), same_naive || x == y, "{x},{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(cluster_matches(&[]).is_empty());
+    }
+}

@@ -1,0 +1,154 @@
+//! The entity model: publication records.
+//!
+//! The paper's dataset is ~1.4 M CiteSeerX publication records with at
+//! least title and abstract attributes (the two the matchers use).  Our
+//! synthetic corpus generator ([`crate::data::corpus`]) produces the same
+//! shape, plus provenance fields used for ground truth.
+
+use crate::mapreduce::types::SizeEstimate;
+
+/// A publication record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entity {
+    /// Unique id (stable across the pipeline; ground truth references it).
+    pub id: u64,
+    pub title: String,
+    /// The abstract ("abstract" is a Rust keyword).
+    pub abstract_text: String,
+    pub authors: String,
+    pub year: u16,
+    pub venue: String,
+}
+
+impl Entity {
+    /// Minimal constructor used by tests and examples.
+    pub fn new(id: u64, title: &str, abstract_text: &str) -> Self {
+        Self {
+            id,
+            title: title.to_string(),
+            abstract_text: abstract_text.to_string(),
+            authors: String::new(),
+            year: 0,
+            venue: String::new(),
+        }
+    }
+
+    /// Serialize to the `(key, values[])` sequence-file record shape the
+    /// paper stores ((String, String[]) pairs, §5.1).
+    pub fn to_record(&self) -> (String, Vec<String>) {
+        (
+            self.id.to_string(),
+            vec![
+                self.title.clone(),
+                self.abstract_text.clone(),
+                self.authors.clone(),
+                self.year.to_string(),
+                self.venue.clone(),
+            ],
+        )
+    }
+
+    /// Parse back from a sequence-file record.
+    pub fn from_record(key: &str, vals: &[String]) -> anyhow::Result<Self> {
+        anyhow::ensure!(vals.len() == 5, "entity record needs 5 values, got {}", vals.len());
+        Ok(Self {
+            id: key.parse()?,
+            title: vals[0].clone(),
+            abstract_text: vals[1].clone(),
+            authors: vals[2].clone(),
+            year: vals[3].parse()?,
+            venue: vals[4].clone(),
+        })
+    }
+}
+
+impl SizeEstimate for Entity {
+    fn size_bytes(&self) -> usize {
+        8 + self.title.len()
+            + self.abstract_text.len()
+            + self.authors.len()
+            + 2
+            + self.venue.len()
+            + 5 * 4 // field length prefixes
+    }
+}
+
+/// A candidate/result pair of entity ids, normalized so `a < b`.
+/// Ordering is lexicographic, so result sets are canonically sortable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Pair {
+    pub a: u64,
+    pub b: u64,
+}
+
+impl Pair {
+    pub fn new(x: u64, y: u64) -> Self {
+        debug_assert_ne!(x, y, "self-pair");
+        if x < y {
+            Self { a: x, b: y }
+        } else {
+            Self { a: y, b: x }
+        }
+    }
+}
+
+impl SizeEstimate for Pair {
+    fn size_bytes(&self) -> usize {
+        16
+    }
+}
+
+/// A scored pair (matching output).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoredPair {
+    pub pair: Pair,
+    pub score: f32,
+}
+
+impl SizeEstimate for ScoredPair {
+    fn size_bytes(&self) -> usize {
+        20
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_normalizes_order() {
+        assert_eq!(Pair::new(5, 2), Pair::new(2, 5));
+        assert_eq!(Pair::new(2, 5).a, 2);
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let e = Entity {
+            id: 42,
+            title: "A Title".into(),
+            abstract_text: "Some abstract.".into(),
+            authors: "Kolb, Thor, Rahm".into(),
+            year: 2010,
+            venue: "BTW".into(),
+        };
+        let (k, v) = e.to_record();
+        assert_eq!(Entity::from_record(&k, &v).unwrap(), e);
+    }
+
+    #[test]
+    fn from_record_rejects_bad_shape() {
+        assert!(Entity::from_record("1", &["only".into()]).is_err());
+        assert!(Entity::from_record(
+            "notanumber",
+            &(0..5).map(|_| String::new()).collect::<Vec<_>>()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn size_estimate_tracks_content() {
+        let small = Entity::new(1, "t", "a");
+        let big = Entity::new(1, "t", &"a".repeat(1000));
+        assert!(big.size_bytes() > small.size_bytes() + 900);
+    }
+}

@@ -1,0 +1,454 @@
+//! Pairwise matchers: edit distance on titles, trigram Dice on abstracts.
+//!
+//! Two interchangeable backends implement [`PairScorer`]:
+//!
+//! * [`NativeScorer`] (here) — scalar Rust, supports the paper's
+//!   short-circuit optimization ("skipping the execution of the second
+//!   matcher if the similarity after the first matcher was too low"),
+//! * `runtime::XlaMatcher` — the AOT-compiled JAX/Pallas batch matcher.
+//!
+//! Both compute over the *same* [`Encoded`] representation (title code
+//! sequences, trigram bitmaps), so scores agree to float tolerance; the
+//! integration test `rust/tests/runtime_xla.rs` asserts it.
+
+use crate::runtime::encode::Encoded;
+
+/// Similarity scores for one pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MatchScores {
+    /// Combined weighted score in [0, 1].
+    pub score: f32,
+    pub sim_title: f32,
+    pub sim_abstract: f32,
+    /// Whether the short-circuit predicate held (matcher 2 not needed).
+    pub skipped: bool,
+}
+
+/// A batch pair-similarity backend.
+pub trait PairScorer: Send + Sync {
+    /// Score a batch of encoded entity pairs.
+    fn score_pairs(&self, pairs: &[(&Encoded, &Encoded)]) -> Vec<MatchScores>;
+
+    /// Backend name for reports.
+    fn name(&self) -> &str;
+
+    /// Preferred batch size (the XLA backend amortizes dispatch overhead;
+    /// native doesn't care).  The reduce-side batcher uses this.
+    fn preferred_batch(&self) -> usize {
+        1
+    }
+}
+
+/// Matching-strategy constants (§5.1).  Mirrored in
+/// `python/compile/model.py` — keep in sync.
+pub const W_TITLE: f32 = 0.5;
+pub const W_ABSTRACT: f32 = 0.5;
+pub const THRESHOLD: f32 = 0.75;
+
+/// Levenshtein distance over code sequences (two-row DP).
+pub fn edit_distance(a: &[u8], b: &[u8]) -> u32 {
+    let (la, lb) = (a.len(), b.len());
+    if la == 0 {
+        return lb as u32;
+    }
+    if lb == 0 {
+        return la as u32;
+    }
+    let mut prev: Vec<u32> = (0..=lb as u32).collect();
+    let mut cur = vec![0u32; lb + 1];
+    for i in 1..=la {
+        cur[0] = i as u32;
+        let ai = a[i - 1];
+        for j in 1..=lb {
+            let cost = u32::from(ai != b[j - 1]);
+            cur[j] = (prev[j - 1] + cost).min(prev[j] + 1).min(cur[j - 1] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[lb]
+}
+
+/// Bounded edit distance (Ukkonen band): returns `Some(d)` iff
+/// `d = dist(a, b) <= bound`, else `None` — without computing cells that
+/// cannot influence a within-bound result.
+///
+/// Optimizations (the §Perf hot path — see EXPERIMENTS.md):
+/// * common prefix/suffix trimming (near-duplicate titles collapse to a
+///   tiny core DP),
+/// * length-difference pre-filter (`dist >= |la - lb|`),
+/// * banded rows of width `2·bound + 1` with early exit when the row
+///   minimum exceeds the bound.
+pub fn edit_distance_bounded(a: &[u8], b: &[u8], bound: u32) -> Option<u32> {
+    // trim common prefix
+    let mut start = 0;
+    while start < a.len() && start < b.len() && a[start] == b[start] {
+        start += 1;
+    }
+    let (mut a, mut b) = (&a[start..], &b[start..]);
+    // trim common suffix
+    while let (Some(&x), Some(&y)) = (a.last(), b.last()) {
+        if x != y {
+            break;
+        }
+        a = &a[..a.len() - 1];
+        b = &b[..b.len() - 1];
+    }
+    // keep `a` the shorter side (band is symmetric, fewer rows is cheaper)
+    if a.len() > b.len() {
+        std::mem::swap(&mut a, &mut b);
+    }
+    let (la, lb) = (a.len(), b.len());
+    if (lb - la) as u32 > bound {
+        return None;
+    }
+    if la == 0 {
+        return Some(lb as u32);
+    }
+    // bag-distance lower bound: dist >= max(|bag(a)\bag(b)|, |bag(b)\bag(a)|).
+    // O(L) with the 39-symbol code histogram — rejects clearly-different
+    // titles without touching the DP (the common case inside SN windows).
+    if bag_lower_bound(a, b) > bound {
+        return None;
+    }
+    let k = bound as usize;
+    const BIG: u32 = u32::MAX / 2;
+    // rows over `a` (shorter); banded columns j ∈ [i-k, i+k] over `b`.
+    // Titles are bounded by TITLE_LEN, so the rows live on the stack.
+    debug_assert!(lb + 2 <= crate::runtime::encode::TITLE_LEN + 2);
+    let mut prev_buf = [BIG; crate::runtime::encode::TITLE_LEN + 2];
+    let mut cur_buf = [BIG; crate::runtime::encode::TITLE_LEN + 2];
+    let prev: &mut [u32] = &mut prev_buf[..lb + 2];
+    let cur: &mut [u32] = &mut cur_buf[..lb + 2];
+    let (mut prev, mut cur) = (prev, cur);
+    for (j, p) in prev.iter_mut().enumerate().take(k.min(lb) + 1) {
+        *p = j as u32;
+    }
+    for i in 1..=la {
+        let jlo = i.saturating_sub(k).max(1);
+        let jhi = (i + k).min(lb);
+        if jlo > jhi {
+            return None;
+        }
+        cur[jlo - 1] = if jlo == 1 { i as u32 } else { BIG };
+        let ai = a[i - 1];
+        let mut row_min = BIG;
+        for j in jlo..=jhi {
+            let cost = u32::from(ai != b[j - 1]);
+            let v = (prev[j - 1] + cost)
+                .min(prev[j].saturating_add(1))
+                .min(cur[j - 1].saturating_add(1));
+            cur[j] = v;
+            row_min = row_min.min(v);
+        }
+        // the next row may read one column past this band — poison it
+        if jhi + 1 <= lb + 1 {
+            cur[jhi + 1] = BIG;
+        }
+        if row_min > bound {
+            return None;
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    let d = prev[lb];
+    (d <= bound).then_some(d)
+}
+
+/// Multiset-difference ("bag") lower bound on edit distance.
+#[inline]
+fn bag_lower_bound(a: &[u8], b: &[u8]) -> u32 {
+    let mut hist = [0i32; 40];
+    for &c in a {
+        hist[(c as usize).min(39)] += 1;
+    }
+    for &c in b {
+        hist[(c as usize).min(39)] -= 1;
+    }
+    let (mut pos, mut neg) = (0i32, 0i32);
+    for h in hist {
+        if h > 0 {
+            pos += h;
+        } else {
+            neg -= h;
+        }
+    }
+    pos.max(neg) as u32
+}
+
+/// Edit-distance *similarity* matching the kernel contract:
+/// `1 - dist / max(la, lb)`, and 1.0 for two empty strings.
+pub fn title_similarity(a: &Encoded, b: &Encoded) -> f32 {
+    let la = a.title_len as usize;
+    let lb = b.title_len as usize;
+    let m = la.max(lb);
+    if m == 0 {
+        return 1.0;
+    }
+    let d = edit_distance(&a.title_codes[..la], &b.title_codes[..lb]);
+    1.0 - d as f32 / m as f32
+}
+
+/// Dice coefficient over packed trigram bitmaps; 1.0 when both empty.
+pub fn abstract_similarity(a: &Encoded, b: &Encoded) -> f32 {
+    let mut inter = 0u32;
+    let mut ca = 0u32;
+    let mut cb = 0u32;
+    for i in 0..a.bitmap.len() {
+        inter += (a.bitmap[i] & b.bitmap[i]).count_ones();
+        ca += a.bitmap[i].count_ones();
+        cb += b.bitmap[i].count_ones();
+    }
+    let denom = ca + cb;
+    if denom == 0 {
+        1.0
+    } else {
+        2.0 * inter as f32 / denom as f32
+    }
+}
+
+/// Native scalar backend.
+#[derive(Debug, Clone)]
+pub struct NativeScorer {
+    /// Apply the paper's short-circuit: skip the abstract matcher when the
+    /// title similarity alone cannot reach the threshold.
+    pub short_circuit: bool,
+}
+
+impl Default for NativeScorer {
+    fn default() -> Self {
+        Self {
+            short_circuit: true,
+        }
+    }
+}
+
+impl NativeScorer {
+    /// Score a single pair.
+    ///
+    /// With `short_circuit` the title DP runs *banded*: any pair whose
+    /// title similarity cannot reach the short-circuit threshold
+    /// `2τ − 1` is detected without completing the full DP, and matcher 2
+    /// is skipped (the paper's §5.1 optimization, plus the band).  For
+    /// non-skipped pairs the banded DP is exact, so match decisions and
+    /// scores are identical to the full scorer.
+    pub fn score_pair(&self, a: &Encoded, b: &Encoded) -> MatchScores {
+        if self.short_circuit {
+            let la = a.title_len as usize;
+            let lb = b.title_len as usize;
+            let m = la.max(lb);
+            if m == 0 {
+                // both titles empty: sim_t = 1
+                let sim_g = abstract_similarity(a, b);
+                return MatchScores {
+                    score: W_TITLE + W_ABSTRACT * sim_g,
+                    sim_title: 1.0,
+                    sim_abstract: sim_g,
+                    skipped: false,
+                };
+            }
+            // matchable ⟺ sim_t ≥ (τ − W_ABSTRACT)/W_TITLE = 2τ − 1
+            // ⟺ dist ≤ (1 − (2τ−1))·m  (exact integer bound below)
+            let min_sim_t = (THRESHOLD - W_ABSTRACT) / W_TITLE;
+            let bound = ((1.0 - min_sim_t) * m as f32).floor() as u32;
+            match edit_distance_bounded(
+                &a.title_codes[..la],
+                &b.title_codes[..lb],
+                bound,
+            ) {
+                Some(d) => {
+                    let sim_t = 1.0 - d as f32 / m as f32;
+                    let sim_g = abstract_similarity(a, b);
+                    MatchScores {
+                        score: W_TITLE * sim_t + W_ABSTRACT * sim_g,
+                        sim_title: sim_t,
+                        sim_abstract: sim_g,
+                        skipped: false,
+                    }
+                }
+                None => {
+                    // non-match by construction; report upper bounds
+                    let sim_t_ub = 1.0 - (bound + 1) as f32 / m as f32;
+                    MatchScores {
+                        score: W_TITLE * sim_t_ub,
+                        sim_title: sim_t_ub,
+                        sim_abstract: 0.0,
+                        skipped: true,
+                    }
+                }
+            }
+        } else {
+            let sim_t = title_similarity(a, b);
+            let skipped = W_TITLE * sim_t + W_ABSTRACT * 1.0 < THRESHOLD;
+            let sim_g = abstract_similarity(a, b);
+            MatchScores {
+                score: W_TITLE * sim_t + W_ABSTRACT * sim_g,
+                sim_title: sim_t,
+                sim_abstract: sim_g,
+                skipped,
+            }
+        }
+    }
+}
+
+impl PairScorer for NativeScorer {
+    fn score_pairs(&self, pairs: &[(&Encoded, &Encoded)]) -> Vec<MatchScores> {
+        pairs.iter().map(|(a, b)| self.score_pair(a, b)).collect()
+    }
+
+    fn name(&self) -> &str {
+        if self.short_circuit {
+            "native(short-circuit)"
+        } else {
+            "native"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::encode::encode_entity;
+
+    #[test]
+    fn edit_distance_known() {
+        assert_eq!(edit_distance(b"kitten", b"sitting"), 3);
+        assert_eq!(edit_distance(b"", b"abc"), 3);
+        assert_eq!(edit_distance(b"abc", b"abc"), 0);
+        assert_eq!(edit_distance(b"flaw", b"lawn"), 2);
+    }
+
+    #[test]
+    fn identical_entities_score_one() {
+        let e = encode_entity("Parallel Sorted Neighborhood", "cloud entity resolution");
+        let s = NativeScorer::default().score_pair(&e, &e);
+        assert!((s.score - 1.0).abs() < 1e-6);
+        assert!(!s.skipped);
+    }
+
+    #[test]
+    fn disjoint_entities_skip_and_fail() {
+        let a = encode_entity("aaaaaaaaaaaaaaaa", "xxx yyy zzz");
+        let b = encode_entity("zzzzzzzzzzzzzzzz", "qqq www eee");
+        let s = NativeScorer::default().score_pair(&a, &b);
+        assert!(s.skipped);
+        assert!(s.score < THRESHOLD);
+    }
+
+    #[test]
+    fn short_circuit_never_skips_a_match() {
+        // any pair with sim_title >= 2τ-1 = 0.5 is not skipped
+        let a = encode_entity("data cleaning approaches", "text one");
+        let b = encode_entity("data cleaning problems", "text two");
+        let s = NativeScorer::default().score_pair(&a, &b);
+        assert!(!s.skipped);
+    }
+
+    #[test]
+    fn short_circuit_and_full_agree_on_decisions() {
+        let pairs = [
+            ("the merge purge problem", "the merge purge problem x", "same abs", "same abs"),
+            ("alpha", "omega totally different", "abs a", "abs b"),
+            ("entity resolution", "entity resolutions", "survey text", "survey text more"),
+        ];
+        let sc = NativeScorer { short_circuit: true };
+        let full = NativeScorer { short_circuit: false };
+        for (t1, t2, a1, a2) in pairs {
+            let ea = encode_entity(t1, a1);
+            let eb = encode_entity(t2, a2);
+            let s1 = sc.score_pair(&ea, &eb);
+            let s2 = full.score_pair(&ea, &eb);
+            assert_eq!(s1.score >= THRESHOLD, s2.score >= THRESHOLD);
+            if !s1.skipped {
+                assert!((s1.score - s2.score).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_equals_full_within_bound() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xB0B);
+        for _ in 0..2000 {
+            let la = rng.range(0, 30);
+            let lb = rng.range(0, 30);
+            let a: Vec<u8> = (0..la).map(|_| rng.below(6) as u8 + 1).collect();
+            let b: Vec<u8> = (0..lb).map(|_| rng.below(6) as u8 + 1).collect();
+            let full = edit_distance(&a, &b);
+            for bound in [0u32, 1, 3, 8, 40] {
+                match edit_distance_bounded(&a, &b, bound) {
+                    Some(d) => assert_eq!(d, full, "a={a:?} b={b:?} bound={bound}"),
+                    None => assert!(full > bound, "a={a:?} b={b:?} bound={bound} full={full}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_trims_and_bags() {
+        // identical → Some(0) instantly
+        assert_eq!(edit_distance_bounded(b"abcdef", b"abcdef", 0), Some(0));
+        // shared prefix/suffix with a single middle edit
+        assert_eq!(edit_distance_bounded(b"prefixXsuffix", b"prefixYsuffix", 2), Some(1));
+        // disjoint alphabets: bag filter must reject without DP
+        assert_eq!(edit_distance_bounded(&[1u8; 20], &[2u8; 20], 10), None);
+    }
+
+    #[test]
+    fn banded_scorer_decisions_match_full_scorer() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x5C0);
+        let sc = NativeScorer { short_circuit: true };
+        let full = NativeScorer { short_circuit: false };
+        for _ in 0..300 {
+            let t1: String = (0..rng.range(0, 40))
+                .map(|_| (b'a' + rng.below(5) as u8) as char)
+                .collect();
+            let t2: String = if rng.chance(0.5) {
+                // near-duplicate: mutate t1
+                let mut cs: Vec<char> = t1.chars().collect();
+                if !cs.is_empty() {
+                    let i = rng.range(0, cs.len());
+                    cs[i] = (b'a' + rng.below(5) as u8) as char;
+                }
+                cs.into_iter().collect()
+            } else {
+                (0..rng.range(0, 40))
+                    .map(|_| (b'a' + rng.below(5) as u8) as char)
+                    .collect()
+            };
+            let a = encode_entity(&t1, "some abstract");
+            let b = encode_entity(&t2, "some abstract");
+            let s1 = sc.score_pair(&a, &b);
+            let s2 = full.score_pair(&a, &b);
+            assert_eq!(
+                s1.score >= THRESHOLD,
+                s2.score >= THRESHOLD,
+                "decision diverged: {t1:?} vs {t2:?} ({} vs {})",
+                s1.score,
+                s2.score
+            );
+            if !s1.skipped {
+                assert!((s1.score - s2.score).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn abstract_similarity_bounds() {
+        let a = encode_entity("", "the quick brown fox");
+        let b = encode_entity("", "the quick brown dog");
+        let s = abstract_similarity(&a, &b);
+        assert!(s > 0.0 && s < 1.0);
+        let empty = encode_entity("", "");
+        assert_eq!(abstract_similarity(&empty, &empty), 1.0);
+        assert_eq!(abstract_similarity(&empty, &a), 0.0);
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = encode_entity("one title here", "abstract alpha beta");
+        let b = encode_entity("another title", "abstract gamma");
+        let s1 = NativeScorer { short_circuit: false }.score_pair(&a, &b);
+        let s2 = NativeScorer { short_circuit: false }.score_pair(&b, &a);
+        assert!((s1.score - s2.score).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,27 @@
+//! Entity-resolution framework (the paper's §3 workflow).
+//!
+//! An ER workflow = **blocking strategy** + **matching strategy**:
+//! blocking semantically partitions the input into (possibly overlapping)
+//! blocks so matching only compares entities within a block; matching
+//! scores candidate pairs and classifies them as match / non-match.
+//!
+//! * [`entity`] — the publication record model (the CiteSeerX substitute).
+//! * [`blockkey`] — blocking-key generators (§5.1 uses the lowercased
+//!   first two title letters).
+//! * [`matcher`] — pairwise similarity: native Rust implementation and the
+//!   trait the XLA-batched matcher plugs into.
+//! * [`strategy`] — the combined matching strategy: weighted average of
+//!   matchers, threshold classification, the short-circuit optimization.
+//! * [`workflow`] — the generic blocking→matching MapReduce workflow of
+//!   §3 (standard blocking; SN variants live in [`crate::sn`]).
+//! * [`quality`] — precision/recall/F1 against injected ground truth.
+
+pub mod blockkey;
+pub mod clustering;
+pub mod entity;
+pub mod matcher;
+pub mod quality;
+pub mod strategy;
+pub mod workflow;
+
+pub use entity::Entity;

@@ -1,0 +1,117 @@
+//! Match-quality metrics against injected ground truth.
+//!
+//! The paper could not measure precision/recall (no ground truth for
+//! CiteSeerX); our synthetic corpus records the duplicate clusters it
+//! injects, so every experiment additionally reports quality — useful to
+//! verify that e.g. SRP's missing boundary pairs actually cost recall.
+
+use std::collections::BTreeSet;
+
+use super::entity::Pair;
+
+/// Precision / recall / F1 over pair sets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quality {
+    pub true_positives: usize,
+    pub false_positives: usize,
+    pub false_negatives: usize,
+}
+
+impl Quality {
+    /// Compare predicted matches against truth pairs.
+    pub fn evaluate(predicted: &[Pair], truth: &BTreeSet<Pair>) -> Self {
+        let pred: BTreeSet<Pair> = predicted.iter().copied().collect();
+        let tp = pred.intersection(truth).count();
+        Self {
+            true_positives: tp,
+            false_positives: pred.len() - tp,
+            false_negatives: truth.len() - tp,
+        }
+    }
+
+    pub fn precision(&self) -> f64 {
+        let denom = self.true_positives + self.false_positives;
+        if denom == 0 {
+            1.0
+        } else {
+            self.true_positives as f64 / denom as f64
+        }
+    }
+
+    pub fn recall(&self) -> f64 {
+        let denom = self.true_positives + self.false_negatives;
+        if denom == 0 {
+            1.0
+        } else {
+            self.true_positives as f64 / denom as f64
+        }
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    /// `pairs completeness` of a *blocking* result: fraction of truth
+    /// pairs that appear among the candidates (blocking's recall; the
+    /// standard blocking-quality metric).
+    pub fn pairs_completeness(candidates: &[Pair], truth: &BTreeSet<Pair>) -> f64 {
+        if truth.is_empty() {
+            return 1.0;
+        }
+        let cand: BTreeSet<Pair> = candidates.iter().copied().collect();
+        truth.intersection(&cand).count() as f64 / truth.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn truth() -> BTreeSet<Pair> {
+        [(1, 2), (3, 4), (5, 6)]
+            .iter()
+            .map(|&(a, b)| Pair::new(a, b))
+            .collect()
+    }
+
+    #[test]
+    fn perfect_prediction() {
+        let pred: Vec<Pair> = truth().into_iter().collect();
+        let q = Quality::evaluate(&pred, &truth());
+        assert_eq!(q.precision(), 1.0);
+        assert_eq!(q.recall(), 1.0);
+        assert_eq!(q.f1(), 1.0);
+    }
+
+    #[test]
+    fn partial_prediction() {
+        let pred = vec![Pair::new(1, 2), Pair::new(7, 8)];
+        let q = Quality::evaluate(&pred, &truth());
+        assert_eq!(q.true_positives, 1);
+        assert_eq!(q.false_positives, 1);
+        assert_eq!(q.false_negatives, 2);
+        assert!((q.precision() - 0.5).abs() < 1e-9);
+        assert!((q.recall() - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_cases() {
+        let q = Quality::evaluate(&[], &BTreeSet::new());
+        assert_eq!(q.precision(), 1.0);
+        assert_eq!(q.recall(), 1.0);
+        assert_eq!(Quality::pairs_completeness(&[], &BTreeSet::new()), 1.0);
+    }
+
+    #[test]
+    fn pairs_completeness_counts_candidates() {
+        let cands = vec![Pair::new(1, 2), Pair::new(3, 4), Pair::new(9, 10)];
+        let pc = Quality::pairs_completeness(&cands, &truth());
+        assert!((pc - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,209 @@
+//! The matching strategy: weighted matcher combination + threshold
+//! classification + batched execution.
+//!
+//! §3: "A matching strategy may also employ several matchers and combine
+//! their similarity scores … classifies the entity pairs as match or
+//! non-match", with the §5.1 instantiation (edit distance on title,
+//! TriGram on abstract, weighted average, τ = 0.75).
+//!
+//! [`MatchStrategy`] wraps a [`PairScorer`] backend and adds the batcher
+//! that the SN reducers feed candidate pairs into: pairs accumulate until
+//! the backend's preferred batch size is reached, then are scored in one
+//! dispatch (this is what amortizes the PJRT call overhead for the XLA
+//! backend — see EXPERIMENTS.md §Perf for the batch-size sweep).
+
+use std::sync::Arc;
+
+use super::entity::{Entity, Pair, ScoredPair};
+use super::matcher::{MatchScores, NativeScorer, PairScorer, THRESHOLD};
+use crate::runtime::encode::{encode_entity, Encoded};
+
+/// Strategy configuration.
+#[derive(Clone)]
+pub struct MatchStrategyConfig {
+    /// Classification threshold (paper: 0.75).
+    pub threshold: f32,
+    /// Scoring backend.
+    pub scorer: Arc<dyn PairScorer>,
+}
+
+impl Default for MatchStrategyConfig {
+    fn default() -> Self {
+        Self {
+            threshold: THRESHOLD,
+            scorer: Arc::new(NativeScorer::default()),
+        }
+    }
+}
+
+impl std::fmt::Debug for MatchStrategyConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MatchStrategyConfig")
+            .field("threshold", &self.threshold)
+            .field("scorer", &self.scorer.name())
+            .finish()
+    }
+}
+
+/// An entity together with its lazily-computed encoding — what the SN
+/// sliding-window buffers hold so each entity is encoded exactly once per
+/// reduce partition no matter how many window pairs it participates in.
+#[derive(Debug, Clone)]
+pub struct EncodedEntity {
+    pub entity: Arc<Entity>,
+    pub encoded: Encoded,
+}
+
+impl EncodedEntity {
+    pub fn new(entity: Arc<Entity>) -> Self {
+        let encoded = encode_entity(&entity.title, &entity.abstract_text);
+        Self { entity, encoded }
+    }
+}
+
+/// Accumulates candidate pairs and scores them in backend-sized batches.
+pub struct PairBatcher {
+    config: MatchStrategyConfig,
+    batch: Vec<(Arc<EncodedEntity>, Arc<EncodedEntity>)>,
+    /// Matches found so far.
+    matches: Vec<ScoredPair>,
+    /// Statistics.
+    pub pairs_scored: u64,
+    pub pairs_skipped: u64,
+}
+
+impl PairBatcher {
+    pub fn new(config: MatchStrategyConfig) -> Self {
+        Self {
+            config,
+            batch: Vec::new(),
+            matches: Vec::new(),
+            pairs_scored: 0,
+            pairs_skipped: 0,
+        }
+    }
+
+    /// Queue a candidate pair; may trigger a batch dispatch.
+    pub fn push(&mut self, a: Arc<EncodedEntity>, b: Arc<EncodedEntity>) {
+        self.batch.push((a, b));
+        if self.batch.len() >= self.config.scorer.preferred_batch() {
+            self.flush();
+        }
+    }
+
+    /// Score everything still queued.
+    pub fn flush(&mut self) {
+        if self.batch.is_empty() {
+            return;
+        }
+        let refs: Vec<(&Encoded, &Encoded)> = self
+            .batch
+            .iter()
+            .map(|(a, b)| (&a.encoded, &b.encoded))
+            .collect();
+        let scores: Vec<MatchScores> = self.config.scorer.score_pairs(&refs);
+        debug_assert_eq!(scores.len(), self.batch.len());
+        for ((a, b), s) in self.batch.drain(..).zip(scores) {
+            self.pairs_scored += 1;
+            if s.skipped {
+                self.pairs_skipped += 1;
+            }
+            if s.score >= self.config.threshold {
+                self.matches.push(ScoredPair {
+                    pair: Pair::new(a.entity.id, b.entity.id),
+                    score: s.score,
+                });
+            }
+        }
+    }
+
+    /// Finish and return the matches.
+    pub fn finish(mut self) -> Vec<ScoredPair> {
+        self.flush();
+        self.matches
+    }
+
+    /// Matches found so far (without consuming).
+    pub fn matches(&self) -> &[ScoredPair] {
+        &self.matches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ee(id: u64, title: &str, abs_: &str) -> Arc<EncodedEntity> {
+        Arc::new(EncodedEntity::new(Arc::new(Entity::new(id, title, abs_))))
+    }
+
+    #[test]
+    fn batcher_finds_duplicates() {
+        let mut b = PairBatcher::new(MatchStrategyConfig::default());
+        let e1 = ee(1, "parallel sorted neighborhood blocking", "we study mapreduce er");
+        let e2 = ee(2, "parallel sorted neighborhood blocking", "we study mapreduce er");
+        let e3 = ee(3, "quantum field theory primer", "gauge invariance lattices");
+        b.push(Arc::clone(&e1), Arc::clone(&e2));
+        b.push(Arc::clone(&e1), Arc::clone(&e3));
+        let matches = b.finish();
+        assert_eq!(matches.len(), 1);
+        assert_eq!(matches[0].pair, Pair::new(1, 2));
+        assert!(matches[0].score >= THRESHOLD);
+    }
+
+    #[test]
+    fn batcher_counts_skips() {
+        let mut b = PairBatcher::new(MatchStrategyConfig::default());
+        b.push(
+            ee(1, "aaaaaaaaaaaaaaaaaaaa", "x y z"),
+            ee(2, "bbbbbbbbbbbbbbbbbbbb", "p q r"),
+        );
+        let _ = b.flush();
+        assert_eq!(b.pairs_scored, 1);
+        assert_eq!(b.pairs_skipped, 1);
+        assert!(b.matches().is_empty());
+    }
+
+    #[test]
+    fn flush_on_preferred_batch() {
+        struct CountingScorer(std::sync::Mutex<Vec<usize>>);
+        impl PairScorer for CountingScorer {
+            fn score_pairs(&self, pairs: &[(&Encoded, &Encoded)]) -> Vec<MatchScores> {
+                self.0.lock().unwrap().push(pairs.len());
+                pairs
+                    .iter()
+                    .map(|_| MatchScores {
+                        score: 0.0,
+                        sim_title: 0.0,
+                        sim_abstract: 0.0,
+                        skipped: false,
+                    })
+                    .collect()
+            }
+            fn name(&self) -> &str {
+                "counting"
+            }
+            fn preferred_batch(&self) -> usize {
+                4
+            }
+        }
+        let scorer = Arc::new(CountingScorer(std::sync::Mutex::new(Vec::new())));
+        let cfg = MatchStrategyConfig {
+            threshold: 0.75,
+            scorer: Arc::clone(&scorer) as Arc<dyn PairScorer>,
+        };
+        let mut b = PairBatcher::new(cfg);
+        for i in 0..10u64 {
+            b.push(ee(i, "t", "a"), ee(i + 100, "t", "a"));
+        }
+        let _ = b.finish();
+        let batches = scorer.0.lock().unwrap().clone();
+        assert_eq!(batches, vec![4, 4, 2]);
+    }
+
+    #[test]
+    fn encoded_entity_caches_encoding() {
+        let e = ee(1, "some title", "some abstract");
+        assert_eq!(e.encoded.title_len, 10);
+    }
+}

@@ -1,0 +1,171 @@
+//! The generic entity-resolution workflow of §3 (Figure 2/3): blocking in
+//! `map`, matching in `reduce`, over any blocking technique.
+//!
+//! This is the high-level entry point examples and the CLI use: pick a
+//! blocking strategy, a matching strategy, task counts — get matches plus
+//! quality/perf reports.  SN variants and standard blocking all plug in
+//! through [`BlockingStrategy`].
+
+use std::sync::Arc;
+
+use super::blockkey::BlockingKey;
+use super::entity::Entity;
+use super::strategy::MatchStrategyConfig;
+use crate::sn::types::{SnConfig, SnMode, SnResult};
+use crate::sn::{jobsn, repsn, srp, standard_blocking};
+
+/// Which blocking strategy drives the workflow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockingStrategy {
+    /// Plain sorted reduce partitions (incomplete at boundaries — §4.1).
+    Srp,
+    /// SRP + second boundary job (§4.2).
+    JobSn,
+    /// Replication-based single job (§4.3).
+    RepSn,
+    /// Group by exact blocking key (§3).
+    StandardBlocking,
+}
+
+impl BlockingStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "srp" => Some(Self::Srp),
+            "jobsn" => Some(Self::JobSn),
+            "repsn" => Some(Self::RepSn),
+            "standard" | "standard-blocking" => Some(Self::StandardBlocking),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Srp => "SRP",
+            Self::JobSn => "JobSN",
+            Self::RepSn => "RepSN",
+            Self::StandardBlocking => "StandardBlocking",
+        }
+    }
+}
+
+/// Workflow configuration = blocking + matching + execution shape.
+#[derive(Clone)]
+pub struct WorkflowConfig {
+    pub strategy: BlockingStrategy,
+    pub sn: SnConfig,
+    /// `None` → blocking-only (emit candidate pairs, no matching).
+    pub matching: Option<MatchStrategyConfig>,
+}
+
+impl WorkflowConfig {
+    pub fn new(strategy: BlockingStrategy, sn: SnConfig) -> Self {
+        Self {
+            strategy,
+            sn,
+            matching: None,
+        }
+    }
+
+    pub fn with_matching(mut self, m: MatchStrategyConfig) -> Self {
+        self.matching = Some(m);
+        self
+    }
+
+    pub fn with_blocking_key(mut self, k: Arc<dyn BlockingKey>) -> Self {
+        self.sn.blocking_key = k;
+        self
+    }
+}
+
+/// Run the full workflow; returns the variant's [`SnResult`].
+pub fn run(entities: &[Entity], cfg: &WorkflowConfig) -> anyhow::Result<SnResult> {
+    let mut sn = cfg.sn.clone();
+    sn.mode = match &cfg.matching {
+        None => SnMode::Blocking,
+        Some(m) => SnMode::Matching(m.clone()),
+    };
+    match cfg.strategy {
+        BlockingStrategy::Srp => srp::run(entities, &sn),
+        BlockingStrategy::JobSn => jobsn::run(entities, &sn),
+        BlockingStrategy::RepSn => repsn::run(entities, &sn),
+        BlockingStrategy::StandardBlocking => standard_blocking::run(entities, &sn),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::blockkey::{BlockingKey, TitlePrefixKey};
+    use crate::er::entity::Pair;
+    use crate::sn::partition::RangePartition;
+
+    fn corpus_with_dup() -> Vec<Entity> {
+        let mut es: Vec<Entity> = (0..120)
+            .map(|i| {
+                let c = (b'a' + (i % 24) as u8) as char;
+                Entity::new(
+                    i,
+                    &format!("{c}{c} study of topic {i}"),
+                    "a moderately long abstract body for matching purposes",
+                )
+            })
+            .collect();
+        // duplicate of entity 0 with a one-char title typo
+        es.push(Entity::new(
+            999,
+            "aa study of topic 0!",
+            "a moderately long abstract body for matching purposes",
+        ));
+        es
+    }
+
+    fn base_sn(entities: &[Entity]) -> SnConfig {
+        SnConfig {
+            window: 8,
+            num_map_tasks: 3,
+            workers: 2,
+            partitioner: Arc::new(RangePartition::balanced(
+                entities,
+                |e| TitlePrefixKey::new(2).key(e),
+                4,
+            )),
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            mode: SnMode::Blocking,
+        }
+    }
+
+    #[test]
+    fn all_strategies_run_end_to_end_with_matching() {
+        let entities = corpus_with_dup();
+        let sn = base_sn(&entities);
+        for strategy in [
+            BlockingStrategy::Srp,
+            BlockingStrategy::JobSn,
+            BlockingStrategy::RepSn,
+            BlockingStrategy::StandardBlocking,
+        ] {
+            let cfg = WorkflowConfig::new(strategy, sn.clone())
+                .with_matching(MatchStrategyConfig::default());
+            let res = run(&entities, &cfg).unwrap();
+            assert!(
+                res.matches.iter().any(|m| m.pair == Pair::new(0, 999)),
+                "{} missed the duplicate",
+                strategy.name()
+            );
+            assert!(res.pairs.is_empty(), "matching mode must not emit raw pairs");
+        }
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for (s, v) in [
+            ("srp", BlockingStrategy::Srp),
+            ("JobSN", BlockingStrategy::JobSn),
+            ("repsn", BlockingStrategy::RepSn),
+            ("standard", BlockingStrategy::StandardBlocking),
+        ] {
+            assert_eq!(BlockingStrategy::parse(s), Some(v));
+        }
+        assert_eq!(BlockingStrategy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,27 @@
+//! # snmr — Parallel Sorted Neighborhood Blocking with MapReduce
+//!
+//! A full reproduction of Kolb, Thor & Rahm, *"Parallel Sorted Neighborhood
+//! Blocking with MapReduce"* (2010), as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: an
+//!   in-process MapReduce runtime with Hadoop-0.20 semantics
+//!   ([`mapreduce`]), the entity-resolution workflow of §3 ([`er`]), and
+//!   the paper's three Sorted-Neighborhood parallelizations — SRP, JobSN
+//!   and RepSN ([`sn`]) — plus baselines, partition functions and skew
+//!   tooling.
+//! * **Layer 2/1 (build-time Python)** — the pairwise matcher (edit
+//!   distance on titles + trigram Dice on abstracts) as a JAX model over
+//!   Pallas kernels, AOT-lowered to HLO text and executed from Rust via
+//!   PJRT ([`runtime`]); Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for the reproduced tables/figures.
+
+pub mod data;
+pub mod er;
+pub mod mapreduce;
+pub mod metrics;
+pub mod runtime;
+pub mod sn;
+pub mod util;

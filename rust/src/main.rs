@@ -1,0 +1,317 @@
+//! `snmr` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!
+//! * `generate` — build a synthetic publication corpus and store it as a
+//!   compressed sequence file in the (spill-backed) DFS.
+//! * `run`      — execute an ER workflow (SRP / JobSN / RepSN / standard
+//!   blocking) over a generated or ad-hoc corpus, with the native or the
+//!   AOT-compiled XLA matcher, and report matches, quality, counters and
+//!   per-phase timings.
+//! * `simulate` — replay a measured job profile on a simulated cluster
+//!   (the Figure-8 methodology; see DESIGN.md §3).
+//! * `inspect`  — corpus statistics: blocking-key histogram, partition
+//!   sizes and Gini coefficients for the §5.3 partition functions.
+//!
+//! Run `snmr <cmd> --help-flags` to list flags.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use snmr::data::corpus::{generate, CorpusConfig};
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
+use snmr::er::matcher::{NativeScorer, PairScorer};
+use snmr::er::strategy::MatchStrategyConfig;
+use snmr::er::workflow::{self, BlockingStrategy, WorkflowConfig};
+use snmr::mapreduce::dfs::{Dfs, DfsConfig};
+use snmr::mapreduce::seqfile;
+use snmr::mapreduce::sim::{simulate_job_chain, ClusterSpec};
+use snmr::metrics::report::Table;
+use snmr::runtime::matcher_exec::XlaMatcher;
+use snmr::sn::partition::{gini, partition_sizes, EvenPartition, PartitionFn, RangePartition};
+use snmr::sn::types::SnConfig;
+use snmr::util::cli::{flag, switch, Args, Flag};
+use snmr::util::humanize;
+
+const FLAGS: &[Flag] = &[
+    flag("n", "corpus size (entities), default 10000"),
+    flag("seed", "corpus seed"),
+    flag("dup-fraction", "duplicate fraction, default 0.15"),
+    flag("out", "output directory (generate) / corpus file (run)"),
+    flag("input", "corpus sequence file to load"),
+    flag("strategy", "srp | jobsn | repsn | standard (default repsn)"),
+    flag("window", "SN window size w (default 10)"),
+    flag("maps", "number of map tasks m (default 8)"),
+    flag("partitions", "number of reduce partitions (default 10)"),
+    flag("workers", "concurrent worker slots (default 2)"),
+    flag("partitioner", "manual | evenK (e.g. even8), default manual"),
+    flag("matcher", "native | native-full | xla (default native)"),
+    flag("artifacts", "artifact dir for the xla matcher"),
+    flag("cores", "simulate: comma list of core counts (default 1,2,4,8)"),
+    switch("blocking-only", "emit candidate pairs without matching"),
+    switch("no-compress", "generate: write uncompressed sequence file"),
+    switch("help-flags", "print flag help"),
+];
+
+fn main() {
+    let args = match Args::from_env(FLAGS, true) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if args.get_bool("help-flags") {
+        println!("{}", args.usage_flags());
+        return;
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("generate") => cmd_generate(&args),
+        Some("run") => cmd_run(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("inspect") => cmd_inspect(&args),
+        other => {
+            eprintln!(
+                "usage: snmr <generate|run|simulate|inspect> [flags]\n\
+                 (got {other:?})\n{}",
+                args.usage_flags()
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn corpus_cfg(args: &Args) -> Result<CorpusConfig> {
+    Ok(CorpusConfig {
+        n_entities: args.get_usize("n", 10_000).map_err(anyhow::Error::msg)?,
+        dup_fraction: args
+            .get_f64("dup-fraction", 0.15)
+            .map_err(anyhow::Error::msg)?,
+        seed: args.get_u64("seed", 0xC15E_5EED).map_err(anyhow::Error::msg)?,
+        ..Default::default()
+    })
+}
+
+fn load_or_generate(args: &Args) -> Result<Vec<snmr::er::Entity>> {
+    if let Some(path) = args.get("input") {
+        let bytes = std::fs::read(path).with_context(|| format!("read {path}"))?;
+        let records = seqfile::read_records(&bytes)?;
+        let entities = records
+            .iter()
+            .map(|(k, v)| snmr::er::Entity::from_record(k, v))
+            .collect::<Result<Vec<_>>>()?;
+        println!(
+            "loaded {} entities from {path}",
+            humanize::commas(entities.len() as u64)
+        );
+        Ok(entities)
+    } else {
+        let cfg = corpus_cfg(args)?;
+        let corpus = generate(&cfg);
+        println!(
+            "generated {} entities ({} truth pairs, seed {:#x})",
+            humanize::commas(corpus.entities.len() as u64),
+            humanize::commas(corpus.truth_pairs().len() as u64),
+            cfg.seed
+        );
+        Ok(corpus.entities)
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = corpus_cfg(args)?;
+    let out_dir = PathBuf::from(args.get_or("out", "data"));
+    let corpus = generate(&cfg);
+    let records: Vec<(String, Vec<String>)> =
+        corpus.entities.iter().map(|e| e.to_record()).collect();
+    let bytes = seqfile::write_records(&records, !args.get_bool("no-compress"))?;
+    let n_bytes = bytes.len();
+    let mut dfs = Dfs::new(DfsConfig {
+        spill_dir: Some(out_dir.clone()),
+        ..Default::default()
+    });
+    dfs.write("/corpus.seq", bytes)?;
+    // ground truth alongside, as a sequence file of pair records
+    let truth_records: Vec<(String, Vec<String>)> = corpus
+        .truth_pairs()
+        .iter()
+        .map(|p| (p.a.to_string(), vec![p.b.to_string()]))
+        .collect();
+    let tbytes = seqfile::write_records(&truth_records, true)?;
+    dfs.write("/truth.seq", tbytes)?;
+    println!(
+        "wrote {} entities ({}) to {}/corpus.seq (+truth.seq, {} pairs)",
+        humanize::commas(corpus.entities.len() as u64),
+        humanize::bytes(n_bytes as u64),
+        out_dir.display(),
+        humanize::commas(truth_records.len() as u64),
+    );
+    Ok(())
+}
+
+fn build_partitioner(
+    args: &Args,
+    entities: &[snmr::er::Entity],
+    key: &dyn BlockingKey,
+) -> Result<Arc<dyn PartitionFn>> {
+    let parts = args.get_usize("partitions", 10).map_err(anyhow::Error::msg)?;
+    match args.get_or("partitioner", "manual") {
+        "manual" => Ok(Arc::new(RangePartition::balanced(
+            entities,
+            |e| key.key(e),
+            parts,
+        ))),
+        s if s.starts_with("even") => {
+            let k: usize = s[4..].parse().context("evenK: bad K")?;
+            Ok(Arc::new(EvenPartition::ascii(k)))
+        }
+        other => bail!("unknown partitioner '{other}'"),
+    }
+}
+
+fn build_scorer(args: &Args) -> Result<Arc<dyn PairScorer>> {
+    match args.get_or("matcher", "native") {
+        "native" => Ok(Arc::new(NativeScorer { short_circuit: true })),
+        "native-full" => Ok(Arc::new(NativeScorer {
+            short_circuit: false,
+        })),
+        "xla" => {
+            let dir = args
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(snmr::runtime::artifact::default_dir);
+            Ok(Arc::new(XlaMatcher::load(&dir)?))
+        }
+        other => bail!("unknown matcher '{other}'"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let entities = load_or_generate(args)?;
+    let strategy = BlockingStrategy::parse(args.get_or("strategy", "repsn"))
+        .context("bad --strategy")?;
+    let key: Arc<dyn BlockingKey> = Arc::new(TitlePrefixKey::new(2));
+    let partitioner = build_partitioner(args, &entities, key.as_ref())?;
+    let sn = SnConfig {
+        window: args.get_usize("window", 10).map_err(anyhow::Error::msg)?,
+        num_map_tasks: args.get_usize("maps", 8).map_err(anyhow::Error::msg)?,
+        workers: args.get_usize("workers", 2).map_err(anyhow::Error::msg)?,
+        partitioner,
+        blocking_key: Arc::clone(&key),
+        mode: Default::default(),
+    };
+    let mut cfg = WorkflowConfig::new(strategy, sn);
+    if !args.get_bool("blocking-only") {
+        cfg = cfg.with_matching(MatchStrategyConfig {
+            threshold: snmr::er::matcher::THRESHOLD,
+            scorer: build_scorer(args)?,
+        });
+    }
+    let t0 = std::time::Instant::now();
+    let res = workflow::run(&entities, &cfg)?;
+    let wall = t0.elapsed();
+    println!(
+        "\n{} over {} entities: {} in {}",
+        strategy.name(),
+        humanize::commas(entities.len() as u64),
+        if args.get_bool("blocking-only") {
+            format!(
+                "{} candidate pairs",
+                humanize::commas(res.pairs.len() as u64)
+            )
+        } else {
+            format!("{} matches", humanize::commas(res.matches.len() as u64))
+        },
+        humanize::duration(wall)
+    );
+    println!("\ncounters:\n{}", res.counters.render());
+    for (i, s) in res.stats.iter().enumerate() {
+        println!(
+            "job {}: map {} | shuffle {} | reduce {} | total {}",
+            i + 1,
+            humanize::duration(std::time::Duration::from_secs_f64(s.map_phase_secs)),
+            humanize::duration(std::time::Duration::from_secs_f64(s.shuffle_phase_secs)),
+            humanize::duration(std::time::Duration::from_secs_f64(s.reduce_phase_secs)),
+            humanize::duration(std::time::Duration::from_secs_f64(s.total_secs)),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let entities = load_or_generate(args)?;
+    let strategy = BlockingStrategy::parse(args.get_or("strategy", "repsn"))
+        .context("bad --strategy")?;
+    let key: Arc<dyn BlockingKey> = Arc::new(TitlePrefixKey::new(2));
+    let partitioner = build_partitioner(args, &entities, key.as_ref())?;
+    let sn = SnConfig {
+        window: args.get_usize("window", 10).map_err(anyhow::Error::msg)?,
+        num_map_tasks: args.get_usize("maps", 8).map_err(anyhow::Error::msg)?,
+        workers: 1, // interference-free per-task timings for the simulator
+        partitioner,
+        blocking_key: Arc::clone(&key),
+        mode: Default::default(),
+    };
+    let mut cfg = WorkflowConfig::new(strategy, sn);
+    if !args.get_bool("blocking-only") {
+        cfg = cfg.with_matching(MatchStrategyConfig {
+            threshold: snmr::er::matcher::THRESHOLD,
+            scorer: build_scorer(args)?,
+        });
+    }
+    let res = workflow::run(&entities, &cfg)?;
+    let cores = args
+        .get_usize_list("cores", &[1, 2, 4, 8])
+        .map_err(anyhow::Error::msg)?;
+    let mut table = Table::new(
+        &format!("{} simulated on paper-like clusters", strategy.name()),
+        &["cores", "nodes", "time_s", "speedup"],
+    );
+    let mut t1 = None;
+    for &c in &cores {
+        let spec = ClusterSpec::paper_like(c);
+        let (_, total) = simulate_job_chain(&res.profiles, &spec);
+        let t1v = *t1.get_or_insert(total);
+        table.row(vec![
+            c.to_string(),
+            spec.nodes.to_string(),
+            format!("{total:.1}"),
+            format!("{:.2}", t1v / total),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let entities = load_or_generate(args)?;
+    let key = TitlePrefixKey::new(2);
+    let mut table = Table::new(
+        "Partition functions and resulting data skew (cf. Table 1)",
+        &["p", "partitions", "gini", "largest"],
+    );
+    let balanced = RangePartition::balanced(&entities, |e| key.key(e), 10);
+    let fns: Vec<(String, Arc<dyn PartitionFn>)> = vec![
+        ("Manual".into(), Arc::new(balanced)),
+        ("Even10".into(), Arc::new(EvenPartition::ascii(10))),
+        ("Even8".into(), Arc::new(EvenPartition::ascii(8))),
+    ];
+    for (name, p) in fns {
+        let sizes = partition_sizes(entities.iter().map(|e| key.key(e)), p.as_ref());
+        let g = gini(&sizes);
+        table.row(vec![
+            name,
+            sizes.len().to_string(),
+            format!("{g:.2}"),
+            humanize::commas(*sizes.iter().max().unwrap_or(&0) as u64),
+        ]);
+    }
+    println!("{}", table.render());
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! Map-side combiners (Hadoop's `setCombinerClass`).
+//!
+//! A combiner pre-reduces each map task's sorted partition bucket before
+//! the shuffle, shrinking intermediate data for associative aggregations.
+//! The SN jobs themselves cannot use one (their reduce is not a per-key
+//! aggregation), but the engine supports it because (a) it is part of the
+//! Hadoop semantics the paper assumes, (b) auxiliary jobs — key histograms
+//! for the Manual partitioner, corpus statistics — are classic combiner
+//! material, and the A2 ablation measures exactly that saving.
+
+use std::sync::Arc;
+
+use super::counters::Counters;
+use super::types::SizeEstimate;
+
+/// A combiner: fold all values of one key (within one map task's bucket)
+/// into fewer values.  Must be associative and produce output of the same
+/// type as its input (Hadoop's constraint).
+pub trait Combiner<K, V>: Send + Sync {
+    fn combine(&self, key: &K, values: Vec<V>, counters: &Counters) -> Vec<V>;
+}
+
+/// Closure adapter.
+pub struct FnCombiner<F> {
+    f: Arc<F>,
+}
+
+impl<F> FnCombiner<F> {
+    pub fn new(f: F) -> Self {
+        Self { f: Arc::new(f) }
+    }
+}
+
+impl<K, V, F> Combiner<K, V> for FnCombiner<F>
+where
+    F: Fn(&K, Vec<V>, &Counters) -> Vec<V> + Send + Sync,
+{
+    fn combine(&self, key: &K, values: Vec<V>, counters: &Counters) -> Vec<V> {
+        (self.f)(key, values, counters)
+    }
+}
+
+/// Apply a combiner to one *sorted* bucket in place.
+///
+/// Consecutive equal keys are folded; the bucket stays sorted.  Returns
+/// `(records_in, records_out)` for the spill counters.
+pub fn combine_sorted_bucket<K, V>(
+    bucket: &mut Vec<(K, V)>,
+    combiner: &dyn Combiner<K, V>,
+    counters: &Counters,
+) -> (u64, u64)
+where
+    K: Ord + Clone + SizeEstimate,
+    V: SizeEstimate,
+{
+    let records_in = bucket.len() as u64;
+    if bucket.is_empty() {
+        return (0, 0);
+    }
+    let mut out: Vec<(K, V)> = Vec::with_capacity(bucket.len());
+    let mut group_key: Option<K> = None;
+    let mut group_vals: Vec<V> = Vec::new();
+    for (k, v) in bucket.drain(..) {
+        match &group_key {
+            Some(gk) if *gk == k => group_vals.push(v),
+            _ => {
+                if let Some(gk) = group_key.take() {
+                    for cv in combiner.combine(&gk, std::mem::take(&mut group_vals), counters) {
+                        out.push((gk.clone(), cv));
+                    }
+                }
+                group_key = Some(k);
+                group_vals.push(v);
+            }
+        }
+    }
+    if let Some(gk) = group_key.take() {
+        for cv in combiner.combine(&gk, group_vals, counters) {
+            out.push((gk.clone(), cv));
+        }
+    }
+    let records_out = out.len() as u64;
+    *bucket = out;
+    (records_in, records_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum_combiner() -> FnCombiner<impl Fn(&String, Vec<u64>, &Counters) -> Vec<u64>> {
+        FnCombiner::new(|_k: &String, vals: Vec<u64>, _c: &Counters| {
+            vec![vals.into_iter().sum()]
+        })
+    }
+
+    #[test]
+    fn folds_consecutive_keys() {
+        let mut bucket: Vec<(String, u64)> = vec![
+            ("a".into(), 1),
+            ("a".into(), 2),
+            ("b".into(), 3),
+            ("c".into(), 4),
+            ("c".into(), 5),
+            ("c".into(), 6),
+        ];
+        let counters = Counters::new();
+        let (inn, out) = combine_sorted_bucket(&mut bucket, &sum_combiner(), &counters);
+        assert_eq!((inn, out), (6, 3));
+        assert_eq!(
+            bucket,
+            vec![("a".into(), 3), ("b".into(), 3), ("c".into(), 15)]
+        );
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let counters = Counters::new();
+        let mut empty: Vec<(String, u64)> = vec![];
+        assert_eq!(
+            combine_sorted_bucket(&mut empty, &sum_combiner(), &counters),
+            (0, 0)
+        );
+        let mut single: Vec<(String, u64)> = vec![("x".into(), 7)];
+        combine_sorted_bucket(&mut single, &sum_combiner(), &counters);
+        assert_eq!(single, vec![("x".into(), 7)]);
+    }
+
+    #[test]
+    fn identity_combiner_preserves_order_and_content() {
+        let ident = FnCombiner::new(|_k: &String, vals: Vec<u64>, _c: &Counters| vals);
+        let mut bucket: Vec<(String, u64)> =
+            vec![("a".into(), 2), ("a".into(), 1), ("b".into(), 9)];
+        let counters = Counters::new();
+        let before = bucket.clone();
+        combine_sorted_bucket(&mut bucket, &ident, &counters);
+        assert_eq!(bucket, before);
+    }
+
+    #[test]
+    fn combiner_shrinks_wordcount_shuffle() {
+        // the A2 measurement in miniature: many repeats of few keys
+        let mut bucket: Vec<(String, u64)> = Vec::new();
+        for _ in 0..1000 {
+            bucket.push(("hot".into(), 1));
+        }
+        bucket.push(("rare".into(), 1));
+        bucket.sort();
+        let counters = Counters::new();
+        let (inn, out) = combine_sorted_bucket(&mut bucket, &sum_combiner(), &counters);
+        assert_eq!(inn, 1001);
+        assert_eq!(out, 2);
+        assert_eq!(bucket[0], ("hot".into(), 1000));
+    }
+}

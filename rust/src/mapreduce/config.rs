@@ -1,0 +1,83 @@
+//! Job configuration.
+
+/// Configuration for one MapReduce job, mirroring the Hadoop knobs the
+//  paper sets in §5.1.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Human-readable job name (shows up in reports/timings).
+    pub name: String,
+    /// Number of map tasks (= input splits), the paper's `m`.
+    pub num_map_tasks: usize,
+    /// Number of reduce tasks, the paper's `r`.  Note the paper
+    /// distinguishes reduce *tasks* from reducer *slots*: §5.2 runs 10
+    /// reduce tasks on at most 8 reducer slots.
+    pub num_reduce_tasks: usize,
+    /// Worker slots actually executing tasks concurrently (cores).  With
+    /// `workers == 1` the engine degrades to faithful sequential execution
+    /// whose per-task timings calibrate the cluster simulator.
+    pub workers: usize,
+    /// Emulated per-job setup/teardown cost in *simulated* accounting (the
+    /// JobSN-vs-RepSN tradeoff); the engine itself also measures its real
+    /// setup time.  Seconds.
+    pub sim_job_setup_s: f64,
+    /// If true, the engine records per-task wall-clock timings (tiny
+    /// overhead; on by default — the simulator needs them).
+    pub record_task_timings: bool,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        Self {
+            name: "job".into(),
+            num_map_tasks: 1,
+            num_reduce_tasks: 1,
+            workers: 1,
+            // The paper observes multi-second Hadoop job scheduling
+            // overhead; 6s is a common figure for Hadoop 0.20 job startup.
+            sim_job_setup_s: 6.0,
+            record_task_timings: true,
+        }
+    }
+}
+
+impl JobConfig {
+    pub fn named(name: &str) -> Self {
+        Self {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn with_tasks(mut self, maps: usize, reduces: usize) -> Self {
+        assert!(maps >= 1 && reduces >= 1);
+        self.num_map_tasks = maps;
+        self.num_reduce_tasks = reduces;
+        self
+    }
+
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        assert!(workers >= 1);
+        self.workers = workers;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chain() {
+        let c = JobConfig::named("x").with_tasks(3, 2).with_workers(4);
+        assert_eq!(c.name, "x");
+        assert_eq!(c.num_map_tasks, 3);
+        assert_eq!(c.num_reduce_tasks, 2);
+        assert_eq!(c.workers, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_tasks_rejected() {
+        let _ = JobConfig::default().with_tasks(0, 1);
+    }
+}

@@ -1,0 +1,139 @@
+//! Job counters (Hadoop-style), shared across tasks.
+//!
+//! Counters are the engine's observability primitive: every SN variant
+//! reports its replication / boundary / comparison counts through them, and
+//! the tests assert the paper's overhead formulas against them (e.g.
+//! RepSN's replicated entities ≤ `m·(r-1)·(w-1)`).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Thread-safe named counters.  Increment cost is one mutex acquisition;
+/// hot loops should accumulate locally and `add` once per task (the SN
+/// reducers do).
+#[derive(Debug, Default)]
+pub struct Counters {
+    inner: Mutex<BTreeMap<String, u64>>,
+}
+
+/// Well-known counter names used by the engine itself.
+pub mod names {
+    pub const MAP_INPUT_RECORDS: &str = "engine.map_input_records";
+    pub const MAP_OUTPUT_RECORDS: &str = "engine.map_output_records";
+    pub const MAP_OUTPUT_BYTES: &str = "engine.map_output_bytes";
+    pub const SHUFFLE_BYTES: &str = "engine.shuffle_bytes";
+    pub const REDUCE_GROUPS: &str = "engine.reduce_groups";
+    pub const REDUCE_INPUT_RECORDS: &str = "engine.reduce_input_records";
+    pub const REDUCE_OUTPUT_RECORDS: &str = "engine.reduce_output_records";
+    pub const SPILLED_RECORDS: &str = "engine.spilled_records";
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `delta` to counter `name` (creates it at 0 first).
+    pub fn add(&self, name: &str, delta: u64) {
+        let mut m = self.inner.lock().unwrap();
+        *m.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Increment by one.
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Current value (0 if never touched).
+    pub fn get(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Snapshot of all counters, sorted by name.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    /// Merge another counter set into this one.
+    pub fn merge(&self, other: &Counters) {
+        let other = other.inner.lock().unwrap();
+        let mut m = self.inner.lock().unwrap();
+        for (k, v) in other.iter() {
+            *m.entry(k.clone()).or_insert(0) += *v;
+        }
+    }
+
+    /// Render as an aligned text table (for CLI / bench reports).
+    pub fn render(&self) -> String {
+        let snap = self.snapshot();
+        let width = snap.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+        let mut s = String::new();
+        for (k, v) in snap {
+            s.push_str(&format!(
+                "  {k:<width$}  {}\n",
+                crate::util::humanize::commas(v)
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn add_get_inc() {
+        let c = Counters::new();
+        assert_eq!(c.get("x"), 0);
+        c.add("x", 5);
+        c.inc("x");
+        assert_eq!(c.get("x"), 6);
+    }
+
+    #[test]
+    fn concurrent_increments_are_exact() {
+        let c = Arc::new(Counters::new());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.inc("n");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get("n"), 8000);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let a = Counters::new();
+        let b = Counters::new();
+        a.add("x", 1);
+        b.add("x", 2);
+        b.add("y", 3);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 3);
+        assert_eq!(a.get("y"), 3);
+    }
+
+    #[test]
+    fn snapshot_sorted() {
+        let c = Counters::new();
+        c.add("z", 1);
+        c.add("a", 2);
+        let snap = c.snapshot();
+        assert_eq!(snap[0].0, "a");
+        assert_eq!(snap[1].0, "z");
+    }
+}

@@ -1,0 +1,307 @@
+//! Simulated distributed file system (the HDFS stand-in).
+//!
+//! Models what the paper's setup depends on: files stored as fixed-size
+//! blocks (§5.1 sets 128 MB), placed on simulated datanodes with a
+//! replication factor, with enough metadata to account for data locality
+//! (map tasks "read their (preferably) local data").  Payloads live in
+//! memory; an optional spill directory persists files to disk for the CLI
+//! pipeline (`snmr generate` → `snmr run`).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+/// DFS configuration.
+#[derive(Debug, Clone)]
+pub struct DfsConfig {
+    /// Block size in bytes (paper: 128 MB; tests use small values).
+    pub block_size: usize,
+    /// Replication factor.
+    pub replication: usize,
+    /// Number of simulated datanodes.
+    pub nodes: usize,
+    /// If set, files are also persisted under this directory.
+    pub spill_dir: Option<PathBuf>,
+}
+
+impl Default for DfsConfig {
+    fn default() -> Self {
+        Self {
+            block_size: 128 * 1024 * 1024,
+            replication: 1,
+            nodes: 4,
+            spill_dir: None,
+        }
+    }
+}
+
+/// Placement of one block: which nodes hold a replica.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BlockInfo {
+    pub index: usize,
+    pub len: usize,
+    pub replicas: Vec<usize>,
+}
+
+#[derive(Debug, Default)]
+struct FileEntry {
+    data: Vec<u8>,
+    blocks: Vec<BlockInfo>,
+}
+
+/// The simulated DFS namespace.
+#[derive(Debug)]
+pub struct Dfs {
+    config: DfsConfig,
+    files: BTreeMap<String, FileEntry>,
+    /// Bytes stored per node (replicas counted), for balance reporting.
+    node_bytes: Vec<u64>,
+    /// Round-robin placement cursor (HDFS default placement is
+    /// locality-driven; round-robin gives the same balance property).
+    cursor: usize,
+}
+
+impl Dfs {
+    pub fn new(config: DfsConfig) -> Self {
+        assert!(config.nodes >= 1 && config.replication >= 1);
+        assert!(config.replication <= config.nodes);
+        assert!(config.block_size > 0);
+        let nodes = config.nodes;
+        Self {
+            config,
+            files: BTreeMap::new(),
+            node_bytes: vec![0; nodes],
+            cursor: 0,
+        }
+    }
+
+    /// Write (or overwrite) a file; splits into blocks and places replicas.
+    pub fn write(&mut self, path: &str, data: Vec<u8>) -> Result<()> {
+        if path.is_empty() {
+            bail!("empty path");
+        }
+        if let Some(old) = self.files.remove(path) {
+            self.release(&old);
+        }
+        let mut blocks = Vec::new();
+        let n = data.len();
+        let bs = self.config.block_size;
+        let nblocks = n.div_ceil(bs).max(1);
+        for i in 0..nblocks {
+            let len = if i + 1 == nblocks && n > 0 {
+                n - i * bs
+            } else if n == 0 {
+                0
+            } else {
+                bs
+            };
+            let mut replicas = Vec::with_capacity(self.config.replication);
+            for rep in 0..self.config.replication {
+                let node = (self.cursor + rep) % self.config.nodes;
+                replicas.push(node);
+                self.node_bytes[node] += len as u64;
+            }
+            self.cursor = (self.cursor + 1) % self.config.nodes;
+            blocks.push(BlockInfo {
+                index: i,
+                len,
+                replicas,
+            });
+        }
+        if let Some(dir) = &self.config.spill_dir {
+            let full = dir.join(path.trim_start_matches('/'));
+            if let Some(parent) = full.parent() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("mkdir {}", parent.display()))?;
+            }
+            std::fs::write(&full, &data).with_context(|| format!("spill {}", full.display()))?;
+        }
+        self.files.insert(path.to_string(), FileEntry { data, blocks });
+        Ok(())
+    }
+
+    /// Read a whole file.
+    pub fn read(&self, path: &str) -> Result<&[u8]> {
+        match self.files.get(path) {
+            Some(f) => Ok(&f.data),
+            None => {
+                // fall back to spill dir (cross-process pipeline)
+                bail!("no such file in DFS: {path}")
+            }
+        }
+    }
+
+    /// Read from the spill directory when the in-memory namespace doesn't
+    /// have the file (e.g. a fresh process after `snmr generate`).
+    pub fn read_or_spill(&self, path: &str) -> Result<Vec<u8>> {
+        if let Ok(d) = self.read(path) {
+            return Ok(d.to_vec());
+        }
+        if let Some(dir) = &self.config.spill_dir {
+            let full = dir.join(path.trim_start_matches('/'));
+            return std::fs::read(&full).with_context(|| format!("read {}", full.display()));
+        }
+        bail!("no such file: {path}")
+    }
+
+    /// Delete a file.
+    pub fn remove(&mut self, path: &str) -> Result<()> {
+        match self.files.remove(path) {
+            Some(f) => {
+                self.release(&f);
+                Ok(())
+            }
+            None => bail!("no such file: {path}"),
+        }
+    }
+
+    fn release(&mut self, f: &FileEntry) {
+        for b in &f.blocks {
+            for &n in &b.replicas {
+                self.node_bytes[n] -= b.len as u64;
+            }
+        }
+    }
+
+    /// List files under a prefix.
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        self.files
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+
+    /// Block placement of a file.
+    pub fn blocks(&self, path: &str) -> Result<&[BlockInfo]> {
+        self.files
+            .get(path)
+            .map(|f| f.blocks.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("no such file: {path}"))
+    }
+
+    /// Bytes stored per node (replicas counted).
+    pub fn node_bytes(&self) -> &[u64] {
+        &self.node_bytes
+    }
+
+    /// Fraction of a hypothetical `tasks`-way scan that can be scheduled
+    /// node-locally if tasks are placed greedily on replica nodes.
+    pub fn locality_fraction(&self, path: &str, tasks: usize) -> Result<f64> {
+        let blocks = self.blocks(path)?;
+        if blocks.is_empty() || tasks == 0 {
+            return Ok(1.0);
+        }
+        // greedy: a task on node n reads blocks with a replica on n
+        let mut local = 0usize;
+        for (i, b) in blocks.iter().enumerate() {
+            let task_node = i % tasks % self.config.nodes;
+            if b.replicas.contains(&task_node) {
+                local += 1;
+            }
+        }
+        Ok(local as f64 / blocks.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Dfs {
+        Dfs::new(DfsConfig {
+            block_size: 10,
+            replication: 2,
+            nodes: 4,
+            spill_dir: None,
+        })
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut dfs = small();
+        dfs.write("/data/a.bin", vec![7u8; 25]).unwrap();
+        assert_eq!(dfs.read("/data/a.bin").unwrap(), &vec![7u8; 25][..]);
+    }
+
+    #[test]
+    fn splits_into_blocks() {
+        let mut dfs = small();
+        dfs.write("/x", vec![0u8; 25]).unwrap();
+        let blocks = dfs.blocks("/x").unwrap();
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(blocks[0].len, 10);
+        assert_eq!(blocks[2].len, 5);
+        for b in blocks {
+            assert_eq!(b.replicas.len(), 2);
+        }
+    }
+
+    #[test]
+    fn replication_counts_bytes() {
+        let mut dfs = small();
+        dfs.write("/x", vec![0u8; 20]).unwrap();
+        let total: u64 = dfs.node_bytes().iter().sum();
+        assert_eq!(total, 40); // 20 bytes × replication 2
+        dfs.remove("/x").unwrap();
+        assert_eq!(dfs.node_bytes().iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn overwrite_releases_old_blocks() {
+        let mut dfs = small();
+        dfs.write("/x", vec![0u8; 20]).unwrap();
+        dfs.write("/x", vec![0u8; 5]).unwrap();
+        assert_eq!(dfs.node_bytes().iter().sum::<u64>(), 10);
+    }
+
+    #[test]
+    fn list_by_prefix() {
+        let mut dfs = small();
+        dfs.write("/a/1", vec![1]).unwrap();
+        dfs.write("/a/2", vec![2]).unwrap();
+        dfs.write("/b/3", vec![3]).unwrap();
+        assert_eq!(dfs.list("/a/"), vec!["/a/1".to_string(), "/a/2".to_string()]);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dfs = small();
+        assert!(dfs.read("/nope").is_err());
+    }
+
+    #[test]
+    fn empty_file_has_one_empty_block() {
+        let mut dfs = small();
+        dfs.write("/e", vec![]).unwrap();
+        assert_eq!(dfs.blocks("/e").unwrap().len(), 1);
+        assert_eq!(dfs.read("/e").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn spill_dir_persists() {
+        let dir = std::env::temp_dir().join(format!("snmr_dfs_test_{}", std::process::id()));
+        let mut dfs = Dfs::new(DfsConfig {
+            block_size: 10,
+            replication: 1,
+            nodes: 2,
+            spill_dir: Some(dir.clone()),
+        });
+        dfs.write("/out/f.bin", b"hello".to_vec()).unwrap();
+        let fresh = Dfs::new(DfsConfig {
+            spill_dir: Some(dir.clone()),
+            ..DfsConfig::default()
+        });
+        assert_eq!(fresh.read_or_spill("/out/f.bin").unwrap(), b"hello");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn locality_fraction_bounds() {
+        let mut dfs = small();
+        dfs.write("/x", vec![0u8; 100]).unwrap();
+        let f = dfs.locality_fraction("/x", 4).unwrap();
+        assert!((0.0..=1.0).contains(&f));
+    }
+}

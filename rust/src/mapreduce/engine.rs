@@ -1,0 +1,468 @@
+//! The job driver: split → map (+sort/partition) → shuffle → reduce.
+//!
+//! Faithful to the Hadoop execution model at the semantics level the
+//! paper's algorithms require (see module docs on [`super`]), instrumented
+//! with the per-task wall-clock timings and byte counts the cluster
+//! simulator ([`super::sim`]) consumes.
+
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::config::JobConfig;
+use super::counters::{names, Counters};
+use super::shuffle::merge_sorted_runs;
+use super::splits::even_splits;
+use super::types::{
+    Emitter, MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate, ValuesIter,
+};
+use crate::util::threadpool::run_indexed;
+
+/// Grouping comparator: `true` if two (adjacent, sort-ordered) keys belong
+/// to the same reduce *group* (Hadoop's value-grouping comparator).
+pub type GroupFn<KT> = Arc<dyn Fn(&KT, &KT) -> bool + Send + Sync>;
+
+/// Per-job measured statistics (feed the simulator and the reports).
+#[derive(Debug, Clone, Default)]
+pub struct JobStats {
+    /// Wall time of each map task, in seconds, indexed by task id.
+    pub map_task_secs: Vec<f64>,
+    /// Wall time of each reduce task, in seconds, indexed by partition.
+    pub reduce_task_secs: Vec<f64>,
+    /// Estimated intermediate bytes routed to each reduce partition.
+    pub shuffle_bytes_per_reducer: Vec<u64>,
+    /// Wall time of the whole map phase (tasks + sort), reduce phase, and
+    /// shuffle merge, as executed on the real worker pool.
+    pub map_phase_secs: f64,
+    pub shuffle_phase_secs: f64,
+    pub reduce_phase_secs: f64,
+    pub total_secs: f64,
+    /// Records emitted by map / reduce.
+    pub map_output_records: u64,
+    pub reduce_output_records: u64,
+}
+
+/// Everything a finished job returns.
+pub struct JobResult<KO, VO> {
+    /// Reduce outputs, one `Vec` per reduce partition, in partition order
+    /// ("the output partitions can easily be merged to a combined result").
+    pub outputs: Vec<Vec<(KO, VO)>>,
+    pub counters: Arc<Counters>,
+    pub stats: JobStats,
+}
+
+impl<KO, VO> JobResult<KO, VO> {
+    /// Concatenate all partitions in order (the final merge step).
+    pub fn merged_output(self) -> Vec<(KO, VO)> {
+        self.outputs.into_iter().flatten().collect()
+    }
+}
+
+/// Run one MapReduce job over an in-memory input.
+///
+/// `input` is a list of `(key, value)` records; it is divided into
+/// `config.num_map_tasks` contiguous splits.  Execution uses
+/// `config.workers` threads for the map wave and again for the reduce wave
+/// (Hadoop's slot model; map and reduce waves do not overlap — the paper's
+/// Hadoop 0.20 has no shuffle/compute overlap either for the final wave,
+/// and this keeps per-phase accounting clean).
+pub fn run_job<KI, VI, KT, VT, KO, VO>(
+    config: &JobConfig,
+    input: Vec<(KI, VI)>,
+    mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+    partitioner: Arc<dyn Partitioner<KT>>,
+    grouping: GroupFn<KT>,
+    reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+) -> JobResult<KO, VO>
+where
+    KI: Send + 'static,
+    VI: Send + 'static,
+    KT: Ord + Send + SizeEstimate + 'static,
+    VT: Send + SizeEstimate + 'static,
+    KO: Send + SizeEstimate + 'static,
+    VO: Send + SizeEstimate + 'static,
+{
+    let t_start = Instant::now();
+    let counters = Arc::new(Counters::new());
+    let m = config.num_map_tasks;
+    let r = config.num_reduce_tasks;
+
+    // ---- split ------------------------------------------------------------
+    let n_input = input.len();
+    counters.add(names::MAP_INPUT_RECORDS, n_input as u64);
+    let ranges = even_splits(n_input, m);
+    let mut splits: Vec<Option<Vec<(KI, VI)>>> = Vec::with_capacity(ranges.len());
+    {
+        let mut rest = input;
+        // carve from the back so we can use split_off without copying
+        let mut carved: Vec<Vec<(KI, VI)>> = Vec::with_capacity(ranges.len());
+        for (start, _) in ranges.iter().rev() {
+            carved.push(rest.split_off(*start));
+        }
+        carved.reverse();
+        for c in carved {
+            splits.push(Some(c));
+        }
+    }
+    let actual_m = splits.len(); // may be < m for tiny inputs
+
+    // ---- map phase ---------------------------------------------------------
+    // Each map task: configure → map* → close, then partition + sort each
+    // bucket (Hadoop sorts at spill time, map-side).
+    let t_map = Instant::now();
+    let splits = Arc::new(Mutex::new(splits));
+    struct MapOut<KT, VT> {
+        buckets: Vec<Vec<(KT, VT)>>,
+        secs: f64,
+        records: u64,
+        bytes: u64,
+    }
+    let map_outputs: Vec<MapOut<KT, VT>> = {
+        let splits = Arc::clone(&splits);
+        let mapper = Arc::clone(&mapper);
+        let partitioner = Arc::clone(&partitioner);
+        let counters = Arc::clone(&counters);
+        run_indexed(config.workers, actual_m, move |i| {
+            let t0 = Instant::now();
+            let split = splits.lock().unwrap()[i].take().expect("split taken once");
+            let mut task = mapper.create_task();
+            let mut out = Emitter::new();
+            task.configure(&mut out, &counters);
+            for (k, v) in split {
+                task.map(k, v, &mut out, &counters);
+            }
+            task.close(&mut out, &counters);
+            let records = out.len() as u64;
+            let bytes = out.bytes();
+            // partition + sort (the map-side "sort & spill")
+            let mut buckets: Vec<Vec<(KT, VT)>> = (0..r).map(|_| Vec::new()).collect();
+            for (k, v) in out.into_pairs() {
+                let p = partitioner.partition(&k, r);
+                assert!(p < r, "partitioner returned {p} for r={r}");
+                buckets[p].push((k, v));
+            }
+            for b in &mut buckets {
+                b.sort_by(|a, b| a.0.cmp(&b.0));
+            }
+            MapOut {
+                buckets,
+                secs: t0.elapsed().as_secs_f64(),
+                records,
+                bytes,
+            }
+        })
+    };
+    let map_phase_secs = t_map.elapsed().as_secs_f64();
+
+    let mut stats = JobStats {
+        map_task_secs: map_outputs.iter().map(|o| o.secs).collect(),
+        map_phase_secs,
+        ..Default::default()
+    };
+    let map_records: u64 = map_outputs.iter().map(|o| o.records).sum();
+    let map_bytes: u64 = map_outputs.iter().map(|o| o.bytes).sum();
+    counters.add(names::MAP_OUTPUT_RECORDS, map_records);
+    counters.add(names::MAP_OUTPUT_BYTES, map_bytes);
+    counters.add(names::SPILLED_RECORDS, map_records);
+    stats.map_output_records = map_records;
+
+    // ---- shuffle -----------------------------------------------------------
+    // Transpose buckets: reducer j receives map task i's bucket j.
+    let t_shuffle = Instant::now();
+    let mut per_reducer_runs: Vec<Vec<Vec<(KT, VT)>>> = (0..r).map(|_| Vec::new()).collect();
+    let mut shuffle_bytes = vec![0u64; r];
+    for mo in map_outputs {
+        for (j, bucket) in mo.buckets.into_iter().enumerate() {
+            let b: u64 = bucket
+                .iter()
+                .map(|(k, v)| (k.size_bytes() + v.size_bytes()) as u64)
+                .sum();
+            shuffle_bytes[j] += b;
+            per_reducer_runs[j].push(bucket);
+        }
+    }
+    counters.add(names::SHUFFLE_BYTES, shuffle_bytes.iter().sum());
+    stats.shuffle_bytes_per_reducer = shuffle_bytes;
+    // merge runs into one sorted stream per reducer
+    let merged: Vec<Vec<(KT, VT)>> = per_reducer_runs
+        .into_iter()
+        .map(merge_sorted_runs)
+        .collect();
+    stats.shuffle_phase_secs = t_shuffle.elapsed().as_secs_f64();
+
+    // ---- reduce phase --------------------------------------------------
+    let t_reduce = Instant::now();
+    struct RedOut<KO, VO> {
+        output: Vec<(KO, VO)>,
+        secs: f64,
+        groups: u64,
+        in_records: u64,
+    }
+    let merged = Arc::new(Mutex::new(
+        merged.into_iter().map(Some).collect::<Vec<_>>(),
+    ));
+    let red_outputs: Vec<RedOut<KO, VO>> = {
+        let merged = Arc::clone(&merged);
+        let reducer = Arc::clone(&reducer);
+        let grouping = Arc::clone(&grouping);
+        let counters = Arc::clone(&counters);
+        run_indexed(config.workers, r, move |j| {
+            let t0 = Instant::now();
+            let run = merged.lock().unwrap()[j].take().expect("run taken once");
+            let in_records = run.len() as u64;
+            // Unzip into parallel key/value vectors so each group's values
+            // form a contiguous `&[VT]` for the forward-cursor iterator.
+            let mut keys: Vec<KT> = Vec::with_capacity(run.len());
+            let mut values: Vec<VT> = Vec::with_capacity(run.len());
+            for (k, v) in run {
+                keys.push(k);
+                values.push(v);
+            }
+            let mut task = reducer.create_task();
+            let mut out = Emitter::new();
+            task.configure(&mut out, &counters);
+            let consumed = AtomicU64::new(0);
+            let mut groups = 0u64;
+            // walk groups of consecutive keys equal under the grouping fn
+            let mut start = 0;
+            while start < keys.len() {
+                let mut end = start + 1;
+                while end < keys.len() && grouping(&keys[start], &keys[end]) {
+                    end += 1;
+                }
+                groups += 1;
+                // Hadoop hands the *first* key of the group to reduce.
+                let it = ValuesIter::new(&values[start..end], &consumed);
+                task.reduce(&keys[start], it, &mut out, &counters);
+                start = end;
+            }
+            task.close(&mut out, &counters);
+            RedOut {
+                output: out.into_pairs(),
+                secs: t0.elapsed().as_secs_f64(),
+                groups,
+                in_records,
+            }
+        })
+    };
+    stats.reduce_phase_secs = t_reduce.elapsed().as_secs_f64();
+    stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
+    let groups: u64 = red_outputs.iter().map(|o| o.groups).sum();
+    let red_in: u64 = red_outputs.iter().map(|o| o.in_records).sum();
+    counters.add(names::REDUCE_GROUPS, groups);
+    counters.add(names::REDUCE_INPUT_RECORDS, red_in);
+    let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
+    let red_records: u64 = outputs.iter().map(|o| o.len() as u64).sum();
+    counters.add(names::REDUCE_OUTPUT_RECORDS, red_records);
+    stats.reduce_output_records = red_records;
+    stats.total_secs = t_start.elapsed().as_secs_f64();
+
+    JobResult {
+        outputs,
+        counters,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::types::{FnMapTask, FnReduceTask, HashPartitioner, MapTask};
+
+    /// Word-count — the Figure 1 example of the paper.
+    #[test]
+    fn word_count_like_figure_1() {
+        let docs = vec![
+            ((), "b c".to_string()),
+            ((), "a d".to_string()),
+            ((), "b d".to_string()),
+            ((), "c d".to_string()),
+        ];
+        let mapper = Arc::new(FnMapTask::new(
+            |_k: (), doc: String, out: &mut Emitter<String, u64>, _c: &Counters| {
+                for w in doc.split_whitespace() {
+                    out.emit(w.to_string(), 1);
+                }
+            },
+        ));
+        // range partition: a-c → 0, d-z → 1 (like the figure's a–m / n–z)
+        struct Range;
+        impl Partitioner<String> for Range {
+            fn partition(&self, key: &String, _r: usize) -> usize {
+                usize::from(key.as_str() >= "d")
+            }
+        }
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &String, vals: ValuesIter<'_, u64>, out: &mut Emitter<String, u64>, _c: &Counters| {
+                out.emit(k.clone(), vals.map(|v| *v).sum());
+            },
+        ));
+        let cfg = JobConfig::named("wc").with_tasks(2, 2).with_workers(2);
+        let res = run_job(
+            &cfg,
+            docs,
+            mapper,
+            Arc::new(Range),
+            Arc::new(|a: &String, b: &String| a == b),
+            reducer,
+        );
+        assert_eq!(
+            res.outputs[0],
+            vec![("a".to_string(), 1), ("b".to_string(), 2), ("c".to_string(), 2)]
+        );
+        assert_eq!(res.outputs[1], vec![("d".to_string(), 3)]);
+        assert_eq!(res.counters.get(names::MAP_INPUT_RECORDS), 4);
+        assert_eq!(res.counters.get(names::MAP_OUTPUT_RECORDS), 8);
+        assert_eq!(res.counters.get(names::REDUCE_GROUPS), 4);
+    }
+
+    /// Reduce input must be sorted by key even with multiple map tasks and
+    /// a hash partitioner.
+    #[test]
+    fn reduce_input_sorted_and_partition_disjoint() {
+        let input: Vec<((), u64)> = (0..1000u64).rev().map(|i| ((), i)).collect();
+        let mapper = Arc::new(FnMapTask::new(
+            |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(v % 97, v);
+            },
+        ));
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(*k, vals.count() as u64);
+            },
+        ));
+        let cfg = JobConfig::named("t").with_tasks(4, 3).with_workers(3);
+        let res = run_job(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer,
+        );
+        // each key appears in exactly one partition, keys sorted within
+        let mut seen = std::collections::BTreeSet::new();
+        for part in &res.outputs {
+            let keys: Vec<u64> = part.iter().map(|(k, _)| *k).collect();
+            let mut sorted = keys.clone();
+            sorted.sort_unstable();
+            assert_eq!(keys, sorted);
+            for k in keys {
+                assert!(seen.insert(k), "key {k} in two partitions");
+            }
+        }
+        assert_eq!(seen.len(), 97);
+        let total: u64 = res
+            .outputs
+            .iter()
+            .flatten()
+            .map(|(_, count)| *count)
+            .sum();
+        assert_eq!(total, 1000);
+    }
+
+    /// configure/close lifecycle runs once per task; per-task state works.
+    #[test]
+    fn map_task_lifecycle_hooks() {
+        struct Stateful {
+            seen: u64,
+        }
+        impl MapTask<(), u64, u64, u64> for Stateful {
+            fn configure(&mut self, out: &mut Emitter<u64, u64>, _c: &Counters) {
+                out.emit(7777, 0); // marker from configure
+            }
+            fn map(&mut self, _k: (), v: u64, _out: &mut Emitter<u64, u64>, _c: &Counters) {
+                self.seen += v;
+            }
+            fn close(&mut self, out: &mut Emitter<u64, u64>, _c: &Counters) {
+                out.emit(8888, self.seen); // flush in close (RepSN pattern)
+            }
+        }
+        struct F;
+        impl MapTaskFactory<(), u64, u64, u64> for F {
+            fn create_task(&self) -> Box<dyn MapTask<(), u64, u64, u64> + Send> {
+                Box::new(Stateful { seen: 0 })
+            }
+        }
+        let input: Vec<((), u64)> = (1..=10).map(|i| ((), i)).collect();
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(*k, vals.map(|v| *v).sum());
+            },
+        ));
+        let cfg = JobConfig::named("t").with_tasks(2, 1).with_workers(1);
+        let res = run_job(
+            &cfg,
+            input,
+            Arc::new(F),
+            Arc::new(HashPartitioner::new(|_: &u64| 0)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer,
+        );
+        let out = res.merged_output();
+        // two tasks → two configure markers and two close flushes summing 55
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, 7777);
+        assert_eq!(out[1], (8888, 55));
+    }
+
+    /// Grouping comparator groups distinct sort keys into one reduce call.
+    #[test]
+    fn grouping_comparator_prefix_grouping() {
+        // keys (group, seq) sorted lexicographically; group by .0 only
+        let input: Vec<((), (u32, u32))> =
+            vec![((), (1, 3)), ((), (1, 1)), ((), (2, 2)), ((), (1, 2))];
+        let mapper = Arc::new(FnMapTask::new(
+            |_k: (), v: (u32, u32), out: &mut Emitter<(u32, u32), u32>, _c: &Counters| {
+                out.emit(v, v.1);
+            },
+        ));
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &(u32, u32),
+             vals: ValuesIter<'_, u32>,
+             out: &mut Emitter<u32, Vec<u32>>,
+             _c: &Counters| {
+                out.emit(k.0, vals.copied().collect());
+            },
+        ));
+        let cfg = JobConfig::named("t").with_tasks(2, 1).with_workers(1);
+        let res = run_job(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|_: &(u32, u32)| 0)),
+            Arc::new(|a: &(u32, u32), b: &(u32, u32)| a.0 == b.0),
+            reducer,
+        );
+        let out = res.merged_output();
+        // group 1 gets values in *sorted key order* 1,2,3; group 2 gets [2]
+        assert_eq!(out, vec![(1, vec![1, 2, 3]), (2, vec![2])]);
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let input: Vec<((), u64)> = (0..100).map(|i| ((), i)).collect();
+        let mapper = Arc::new(FnMapTask::new(
+            |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| out.emit(v, v),
+        ));
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &u64, _v: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(*k, 0)
+            },
+        ));
+        let cfg = JobConfig::named("t").with_tasks(4, 2).with_workers(2);
+        let res = run_job(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer,
+        );
+        assert_eq!(res.stats.map_task_secs.len(), 4);
+        assert_eq!(res.stats.reduce_task_secs.len(), 2);
+        assert_eq!(res.stats.shuffle_bytes_per_reducer.len(), 2);
+        assert!(res.stats.total_secs > 0.0);
+        assert_eq!(res.stats.map_output_records, 100);
+    }
+}

@@ -1,0 +1,47 @@
+//! An in-process MapReduce runtime with Hadoop-0.20 semantics.
+//!
+//! This is the substrate the paper runs on (Hadoop on a 4-node cluster);
+//! we rebuild the parts of its execution model that the paper's algorithms
+//! and experiments depend on:
+//!
+//! * fixed numbers of **map and reduce tasks** scheduled onto a bounded
+//!   pool of worker **slots** ("at most two map and reduce tasks per
+//!   node"),
+//! * user code as `map` / `reduce` functions with **`configure`/`close`**
+//!   task lifecycle hooks (RepSN's Algorithm 2 needs per-map-task state),
+//! * a user-supplied **partitioner** deciding the reducer for each
+//!   intermediate key,
+//! * map-side **sort** of each partition bucket, reducer-side **merge**,
+//!   so every reduce task sees its input **sorted by key** — the property
+//!   SRP builds on,
+//! * a **grouping comparator** separate from the sort key (Hadoop's
+//!   `setOutputValueGroupingComparator`): JobSN/RepSN sort by the full
+//!   composite key but group by its prefix,
+//! * per-task **counters** and **phase timings**, which feed the cluster
+//!   timing simulator ([`sim`]) used to reproduce the paper's multi-node
+//!   speedup figures on this single-machine testbed,
+//! * a simulated **DFS** ([`dfs`]) with 128 MB blocks and compressed
+//!   sequence files ([`seqfile`]) for job input/output materialization.
+//!
+//! What we deliberately do **not** model: speculative execution (the paper
+//! turns it off), task failure/retry, and rack topology.
+
+pub mod combiner;
+pub mod config;
+pub mod counters;
+pub mod dfs;
+pub mod engine;
+pub mod seqfile;
+pub mod shuffle;
+pub mod sim;
+pub mod sortspill;
+pub mod splits;
+pub mod types;
+
+pub use config::JobConfig;
+pub use counters::Counters;
+pub use engine::{run_job, JobResult, JobStats};
+pub use types::{
+    Emitter, FnMapTask, FnReduceTask, HashPartitioner, MapTask, MapTaskFactory, Partitioner,
+    ReduceTask, ReduceTaskFactory, SizeEstimate, ValuesIter,
+};

@@ -1,0 +1,125 @@
+//! Shuffle: merge the sorted per-map-task partition buckets for a reducer.
+//!
+//! Hadoop's reduce side pulls one sorted run from every map task and
+//! k-way-merges them so the reduce function sees a single key-sorted
+//! stream.  The merge must be *stable across runs* (ties broken by map-task
+//! index) so engine output is deterministic regardless of scheduling.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// K-way merge of key-sorted runs.  Each inner `Vec` must already be
+/// sorted by `K`; the output is globally sorted, ties in key order keep
+/// run-index order (stability).
+pub fn merge_sorted_runs<K: Ord, V>(runs: Vec<Vec<(K, V)>>) -> Vec<(K, V)> {
+    let total: usize = runs.iter().map(|r| r.len()).sum();
+    let mut out = Vec::with_capacity(total);
+
+    // Entry in the heap: (key, run_idx) with reversed ordering so the
+    // smallest key pops first; run_idx tie-break gives stability.
+    struct Head<K> {
+        key: K,
+        run: usize,
+    }
+    impl<K: Ord> PartialEq for Head<K> {
+        fn eq(&self, other: &Self) -> bool {
+            self.key == other.key && self.run == other.run
+        }
+    }
+    impl<K: Ord> Eq for Head<K> {}
+    impl<K: Ord> PartialOrd for Head<K> {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl<K: Ord> Ord for Head<K> {
+        fn cmp(&self, other: &Self) -> Ordering {
+            // reversed: BinaryHeap is a max-heap
+            other
+                .key
+                .cmp(&self.key)
+                .then_with(|| other.run.cmp(&self.run))
+        }
+    }
+
+    let mut iters: Vec<std::vec::IntoIter<(K, V)>> =
+        runs.into_iter().map(|r| r.into_iter()).collect();
+    let mut heap = BinaryHeap::with_capacity(iters.len());
+    let mut pending: Vec<Option<V>> = Vec::with_capacity(iters.len());
+
+    for (i, it) in iters.iter_mut().enumerate() {
+        pending.push(None);
+        if let Some((k, v)) = it.next() {
+            heap.push(Head { key: k, run: i });
+            pending[i] = Some(v);
+        }
+    }
+
+    while let Some(Head { key, run }) = heap.pop() {
+        let v = pending[run].take().expect("value parked for run head");
+        out.push((key, v));
+        if let Some((k, v)) = iters[run].next() {
+            heap.push(Head { key: k, run });
+            pending[run] = Some(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merges_disjoint_runs() {
+        let runs = vec![
+            vec![(1, "a"), (4, "d")],
+            vec![(2, "b"), (3, "c")],
+            vec![(5, "e")],
+        ];
+        let merged = merge_sorted_runs(runs);
+        assert_eq!(
+            merged,
+            vec![(1, "a"), (2, "b"), (3, "c"), (4, "d"), (5, "e")]
+        );
+    }
+
+    #[test]
+    fn stable_on_equal_keys() {
+        let runs = vec![vec![(1, "run0-a"), (1, "run0-b")], vec![(1, "run1")]];
+        let merged = merge_sorted_runs(runs);
+        assert_eq!(merged, vec![(1, "run0-a"), (1, "run0-b"), (1, "run1")]);
+    }
+
+    #[test]
+    fn empty_runs_ok() {
+        let runs: Vec<Vec<(u32, ())>> = vec![vec![], vec![], vec![]];
+        assert!(merge_sorted_runs(runs).is_empty());
+        let runs: Vec<Vec<(u32, u32)>> = vec![];
+        assert!(merge_sorted_runs(runs).is_empty());
+    }
+
+    #[test]
+    fn randomized_merge_equals_global_sort() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let nruns = rng.range(1, 6);
+            let mut runs = Vec::new();
+            let mut all = Vec::new();
+            for _ in 0..nruns {
+                let len = rng.range(0, 30);
+                let mut run: Vec<(u64, u64)> =
+                    (0..len).map(|_| (rng.below(20), rng.next_u64())).collect();
+                run.sort_by_key(|(k, _)| *k);
+                all.extend(run.iter().map(|(k, _)| *k));
+                runs.push(run);
+            }
+            let merged = merge_sorted_runs(runs);
+            let keys: Vec<u64> = merged.iter().map(|(k, _)| *k).collect();
+            let mut sorted = all.clone();
+            sorted.sort_unstable();
+            assert_eq!(keys, sorted);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Cluster timing simulator — turns *measured* per-task costs into
+//! multi-node makespans.
+//!
+//! Why it exists: the paper's Figure 8 plots execution time and speedup on
+//! a 4-node × 2-core Hadoop cluster.  This testbed has a single core, so
+//! physical re-execution cannot exhibit >1× parallel speedup.  Instead the
+//! engine measures honest per-task wall times (with `workers = 1`, i.e. no
+//! interference) and byte counts, and this module schedules those measured
+//! tasks onto a simulated cluster with Hadoop's slot semantics:
+//!
+//! * `nodes × map_slots_per_node` map slots, FIFO task assignment,
+//! * map wave → shuffle (network-bound) → reduce wave (same slot logic),
+//! * a per-job setup/teardown charge (the overhead that makes JobSN pay
+//!   for its second job),
+//! * intermediate materialization charged at disk bandwidth (the paper
+//!   attributes its sub-linear speedup to exactly this materialization).
+//!
+//! The simulator is deliberately *not* calibrated to the paper's absolute
+//! numbers — DESIGN.md §3 explains the substitution; EXPERIMENTS.md
+//! compares the *shapes* (who wins, crossover points).
+
+/// Simulated cluster description.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    /// Concurrent map tasks per node (paper: 2).
+    pub map_slots_per_node: usize,
+    /// Concurrent reduce tasks per node (paper: 2).
+    pub reduce_slots_per_node: usize,
+    /// Per-job fixed setup+teardown seconds (Hadoop 0.20 job scheduling
+    /// overhead; the JobSN-vs-RepSN differentiator).
+    pub job_setup_s: f64,
+    /// Aggregate network bandwidth per node for shuffle, bytes/s.
+    pub net_bytes_per_s: f64,
+    /// Disk bandwidth per node for intermediate materialization, bytes/s.
+    pub disk_bytes_per_s: f64,
+}
+
+impl ClusterSpec {
+    /// A cluster like the paper's: `cores` total cores, 2 cores per node,
+    /// 2 map + 2 reduce slots per node, GbE network, one SATA disk.
+    pub fn paper_like(cores: usize) -> Self {
+        let nodes = cores.div_ceil(2).max(1);
+        let slots = if cores == 1 { 1 } else { 2 };
+        Self {
+            nodes,
+            map_slots_per_node: slots,
+            reduce_slots_per_node: slots,
+            job_setup_s: 6.0,
+            net_bytes_per_s: 110e6,  // ~GbE effective
+            disk_bytes_per_s: 80e6,  // 2007-era SATA sequential
+        }
+    }
+
+    pub fn map_slots(&self) -> usize {
+        self.nodes * self.map_slots_per_node
+    }
+
+    pub fn reduce_slots(&self) -> usize {
+        self.nodes * self.reduce_slots_per_node
+    }
+}
+
+/// Measured inputs for one job (taken from `JobStats` of a `workers = 1`
+/// engine run, so task times are interference-free).
+#[derive(Debug, Clone)]
+pub struct JobProfile {
+    pub map_task_secs: Vec<f64>,
+    pub reduce_task_secs: Vec<f64>,
+    pub shuffle_bytes_per_reducer: Vec<u64>,
+    /// Total map-output bytes (materialized to local disk before shuffle).
+    pub map_output_bytes: u64,
+}
+
+impl JobProfile {
+    pub fn from_stats(stats: &crate::mapreduce::engine::JobStats, map_output_bytes: u64) -> Self {
+        Self {
+            map_task_secs: stats.map_task_secs.clone(),
+            reduce_task_secs: stats.reduce_task_secs.clone(),
+            shuffle_bytes_per_reducer: stats.shuffle_bytes_per_reducer.clone(),
+            map_output_bytes,
+        }
+    }
+}
+
+/// Per-phase simulated times.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimBreakdown {
+    pub setup_s: f64,
+    pub map_s: f64,
+    pub materialize_s: f64,
+    pub shuffle_s: f64,
+    pub reduce_s: f64,
+}
+
+impl SimBreakdown {
+    pub fn total(&self) -> f64 {
+        self.setup_s + self.map_s + self.materialize_s + self.shuffle_s + self.reduce_s
+    }
+}
+
+/// FIFO list scheduling: assign tasks in index order to the earliest-free
+/// slot; returns the makespan.  This is Hadoop's FIFO scheduler with
+/// speculative execution off (as configured in §5.1).
+pub fn list_schedule_makespan(durations: &[f64], slots: usize) -> f64 {
+    assert!(slots >= 1);
+    if durations.is_empty() {
+        return 0.0;
+    }
+    let mut free_at = vec![0.0f64; slots.min(durations.len())];
+    for &d in durations {
+        // earliest-free slot
+        let (idx, _) = free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        free_at[idx] += d;
+    }
+    free_at.iter().cloned().fold(0.0, f64::max)
+}
+
+/// Simulate one MapReduce job on a cluster.
+pub fn simulate_job(profile: &JobProfile, spec: &ClusterSpec) -> SimBreakdown {
+    let map_s = list_schedule_makespan(&profile.map_task_secs, spec.map_slots());
+    // map outputs written to local disk once (sort spill), read once at
+    // shuffle: 2 passes over the bytes at aggregate disk bandwidth
+    let disk_agg = spec.disk_bytes_per_s * spec.nodes as f64;
+    let materialize_s = 2.0 * profile.map_output_bytes as f64 / disk_agg;
+    // shuffle: every reducer pulls its bytes over its node's NIC; reducers
+    // run spread over nodes, so the bottleneck is the max per-node inflow
+    let reduce_slots = spec.reduce_slots().max(1);
+    let mut per_node_bytes = vec![0u64; spec.nodes];
+    for (j, &b) in profile.shuffle_bytes_per_reducer.iter().enumerate() {
+        per_node_bytes[(j % reduce_slots) % spec.nodes] += b;
+    }
+    let shuffle_s = per_node_bytes
+        .iter()
+        .map(|&b| b as f64 / spec.net_bytes_per_s)
+        .fold(0.0, f64::max);
+    let reduce_s = list_schedule_makespan(&profile.reduce_task_secs, reduce_slots);
+    SimBreakdown {
+        setup_s: spec.job_setup_s,
+        map_s,
+        materialize_s,
+        shuffle_s,
+        reduce_s,
+    }
+}
+
+/// Simulate a chain of jobs run back-to-back (JobSN = 2 jobs; each pays
+/// setup).
+pub fn simulate_job_chain(profiles: &[JobProfile], spec: &ClusterSpec) -> (Vec<SimBreakdown>, f64) {
+    let parts: Vec<SimBreakdown> = profiles.iter().map(|p| simulate_job(p, spec)).collect();
+    let total = parts.iter().map(|p| p.total()).sum();
+    (parts, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn list_schedule_single_slot_is_sum() {
+        let d = vec![1.0, 2.0, 3.0];
+        assert!((list_schedule_makespan(&d, 1) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn list_schedule_parallel_perfect_split() {
+        let d = vec![1.0; 8];
+        assert!((list_schedule_makespan(&d, 4) - 2.0).abs() < 1e-9);
+        assert!((list_schedule_makespan(&d, 8) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn list_schedule_straggler_dominates() {
+        // one huge task: adding slots can't beat it — the skew story of §5.3
+        let d = vec![10.0, 1.0, 1.0, 1.0];
+        let m = list_schedule_makespan(&d, 4);
+        assert!((m - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_like_cluster_shapes() {
+        let c1 = ClusterSpec::paper_like(1);
+        assert_eq!(c1.map_slots(), 1);
+        let c8 = ClusterSpec::paper_like(8);
+        assert_eq!(c8.nodes, 4);
+        assert_eq!(c8.map_slots(), 8);
+    }
+
+    #[test]
+    fn simulate_speedup_scales_with_cores() {
+        // 8 equal map tasks, 8 equal reduce tasks, tiny shuffle
+        let profile = JobProfile {
+            map_task_secs: vec![10.0; 8],
+            reduce_task_secs: vec![10.0; 8],
+            shuffle_bytes_per_reducer: vec![1_000_000; 8],
+            map_output_bytes: 8_000_000,
+        };
+        let t1 = simulate_job(&profile, &ClusterSpec::paper_like(1)).total();
+        let t8 = simulate_job(&profile, &ClusterSpec::paper_like(8)).total();
+        let speedup = t1 / t8;
+        assert!(speedup > 4.0, "speedup={speedup}");
+        assert!(speedup < 8.0, "setup+shuffle must keep it sub-linear");
+    }
+
+    #[test]
+    fn second_job_costs_extra_setup() {
+        let p = JobProfile {
+            map_task_secs: vec![1.0],
+            reduce_task_secs: vec![1.0],
+            shuffle_bytes_per_reducer: vec![0],
+            map_output_bytes: 0,
+        };
+        let spec = ClusterSpec::paper_like(2);
+        let (_, one) = simulate_job_chain(std::slice::from_ref(&p), &spec);
+        let (_, two) = simulate_job_chain(&[p.clone(), p], &spec);
+        assert!((two - 2.0 * one).abs() < 1e-9);
+        assert!(two > one + spec.job_setup_s - 1e-9);
+    }
+
+    #[test]
+    fn empty_profile_is_setup_only() {
+        let p = JobProfile {
+            map_task_secs: vec![],
+            reduce_task_secs: vec![],
+            shuffle_bytes_per_reducer: vec![],
+            map_output_bytes: 0,
+        };
+        let spec = ClusterSpec::paper_like(4);
+        let b = simulate_job(&p, &spec);
+        assert!((b.total() - spec.job_setup_s).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,106 @@
+//! Input splitting: divide the job input into `m` map splits.
+//!
+//! Mirrors HDFS/InputFormat behaviour at the level the paper depends on:
+//! contiguous, near-equal splits, one map task per split, records never
+//! straddle splits.  (Figure 3's example: 9 entities → 3 splits of 3.)
+
+/// Split `n` records into `m` contiguous ranges whose sizes differ by at
+/// most one.  Returns `(start, end)` half-open ranges; fewer than `m`
+/// ranges when `n < m` (Hadoop never schedules an empty split).
+pub fn even_splits(n: usize, m: usize) -> Vec<(usize, usize)> {
+    assert!(m >= 1);
+    if n == 0 {
+        return vec![];
+    }
+    let m = m.min(n);
+    let base = n / m;
+    let extra = n % m;
+    let mut out = Vec::with_capacity(m);
+    let mut start = 0;
+    for i in 0..m {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Split a record count by *byte-budget* like HDFS block-based splitting:
+/// greedily pack records (with their sizes) into splits of at most
+/// `block_bytes`, never splitting a record.
+pub fn byte_splits(sizes: &[usize], block_bytes: usize) -> Vec<(usize, usize)> {
+    assert!(block_bytes > 0);
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut acc = 0usize;
+    for (i, &sz) in sizes.iter().enumerate() {
+        if acc > 0 && acc + sz > block_bytes {
+            out.push((start, i));
+            start = i;
+            acc = 0;
+        }
+        acc += sz;
+    }
+    if start < sizes.len() {
+        out.push((start, sizes.len()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_9_into_3() {
+        assert_eq!(even_splits(9, 3), vec![(0, 3), (3, 6), (6, 9)]);
+    }
+
+    #[test]
+    fn uneven_split_distributes_remainder_front() {
+        assert_eq!(even_splits(10, 3), vec![(0, 4), (4, 7), (7, 10)]);
+    }
+
+    #[test]
+    fn more_splits_than_records() {
+        assert_eq!(even_splits(2, 5), vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(even_splits(0, 4).is_empty());
+    }
+
+    #[test]
+    fn splits_cover_everything_exactly() {
+        for n in [1usize, 7, 100, 1441] {
+            for m in [1usize, 2, 3, 8, 16] {
+                let s = even_splits(n, m);
+                assert_eq!(s.first().unwrap().0, 0);
+                assert_eq!(s.last().unwrap().1, n);
+                for w in s.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                    assert!(w[0].1 > w[0].0);
+                }
+                let max = s.iter().map(|(a, b)| b - a).max().unwrap();
+                let min = s.iter().map(|(a, b)| b - a).min().unwrap();
+                assert!(max - min <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn byte_splits_respect_block_size() {
+        let sizes = vec![10, 10, 10, 25, 5, 30, 10];
+        let s = byte_splits(&sizes, 30);
+        // greedy: [10,10,10][25,5][30][10]
+        assert_eq!(s, vec![(0, 3), (3, 5), (5, 6), (6, 7)]);
+    }
+
+    #[test]
+    fn byte_splits_single_oversized_record() {
+        let s = byte_splits(&[100], 10);
+        assert_eq!(s, vec![(0, 1)]);
+    }
+}

@@ -1,0 +1,388 @@
+//! Core MapReduce abstractions: tasks, factories, partitioners, emitters.
+//!
+//! The shape mirrors Hadoop's old (`mapred`) API, which is what the paper's
+//! pseudo-code assumes: `map_configure` / `map` / `map_close` on the map
+//! side (Algorithm 2 keeps per-task replication state in `configure`), and
+//! a `reduce(key, values-iterator)` on the reduce side that can only stream
+//! values forward ("similar to a forward SQL cursor", §3).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::counters::Counters;
+
+/// Collects `(key, value)` pairs emitted by user code, together with a
+/// byte-size estimate used for shuffle accounting.
+pub struct Emitter<K, V> {
+    pairs: Vec<(K, V)>,
+    bytes: u64,
+}
+
+impl<K: SizeEstimate, V: SizeEstimate> Emitter<K, V> {
+    pub fn new() -> Self {
+        Self {
+            pairs: Vec::new(),
+            bytes: 0,
+        }
+    }
+
+    /// Emit one pair.
+    #[inline]
+    pub fn emit(&mut self, key: K, value: V) {
+        self.bytes += (key.size_bytes() + value.size_bytes()) as u64;
+        self.pairs.push((key, value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    pub(crate) fn into_pairs(self) -> Vec<(K, V)> {
+        self.pairs
+    }
+}
+
+impl<K: SizeEstimate, V: SizeEstimate> Default for Emitter<K, V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A map *task* instance: owns per-task mutable state.  Created fresh for
+/// every input split by a [`MapTaskFactory`].
+pub trait MapTask<KI, VI, KT, VT>
+where
+    KT: SizeEstimate,
+    VT: SizeEstimate,
+{
+    /// Hadoop `configure`: called once before the first record.
+    fn configure(&mut self, _out: &mut Emitter<KT, VT>, _counters: &Counters) {}
+
+    /// Called once per input record.
+    fn map(&mut self, key: KI, value: VI, out: &mut Emitter<KT, VT>, counters: &Counters);
+
+    /// Hadoop `close`: called once after the last record (RepSN flushes its
+    /// replication buffers here).
+    fn close(&mut self, _out: &mut Emitter<KT, VT>, _counters: &Counters) {}
+}
+
+/// Factory: the engine creates one task instance per map split.
+pub trait MapTaskFactory<KI, VI, KT, VT>: Send + Sync
+where
+    KT: SizeEstimate,
+    VT: SizeEstimate,
+{
+    fn create_task(&self) -> Box<dyn MapTask<KI, VI, KT, VT> + Send>;
+}
+
+/// Forward-only iterator over the values of one reduce group.
+///
+/// Mirrors Hadoop's reduce-value iterator: user code cannot rewind — the
+/// memory-bottleneck discussion in §3 of the paper hinges on this.
+pub struct ValuesIter<'a, V> {
+    values: &'a [V],
+    pos: usize,
+    consumed: &'a AtomicU64,
+}
+
+impl<'a, V> ValuesIter<'a, V> {
+    pub(crate) fn new(values: &'a [V], consumed: &'a AtomicU64) -> Self {
+        Self {
+            values,
+            pos: 0,
+            consumed,
+        }
+    }
+
+    /// Number of values in the group (Hadoop doesn't expose this; the SN
+    /// reducers do not use it — provided for tests/metrics only).
+    pub fn group_len(&self) -> usize {
+        self.values.len()
+    }
+}
+
+impl<'a, V> Iterator for ValuesIter<'a, V> {
+    type Item = &'a V;
+
+    fn next(&mut self) -> Option<&'a V> {
+        let v = self.values.get(self.pos);
+        if v.is_some() {
+            self.pos += 1;
+            self.consumed.fetch_add(1, Ordering::Relaxed);
+        }
+        v
+    }
+}
+
+/// A reduce task instance (one per reduce partition).
+pub trait ReduceTask<KT, VT, KO, VO>
+where
+    KO: SizeEstimate,
+    VO: SizeEstimate,
+{
+    fn configure(&mut self, _out: &mut Emitter<KO, VO>, _counters: &Counters) {}
+
+    /// One call per *group* (grouping comparator semantics); `key` is the
+    /// first key of the group, `values` iterates the group's values in
+    /// sort-key order.
+    fn reduce(
+        &mut self,
+        key: &KT,
+        values: ValuesIter<'_, VT>,
+        out: &mut Emitter<KO, VO>,
+        counters: &Counters,
+    );
+
+    fn close(&mut self, _out: &mut Emitter<KO, VO>, _counters: &Counters) {}
+}
+
+/// Factory: one reduce task instance per reduce partition.
+pub trait ReduceTaskFactory<KT, VT, KO, VO>: Send + Sync
+where
+    KO: SizeEstimate,
+    VO: SizeEstimate,
+{
+    fn create_task(&self) -> Box<dyn ReduceTask<KT, VT, KO, VO> + Send>;
+}
+
+/// Decides the reduce partition for an intermediate key.
+pub trait Partitioner<K>: Send + Sync {
+    fn partition(&self, key: &K, num_reducers: usize) -> usize;
+}
+
+/// Default partitioner: hash of the key (FNV-1a over `Debug` is wrong; we
+/// require a user hash function instead — see `HashPartitioner::new`).
+pub struct HashPartitioner<K> {
+    hash: Box<dyn Fn(&K) -> u64 + Send + Sync>,
+}
+
+impl<K> HashPartitioner<K> {
+    pub fn new(hash: impl Fn(&K) -> u64 + Send + Sync + 'static) -> Self {
+        Self {
+            hash: Box::new(hash),
+        }
+    }
+}
+
+impl<K> Partitioner<K> for HashPartitioner<K> {
+    fn partition(&self, key: &K, num_reducers: usize) -> usize {
+        ((self.hash)(key) % num_reducers as u64) as usize
+    }
+}
+
+/// Cheap, conservative serialized-size estimate used for shuffle-byte
+/// accounting and the DFS materialization model.
+pub trait SizeEstimate {
+    fn size_bytes(&self) -> usize;
+}
+
+impl SizeEstimate for String {
+    fn size_bytes(&self) -> usize {
+        self.len() + 4
+    }
+}
+
+impl SizeEstimate for &str {
+    fn size_bytes(&self) -> usize {
+        self.len() + 4
+    }
+}
+
+impl SizeEstimate for u32 {
+    fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+impl SizeEstimate for u64 {
+    fn size_bytes(&self) -> usize {
+        8
+    }
+}
+
+impl SizeEstimate for f32 {
+    fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+impl SizeEstimate for f64 {
+    fn size_bytes(&self) -> usize {
+        8
+    }
+}
+
+impl SizeEstimate for () {
+    fn size_bytes(&self) -> usize {
+        0
+    }
+}
+
+impl<A: SizeEstimate, B: SizeEstimate> SizeEstimate for (A, B) {
+    fn size_bytes(&self) -> usize {
+        self.0.size_bytes() + self.1.size_bytes()
+    }
+}
+
+impl<T: SizeEstimate> SizeEstimate for Vec<T> {
+    fn size_bytes(&self) -> usize {
+        4 + self.iter().map(|t| t.size_bytes()).sum::<usize>()
+    }
+}
+
+impl<T: SizeEstimate> SizeEstimate for Option<T> {
+    fn size_bytes(&self) -> usize {
+        1 + self.as_ref().map(|t| t.size_bytes()).unwrap_or(0)
+    }
+}
+
+impl<T: SizeEstimate> SizeEstimate for Arc<T> {
+    fn size_bytes(&self) -> usize {
+        (**self).size_bytes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Closure adapters: stateless map/reduce functions without factory boilerplate
+// ---------------------------------------------------------------------------
+
+/// Stateless map function as a task factory.
+pub struct FnMapTask<F> {
+    f: Arc<F>,
+}
+
+impl<F> FnMapTask<F> {
+    pub fn new(f: F) -> Self {
+        Self { f: Arc::new(f) }
+    }
+}
+
+struct FnMapInstance<F> {
+    f: Arc<F>,
+}
+
+impl<KI, VI, KT, VT, F> MapTask<KI, VI, KT, VT> for FnMapInstance<F>
+where
+    KT: SizeEstimate,
+    VT: SizeEstimate,
+    F: Fn(KI, VI, &mut Emitter<KT, VT>, &Counters),
+{
+    fn map(&mut self, key: KI, value: VI, out: &mut Emitter<KT, VT>, counters: &Counters) {
+        (self.f)(key, value, out, counters)
+    }
+}
+
+impl<KI, VI, KT, VT, F> MapTaskFactory<KI, VI, KT, VT> for FnMapTask<F>
+where
+    KT: SizeEstimate,
+    VT: SizeEstimate,
+    F: Fn(KI, VI, &mut Emitter<KT, VT>, &Counters) + Send + Sync + 'static,
+    KI: 'static,
+    VI: 'static,
+    KT: 'static,
+    VT: 'static,
+{
+    fn create_task(&self) -> Box<dyn MapTask<KI, VI, KT, VT> + Send> {
+        Box::new(FnMapInstance {
+            f: Arc::clone(&self.f),
+        })
+    }
+}
+
+/// Stateless reduce function as a task factory.
+pub struct FnReduceTask<F> {
+    f: Arc<F>,
+}
+
+impl<F> FnReduceTask<F> {
+    pub fn new(f: F) -> Self {
+        Self { f: Arc::new(f) }
+    }
+}
+
+struct FnReduceInstance<F> {
+    f: Arc<F>,
+}
+
+impl<KT, VT, KO, VO, F> ReduceTask<KT, VT, KO, VO> for FnReduceInstance<F>
+where
+    KO: SizeEstimate,
+    VO: SizeEstimate,
+    F: Fn(&KT, ValuesIter<'_, VT>, &mut Emitter<KO, VO>, &Counters),
+{
+    fn reduce(
+        &mut self,
+        key: &KT,
+        values: ValuesIter<'_, VT>,
+        out: &mut Emitter<KO, VO>,
+        counters: &Counters,
+    ) {
+        (self.f)(key, values, out, counters)
+    }
+}
+
+impl<KT, VT, KO, VO, F> ReduceTaskFactory<KT, VT, KO, VO> for FnReduceTask<F>
+where
+    KO: SizeEstimate,
+    VO: SizeEstimate,
+    F: Fn(&KT, ValuesIter<'_, VT>, &mut Emitter<KO, VO>, &Counters) + Send + Sync + 'static,
+    KT: 'static,
+    VT: 'static,
+    KO: 'static,
+    VO: 'static,
+{
+    fn create_task(&self) -> Box<dyn ReduceTask<KT, VT, KO, VO> + Send> {
+        Box::new(FnReduceInstance {
+            f: Arc::clone(&self.f),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emitter_counts_bytes() {
+        let mut e: Emitter<String, String> = Emitter::new();
+        e.emit("ab".into(), "cdef".into());
+        assert_eq!(e.len(), 1);
+        assert_eq!(e.bytes(), (2 + 4 + 4 + 4) as u64);
+    }
+
+    #[test]
+    fn values_iter_is_forward_only_and_counts() {
+        let consumed = AtomicU64::new(0);
+        let vals = vec![1u32, 2, 3];
+        let mut it = ValuesIter::new(&vals, &consumed);
+        assert_eq!(it.group_len(), 3);
+        assert_eq!(it.next(), Some(&1));
+        assert_eq!(it.next(), Some(&2));
+        assert_eq!(it.next(), Some(&3));
+        assert_eq!(it.next(), None);
+        assert_eq!(consumed.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn hash_partitioner_in_range() {
+        let p = HashPartitioner::new(|k: &u64| *k);
+        for k in 0..100u64 {
+            let idx = p.partition(&k, 7);
+            assert!(idx < 7);
+        }
+    }
+
+    #[test]
+    fn size_estimates_compose() {
+        let v: Vec<(String, u32)> = vec![("a".into(), 1), ("bc".into(), 2)];
+        assert_eq!(v.size_bytes(), 4 + (1 + 4 + 4) + (2 + 4 + 4));
+    }
+}

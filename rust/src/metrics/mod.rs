@@ -1,0 +1,5 @@
+//! Reporting: phase timers and experiment report rendering.
+
+pub mod histogram;
+pub mod report;
+pub mod timer;

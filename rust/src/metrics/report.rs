@@ -1,0 +1,134 @@
+//! Experiment report rendering: aligned text tables + JSON emission.
+//!
+//! Used by the bench binaries to print the paper's table/figure rows and
+//! by `EXPERIMENTS.md` tooling to persist machine-readable results.
+
+use crate::util::json::Json;
+
+/// A simple column-aligned table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render as aligned text with a title line.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut width = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.chars().count();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.chars().count());
+            }
+        }
+        let mut s = format!("## {}\n", self.title);
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                let pad = width[i] - c.chars().count();
+                line.push_str(c);
+                line.push_str(&" ".repeat(pad));
+                line.push_str(" | ");
+            }
+            line.trim_end().to_string()
+        };
+        s.push_str(&fmt_row(&self.header, &width));
+        s.push('\n');
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        s.push_str(&sep);
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&fmt_row(row, &width));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// As a JSON array of objects keyed by header.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|row| {
+                    Json::Obj(
+                        self.header
+                            .iter()
+                            .zip(row)
+                            .map(|(h, c)| {
+                                let v = c
+                                    .parse::<f64>()
+                                    .map(Json::Num)
+                                    .unwrap_or_else(|_| Json::Str(c.clone()));
+                                (h.clone(), v)
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Write a JSON report file under `reports/` (created on demand).
+pub fn write_report(name: &str, json: &Json) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("reports");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, json.to_string())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(vec!["short".into(), "1".into()]);
+        t.row(vec!["much longer name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("| short            | 1"));
+    }
+
+    #[test]
+    fn json_conversion_types() {
+        let mut t = Table::new("x", &["k", "v"]);
+        t.row(vec!["a".into(), "1.5".into()]);
+        let j = t.to_json();
+        let rows = j.as_arr().unwrap();
+        assert_eq!(rows[0].get("v").unwrap().as_f64(), Some(1.5));
+        assert_eq!(rows[0].get("k").unwrap().as_str(), Some("a"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only one".into()]);
+    }
+}

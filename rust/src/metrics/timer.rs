@@ -1,0 +1,117 @@
+//! Named phase timers for profiling and reports.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Accumulates wall time per named phase.  Cheap enough for coarse phases
+/// (not per-record).
+#[derive(Debug, Default)]
+pub struct PhaseTimers {
+    acc: Mutex<BTreeMap<String, Duration>>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    /// Add an externally measured duration.
+    pub fn add(&self, name: &str, d: Duration) {
+        let mut acc = self.acc.lock().unwrap();
+        *acc.entry(name.to_string()).or_default() += d;
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.acc
+            .lock()
+            .unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    pub fn snapshot(&self) -> Vec<(String, Duration)> {
+        self.acc
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    /// Aligned text rendering, longest phase first.
+    pub fn render(&self) -> String {
+        let mut snap = self.snapshot();
+        snap.sort_by(|a, b| b.1.cmp(&a.1));
+        let width = snap.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+        snap.iter()
+            .map(|(k, v)| {
+                format!("  {k:<width$}  {}\n", crate::util::humanize::duration(*v))
+            })
+            .collect()
+    }
+}
+
+/// RAII scope timer.
+pub struct Scoped<'a> {
+    timers: &'a PhaseTimers,
+    name: String,
+    start: Instant,
+}
+
+impl<'a> Scoped<'a> {
+    pub fn new(timers: &'a PhaseTimers, name: &str) -> Self {
+        Self {
+            timers,
+            name: name.to_string(),
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Drop for Scoped<'_> {
+    fn drop(&mut self) {
+        self.timers.add(&self.name, self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let t = PhaseTimers::new();
+        t.add("x", Duration::from_millis(10));
+        t.add("x", Duration::from_millis(5));
+        assert_eq!(t.get("x"), Duration::from_millis(15));
+        assert_eq!(t.get("missing"), Duration::ZERO);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let t = PhaseTimers::new();
+        let v = t.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(t.get("work") >= Duration::ZERO);
+    }
+
+    #[test]
+    fn scoped_records_on_drop() {
+        let t = PhaseTimers::new();
+        {
+            let _s = Scoped::new(&t, "scope");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(t.get("scope") >= Duration::from_millis(1));
+    }
+}

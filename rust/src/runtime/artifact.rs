@@ -1,0 +1,203 @@
+//! Artifact manifest: discovery and validation of the AOT outputs.
+//!
+//! `make artifacts` (Python, build-time) writes `artifacts/manifest.json`
+//! describing the compiled matcher variants; this module parses it and
+//! checks that the tensor geometry baked into the artifacts matches the
+//! constants compiled into this binary (a mismatch means encode.py and
+//! encode.rs diverged — fail loudly at load time, not with NaNs later).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::encode::{BITMAP_WORDS, TITLE_LEN};
+use crate::util::json::{parse, Json};
+
+/// One batch-size variant of the matcher.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    pub batch: usize,
+    pub matcher_file: String,
+    pub title_matcher_file: String,
+}
+
+/// Parsed and validated manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub title_len: usize,
+    pub bitmap_words: usize,
+    pub threshold: f64,
+    pub w_title: f64,
+    pub w_abstract: f64,
+    /// Sorted ascending by batch size.
+    pub variants: Vec<Variant>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse a manifest JSON document (exposed for unit tests).
+    pub fn from_json(doc: &Json, dir: &Path) -> Result<Self> {
+        let get_num = |k: &str| -> Result<f64> {
+            doc.get(k)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("manifest missing numeric '{k}'"))
+        };
+        let mut variants = Vec::new();
+        for v in doc
+            .get("variants")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing 'variants'")?
+        {
+            variants.push(Variant {
+                batch: v
+                    .get("batch")
+                    .and_then(|x| x.as_i64())
+                    .context("variant missing 'batch'")? as usize,
+                matcher_file: v
+                    .get("matcher")
+                    .and_then(|x| x.as_str())
+                    .context("variant missing 'matcher'")?
+                    .to_string(),
+                title_matcher_file: v
+                    .get("title_matcher")
+                    .and_then(|x| x.as_str())
+                    .context("variant missing 'title_matcher'")?
+                    .to_string(),
+            });
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        variants.sort_by_key(|v| v.batch);
+        let m = Self {
+            title_len: get_num("title_len")? as usize,
+            bitmap_words: get_num("bitmap_words")? as usize,
+            threshold: get_num("threshold")?,
+            w_title: get_num("w_title")?,
+            w_abstract: get_num("w_abstract")?,
+            variants,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts` first)", path.display()))?;
+        let doc = parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        Self::from_json(&doc, dir)
+    }
+
+    /// Geometry must match the compiled-in encoder constants.
+    fn validate(&self) -> Result<()> {
+        if self.title_len != TITLE_LEN {
+            bail!(
+                "artifact title_len {} != binary TITLE_LEN {TITLE_LEN} — \
+                 regenerate artifacts",
+                self.title_len
+            );
+        }
+        if self.bitmap_words != BITMAP_WORDS {
+            bail!(
+                "artifact bitmap_words {} != binary BITMAP_WORDS {BITMAP_WORDS}",
+                self.bitmap_words
+            );
+        }
+        if !(0.0..=1.0).contains(&self.threshold) {
+            bail!("nonsensical threshold {}", self.threshold);
+        }
+        Ok(())
+    }
+
+    /// Path of a variant's matcher HLO file.
+    pub fn matcher_path(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.matcher_file)
+    }
+
+    /// Largest batch variant (the batcher's preferred size).
+    pub fn max_batch(&self) -> usize {
+        self.variants.last().map(|v| v.batch).unwrap_or(0)
+    }
+
+    /// Smallest variant whose batch ≥ `n`, else the largest.
+    pub fn variant_for(&self, n: usize) -> &Variant {
+        self.variants
+            .iter()
+            .find(|v| v.batch >= n)
+            .unwrap_or_else(|| self.variants.last().unwrap())
+    }
+}
+
+/// Default artifact directory: `$SNMR_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("SNMR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> Json {
+        parse(
+            r#"{
+            "version": 1, "title_len": 64, "bitmap_words": 64,
+            "threshold": 0.75, "w_title": 0.5, "w_abstract": 0.5,
+            "variants": [
+              {"batch": 256, "matcher": "matcher_b256.hlo.txt",
+               "title_matcher": "title_matcher_b256.hlo.txt"},
+              {"batch": 64, "matcher": "matcher_b64.hlo.txt",
+               "title_matcher": "title_matcher_b64.hlo.txt"}
+            ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_sorts_variants() {
+        let m = Manifest::from_json(&doc(), Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.variants[0].batch, 64);
+        assert_eq!(m.max_batch(), 256);
+        assert_eq!(m.threshold, 0.75);
+    }
+
+    #[test]
+    fn variant_selection() {
+        let m = Manifest::from_json(&doc(), Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.variant_for(1).batch, 64);
+        assert_eq!(m.variant_for(64).batch, 64);
+        assert_eq!(m.variant_for(65).batch, 256);
+        assert_eq!(m.variant_for(10_000).batch, 256);
+    }
+
+    #[test]
+    fn rejects_geometry_mismatch() {
+        let text = doc().to_string().replace("\"title_len\":64", "\"title_len\":32");
+        let bad = parse(&text).unwrap();
+        assert!(Manifest::from_json(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_variants() {
+        let bad = parse(
+            r#"{"title_len":64,"bitmap_words":64,"threshold":0.75,
+                "w_title":0.5,"w_abstract":0.5,"variants":[]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::from_json(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn matcher_path_joins_dir() {
+        let m = Manifest::from_json(&doc(), Path::new("/art")).unwrap();
+        assert_eq!(
+            m.matcher_path(&m.variants[0]),
+            PathBuf::from("/art/matcher_b64.hlo.txt")
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Text is the interchange format because
+//! the bundled xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
+//! protos (see DESIGN.md §2 and the example's README).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Create the PJRT CPU client.
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().context("create PJRT CPU client")
+}
+
+/// Load an HLO-text artifact and compile it on `client`.
+pub fn compile_hlo_text(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compile {}", path.display()))
+}
+
+/// Execute a compiled module on literal inputs and return the output
+/// literals of the (return_tuple=True) tuple root.
+pub fn execute_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe
+        .execute::<xla::Literal>(inputs)
+        .context("execute")?;
+    let literal = result[0][0].to_literal_sync().context("fetch result")?;
+    literal.to_tuple().context("untuple result")
+}

@@ -1,0 +1,194 @@
+//! Entity → tensor encoding (the Rust half of the contract with
+//! `python/compile/encode.py`).
+//!
+//! Encoding happens once per entity on the map side (or lazily in the
+//! reduce window buffer) and is shared by *both* matcher backends: the
+//! native Rust matcher computes edit distance over the same code sequences
+//! and Dice over the same bitmaps that the AOT XLA matcher consumes, which
+//! is what makes their scores bit-comparable.
+//!
+//! Spec (keep in sync with encode.py; parity enforced by
+//! `rust/tests/encode_parity.rs` against `artifacts/encode_golden.json`):
+//!
+//! * Title → `i32[TITLE_LEN]`: ASCII-lowercase; `a..z`→1..26,
+//!   `0..9`→27..36, space→37, other→38; truncate/pad to 64; length kept.
+//! * Abstract → 2048-bit trigram bitmap as 64 × u32 words: normalize
+//!   (lowercase, non-alnum runs → single space, trim), character trigrams
+//!   (whole string if 0 < len < 3), FNV-1a 64 → bit `hash % 2048`,
+//!   bit `i` in word `i / 32`, position `i % 32`.
+
+/// Title code length — must match `python/compile/kernels/levenshtein.py`.
+pub const TITLE_LEN: usize = 64;
+/// Trigram bitmap bits / words — must match `kernels/trigram.py`.
+pub const BITMAP_BITS: usize = 2048;
+pub const BITMAP_WORDS: usize = BITMAP_BITS / 32;
+
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x1_0000_0001_B3;
+
+/// FNV-1a 64-bit hash.
+#[inline]
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Map one character to its title code.
+#[inline]
+pub fn char_code(c: char) -> u8 {
+    let c = c.to_ascii_lowercase();
+    match c {
+        'a'..='z' => (c as u8) - b'a' + 1,
+        '0'..='9' => (c as u8) - b'0' + 27,
+        ' ' => 37,
+        _ => 38,
+    }
+}
+
+/// An entity's tensor-ready encoding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Encoded {
+    /// Title character codes, zero-padded to `TITLE_LEN`.
+    pub title_codes: [u8; TITLE_LEN],
+    /// True title length (≤ `TITLE_LEN`).
+    pub title_len: u8,
+    /// Packed trigram bitmap of the abstract.
+    pub bitmap: [u32; BITMAP_WORDS],
+}
+
+impl Encoded {
+    /// Popcount of the bitmap (distinct trigram buckets set).
+    pub fn bitmap_bits(&self) -> u32 {
+        self.bitmap.iter().map(|w| w.count_ones()).sum()
+    }
+}
+
+/// Encode a title into codes + length.
+pub fn encode_title(title: &str) -> ([u8; TITLE_LEN], u8) {
+    let mut codes = [0u8; TITLE_LEN];
+    let mut n = 0usize;
+    for ch in title.chars().take(TITLE_LEN) {
+        codes[n] = char_code(ch);
+        n += 1;
+    }
+    (codes, n as u8)
+}
+
+/// Normalize text for trigram extraction: lowercase, collapse every run of
+/// non-ASCII-alphanumeric characters to a single space, trim the end.
+pub fn normalize_text(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    let mut prev_space = true;
+    for ch in text.chars() {
+        let c = ch.to_ascii_lowercase();
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+            prev_space = false;
+        } else if !prev_space {
+            out.push(' ');
+            prev_space = true;
+        }
+    }
+    while out.ends_with(' ') {
+        out.pop();
+    }
+    out
+}
+
+/// Set the trigram bits of `text` into a packed bitmap.
+pub fn encode_bitmap(text: &str) -> [u32; BITMAP_WORDS] {
+    let mut words = [0u32; BITMAP_WORDS];
+    let s = normalize_text(text);
+    let bytes = s.as_bytes();
+    let mut set = |gram: &[u8]| {
+        let idx = (fnv1a64(gram) % BITMAP_BITS as u64) as usize;
+        words[idx / 32] |= 1 << (idx % 32);
+    };
+    if bytes.is_empty() {
+        // no bits
+    } else if bytes.len() < 3 {
+        set(bytes);
+    } else {
+        for win in bytes.windows(3) {
+            set(win);
+        }
+    }
+    words
+}
+
+/// Full entity encoding.
+pub fn encode_entity(title: &str, abstract_text: &str) -> Encoded {
+    let (title_codes, title_len) = encode_title(title);
+    Encoded {
+        title_codes,
+        title_len,
+        bitmap: encode_bitmap(abstract_text),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_codes_match_spec() {
+        assert_eq!(char_code('a'), 1);
+        assert_eq!(char_code('Z'), 26);
+        assert_eq!(char_code('0'), 27);
+        assert_eq!(char_code('9'), 36);
+        assert_eq!(char_code(' '), 37);
+        assert_eq!(char_code('!'), 38);
+        assert_eq!(char_code('ü'), 38);
+    }
+
+    #[test]
+    fn fnv_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_F739_67E8);
+    }
+
+    #[test]
+    fn title_pads_and_truncates() {
+        let (codes, n) = encode_title("ab");
+        assert_eq!(n, 2);
+        assert_eq!(&codes[..3], &[1, 2, 0]);
+        let (codes, n) = encode_title(&"x".repeat(100));
+        assert_eq!(n as usize, TITLE_LEN);
+        assert!(codes.iter().all(|&c| c == 24));
+    }
+
+    #[test]
+    fn normalize_matches_python_spec() {
+        assert_eq!(normalize_text("Hello,   World!!"), "hello world");
+        assert_eq!(normalize_text("  a--b  "), "a b");
+        assert_eq!(normalize_text("..."), "");
+        assert_eq!(normalize_text("Tab\tand\nnewline"), "tab and newline");
+    }
+
+    #[test]
+    fn bitmap_short_strings() {
+        assert_eq!(encode_bitmap("").iter().map(|w| w.count_ones()).sum::<u32>(), 0);
+        assert_eq!(encode_bitmap("ab").iter().map(|w| w.count_ones()).sum::<u32>(), 1);
+    }
+
+    #[test]
+    fn bitmap_is_deterministic_and_subadditive() {
+        let a = encode_bitmap("some abstract text");
+        assert_eq!(a, encode_bitmap("some abstract text"));
+        let bits: u32 = a.iter().map(|w| w.count_ones()).sum();
+        // "some abstract text" normalized has 16 trigrams
+        assert!(bits > 0 && bits <= 16);
+    }
+
+    #[test]
+    fn encode_entity_combines() {
+        let e = encode_entity("Title", "Abstract body text");
+        assert_eq!(e.title_len, 5);
+        assert!(e.bitmap_bits() > 0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime: PJRT execution of the AOT-compiled matcher (Layer 2/1).
+//!
+//! * [`encode`] — entity → tensor encoding (shared with the native
+//!   matcher; spec parity with `python/compile/encode.py`).
+//! * [`client`] — thin wrapper over the `xla` crate's PJRT CPU client.
+//! * [`artifact`] — loads `artifacts/manifest.json` + `*.hlo.txt`,
+//!   compiles one executable per batch-size variant.
+//! * [`matcher_exec`] — the [`crate::er::matcher::PairScorer`] backend
+//!   that marshals encoded pair batches into XLA literals, executes, and
+//!   decodes scores.
+
+pub mod artifact;
+pub mod client;
+pub mod encode;
+pub mod matcher_exec;
+pub mod two_phase;

@@ -1,0 +1,145 @@
+//! Two-phase XLA matching: the paper's short-circuit optimization lifted
+//! across AOT artifacts.
+//!
+//! Phase 1 scores every pair with the cheap `title_matcher` artifact;
+//! pairs whose title similarity already rules out reaching the combined
+//! threshold (`w_t·sim_t + w_a·1.0 < τ`) are classified non-match without
+//! running the full model.  Phase 2 re-scores only the survivors with the
+//! full `matcher` artifact.  On workloads where most window pairs are
+//! clear non-matches (the common case — SN windows are mostly noise) this
+//! trades one extra dispatch for a much smaller full-model batch.
+//! Benchmarked as ablation A1b; decisions are identical to the one-phase
+//! matcher by construction.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::er::matcher::{MatchScores, PairScorer, THRESHOLD, W_ABSTRACT, W_TITLE};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::client::{compile_hlo_text, cpu_client, execute_tuple};
+use crate::runtime::encode::{Encoded, TITLE_LEN};
+use crate::runtime::matcher_exec::XlaMatcher;
+
+struct TitleExe {
+    _client: xla::PjRtClient,
+    /// (batch, executable), ascending.
+    executables: Vec<(usize, xla::PjRtLoadedExecutable)>,
+}
+
+/// Two-phase scorer: title-only prefilter + full matcher on survivors.
+pub struct XlaTwoPhaseMatcher {
+    title: Mutex<TitleExe>,
+    full: XlaMatcher,
+    preferred: usize,
+}
+
+// SAFETY: same discipline as XlaMatcher — the only Rc handles live behind
+// the Mutex and all access (including drop) is serialized.
+unsafe impl Send for XlaTwoPhaseMatcher {}
+unsafe impl Sync for XlaTwoPhaseMatcher {}
+
+impl XlaTwoPhaseMatcher {
+    pub fn load(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = cpu_client()?;
+        let mut executables = Vec::new();
+        for v in &manifest.variants {
+            let path = manifest.dir.join(&v.title_matcher_file);
+            let exe = compile_hlo_text(&client, &path)
+                .with_context(|| format!("title variant b{}", v.batch))?;
+            executables.push((v.batch, exe));
+        }
+        Ok(Self {
+            preferred: manifest.max_batch(),
+            title: Mutex::new(TitleExe {
+                _client: client,
+                executables,
+            }),
+            full: XlaMatcher::from_manifest(&manifest)?,
+        })
+    }
+
+    /// Title similarities for a batch (padded/chunked like the full path).
+    fn title_sims(&self, pairs: &[(&Encoded, &Encoded)]) -> Result<Vec<f32>> {
+        let inner = self.title.lock().unwrap();
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(self.preferred.max(1)) {
+            let vi = inner
+                .executables
+                .iter()
+                .position(|(b, _)| *b >= chunk.len())
+                .unwrap_or(inner.executables.len() - 1);
+            let (batch, exe) = &inner.executables[vi];
+            let b = *batch;
+            let mut ta = vec![0i32; b * TITLE_LEN];
+            let mut tb = vec![0i32; b * TITLE_LEN];
+            let mut la = vec![0i32; b];
+            let mut lb = vec![0i32; b];
+            for i in 0..b {
+                let (pa, pb) = chunk[i.min(chunk.len() - 1)];
+                for (j, &c) in pa.title_codes.iter().enumerate() {
+                    ta[i * TITLE_LEN + j] = c as i32;
+                }
+                for (j, &c) in pb.title_codes.iter().enumerate() {
+                    tb[i * TITLE_LEN + j] = c as i32;
+                }
+                la[i] = pa.title_len as i32;
+                lb[i] = pb.title_len as i32;
+            }
+            let dims = [b as i64, TITLE_LEN as i64];
+            let inputs = [
+                xla::Literal::vec1(&ta).reshape(&dims)?,
+                xla::Literal::vec1(&tb).reshape(&dims)?,
+                xla::Literal::vec1(&la),
+                xla::Literal::vec1(&lb),
+            ];
+            let outputs = execute_tuple(exe, &inputs)?;
+            anyhow::ensure!(outputs.len() == 1, "title matcher returns 1 output");
+            let sims = outputs[0].to_vec::<f32>()?;
+            out.extend_from_slice(&sims[..chunk.len()]);
+        }
+        Ok(out)
+    }
+}
+
+impl PairScorer for XlaTwoPhaseMatcher {
+    fn score_pairs(&self, pairs: &[(&Encoded, &Encoded)]) -> Vec<MatchScores> {
+        if pairs.is_empty() {
+            return Vec::new();
+        }
+        let sims = match self.title_sims(pairs) {
+            Ok(s) => s,
+            Err(e) => panic!("XLA title matcher failed: {e:#}"),
+        };
+        // survivors: pairs the short-circuit cannot rule out
+        let survive: Vec<usize> = (0..pairs.len())
+            .filter(|&i| W_TITLE * sims[i] + W_ABSTRACT >= THRESHOLD)
+            .collect();
+        let surviving_pairs: Vec<(&Encoded, &Encoded)> =
+            survive.iter().map(|&i| pairs[i]).collect();
+        let full_scores = self.full.score_pairs(&surviving_pairs);
+        let mut out: Vec<MatchScores> = sims
+            .iter()
+            .map(|&sim_t| MatchScores {
+                score: W_TITLE * sim_t, // lower bound; skipped pairs only
+                sim_title: sim_t,
+                sim_abstract: 0.0,
+                skipped: true,
+            })
+            .collect();
+        for (slot, score) in survive.into_iter().zip(full_scores) {
+            out[slot] = score;
+        }
+        out
+    }
+
+    fn name(&self) -> &str {
+        "xla(two-phase)"
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.preferred
+    }
+}

@@ -1,0 +1,250 @@
+//! JobSN — Sorted Neighborhood with an additional MapReduce job
+//! (§4.2, Figure 6, Algorithm 1).
+//!
+//! Phase 1 is SRP with an extended reduce: besides the window
+//! correspondences, each reducer emits its first and last `w−1` entities
+//! under a *boundary-prefixed* key `bound.r_i.k` ("the key reflects data
+//! lineage").  Phase 2 repartitions those boundary entities by `bound`,
+//! sorts by the composite key (so the predecessor's tail precedes the
+//! successor's head), slides the window once more, and filters pairs whose
+//! entities share a partition prefix — those were already produced in
+//! phase 1.
+
+use std::sync::Arc;
+
+use crate::er::entity::Entity;
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::engine::run_job;
+use crate::mapreduce::sim::JobProfile;
+use crate::mapreduce::types::{Emitter, FnMapTask, ReduceTask, ReduceTaskFactory, ValuesIter};
+use crate::mapreduce::JobConfig;
+use crate::sn::pairs::WindowProc;
+use crate::sn::srp::{group_by_bound, run_srp_job, split_output, BoundPartitioner};
+use crate::sn::types::{SnConfig, SnKey, SnMode, SnResult, SnVal};
+
+/// Phase-2 reduce: window over one boundary group, keeping only pairs
+/// that cross the partition boundary.
+struct BoundaryReduce {
+    w: usize,
+    mode: SnMode,
+}
+
+impl ReduceTask<SnKey, (u32, Arc<Entity>), SnKey, SnVal> for BoundaryReduce {
+    fn reduce(
+        &mut self,
+        key: &SnKey,
+        values: ValuesIter<'_, (u32, Arc<Entity>)>,
+        out: &mut Emitter<SnKey, SnVal>,
+        counters: &Counters,
+    ) {
+        let mut proc = WindowProc::new(self.w, &self.mode);
+        for (part, e) in values {
+            // filter: only cross-partition pairs are new (Algorithm 1's
+            // "filters correspondences already determined"; the lineage is
+            // in the tags)
+            proc.push(e, *part, |a, b| a.tag != b.tag);
+        }
+        proc.finish(key, out, counters);
+    }
+}
+
+struct BoundaryReduceFactory {
+    w: usize,
+    mode: SnMode,
+}
+
+impl ReduceTaskFactory<SnKey, (u32, Arc<Entity>), SnKey, SnVal> for BoundaryReduceFactory {
+    fn create_task(
+        &self,
+    ) -> Box<dyn ReduceTask<SnKey, (u32, Arc<Entity>), SnKey, SnVal> + Send> {
+        Box::new(BoundaryReduce {
+            w: self.w,
+            mode: self.mode.clone(),
+        })
+    }
+}
+
+/// Run JobSN: SRP + boundary job.  The second job runs with `r − 1`
+/// reduce tasks (one per boundary); the paper runs it with a single
+/// reducer (`r = 1` in §5.2) — set `second_job_reducers` to override.
+pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
+    run_with_options(entities, cfg, None)
+}
+
+/// As [`run`], with an explicit reduce-task count for the second job
+/// (§5.2: "The additional MapReduce job of JobSN was executed with one
+/// reducer (r=1)" — i.e. all boundary groups on one reduce *slot*; we map
+/// this to `workers = 1` equivalently, but expose the knob for ablation).
+pub fn run_with_options(
+    entities: &[Entity],
+    cfg: &SnConfig,
+    second_job_reducers: Option<usize>,
+) -> anyhow::Result<SnResult> {
+    let r = cfg.partitioner.num_partitions();
+
+    // ---- phase 1: SRP + boundary emission --------------------------------
+    let res1 = run_srp_job(entities, cfg, r > 1, "jobsn-phase1");
+    let (mut pairs, mut matches, boundaries) = split_output(&res1);
+    let profile1 = JobProfile::from_stats(
+        &res1.stats,
+        res1.counters
+            .get(crate::mapreduce::counters::names::MAP_OUTPUT_BYTES),
+    );
+
+    let counters = Arc::new(Counters::new());
+    counters.merge(&res1.counters);
+
+    let mut stats = vec![res1.stats.clone()];
+    let mut profiles = vec![profile1];
+
+    // ---- phase 2: boundary job -------------------------------------------
+    if r > 1 && !boundaries.is_empty() {
+        // map is identity on the lineage-keyed boundary entities
+        let input: Vec<(SnKey, (u32, Arc<Entity>))> = boundaries
+            .into_iter()
+            .map(|(k, e)| {
+                let part = k.part;
+                (k, (part, e))
+            })
+            .collect();
+        let mapper = Arc::new(FnMapTask::new(
+            |k: SnKey,
+             v: (u32, Arc<Entity>),
+             out: &mut Emitter<SnKey, (u32, Arc<Entity>)>,
+             _c: &Counters| {
+                out.emit(k, v);
+            },
+        ));
+        let r2 = second_job_reducers.unwrap_or(r - 1);
+        let job_cfg = JobConfig::named("jobsn-phase2")
+            .with_tasks(cfg.num_map_tasks.min(input.len().max(1)), r2)
+            .with_workers(cfg.workers);
+        // boundary index spreads over the phase-2 reduce tasks
+        struct BoundaryPartitioner;
+        impl crate::mapreduce::types::Partitioner<SnKey> for BoundaryPartitioner {
+            fn partition(&self, key: &SnKey, num_reducers: usize) -> usize {
+                key.bound as usize % num_reducers
+            }
+        }
+        let res2 = run_job(
+            &job_cfg,
+            input,
+            mapper,
+            Arc::new(BoundaryPartitioner),
+            group_by_bound(),
+            Arc::new(BoundaryReduceFactory {
+                w: cfg.window,
+                mode: cfg.mode.clone(),
+            }),
+        );
+        let (p2, m2, b2) = split_output(&res2);
+        debug_assert!(b2.is_empty());
+        pairs.extend(p2);
+        matches.extend(m2);
+        counters.merge(&res2.counters);
+        profiles.push(JobProfile::from_stats(
+            &res2.stats,
+            res2.counters
+                .get(crate::mapreduce::counters::names::MAP_OUTPUT_BYTES),
+        ));
+        stats.push(res2.stats);
+    } else {
+        let _ = BoundPartitioner; // silence unused import in r == 1 builds
+    }
+
+    Ok(SnResult {
+        pairs,
+        matches,
+        counters,
+        stats,
+        profiles,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::blockkey::{BlockingKey, TitlePrefixKey};
+    use crate::sn::partition::RangePartition;
+    use crate::sn::types::counter_names;
+    use crate::sn::window::expected_pair_count;
+
+    fn fig5_entities() -> Vec<Entity> {
+        [
+            (1, "1a"), (2, "2b"), (3, "3c"), (4, "1d"), (5, "2e"),
+            (6, "2f"), (7, "3g"), (8, "2h"), (9, "3i"),
+        ]
+        .iter()
+        .map(|&(id, t)| Entity::new(id, t, ""))
+        .collect()
+    }
+
+    fn fig5_cfg() -> SnConfig {
+        SnConfig {
+            window: 3,
+            num_map_tasks: 3,
+            workers: 2,
+            partitioner: Arc::new(RangePartition::new(vec!["3".into()], "fig5")),
+            blocking_key: Arc::new(TitlePrefixKey::new(1)),
+            mode: SnMode::Blocking,
+        }
+    }
+
+    /// Figure 6: JobSN completes the SRP result to the full 15 pairs,
+    /// recovering (f,c), (h,c), (h,g).
+    #[test]
+    fn figure_6_jobsn_completes_boundary_pairs() {
+        let res = run(&fig5_entities(), &fig5_cfg()).unwrap();
+        let set = res.pair_set();
+        assert_eq!(set.len(), expected_pair_count(9, 3));
+        use crate::er::entity::Pair;
+        for (a, b) in [(6, 3), (8, 3), (8, 7)] {
+            assert!(set.contains(&Pair::new(a, b)), "missing boundary pair ({a},{b})");
+        }
+    }
+
+    #[test]
+    fn jobsn_equals_sequential() {
+        let entities: Vec<Entity> = (0..200)
+            .map(|i| Entity::new(i, &format!("{}{} title {i}", (b'a' + (i % 20) as u8) as char, (b'a' + (i % 7) as u8) as char), "abs"))
+            .collect();
+        let cfg = SnConfig {
+            window: 4,
+            num_map_tasks: 5,
+            workers: 3,
+            partitioner: Arc::new(RangePartition::balanced(
+                &entities,
+                |e| TitlePrefixKey::new(2).key(e),
+                4,
+            )),
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            mode: SnMode::Blocking,
+        };
+        let res = run(&entities, &cfg).unwrap();
+        let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 4);
+        seq.sort_unstable();
+        seq.dedup();
+        assert_eq!(res.pair_set(), seq);
+        // two jobs ran
+        assert_eq!(res.stats.len(), 2);
+        assert!(res.counters.get(counter_names::BOUNDARY_ENTITIES) > 0);
+    }
+
+    #[test]
+    fn jobsn_single_partition_runs_one_job() {
+        let entities = fig5_entities();
+        let cfg = SnConfig {
+            partitioner: Arc::new(crate::sn::partition::EvenPartition::ascii(1)),
+            ..fig5_cfg()
+        };
+        let res = run(&entities, &cfg).unwrap();
+        assert_eq!(res.stats.len(), 1);
+        assert_eq!(res.pair_set().len(), expected_pair_count(9, 3));
+    }
+
+    #[test]
+    fn jobsn_one_reducer_second_job_like_paper() {
+        let res = run_with_options(&fig5_entities(), &fig5_cfg(), Some(1)).unwrap();
+        assert_eq!(res.pair_set().len(), expected_pair_count(9, 3));
+    }
+}

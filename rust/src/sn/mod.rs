@@ -1,0 +1,40 @@
+//! Sorted Neighborhood blocking — sequential and the paper's three
+//! MapReduce parallelizations.
+//!
+//! * [`window`] — `StandardSN`: the sliding-window pair generator.
+//! * [`seq`] — the sequential baseline (sort everything, slide once).
+//! * [`partition`] — monotonic range-partition functions `p : k → i`
+//!   (Manual/balanced, Even-k) and the Gini coefficient of §5.3.
+//! * [`srp`] — §4.1 Sorted Reduce Partitions: composite key `p(k).k`,
+//!   partition by prefix, sort by blocking key; misses the
+//!   `(r−1)·w·(w−1)/2` boundary pairs.
+//! * [`jobsn`] — §4.2: SRP + a second MapReduce job over the emitted
+//!   boundary entities.
+//! * [`repsn`] — §4.3: single job; each map task replicates, per
+//!   partition `i < r`, its `w−1` highest-keyed entities to reducer
+//!   `i + 1` (composite key `bound.p(k).k`).
+//! * [`standard_blocking`] — the §3 baseline (group by exact key).
+//! * [`multipass`] — multi-pass SN (§4's robustness extension).
+//!
+//! ## Determinism note
+//!
+//! The paper sorts by blocking key alone; ties are ordered arbitrarily
+//! (Hadoop: by map-task arrival).  To make `pairs(SeqSN) == pairs(JobSN)
+//! == pairs(RepSN)` an exact *set* equality — which is what our property
+//! tests assert — every implementation here breaks key ties by entity id
+//! (the classic Hadoop "secondary sort" idiom).  This changes nothing
+//! about which *distances* are compared, only makes tie order stable.
+
+pub mod balance;
+pub mod jobsn;
+pub mod multipass;
+pub mod pairs;
+pub mod partition;
+pub mod repsn;
+pub mod seq;
+pub mod srp;
+pub mod standard_blocking;
+pub mod types;
+pub mod window;
+
+pub use types::{SnConfig, SnKey, SnMode, SnResult};

@@ -1,0 +1,159 @@
+//! Multi-pass Sorted Neighborhood (§4: "The SN approach may also be
+//! repeatedly executed using different blocking keys.  Such a multi-pass
+//! strategy diminishes the influence of poor blocking keys … whilst still
+//! maintaining the linear complexity").
+//!
+//! Each pass is a full RepSN run with its own blocking key; results are
+//! unioned (set semantics on pairs, max-score on matches).
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::er::blockkey::BlockingKey;
+use crate::er::entity::{Entity, Pair, ScoredPair};
+use crate::mapreduce::counters::Counters;
+use crate::sn::types::{SnConfig, SnResult};
+use crate::sn::{repsn, SnMode};
+
+/// Union results of several RepSN passes with different blocking keys.
+pub fn run(
+    entities: &[Entity],
+    base_cfg: &SnConfig,
+    keys: &[Arc<dyn BlockingKey>],
+) -> anyhow::Result<MultipassResult> {
+    anyhow::ensure!(!keys.is_empty(), "multipass needs at least one key");
+    let counters = Arc::new(Counters::new());
+    let mut pair_set: BTreeMap<Pair, f32> = BTreeMap::new();
+    let mut per_pass = Vec::new();
+    let mut new_per_pass = Vec::new();
+    for key in keys {
+        let cfg = SnConfig {
+            blocking_key: Arc::clone(key),
+            ..base_cfg.clone()
+        };
+        let res = repsn::run(entities, &cfg)?;
+        counters.merge(&res.counters);
+        let mut newly = 0usize;
+        match base_cfg.mode {
+            SnMode::Blocking => {
+                for p in &res.pairs {
+                    if pair_set.insert(*p, 0.0).is_none() {
+                        newly += 1;
+                    }
+                }
+            }
+            SnMode::Matching(_) => {
+                for m in &res.matches {
+                    let e = pair_set.entry(m.pair).or_insert_with(|| {
+                        newly += 1;
+                        m.score
+                    });
+                    if m.score > *e {
+                        *e = m.score;
+                    }
+                }
+            }
+        }
+        new_per_pass.push(newly);
+        per_pass.push(res);
+    }
+    let is_matching = matches!(base_cfg.mode, SnMode::Matching(_));
+    let (pairs, matches) = if is_matching {
+        (
+            Vec::new(),
+            pair_set
+                .into_iter()
+                .map(|(pair, score)| ScoredPair { pair, score })
+                .collect(),
+        )
+    } else {
+        (pair_set.into_keys().collect(), Vec::new())
+    };
+    Ok(MultipassResult {
+        union: SnResult {
+            pairs,
+            matches,
+            counters,
+            stats: per_pass.iter().flat_map(|r| r.stats.clone()).collect(),
+            profiles: per_pass.iter().flat_map(|r| r.profiles.clone()).collect(),
+        },
+        per_pass,
+        new_per_pass,
+    })
+}
+
+/// Result of a multi-pass run.
+#[derive(Debug)]
+pub struct MultipassResult {
+    /// Unioned pairs/matches across passes.
+    pub union: SnResult,
+    /// Individual pass results (diagnostics).
+    pub per_pass: Vec<SnResult>,
+    /// How many pairs each pass contributed that earlier passes missed.
+    pub new_per_pass: Vec<usize>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::blockkey::{TitlePrefixKey, TitleSuffixKey};
+
+    #[test]
+    fn second_pass_recovers_dirty_prefix_duplicates() {
+        // two duplicates whose titles differ in the FIRST word (prefix key
+        // separates them) but share the last word (suffix key unites them)
+        let mut entities: Vec<Entity> = (0..60)
+            .map(|i| {
+                let c1 = (b'a' + (i % 26) as u8) as char;
+                Entity::new(i, &format!("{c1}{c1} filler title number{i}"), "")
+            })
+            .collect();
+        entities.push(Entity::new(100, "aa same ending zz", ""));
+        entities.push(Entity::new(101, "zz same ending zz", ""));
+        let base = SnConfig {
+            window: 3,
+            num_map_tasks: 2,
+            workers: 2,
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            ..Default::default()
+        };
+        let keys: Vec<Arc<dyn BlockingKey>> = vec![
+            Arc::new(TitlePrefixKey::new(2)),
+            Arc::new(TitleSuffixKey),
+        ];
+        let res = run(&entities, &base, &keys).unwrap();
+        let pair = Pair::new(100, 101);
+        assert!(
+            !res.per_pass[0].pair_set().contains(&pair),
+            "prefix pass should miss the dirty pair"
+        );
+        assert!(
+            res.per_pass[1].pair_set().contains(&pair),
+            "suffix pass should find it"
+        );
+        assert!(res.union.pair_set().contains(&pair));
+        assert!(res.new_per_pass[1] > 0);
+    }
+
+    #[test]
+    fn union_is_superset_of_each_pass() {
+        let entities: Vec<Entity> = (0..80)
+            .map(|i| Entity::new(i, &format!("{} word tail{}", (b'a' + (i % 9) as u8) as char, i % 4), ""))
+            .collect();
+        let base = SnConfig {
+            window: 3,
+            ..Default::default()
+        };
+        let keys: Vec<Arc<dyn BlockingKey>> = vec![
+            Arc::new(TitlePrefixKey::new(2)),
+            Arc::new(TitleSuffixKey),
+        ];
+        let res = run(&entities, &base, &keys).unwrap();
+        let union: std::collections::BTreeSet<_> = res.union.pair_set().into_iter().collect();
+        for pass in &res.per_pass {
+            for p in pass.pair_set() {
+                assert!(union.contains(&p));
+            }
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Reduce-side window processing shared by SRP / JobSN / RepSN.
+//!
+//! [`WindowProc`] wraps the sliding window with the configured
+//! [`SnMode`]: in Blocking mode every window comparison is emitted as a
+//! correspondence (`B` in the figures); in Matching mode comparisons are
+//! queued into a [`PairBatcher`] and only matches are emitted.  Entities
+//! are encoded at most once per reduce partition (on window entry).
+//!
+//! Every buffered item carries a `tag` (the SN variants use the *home
+//! partition* `p(k)`): the pair filter sees both tags, which is how JobSN
+//! phase 2 drops same-partition pairs ("filters correspondences that have
+//! already been determined in the first MapReduce job") and how RepSN
+//! restricts output to pairs involving at least one original entity.
+
+use std::sync::Arc;
+
+use crate::er::entity::{Entity, Pair};
+use crate::er::strategy::{EncodedEntity, PairBatcher};
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::types::Emitter;
+use crate::sn::types::{counter_names, SnKey, SnMode, SnVal};
+use crate::sn::window::SlidingWindow;
+
+/// Identity + provenance of a buffered entity, visible to pair filters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WinItem {
+    pub id: u64,
+    /// Variant-defined provenance tag (home partition for the SN jobs).
+    pub tag: u32,
+}
+
+struct Buffered {
+    item: WinItem,
+    enc: Option<Arc<EncodedEntity>>,
+}
+
+/// The per-reduce-partition window processor.
+pub struct WindowProc {
+    win: SlidingWindow<Buffered>,
+    batcher: Option<PairBatcher>,
+    /// Pairs collected in blocking mode, flushed on `finish`.
+    pending_pairs: Vec<Pair>,
+    comparisons: u64,
+    filtered: u64,
+}
+
+impl WindowProc {
+    pub fn new(w: usize, mode: &SnMode) -> Self {
+        Self {
+            win: SlidingWindow::new(w.max(2)),
+            batcher: match mode {
+                SnMode::Blocking => None,
+                SnMode::Matching(cfg) => Some(PairBatcher::new(cfg.clone())),
+            },
+            pending_pairs: Vec::new(),
+            comparisons: 0,
+            filtered: 0,
+        }
+    }
+
+    fn wrap(&self, e: &Arc<Entity>, tag: u32) -> Buffered {
+        Buffered {
+            item: WinItem { id: e.id, tag },
+            enc: if self.batcher.is_some() {
+                Some(Arc::new(EncodedEntity::new(Arc::clone(e))))
+            } else {
+                None
+            },
+        }
+    }
+
+    /// Seed the window without comparisons (RepSN replica prefix).
+    pub fn seed(&mut self, e: &Arc<Entity>, tag: u32) {
+        let b = self.wrap(e, tag);
+        self.win.seed(b);
+    }
+
+    /// Push the next entity, generating its window comparisons.
+    /// `pair_filter(older, newer)` can veto a comparison.
+    pub fn push<F: FnMut(WinItem, WinItem) -> bool>(
+        &mut self,
+        e: &Arc<Entity>,
+        tag: u32,
+        mut pair_filter: F,
+    ) {
+        let item = self.wrap(e, tag);
+        let batcher = &mut self.batcher;
+        let pending = &mut self.pending_pairs;
+        let mut cmp = 0u64;
+        let mut filtered = 0u64;
+        self.win.push(item, |old, new| {
+            if !pair_filter(old.item, new.item) {
+                filtered += 1;
+                return;
+            }
+            cmp += 1;
+            match (&old.enc, &new.enc, &mut *batcher) {
+                (Some(a), Some(b), Some(batch)) => {
+                    batch.push(Arc::clone(a), Arc::clone(b));
+                }
+                _ => {
+                    pending.push(Pair::new(old.item.id, new.item.id));
+                }
+            }
+        });
+        self.comparisons += cmp;
+        self.filtered += filtered;
+    }
+
+    /// Flush results into the reduce emitter under `key`.
+    pub fn finish(self, key: &SnKey, out: &mut Emitter<SnKey, SnVal>, counters: &Counters) {
+        counters.add(counter_names::COMPARISONS, self.comparisons);
+        counters.add(counter_names::PAIRS_FILTERED_DUPLICATE, self.filtered);
+        // Output key: partition lineage only, with an empty (non-allocating)
+        // blocking-key string — pair outputs are emitted in bulk and a
+        // String allocation per pair dominated the blocking-mode profile.
+        let out_key = SnKey {
+            bound: key.bound,
+            part: key.part,
+            key: String::new(),
+            id: 0,
+        };
+        match self.batcher {
+            None => {
+                for p in self.pending_pairs {
+                    out.emit(out_key.clone(), SnVal::Pair(p));
+                }
+            }
+            Some(b) => {
+                counters.add(counter_names::PAIRS_SKIPPED_SHORTCIRCUIT, b.pairs_skipped);
+                let matches = b.finish();
+                counters.add(counter_names::MATCHES, matches.len() as u64);
+                for m in matches {
+                    out.emit(out_key.clone(), SnVal::Match(m));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::strategy::MatchStrategyConfig;
+
+    fn ent(id: u64, title: &str) -> Arc<Entity> {
+        Arc::new(Entity::new(id, title, "shared abstract text"))
+    }
+
+    fn key() -> SnKey {
+        SnKey::srp(0, "aa".into(), 0)
+    }
+
+    fn collect_pairs(out: Emitter<SnKey, SnVal>) -> Vec<Pair> {
+        out.into_pairs()
+            .into_iter()
+            .filter_map(|(_, v)| match v {
+                SnVal::Pair(p) => Some(p),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn blocking_mode_emits_all_window_pairs() {
+        let mut proc = WindowProc::new(3, &SnMode::Blocking);
+        for i in 0..5 {
+            proc.push(&ent(i, "t"), 0, |_, _| true);
+        }
+        let counters = Counters::new();
+        let mut out = Emitter::new();
+        proc.finish(&key(), &mut out, &counters);
+        assert_eq!(out.len(), 7); // (5-3)*2 + 3 = 7
+        assert_eq!(counters.get(counter_names::COMPARISONS), 7);
+    }
+
+    #[test]
+    fn matching_mode_emits_only_matches() {
+        let cfg = MatchStrategyConfig::default();
+        let mut proc = WindowProc::new(2, &SnMode::Matching(cfg));
+        proc.push(&ent(1, "identical title here"), 0, |_, _| true);
+        proc.push(&ent(2, "identical title here"), 0, |_, _| true);
+        proc.push(&ent(3, "zzz completely unrelated qqq"), 0, |_, _| true);
+        let counters = Counters::new();
+        let mut out = Emitter::new();
+        proc.finish(&key(), &mut out, &counters);
+        let vals = out.into_pairs();
+        assert_eq!(vals.len(), 1);
+        match &vals[0].1 {
+            SnVal::Match(m) => assert_eq!(m.pair, Pair::new(1, 2)),
+            other => panic!("expected match, got {other:?}"),
+        }
+        assert_eq!(counters.get(counter_names::MATCHES), 1);
+        assert_eq!(counters.get(counter_names::COMPARISONS), 2);
+    }
+
+    #[test]
+    fn tag_filter_vetoes_and_counts() {
+        let mut proc = WindowProc::new(3, &SnMode::Blocking);
+        for i in 0..4 {
+            proc.push(&ent(i, "t"), (i % 2) as u32, |a, b| a.tag != b.tag);
+        }
+        let counters = Counters::new();
+        let mut out = Emitter::new();
+        proc.finish(&key(), &mut out, &counters);
+        let pairs = collect_pairs(out);
+        for p in &pairs {
+            assert_ne!(p.a % 2, p.b % 2);
+        }
+        assert_eq!(
+            counters.get(counter_names::COMPARISONS) + counters.get(counter_names::PAIRS_FILTERED_DUPLICATE),
+            5
+        );
+    }
+
+    #[test]
+    fn seeded_entities_pair_with_pushed_only() {
+        let mut proc = WindowProc::new(3, &SnMode::Blocking);
+        proc.seed(&ent(100, "t"), 0);
+        proc.seed(&ent(101, "t"), 0);
+        proc.push(&ent(1, "t"), 1, |_, _| true);
+        let counters = Counters::new();
+        let mut out = Emitter::new();
+        proc.finish(&key(), &mut out, &counters);
+        assert_eq!(
+            collect_pairs(out),
+            vec![Pair::new(100, 1), Pair::new(101, 1)]
+        );
+    }
+}

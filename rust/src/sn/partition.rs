@@ -1,0 +1,264 @@
+//! Monotonic range-partition functions `p : k → i` and skew metrics.
+//!
+//! §4.1: "A monotonically increasing function p (p(k1) ≥ p(k2) if
+//! k1 ≥ k2) ensures that all entities assigned to reducer i have a smaller
+//! or equal blocking key than any entity processed by reducer i+1" — and
+//! "in practice simple range partitioning functions p may be employed."
+//!
+//! §5.3 evaluates partitioning strategies by the **Gini coefficient** of
+//! their partition sizes (Table 1): the Manual/balanced function (g≈0.13),
+//! even key-space splits (Even10/Even8), and skew-shaped variants.
+
+use crate::er::entity::Entity;
+
+/// A monotonic partition function over blocking keys.
+pub trait PartitionFn: Send + Sync {
+    /// Partition index in `[0, num_partitions)`.  MUST be monotone with
+    /// respect to byte-lexicographic key order.
+    fn partition(&self, key: &str) -> usize;
+
+    fn num_partitions(&self) -> usize;
+
+    fn name(&self) -> String;
+}
+
+/// Range partitioning by explicit upper boundaries.
+///
+/// `boundaries` has length `r − 1`, sorted ascending;
+/// `p(k) = #{ b ∈ boundaries : b ≤ k }` — i.e. partition `i` holds keys in
+/// `[boundaries[i−1], boundaries[i])`.
+#[derive(Debug, Clone)]
+pub struct RangePartition {
+    boundaries: Vec<String>,
+    label: String,
+}
+
+impl RangePartition {
+    pub fn new(boundaries: Vec<String>, label: &str) -> Self {
+        for w in boundaries.windows(2) {
+            assert!(w[0] <= w[1], "boundaries must be sorted");
+        }
+        Self {
+            boundaries,
+            label: label.to_string(),
+        }
+    }
+
+    /// The paper's "manually defined" balanced function: choose boundaries
+    /// at the key-distribution quantiles of a sample so the `r` partitions
+    /// have near-equal sizes.
+    pub fn balanced<F: Fn(&Entity) -> String>(
+        entities: &[Entity],
+        key_fn: F,
+        r: usize,
+    ) -> Self {
+        assert!(r >= 1);
+        let mut keys: Vec<String> = entities.iter().map(key_fn).collect();
+        keys.sort_unstable();
+        let n = keys.len();
+        let mut boundaries = Vec::with_capacity(r.saturating_sub(1));
+        for i in 1..r {
+            let idx = (i * n) / r;
+            let b = keys.get(idx).cloned().unwrap_or_default();
+            boundaries.push(b);
+        }
+        // boundaries may repeat if the quantile lands inside a giant key
+        // run; keep them (empty partitions are legal, the engine handles
+        // zero-entity reduce tasks)
+        Self {
+            boundaries,
+            label: format!("Manual{r}"),
+        }
+    }
+}
+
+impl PartitionFn for RangePartition {
+    fn partition(&self, key: &str) -> usize {
+        self.boundaries.partition_point(|b| b.as_str() <= key)
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.boundaries.len() + 1
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// Even split of the two-character key space (§5.3's Even10/Even8).
+///
+/// Keys are mapped to a numeric position using the *blocking-key
+/// alphabet* — space, `0-9`, `a-z`, `~` (what [`TitlePrefixKey`] actually
+/// emits) — via the order-preserving rank "number of alphabet characters
+/// with byte value ≤ b", and the `A²` position range is cut into `k`
+/// equal intervals.  Monotone w.r.t. byte-lexicographic string order by
+/// construction.
+///
+/// [`TitlePrefixKey`]: crate::er::blockkey::TitlePrefixKey
+#[derive(Debug, Clone)]
+pub struct EvenPartition {
+    k: usize,
+}
+
+/// The blocking-key alphabet, ascending by byte value.
+const KEY_ALPHABET: &[u8] = &[
+    b' ', b'0', b'1', b'2', b'3', b'4', b'5', b'6', b'7', b'8', b'9',
+    b'a', b'b', b'c', b'd', b'e', b'f', b'g', b'h', b'i', b'j', b'k',
+    b'l', b'm', b'n', b'o', b'p', b'q', b'r', b's', b't', b'u', b'v',
+    b'w', b'x', b'y', b'z', b'~',
+];
+
+impl EvenPartition {
+    /// Even split over the blocking-key alphabet.
+    pub fn ascii(k: usize) -> Self {
+        assert!(k >= 1);
+        Self { k }
+    }
+
+    fn alpha_size() -> u64 {
+        KEY_ALPHABET.len() as u64 + 1 // +1: rank 0 = "below everything"
+    }
+
+    /// Order-preserving rank: #alphabet chars with byte ≤ b.
+    fn rank(b: u8) -> u64 {
+        KEY_ALPHABET.partition_point(|&c| c <= b) as u64
+    }
+
+    /// Numeric position of a key in `[0, A²)`.
+    fn position(key: &str) -> u64 {
+        let bytes = key.as_bytes();
+        let a = Self::alpha_size();
+        let b0 = bytes.first().map(|&b| Self::rank(b)).unwrap_or(0);
+        let b1 = bytes.get(1).map(|&b| Self::rank(b)).unwrap_or(0);
+        b0 * a + b1
+    }
+}
+
+impl PartitionFn for EvenPartition {
+    fn partition(&self, key: &str) -> usize {
+        let a = Self::alpha_size();
+        let span = a * a;
+        ((Self::position(key) * self.k as u64) / span) as usize
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.k
+    }
+
+    fn name(&self) -> String {
+        format!("Even{}", self.k)
+    }
+}
+
+/// Gini coefficient of partition sizes (§5.3):
+/// `g = (2·Σ i·y_i)/(n·Σ y_i) − (n+1)/n` with `y` ascending, `i` 1-based.
+/// 0 = perfectly equal partitions, →1 = maximal inequality.
+pub fn gini(sizes: &[usize]) -> f64 {
+    let n = sizes.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let total: u64 = sizes.iter().map(|&s| s as u64).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut y: Vec<u64> = sizes.iter().map(|&s| s as u64).collect();
+    y.sort_unstable();
+    let weighted: u128 = y
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| (i as u128 + 1) * v as u128)
+        .sum();
+    (2.0 * weighted as f64) / (n as f64 * total as f64) - (n as f64 + 1.0) / n as f64
+}
+
+/// Histogram of partition sizes for a key multiset under `p`.
+pub fn partition_sizes(keys: impl Iterator<Item = String>, p: &dyn PartitionFn) -> Vec<usize> {
+    let mut sizes = vec![0usize; p.num_partitions()];
+    for k in keys {
+        sizes[p.partition(&k)] += 1;
+    }
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_partition_monotone() {
+        let p = RangePartition::new(vec!["d".into(), "m".into()], "test");
+        assert_eq!(p.num_partitions(), 3);
+        assert_eq!(p.partition("a"), 0);
+        assert_eq!(p.partition("c~"), 0);
+        assert_eq!(p.partition("d"), 1);
+        assert_eq!(p.partition("lz"), 1);
+        assert_eq!(p.partition("m"), 2);
+        assert_eq!(p.partition("zz"), 2);
+    }
+
+    #[test]
+    fn balanced_gives_near_equal_sizes() {
+        let entities: Vec<Entity> = (0..1000)
+            .map(|i| {
+                let c = (b'a' + (i % 26) as u8) as char;
+                Entity::new(i as u64, &format!("{c}{c} title"), "")
+            })
+            .collect();
+        let p = RangePartition::balanced(&entities, |e| e.title[..2].to_string(), 8);
+        let sizes = partition_sizes(
+            entities.iter().map(|e| e.title[..2].to_string()),
+            &p,
+        );
+        assert_eq!(sizes.iter().sum::<usize>(), 1000);
+        let g = gini(&sizes);
+        assert!(g < 0.15, "balanced partition too skewed: g={g} sizes={sizes:?}");
+    }
+
+    #[test]
+    fn even_partition_monotone_and_covers() {
+        let p = EvenPartition::ascii(8);
+        let keys = ["  ", "a ", "ab", "mz", "zz", "~~"];
+        let mut last = 0;
+        for k in keys {
+            let i = p.partition(k);
+            assert!(i >= last, "non-monotone at {k}");
+            assert!(i < 8);
+            last = i;
+        }
+    }
+
+    #[test]
+    fn even_partition_spreads_alphabet() {
+        let p = EvenPartition::ascii(10);
+        let a = p.partition("aa");
+        let z = p.partition("zz");
+        assert!(z > a + 3, "a→{a} z→{z}");
+    }
+
+    #[test]
+    fn gini_extremes() {
+        assert_eq!(gini(&[10, 10, 10, 10]), 0.0);
+        // all mass in one of n partitions → g = (n-1)/n
+        let g = gini(&[0, 0, 0, 100]);
+        assert!((g - 0.75).abs() < 1e-9);
+        assert_eq!(gini(&[]), 0.0);
+        assert_eq!(gini(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn gini_monotone_in_skew() {
+        let g1 = gini(&[25, 25, 25, 25]);
+        let g2 = gini(&[10, 20, 30, 40]);
+        let g3 = gini(&[5, 5, 10, 80]);
+        assert!(g1 < g2 && g2 < g3);
+    }
+
+    #[test]
+    fn partition_sizes_counts() {
+        let p = RangePartition::new(vec!["m".into()], "half");
+        let keys = vec!["a".to_string(), "b".into(), "x".into()];
+        assert_eq!(partition_sizes(keys.into_iter(), &p), vec![2, 1]);
+    }
+}

@@ -1,0 +1,352 @@
+//! RepSN — Sorted Neighborhood with entity replication
+//! (§4.3, Figure 7, Algorithm 2).
+//!
+//! A single MapReduce job: every map task keeps, per partition `i < r`,
+//! the `w−1` entities with the highest blocking key it has seen for that
+//! partition (`map_configure` initializes the lists, `map` maintains them,
+//! `map_close` flushes).  Originals are emitted under `p(k).p(k).k`;
+//! the boundary candidates are *additionally* emitted under
+//! `(p(k)+1).p(k).k`, which routes the copy to the succeeding reducer and
+//! — because the composite key sorts by (bound, part, key) — places all
+//! replicas at the *head* of that reducer's input.  The reduce step drops
+//! all but the last `w−1` replicas (the globally highest of the
+//! predecessor partition), seeds the sliding window with them, and then
+//! windows the originals, so every emitted pair involves at least one
+//! entity of the actual partition.
+
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::er::blockkey::BlockingKey;
+use crate::er::entity::Entity;
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::engine::run_job;
+use crate::mapreduce::sim::JobProfile;
+use crate::mapreduce::types::{
+    Emitter, MapTask, MapTaskFactory, ReduceTask, ReduceTaskFactory, ValuesIter,
+};
+use crate::mapreduce::JobConfig;
+use crate::sn::pairs::WindowProc;
+use crate::sn::partition::PartitionFn;
+use crate::sn::srp::{group_by_bound, BoundPartitioner};
+use crate::sn::types::{counter_names, SnConfig, SnKey, SnMode, SnResult, SnVal};
+
+/// Min-heap entry for the per-partition replication buffers: keeps the
+/// `w−1` largest `(key, id)` entities with O(log w) maintenance
+/// (Algorithm 2 lines 11–17 describe the same replace-min policy).
+#[derive(PartialEq, Eq)]
+struct RepEntry {
+    key: String,
+    id: u64,
+    entity: Arc<Entity>,
+}
+
+impl Ord for RepEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed → BinaryHeap pops the smallest (key, id) first
+        (&other.key, other.id).cmp(&(&self.key, self.id))
+    }
+}
+
+impl PartialOrd for RepEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The RepSN map task (Algorithm 2).
+struct RepSnMap {
+    w: usize,
+    r: usize,
+    blocking_key: Arc<dyn BlockingKey>,
+    partitioner: Arc<dyn PartitionFn>,
+    /// `rep[i]`: candidates for replication to reducer `i+1`.
+    rep: Vec<BinaryHeap<RepEntry>>,
+}
+
+impl MapTask<(), Arc<Entity>, SnKey, Arc<Entity>> for RepSnMap {
+    fn configure(&mut self, _out: &mut Emitter<SnKey, Arc<Entity>>, _c: &Counters) {
+        // map_configure: one buffer per partition i < r
+        self.rep = (0..self.r.saturating_sub(1)).map(|_| BinaryHeap::new()).collect();
+    }
+
+    fn map(&mut self, _k: (), e: Arc<Entity>, out: &mut Emitter<SnKey, Arc<Entity>>, _c: &Counters) {
+        let k = self.blocking_key.key(&e);
+        let part = self.partitioner.partition(&k);
+        let id = e.id;
+        // maintain the replication buffer for this partition (if not last)
+        if part + 1 < self.r && self.w >= 2 {
+            let heap = &mut self.rep[part];
+            if heap.len() < self.w - 1 {
+                heap.push(RepEntry { key: k.clone(), id, entity: Arc::clone(&e) });
+            } else if let Some(min) = heap.peek() {
+                if (&k, id) > (&min.key, min.id) {
+                    heap.pop();
+                    heap.push(RepEntry { key: k.clone(), id, entity: Arc::clone(&e) });
+                }
+            }
+        }
+        out.emit(SnKey::srp(part as u32, k, id), e);
+    }
+
+    fn close(&mut self, out: &mut Emitter<SnKey, Arc<Entity>>, c: &Counters) {
+        // map_close: flush replicas with bound = part + 1
+        let mut replicated = 0u64;
+        for (i, heap) in self.rep.drain(..).enumerate() {
+            for entry in heap.into_vec() {
+                out.emit(
+                    SnKey {
+                        bound: (i + 1) as u32,
+                        part: i as u32,
+                        key: entry.key,
+                        id: entry.id,
+                    },
+                    entry.entity,
+                );
+                replicated += 1;
+            }
+        }
+        c.add(counter_names::REPLICATED_ENTITIES, replicated);
+    }
+}
+
+struct RepSnMapFactory {
+    w: usize,
+    r: usize,
+    blocking_key: Arc<dyn BlockingKey>,
+    partitioner: Arc<dyn PartitionFn>,
+}
+
+impl MapTaskFactory<(), Arc<Entity>, SnKey, Arc<Entity>> for RepSnMapFactory {
+    fn create_task(&self) -> Box<dyn MapTask<(), Arc<Entity>, SnKey, Arc<Entity>> + Send> {
+        Box::new(RepSnMap {
+            w: self.w,
+            r: self.r,
+            blocking_key: Arc::clone(&self.blocking_key),
+            partitioner: Arc::clone(&self.partitioner),
+            rep: Vec::new(),
+        })
+    }
+}
+
+struct RepSnReduceFactory {
+    w: usize,
+    mode: SnMode,
+    blocking_key: Arc<dyn BlockingKey>,
+    partitioner: Arc<dyn PartitionFn>,
+}
+
+impl ReduceTaskFactory<SnKey, Arc<Entity>, SnKey, SnVal> for RepSnReduceFactory {
+    fn create_task(&self) -> Box<dyn ReduceTask<SnKey, Arc<Entity>, SnKey, SnVal> + Send> {
+        Box::new(RepSnReduceImpl {
+            w: self.w,
+            mode: self.mode.clone(),
+            blocking_key: Arc::clone(&self.blocking_key),
+            partitioner: Arc::clone(&self.partitioner),
+        })
+    }
+}
+
+/// Working implementation: recomputes each value's home partition from its
+/// blocking key (deterministic) to classify replica vs original.
+struct RepSnReduceImpl {
+    w: usize,
+    mode: SnMode,
+    blocking_key: Arc<dyn BlockingKey>,
+    partitioner: Arc<dyn PartitionFn>,
+}
+
+impl ReduceTask<SnKey, Arc<Entity>, SnKey, SnVal> for RepSnReduceImpl {
+    fn reduce(
+        &mut self,
+        key: &SnKey,
+        values: ValuesIter<'_, Arc<Entity>>,
+        out: &mut Emitter<SnKey, SnVal>,
+        counters: &Counters,
+    ) {
+        let r_i = key.bound;
+        let keep = self.w.saturating_sub(1);
+        let mut proc = WindowProc::new(self.w, &self.mode);
+        let mut head: std::collections::VecDeque<Arc<Entity>> =
+            std::collections::VecDeque::with_capacity(keep + 1);
+        let mut discarded = 0u64;
+        let mut seeded = false;
+        for e in values {
+            let part = self.partitioner.partition(&self.blocking_key.key(e)) as u32;
+            if part != r_i {
+                // replica from the preceding partition (head of the input)
+                debug_assert!(part + 1 == r_i, "replica from non-adjacent partition");
+                debug_assert!(!seeded, "replica after originals violates sort order");
+                head.push_back(Arc::clone(e));
+                if head.len() > keep {
+                    head.pop_front();
+                    discarded += 1;
+                }
+            } else {
+                if !seeded {
+                    for rep in head.drain(..) {
+                        proc.seed(&rep, r_i.wrapping_sub(1));
+                    }
+                    seeded = true;
+                }
+                proc.push(e, r_i, |_, _| true);
+            }
+        }
+        counters.add(counter_names::REPLICAS_DISCARDED, discarded);
+        proc.finish(key, out, counters);
+    }
+}
+
+/// Run RepSN (§4.3): the complete SN result in a single MapReduce job.
+pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
+    let r = cfg.partitioner.num_partitions();
+    let input: Vec<((), Arc<Entity>)> = entities
+        .iter()
+        .map(|e| ((), Arc::new(e.clone())))
+        .collect();
+    let job_cfg = JobConfig::named("repsn")
+        .with_tasks(cfg.num_map_tasks, r)
+        .with_workers(cfg.workers);
+    let res = run_job(
+        &job_cfg,
+        input,
+        Arc::new(RepSnMapFactory {
+            w: cfg.window,
+            r,
+            blocking_key: Arc::clone(&cfg.blocking_key),
+            partitioner: Arc::clone(&cfg.partitioner),
+        }),
+        Arc::new(BoundPartitioner),
+        group_by_bound(),
+        Arc::new(RepSnReduceFactory {
+            w: cfg.window,
+            mode: cfg.mode.clone(),
+            blocking_key: Arc::clone(&cfg.blocking_key),
+            partitioner: Arc::clone(&cfg.partitioner),
+        }),
+    );
+    let (pairs, matches, boundaries) = crate::sn::srp::split_output(&res);
+    debug_assert!(boundaries.is_empty());
+    let profile = JobProfile::from_stats(
+        &res.stats,
+        res.counters
+            .get(crate::mapreduce::counters::names::MAP_OUTPUT_BYTES),
+    );
+    Ok(SnResult {
+        pairs,
+        matches,
+        counters: Arc::clone(&res.counters),
+        stats: vec![res.stats.clone()],
+        profiles: vec![profile],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::blockkey::{BlockingKey, TitlePrefixKey};
+    use crate::er::entity::Pair;
+    use crate::sn::partition::RangePartition;
+    use crate::sn::window::expected_pair_count;
+
+    fn fig7_entities() -> Vec<Entity> {
+        [
+            (1, "1a"), (2, "2b"), (3, "3c"), (4, "1d"), (5, "2e"),
+            (6, "2f"), (7, "3g"), (8, "2h"), (9, "3i"),
+        ]
+        .iter()
+        .map(|&(id, t)| Entity::new(id, t, ""))
+        .collect()
+    }
+
+    fn fig7_cfg() -> SnConfig {
+        SnConfig {
+            window: 3,
+            num_map_tasks: 3,
+            workers: 2,
+            partitioner: Arc::new(RangePartition::new(vec!["3".into()], "fig7")),
+            blocking_key: Arc::new(TitlePrefixKey::new(1)),
+            mode: SnMode::Blocking,
+        }
+    }
+
+    /// Figure 7: RepSN produces the complete 15-pair SN result in one job.
+    #[test]
+    fn figure_7_repsn_complete_in_one_job() {
+        let res = run(&fig7_entities(), &fig7_cfg()).unwrap();
+        let set = res.pair_set();
+        assert_eq!(set.len(), expected_pair_count(9, 3));
+        for (a, b) in [(6, 3), (8, 3), (8, 7)] {
+            assert!(set.contains(&Pair::new(a, b)), "missing boundary pair ({a},{b})");
+        }
+        assert_eq!(res.stats.len(), 1, "RepSN must be a single job");
+    }
+
+    #[test]
+    fn replication_bounded_by_formula() {
+        // m·(r−1)·(w−1) is the paper's max replication count
+        let entities: Vec<Entity> = (0..300)
+            .map(|i| Entity::new(i, &format!("{}x title", (b'a' + (i % 26) as u8) as char), ""))
+            .collect();
+        let m = 4;
+        let w = 5;
+        let cfg = SnConfig {
+            window: w,
+            num_map_tasks: m,
+            workers: 2,
+            partitioner: Arc::new(RangePartition::balanced(
+                &entities,
+                |e| TitlePrefixKey::new(2).key(e),
+                6,
+            )),
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            mode: SnMode::Blocking,
+        };
+        let res = run(&entities, &cfg).unwrap();
+        let replicated = res.counters.get(counter_names::REPLICATED_ENTITIES);
+        assert!(replicated > 0);
+        assert!(
+            replicated <= (m * (6 - 1) * (w - 1)) as u64,
+            "replicated={replicated} > m(r-1)(w-1)"
+        );
+    }
+
+    #[test]
+    fn repsn_equals_sequential() {
+        let entities: Vec<Entity> = (0..250)
+            .map(|i| {
+                let c1 = (b'a' + (i % 23) as u8) as char;
+                let c2 = (b'a' + (i % 5) as u8) as char;
+                Entity::new(i, &format!("{c1}{c2} title {i}"), "abs")
+            })
+            .collect();
+        let cfg = SnConfig {
+            window: 6,
+            num_map_tasks: 7,
+            workers: 3,
+            partitioner: Arc::new(RangePartition::balanced(
+                &entities,
+                |e| TitlePrefixKey::new(2).key(e),
+                5,
+            )),
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            mode: SnMode::Blocking,
+        };
+        let res = run(&entities, &cfg).unwrap();
+        let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 6);
+        seq.sort_unstable();
+        seq.dedup();
+        assert_eq!(res.pair_set(), seq);
+    }
+
+    #[test]
+    fn repsn_single_partition_no_replication() {
+        let cfg = SnConfig {
+            partitioner: Arc::new(crate::sn::partition::EvenPartition::ascii(1)),
+            ..fig7_cfg()
+        };
+        let res = run(&fig7_entities(), &cfg).unwrap();
+        assert_eq!(res.counters.get(counter_names::REPLICATED_ENTITIES), 0);
+        assert_eq!(res.pair_set().len(), expected_pair_count(9, 3));
+    }
+}

@@ -1,0 +1,104 @@
+//! Sequential Sorted Neighborhood — the baseline every parallel variant
+//! is validated against and that the speedup figures normalize to.
+
+use std::sync::Arc;
+
+use crate::er::blockkey::BlockingKey;
+use crate::er::entity::{Entity, Pair, ScoredPair};
+use crate::er::strategy::{EncodedEntity, MatchStrategyConfig, PairBatcher};
+use crate::sn::window::SlidingWindow;
+
+/// Sort entities by `(blocking key, id)` and return the sorted ids.
+pub fn sorted_ids(entities: &[Entity], key_fn: &dyn BlockingKey) -> Vec<u64> {
+    let mut keyed: Vec<(String, u64)> = entities
+        .iter()
+        .map(|e| (key_fn.key(e), e.id))
+        .collect();
+    keyed.sort_unstable();
+    keyed.into_iter().map(|(_, id)| id).collect()
+}
+
+/// Sequential SN in blocking mode: all sliding-window correspondences.
+pub fn run_blocking(entities: &[Entity], key_fn: &dyn BlockingKey, w: usize) -> Vec<Pair> {
+    crate::sn::window::standard_sn(&sorted_ids(entities, key_fn), w)
+}
+
+/// Sequential SN with full matching: sort, slide, score, threshold.
+/// Returns `(matches, comparisons)`.
+pub fn run_matching(
+    entities: &[Entity],
+    key_fn: &dyn BlockingKey,
+    w: usize,
+    strategy: &MatchStrategyConfig,
+) -> (Vec<ScoredPair>, u64) {
+    let mut keyed: Vec<(String, u64, &Entity)> = entities
+        .iter()
+        .map(|e| (key_fn.key(e), e.id, e))
+        .collect();
+    keyed.sort_unstable_by(|a, b| (&a.0, a.1).cmp(&(&b.0, b.1)));
+
+    let mut batcher = PairBatcher::new(strategy.clone());
+    let mut win: SlidingWindow<Arc<EncodedEntity>> = SlidingWindow::new(w.max(2));
+    let mut queue: Vec<(Arc<EncodedEntity>, Arc<EncodedEntity>)> = Vec::new();
+    for (_, _, e) in &keyed {
+        let enc = Arc::new(EncodedEntity::new(Arc::new((*e).clone())));
+        win.push(enc, |a, b| queue.push((Arc::clone(a), Arc::clone(b))));
+        for (a, b) in queue.drain(..) {
+            batcher.push(a, b);
+        }
+    }
+    let comparisons = win.comparisons();
+    (batcher.finish(), comparisons)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::blockkey::TitlePrefixKey;
+    use crate::sn::window::expected_pair_count;
+
+    fn entities() -> Vec<Entity> {
+        // 9 entities with keys shaped like Figure 4 (keys 1/2/3 → aa/bb/cc)
+        let keys = [
+            (1, "aa"), (2, "bb"), (3, "cc"), (4, "aa"), (5, "bb"),
+            (6, "bb"), (7, "cc"), (8, "bb"), (9, "cc"),
+        ];
+        keys.iter()
+            .map(|&(id, k)| Entity::new(id, &format!("{k} title {id}"), "abstract"))
+            .collect()
+    }
+
+    #[test]
+    fn blocking_pair_count_matches_formula() {
+        let es = entities();
+        let pairs = run_blocking(&es, &TitlePrefixKey::new(2), 3);
+        assert_eq!(pairs.len(), expected_pair_count(9, 3));
+    }
+
+    #[test]
+    fn sorted_by_key_then_id() {
+        let es = entities();
+        let ids = sorted_ids(&es, &TitlePrefixKey::new(2));
+        assert_eq!(ids, vec![1, 4, 2, 5, 6, 8, 3, 7, 9]);
+    }
+
+    #[test]
+    fn matching_finds_injected_duplicate() {
+        let mut es = entities();
+        es.push(Entity::new(100, "aa title 1", "abstract")); // dup of id 1
+        let (matches, comparisons) =
+            run_matching(&es, &TitlePrefixKey::new(2), 4, &MatchStrategyConfig::default());
+        assert!(comparisons > 0);
+        assert!(
+            matches.iter().any(|m| m.pair == Pair::new(1, 100)),
+            "matches: {matches:?}"
+        );
+    }
+
+    #[test]
+    fn window_of_two_compares_adjacent_only() {
+        let es = entities();
+        let pairs = run_blocking(&es, &TitlePrefixKey::new(2), 2);
+        assert_eq!(pairs.len(), 8);
+    }
+}

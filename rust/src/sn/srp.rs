@@ -1,0 +1,277 @@
+//! SRP — Sorted Reduce Partitions (§4.1, Figure 5).
+//!
+//! The map function generates the blocking key `k` for each entity and
+//! prefixes it with the partition `p(k)`, producing the composite key
+//! `p(k).k`.  Repartitioning uses the prefix; sorting uses the whole key;
+//! since all keys of reducer `i` share prefix `i`, each reducer's input is
+//! sorted by the *blocking* key and the sliding window runs per reduce
+//! partition.  SRP alone misses the `(r−1)·w·(w−1)/2` boundary pairs —
+//! JobSN and RepSN build on the pieces here.
+
+use std::sync::Arc;
+
+use crate::er::blockkey::BlockingKey;
+use crate::er::entity::{Entity, Pair, ScoredPair};
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::engine::{run_job, GroupFn, JobResult};
+use crate::mapreduce::sim::JobProfile;
+use crate::mapreduce::types::{
+    Emitter, FnMapTask, Partitioner, ReduceTask, ReduceTaskFactory, ValuesIter,
+};
+use crate::mapreduce::JobConfig;
+use crate::sn::pairs::WindowProc;
+use crate::sn::types::{counter_names, SnConfig, SnKey, SnMode, SnResult, SnVal};
+
+/// Partitioner: route by the composite key's `bound` prefix.
+pub(crate) struct BoundPartitioner;
+
+impl Partitioner<SnKey> for BoundPartitioner {
+    fn partition(&self, key: &SnKey, num_reducers: usize) -> usize {
+        let b = key.bound as usize;
+        assert!(b < num_reducers, "bound {b} out of range (r={num_reducers})");
+        b
+    }
+}
+
+/// Grouping comparator: one group per `bound` (Algorithm 1: "group by
+/// r_i, order by composed key").
+pub(crate) fn group_by_bound() -> GroupFn<SnKey> {
+    Arc::new(|a: &SnKey, b: &SnKey| a.bound == b.bound)
+}
+
+/// The SRP map function (shared verbatim by JobSN phase 1).
+pub(crate) fn srp_mapper(
+    cfg: &SnConfig,
+) -> Arc<FnMapTask<impl Fn((), Arc<Entity>, &mut Emitter<SnKey, Arc<Entity>>, &Counters)>> {
+    let bk = Arc::clone(&cfg.blocking_key);
+    let pf = Arc::clone(&cfg.partitioner);
+    Arc::new(FnMapTask::new(
+        move |_k: (), e: Arc<Entity>, out: &mut Emitter<SnKey, Arc<Entity>>, _c: &Counters| {
+            let k = bk.key(&e);
+            let part = pf.partition(&k) as u32;
+            let id = e.id;
+            out.emit(SnKey::srp(part, k, id), e);
+        },
+    ))
+}
+
+/// The SRP reduce task, with optional JobSN boundary emission.
+pub(crate) struct SnWindowReduce {
+    pub w: usize,
+    pub mode: SnMode,
+    pub r: usize,
+    /// JobSN phase 1: additionally emit the first/last `w−1` entities with
+    /// boundary-prefixed keys.
+    pub emit_boundaries: bool,
+    pub blocking_key: Arc<dyn BlockingKey>,
+}
+
+impl ReduceTask<SnKey, Arc<Entity>, SnKey, SnVal> for SnWindowReduce {
+    fn reduce(
+        &mut self,
+        key: &SnKey,
+        values: ValuesIter<'_, Arc<Entity>>,
+        out: &mut Emitter<SnKey, SnVal>,
+        counters: &Counters,
+    ) {
+        let r_i = key.bound;
+        let mut proc = WindowProc::new(self.w, &self.mode);
+        // boundary bookkeeping (JobSN phase 1)
+        let keep = self.w.saturating_sub(1);
+        let mut first: Vec<Arc<Entity>> = Vec::new();
+        let mut last: std::collections::VecDeque<Arc<Entity>> = std::collections::VecDeque::new();
+        for e in values {
+            proc.push(e, r_i, |_, _| true);
+            if self.emit_boundaries && keep > 0 {
+                if first.len() < keep {
+                    first.push(Arc::clone(e));
+                }
+                last.push_back(Arc::clone(e));
+                if last.len() > keep {
+                    last.pop_front();
+                }
+            }
+        }
+        proc.finish(key, out, counters);
+        if self.emit_boundaries {
+            // Algorithm 1 lines 12–19: reducer r_i > 1 emits its first w−1
+            // entities to boundary r_i − 1; reducer r_i < r emits its last
+            // w−1 entities to boundary r_i.  (0-based here.)
+            let mut emitted = 0u64;
+            if r_i > 0 {
+                for e in &first {
+                    let k = self.blocking_key.key(e);
+                    out.emit(
+                        SnKey { bound: r_i - 1, part: r_i, key: k, id: e.id },
+                        SnVal::Entity(Arc::clone(e)),
+                    );
+                    emitted += 1;
+                }
+            }
+            if (r_i as usize) < self.r - 1 {
+                for e in &last {
+                    let k = self.blocking_key.key(e);
+                    out.emit(
+                        SnKey { bound: r_i, part: r_i, key: k, id: e.id },
+                        SnVal::Entity(Arc::clone(e)),
+                    );
+                    emitted += 1;
+                }
+            }
+            counters.add(counter_names::BOUNDARY_ENTITIES, emitted);
+        }
+    }
+}
+
+pub(crate) struct SnWindowReduceFactory {
+    pub w: usize,
+    pub mode: SnMode,
+    pub r: usize,
+    pub emit_boundaries: bool,
+    pub blocking_key: Arc<dyn BlockingKey>,
+}
+
+impl ReduceTaskFactory<SnKey, Arc<Entity>, SnKey, SnVal> for SnWindowReduceFactory {
+    fn create_task(&self) -> Box<dyn ReduceTask<SnKey, Arc<Entity>, SnKey, SnVal> + Send> {
+        Box::new(SnWindowReduce {
+            w: self.w,
+            mode: self.mode.clone(),
+            r: self.r,
+            emit_boundaries: self.emit_boundaries,
+            blocking_key: Arc::clone(&self.blocking_key),
+        })
+    }
+}
+
+/// Run the SRP job (optionally with JobSN phase-1 boundary emission) and
+/// return the raw engine result.
+pub(crate) fn run_srp_job(
+    entities: &[Entity],
+    cfg: &SnConfig,
+    emit_boundaries: bool,
+    job_name: &str,
+) -> JobResult<SnKey, SnVal> {
+    let r = cfg.partitioner.num_partitions();
+    let input: Vec<((), Arc<Entity>)> = entities
+        .iter()
+        .map(|e| ((), Arc::new(e.clone())))
+        .collect();
+    let job_cfg = JobConfig::named(job_name)
+        .with_tasks(cfg.num_map_tasks, r)
+        .with_workers(cfg.workers);
+    run_job(
+        &job_cfg,
+        input,
+        srp_mapper(cfg),
+        Arc::new(BoundPartitioner),
+        group_by_bound(),
+        Arc::new(SnWindowReduceFactory {
+            w: cfg.window,
+            mode: cfg.mode.clone(),
+            r,
+            emit_boundaries,
+            blocking_key: Arc::clone(&cfg.blocking_key),
+        }),
+    )
+}
+
+/// Split a raw job result into pairs/matches/boundaries.
+pub(crate) fn split_output(
+    res: &JobResult<SnKey, SnVal>,
+) -> (Vec<Pair>, Vec<ScoredPair>, Vec<(SnKey, Arc<Entity>)>) {
+    let mut pairs = Vec::new();
+    let mut matches = Vec::new();
+    let mut boundaries = Vec::new();
+    for part in &res.outputs {
+        for (k, v) in part {
+            match v {
+                SnVal::Pair(p) => pairs.push(*p),
+                SnVal::Match(m) => matches.push(*m),
+                SnVal::Entity(e) => boundaries.push((k.clone(), Arc::clone(e))),
+            }
+        }
+    }
+    (pairs, matches, boundaries)
+}
+
+/// Run plain SRP (§4.1): sorted reduce partitions *without* boundary
+/// handling.  Misses `(r−1)·w·(w−1)/2` pairs by design.
+pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
+    let res = run_srp_job(entities, cfg, false, "srp");
+    let (pairs, matches, _) = split_output(&res);
+    let profile = JobProfile::from_stats(
+        &res.stats,
+        res.counters.get(crate::mapreduce::counters::names::MAP_OUTPUT_BYTES),
+    );
+    Ok(SnResult {
+        pairs,
+        matches,
+        counters: Arc::clone(&res.counters),
+        stats: vec![res.stats.clone()],
+        profiles: vec![profile],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::blockkey::TitlePrefixKey;
+    use crate::sn::partition::RangePartition;
+    use crate::sn::window::{expected_pair_count, srp_missing_pairs};
+
+    /// The Figure 5 example: 9 entities, 2 reducers, w=3 → 12 of 15 pairs.
+    #[test]
+    fn figure_5_srp_misses_three_pairs() {
+        // entities a..i with blocking keys 1,2,3 encoded as titles
+        // key "1"→partition 0, keys "2","3"→... paper: p(k)=1 if k<=2 else 2
+        let data = [
+            ("a", 1, "1a"), ("b", 2, "2b"), ("c", 3, "3c"), ("d", 4, "1d"),
+            ("e", 5, "2e"), ("f", 6, "2f"), ("g", 7, "3g"), ("h", 8, "2h"),
+            ("i", 9, "3i"),
+        ];
+        // titles start with the key digit; TitlePrefixKey(1) gives "1"/"2"/"3"
+        let entities: Vec<Entity> = data
+            .iter()
+            .map(|&(_, id, t)| Entity::new(id, t, ""))
+            .collect();
+        let cfg = SnConfig {
+            window: 3,
+            num_map_tasks: 3,
+            workers: 2,
+            partitioner: Arc::new(RangePartition::new(vec!["3".into()], "fig5")),
+            blocking_key: Arc::new(TitlePrefixKey::new(1)),
+            mode: SnMode::Blocking,
+        };
+        let res = run(&entities, &cfg).unwrap();
+        assert_eq!(res.pairs.len(), 12);
+        assert_eq!(
+            expected_pair_count(9, 3) - res.pairs.len(),
+            srp_missing_pairs(2, 3)
+        );
+        // the three missing pairs are exactly (f,c), (h,c), (h,g):
+        // ids f=6, c=3, h=8, g=7
+        let set = res.pair_set();
+        for (a, b) in [(6, 3), (8, 3), (8, 7)] {
+            assert!(!set.contains(&Pair::new(a, b)), "({a},{b}) must be missing");
+        }
+    }
+
+    #[test]
+    fn single_partition_equals_sequential() {
+        let entities: Vec<Entity> = (0..50)
+            .map(|i| Entity::new(i, &format!("{:02} title", i % 10), ""))
+            .collect();
+        let cfg = SnConfig {
+            window: 5,
+            num_map_tasks: 4,
+            workers: 2,
+            partitioner: Arc::new(crate::sn::partition::EvenPartition::ascii(1)),
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            mode: SnMode::Blocking,
+        };
+        let res = run(&entities, &cfg).unwrap();
+        let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 5);
+        seq.sort_unstable();
+        assert_eq!(res.pair_set(), seq);
+    }
+}

@@ -1,0 +1,161 @@
+//! Standard Blocking on MapReduce — the §3 general workflow (Figure 3).
+//!
+//! Entities sharing a blocking key form one block; reduce compares all
+//! pairs *within* a block (quadratic in block size — the memory/skew
+//! discussion of §3 is about exactly this).  Included as the baseline SN
+//! is contrasted with, and because §6 notes "Sorted Neighborhood can be
+//! substituted with other blocking techniques, e.g., Standard Blocking".
+
+use std::sync::Arc;
+
+use crate::er::entity::{Entity, Pair};
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::engine::run_job;
+use crate::mapreduce::sim::JobProfile;
+use crate::mapreduce::types::{Emitter, FnMapTask, FnReduceTask, HashPartitioner, ValuesIter};
+use crate::mapreduce::JobConfig;
+use crate::runtime::encode::fnv1a64;
+use crate::sn::types::{counter_names, SnConfig, SnKey, SnMode, SnResult, SnVal};
+
+/// Run standard blocking.  Reuses [`SnConfig`] for the key function and
+/// task counts; `window` is ignored; the partitioner is replaced by key
+/// hashing (blocks are independent — no order needed).
+pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
+    let input: Vec<((), Arc<Entity>)> = entities
+        .iter()
+        .map(|e| ((), Arc::new(e.clone())))
+        .collect();
+    let bk = Arc::clone(&cfg.blocking_key);
+    let mapper = Arc::new(FnMapTask::new(
+        move |_k: (), e: Arc<Entity>, out: &mut Emitter<String, Arc<Entity>>, _c: &Counters| {
+            out.emit(bk.key(&e), e);
+        },
+    ));
+    let mode = cfg.mode.clone();
+    let reducer = Arc::new(FnReduceTask::new(
+        move |k: &String,
+              values: ValuesIter<'_, Arc<Entity>>,
+              out: &mut Emitter<SnKey, SnVal>,
+              counters: &Counters| {
+            // compare all pairs within the block, streaming with an
+            // unbounded "window" (block-local Cartesian product)
+            let block: Vec<Arc<Entity>> = values.cloned().collect();
+            let key = SnKey::srp(0, k.clone(), 0);
+            match &mode {
+                SnMode::Blocking => {
+                    let mut cmp = 0u64;
+                    for i in 0..block.len() {
+                        for j in (i + 1)..block.len() {
+                            out.emit(key.clone(), SnVal::Pair(Pair::new(block[i].id, block[j].id)));
+                            cmp += 1;
+                        }
+                    }
+                    counters.add(counter_names::COMPARISONS, cmp);
+                }
+                SnMode::Matching(mcfg) => {
+                    let mut batcher = crate::er::strategy::PairBatcher::new(mcfg.clone());
+                    let enc: Vec<_> = block
+                        .iter()
+                        .map(|e| {
+                            Arc::new(crate::er::strategy::EncodedEntity::new(Arc::clone(e)))
+                        })
+                        .collect();
+                    let mut cmp = 0u64;
+                    for i in 0..enc.len() {
+                        for j in (i + 1)..enc.len() {
+                            batcher.push(Arc::clone(&enc[i]), Arc::clone(&enc[j]));
+                            cmp += 1;
+                        }
+                    }
+                    counters.add(counter_names::COMPARISONS, cmp);
+                    counters.add(counter_names::PAIRS_SKIPPED_SHORTCIRCUIT, batcher.pairs_skipped);
+                    let matches = batcher.finish();
+                    counters.add(counter_names::MATCHES, matches.len() as u64);
+                    for m in matches {
+                        out.emit(key.clone(), SnVal::Match(m));
+                    }
+                }
+            }
+        },
+    ));
+    let r = cfg.partitioner.num_partitions();
+    let job_cfg = JobConfig::named("standard-blocking")
+        .with_tasks(cfg.num_map_tasks, r)
+        .with_workers(cfg.workers);
+    let res = run_job(
+        &job_cfg,
+        input,
+        mapper,
+        Arc::new(HashPartitioner::new(|k: &String| fnv1a64(k.as_bytes()))),
+        Arc::new(|a: &String, b: &String| a == b),
+        reducer,
+    );
+    let (pairs, matches, _) = {
+        let mut pairs = Vec::new();
+        let mut matches = Vec::new();
+        for part in &res.outputs {
+            for (_, v) in part {
+                match v {
+                    SnVal::Pair(p) => pairs.push(*p),
+                    SnVal::Match(m) => matches.push(*m),
+                    SnVal::Entity(_) => unreachable!(),
+                }
+            }
+        }
+        (pairs, matches, ())
+    };
+    let profile = JobProfile::from_stats(
+        &res.stats,
+        res.counters
+            .get(crate::mapreduce::counters::names::MAP_OUTPUT_BYTES),
+    );
+    Ok(SnResult {
+        pairs,
+        matches,
+        counters: Arc::clone(&res.counters),
+        stats: vec![res.stats.clone()],
+        profiles: vec![profile],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::blockkey::TitlePrefixKey;
+
+    #[test]
+    fn blocks_compare_within_key_only() {
+        let entities: Vec<Entity> = [
+            (1, "aa x"), (2, "aa y"), (3, "aa z"), (4, "bb x"), (5, "bb y"),
+        ]
+        .iter()
+        .map(|&(id, t)| Entity::new(id, t, ""))
+        .collect();
+        let cfg = SnConfig {
+            num_map_tasks: 2,
+            workers: 2,
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            ..Default::default()
+        };
+        let res = run(&entities, &cfg).unwrap();
+        let set = res.pair_set();
+        // C(3,2) + C(2,2)... C(3,2)=3 within "aa", C(2,2)=1 within "bb"
+        assert_eq!(set.len(), 4);
+        assert!(set.contains(&Pair::new(1, 2)));
+        assert!(set.contains(&Pair::new(4, 5)));
+        assert!(!set.contains(&Pair::new(3, 4)), "cross-block pair generated");
+    }
+
+    #[test]
+    fn quadratic_in_block_size() {
+        // one hot key with 40 entities → C(40,2) comparisons: the skew
+        // problem §3/§5.3 describes
+        let entities: Vec<Entity> = (0..40).map(|i| Entity::new(i, "aa hot", "")).collect();
+        let cfg = SnConfig {
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            ..Default::default()
+        };
+        let res = run(&entities, &cfg).unwrap();
+        assert_eq!(res.pairs.len(), 40 * 39 / 2);
+    }
+}

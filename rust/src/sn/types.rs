@@ -1,0 +1,210 @@
+//! Shared types for the SN MapReduce jobs.
+
+use std::sync::Arc;
+
+use crate::er::blockkey::{BlockingKey, TitlePrefixKey};
+use crate::er::entity::{Entity, Pair, ScoredPair};
+use crate::er::strategy::MatchStrategyConfig;
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::engine::JobStats;
+use crate::mapreduce::sim::JobProfile;
+use crate::mapreduce::types::SizeEstimate;
+use crate::sn::partition::PartitionFn;
+
+/// The composite intermediate key of Algorithms 1–2.
+///
+/// * SRP (§4.1) uses `p(k).k` — here `bound == part == p(k)`.
+/// * RepSN (§4.3) uses `bound.p(k).k` where `bound` is the *destination*
+///   reduce partition (original entities: `bound = p(k)`; replicated:
+///   `bound = p(k) + 1`).
+/// * JobSN phase 2 (§4.2) uses `boundary.r_i.k`.
+///
+/// Repartitioning uses `bound`; grouping uses `bound`; sorting uses the
+/// full key.  `id` is the determinism tie-break (see [`crate::sn`] module
+/// docs) — it is *last*, so it never affects which partition or boundary
+/// an entity lands in.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SnKey {
+    pub bound: u32,
+    pub part: u32,
+    pub key: String,
+    pub id: u64,
+}
+
+impl SnKey {
+    /// SRP-style key: destination = home partition.
+    pub fn srp(part: u32, key: String, id: u64) -> Self {
+        Self {
+            bound: part,
+            part,
+            key,
+            id,
+        }
+    }
+}
+
+impl SizeEstimate for SnKey {
+    fn size_bytes(&self) -> usize {
+        4 + 4 + self.key.len() + 8
+    }
+}
+
+/// Values flowing out of SN reduce steps.
+#[derive(Debug, Clone)]
+pub enum SnVal {
+    /// A blocking correspondence (blocking mode output `B`).
+    Pair(Pair),
+    /// A matched pair with score (matching mode).
+    Match(ScoredPair),
+    /// A boundary entity re-emitted by JobSN phase 1.
+    Entity(Arc<Entity>),
+}
+
+impl SizeEstimate for SnVal {
+    fn size_bytes(&self) -> usize {
+        match self {
+            SnVal::Pair(p) => p.size_bytes(),
+            SnVal::Match(m) => m.size_bytes(),
+            SnVal::Entity(e) => e.size_bytes(),
+        }
+    }
+}
+
+/// What the reduce step does with window pairs.
+#[derive(Clone, Default)]
+pub enum SnMode {
+    /// Emit every sliding-window correspondence (the paper's output `B`,
+    /// used to compare blocking approaches).
+    #[default]
+    Blocking,
+    /// Apply the matching strategy and emit only matches (the full ER
+    /// workflow).
+    Matching(MatchStrategyConfig),
+}
+
+impl std::fmt::Debug for SnMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SnMode::Blocking => write!(f, "Blocking"),
+            SnMode::Matching(c) => write!(f, "Matching({c:?})"),
+        }
+    }
+}
+
+/// Configuration shared by all SN MapReduce variants.
+#[derive(Clone)]
+pub struct SnConfig {
+    /// Window size `w ≥ 2`.
+    pub window: usize,
+    /// Map tasks `m`.
+    pub num_map_tasks: usize,
+    /// Worker slots executing tasks concurrently (the number of reduce
+    /// *tasks* is fixed by the partition function — §5.2 runs 10 reduce
+    /// tasks on 8 slots).
+    pub workers: usize,
+    /// The monotonic partition function `p : k → i`.
+    pub partitioner: Arc<dyn PartitionFn>,
+    /// Blocking-key generator (paper: lowercased 2-letter title prefix).
+    pub blocking_key: Arc<dyn BlockingKey>,
+    /// Blocking-only or full matching.
+    pub mode: SnMode,
+}
+
+impl Default for SnConfig {
+    fn default() -> Self {
+        Self {
+            window: 3,
+            num_map_tasks: 1,
+            workers: 1,
+            partitioner: Arc::new(crate::sn::partition::EvenPartition::ascii(1)),
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            mode: SnMode::Blocking,
+        }
+    }
+}
+
+impl std::fmt::Debug for SnConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SnConfig")
+            .field("window", &self.window)
+            .field("num_map_tasks", &self.num_map_tasks)
+            .field("workers", &self.workers)
+            .field("partitions", &self.partitioner.num_partitions())
+            .field("mode", &self.mode)
+            .finish()
+    }
+}
+
+/// Result of an SN run (any variant).
+#[derive(Debug)]
+pub struct SnResult {
+    /// Blocking correspondences (Blocking mode; empty in Matching mode).
+    pub pairs: Vec<Pair>,
+    /// Matches (Matching mode; empty in Blocking mode).
+    pub matches: Vec<ScoredPair>,
+    /// Merged counters across all jobs of the variant.
+    pub counters: Arc<Counters>,
+    /// Engine statistics, one entry per MapReduce job executed
+    /// (RepSN/SRP: 1; JobSN: 2).
+    pub stats: Vec<JobStats>,
+    /// Simulator profiles, one per job (paired with `stats`).
+    pub profiles: Vec<JobProfile>,
+}
+
+impl SnResult {
+    /// Candidate/match pairs as a sorted, deduplicated set (for set
+    /// comparisons in tests and benches).
+    pub fn pair_set(&self) -> Vec<Pair> {
+        let mut v: Vec<Pair> = if self.pairs.is_empty() {
+            self.matches.iter().map(|m| m.pair).collect()
+        } else {
+            self.pairs.clone()
+        };
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+/// Counter names used by the SN jobs.
+pub mod counter_names {
+    pub const COMPARISONS: &str = "sn.window_comparisons";
+    pub const BOUNDARY_ENTITIES: &str = "sn.boundary_entities_emitted";
+    pub const REPLICATED_ENTITIES: &str = "sn.replicated_entities";
+    pub const REPLICAS_DISCARDED: &str = "sn.replicas_discarded_at_reduce";
+    pub const PAIRS_FILTERED_DUPLICATE: &str = "sn.pairs_filtered_duplicate";
+    pub const MATCHES: &str = "sn.matches";
+    pub const PAIRS_SKIPPED_SHORTCIRCUIT: &str = "sn.pairs_skipped_shortcircuit";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snkey_order_is_bound_part_key_id() {
+        let a = SnKey { bound: 1, part: 1, key: "b".into(), id: 9 };
+        let b = SnKey { bound: 1, part: 1, key: "c".into(), id: 1 };
+        let c = SnKey { bound: 2, part: 1, key: "a".into(), id: 1 };
+        let d = SnKey { bound: 1, part: 1, key: "b".into(), id: 10 };
+        assert!(a < b);
+        assert!(b < c);
+        assert!(a < d && d < b);
+    }
+
+    #[test]
+    fn srp_key_sets_bound_to_part() {
+        let k = SnKey::srp(3, "ab".into(), 7);
+        assert_eq!(k.bound, 3);
+        assert_eq!(k.part, 3);
+    }
+
+    #[test]
+    fn replicated_key_sorts_before_originals_of_next_partition() {
+        // RepSN: replica of partition 1 sent to reducer 2 must sort before
+        // every original of partition 2 regardless of blocking key.
+        let replica = SnKey { bound: 2, part: 1, key: "zz".into(), id: 0 };
+        let original = SnKey { bound: 2, part: 2, key: "aa".into(), id: 0 };
+        assert!(replica < original);
+    }
+}

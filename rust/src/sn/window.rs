@@ -1,0 +1,196 @@
+//! `StandardSN`: the sliding-window comparison generator (§4, Figure 4).
+//!
+//! A window of fixed size `w` moves over a key-sorted entity list; every
+//! pair of entities within distance `< w` is compared.  Streaming form:
+//! keep the previous `w−1` entities in a ring buffer; each arriving entity
+//! pairs with everything in the buffer.  This is exactly the row-by-row
+//! access pattern a Hadoop reduce iterator provides, which is why SN fits
+//! MapReduce reducers without memory blowup (§3 "memory bottlenecks").
+
+use std::collections::VecDeque;
+
+use crate::er::entity::Pair;
+
+/// Number of comparisons standard SN performs on `n` entities with window
+/// `w` (the paper's `(n − w/2)·(w−1)` for `n ≥ w`, exact integer form
+/// `(n−w)(w−1) + w(w−1)/2`; all `C(n,2)` pairs when `n < w`).
+pub fn expected_pair_count(n: usize, w: usize) -> usize {
+    if w < 2 || n < 2 {
+        return 0;
+    }
+    if n < w {
+        return n * (n - 1) / 2;
+    }
+    (n - w) * (w - 1) + w * (w - 1) / 2
+}
+
+/// Missing boundary pairs when SRP splits the sorted list into `r`
+/// partitions each holding ≥ w entities (§4.1): `(r−1)·w·(w−1)/2`.
+pub fn srp_missing_pairs(r: usize, w: usize) -> usize {
+    if w < 2 || r < 2 {
+        return 0;
+    }
+    (r - 1) * w * (w - 1) / 2
+}
+
+/// A streaming sliding window over items of type `T`.
+///
+/// `push` hands the new item and each buffered neighbor (oldest first) to
+/// the callback — one call per generated comparison.
+#[derive(Debug)]
+pub struct SlidingWindow<T> {
+    w: usize,
+    buffer: VecDeque<T>,
+    comparisons: u64,
+}
+
+impl<T> SlidingWindow<T> {
+    /// Window size `w ≥ 2` (a window of 1 compares nothing).
+    pub fn new(w: usize) -> Self {
+        assert!(w >= 2, "window must be >= 2");
+        Self {
+            w,
+            buffer: VecDeque::with_capacity(w),
+            comparisons: 0,
+        }
+    }
+
+    /// Seed the buffer *without* generating comparisons (RepSN seeds the
+    /// window with the predecessor's replicated boundary entities).
+    pub fn seed(&mut self, item: T) {
+        self.buffer.push_back(item);
+        if self.buffer.len() > self.w - 1 {
+            self.buffer.pop_front();
+        }
+    }
+
+    /// Push the next entity; `on_pair(older, newer)` fires for each
+    /// window comparison.
+    pub fn push<F: FnMut(&T, &T)>(&mut self, item: T, mut on_pair: F) {
+        for old in &self.buffer {
+            on_pair(old, &item);
+            self.comparisons += 1;
+        }
+        self.seed(item);
+    }
+
+    /// Total comparisons generated so far.
+    pub fn comparisons(&self) -> u64 {
+        self.comparisons
+    }
+
+    /// Current buffer length (≤ w−1).
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+}
+
+/// `StandardSN` over a key-sorted slice of entity ids: collect all window
+/// pairs.  (Algorithms 1–2 call this `StandardSN(list(entity), w)`.)
+pub fn standard_sn(sorted_ids: &[u64], w: usize) -> Vec<Pair> {
+    let mut out = Vec::with_capacity(expected_pair_count(sorted_ids.len(), w));
+    let mut win = SlidingWindow::new(w.max(2));
+    if w < 2 {
+        return out;
+    }
+    for &id in sorted_ids {
+        win.push(id, |&a, &b| out.push(Pair::new(a, b)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Figure 4: entities a,d,b,e,f,h,c,g,i sorted by key; w = 3 →
+    /// 15 pairs, exactly the ones listed in the figure.
+    #[test]
+    fn figure_4_example() {
+        // ids: a=1 d=4 b=2 e=5 f=6 h=8 c=3 g=7 i=9 (sorted order)
+        let sorted = [1u64, 4, 2, 5, 6, 8, 3, 7, 9];
+        let pairs = standard_sn(&sorted, 3);
+        assert_eq!(pairs.len(), 15);
+        assert_eq!(pairs.len(), expected_pair_count(9, 3));
+        let expect = [
+            (1, 4), (1, 2), (4, 2), // window a d b
+            (4, 5), (2, 5),         // d b e
+            (2, 6), (5, 6),         // b e f
+            (5, 8), (6, 8),         // e f h
+            (6, 3), (8, 3),         // f h c
+            (8, 7), (3, 7),         // h c g
+            (3, 9), (7, 9),         // c g i
+        ];
+        let got: std::collections::BTreeSet<Pair> = pairs.into_iter().collect();
+        for (a, b) in expect {
+            assert!(got.contains(&Pair::new(a, b)), "missing ({a},{b})");
+        }
+        assert_eq!(got.len(), 15);
+    }
+
+    #[test]
+    fn pair_count_formula() {
+        for (n, w) in [(9, 3), (100, 10), (1000, 50), (10, 10), (5, 2)] {
+            let ids: Vec<u64> = (0..n as u64).collect();
+            assert_eq!(
+                standard_sn(&ids, w).len(),
+                expected_pair_count(n, w),
+                "n={n} w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_n_gives_all_pairs() {
+        let ids = [1u64, 2, 3];
+        let pairs = standard_sn(&ids, 10);
+        assert_eq!(pairs.len(), 3); // C(3,2)
+    }
+
+    #[test]
+    fn window_distance_property() {
+        // every generated pair is within distance < w; every in-distance
+        // pair is generated exactly once
+        let n = 50;
+        let w = 7;
+        let ids: Vec<u64> = (0..n as u64).collect();
+        let pairs = standard_sn(&ids, w);
+        let set: std::collections::BTreeSet<Pair> = pairs.iter().copied().collect();
+        assert_eq!(set.len(), pairs.len(), "duplicates generated");
+        for i in 0..n as u64 {
+            for j in (i + 1)..n as u64 {
+                let within = (j - i) < w as u64;
+                assert_eq!(set.contains(&Pair::new(i, j)), within);
+            }
+        }
+    }
+
+    #[test]
+    fn seed_does_not_compare() {
+        let mut win = SlidingWindow::new(3);
+        win.seed(10u64);
+        win.seed(20);
+        let mut pairs = Vec::new();
+        win.push(30, |&a, &b| pairs.push((a, b)));
+        assert_eq!(pairs, vec![(10, 30), (20, 30)]);
+        assert_eq!(win.comparisons(), 2);
+    }
+
+    #[test]
+    fn seed_evicts_oldest() {
+        let mut win = SlidingWindow::new(3); // buffer holds 2
+        win.seed(1u64);
+        win.seed(2);
+        win.seed(3);
+        let mut pairs = Vec::new();
+        win.push(4, |&a, &b| pairs.push((a, b)));
+        assert_eq!(pairs, vec![(2, 4), (3, 4)]);
+    }
+
+    #[test]
+    fn srp_missing_formula() {
+        assert_eq!(srp_missing_pairs(2, 3), 3); // Figure 5: misses 3 pairs
+        assert_eq!(srp_missing_pairs(1, 100), 0);
+        assert_eq!(srp_missing_pairs(8, 10), 7 * 45);
+    }
+}

@@ -1,0 +1,226 @@
+//! Tiny command-line parser (`clap` is unavailable offline).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` style used by `snmr` and the bench binaries.  Unknown flags are
+//! an error so typos fail fast instead of silently running the default
+//! experiment.
+
+use std::collections::BTreeMap;
+
+/// A declared flag: `takes_value = false` makes it a boolean switch.
+#[derive(Debug, Clone)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+}
+
+/// Declare a value-taking flag.
+pub const fn flag(name: &'static str, help: &'static str) -> Flag {
+    Flag { name, help, takes_value: true }
+}
+
+/// Declare a boolean switch.
+pub const fn switch(name: &'static str, help: &'static str) -> Flag {
+    Flag { name, help, takes_value: false }
+}
+
+/// Parsed arguments: one optional subcommand, flags, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+    known: Vec<Flag>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable) with a set of known
+    /// flag names; `with_subcommand` controls whether the first bare token
+    /// is a subcommand or a positional.
+    pub fn parse_from(
+        tokens: &[String],
+        known_flags: &[Flag],
+        with_subcommand: bool,
+    ) -> Result<Args, String> {
+        let mut args = Args {
+            known: known_flags.to_vec(),
+            ..Default::default()
+        };
+        let mut it = tokens.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.check_known(k)?;
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    args.check_known(name)?;
+                    let takes_value = args
+                        .known
+                        .iter()
+                        .find(|f| f.name == name)
+                        .map(|f| f.takes_value)
+                        // unknown-but-allowed (empty spec): infer from shape
+                        .unwrap_or_else(|| {
+                            it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                        });
+                    if takes_value {
+                        let v = it.next().ok_or_else(|| {
+                            format!("--{name} expects a value\n{}", args.usage_flags())
+                        })?;
+                        args.flags.insert(name.to_string(), v.clone());
+                    } else {
+                        args.bools.push(name.to_string());
+                    }
+                }
+            } else if with_subcommand && args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]).
+    pub fn from_env(known_flags: &[Flag], with_subcommand: bool) -> Result<Args, String> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse_from(&tokens, known_flags, with_subcommand)
+    }
+
+    fn check_known(&self, name: &str) -> Result<(), String> {
+        if self.known.is_empty() || self.known.iter().any(|f| f.name == name) {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown flag --{name}\n{}",
+                self.usage_flags()
+            ))
+        }
+    }
+
+    pub fn usage_flags(&self) -> String {
+        let mut s = String::from("flags:\n");
+        for f in &self.known {
+            s.push_str(&format!("  --{:<18} {}\n", f.name, f.help));
+        }
+        s
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+            || self
+                .flags
+                .get(name)
+                .map(|v| v == "true" || v == "1")
+                .unwrap_or(false)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected float, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--workers 1,2,4,8`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = Args::parse_from(
+            &toks("run --workers 8 --verbose input.txt"),
+            &[flag("workers", ""), switch("verbose", "")],
+            true,
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get_usize("workers", 1).unwrap(), 8);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional, vec!["input.txt"]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::parse_from(&toks("--n=42"), &[flag("n", "")], false).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(Args::parse_from(&toks("--nope 1"), &[flag("yes", "")], false).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = Args::parse_from(&toks("--ws 1,2,4,8"), &[flag("ws", "")], false).unwrap();
+        assert_eq!(a.get_usize_list("ws", &[]).unwrap(), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from(&[], &[flag("x", "")], false).unwrap();
+        assert_eq!(a.get_usize("x", 7).unwrap(), 7);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert!(!a.get_bool("x"));
+    }
+
+    #[test]
+    fn underscores_in_numbers() {
+        let a = Args::parse_from(&toks("--n 1_400_000"), &[flag("n", "")], false).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 1_400_000);
+    }
+}

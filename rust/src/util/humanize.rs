@@ -1,0 +1,103 @@
+//! Human-readable formatting for reports and bench output.
+
+use std::time::Duration;
+
+/// `1234567` → `"1,234,567"`.
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Duration → `"1.5s"`, `"230ms"`, `"12.3µs"`, `"2m03s"`, `"1h02m"`.
+pub fn duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 3600.0 {
+        let h = (s / 3600.0).floor();
+        let m = ((s - h * 3600.0) / 60.0).round();
+        format!("{h:.0}h{m:02.0}m")
+    } else if s >= 60.0 {
+        let m = (s / 60.0).floor();
+        let sec = s - m * 60.0;
+        format!("{m:.0}m{sec:02.0}s")
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.1}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Bytes → `"1.2 GiB"` etc.
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Rate → `"1.2M pairs/s"` style.
+pub fn rate(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2}G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2}M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.1}k/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commas_formats() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn duration_formats() {
+        assert_eq!(duration(Duration::from_secs(7260)), "2h01m");
+        assert_eq!(duration(Duration::from_secs(123)), "2m03s");
+        assert_eq!(duration(Duration::from_millis(1500)), "1.50s");
+        assert_eq!(duration(Duration::from_millis(230)), "230.0ms");
+        assert_eq!(duration(Duration::from_micros(12)), "12.0µs");
+    }
+
+    #[test]
+    fn bytes_formats() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(1536), "1.5 KiB");
+        assert_eq!(bytes(128 * 1024 * 1024), "128.0 MiB");
+    }
+
+    #[test]
+    fn rate_formats() {
+        assert_eq!(rate(1_500_000.0), "1.50M/s");
+        assert_eq!(rate(2_500.0), "2.5k/s");
+        assert_eq!(rate(10.0), "10.0/s");
+    }
+}

@@ -1,0 +1,22 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline and the vendored crate set does
+//! not include `rand`, `clap`, `serde`, `rayon`, `criterion` or `proptest`,
+//! so this module provides the minimal, well-tested equivalents the rest of
+//! the crate needs:
+//!
+//! * [`rng`] — seeded SplitMix64 / Xoshiro256** PRNGs (deterministic
+//!   experiments are a hard requirement for the reproduction).
+//! * [`cli`] — a tiny `--flag value` argument parser for the binaries.
+//! * [`json`] — a JSON writer plus a small recursive-descent reader (used
+//!   for the artifact manifest and golden-vector parity tests).
+//! * [`threadpool`] — fixed-size worker pool used by the MapReduce engine.
+//! * [`prop`] — a miniature property-testing harness (seeded shrink-free
+//!   random case generation) used by the invariant tests.
+
+pub mod cli;
+pub mod humanize;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,160 @@
+//! Miniature property-testing harness (offline stand-in for `proptest`).
+//!
+//! Usage pattern (see `rust/tests/prop_sn.rs` for real cases):
+//!
+//! ```no_run
+//! use snmr::util::prop::Cases;
+//! Cases::new("window pairs formula", 200).run(|rng| {
+//!     let n = rng.range(1, 500);
+//!     // ... build inputs from rng, assert the invariant ...
+//!     assert!(n >= 1);
+//!     Ok(())
+//! });
+//! ```
+//!
+//! Failures report the case seed so the exact input can be replayed with
+//! `Cases::replay(seed, ...)`.  No shrinking — cases are kept small by
+//! construction instead.
+
+use super::rng::Rng;
+
+/// A named batch of randomized test cases.
+pub struct Cases {
+    name: String,
+    count: usize,
+    base_seed: u64,
+}
+
+impl Cases {
+    pub fn new(name: &str, count: usize) -> Self {
+        // Base seed is stable per property name so failures reproduce even
+        // without recording anything.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        Self {
+            name: name.to_string(),
+            count,
+            base_seed: h,
+        }
+    }
+
+    /// Override the seed (e.g. from the `SNMR_PROP_SEED` env var).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.base_seed = seed;
+        self
+    }
+
+    /// Run the property on `count` seeded cases; panics with the failing
+    /// seed on the first violation.
+    pub fn run<F>(&self, mut prop: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        for i in 0..self.count {
+            let case_seed = self
+                .base_seed
+                .wrapping_add((i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut rng = Rng::new(case_seed);
+            if let Err(msg) = prop(&mut rng) {
+                panic!(
+                    "property '{}' failed on case {} (seed {:#x}): {}",
+                    self.name, i, case_seed, msg
+                );
+            }
+        }
+    }
+
+    /// Re-run a single failing case by seed.
+    pub fn replay<F>(seed: u64, mut prop: F)
+    where
+        F: FnMut(&mut Rng) -> Result<(), String>,
+    {
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("replay(seed={seed:#x}) failed: {msg}");
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Equality helper with value printing.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {}  ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        Cases::new("always true", 50).run(|_| {
+            ran += 1;
+            Ok(())
+        });
+        assert_eq!(ran, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false' failed")]
+    fn failing_property_panics_with_seed() {
+        Cases::new("always false", 10).run(|_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first = Vec::new();
+        Cases::new("det", 5).run(|rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        Cases::new("det", 5).run(|rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn macros_work() {
+        fn prop(x: u32) -> Result<(), String> {
+            prop_assert!(x < 10, "x too big: {x}");
+            prop_assert_eq!(x % 2, 0);
+            Ok(())
+        }
+        assert!(prop(4).is_ok());
+        assert!(prop(12).is_err());
+        assert!(prop(3).is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Fixed-size worker pool over `std::thread` + channels.
+//!
+//! The MapReduce engine schedules map/reduce *tasks* onto a bounded number
+//! of worker *slots* — exactly the Hadoop model the paper configures ("each
+//! node was configured to run at most two map and reduce tasks in
+//! parallel").  `tokio`/`rayon` are unavailable offline; a small explicit
+//! pool is also easier to instrument with the per-slot busy-time metrics the
+//! cluster simulator is calibrated from.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed-size thread pool.  Jobs are executed FIFO; `join` blocks until
+/// all submitted jobs have completed.  Panics inside jobs are caught and
+/// surfaced by `join`.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size >= 1` workers.
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1, "pool needs at least one worker");
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let pending = Arc::clone(&pending);
+                let panics = Arc::clone(&panics);
+                std::thread::Builder::new()
+                    .name(format!("snmr-worker-{i}"))
+                    .spawn(move || worker_loop(rx, pending, panics))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            tx: Some(tx),
+            workers,
+            pending,
+            panics,
+        }
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx
+            .as_ref()
+            .expect("pool not shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Block until every submitted job has finished.  Returns the number of
+    /// jobs that panicked since the last call (0 = all clean).
+    pub fn join(&self) -> usize {
+        let (lock, cvar) = &*self.pending;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cvar.wait(n).unwrap();
+        }
+        self.panics.swap(0, Ordering::SeqCst)
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<Job>>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    panics: Arc<AtomicUsize>,
+) {
+    loop {
+        let job = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match job {
+            Err(_) => return, // sender dropped: shutdown
+            Ok(job) => {
+                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                    panics.fetch_add(1, Ordering::SeqCst);
+                }
+                let (lock, cvar) = &*pending;
+                let mut n = lock.lock().unwrap();
+                *n -= 1;
+                if *n == 0 {
+                    cvar.notify_all();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `tasks` (indexed closures) on `workers` threads and collect results
+/// in task order.  Convenience wrapper used by the engine's phases.
+pub fn run_indexed<T, F>(workers: usize, count: usize, f: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(usize) -> T + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let results: Arc<Mutex<Vec<Option<T>>>> =
+        Arc::new(Mutex::new((0..count).map(|_| None).collect()));
+    let pool = ThreadPool::new(workers.max(1));
+    for i in 0..count {
+        let f = Arc::clone(&f);
+        let results = Arc::clone(&results);
+        pool.execute(move || {
+            let r = f(i);
+            results.lock().unwrap()[i] = Some(r);
+        });
+    }
+    let panics = pool.join();
+    assert_eq!(panics, 0, "{panics} task(s) panicked");
+    Arc::try_unwrap(results)
+        .unwrap_or_else(|_| panic!("results still shared"))
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("task did not run"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(pool.join(), 0);
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn join_then_reuse() {
+        let pool = ThreadPool::new(2);
+        let c = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&c);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            assert_eq!(pool.join(), 0);
+            assert_eq!(c.load(Ordering::SeqCst), (round + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn panic_is_counted_not_fatal() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.execute(|| {});
+        assert_eq!(pool.join(), 1);
+        // pool still usable
+        pool.execute(|| {});
+        assert_eq!(pool.join(), 0);
+    }
+
+    #[test]
+    fn run_indexed_preserves_order() {
+        let out = run_indexed(3, 50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_is_sequential_total_order() {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let pool = ThreadPool::new(1);
+        for i in 0..20 {
+            let log = Arc::clone(&log);
+            pool.execute(move || log.lock().unwrap().push(i));
+        }
+        pool.join();
+        assert_eq!(*log.lock().unwrap(), (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,162 @@
+//! End-to-end pipeline integration: corpus → DFS sequence files → load →
+//! workflow (all strategies) → quality — the full Layer-3 path the CLI
+//! drives, plus determinism and skew-tooling checks.
+
+use std::sync::Arc;
+
+use snmr::data::corpus::{generate, CorpusConfig};
+use snmr::data::skew::skew_to_last_partition;
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
+use snmr::er::quality::Quality;
+use snmr::er::strategy::MatchStrategyConfig;
+use snmr::er::workflow::{run, BlockingStrategy, WorkflowConfig};
+use snmr::er::Entity;
+use snmr::mapreduce::dfs::{Dfs, DfsConfig};
+use snmr::mapreduce::seqfile;
+use snmr::mapreduce::sim::{simulate_job_chain, ClusterSpec};
+use snmr::sn::partition::{gini, partition_sizes, EvenPartition, RangePartition};
+use snmr::sn::types::SnConfig;
+
+fn corpus() -> snmr::data::corpus::Corpus {
+    generate(&CorpusConfig {
+        n_entities: 2_000,
+        dup_fraction: 0.2,
+        seed: 0xE2E7,
+        ..Default::default()
+    })
+}
+
+fn sn_config(entities: &[Entity], w: usize) -> SnConfig {
+    let bk = TitlePrefixKey::new(2);
+    SnConfig {
+        window: w,
+        num_map_tasks: 4,
+        workers: 2,
+        partitioner: Arc::new(RangePartition::balanced(entities, |e| bk.key(e), 6)),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: Default::default(),
+    }
+}
+
+#[test]
+fn dfs_seqfile_roundtrip_preserves_corpus() {
+    let c = corpus();
+    let records: Vec<_> = c.entities.iter().map(|e| e.to_record()).collect();
+    let bytes = seqfile::write_records(&records, true).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("snmr_e2e_{}", std::process::id()));
+    let mut dfs = Dfs::new(DfsConfig {
+        block_size: 64 * 1024,
+        replication: 2,
+        nodes: 4,
+        spill_dir: Some(dir.clone()),
+    });
+    dfs.write("/corpus.seq", bytes).unwrap();
+    assert!(dfs.blocks("/corpus.seq").unwrap().len() > 1, "multi-block file expected");
+
+    let back = seqfile::read_records(dfs.read("/corpus.seq").unwrap()).unwrap();
+    let entities: Vec<Entity> = back
+        .iter()
+        .map(|(k, v)| Entity::from_record(k, v).unwrap())
+        .collect();
+    assert_eq!(entities, c.entities);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn full_workflow_quality_repsn_beats_srp_recall() {
+    let c = corpus();
+    let truth = c.truth_pairs();
+    let sn = sn_config(&c.entities, 20);
+    let mut recalls = Vec::new();
+    for strategy in [BlockingStrategy::Srp, BlockingStrategy::RepSn] {
+        let cfg = WorkflowConfig::new(strategy, sn.clone())
+            .with_matching(MatchStrategyConfig::default());
+        let res = run(&c.entities, &cfg).unwrap();
+        let predicted: Vec<_> = res.matches.iter().map(|m| m.pair).collect();
+        let q = Quality::evaluate(&predicted, &truth);
+        assert!(q.precision() > 0.9, "{}: precision {}", strategy.name(), q.precision());
+        recalls.push((strategy.name(), q.recall()));
+    }
+    // RepSN sees strictly more candidate pairs than SRP → recall ≥ SRP
+    assert!(
+        recalls[1].1 >= recalls[0].1,
+        "RepSN recall {} < SRP recall {}",
+        recalls[1].1,
+        recalls[0].1
+    );
+}
+
+#[test]
+fn blocking_candidates_superset_relationships() {
+    let c = corpus();
+    let sn = sn_config(&c.entities, 8);
+    let srp = run(&c.entities, &WorkflowConfig::new(BlockingStrategy::Srp, sn.clone())).unwrap();
+    let rep = run(&c.entities, &WorkflowConfig::new(BlockingStrategy::RepSn, sn.clone())).unwrap();
+    let job = run(&c.entities, &WorkflowConfig::new(BlockingStrategy::JobSn, sn)).unwrap();
+    let srp_set: std::collections::BTreeSet<_> = srp.pair_set().into_iter().collect();
+    let rep_set: std::collections::BTreeSet<_> = rep.pair_set().into_iter().collect();
+    let job_set: std::collections::BTreeSet<_> = job.pair_set().into_iter().collect();
+    assert!(srp_set.is_subset(&rep_set));
+    assert_eq!(rep_set, job_set);
+}
+
+#[test]
+fn simulation_shows_sublinear_speedup_and_jobsn_setup_penalty() {
+    let c = corpus();
+    let sn = SnConfig {
+        workers: 1,
+        ..sn_config(&c.entities, 50)
+    };
+    let rep = run(&c.entities, &WorkflowConfig::new(BlockingStrategy::RepSn, sn.clone())).unwrap();
+    let job = run(&c.entities, &WorkflowConfig::new(BlockingStrategy::JobSn, sn)).unwrap();
+    let spec8 = ClusterSpec::paper_like(8);
+    let spec1 = ClusterSpec::paper_like(1);
+    let (_, rep1) = simulate_job_chain(&rep.profiles, &spec1);
+    let (_, rep8) = simulate_job_chain(&rep.profiles, &spec8);
+    let (_, job8) = simulate_job_chain(&job.profiles, &spec8);
+    let speedup = rep1 / rep8;
+    assert!(speedup > 1.0, "no speedup: {speedup}");
+    assert!(speedup < 8.0, "super-linear speedup is a bug: {speedup}");
+    // JobSN pays the second job's setup: with equal work it must be
+    // slower than RepSN by at least most of one setup charge
+    assert!(
+        job8 > rep8 + spec8.job_setup_s * 0.5,
+        "JobSN {job8} vs RepSN {rep8}"
+    );
+}
+
+#[test]
+fn skew_tooling_reproduces_table1_ladder_shape() {
+    let c = corpus();
+    let bk = TitlePrefixKey::new(2);
+    let p8 = EvenPartition::ascii(8);
+    let mut last = -1.0;
+    for pct in [0.40, 0.55, 0.70, 0.85] {
+        let mut entities = c.entities.clone();
+        skew_to_last_partition(&mut entities, &bk, &p8, pct, 1);
+        let g = gini(&partition_sizes(entities.iter().map(|e| bk.key(e)), &p8));
+        assert!(g > last, "gini must increase along the ladder");
+        last = g;
+    }
+    assert!(last > 0.6);
+}
+
+#[test]
+fn deterministic_end_to_end() {
+    let c1 = corpus();
+    let c2 = corpus();
+    let r1 = run(
+        &c1.entities,
+        &WorkflowConfig::new(BlockingStrategy::RepSn, sn_config(&c1.entities, 10))
+            .with_matching(MatchStrategyConfig::default()),
+    )
+    .unwrap();
+    let r2 = run(
+        &c2.entities,
+        &WorkflowConfig::new(BlockingStrategy::RepSn, sn_config(&c2.entities, 10))
+            .with_matching(MatchStrategyConfig::default()),
+    )
+    .unwrap();
+    assert_eq!(r1.pair_set(), r2.pair_set());
+}

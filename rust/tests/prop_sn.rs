@@ -1,0 +1,235 @@
+//! Property tests over the SN coordinator invariants (DESIGN.md §6).
+//!
+//! Uses the in-crate seeded property harness (`snmr::util::prop`): each
+//! property runs on hundreds of randomized corpora/configurations; a
+//! failure reports the case seed for replay.
+
+use std::sync::Arc;
+
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
+use snmr::er::entity::Entity;
+use snmr::sn::partition::{gini, partition_sizes, EvenPartition, PartitionFn, RangePartition};
+use snmr::sn::types::{counter_names, SnConfig, SnMode};
+use snmr::sn::window::{expected_pair_count, srp_missing_pairs};
+use snmr::sn::{jobsn, repsn, seq, srp};
+use snmr::util::prop::Cases;
+use snmr::util::rng::Rng;
+use snmr::{prop_assert, prop_assert_eq};
+
+/// Random corpus whose 2-letter keys spread over `key_span` distinct
+/// prefixes; `min_per_part` lets properties enforce the paper's
+/// "every partition holds ≥ w entities" assumption.
+fn random_entities(rng: &mut Rng, n: usize, key_span: usize) -> Vec<Entity> {
+    (0..n as u64)
+        .map(|i| {
+            let k = rng.range(0, key_span);
+            let c1 = (b'a' + (k / 5) as u8) as char;
+            let c2 = (b'a' + (k % 5) as u8) as char;
+            Entity::new(i, &format!("{c1}{c2} title {i}"), "abstract text")
+        })
+        .collect()
+}
+
+fn config(
+    entities: &[Entity],
+    w: usize,
+    m: usize,
+    r: usize,
+    workers: usize,
+) -> SnConfig {
+    let bk = TitlePrefixKey::new(2);
+    SnConfig {
+        window: w,
+        num_map_tasks: m,
+        workers,
+        partitioner: Arc::new(RangePartition::balanced(entities, |e| bk.key(e), r)),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+    }
+}
+
+fn min_partition_size(entities: &[Entity], p: &dyn PartitionFn) -> usize {
+    let bk = TitlePrefixKey::new(2);
+    partition_sizes(entities.iter().map(|e| bk.key(e)), p)
+        .into_iter()
+        .min()
+        .unwrap_or(0)
+}
+
+/// Invariant 1: RepSN == JobSN == sequential SN (pair sets), whenever
+/// every partition holds ≥ w−1 entities.
+#[test]
+fn prop_variants_equal_sequential() {
+    Cases::new("repsn/jobsn == seq", 60).run(|rng| {
+        let n = rng.range(50, 400);
+        let w = rng.range(2, 12);
+        let m = rng.range(1, 7);
+        let r = rng.range(1, 6);
+        let workers = rng.range(1, 4);
+        let entities = random_entities(rng, n, 20);
+        let cfg = config(&entities, w, m, r, workers);
+        if min_partition_size(&entities, cfg.partitioner.as_ref()) < w.saturating_sub(1) {
+            return Ok(()); // outside the paper's assumption — skip
+        }
+        let mut expect = seq::run_blocking(&entities, &TitlePrefixKey::new(2), w);
+        expect.sort_unstable();
+        expect.dedup();
+        let rep = repsn::run(&entities, &cfg).map_err(|e| e.to_string())?;
+        let job = jobsn::run(&entities, &cfg).map_err(|e| e.to_string())?;
+        prop_assert_eq!(rep.pair_set(), expect);
+        prop_assert_eq!(job.pair_set(), expect);
+        Ok(())
+    });
+}
+
+/// Invariant 2: the sequential pair-count formula `(n − w/2)(w − 1)`.
+#[test]
+fn prop_sequential_pair_count_formula() {
+    Cases::new("pair count formula", 200).run(|rng| {
+        let n = rng.range(2, 2000);
+        let w = rng.range(2, 60);
+        let entities = random_entities(rng, n, 25);
+        let pairs = seq::run_blocking(&entities, &TitlePrefixKey::new(2), w);
+        prop_assert_eq!(pairs.len(), expected_pair_count(n, w));
+        Ok(())
+    });
+}
+
+/// Invariant 3: SRP misses exactly `(r−1)·w·(w−1)/2` pairs under the
+/// partition-size assumption (every partition ≥ w).
+#[test]
+fn prop_srp_missing_formula() {
+    Cases::new("srp missing pairs", 60).run(|rng| {
+        let n = rng.range(100, 600);
+        let w = rng.range(2, 8);
+        let r = rng.range(2, 5);
+        let entities = random_entities(rng, n, 20);
+        let cfg = config(&entities, w, rng.range(1, 5), r, 2);
+        if min_partition_size(&entities, cfg.partitioner.as_ref()) < w {
+            return Ok(());
+        }
+        let seq_count = seq::run_blocking(&entities, &TitlePrefixKey::new(2), w).len();
+        let srp_res = srp::run(&entities, &cfg).map_err(|e| e.to_string())?;
+        prop_assert_eq!(seq_count - srp_res.pair_set().len(), srp_missing_pairs(r, w));
+        Ok(())
+    });
+}
+
+/// Invariant 4: RepSN replication counter ≤ m·(r−1)·(w−1).
+#[test]
+fn prop_replication_bound() {
+    Cases::new("replication bound", 60).run(|rng| {
+        let n = rng.range(50, 500);
+        let w = rng.range(2, 10);
+        let m = rng.range(1, 8);
+        let r = rng.range(1, 6);
+        let entities = random_entities(rng, n, 18);
+        let cfg = config(&entities, w, m, r, 2);
+        let res = repsn::run(&entities, &cfg).map_err(|e| e.to_string())?;
+        let replicated = res.counters.get(counter_names::REPLICATED_ENTITIES);
+        let bound = (m * (r - 1) * (w - 1)) as u64;
+        prop_assert!(
+            replicated <= bound,
+            "replicated {replicated} > bound {bound} (m={m} r={r} w={w})"
+        );
+        Ok(())
+    });
+}
+
+/// Invariant: results are independent of m and workers (pure parallelism).
+#[test]
+fn prop_result_independent_of_parallelism() {
+    Cases::new("m/workers invariance", 40).run(|rng| {
+        let n = rng.range(60, 300);
+        let w = rng.range(2, 8);
+        let r = rng.range(1, 5);
+        let entities = random_entities(rng, n, 15);
+        let base = repsn::run(&entities, &config(&entities, w, 1, r, 1))
+            .map_err(|e| e.to_string())?
+            .pair_set();
+        for _ in 0..2 {
+            let m = rng.range(2, 9);
+            let workers = rng.range(1, 5);
+            let res = repsn::run(&entities, &config(&entities, w, m, r, workers))
+                .map_err(|e| e.to_string())?;
+            prop_assert_eq!(res.pair_set(), base.clone());
+        }
+        Ok(())
+    });
+}
+
+/// Partition functions are monotone and total.
+#[test]
+fn prop_partitioners_monotone() {
+    Cases::new("partitioner monotonicity", 100).run(|rng| {
+        let k = rng.range(1, 12);
+        let p = EvenPartition::ascii(k);
+        let n = rng.range(2, 40);
+        let mut keys: Vec<String> = (0..n)
+            .map(|_| {
+                let c1 = (b'a' + rng.below(26) as u8) as char;
+                let c2 = (b'0' + rng.below(10) as u8) as char;
+                format!("{c1}{c2}")
+            })
+            .collect();
+        keys.sort();
+        let mut last = 0usize;
+        for key in &keys {
+            let i = p.partition(key);
+            prop_assert!(i < k, "partition {i} out of range {k}");
+            prop_assert!(i >= last, "non-monotone at {key}");
+            last = i;
+        }
+        Ok(())
+    });
+}
+
+/// Gini coefficient: bounded, zero on equality, monotone under transfers
+/// from smaller to larger partitions.
+#[test]
+fn prop_gini_properties() {
+    Cases::new("gini", 200).run(|rng| {
+        let n = rng.range(2, 20);
+        let sizes: Vec<usize> = (0..n).map(|_| rng.range(0, 1000)).collect();
+        let g = gini(&sizes);
+        prop_assert!((0.0..1.0 + 1e-9).contains(&g), "g={g}");
+        let equal: Vec<usize> = vec![rng.range(1, 100); n];
+        prop_assert!(gini(&equal).abs() < 1e-9);
+        // transfer from a smaller to a larger partition cannot reduce g
+        let mut more = sizes.clone();
+        let (mut lo, mut hi) = (0usize, 0usize);
+        for (i, &s) in sizes.iter().enumerate() {
+            if s <= sizes[lo] {
+                lo = i;
+            }
+            if s >= sizes[hi] {
+                hi = i;
+            }
+        }
+        if lo != hi && more[lo] > 0 {
+            more[lo] -= 1;
+            more[hi] += 1;
+            prop_assert!(gini(&more) >= g - 1e-12, "transfer reduced gini");
+        }
+        Ok(())
+    });
+}
+
+/// JobSN phase-2 never produces duplicates of phase-1 pairs.
+#[test]
+fn prop_jobsn_no_duplicate_pairs() {
+    Cases::new("jobsn dedup", 50).run(|rng| {
+        let n = rng.range(50, 300);
+        let w = rng.range(2, 8);
+        let r = rng.range(2, 5);
+        let entities = random_entities(rng, n, 16);
+        let cfg = config(&entities, w, rng.range(1, 5), r, 2);
+        let res = jobsn::run(&entities, &cfg).map_err(|e| e.to_string())?;
+        let mut sorted = res.pairs.clone();
+        sorted.sort_unstable();
+        let before = sorted.len();
+        sorted.dedup();
+        prop_assert_eq!(before, sorted.len());
+        Ok(())
+    });
+}

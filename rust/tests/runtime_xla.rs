@@ -1,0 +1,169 @@
+//! Integration: the AOT-compiled XLA matcher agrees with the native
+//! matcher, bit-for-decision.  Requires `artifacts/` (run `make artifacts`
+//! first); tests are skipped with a notice when artifacts are missing so
+//! `cargo test` stays usable before the Python build step.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use snmr::data::corpus::{generate, CorpusConfig};
+use snmr::er::matcher::{NativeScorer, PairScorer, THRESHOLD};
+use snmr::er::strategy::MatchStrategyConfig;
+use snmr::runtime::encode::{encode_entity, Encoded};
+use snmr::runtime::matcher_exec::XlaMatcher;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("SNMR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+fn sample_pairs(n: usize) -> Vec<(Encoded, Encoded)> {
+    let corpus = generate(&CorpusConfig {
+        n_entities: n * 2,
+        dup_fraction: 0.3,
+        seed: 0xA11CE,
+        ..Default::default()
+    });
+    (0..n)
+        .map(|i| {
+            let a = &corpus.entities[2 * i];
+            let b = &corpus.entities[2 * i + 1];
+            (
+                encode_entity(&a.title, &a.abstract_text),
+                encode_entity(&b.title, &b.abstract_text),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn xla_matcher_loads_and_scores() {
+    let Some(dir) = artifact_dir() else { return };
+    let matcher = XlaMatcher::load(&dir).expect("load artifacts");
+    assert!(matcher.preferred_batch() >= 64);
+    let pairs = sample_pairs(10);
+    let refs: Vec<(&Encoded, &Encoded)> = pairs.iter().map(|(a, b)| (a, b)).collect();
+    let scores = matcher.score_pairs(&refs);
+    assert_eq!(scores.len(), 10);
+    for s in &scores {
+        assert!((0.0..=1.0 + 1e-6).contains(&s.score), "score {}", s.score);
+        assert!((0.0..=1.0 + 1e-6).contains(&s.sim_title));
+        assert!((0.0..=1.0 + 1e-6).contains(&s.sim_abstract));
+    }
+}
+
+#[test]
+fn xla_agrees_with_native_scorer() {
+    let Some(dir) = artifact_dir() else { return };
+    let xla = XlaMatcher::load(&dir).expect("load artifacts");
+    let native = NativeScorer {
+        short_circuit: false, // full scores for exact comparison
+    };
+    let pairs = sample_pairs(300);
+    let refs: Vec<(&Encoded, &Encoded)> = pairs.iter().map(|(a, b)| (a, b)).collect();
+    let xs = xla.score_pairs(&refs);
+    let ns = native.score_pairs(&refs);
+    for (i, (x, n)) in xs.iter().zip(&ns).enumerate() {
+        assert!(
+            (x.score - n.score).abs() < 1e-5,
+            "pair {i}: xla {} vs native {}",
+            x.score,
+            n.score
+        );
+        assert!((x.sim_title - n.sim_title).abs() < 1e-5, "pair {i} title");
+        assert!(
+            (x.sim_abstract - n.sim_abstract).abs() < 1e-5,
+            "pair {i} abstract"
+        );
+        assert_eq!(x.skipped, n.skipped, "pair {i} skip predicate");
+        assert_eq!(
+            x.score >= THRESHOLD,
+            n.score >= THRESHOLD,
+            "pair {i} decision"
+        );
+    }
+}
+
+#[test]
+fn identical_pair_scores_one_via_xla() {
+    let Some(dir) = artifact_dir() else { return };
+    let xla = XlaMatcher::load(&dir).expect("load artifacts");
+    let e = encode_entity(
+        "parallel sorted neighborhood blocking with mapreduce",
+        "cloud infrastructures enable the efficient parallel execution",
+    );
+    let scores = xla.score_pairs(&[(&e, &e)]);
+    assert!((scores[0].score - 1.0).abs() < 1e-6);
+    assert!(!scores[0].skipped);
+}
+
+#[test]
+fn batch_padding_and_chunking_are_transparent() {
+    let Some(dir) = artifact_dir() else { return };
+    let xla = XlaMatcher::load(&dir).expect("load artifacts");
+    let pairs = sample_pairs(70); // > b64, < b256 → padding in one variant
+    let refs: Vec<(&Encoded, &Encoded)> = pairs.iter().map(|(a, b)| (a, b)).collect();
+    let all = xla.score_pairs(&refs);
+    // score one-by-one must give identical results
+    for (i, pr) in refs.iter().enumerate() {
+        let single = xla.score_pairs(&[*pr]);
+        assert!(
+            (single[0].score - all[i].score).abs() < 1e-6,
+            "pair {i} batch-size dependence"
+        );
+    }
+}
+
+#[test]
+fn end_to_end_repsn_with_xla_matcher_matches_native_decisions() {
+    let Some(dir) = artifact_dir() else { return };
+    use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
+    use snmr::sn::partition::RangePartition;
+    use snmr::sn::types::{SnConfig, SnMode};
+
+    let corpus = generate(&CorpusConfig {
+        n_entities: 800,
+        dup_fraction: 0.2,
+        seed: 0xE2E,
+        ..Default::default()
+    });
+    let partitioner = Arc::new(RangePartition::balanced(
+        &corpus.entities,
+        |e| TitlePrefixKey::new(2).key(e),
+        4,
+    ));
+    let mk_cfg = |scorer: Arc<dyn PairScorer>| SnConfig {
+        window: 10,
+        num_map_tasks: 4,
+        workers: 1,
+        partitioner: partitioner.clone(),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Matching(MatchStrategyConfig {
+            threshold: THRESHOLD,
+            scorer,
+        }),
+    };
+    let res_native = snmr::sn::repsn::run(
+        &corpus.entities,
+        &mk_cfg(Arc::new(NativeScorer::default())),
+    )
+    .unwrap();
+    let res_xla = snmr::sn::repsn::run(
+        &corpus.entities,
+        &mk_cfg(Arc::new(XlaMatcher::load(&dir).unwrap())),
+    )
+    .unwrap();
+    let native_pairs = res_native.pair_set();
+    let xla_pairs = res_xla.pair_set();
+    assert_eq!(native_pairs, xla_pairs, "match decisions diverge");
+    assert!(!native_pairs.is_empty());
+}
