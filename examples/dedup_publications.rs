@@ -95,6 +95,7 @@ fn main() -> anyhow::Result<()> {
             threshold: snmr::er::matcher::THRESHOLD,
             scorer,
         }),
+        sort_buffer_records: None,
     };
     let truth = corpus.truth_pairs();
     let mut table = Table::new(

@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         partitioner,
         blocking_key: Arc::new(key),
         mode: SnMode::Matching(MatchStrategyConfig::default()),
+        sort_buffer_records: None,
     };
     let t0 = std::time::Instant::now();
     let result = repsn::run(&corpus.entities, &cfg)?;

@@ -81,6 +81,7 @@ fn main() -> anyhow::Result<()> {
             partitioner: Arc::clone(p),
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
+            sort_buffer_records: None,
         };
         let t0 = std::time::Instant::now();
         let res = repsn::run(entities, &cfg)?;

@@ -1,21 +1,109 @@
-//! A2: engine ablations — sequence-file compression on/off, sort and
-//! shuffle-merge costs, and the per-job overhead that differentiates
-//! JobSN from RepSN.
+//! A2: engine ablations — sequence-file compression on/off, map-side sort
+//! cost, the streaming shuffle pipeline vs the old materializing data
+//! path, and combiner-on vs combiner-off shuffle volume.
+//!
+//! Writes the human-readable table to stdout, the row dump to
+//! `reports/engine_ablation.json`, and the perf-trajectory summary to
+//! `BENCH_engine.json` (consumed by `scripts/bench.sh` / CI).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use snmr::data::corpus::{generate, CorpusConfig};
+use snmr::mapreduce::counters::names;
 use snmr::mapreduce::seqfile;
-use snmr::mapreduce::shuffle::merge_sorted_runs;
+use snmr::mapreduce::shuffle::{merge_sorted_runs, MergeIter};
+use snmr::mapreduce::{
+    run_job, run_job_with_combiner, Counters, Emitter, FnCombiner, FnMapTask, FnReduceTask,
+    HashPartitioner, JobConfig, ValuesIter,
+};
 use snmr::metrics::report::{write_report, Table};
 use snmr::util::cli::{flag, switch, Args};
 use snmr::util::humanize;
 use snmr::util::json::Json;
 use snmr::util::rng::Rng;
+use snmr::util::threadpool::run_owned;
+
+/// Sorted random runs for `r` reducers × `m` map tasks.
+fn gen_bundles(rng: &mut Rng, r: usize, m: usize, per_run: usize) -> Vec<Vec<Vec<(u64, u64)>>> {
+    (0..r)
+        .map(|_| {
+            (0..m)
+                .map(|_| {
+                    let mut run: Vec<(u64, u64)> = (0..per_run)
+                        .map(|_| (rng.below(100_000), rng.below(16)))
+                        .collect();
+                    run.sort_unstable_by_key(|(k, _)| *k);
+                    run
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The pre-streaming data path: serial driver-side merge materializing one
+/// `Vec` per reducer, then a parallel reduce that unzips into key/value
+/// vectors and walks group slices — exactly what the old engine did.
+fn materializing_path(bundles: Vec<Vec<Vec<(u64, u64)>>>, workers: usize) -> (f64, u64) {
+    let t0 = Instant::now();
+    let merged: Vec<Vec<(u64, u64)>> = bundles.into_iter().map(merge_sorted_runs).collect();
+    let sums: Vec<u64> = run_owned(workers, merged, |_j, run: Vec<(u64, u64)>| {
+        let mut keys = Vec::with_capacity(run.len());
+        let mut vals = Vec::with_capacity(run.len());
+        for (k, v) in run {
+            keys.push(k);
+            vals.push(v);
+        }
+        let mut acc = 0u64;
+        let mut start = 0;
+        while start < keys.len() {
+            let mut end = start + 1;
+            while end < keys.len() && keys[end] == keys[start] {
+                end += 1;
+            }
+            acc = acc.wrapping_add(vals[start..end].iter().sum::<u64>() ^ keys[start]);
+            start = end;
+        }
+        acc
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    (secs, sums.iter().fold(0u64, |a, s| a.wrapping_add(*s)))
+}
+
+/// The streaming path: each reducer lazily k-way-merges its runs inside
+/// its own task (parallel), buffering only the current group's values.
+fn streaming_path(bundles: Vec<Vec<Vec<(u64, u64)>>>, workers: usize) -> (f64, u64) {
+    let t0 = Instant::now();
+    let sums: Vec<u64> = run_owned(workers, bundles, |_j, runs: Vec<Vec<(u64, u64)>>| {
+        let mut merge = MergeIter::new(runs);
+        let mut acc = 0u64;
+        let mut group_vals: Vec<u64> = Vec::new();
+        let mut next = merge.next();
+        while let Some((gk, gv)) = next.take() {
+            group_vals.clear();
+            group_vals.push(gv);
+            for (k, v) in merge.by_ref() {
+                if k == gk {
+                    group_vals.push(v);
+                } else {
+                    next = Some((k, v));
+                    break;
+                }
+            }
+            acc = acc.wrapping_add(group_vals.iter().sum::<u64>() ^ gk);
+        }
+        acc
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    (secs, sums.iter().fold(0u64, |a, s| a.wrapping_add(*s)))
+}
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&[switch("bench", "(cargo)"), flag("n", "corpus size (default 50000)")], false)
-        .map_err(anyhow::Error::msg)?;
+    let args = Args::from_env(
+        &[switch("bench", "(cargo)"), flag("n", "corpus size (default 50000)")],
+        false,
+    )
+    .map_err(anyhow::Error::msg)?;
     let n = args.get_usize("n", 50_000).map_err(anyhow::Error::msg)?;
 
     let corpus = generate(&CorpusConfig {
@@ -60,29 +148,134 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let t0 = Instant::now();
     keys.sort_unstable();
-    push(&mut table, &mut rows, "map-sort", &format!("{n} composite keys"),
-         humanize::duration(t0.elapsed()));
+    push(
+        &mut table,
+        &mut rows,
+        "map-sort",
+        &format!("{n} composite keys"),
+        humanize::duration(t0.elapsed()),
+    );
 
-    // --- shuffle merge -------------------------------------------------------
-    let run_count = 8;
-    let runs: Vec<Vec<(u64, u64)>> = (0..run_count)
-        .map(|r| {
-            let mut v: Vec<(u64, u64)> = (0..n / run_count)
-                .map(|_| (rng.below(1_000_000), 0u64))
-                .collect();
-            v.sort_unstable();
-            let _ = r;
-            v
-        })
+    // --- shuffle+reduce: streaming vs materializing ------------------------
+    // r reducers × m map-task runs each; the materializing baseline merges
+    // all reducers serially on the driver (the old shuffle_phase stall),
+    // the streaming pipeline merges inside the parallel reduce tasks.
+    let r = 8;
+    let m = 8;
+    let per_run = (n / (r * m)).max(1_000);
+    let bundles = gen_bundles(&mut rng, r, m, per_run);
+    let mut sweep_rows = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let (base_secs, base_sum) = materializing_path(bundles.clone(), workers);
+        let (stream_secs, stream_sum) = streaming_path(bundles.clone(), workers);
+        assert_eq!(base_sum, stream_sum, "paths must agree");
+        let speedup = base_secs / stream_secs.max(1e-9);
+        push(
+            &mut table,
+            &mut rows,
+            "shuffle+reduce",
+            &format!("{} recs, w={workers} (materializing / streaming)", r * m * per_run),
+            format!("{:.1}ms / {:.1}ms ({speedup:.2}x)", base_secs * 1e3, stream_secs * 1e3),
+        );
+        sweep_rows.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("records", Json::num((r * m * per_run) as f64)),
+            ("materializing_secs", Json::num(base_secs)),
+            ("streaming_secs", Json::num(stream_secs)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+
+    // --- combiner on/off: blocking-key histogram job ------------------------
+    // The statistics job the Manual partitioner depends on: count entities
+    // per 2-letter blocking-key prefix.  Classic combiner material.
+    let hist_input: Vec<((), String)> = corpus
+        .entities
+        .iter()
+        .map(|e| ((), e.title.clone()))
         .collect();
+    let mapper = Arc::new(FnMapTask::new(
+        |_k: (), title: String, out: &mut Emitter<String, u64>, _c: &Counters| {
+            let prefix: String = title.chars().take(2).collect();
+            out.emit(prefix.to_lowercase(), 1);
+        },
+    ));
+    let reducer = Arc::new(FnReduceTask::new(
+        |k: &String, vals: ValuesIter<'_, u64>, out: &mut Emitter<String, u64>, _c: &Counters| {
+            out.emit(k.clone(), vals.map(|v| *v).sum());
+        },
+    ));
+    let cfg = JobConfig::named("key-histogram").with_tasks(8, 4).with_workers(4);
+    let grouping = Arc::new(|a: &String, b: &String| a == b);
+    let hash = |k: &String| {
+        // FNV-1a
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in k.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        h
+    };
     let t0 = Instant::now();
-    let merged = merge_sorted_runs(runs);
-    push(&mut table, &mut rows, "shuffle-merge",
-         &format!("{} records / {run_count} runs", merged.len()),
-         humanize::duration(t0.elapsed()));
+    let off = run_job(
+        &cfg,
+        hist_input.clone(),
+        mapper.clone(),
+        Arc::new(HashPartitioner::new(hash)),
+        grouping.clone(),
+        reducer.clone(),
+    );
+    let off_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let on = run_job_with_combiner(
+        &cfg,
+        hist_input,
+        mapper,
+        Arc::new(HashPartitioner::new(hash)),
+        grouping,
+        reducer,
+        Arc::new(FnCombiner::new(|_k: &String, vals: Vec<u64>, _c: &Counters| {
+            vec![vals.into_iter().sum()]
+        })),
+    );
+    let on_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(off.outputs, on.outputs, "combiner must not change the histogram");
+    let sb_off = off.counters.get(names::SHUFFLE_BYTES);
+    let sb_on = on.counters.get(names::SHUFFLE_BYTES);
+    push(&mut table, &mut rows, "combiner(off)", "shuffle bytes", humanize::bytes(sb_off));
+    push(&mut table, &mut rows, "combiner(on)", "shuffle bytes", humanize::bytes(sb_on));
+    push(
+        &mut table,
+        &mut rows,
+        "combiner",
+        "reduce input records (off/on)",
+        format!(
+            "{} / {}",
+            off.counters.get(names::REDUCE_INPUT_RECORDS),
+            on.counters.get(names::REDUCE_INPUT_RECORDS)
+        ),
+    );
 
     println!("{}", table.render());
     let path = write_report("engine_ablation", &Json::Arr(rows))?;
     eprintln!("report written to {}", path.display());
+
+    // --- perf trajectory file -----------------------------------------------
+    let bench_json = Json::obj(vec![
+        ("bench", Json::str("engine_ablation")),
+        ("n", Json::num(n as f64)),
+        ("shuffle_reduce", Json::Arr(sweep_rows)),
+        (
+            "combiner_histogram",
+            Json::obj(vec![
+                ("shuffle_bytes_off", Json::num(sb_off as f64)),
+                ("shuffle_bytes_on", Json::num(sb_on as f64)),
+                ("secs_off", Json::num(off_secs)),
+                ("secs_on", Json::num(on_secs)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_engine.json", bench_json.to_string())?;
+    eprintln!("perf summary written to BENCH_engine.json");
     Ok(())
 }

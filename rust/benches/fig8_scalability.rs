@@ -75,6 +75,7 @@ fn main() -> anyhow::Result<()> {
             } else {
                 SnMode::Matching(MatchStrategyConfig::default())
             },
+            sort_buffer_records: None,
         };
         eprintln!("w={w}: running RepSN...");
         let t0 = std::time::Instant::now();

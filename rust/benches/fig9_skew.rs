@@ -100,6 +100,7 @@ fn main() -> anyhow::Result<()> {
             partitioner: Arc::clone(p),
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Matching(MatchStrategyConfig::default()),
+            sort_buffer_records: None,
         };
         eprintln!("running RepSN with {name} (g={g:.2})...");
         let res = repsn::run(entities, &cfg)?;

@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
                 partitioner: partitioner.clone(),
                 blocking_key: Arc::new(TitlePrefixKey::new(2)),
                 mode: SnMode::Blocking,
+                sort_buffer_records: None,
             };
             let srp_res = srp::run(&corpus.entities, &cfg)?;
             let rep_res = repsn::run(&corpus.entities, &cfg)?;

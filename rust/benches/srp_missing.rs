@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
                 partitioner,
                 blocking_key: Arc::new(TitlePrefixKey::new(2)),
                 mode: SnMode::Blocking,
+                sort_buffer_records: None,
             };
             let seq_pairs = seq::run_blocking(&corpus.entities, &bk, w).len();
             let srp_pairs = srp::run(&corpus.entities, &cfg)?.pair_set().len();

@@ -205,6 +205,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         partitioner,
         blocking_key: Arc::clone(&key),
         mode: Default::default(),
+        sort_buffer_records: None,
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {
@@ -257,6 +258,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         partitioner,
         blocking_key: Arc::clone(&key),
         mode: Default::default(),
+        sort_buffer_records: None,
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {

@@ -1,12 +1,16 @@
 //! Map-side combiners (Hadoop's `setCombinerClass`).
 //!
-//! A combiner pre-reduces each map task's sorted partition bucket before
-//! the shuffle, shrinking intermediate data for associative aggregations.
-//! The SN jobs themselves cannot use one (their reduce is not a per-key
-//! aggregation), but the engine supports it because (a) it is part of the
-//! Hadoop semantics the paper assumes, (b) auxiliary jobs — key histograms
-//! for the Manual partitioner, corpus statistics — are classic combiner
-//! material, and the A2 ablation measures exactly that saving.
+//! A combiner pre-reduces each map task's sorted runs before the shuffle,
+//! shrinking intermediate data for associative aggregations.  Wired into
+//! the engine through
+//! [`run_job_with_combiner`](crate::mapreduce::engine::run_job_with_combiner),
+//! which applies [`combine_sorted_bucket`] to every sealed sorted run
+//! before the shuffle transpose hands it to a reducer.  The SN jobs
+//! themselves cannot use one (their reduce is not a per-key aggregation),
+//! but (a) it is part of the Hadoop semantics the paper assumes,
+//! (b) auxiliary jobs — key histograms for the Manual partitioner, corpus
+//! statistics — are classic combiner material, and the A2 ablation
+//! (`benches/engine_ablation.rs`) measures exactly that saving.
 
 use std::sync::Arc;
 

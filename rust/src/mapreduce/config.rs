@@ -23,6 +23,15 @@ pub struct JobConfig {
     /// If true, the engine records per-task wall-clock timings (tiny
     /// overhead; on by default — the simulator needs them).
     pub record_task_timings: bool,
+    /// Map-side sort buffer budget, in records *per partition bucket*
+    /// (the `io.sort.mb` analogue).  `None` (default) keeps each bucket
+    /// resident and sorts it once; `Some(n)` drains emitted records into
+    /// bounded [`crate::mapreduce::sortspill::RunSorter`]s every `n`
+    /// records, each of which seals a sorted run at `n` records, so no
+    /// single sort ever touches more than `n` records.  Note the bound is
+    /// per bucket, not per task: a map task holds up to `n` records in
+    /// the emitter plus `n` unsorted per reduce partition.
+    pub sort_buffer_records: Option<usize>,
 }
 
 impl Default for JobConfig {
@@ -36,6 +45,7 @@ impl Default for JobConfig {
             // overhead; 6s is a common figure for Hadoop 0.20 job startup.
             sim_job_setup_s: 6.0,
             record_task_timings: true,
+            sort_buffer_records: None,
         }
     }
 }
@@ -60,6 +70,12 @@ impl JobConfig {
         self.workers = workers;
         self
     }
+
+    /// Set (or clear) the map-side sort budget; `Some(0)` is clamped to 1.
+    pub fn with_sort_buffer(mut self, records: Option<usize>) -> Self {
+        self.sort_buffer_records = records.map(|n| n.max(1));
+        self
+    }
 }
 
 #[cfg(test)]
@@ -73,6 +89,15 @@ mod tests {
         assert_eq!(c.num_map_tasks, 3);
         assert_eq!(c.num_reduce_tasks, 2);
         assert_eq!(c.workers, 4);
+        assert_eq!(c.sort_buffer_records, None);
+    }
+
+    #[test]
+    fn sort_buffer_clamped_to_one() {
+        let c = JobConfig::default().with_sort_buffer(Some(0));
+        assert_eq!(c.sort_buffer_records, Some(1));
+        let c = c.with_sort_buffer(None);
+        assert_eq!(c.sort_buffer_records, None);
     }
 
     #[test]

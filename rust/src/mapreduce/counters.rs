@@ -26,6 +26,13 @@ pub mod names {
     pub const REDUCE_INPUT_RECORDS: &str = "engine.reduce_input_records";
     pub const REDUCE_OUTPUT_RECORDS: &str = "engine.reduce_output_records";
     pub const SPILLED_RECORDS: &str = "engine.spilled_records";
+    /// Sorted runs sealed map-side (1 per bucket without a sort budget;
+    /// one per sealed chunk with one).
+    pub const MAP_SPILL_RUNS: &str = "engine.map_spill_runs";
+    /// Records entering / leaving the map-side combiner (only present
+    /// when the job registers one).
+    pub const COMBINE_INPUT_RECORDS: &str = "engine.combine_input_records";
+    pub const COMBINE_OUTPUT_RECORDS: &str = "engine.combine_output_records";
 }
 
 impl Counters {

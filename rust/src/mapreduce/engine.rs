@@ -1,26 +1,50 @@
-//! The job driver: split → map (+sort/partition) → shuffle → reduce.
+//! The job driver: split → map (+sort/combine/partition) → shuffle →
+//! reduce, as a streaming pipeline.
 //!
 //! Faithful to the Hadoop execution model at the semantics level the
 //! paper's algorithms require (see module docs on [`super`]), instrumented
 //! with the per-task wall-clock timings and byte counts the cluster
 //! simulator ([`super::sim`]) consumes.
+//!
+//! ## Intermediate data path
+//!
+//! Map tasks partition and sort their output into per-reducer *runs*
+//! (through the bounded [`RunSorter`] when a sort budget is configured,
+//! one stable sort per bucket otherwise), optionally pre-reduced by a
+//! map-side [`Combiner`].  The driver's shuffle step only *transposes*
+//! run ownership — reducer `j` receives every map task's bucket-`j` runs,
+//! in map-task order — without touching a single record.  Each reduce
+//! task then drives its own lazy k-way [`MergeIter`] over those runs, so
+//! the merged stream is never materialized and the k-way merges of all
+//! reducers run in parallel on the worker pool instead of serially on the
+//! driver.  Task inputs and outputs travel through atomic
+//! [`OnceSlots`](crate::util::threadpool::OnceSlots) (via [`run_owned`]),
+//! so workers never contend on a shared lock for the handoff.
 
 use std::sync::atomic::AtomicU64;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
+use super::combiner::{combine_sorted_bucket, Combiner};
 use super::config::JobConfig;
 use super::counters::{names, Counters};
-use super::shuffle::merge_sorted_runs;
+use super::shuffle::MergeIter;
+use super::sortspill::RunSorter;
 use super::splits::even_splits;
 use super::types::{
     Emitter, MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate, ValuesIter,
 };
-use crate::util::threadpool::run_indexed;
+use crate::util::threadpool::run_owned;
 
 /// Grouping comparator: `true` if two (adjacent, sort-ordered) keys belong
 /// to the same reduce *group* (Hadoop's value-grouping comparator).
 pub type GroupFn<KT> = Arc<dyn Fn(&KT, &KT) -> bool + Send + Sync>;
+
+/// Type-erased map-side combine step: folds one sorted run in place,
+/// returning `(records_in, records_out)`.  Built by
+/// [`run_job_with_combiner`] so the `Clone` bound the fold needs stays off
+/// the combiner-less [`run_job`] path.
+type CombineFn<K, V> = Arc<dyn Fn(&mut Vec<(K, V)>, &Counters) -> (u64, u64) + Send + Sync>;
 
 /// Per-job measured statistics (feed the simulator and the reports).
 #[derive(Debug, Clone, Default)]
@@ -28,11 +52,14 @@ pub struct JobStats {
     /// Wall time of each map task, in seconds, indexed by task id.
     pub map_task_secs: Vec<f64>,
     /// Wall time of each reduce task, in seconds, indexed by partition.
+    /// Includes that reducer's k-way merge, which streams inside the task.
     pub reduce_task_secs: Vec<f64>,
-    /// Estimated intermediate bytes routed to each reduce partition.
+    /// Estimated intermediate bytes routed to each reduce partition
+    /// (post-combine when a combiner is registered).
     pub shuffle_bytes_per_reducer: Vec<u64>,
-    /// Wall time of the whole map phase (tasks + sort), reduce phase, and
-    /// shuffle merge, as executed on the real worker pool.
+    /// Wall time of the whole map phase (tasks + sort), reduce phase
+    /// (merge + reduce), and the driver's shuffle transpose, as executed
+    /// on the real worker pool.
     pub map_phase_secs: f64,
     pub shuffle_phase_secs: f64,
     pub reduce_phase_secs: f64,
@@ -56,6 +83,34 @@ impl<KO, VO> JobResult<KO, VO> {
     pub fn merged_output(self) -> Vec<(KO, VO)> {
         self.outputs.into_iter().flatten().collect()
     }
+}
+
+/// Key-order comparator for intermediate pairs (the map-side sort order).
+fn key_cmp<K: Ord, V>(a: &(K, V), b: &(K, V)) -> std::cmp::Ordering {
+    a.0.cmp(&b.0)
+}
+
+/// Drain every pair buffered in `out` into the per-partition sorters;
+/// returns the number of records drained.
+fn drain_emitter<KT, VT, C>(
+    out: &mut Emitter<KT, VT>,
+    partitioner: &dyn Partitioner<KT>,
+    r: usize,
+    sorters: &mut [RunSorter<(KT, VT), C>],
+) -> u64
+where
+    KT: SizeEstimate,
+    VT: SizeEstimate,
+    C: Fn(&(KT, VT), &(KT, VT)) -> std::cmp::Ordering,
+{
+    let pairs = out.take_pairs();
+    let n = pairs.len() as u64;
+    for (k, v) in pairs {
+        let p = partitioner.partition(&k, r);
+        assert!(p < r, "partitioner returned {p} for r={r}");
+        sorters[p].push((k, v));
+    }
+    n
 }
 
 /// Run one MapReduce job over an in-memory input.
@@ -82,17 +137,74 @@ where
     KO: Send + SizeEstimate + 'static,
     VO: Send + SizeEstimate + 'static,
 {
+    run_job_inner(config, input, mapper, partitioner, grouping, reducer, None)
+}
+
+/// As [`run_job`], with a map-side combiner (Hadoop's
+/// `setCombinerClass`): each sorted run is pre-reduced before the shuffle,
+/// shrinking `SHUFFLE_BYTES` for associative aggregations such as the
+/// key-histogram jobs the Manual partitioner is built from.  The reduce
+/// outputs are unchanged whenever the combiner is associative and
+/// key-preserving (Hadoop's contract).
+pub fn run_job_with_combiner<KI, VI, KT, VT, KO, VO>(
+    config: &JobConfig,
+    input: Vec<(KI, VI)>,
+    mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+    partitioner: Arc<dyn Partitioner<KT>>,
+    grouping: GroupFn<KT>,
+    reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+    combiner: Arc<dyn Combiner<KT, VT>>,
+) -> JobResult<KO, VO>
+where
+    KI: Send + 'static,
+    VI: Send + 'static,
+    KT: Ord + Clone + Send + SizeEstimate + 'static,
+    VT: Send + SizeEstimate + 'static,
+    KO: Send + SizeEstimate + 'static,
+    VO: Send + SizeEstimate + 'static,
+{
+    let combine_fn: CombineFn<KT, VT> = Arc::new(move |run: &mut Vec<(KT, VT)>, c: &Counters| {
+        combine_sorted_bucket(run, combiner.as_ref(), c)
+    });
+    run_job_inner(
+        config,
+        input,
+        mapper,
+        partitioner,
+        grouping,
+        reducer,
+        Some(combine_fn),
+    )
+}
+
+fn run_job_inner<KI, VI, KT, VT, KO, VO>(
+    config: &JobConfig,
+    input: Vec<(KI, VI)>,
+    mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+    partitioner: Arc<dyn Partitioner<KT>>,
+    grouping: GroupFn<KT>,
+    reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+    combine_fn: Option<CombineFn<KT, VT>>,
+) -> JobResult<KO, VO>
+where
+    KI: Send + 'static,
+    VI: Send + 'static,
+    KT: Ord + Send + SizeEstimate + 'static,
+    VT: Send + SizeEstimate + 'static,
+    KO: Send + SizeEstimate + 'static,
+    VO: Send + SizeEstimate + 'static,
+{
     let t_start = Instant::now();
     let counters = Arc::new(Counters::new());
     let m = config.num_map_tasks;
     let r = config.num_reduce_tasks;
+    let sort_budget = config.sort_buffer_records;
 
     // ---- split ------------------------------------------------------------
     let n_input = input.len();
     counters.add(names::MAP_INPUT_RECORDS, n_input as u64);
     let ranges = even_splits(n_input, m);
-    let mut splits: Vec<Option<Vec<(KI, VI)>>> = Vec::with_capacity(ranges.len());
-    {
+    let splits: Vec<Vec<(KI, VI)>> = {
         let mut rest = input;
         // carve from the back so we can use split_off without copying
         let mut carved: Vec<Vec<(KI, VI)>> = Vec::with_capacity(ranges.len());
@@ -100,55 +212,99 @@ where
             carved.push(rest.split_off(*start));
         }
         carved.reverse();
-        for c in carved {
-            splits.push(Some(c));
-        }
-    }
-    let actual_m = splits.len(); // may be < m for tiny inputs
+        carved // may have fewer than `m` splits for tiny inputs
+    };
 
     // ---- map phase ---------------------------------------------------------
-    // Each map task: configure → map* → close, then partition + sort each
-    // bucket (Hadoop sorts at spill time, map-side).
+    // Each map task: configure → map* → close; emitted records drain into
+    // per-partition RunSorters (Hadoop's map-side "sort & spill": every
+    // sealed chunk is one sorted run), then the combiner pre-reduces each
+    // run before it is handed to the shuffle.
     let t_map = Instant::now();
-    let splits = Arc::new(Mutex::new(splits));
     struct MapOut<KT, VT> {
-        buckets: Vec<Vec<(KT, VT)>>,
+        /// Sorted runs per reduce partition: one run per bucket without a
+        /// sort budget, one per sealed chunk with one.
+        bucket_runs: Vec<Vec<Vec<(KT, VT)>>>,
+        /// Post-combine intermediate bytes per reduce partition.
+        bucket_bytes: Vec<u64>,
         secs: f64,
         records: u64,
         bytes: u64,
+        spilled: u64,
+        spill_runs: u64,
+        combine_in: u64,
+        combine_out: u64,
     }
     let map_outputs: Vec<MapOut<KT, VT>> = {
-        let splits = Arc::clone(&splits);
         let mapper = Arc::clone(&mapper);
         let partitioner = Arc::clone(&partitioner);
         let counters = Arc::clone(&counters);
-        run_indexed(config.workers, actual_m, move |i| {
+        let combine_fn = combine_fn.clone();
+        run_owned(config.workers, splits, move |_i, split: Vec<(KI, VI)>| {
             let t0 = Instant::now();
-            let split = splits.lock().unwrap()[i].take().expect("split taken once");
+            let budget = sort_budget.unwrap_or(usize::MAX);
+            let mut sorters: Vec<_> = (0..r)
+                .map(|_| RunSorter::new(budget, key_cmp::<KT, VT>))
+                .collect();
             let mut task = mapper.create_task();
             let mut out = Emitter::new();
+            let mut records: u64 = 0;
             task.configure(&mut out, &counters);
+            if out.len() >= budget {
+                records += drain_emitter(&mut out, partitioner.as_ref(), r, &mut sorters);
+            }
             for (k, v) in split {
                 task.map(k, v, &mut out, &counters);
+                if out.len() >= budget {
+                    records += drain_emitter(&mut out, partitioner.as_ref(), r, &mut sorters);
+                }
             }
             task.close(&mut out, &counters);
-            let records = out.len() as u64;
+            records += drain_emitter(&mut out, partitioner.as_ref(), r, &mut sorters);
             let bytes = out.bytes();
-            // partition + sort (the map-side "sort & spill")
-            let mut buckets: Vec<Vec<(KT, VT)>> = (0..r).map(|_| Vec::new()).collect();
-            for (k, v) in out.into_pairs() {
-                let p = partitioner.partition(&k, r);
-                assert!(p < r, "partitioner returned {p} for r={r}");
-                buckets[p].push((k, v));
+
+            let mut bucket_runs: Vec<Vec<Vec<(KT, VT)>>> = Vec::with_capacity(r);
+            let mut spill_runs = 0u64;
+            for s in sorters {
+                let runs = s.into_runs();
+                spill_runs += runs.len() as u64;
+                bucket_runs.push(runs);
             }
-            for b in &mut buckets {
-                b.sort_by(|a, b| a.0.cmp(&b.0));
+            let (mut combine_in, mut combine_out) = (0u64, 0u64);
+            if let Some(cf) = combine_fn.as_ref() {
+                for runs in &mut bucket_runs {
+                    for run in runs.iter_mut() {
+                        let (ci, co) = cf(run, &counters);
+                        combine_in += ci;
+                        combine_out += co;
+                    }
+                }
+            }
+            let mut spilled = 0u64;
+            let bucket_bytes: Vec<u64> = bucket_runs
+                .iter()
+                .map(|runs| {
+                    runs.iter()
+                        .flatten()
+                        .map(|(k, v)| (k.size_bytes() + v.size_bytes()) as u64)
+                        .sum()
+                })
+                .collect();
+            for runs in &bucket_runs {
+                for run in runs {
+                    spilled += run.len() as u64;
+                }
             }
             MapOut {
-                buckets,
+                bucket_runs,
+                bucket_bytes,
                 secs: t0.elapsed().as_secs_f64(),
                 records,
                 bytes,
+                spilled,
+                spill_runs,
+                combine_in,
+                combine_out,
             }
         })
     };
@@ -163,34 +319,54 @@ where
     let map_bytes: u64 = map_outputs.iter().map(|o| o.bytes).sum();
     counters.add(names::MAP_OUTPUT_RECORDS, map_records);
     counters.add(names::MAP_OUTPUT_BYTES, map_bytes);
-    counters.add(names::SPILLED_RECORDS, map_records);
+    counters.add(
+        names::SPILLED_RECORDS,
+        map_outputs.iter().map(|o| o.spilled).sum(),
+    );
+    counters.add(
+        names::MAP_SPILL_RUNS,
+        map_outputs.iter().map(|o| o.spill_runs).sum(),
+    );
+    if combine_fn.is_some() {
+        counters.add(
+            names::COMBINE_INPUT_RECORDS,
+            map_outputs.iter().map(|o| o.combine_in).sum(),
+        );
+        counters.add(
+            names::COMBINE_OUTPUT_RECORDS,
+            map_outputs.iter().map(|o| o.combine_out).sum(),
+        );
+    }
     stats.map_output_records = map_records;
 
     // ---- shuffle -----------------------------------------------------------
-    // Transpose buckets: reducer j receives map task i's bucket j.
+    // Transpose run ownership only: reducer j receives every map task's
+    // bucket-j runs, appended in map-task order (the merge's stability
+    // contract).  No record is touched — the k-way merge itself streams
+    // inside each reduce task below.
     let t_shuffle = Instant::now();
     let mut per_reducer_runs: Vec<Vec<Vec<(KT, VT)>>> = (0..r).map(|_| Vec::new()).collect();
     let mut shuffle_bytes = vec![0u64; r];
     for mo in map_outputs {
-        for (j, bucket) in mo.buckets.into_iter().enumerate() {
-            let b: u64 = bucket
-                .iter()
-                .map(|(k, v)| (k.size_bytes() + v.size_bytes()) as u64)
-                .sum();
+        let MapOut {
+            bucket_runs,
+            bucket_bytes,
+            ..
+        } = mo;
+        for (j, (runs, b)) in bucket_runs.into_iter().zip(bucket_bytes).enumerate() {
             shuffle_bytes[j] += b;
-            per_reducer_runs[j].push(bucket);
+            per_reducer_runs[j].extend(runs);
         }
     }
     counters.add(names::SHUFFLE_BYTES, shuffle_bytes.iter().sum());
     stats.shuffle_bytes_per_reducer = shuffle_bytes;
-    // merge runs into one sorted stream per reducer
-    let merged: Vec<Vec<(KT, VT)>> = per_reducer_runs
-        .into_iter()
-        .map(merge_sorted_runs)
-        .collect();
     stats.shuffle_phase_secs = t_shuffle.elapsed().as_secs_f64();
 
     // ---- reduce phase --------------------------------------------------
+    // Each reduce task lazily k-way-merges its runs and walks groups
+    // straight off the heap; only the current group's values are buffered
+    // (they must form a contiguous `&[VT]` for the forward-cursor
+    // iterator).
     let t_reduce = Instant::now();
     struct RedOut<KO, VO> {
         output: Vec<(KO, VO)>,
@@ -198,52 +374,51 @@ where
         groups: u64,
         in_records: u64,
     }
-    let merged = Arc::new(Mutex::new(
-        merged.into_iter().map(Some).collect::<Vec<_>>(),
-    ));
     let red_outputs: Vec<RedOut<KO, VO>> = {
-        let merged = Arc::clone(&merged);
         let reducer = Arc::clone(&reducer);
         let grouping = Arc::clone(&grouping);
         let counters = Arc::clone(&counters);
-        run_indexed(config.workers, r, move |j| {
-            let t0 = Instant::now();
-            let run = merged.lock().unwrap()[j].take().expect("run taken once");
-            let in_records = run.len() as u64;
-            // Unzip into parallel key/value vectors so each group's values
-            // form a contiguous `&[VT]` for the forward-cursor iterator.
-            let mut keys: Vec<KT> = Vec::with_capacity(run.len());
-            let mut values: Vec<VT> = Vec::with_capacity(run.len());
-            for (k, v) in run {
-                keys.push(k);
-                values.push(v);
-            }
-            let mut task = reducer.create_task();
-            let mut out = Emitter::new();
-            task.configure(&mut out, &counters);
-            let consumed = AtomicU64::new(0);
-            let mut groups = 0u64;
-            // walk groups of consecutive keys equal under the grouping fn
-            let mut start = 0;
-            while start < keys.len() {
-                let mut end = start + 1;
-                while end < keys.len() && grouping(&keys[start], &keys[end]) {
-                    end += 1;
+        run_owned(
+            config.workers,
+            per_reducer_runs,
+            move |_j, runs: Vec<Vec<(KT, VT)>>| {
+                let t0 = Instant::now();
+                let mut merge = MergeIter::new(runs);
+                let in_records = merge.len() as u64;
+                let mut task = reducer.create_task();
+                let mut out = Emitter::new();
+                task.configure(&mut out, &counters);
+                let consumed = AtomicU64::new(0);
+                let mut groups = 0u64;
+                let mut group_vals: Vec<VT> = Vec::new();
+                let mut next = merge.next();
+                // walk groups of consecutive keys equal under the grouping
+                // fn; `next` parks the first record of the following group
+                while let Some((gkey, gval)) = next.take() {
+                    group_vals.clear();
+                    group_vals.push(gval);
+                    for (k, v) in merge.by_ref() {
+                        if grouping(&gkey, &k) {
+                            group_vals.push(v);
+                        } else {
+                            next = Some((k, v));
+                            break;
+                        }
+                    }
+                    groups += 1;
+                    // Hadoop hands the *first* key of the group to reduce.
+                    let it = ValuesIter::new(&group_vals, &consumed);
+                    task.reduce(&gkey, it, &mut out, &counters);
                 }
-                groups += 1;
-                // Hadoop hands the *first* key of the group to reduce.
-                let it = ValuesIter::new(&values[start..end], &consumed);
-                task.reduce(&keys[start], it, &mut out, &counters);
-                start = end;
-            }
-            task.close(&mut out, &counters);
-            RedOut {
-                output: out.into_pairs(),
-                secs: t0.elapsed().as_secs_f64(),
-                groups,
-                in_records,
-            }
-        })
+                task.close(&mut out, &counters);
+                RedOut {
+                    output: out.into_pairs(),
+                    secs: t0.elapsed().as_secs_f64(),
+                    groups,
+                    in_records,
+                }
+            },
+        )
     };
     stats.reduce_phase_secs = t_reduce.elapsed().as_secs_f64();
     stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
@@ -267,6 +442,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mapreduce::combiner::FnCombiner;
     use crate::mapreduce::types::{FnMapTask, FnReduceTask, HashPartitioner, MapTask};
 
     /// Word-count — the Figure 1 example of the paper.
@@ -464,5 +640,129 @@ mod tests {
         assert_eq!(res.stats.shuffle_bytes_per_reducer.len(), 2);
         assert!(res.stats.total_secs > 0.0);
         assert_eq!(res.stats.map_output_records, 100);
+    }
+
+    /// The streaming merge keeps values of equal keys in map-task order
+    /// (the stability contract the old materializing merge guaranteed).
+    #[test]
+    fn values_of_equal_keys_arrive_in_map_task_order() {
+        // 4 records, 2 splits → task 0 maps [10, 11], task 1 maps [12, 13]
+        let input: Vec<((), u64)> = (10..14).map(|v| ((), v)).collect();
+        let mapper = Arc::new(FnMapTask::new(
+            |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(0, v);
+            },
+        ));
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, Vec<u64>>, _c: &Counters| {
+                out.emit(*k, vals.copied().collect());
+            },
+        ));
+        let cfg = JobConfig::named("t").with_tasks(2, 1).with_workers(2);
+        let res = run_job(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|_: &u64| 0)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer,
+        );
+        assert_eq!(res.merged_output(), vec![(0, vec![10, 11, 12, 13])]);
+    }
+
+    fn histogram_fixtures() -> (
+        Vec<((), u64)>,
+        Arc<FnMapTask<impl Fn((), u64, &mut Emitter<u64, u64>, &Counters)>>,
+        Arc<FnReduceTask<impl Fn(&u64, ValuesIter<'_, u64>, &mut Emitter<u64, u64>, &Counters)>>,
+    ) {
+        let input: Vec<((), u64)> = (0..600u64).map(|i| ((), i)).collect();
+        let mapper = Arc::new(FnMapTask::new(
+            |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(v % 5, 1); // 5 hot keys — classic combiner material
+            },
+        ));
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(*k, vals.map(|v| *v).sum());
+            },
+        ));
+        (input, mapper, reducer)
+    }
+
+    /// The combiner shrinks shuffle bytes without changing reduce output.
+    #[test]
+    fn combiner_preserves_output_and_shrinks_shuffle() {
+        let cfg = JobConfig::named("hist").with_tasks(4, 2).with_workers(2);
+        let (input, mapper, reducer) = histogram_fixtures();
+        let plain = run_job(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer.clone(),
+        );
+        let combined = run_job_with_combiner(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer,
+            Arc::new(FnCombiner::new(|_k: &u64, vals: Vec<u64>, _c: &Counters| {
+                vec![vals.into_iter().sum()]
+            })),
+        );
+        assert_eq!(plain.outputs, combined.outputs);
+        let sb_plain = plain.counters.get(names::SHUFFLE_BYTES);
+        let sb_comb = combined.counters.get(names::SHUFFLE_BYTES);
+        assert!(
+            sb_comb * 10 < sb_plain,
+            "combiner should shrink shuffle: {sb_comb} vs {sb_plain}"
+        );
+        assert_eq!(combined.counters.get(names::COMBINE_INPUT_RECORDS), 600);
+        // 4 tasks × ≤5 keys each
+        assert!(combined.counters.get(names::COMBINE_OUTPUT_RECORDS) <= 20);
+        assert_eq!(plain.counters.get(names::COMBINE_INPUT_RECORDS), 0);
+        // reduce still sees the combined records
+        assert_eq!(
+            combined.counters.get(names::REDUCE_INPUT_RECORDS),
+            combined.counters.get(names::COMBINE_OUTPUT_RECORDS)
+        );
+    }
+
+    /// A tight sort budget produces many sealed runs but identical output.
+    #[test]
+    fn sort_budget_spill_is_output_equivalent() {
+        let (input, mapper, reducer) = histogram_fixtures();
+        let base_cfg = JobConfig::named("spill").with_tasks(4, 3).with_workers(2);
+        let spill_cfg = base_cfg.clone().with_sort_buffer(Some(7));
+        let plain = run_job(
+            &base_cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer.clone(),
+        );
+        let spilled = run_job(
+            &spill_cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer,
+        );
+        assert_eq!(plain.outputs, spilled.outputs);
+        // without a budget: ≤ one run per (task, bucket); with a tight one
+        // the sealed-chunk runs must outnumber that
+        let base_runs = plain.counters.get(names::MAP_SPILL_RUNS);
+        let spill_runs = spilled.counters.get(names::MAP_SPILL_RUNS);
+        assert!(base_runs <= 4 * 3);
+        assert!(
+            spill_runs > base_runs,
+            "expected chunked spill runs: {spill_runs} vs {base_runs}"
+        );
+        assert_eq!(spilled.counters.get(names::SPILLED_RECORDS), 600);
     }
 }

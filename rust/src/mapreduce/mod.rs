@@ -1,4 +1,5 @@
-//! An in-process MapReduce runtime with Hadoop-0.20 semantics.
+//! An in-process MapReduce runtime with Hadoop-0.20 semantics and a
+//! streaming shuffle pipeline.
 //!
 //! This is the substrate the paper runs on (Hadoop on a 4-node cluster);
 //! we rebuild the parts of its execution model that the paper's algorithms
@@ -11,17 +12,53 @@
 //!   task lifecycle hooks (RepSN's Algorithm 2 needs per-map-task state),
 //! * a user-supplied **partitioner** deciding the reducer for each
 //!   intermediate key,
-//! * map-side **sort** of each partition bucket, reducer-side **merge**,
-//!   so every reduce task sees its input **sorted by key** — the property
-//!   SRP builds on,
 //! * a **grouping comparator** separate from the sort key (Hadoop's
 //!   `setOutputValueGroupingComparator`): JobSN/RepSN sort by the full
 //!   composite key but group by its prefix,
+//! * an optional map-side **combiner** ([`run_job_with_combiner`]) that
+//!   pre-reduces sorted runs before the shuffle,
 //! * per-task **counters** and **phase timings**, which feed the cluster
 //!   timing simulator ([`sim`]) used to reproduce the paper's multi-node
 //!   speedup figures on this single-machine testbed,
 //! * a simulated **DFS** ([`dfs`]) with 128 MB blocks and compressed
 //!   sequence files ([`seqfile`]) for job input/output materialization.
+//!
+//! ## The streaming intermediate data path
+//!
+//! The map→shuffle→reduce pipeline never materializes the merged
+//! intermediate stream:
+//!
+//! 1. **Map-side sort & spill** — each map task drains its emitted
+//!    records into per-partition [`sortspill::RunSorter`]s.  Without a
+//!    sort budget ([`JobConfig::sort_buffer_records`] `= None`) that is
+//!    one stable sort per bucket; with one, each bucket's records seal
+//!    into bounded sorted runs so no single sort ever touches more than
+//!    the budget — Hadoop's `io.sort.mb` spill mechanism.
+//! 2. **Combine** — if the job registers a [`Combiner`], every sealed run
+//!    is pre-reduced in place before shuffling, shrinking
+//!    `SHUFFLE_BYTES` for associative aggregations.
+//! 3. **Shuffle transpose** — the driver only reassigns run *ownership*
+//!    (reducer `j` takes every map task's bucket-`j` runs, in map-task
+//!    order).  `shuffle_phase_secs` measures exactly this, so it no
+//!    longer hides a single-threaded merge stall between the two waves.
+//! 4. **Streaming reduce-side merge** — each reduce task lazily k-way
+//!    merges its runs with [`shuffle::MergeIter`] and walks
+//!    grouping-comparator groups straight off the heap, buffering only
+//!    the current group's values.  The per-reducer merges therefore run
+//!    in parallel on the worker pool, and reduce can start on the first
+//!    group before the last run is fully consumed.
+//!
+//! Task inputs and results are handed to the worker pool through atomic
+//! index-owned slots ([`crate::util::threadpool::OnceSlots`]) — no shared
+//! mutex on the scatter/gather path.
+//!
+//! **Per-phase accounting:** `map_phase_secs` covers map + sort + spill +
+//! combine; `shuffle_phase_secs` covers the (cheap) transpose;
+//! `reduce_phase_secs` and each `reduce_task_secs[j]` cover merge +
+//! reduce, since the merge streams inside the reduce task.  The old
+//! data path (materialize the full merge on the driver, then unzip) is
+//! preserved behaviorally by [`shuffle::merge_sorted_runs`] and checked
+//! byte-identical by `tests/prop_shuffle.rs`.
 //!
 //! What we deliberately do **not** model: speculative execution (the paper
 //! turns it off), task failure/retry, and rack topology.
@@ -38,9 +75,11 @@ pub mod sortspill;
 pub mod splits;
 pub mod types;
 
+pub use combiner::{Combiner, FnCombiner};
 pub use config::JobConfig;
 pub use counters::Counters;
-pub use engine::{run_job, JobResult, JobStats};
+pub use engine::{run_job, run_job_with_combiner, JobResult, JobStats};
+pub use shuffle::MergeIter;
 pub use types::{
     Emitter, FnMapTask, FnReduceTask, HashPartitioner, MapTask, MapTaskFactory, Partitioner,
     ReduceTask, ReduceTaskFactory, SizeEstimate, ValuesIter,

@@ -1,68 +1,115 @@
-//! Shuffle: merge the sorted per-map-task partition buckets for a reducer.
+//! Shuffle: merge the sorted per-map-task partition runs for a reducer.
 //!
 //! Hadoop's reduce side pulls one sorted run from every map task and
 //! k-way-merges them so the reduce function sees a single key-sorted
-//! stream.  The merge must be *stable across runs* (ties broken by map-task
-//! index) so engine output is deterministic regardless of scheduling.
+//! stream.  The merge must be *stable across runs* (ties broken by run
+//! index, i.e. map-task order) so engine output is deterministic
+//! regardless of scheduling.
+//!
+//! [`MergeIter`] is the streaming form: it holds only one parked value per
+//! run plus a heap of run heads, and yields `(key, value)` pairs lazily —
+//! the engine drives reduce groups directly off it, so the merged run is
+//! never materialized.  [`merge_sorted_runs`] is the materializing wrapper
+//! (collect the iterator into a `Vec`), kept as the equivalence baseline
+//! for tests and the `engine_ablation` bench.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// K-way merge of key-sorted runs.  Each inner `Vec` must already be
-/// sorted by `K`; the output is globally sorted, ties in key order keep
-/// run-index order (stability).
+/// Heap entry: the head key of one run.  Ordering is reversed (BinaryHeap
+/// is a max-heap) with run-index tie-break for stability.
+struct Head<K> {
+    key: K,
+    run: usize,
+}
+
+impl<K: Ord> PartialEq for Head<K> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key && self.run == other.run
+    }
+}
+
+impl<K: Ord> Eq for Head<K> {}
+
+impl<K: Ord> PartialOrd for Head<K> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<K: Ord> Ord for Head<K> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap
+        other
+            .key
+            .cmp(&self.key)
+            .then_with(|| other.run.cmp(&self.run))
+    }
+}
+
+/// Lazy k-way merge of key-sorted runs.
+///
+/// Each inner `Vec` must already be sorted by `K`; the iterator yields a
+/// globally sorted stream, ties in key order keeping run-index order
+/// (stability).  Memory held beyond the input runs themselves is one
+/// parked value and one heap entry per run — O(k), not O(n).
+pub struct MergeIter<K: Ord, V> {
+    iters: Vec<std::vec::IntoIter<(K, V)>>,
+    heap: BinaryHeap<Head<K>>,
+    pending: Vec<Option<V>>,
+    remaining: usize,
+}
+
+impl<K: Ord, V> MergeIter<K, V> {
+    pub fn new(runs: Vec<Vec<(K, V)>>) -> Self {
+        let remaining: usize = runs.iter().map(|r| r.len()).sum();
+        let mut iters: Vec<std::vec::IntoIter<(K, V)>> =
+            runs.into_iter().map(|r| r.into_iter()).collect();
+        let mut heap = BinaryHeap::with_capacity(iters.len());
+        let mut pending: Vec<Option<V>> = Vec::with_capacity(iters.len());
+        for (i, it) in iters.iter_mut().enumerate() {
+            pending.push(None);
+            if let Some((k, v)) = it.next() {
+                heap.push(Head { key: k, run: i });
+                pending[i] = Some(v);
+            }
+        }
+        Self {
+            iters,
+            heap,
+            pending,
+            remaining,
+        }
+    }
+}
+
+impl<K: Ord, V> Iterator for MergeIter<K, V> {
+    type Item = (K, V);
+
+    fn next(&mut self) -> Option<(K, V)> {
+        let Head { key, run } = self.heap.pop()?;
+        let v = self.pending[run].take().expect("value parked for run head");
+        if let Some((k, nv)) = self.iters[run].next() {
+            self.heap.push(Head { key: k, run });
+            self.pending[run] = Some(nv);
+        }
+        self.remaining -= 1;
+        Some((key, v))
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl<K: Ord, V> ExactSizeIterator for MergeIter<K, V> {}
+
+/// K-way merge of key-sorted runs into one materialized `Vec` (the
+/// pre-streaming data path, byte-identical to draining a [`MergeIter`]).
 pub fn merge_sorted_runs<K: Ord, V>(runs: Vec<Vec<(K, V)>>) -> Vec<(K, V)> {
-    let total: usize = runs.iter().map(|r| r.len()).sum();
-    let mut out = Vec::with_capacity(total);
-
-    // Entry in the heap: (key, run_idx) with reversed ordering so the
-    // smallest key pops first; run_idx tie-break gives stability.
-    struct Head<K> {
-        key: K,
-        run: usize,
-    }
-    impl<K: Ord> PartialEq for Head<K> {
-        fn eq(&self, other: &Self) -> bool {
-            self.key == other.key && self.run == other.run
-        }
-    }
-    impl<K: Ord> Eq for Head<K> {}
-    impl<K: Ord> PartialOrd for Head<K> {
-        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-            Some(self.cmp(other))
-        }
-    }
-    impl<K: Ord> Ord for Head<K> {
-        fn cmp(&self, other: &Self) -> Ordering {
-            // reversed: BinaryHeap is a max-heap
-            other
-                .key
-                .cmp(&self.key)
-                .then_with(|| other.run.cmp(&self.run))
-        }
-    }
-
-    let mut iters: Vec<std::vec::IntoIter<(K, V)>> =
-        runs.into_iter().map(|r| r.into_iter()).collect();
-    let mut heap = BinaryHeap::with_capacity(iters.len());
-    let mut pending: Vec<Option<V>> = Vec::with_capacity(iters.len());
-
-    for (i, it) in iters.iter_mut().enumerate() {
-        pending.push(None);
-        if let Some((k, v)) = it.next() {
-            heap.push(Head { key: k, run: i });
-            pending[i] = Some(v);
-        }
-    }
-
-    while let Some(Head { key, run }) = heap.pop() {
-        let v = pending[run].take().expect("value parked for run head");
-        out.push((key, v));
-        if let Some((k, v)) = iters[run].next() {
-            heap.push(Head { key: k, run });
-            pending[run] = Some(v);
-        }
-    }
+    let it = MergeIter::new(runs);
+    let mut out = Vec::with_capacity(it.len());
+    out.extend(it);
     out
 }
 
@@ -97,6 +144,17 @@ mod tests {
         assert!(merge_sorted_runs(runs).is_empty());
         let runs: Vec<Vec<(u32, u32)>> = vec![];
         assert!(merge_sorted_runs(runs).is_empty());
+    }
+
+    #[test]
+    fn merge_iter_is_exact_size() {
+        let runs = vec![vec![(1u32, 0u32), (3, 0)], vec![(2, 0)]];
+        let mut it = MergeIter::new(runs);
+        assert_eq!(it.len(), 3);
+        it.next();
+        assert_eq!(it.len(), 2);
+        assert_eq!(it.size_hint(), (2, Some(2)));
+        assert_eq!(it.by_ref().count(), 2);
     }
 
     #[test]

@@ -1,13 +1,21 @@
-//! Map-side external sort: bounded in-memory buffer with sorted on-disk
-//! spill segments and a streaming k-way merge (Hadoop's `io.sort.mb`
-//! mechanism, the source of the "spilled records" counter).
+//! Map-side external sort: bounded sort buffers with sealed sorted runs
+//! (Hadoop's `io.sort.mb` mechanism, the source of the "spilled records"
+//! counter).
 //!
-//! The in-memory engine path keeps whole buckets resident (this testbed
-//! has RAM to spare and the paper's experiments fit); this module provides
-//! the real spilling machinery for inputs that don't, plus the honest I/O
-//! cost the cluster simulator charges for materialization.  Records are
-//! serialized through a user [`Codec`] (the offline crate set has no
-//! serde), optionally DEFLATE-compressed per segment.
+//! Two layers live here:
+//!
+//! * [`RunSorter`] — the bounded buffer the engine's map tasks sort
+//!   through when [`crate::mapreduce::JobConfig::sort_buffer_records`] is
+//!   set: records accumulate up to the budget, each full chunk is
+//!   stable-sorted and sealed as one run, and the reducer-side streaming
+//!   merge ([`crate::mapreduce::shuffle::MergeIter`]) consumes the runs
+//!   directly — the map side never sorts (or holds a sort of) more than
+//!   `budget` records at once.
+//! * [`SpillingBuffer`] — the on-disk variant for codec-serializable
+//!   records: sealed runs are written as (optionally DEFLATE-compressed)
+//!   segments, giving the honest I/O cost the cluster simulator charges
+//!   for materialization.  Records are serialized through a user
+//!   [`Codec`] (the offline crate set has no serde).
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -18,6 +26,67 @@ use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
 use flate2::read::DeflateDecoder;
 use flate2::write::DeflateEncoder;
 use flate2::Compression;
+
+/// A bounded in-memory sorter producing sealed sorted runs.
+///
+/// `push` buffers records; once `budget` records accumulate, the chunk is
+/// stable-sorted with `cmp` and sealed as one run.  `into_runs` seals the
+/// remainder and returns every run in seal order, each individually
+/// sorted.  Equal-comparing records keep their push order both within a
+/// run (stable sort) and across runs (seal order), which is exactly the
+/// tie-break contract the shuffle merge's run-index ordering preserves.
+pub struct RunSorter<T, C>
+where
+    C: Fn(&T, &T) -> std::cmp::Ordering,
+{
+    budget: usize,
+    buffer: Vec<T>,
+    runs: Vec<Vec<T>>,
+    cmp: C,
+}
+
+impl<T, C> RunSorter<T, C>
+where
+    C: Fn(&T, &T) -> std::cmp::Ordering,
+{
+    /// `budget` is the maximum records held unsorted at once (clamped to
+    /// at least 1); pass `usize::MAX` to sort everything in one run.
+    pub fn new(budget: usize, cmp: C) -> Self {
+        Self {
+            budget: budget.max(1),
+            buffer: Vec::new(),
+            runs: Vec::new(),
+            cmp,
+        }
+    }
+
+    pub fn push(&mut self, t: T) {
+        self.buffer.push(t);
+        if self.buffer.len() >= self.budget {
+            self.seal();
+        }
+    }
+
+    fn seal(&mut self) {
+        if self.buffer.is_empty() {
+            return;
+        }
+        self.buffer.sort_by(&self.cmp);
+        let run = std::mem::take(&mut self.buffer);
+        self.runs.push(run);
+    }
+
+    /// Runs produced so far, counting the unsealed remainder.
+    pub fn run_count(&self) -> usize {
+        self.runs.len() + usize::from(!self.buffer.is_empty())
+    }
+
+    /// Seal the remainder and return all sorted runs in seal order.
+    pub fn into_runs(mut self) -> Vec<Vec<T>> {
+        self.seal();
+        self.runs
+    }
+}
 
 /// Binary codec for spill records.
 pub trait Codec<T>: Send + Sync {
@@ -217,6 +286,35 @@ mod tests {
 
     fn cmp(a: &(String, String), b: &(String, String)) -> std::cmp::Ordering {
         a.cmp(b)
+    }
+
+    #[test]
+    fn run_sorter_seals_sorted_chunks() {
+        let mut s = RunSorter::new(3, |a: &u32, b: &u32| a.cmp(b));
+        for v in [5u32, 1, 4, 2, 9, 7, 3] {
+            s.push(v);
+        }
+        assert_eq!(s.run_count(), 3);
+        let runs = s.into_runs();
+        assert_eq!(runs, vec![vec![1, 4, 5], vec![2, 7, 9], vec![3]]);
+    }
+
+    #[test]
+    fn run_sorter_unbounded_is_single_stable_sort() {
+        let mut s = RunSorter::new(usize::MAX, |a: &(u32, u32), b: &(u32, u32)| a.0.cmp(&b.0));
+        for (i, k) in [2u32, 1, 2, 1].iter().enumerate() {
+            s.push((*k, i as u32));
+        }
+        let runs = s.into_runs();
+        // one run, stable within equal keys
+        assert_eq!(runs, vec![vec![(1, 1), (1, 3), (2, 0), (2, 2)]]);
+    }
+
+    #[test]
+    fn run_sorter_empty() {
+        let s = RunSorter::new(4, |a: &u8, b: &u8| a.cmp(b));
+        assert_eq!(s.run_count(), 0);
+        assert!(s.into_runs().is_empty());
     }
 
     #[test]

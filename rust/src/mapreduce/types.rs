@@ -48,6 +48,18 @@ impl<K: SizeEstimate, V: SizeEstimate> Emitter<K, V> {
     pub(crate) fn into_pairs(self) -> Vec<(K, V)> {
         self.pairs
     }
+
+    /// Drain the buffered pairs, leaving the emitter reusable.
+    ///
+    /// The engine drains mid-task when a map-side sort budget is
+    /// configured, feeding batches into the bounded
+    /// [`crate::mapreduce::sortspill::RunSorter`]s so emitted records
+    /// never pile up past the budget.  Byte accounting ([`Self::bytes`])
+    /// keeps accumulating across drains; [`Self::len`] counts only the
+    /// records buffered since the last drain.
+    pub(crate) fn take_pairs(&mut self) -> Vec<(K, V)> {
+        std::mem::take(&mut self.pairs)
+    }
 }
 
 impl<K: SizeEstimate, V: SizeEstimate> Default for Emitter<K, V> {

@@ -271,6 +271,7 @@ mod tests {
             partitioner: vp,
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
+            sort_buffer_records: None,
         };
         let res = crate::sn::repsn::run(&entities, &cfg).unwrap();
         let mut expect = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), w);

@@ -118,7 +118,8 @@ pub fn run_with_options(
         let r2 = second_job_reducers.unwrap_or(r - 1);
         let job_cfg = JobConfig::named("jobsn-phase2")
             .with_tasks(cfg.num_map_tasks.min(input.len().max(1)), r2)
-            .with_workers(cfg.workers);
+            .with_workers(cfg.workers)
+            .with_sort_buffer(cfg.sort_buffer_records);
         // boundary index spreads over the phase-2 reduce tasks
         struct BoundaryPartitioner;
         impl crate::mapreduce::types::Partitioner<SnKey> for BoundaryPartitioner {
@@ -187,6 +188,7 @@ mod tests {
             partitioner: Arc::new(RangePartition::new(vec!["3".into()], "fig5")),
             blocking_key: Arc::new(TitlePrefixKey::new(1)),
             mode: SnMode::Blocking,
+            sort_buffer_records: None,
         }
     }
 
@@ -219,6 +221,7 @@ mod tests {
             )),
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
+            sort_buffer_records: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 4);

@@ -206,7 +206,8 @@ pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
         .collect();
     let job_cfg = JobConfig::named("repsn")
         .with_tasks(cfg.num_map_tasks, r)
-        .with_workers(cfg.workers);
+        .with_workers(cfg.workers)
+        .with_sort_buffer(cfg.sort_buffer_records);
     let res = run_job(
         &job_cfg,
         input,
@@ -267,6 +268,7 @@ mod tests {
             partitioner: Arc::new(RangePartition::new(vec!["3".into()], "fig7")),
             blocking_key: Arc::new(TitlePrefixKey::new(1)),
             mode: SnMode::Blocking,
+            sort_buffer_records: None,
         }
     }
 
@@ -301,6 +303,7 @@ mod tests {
             )),
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
+            sort_buffer_records: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let replicated = res.counters.get(counter_names::REPLICATED_ENTITIES);
@@ -331,6 +334,7 @@ mod tests {
             )),
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
+            sort_buffer_records: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 6);

@@ -158,7 +158,8 @@ pub(crate) fn run_srp_job(
         .collect();
     let job_cfg = JobConfig::named(job_name)
         .with_tasks(cfg.num_map_tasks, r)
-        .with_workers(cfg.workers);
+        .with_workers(cfg.workers)
+        .with_sort_buffer(cfg.sort_buffer_records);
     run_job(
         &job_cfg,
         input,
@@ -241,6 +242,7 @@ mod tests {
             partitioner: Arc::new(RangePartition::new(vec!["3".into()], "fig5")),
             blocking_key: Arc::new(TitlePrefixKey::new(1)),
             mode: SnMode::Blocking,
+            sort_buffer_records: None,
         };
         let res = run(&entities, &cfg).unwrap();
         assert_eq!(res.pairs.len(), 12);
@@ -268,6 +270,7 @@ mod tests {
             partitioner: Arc::new(crate::sn::partition::EvenPartition::ascii(1)),
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
+            sort_buffer_records: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 5);

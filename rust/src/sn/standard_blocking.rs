@@ -81,7 +81,8 @@ pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
     let r = cfg.partitioner.num_partitions();
     let job_cfg = JobConfig::named("standard-blocking")
         .with_tasks(cfg.num_map_tasks, r)
-        .with_workers(cfg.workers);
+        .with_workers(cfg.workers)
+        .with_sort_buffer(cfg.sort_buffer_records);
     let res = run_job(
         &job_cfg,
         input,

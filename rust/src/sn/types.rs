@@ -108,6 +108,10 @@ pub struct SnConfig {
     pub blocking_key: Arc<dyn BlockingKey>,
     /// Blocking-only or full matching.
     pub mode: SnMode,
+    /// Map-side sort memory budget in records, forwarded to
+    /// [`crate::mapreduce::JobConfig::sort_buffer_records`] by every SN
+    /// job.  `None` (default) sorts whole buckets in memory.
+    pub sort_buffer_records: Option<usize>,
 }
 
 impl Default for SnConfig {
@@ -119,6 +123,7 @@ impl Default for SnConfig {
             partitioner: Arc::new(crate::sn::partition::EvenPartition::ascii(1)),
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
+            sort_buffer_records: None,
         }
     }
 }

@@ -7,8 +7,9 @@
 //! pool is also easier to instrument with the per-slot busy-time metrics the
 //! cluster simulator is calibrated from.
 
+use std::cell::UnsafeCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -118,6 +119,125 @@ impl Drop for ThreadPool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Atomic-index slot ownership: the task-input / task-result handoff
+// ---------------------------------------------------------------------------
+
+const SLOT_EMPTY: u8 = 0;
+const SLOT_FULL: u8 = 1;
+const SLOT_TAKEN: u8 = 2;
+const SLOT_WRITING: u8 = 3;
+
+/// A fixed-size vector of single-use slots with per-slot atomic ownership.
+///
+/// Each slot is filled exactly once (`put`) and emptied exactly once
+/// (`take`); both transfer ownership through a per-slot atomic state
+/// machine, so concurrent workers operating on *distinct* indices never
+/// contend on a shared lock.  This replaces the engine's former
+/// `Arc<Mutex<Vec<Option<T>>>>` scatter/gather handoff, which serialized
+/// every worker through one mutex at the start and end of every task.
+pub struct OnceSlots<T> {
+    slots: Vec<UnsafeCell<Option<T>>>,
+    state: Vec<AtomicU8>,
+}
+
+// SAFETY: slot contents are only accessed by the thread that won the
+// corresponding atomic state transition, so `&OnceSlots` can be shared
+// across threads whenever the payload itself can be moved between them.
+unsafe impl<T: Send> Sync for OnceSlots<T> {}
+
+impl<T> OnceSlots<T> {
+    /// All slots pre-filled from `items` (the fan-out direction).
+    pub fn filled(items: Vec<T>) -> Self {
+        let state = (0..items.len()).map(|_| AtomicU8::new(SLOT_FULL)).collect();
+        Self {
+            slots: items.into_iter().map(|t| UnsafeCell::new(Some(t))).collect(),
+            state,
+        }
+    }
+
+    /// `n` empty slots awaiting `put` (the gather direction).
+    pub fn empty(n: usize) -> Self {
+        Self {
+            slots: (0..n).map(|_| UnsafeCell::new(None)).collect(),
+            state: (0..n).map(|_| AtomicU8::new(SLOT_EMPTY)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Take ownership of slot `i`.  Panics if the slot was never filled or
+    /// was already taken — each index has exactly one consumer.
+    pub fn take(&self, i: usize) -> T {
+        let prev = self.state[i].swap(SLOT_TAKEN, Ordering::AcqRel);
+        assert_eq!(prev, SLOT_FULL, "slot {i} taken while in state {prev}");
+        // SAFETY: the swap above observed FULL, so the filling thread's
+        // release store happened-before this point and no other thread can
+        // observe FULL again — this thread exclusively owns the cell.
+        unsafe { (*self.slots[i].get()).take().expect("slot verified FULL") }
+    }
+
+    /// Fill slot `i`.  Panics on double-fill.
+    pub fn put(&self, i: usize, t: T) {
+        let prev = self.state[i].swap(SLOT_WRITING, Ordering::AcqRel);
+        assert_eq!(prev, SLOT_EMPTY, "slot {i} filled while in state {prev}");
+        // SAFETY: the transition EMPTY→WRITING grants exclusive access;
+        // readers only touch the cell after observing FULL below.
+        unsafe {
+            *self.slots[i].get() = Some(t);
+        }
+        self.state[i].store(SLOT_FULL, Ordering::Release);
+    }
+
+    /// Consume all slots in index order.  Panics if any slot is unfilled.
+    pub fn into_vec(self) -> Vec<T> {
+        self.slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| c.into_inner().unwrap_or_else(|| panic!("slot {i} never filled")))
+            .collect()
+    }
+}
+
+/// Distribute owned `items` over `workers` threads and collect `f`'s
+/// results in item order.  Input and output both travel through
+/// [`OnceSlots`], so no worker ever blocks on a shared lock to pick up its
+/// input or deposit its result.
+pub fn run_owned<I, T, F>(workers: usize, items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send + 'static,
+    T: Send + 'static,
+    F: Fn(usize, I) -> T + Send + Sync + 'static,
+{
+    let count = items.len();
+    let f = Arc::new(f);
+    let inputs = Arc::new(OnceSlots::filled(items));
+    let results = Arc::new(OnceSlots::<T>::empty(count));
+    let pool = ThreadPool::new(workers.max(1));
+    for i in 0..count {
+        let f = Arc::clone(&f);
+        let inputs = Arc::clone(&inputs);
+        let results = Arc::clone(&results);
+        pool.execute(move || {
+            let item = inputs.take(i);
+            results.put(i, f(i, item));
+        });
+    }
+    let panics = pool.join();
+    assert_eq!(panics, 0, "{panics} task(s) panicked");
+    drop(pool);
+    drop(inputs);
+    Arc::try_unwrap(results)
+        .unwrap_or_else(|_| panic!("results still shared"))
+        .into_vec()
+}
+
 /// Run `tasks` (indexed closures) on `workers` threads and collect results
 /// in task order.  Convenience wrapper used by the engine's phases.
 pub fn run_indexed<T, F>(workers: usize, count: usize, f: F) -> Vec<T>
@@ -125,27 +245,7 @@ where
     T: Send + 'static,
     F: Fn(usize) -> T + Send + Sync + 'static,
 {
-    let f = Arc::new(f);
-    let results: Arc<Mutex<Vec<Option<T>>>> =
-        Arc::new(Mutex::new((0..count).map(|_| None).collect()));
-    let pool = ThreadPool::new(workers.max(1));
-    for i in 0..count {
-        let f = Arc::clone(&f);
-        let results = Arc::clone(&results);
-        pool.execute(move || {
-            let r = f(i);
-            results.lock().unwrap()[i] = Some(r);
-        });
-    }
-    let panics = pool.join();
-    assert_eq!(panics, 0, "{panics} task(s) panicked");
-    Arc::try_unwrap(results)
-        .unwrap_or_else(|_| panic!("results still shared"))
-        .into_inner()
-        .unwrap()
-        .into_iter()
-        .map(|o| o.expect("task did not run"))
-        .collect()
+    run_owned(workers, vec![(); count], move |i, _: ()| f(i))
 }
 
 #[cfg(test)]
@@ -198,6 +298,50 @@ mod tests {
     fn run_indexed_preserves_order() {
         let out = run_indexed(3, 50, |i| i * i);
         assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_owned_moves_items_without_locks() {
+        let items: Vec<Vec<u64>> = (0..40).map(|i| vec![i, i + 1]).collect();
+        let out = run_owned(4, items, |i, v: Vec<u64>| {
+            assert_eq!(v[0], i as u64);
+            v.iter().sum::<u64>()
+        });
+        assert_eq!(out, (0..40).map(|i| 2 * i + 1).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn run_owned_empty_input() {
+        let out: Vec<u64> = run_owned(3, Vec::<u64>::new(), |_, v| v);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn once_slots_take_and_put_round_trip() {
+        let slots = OnceSlots::filled(vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(slots.len(), 2);
+        assert_eq!(slots.take(1), "b");
+        assert_eq!(slots.take(0), "a");
+        let sink = OnceSlots::empty(2);
+        sink.put(0, 10u32);
+        sink.put(1, 20u32);
+        assert_eq!(sink.into_vec(), vec![10, 20]);
+    }
+
+    #[test]
+    #[should_panic(expected = "taken while in state")]
+    fn once_slots_double_take_panics() {
+        let slots = OnceSlots::filled(vec![1u8]);
+        let _ = slots.take(0);
+        let _ = slots.take(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "filled while in state")]
+    fn once_slots_double_put_panics() {
+        let sink = OnceSlots::empty(1);
+        sink.put(0, 1u8);
+        sink.put(0, 2u8);
     }
 
     #[test]

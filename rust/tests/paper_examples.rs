@@ -52,6 +52,7 @@ fn fig_cfg(w: usize, m: usize) -> SnConfig {
         partitioner: Arc::new(RangePartition::new(vec!["3".into()], "fig5")),
         blocking_key: Arc::new(TitlePrefixKey::new(1)),
         mode: SnMode::Blocking,
+        sort_buffer_records: None,
     }
 }
 

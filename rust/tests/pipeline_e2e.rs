@@ -35,6 +35,7 @@ fn sn_config(entities: &[Entity], w: usize) -> SnConfig {
         partitioner: Arc::new(RangePartition::balanced(entities, |e| bk.key(e), 6)),
         blocking_key: Arc::new(TitlePrefixKey::new(2)),
         mode: Default::default(),
+        sort_buffer_records: None,
     }
 }
 

@@ -1,0 +1,166 @@
+//! Property tests for the streaming shuffle merge: the lazy `MergeIter`
+//! must be byte-identical to the materializing merge and to a stable
+//! global sort (which encodes the tie-break-by-map-task-index contract),
+//! across random run shapes; and `run_job` must produce identical outputs
+//! under every intermediate-path configuration (sort budget on/off,
+//! combiner on/off, worker counts).
+
+use std::sync::Arc;
+
+use snmr::mapreduce::counters::names;
+use snmr::mapreduce::shuffle::{merge_sorted_runs, MergeIter};
+use snmr::mapreduce::{
+    run_job, run_job_with_combiner, Counters, Emitter, FnCombiner, FnMapTask, FnReduceTask,
+    HashPartitioner, JobConfig, ValuesIter,
+};
+use snmr::util::prop::Cases;
+use snmr::util::rng::Rng;
+
+/// Values tag their (run, seq) origin so stability violations are visible
+/// even when keys collide.
+fn random_runs(rng: &mut Rng) -> Vec<Vec<(u64, (usize, usize))>> {
+    let nruns = rng.range(0, 8);
+    (0..nruns)
+        .map(|run_idx| {
+            let len = rng.range(0, 40);
+            let key_space = 1 + rng.below(12);
+            let mut run: Vec<(u64, (usize, usize))> = (0..len)
+                .map(|seq| (rng.below(key_space), (run_idx, seq)))
+                .collect();
+            // stable: preserves seq order within equal keys, like the
+            // engine's map-side stable bucket sort
+            run.sort_by_key(|(k, _)| *k);
+            run
+        })
+        .collect()
+}
+
+#[test]
+fn streaming_merge_is_byte_identical_to_materializing_merge() {
+    Cases::new("merge-iter equivalence", 300).run(|rng| {
+        let runs = random_runs(rng);
+        let lazy: Vec<_> = MergeIter::new(runs.clone()).collect();
+        let materialized = merge_sorted_runs(runs.clone());
+        if lazy != materialized {
+            return Err(format!(
+                "lazy and materializing merges diverge: {lazy:?} vs {materialized:?}"
+            ));
+        }
+        // Stable global sort of the run-ordered concatenation encodes the
+        // exact tie-break contract: equal keys ordered by (run index, seq).
+        let mut reference: Vec<(u64, (usize, usize))> = runs.into_iter().flatten().collect();
+        reference.sort_by_key(|(k, _)| *k);
+        if lazy != reference {
+            return Err(format!(
+                "merge violates run-index tie-break: {lazy:?} vs {reference:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn merge_iter_len_tracks_remaining() {
+    Cases::new("merge-iter exact size", 100).run(|rng| {
+        let runs = random_runs(rng);
+        let total: usize = runs.iter().map(|r| r.len()).sum();
+        let mut it = MergeIter::new(runs);
+        if it.len() != total {
+            return Err(format!("len {} != total {total}", it.len()));
+        }
+        let mut seen = 0usize;
+        while it.next().is_some() {
+            seen += 1;
+            if it.len() != total - seen {
+                return Err(format!("len {} after {seen} of {total}", it.len()));
+            }
+        }
+        if seen != total {
+            return Err(format!("yielded {seen} of {total}"));
+        }
+        Ok(())
+    });
+}
+
+/// One run_job invocation of a histogram-ish job whose reduce output
+/// captures value *order*, so any instability in the streaming pipeline
+/// shows up as an output difference.
+fn run_histogram(
+    input: Vec<((), u64)>,
+    maps: usize,
+    reduces: usize,
+    workers: usize,
+    sort_buffer: Option<usize>,
+    combine: bool,
+) -> Vec<Vec<(u64, Vec<u64>)>> {
+    let mapper = Arc::new(FnMapTask::new(
+        |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+            out.emit(v % 13, v);
+        },
+    ));
+    let reducer = Arc::new(FnReduceTask::new(
+        |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, Vec<u64>>, _c: &Counters| {
+            out.emit(*k, vals.copied().collect());
+        },
+    ));
+    let cfg = JobConfig::named("prop")
+        .with_tasks(maps, reduces)
+        .with_workers(workers)
+        .with_sort_buffer(sort_buffer);
+    let partitioner = Arc::new(HashPartitioner::new(|k: &u64| k.wrapping_mul(0x9E37)));
+    let grouping = Arc::new(|a: &u64, b: &u64| a == b);
+    if combine {
+        // order-preserving identity combiner: exercises the combine path
+        // without collapsing the per-value evidence
+        let res = run_job_with_combiner(
+            &cfg,
+            input,
+            mapper,
+            partitioner,
+            grouping,
+            reducer,
+            Arc::new(FnCombiner::new(|_k: &u64, vals: Vec<u64>, _c: &Counters| vals)),
+        );
+        assert_eq!(
+            res.counters.get(names::COMBINE_INPUT_RECORDS),
+            res.counters.get(names::COMBINE_OUTPUT_RECORDS)
+        );
+        res.outputs
+    } else {
+        run_job(&cfg, input, mapper, partitioner, grouping, reducer).outputs
+    }
+}
+
+#[test]
+fn engine_outputs_identical_across_pipeline_configs() {
+    Cases::new("engine pipeline equivalence", 25).run(|rng| {
+        let n = rng.range(1, 400);
+        let input: Vec<((), u64)> = (0..n).map(|_| ((), rng.below(1_000))).collect();
+        let maps = rng.range(1, 6);
+        let reduces = rng.range(1, 5);
+        let reference = run_histogram(input.clone(), maps, reduces, 1, None, false);
+        for (workers, sort_buffer, combine) in [
+            (3, None, false),
+            (1, Some(rng.range(1, 20)), false),
+            (4, Some(rng.range(1, 20)), false),
+            (2, None, true),
+            (3, Some(rng.range(1, 20)), true),
+        ] {
+            let got = run_histogram(
+                input.clone(),
+                maps,
+                reduces,
+                workers,
+                sort_buffer,
+                combine,
+            );
+            if got != reference {
+                return Err(format!(
+                    "outputs diverge at workers={workers} sort_buffer={sort_buffer:?} \
+                     combine={combine}: {got:?} vs {reference:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}

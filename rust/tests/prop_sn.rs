@@ -45,6 +45,7 @@ fn config(
         partitioner: Arc::new(RangePartition::balanced(entities, |e| bk.key(e), r)),
         blocking_key: Arc::new(TitlePrefixKey::new(2)),
         mode: SnMode::Blocking,
+        sort_buffer_records: None,
     }
 }
 

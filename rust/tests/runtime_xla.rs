@@ -151,6 +151,7 @@ fn end_to_end_repsn_with_xla_matcher_matches_native_decisions() {
             threshold: THRESHOLD,
             scorer,
         }),
+        sort_buffer_records: None,
     };
     let res_native = snmr::sn::repsn::run(
         &corpus.entities,

@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Run the engine ablation bench and leave the perf-trajectory summary in
+# BENCH_engine.json at the repo root (the bench binary writes it to its
+# working directory).  Extra flags are forwarded, e.g.:
+#
+#   scripts/bench.sh --n 100000
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo bench --bench engine_ablation -- "$@"
+
+if [[ -f rust/BENCH_engine.json ]]; then
+  # cargo may run the bench with the crate dir as cwd; always take the
+  # fresh summary over any stale root-level copy
+  mv -f rust/BENCH_engine.json BENCH_engine.json
+fi
+test -f BENCH_engine.json
+echo "perf summary: $(pwd)/BENCH_engine.json"
