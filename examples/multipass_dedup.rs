@@ -2,6 +2,10 @@
 //! twice with different blocking keys and union the results — dirty title
 //! prefixes no longer doom recall.
 //!
+//! The passes are independent MapReduce jobs; `multipass::run` submits
+//! them all to one shared `JobScheduler` (`workers` map/reduce slots), so
+//! their task waves interleave instead of running job-at-a-time.
+//!
 //! ```bash
 //! cargo run --release --example multipass_dedup -- --n 10000
 //! ```

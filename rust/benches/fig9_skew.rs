@@ -1,25 +1,37 @@
 //! Table 1 + Figures 9/10: partition-function skew ladder and its effect
-//! on RepSN runtime (w = 100, m = r-slots = 8).
+//! on RepSN runtime (w = 100, m = r-slots = 8), plus the ISSUE-2
+//! speculation sweep.
 //!
-//! Emits three artifacts:
+//! Emits:
 //!  * Table 1 — partition function → Gini coefficient,
 //!  * Fig 9   — simulated 8-core execution time per partition strategy,
-//!  * Fig 10  — (gini, time) series (runtime as a function of skew).
+//!  * Fig 10  — (gini, time) series (runtime as a function of skew),
+//!  * a speculation sweep: spec on/off under **Zipf data skew** vs
+//!    **machine skew** (one slow node) — speculation rescues the latter,
+//!    not the former (the Kolb et al. 2012 load-balancing motivation),
+//!  * a measured multipass section: serial job-at-a-time baseline vs the
+//!    shared-slot `JobScheduler` (speculation off/on), byte-identical
+//!    outputs and wall-clock speedup,
+//!  * `BENCH_skew.json` with all of the above (via `scripts/bench.sh`).
 //!
 //! ```bash
-//! cargo bench --bench fig9_skew -- --n 20000 --window 100
+//! cargo bench --bench fig9_skew -- --n 20000 --window 100 --zipf 1.2
 //! ```
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use snmr::data::corpus::{generate, CorpusConfig};
-use snmr::data::skew::skew_to_last_partition;
-use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
+use snmr::data::skew::{skew_to_last_partition, zipf_skew_titles};
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey, TitleSuffixKey};
+use snmr::er::strategy::MatchStrategyConfig;
+use snmr::mapreduce::counters::names;
+use snmr::mapreduce::scheduler::{JobScheduler, SchedulerConfig};
 use snmr::mapreduce::sim::{simulate_job_chain, ClusterSpec};
 use snmr::metrics::report::{write_report, Table};
+use snmr::sn::multipass;
 use snmr::sn::partition::{gini, partition_sizes, EvenPartition, PartitionFn, RangePartition};
 use snmr::sn::repsn;
-use snmr::er::strategy::MatchStrategyConfig;
 use snmr::sn::types::{SnConfig, SnMode};
 use snmr::util::cli::{flag, switch, Args};
 use snmr::util::json::Json;
@@ -30,12 +42,14 @@ fn main() -> anyhow::Result<()> {
             switch("bench", "(passed by cargo bench; ignored)"),
             flag("n", "corpus size (default 20000)"),
             flag("window", "SN window (default 100)"),
+            flag("zipf", "Zipf exponent for the data-skew sweep (default 1.2)"),
         ],
         false,
     )
     .map_err(anyhow::Error::msg)?;
     let n = args.get_usize("n", 20_000).map_err(anyhow::Error::msg)?;
     let w = args.get_usize("window", 100).map_err(anyhow::Error::msg)?;
+    let zipf_s = args.get_f64("zipf", 1.2).map_err(anyhow::Error::msg)?;
 
     eprintln!("generating corpus (n={n})...");
     let corpus = generate(&CorpusConfig {
@@ -126,10 +140,168 @@ fn main() -> anyhow::Result<()> {
          most skewed ≈3× Manual; Even10 slightly faster than Even8\n\
          (more, smaller partitions → better slot packing)."
     );
-    let path = write_report(
-        "fig9_skew",
-        &Json::obj(vec![("n", Json::num(n as f64)), ("rows", Json::Arr(rows))]),
-    )?;
+
+    // --- speculation sweep (simulated): Zipf data skew vs machine skew ----
+    // Measure one RepSN profile on a Zipf-rewritten corpus, then simulate
+    // it with speculation off/on, on a healthy cluster and on one with a
+    // degraded node.  The contrast is the point: speculation cannot fix
+    // data skew (a clone re-runs the same oversized partition) but does
+    // rescue machine-skew stragglers.
+    let bk2 = TitlePrefixKey::new(2);
+    let mut zipf_entities = corpus.entities.clone();
+    zipf_skew_titles(&mut zipf_entities, zipf_s, 0x21BF);
+    let zipf_part = EvenPartition::ascii(8);
+    let zipf_gini = gini(&partition_sizes(
+        zipf_entities.iter().map(|e| bk2.key(e)),
+        &zipf_part,
+    ));
+    eprintln!("running RepSN on zipf(s={zipf_s}) corpus (g={zipf_gini:.2})...");
+    let zipf_cfg = SnConfig {
+        window: w,
+        num_map_tasks: 8,
+        workers: 1,
+        partitioner: Arc::new(zipf_part),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Matching(MatchStrategyConfig::default()),
+        sort_buffer_records: None,
+    };
+    let zipf_res = repsn::run(&zipf_entities, &zipf_cfg)?;
+    let mut t_spec = Table::new(
+        &format!("Speculation sweep (RepSN sim, 8 cores, zipf s={zipf_s}, g={zipf_gini:.2})"),
+        &["scenario", "speculative", "time_s", "launched", "won"],
+    );
+    let mut spec_rows = Vec::new();
+    let scenarios: [(&str, ClusterSpec); 2] = [
+        ("zipf_data_skew", ClusterSpec::paper_like(8)),
+        (
+            "zipf+1_slow_node_3x",
+            ClusterSpec::paper_like(8).with_slow_nodes(1, 3.0),
+        ),
+    ];
+    for (scenario, base_spec) in &scenarios {
+        for speculative in [false, true] {
+            let spec = base_spec.clone().with_speculation(speculative);
+            let (parts, total) = simulate_job_chain(&zipf_res.profiles, &spec);
+            let launched: u64 = parts.iter().map(|b| b.speculative_launched).sum();
+            let won: u64 = parts.iter().map(|b| b.speculative_won).sum();
+            t_spec.row(vec![
+                scenario.to_string(),
+                speculative.to_string(),
+                format!("{total:.1}"),
+                launched.to_string(),
+                won.to_string(),
+            ]);
+            spec_rows.push(Json::obj(vec![
+                ("scenario", Json::str(*scenario)),
+                ("speculative", Json::Bool(speculative)),
+                ("gini", Json::num(zipf_gini)),
+                ("sim8_s", Json::num(total)),
+                ("spec_launched", Json::num(launched as f64)),
+                ("spec_won", Json::num(won as f64)),
+            ]));
+        }
+    }
+    println!("{}", t_spec.render());
+    println!(
+        "Expected: speculation ≈ no-op under pure data skew (won=0), but\n\
+         recovers most of the slow-node penalty under machine skew."
+    );
+
+    // --- measured: concurrent multipass on the shared-slot scheduler ------
+    // The acceptance demonstration at bench scale: independent per-key
+    // RepSN jobs submitted to one JobScheduler vs the serial
+    // job-at-a-time baseline, with byte-identical outputs.
+    let mp_keys: Vec<Arc<dyn BlockingKey>> = vec![
+        Arc::new(TitlePrefixKey::new(1)),
+        Arc::new(TitlePrefixKey::new(2)),
+        Arc::new(TitlePrefixKey::new(3)),
+        Arc::new(TitleSuffixKey),
+    ];
+    let mp_cfg = SnConfig {
+        window: w.min(20),
+        num_map_tasks: 8,
+        workers: 1,
+        partitioner: Arc::new(RangePartition::balanced(
+            &corpus.entities,
+            |e| bk2.key(e),
+            8,
+        )),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+        sort_buffer_records: None,
+    };
+    eprintln!("running multipass: serial baseline...");
+    let t0 = Instant::now();
+    let serial = multipass::run_serial(&corpus.entities, &mp_cfg, &mp_keys)?;
+    let serial_secs = t0.elapsed().as_secs_f64();
+    let mut t_mp = Table::new(
+        &format!("Multipass: {} keys, serial vs 4-slot scheduler", mp_keys.len()),
+        &["mode", "wall_s", "speedup", "launched", "won", "identical"],
+    );
+    t_mp.row(vec![
+        "serial".into(),
+        format!("{serial_secs:.2}"),
+        "1.00x".into(),
+        "0".into(),
+        "0".into(),
+        "-".into(),
+    ]);
+    let mut mp_rows = vec![Json::obj(vec![
+        ("mode", Json::str("serial")),
+        ("wall_s", Json::num(serial_secs)),
+        ("speedup", Json::num(1.0)),
+    ])];
+    for speculative in [false, true] {
+        let label = if speculative { "scheduler+spec" } else { "scheduler" };
+        eprintln!("running multipass: {label}...");
+        let sched = JobScheduler::new(SchedulerConfig::slots(4).with_speculation(speculative));
+        let t0 = Instant::now();
+        let concurrent = multipass::run_on(&corpus.entities, &mp_cfg, &mp_keys, &sched)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let identical = serial.union.pair_set() == concurrent.union.pair_set();
+        assert!(identical, "{label}: scheduler output diverged from serial");
+        let launched = concurrent.union.counters.get(names::SPECULATIVE_LAUNCHED);
+        let won = concurrent.union.counters.get(names::SPECULATIVE_WON);
+        t_mp.row(vec![
+            label.into(),
+            format!("{secs:.2}"),
+            format!("{:.2}x", serial_secs / secs.max(1e-9)),
+            launched.to_string(),
+            won.to_string(),
+            identical.to_string(),
+        ]);
+        mp_rows.push(Json::obj(vec![
+            ("mode", Json::str(label)),
+            ("wall_s", Json::num(secs)),
+            ("speedup", Json::num(serial_secs / secs.max(1e-9))),
+            ("spec_launched", Json::num(launched as f64)),
+            ("spec_won", Json::num(won as f64)),
+            ("identical_output", Json::Bool(identical)),
+        ]));
+    }
+    println!("{}", t_mp.render());
+
+    let report = Json::obj(vec![
+        ("n", Json::num(n as f64)),
+        ("window", Json::num(w as f64)),
+        ("zipf_s", Json::num(zipf_s)),
+        ("rows", Json::Arr(rows)),
+        ("speculation_sim", Json::Arr(spec_rows.clone())),
+        ("multipass_measured", Json::Arr(mp_rows.clone())),
+    ]);
+    let path = write_report("fig9_skew", &report)?;
     eprintln!("report written to {}", path.display());
+
+    // perf-trajectory summary (consumed by scripts/bench.sh / CI)
+    let bench_json = Json::obj(vec![
+        ("bench", Json::str("fig9_skew")),
+        ("n", Json::num(n as f64)),
+        ("window", Json::num(w as f64)),
+        ("zipf_s", Json::num(zipf_s)),
+        ("speculation_sim", Json::Arr(spec_rows)),
+        ("multipass_measured", Json::Arr(mp_rows)),
+    ]);
+    std::fs::write("BENCH_skew.json", bench_json.to_string())?;
+    eprintln!("perf summary written to BENCH_skew.json");
     Ok(())
 }

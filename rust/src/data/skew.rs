@@ -55,6 +55,26 @@ pub fn skew_to_last_partition(
     rewritten
 }
 
+/// Rewrite every entity's two-character key prefix by sampling letter
+/// ranks from a Zipf(`s`) distribution — heavy-tailed *data* skew, as
+/// opposed to the machine skew of
+/// [`ClusterSpec::with_slow_nodes`](crate::mapreduce::sim::ClusterSpec::with_slow_nodes).
+/// The speculation sweep in `benches/fig9_skew.rs` contrasts the two:
+/// speculative execution rescues machine-skew stragglers but cannot beat
+/// data-skew ones (a clone re-processes the same oversized partition).
+/// Larger `s` ⇒ heavier head ⇒ higher partition-size Gini.
+/// Deterministic for a given `(entities, s, seed)`.
+pub fn zipf_skew_titles(entities: &mut [Entity], s: f64, seed: u64) {
+    assert!(s > 0.0);
+    let mut rng = Rng::new(seed ^ 0x21BF_05EE_D21F_0000);
+    for e in entities.iter_mut() {
+        let c1 = (b'a' + rng.zipf(26, s) as u8) as char;
+        let c2 = (b'a' + rng.zipf(26, s) as u8) as char;
+        let rest: String = e.title.chars().skip(2).collect();
+        e.title = format!("{c1}{c2}{rest}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +153,33 @@ mod tests {
         let p = EvenPartition::ascii(8);
         let n = skew_to_last_partition(&mut entities, &TitlePrefixKey::new(2), &p, 0.5, 1);
         assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn zipf_skew_is_heavy_tailed_and_deterministic() {
+        let corpus = generate(&CorpusConfig {
+            n_entities: 3000,
+            ..Default::default()
+        });
+        let p = EvenPartition::ascii(8);
+        let bk = TitlePrefixKey::new(2);
+        let base_sizes = partition_sizes(corpus.entities.iter().map(|e| bk.key(e)), &p);
+        let base_g = gini(&base_sizes);
+        let mut a = corpus.entities.clone();
+        zipf_skew_titles(&mut a, 1.2, 99);
+        let sizes = partition_sizes(a.iter().map(|e| bk.key(e)), &p);
+        let g = gini(&sizes);
+        assert!(
+            g > base_g + 0.1,
+            "zipf rewrite should raise gini: {base_g} → {g}"
+        );
+        let mut b = corpus.entities.clone();
+        zipf_skew_titles(&mut b, 1.2, 99);
+        assert_eq!(a, b, "same seed must give same corpus");
+        // heavier exponent ⇒ heavier head
+        let mut c = corpus.entities.clone();
+        zipf_skew_titles(&mut c, 2.0, 99);
+        let g2 = gini(&partition_sizes(c.iter().map(|e| bk.key(e)), &p));
+        assert!(g2 > g, "s=2.0 should be more skewed than s=1.2: {g} vs {g2}");
     }
 }

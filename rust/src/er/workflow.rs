@@ -11,6 +11,7 @@ use std::sync::Arc;
 use super::blockkey::BlockingKey;
 use super::entity::Entity;
 use super::strategy::MatchStrategyConfig;
+use crate::mapreduce::scheduler::{Exec, JobScheduler};
 use crate::sn::types::{SnConfig, SnMode, SnResult};
 use crate::sn::{jobsn, repsn, srp, standard_blocking};
 
@@ -79,17 +80,53 @@ impl WorkflowConfig {
 
 /// Run the full workflow; returns the variant's [`SnResult`].
 pub fn run(entities: &[Entity], cfg: &WorkflowConfig) -> anyhow::Result<SnResult> {
+    run_on(entities, cfg, Exec::Serial)
+}
+
+/// As [`run`], on an explicit executor.  With [`Exec::Scheduler`] every
+/// MapReduce job the workflow issues (JobSN issues two, chained) runs on
+/// the shared slot pool, interleaving with other concurrent workflows.
+pub fn run_on(
+    entities: &[Entity],
+    cfg: &WorkflowConfig,
+    exec: Exec<'_>,
+) -> anyhow::Result<SnResult> {
     let mut sn = cfg.sn.clone();
     sn.mode = match &cfg.matching {
         None => SnMode::Blocking,
         Some(m) => SnMode::Matching(m.clone()),
     };
     match cfg.strategy {
-        BlockingStrategy::Srp => srp::run(entities, &sn),
-        BlockingStrategy::JobSn => jobsn::run(entities, &sn),
-        BlockingStrategy::RepSn => repsn::run(entities, &sn),
-        BlockingStrategy::StandardBlocking => standard_blocking::run(entities, &sn),
+        BlockingStrategy::Srp => srp::run_on(entities, &sn, exec),
+        BlockingStrategy::JobSn => jobsn::run_on(entities, &sn, exec),
+        BlockingStrategy::RepSn => repsn::run_on(entities, &sn, exec),
+        BlockingStrategy::StandardBlocking => standard_blocking::run_on(entities, &sn, exec),
     }
+}
+
+/// Run several independent workflows concurrently on one shared
+/// scheduler: each workflow gets its own driver thread, every job's
+/// map/reduce tasks contend for the scheduler's slots, and results come
+/// back in input order.  This is the multi-job chain the old code ran
+/// strictly serially from the driver.
+pub fn run_many(
+    entities: &[Entity],
+    cfgs: &[WorkflowConfig],
+    sched: &JobScheduler,
+) -> Vec<anyhow::Result<SnResult>> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = cfgs
+            .iter()
+            .map(|cfg| s.spawn(move || run_on(entities, cfg, Exec::Scheduler(sched))))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(p) => std::panic::resume_unwind(p),
+            })
+            .collect()
+    })
 }
 
 #[cfg(test)]
@@ -154,6 +191,38 @@ mod tests {
                 strategy.name()
             );
             assert!(res.pairs.is_empty(), "matching mode must not emit raw pairs");
+        }
+    }
+
+    #[test]
+    fn run_many_on_shared_scheduler_matches_serial() {
+        let entities = corpus_with_dup();
+        let sn = base_sn(&entities);
+        let cfgs: Vec<WorkflowConfig> = [
+            BlockingStrategy::Srp,
+            BlockingStrategy::JobSn,
+            BlockingStrategy::RepSn,
+            BlockingStrategy::StandardBlocking,
+        ]
+        .into_iter()
+        .map(|s| WorkflowConfig::new(s, sn.clone()))
+        .collect();
+        let serial: Vec<SnResult> = cfgs
+            .iter()
+            .map(|c| run(&entities, c).unwrap())
+            .collect();
+        let sched = JobScheduler::with_slots(4);
+        let concurrent = run_many(&entities, &cfgs, &sched);
+        assert_eq!(concurrent.len(), cfgs.len());
+        for ((s, c), cfg) in serial.iter().zip(&concurrent).zip(&cfgs) {
+            let c = c.as_ref().unwrap();
+            assert_eq!(
+                s.pair_set(),
+                c.pair_set(),
+                "{} differs between serial and scheduled",
+                cfg.strategy.name()
+            );
+            assert_eq!(s.stats.len(), c.stats.len());
         }
     }
 

@@ -33,6 +33,13 @@ pub mod names {
     /// when the job registers one).
     pub const COMBINE_INPUT_RECORDS: &str = "engine.combine_input_records";
     pub const COMBINE_OUTPUT_RECORDS: &str = "engine.combine_output_records";
+    /// Speculative task attempts cloned onto idle slots by the
+    /// [`scheduler`](crate::mapreduce::scheduler)'s straggler detector
+    /// (only present on scheduler-executed jobs with speculation enabled).
+    pub const SPECULATIVE_LAUNCHED: &str = "engine.speculative_launched";
+    /// Speculative attempts that finished before the original task
+    /// (first-completion-wins).
+    pub const SPECULATIVE_WON: &str = "engine.speculative_won";
 }
 
 impl Counters {

@@ -43,8 +43,10 @@ pub type GroupFn<KT> = Arc<dyn Fn(&KT, &KT) -> bool + Send + Sync>;
 /// Type-erased map-side combine step: folds one sorted run in place,
 /// returning `(records_in, records_out)`.  Built by
 /// [`run_job_with_combiner`] so the `Clone` bound the fold needs stays off
-/// the combiner-less [`run_job`] path.
-type CombineFn<K, V> = Arc<dyn Fn(&mut Vec<(K, V)>, &Counters) -> (u64, u64) + Send + Sync>;
+/// the combiner-less [`run_job`] path.  Also built by the concurrent
+/// [`scheduler`](super::scheduler), which shares the task bodies below.
+pub(crate) type CombineFn<K, V> =
+    Arc<dyn Fn(&mut Vec<(K, V)>, &Counters) -> (u64, u64) + Send + Sync>;
 
 /// Per-job measured statistics (feed the simulator and the reports).
 #[derive(Debug, Clone, Default)]
@@ -111,6 +113,253 @@ where
         sorters[p].push((k, v));
     }
     n
+}
+
+// ---------------------------------------------------------------------------
+// Task bodies, shared by the serial driver below and the concurrent
+// `scheduler` module — both paths execute byte-identical task code, which
+// is what makes "scheduler output == serial output" a structural property
+// rather than something each job has to re-establish.
+// ---------------------------------------------------------------------------
+
+/// Everything one map task hands to the shuffle, plus its measurements.
+pub(crate) struct MapTaskOutput<KT, VT> {
+    /// Sorted runs per reduce partition: one run per bucket without a
+    /// sort budget, one per sealed chunk with one.
+    pub bucket_runs: Vec<Vec<Vec<(KT, VT)>>>,
+    /// Post-combine intermediate bytes per reduce partition.
+    pub bucket_bytes: Vec<u64>,
+    pub secs: f64,
+    pub records: u64,
+    pub bytes: u64,
+    pub spilled: u64,
+    pub spill_runs: u64,
+    pub combine_in: u64,
+    pub combine_out: u64,
+}
+
+/// Execute one map task over one owned split: `configure` → `map`* →
+/// `close`, draining emitted records into per-partition [`RunSorter`]s,
+/// then pre-reducing each sealed run with the optional combiner.
+pub(crate) fn exec_map_task<KI, VI, KT, VT>(
+    split: Vec<(KI, VI)>,
+    r: usize,
+    sort_budget: Option<usize>,
+    mapper: &dyn MapTaskFactory<KI, VI, KT, VT>,
+    partitioner: &dyn Partitioner<KT>,
+    combine_fn: Option<&CombineFn<KT, VT>>,
+    counters: &Counters,
+) -> MapTaskOutput<KT, VT>
+where
+    KT: Ord + SizeEstimate,
+    VT: SizeEstimate,
+{
+    let t0 = Instant::now();
+    let budget = sort_budget.unwrap_or(usize::MAX);
+    let mut sorters: Vec<_> = (0..r)
+        .map(|_| RunSorter::new(budget, key_cmp::<KT, VT>))
+        .collect();
+    let mut task = mapper.create_task();
+    let mut out = Emitter::new();
+    let mut records: u64 = 0;
+    task.configure(&mut out, counters);
+    if out.len() >= budget {
+        records += drain_emitter(&mut out, partitioner, r, &mut sorters);
+    }
+    for (k, v) in split {
+        task.map(k, v, &mut out, counters);
+        if out.len() >= budget {
+            records += drain_emitter(&mut out, partitioner, r, &mut sorters);
+        }
+    }
+    task.close(&mut out, counters);
+    records += drain_emitter(&mut out, partitioner, r, &mut sorters);
+    let bytes = out.bytes();
+
+    let mut bucket_runs: Vec<Vec<Vec<(KT, VT)>>> = Vec::with_capacity(r);
+    let mut spill_runs = 0u64;
+    for s in sorters {
+        let runs = s.into_runs();
+        spill_runs += runs.len() as u64;
+        bucket_runs.push(runs);
+    }
+    let (mut combine_in, mut combine_out) = (0u64, 0u64);
+    if let Some(cf) = combine_fn {
+        for runs in &mut bucket_runs {
+            for run in runs.iter_mut() {
+                let (ci, co) = cf(run, counters);
+                combine_in += ci;
+                combine_out += co;
+            }
+        }
+    }
+    let mut spilled = 0u64;
+    let bucket_bytes: Vec<u64> = bucket_runs
+        .iter()
+        .map(|runs| {
+            runs.iter()
+                .flatten()
+                .map(|(k, v)| (k.size_bytes() + v.size_bytes()) as u64)
+                .sum()
+        })
+        .collect();
+    for runs in &bucket_runs {
+        for run in runs {
+            spilled += run.len() as u64;
+        }
+    }
+    MapTaskOutput {
+        bucket_runs,
+        bucket_bytes,
+        secs: t0.elapsed().as_secs_f64(),
+        records,
+        bytes,
+        spilled,
+        spill_runs,
+        combine_in,
+        combine_out,
+    }
+}
+
+/// One reduce task's output plus its measurements.
+pub(crate) struct ReduceTaskOutput<KO, VO> {
+    pub output: Vec<(KO, VO)>,
+    pub secs: f64,
+    pub groups: u64,
+    pub in_records: u64,
+}
+
+/// Execute one reduce task: lazily k-way-merge `runs` and walk
+/// grouping-comparator groups straight off the heap, buffering only the
+/// current group's values.
+pub(crate) fn exec_reduce_task<KT, VT, KO, VO>(
+    runs: Vec<Vec<(KT, VT)>>,
+    reducer: &dyn ReduceTaskFactory<KT, VT, KO, VO>,
+    grouping: &(dyn Fn(&KT, &KT) -> bool + Send + Sync),
+    counters: &Counters,
+) -> ReduceTaskOutput<KO, VO>
+where
+    KT: Ord,
+    KO: SizeEstimate,
+    VO: SizeEstimate,
+{
+    let t0 = Instant::now();
+    let mut merge = MergeIter::new(runs);
+    let in_records = merge.len() as u64;
+    let mut task = reducer.create_task();
+    let mut out = Emitter::new();
+    task.configure(&mut out, counters);
+    let consumed = AtomicU64::new(0);
+    let mut groups = 0u64;
+    let mut group_vals: Vec<VT> = Vec::new();
+    let mut next = merge.next();
+    // walk groups of consecutive keys equal under the grouping fn; `next`
+    // parks the first record of the following group
+    while let Some((gkey, gval)) = next.take() {
+        group_vals.clear();
+        group_vals.push(gval);
+        for (k, v) in merge.by_ref() {
+            if grouping(&gkey, &k) {
+                group_vals.push(v);
+            } else {
+                next = Some((k, v));
+                break;
+            }
+        }
+        groups += 1;
+        // Hadoop hands the *first* key of the group to reduce.
+        let it = ValuesIter::new(&group_vals, &consumed);
+        task.reduce(&gkey, it, &mut out, counters);
+    }
+    task.close(&mut out, counters);
+    ReduceTaskOutput {
+        output: out.into_pairs(),
+        secs: t0.elapsed().as_secs_f64(),
+        groups,
+        in_records,
+    }
+}
+
+/// Divide `input` into `m` contiguous splits (fewer for tiny inputs).
+pub(crate) fn split_input<KI, VI>(input: Vec<(KI, VI)>, m: usize) -> Vec<Vec<(KI, VI)>> {
+    let ranges = even_splits(input.len(), m);
+    let mut rest = input;
+    // carve from the back so we can use split_off without copying
+    let mut carved: Vec<Vec<(KI, VI)>> = Vec::with_capacity(ranges.len());
+    for (start, _) in ranges.iter().rev() {
+        carved.push(rest.split_off(*start));
+    }
+    carved.reverse();
+    carved
+}
+
+/// The shuffle transpose: reducer `j` receives every map task's bucket-`j`
+/// runs, appended in map-task order (the merge's stability contract).  No
+/// record is touched.  Returns `(per_reducer_runs, shuffle_bytes)`.
+#[allow(clippy::type_complexity)]
+pub(crate) fn transpose_runs<KT, VT>(
+    map_outputs: Vec<MapTaskOutput<KT, VT>>,
+    r: usize,
+) -> (Vec<Vec<Vec<(KT, VT)>>>, Vec<u64>) {
+    let mut per_reducer_runs: Vec<Vec<Vec<(KT, VT)>>> = (0..r).map(|_| Vec::new()).collect();
+    let mut shuffle_bytes = vec![0u64; r];
+    for mo in map_outputs {
+        let MapTaskOutput {
+            bucket_runs,
+            bucket_bytes,
+            ..
+        } = mo;
+        for (j, (runs, b)) in bucket_runs.into_iter().zip(bucket_bytes).enumerate() {
+            shuffle_bytes[j] += b;
+            per_reducer_runs[j].extend(runs);
+        }
+    }
+    (per_reducer_runs, shuffle_bytes)
+}
+
+/// Fold a finished map wave's measurements into the job counters; returns
+/// the total map output records.
+pub(crate) fn record_map_wave<KT, VT>(
+    counters: &Counters,
+    outs: &[MapTaskOutput<KT, VT>],
+    has_combiner: bool,
+) -> u64 {
+    let map_records: u64 = outs.iter().map(|o| o.records).sum();
+    let map_bytes: u64 = outs.iter().map(|o| o.bytes).sum();
+    counters.add(names::MAP_OUTPUT_RECORDS, map_records);
+    counters.add(names::MAP_OUTPUT_BYTES, map_bytes);
+    counters.add(names::SPILLED_RECORDS, outs.iter().map(|o| o.spilled).sum());
+    counters.add(
+        names::MAP_SPILL_RUNS,
+        outs.iter().map(|o| o.spill_runs).sum(),
+    );
+    if has_combiner {
+        counters.add(
+            names::COMBINE_INPUT_RECORDS,
+            outs.iter().map(|o| o.combine_in).sum(),
+        );
+        counters.add(
+            names::COMBINE_OUTPUT_RECORDS,
+            outs.iter().map(|o| o.combine_out).sum(),
+        );
+    }
+    map_records
+}
+
+/// Fold a finished reduce wave's measurements into the job counters;
+/// returns the total reduce output records.
+pub(crate) fn record_reduce_wave<KO, VO>(
+    counters: &Counters,
+    outs: &[ReduceTaskOutput<KO, VO>],
+) -> u64 {
+    counters.add(names::REDUCE_GROUPS, outs.iter().map(|o| o.groups).sum());
+    counters.add(
+        names::REDUCE_INPUT_RECORDS,
+        outs.iter().map(|o| o.in_records).sum(),
+    );
+    let red_records: u64 = outs.iter().map(|o| o.output.len() as u64).sum();
+    counters.add(names::REDUCE_OUTPUT_RECORDS, red_records);
+    red_records
 }
 
 /// Run one MapReduce job over an in-memory input.
@@ -201,19 +450,8 @@ where
     let sort_budget = config.sort_buffer_records;
 
     // ---- split ------------------------------------------------------------
-    let n_input = input.len();
-    counters.add(names::MAP_INPUT_RECORDS, n_input as u64);
-    let ranges = even_splits(n_input, m);
-    let splits: Vec<Vec<(KI, VI)>> = {
-        let mut rest = input;
-        // carve from the back so we can use split_off without copying
-        let mut carved: Vec<Vec<(KI, VI)>> = Vec::with_capacity(ranges.len());
-        for (start, _) in ranges.iter().rev() {
-            carved.push(rest.split_off(*start));
-        }
-        carved.reverse();
-        carved // may have fewer than `m` splits for tiny inputs
-    };
+    counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
+    let splits = split_input(input, m); // may be fewer than `m` for tiny inputs
 
     // ---- map phase ---------------------------------------------------------
     // Each map task: configure → map* → close; emitted records drain into
@@ -221,91 +459,21 @@ where
     // sealed chunk is one sorted run), then the combiner pre-reduces each
     // run before it is handed to the shuffle.
     let t_map = Instant::now();
-    struct MapOut<KT, VT> {
-        /// Sorted runs per reduce partition: one run per bucket without a
-        /// sort budget, one per sealed chunk with one.
-        bucket_runs: Vec<Vec<Vec<(KT, VT)>>>,
-        /// Post-combine intermediate bytes per reduce partition.
-        bucket_bytes: Vec<u64>,
-        secs: f64,
-        records: u64,
-        bytes: u64,
-        spilled: u64,
-        spill_runs: u64,
-        combine_in: u64,
-        combine_out: u64,
-    }
-    let map_outputs: Vec<MapOut<KT, VT>> = {
+    let map_outputs: Vec<MapTaskOutput<KT, VT>> = {
         let mapper = Arc::clone(&mapper);
         let partitioner = Arc::clone(&partitioner);
         let counters = Arc::clone(&counters);
         let combine_fn = combine_fn.clone();
         run_owned(config.workers, splits, move |_i, split: Vec<(KI, VI)>| {
-            let t0 = Instant::now();
-            let budget = sort_budget.unwrap_or(usize::MAX);
-            let mut sorters: Vec<_> = (0..r)
-                .map(|_| RunSorter::new(budget, key_cmp::<KT, VT>))
-                .collect();
-            let mut task = mapper.create_task();
-            let mut out = Emitter::new();
-            let mut records: u64 = 0;
-            task.configure(&mut out, &counters);
-            if out.len() >= budget {
-                records += drain_emitter(&mut out, partitioner.as_ref(), r, &mut sorters);
-            }
-            for (k, v) in split {
-                task.map(k, v, &mut out, &counters);
-                if out.len() >= budget {
-                    records += drain_emitter(&mut out, partitioner.as_ref(), r, &mut sorters);
-                }
-            }
-            task.close(&mut out, &counters);
-            records += drain_emitter(&mut out, partitioner.as_ref(), r, &mut sorters);
-            let bytes = out.bytes();
-
-            let mut bucket_runs: Vec<Vec<Vec<(KT, VT)>>> = Vec::with_capacity(r);
-            let mut spill_runs = 0u64;
-            for s in sorters {
-                let runs = s.into_runs();
-                spill_runs += runs.len() as u64;
-                bucket_runs.push(runs);
-            }
-            let (mut combine_in, mut combine_out) = (0u64, 0u64);
-            if let Some(cf) = combine_fn.as_ref() {
-                for runs in &mut bucket_runs {
-                    for run in runs.iter_mut() {
-                        let (ci, co) = cf(run, &counters);
-                        combine_in += ci;
-                        combine_out += co;
-                    }
-                }
-            }
-            let mut spilled = 0u64;
-            let bucket_bytes: Vec<u64> = bucket_runs
-                .iter()
-                .map(|runs| {
-                    runs.iter()
-                        .flatten()
-                        .map(|(k, v)| (k.size_bytes() + v.size_bytes()) as u64)
-                        .sum()
-                })
-                .collect();
-            for runs in &bucket_runs {
-                for run in runs {
-                    spilled += run.len() as u64;
-                }
-            }
-            MapOut {
-                bucket_runs,
-                bucket_bytes,
-                secs: t0.elapsed().as_secs_f64(),
-                records,
-                bytes,
-                spilled,
-                spill_runs,
-                combine_in,
-                combine_out,
-            }
+            exec_map_task(
+                split,
+                r,
+                sort_budget,
+                mapper.as_ref(),
+                partitioner.as_ref(),
+                combine_fn.as_ref(),
+                &counters,
+            )
         })
     };
     let map_phase_secs = t_map.elapsed().as_secs_f64();
@@ -315,49 +483,13 @@ where
         map_phase_secs,
         ..Default::default()
     };
-    let map_records: u64 = map_outputs.iter().map(|o| o.records).sum();
-    let map_bytes: u64 = map_outputs.iter().map(|o| o.bytes).sum();
-    counters.add(names::MAP_OUTPUT_RECORDS, map_records);
-    counters.add(names::MAP_OUTPUT_BYTES, map_bytes);
-    counters.add(
-        names::SPILLED_RECORDS,
-        map_outputs.iter().map(|o| o.spilled).sum(),
-    );
-    counters.add(
-        names::MAP_SPILL_RUNS,
-        map_outputs.iter().map(|o| o.spill_runs).sum(),
-    );
-    if combine_fn.is_some() {
-        counters.add(
-            names::COMBINE_INPUT_RECORDS,
-            map_outputs.iter().map(|o| o.combine_in).sum(),
-        );
-        counters.add(
-            names::COMBINE_OUTPUT_RECORDS,
-            map_outputs.iter().map(|o| o.combine_out).sum(),
-        );
-    }
-    stats.map_output_records = map_records;
+    stats.map_output_records = record_map_wave(&counters, &map_outputs, combine_fn.is_some());
 
     // ---- shuffle -----------------------------------------------------------
-    // Transpose run ownership only: reducer j receives every map task's
-    // bucket-j runs, appended in map-task order (the merge's stability
-    // contract).  No record is touched — the k-way merge itself streams
-    // inside each reduce task below.
+    // Transpose run ownership only — the k-way merge itself streams inside
+    // each reduce task below.
     let t_shuffle = Instant::now();
-    let mut per_reducer_runs: Vec<Vec<Vec<(KT, VT)>>> = (0..r).map(|_| Vec::new()).collect();
-    let mut shuffle_bytes = vec![0u64; r];
-    for mo in map_outputs {
-        let MapOut {
-            bucket_runs,
-            bucket_bytes,
-            ..
-        } = mo;
-        for (j, (runs, b)) in bucket_runs.into_iter().zip(bucket_bytes).enumerate() {
-            shuffle_bytes[j] += b;
-            per_reducer_runs[j].extend(runs);
-        }
-    }
+    let (per_reducer_runs, shuffle_bytes) = transpose_runs(map_outputs, r);
     counters.add(names::SHUFFLE_BYTES, shuffle_bytes.iter().sum());
     stats.shuffle_bytes_per_reducer = shuffle_bytes;
     stats.shuffle_phase_secs = t_shuffle.elapsed().as_secs_f64();
@@ -368,13 +500,7 @@ where
     // (they must form a contiguous `&[VT]` for the forward-cursor
     // iterator).
     let t_reduce = Instant::now();
-    struct RedOut<KO, VO> {
-        output: Vec<(KO, VO)>,
-        secs: f64,
-        groups: u64,
-        in_records: u64,
-    }
-    let red_outputs: Vec<RedOut<KO, VO>> = {
+    let red_outputs: Vec<ReduceTaskOutput<KO, VO>> = {
         let reducer = Arc::clone(&reducer);
         let grouping = Arc::clone(&grouping);
         let counters = Arc::clone(&counters);
@@ -382,54 +508,14 @@ where
             config.workers,
             per_reducer_runs,
             move |_j, runs: Vec<Vec<(KT, VT)>>| {
-                let t0 = Instant::now();
-                let mut merge = MergeIter::new(runs);
-                let in_records = merge.len() as u64;
-                let mut task = reducer.create_task();
-                let mut out = Emitter::new();
-                task.configure(&mut out, &counters);
-                let consumed = AtomicU64::new(0);
-                let mut groups = 0u64;
-                let mut group_vals: Vec<VT> = Vec::new();
-                let mut next = merge.next();
-                // walk groups of consecutive keys equal under the grouping
-                // fn; `next` parks the first record of the following group
-                while let Some((gkey, gval)) = next.take() {
-                    group_vals.clear();
-                    group_vals.push(gval);
-                    for (k, v) in merge.by_ref() {
-                        if grouping(&gkey, &k) {
-                            group_vals.push(v);
-                        } else {
-                            next = Some((k, v));
-                            break;
-                        }
-                    }
-                    groups += 1;
-                    // Hadoop hands the *first* key of the group to reduce.
-                    let it = ValuesIter::new(&group_vals, &consumed);
-                    task.reduce(&gkey, it, &mut out, &counters);
-                }
-                task.close(&mut out, &counters);
-                RedOut {
-                    output: out.into_pairs(),
-                    secs: t0.elapsed().as_secs_f64(),
-                    groups,
-                    in_records,
-                }
+                exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &counters)
             },
         )
     };
     stats.reduce_phase_secs = t_reduce.elapsed().as_secs_f64();
     stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
-    let groups: u64 = red_outputs.iter().map(|o| o.groups).sum();
-    let red_in: u64 = red_outputs.iter().map(|o| o.in_records).sum();
-    counters.add(names::REDUCE_GROUPS, groups);
-    counters.add(names::REDUCE_INPUT_RECORDS, red_in);
+    stats.reduce_output_records = record_reduce_wave(&counters, &red_outputs);
     let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
-    let red_records: u64 = outputs.iter().map(|o| o.len() as u64).sum();
-    counters.add(names::REDUCE_OUTPUT_RECORDS, red_records);
-    stats.reduce_output_records = red_records;
     stats.total_secs = t_start.elapsed().as_secs_f64();
 
     JobResult {

@@ -60,14 +60,27 @@
 //! preserved behaviorally by [`shuffle::merge_sorted_runs`] and checked
 //! byte-identical by `tests/prop_shuffle.rs`.
 //!
-//! What we deliberately do **not** model: speculative execution (the paper
-//! turns it off), task failure/retry, and rack topology.
+//! ## Multi-job execution and speculation
+//!
+//! [`run_job`] models a cluster running exactly one job.  The
+//! [`scheduler`] module models the cluster itself: a [`JobScheduler`]
+//! owns one shared pool of map slots and one of reduce slots (the
+//! [`sim::ClusterSpec`] slot accounting, made executable), any number of
+//! jobs run concurrently against them, and **speculative execution** —
+//! which the paper disables in §5.1, and which we previously did not
+//! model — clones straggling tasks onto idle slots with
+//! first-completion-wins semantics.  See the [`scheduler`] module docs
+//! for the slot model, and [`sim::ClusterSpec::speculative`] for the
+//! matching simulator knob.
+//!
+//! Still deliberately unmodeled: task failure/retry and rack topology.
 
 pub mod combiner;
 pub mod config;
 pub mod counters;
 pub mod dfs;
 pub mod engine;
+pub mod scheduler;
 pub mod seqfile;
 pub mod shuffle;
 pub mod sim;
@@ -79,6 +92,7 @@ pub use combiner::{Combiner, FnCombiner};
 pub use config::JobConfig;
 pub use counters::Counters;
 pub use engine::{run_job, run_job_with_combiner, JobResult, JobStats};
+pub use scheduler::{Exec, JobHandle, JobScheduler, SchedulerConfig, SpecPolicy};
 pub use shuffle::MergeIter;
 pub use types::{
     Emitter, FnMapTask, FnReduceTask, HashPartitioner, MapTask, MapTaskFactory, Partitioner,

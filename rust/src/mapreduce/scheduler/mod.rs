@@ -1,0 +1,723 @@
+//! Multi-job slot scheduler: concurrent job execution on one shared
+//! worker pool, with speculative execution.
+//!
+//! ## The slot model
+//!
+//! Hadoop schedules tasks onto a fixed number of per-node **map slots**
+//! and **reduce slots** (§5.1: "each node was configured to run at most
+//! two map and reduce tasks in parallel") that are shared by *every* job
+//! in the cluster — submitting a second job does not buy more slots, it
+//! contends for the same ones.  The serial [`run_job`] driver models a
+//! cluster running exactly one job: it spins up a private pool per phase.
+//! This module models the cluster itself:
+//!
+//! * a [`JobScheduler`] owns one map pool and one reduce pool (mirroring
+//!   [`ClusterSpec::map_slots`]/[`ClusterSpec::reduce_slots`] accounting);
+//! * any number of jobs run concurrently ([`JobScheduler::submit`] spawns
+//!   a lightweight driver thread per job and returns a [`JobHandle`];
+//!   [`JobScheduler::run`] drives a job inline on the caller's thread);
+//! * map/reduce *tasks* of independent jobs interleave FIFO across the
+//!   shared slots — job A's reduce wave can overlap job B's map wave,
+//!   exactly as on a real cluster;
+//! * each job still gets its own [`JobStats`] and [`Counters`], so
+//!   per-job simulator profiles stay meaningful;
+//! * a **DAG** of jobs is expressed with handles: join a prerequisite
+//!   before submitting the dependent job (`sn::jobsn` chains two jobs
+//!   this way; `sn::multipass` fans out independent per-key jobs).
+//!
+//! ## Speculative execution
+//!
+//! The paper disables speculation (§5.1), and its skew study (Fig. 9)
+//! shows why that matters: stragglers dominate makespan.  With
+//! `speculative = true` the scheduler clones any running task whose
+//! elapsed time exceeds `slowdown ×` the running median of completed task
+//! durations onto an *idle* slot; the first attempt to finish wins (an
+//! atomic [`OnceSlots::try_put`](crate::util::threadpool::OnceSlots::try_put)
+//! race), the loser's result and counters are discarded.  Task bodies are
+//! deterministic functions of their input, so speculation never changes
+//! job output — only, possibly, the makespan.  New counters
+//! [`names::SPECULATIVE_LAUNCHED`] / [`names::SPECULATIVE_WON`] report
+//! what it did; [`ClusterSpec::speculative`] is the matching simulator
+//! knob, so simulated and measured makespans stay comparable.
+//!
+//! Both execution paths share the exact same task bodies
+//! ([`engine::exec_map_task`](super::engine) / `exec_reduce_task`), which
+//! makes "scheduler output == serial output" structural rather than
+//! per-job luck; `tests/prop_sched.rs` asserts it property-style.
+
+mod speculate;
+
+pub use speculate::SpecPolicy;
+
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::combiner::{combine_sorted_bucket, Combiner};
+use super::config::JobConfig;
+use super::counters::{names, Counters};
+use super::engine::{
+    exec_map_task, exec_reduce_task, record_map_wave, record_reduce_wave, run_job,
+    run_job_with_combiner, split_input, transpose_runs, CombineFn, GroupFn, JobResult, JobStats,
+    MapTaskOutput, ReduceTaskOutput,
+};
+use super::sim::ClusterSpec;
+use super::types::{MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate};
+use crate::util::threadpool::ThreadPool;
+
+/// Scheduler shape: shared slot counts plus the speculation knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Concurrent map tasks across *all* jobs.
+    pub map_slots: usize,
+    /// Concurrent reduce tasks across *all* jobs.
+    pub reduce_slots: usize,
+    /// Clone stragglers onto idle slots (first-completion-wins).
+    pub speculative: bool,
+    /// Straggler-detection thresholds.
+    pub policy: SpecPolicy,
+}
+
+impl SchedulerConfig {
+    /// `n` map slots and `n` reduce slots, speculation off.
+    pub fn slots(n: usize) -> Self {
+        Self {
+            map_slots: n.max(1),
+            reduce_slots: n.max(1),
+            speculative: false,
+            policy: SpecPolicy::default(),
+        }
+    }
+
+    pub fn with_speculation(mut self, on: bool) -> Self {
+        self.speculative = on;
+        self
+    }
+
+    pub fn with_policy(mut self, policy: SpecPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Mirror a simulated cluster's slot counts and speculation knob, so
+    /// measured and simulated makespans stay comparable.
+    pub fn from_cluster(spec: &ClusterSpec) -> Self {
+        Self {
+            map_slots: spec.map_slots().max(1),
+            reduce_slots: spec.reduce_slots().max(1),
+            speculative: spec.speculative,
+            policy: SpecPolicy::default(),
+        }
+    }
+}
+
+struct SchedInner {
+    cfg: SchedulerConfig,
+    map_pool: ThreadPool,
+    reduce_pool: ThreadPool,
+}
+
+/// The shared-slot multi-job scheduler.  Cheap to clone (all clones share
+/// the same pools); dropping the last clone joins the worker threads.
+#[derive(Clone)]
+pub struct JobScheduler {
+    inner: Arc<SchedInner>,
+}
+
+/// A submitted job's pending result.
+pub struct JobHandle<KO, VO> {
+    handle: JoinHandle<JobResult<KO, VO>>,
+}
+
+impl<KO, VO> JobHandle<KO, VO> {
+    /// Block until the job finishes.  DAG edges between jobs are expressed
+    /// by joining a prerequisite's handle before submitting the dependent
+    /// job.  Panics inside the job's tasks resurface here.
+    pub fn join(self) -> JobResult<KO, VO> {
+        match self.handle.join() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    }
+}
+
+impl JobScheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        let map_pool = ThreadPool::new(cfg.map_slots);
+        let reduce_pool = ThreadPool::new(cfg.reduce_slots);
+        Self {
+            inner: Arc::new(SchedInner {
+                cfg,
+                map_pool,
+                reduce_pool,
+            }),
+        }
+    }
+
+    /// Shorthand: `n` map + `n` reduce slots, speculation off.
+    pub fn with_slots(n: usize) -> Self {
+        Self::new(SchedulerConfig::slots(n))
+    }
+
+    pub fn map_slots(&self) -> usize {
+        self.inner.map_pool.size()
+    }
+
+    pub fn reduce_slots(&self) -> usize {
+        self.inner.reduce_pool.size()
+    }
+
+    pub fn speculative(&self) -> bool {
+        self.inner.cfg.speculative
+    }
+
+    /// Run one job inline on the caller's thread; its tasks execute on the
+    /// scheduler's shared slots.  Signature mirrors [`run_job`], with the
+    /// extra `Clone`/`Sync` bounds speculation needs to re-run a task from
+    /// its retained input.  `config.workers` is ignored — slot counts come
+    /// from the scheduler.
+    pub fn run<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: &JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+    ) -> JobResult<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        self.run_inner(config, input, mapper, partitioner, grouping, reducer, None)
+    }
+
+    /// As [`JobScheduler::run`], with a map-side combiner.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_with_combiner<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: &JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+        combiner: Arc<dyn Combiner<KT, VT>>,
+    ) -> JobResult<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        self.run_inner(
+            config,
+            input,
+            mapper,
+            partitioner,
+            grouping,
+            reducer,
+            Some(make_combine_fn(combiner)),
+        )
+    }
+
+    /// Submit a job for concurrent execution: a driver thread is spawned
+    /// for the job and a [`JobHandle`] returned immediately.  All
+    /// submitted jobs' tasks interleave on the scheduler's shared slots.
+    pub fn submit<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+    ) -> JobHandle<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        self.spawn_driver(config, input, mapper, partitioner, grouping, reducer, None)
+    }
+
+    /// As [`JobScheduler::submit`], with a map-side combiner.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_with_combiner<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+        combiner: Arc<dyn Combiner<KT, VT>>,
+    ) -> JobHandle<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        self.spawn_driver(
+            config,
+            input,
+            mapper,
+            partitioner,
+            grouping,
+            reducer,
+            Some(make_combine_fn(combiner)),
+        )
+    }
+
+    /// The one driver-thread spawn point behind `submit*`.
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_driver<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+        combine_fn: Option<CombineFn<KT, VT>>,
+    ) -> JobHandle<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        let sched = self.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("snmr-job-{}", config.name))
+            .spawn(move || {
+                sched.run_inner(
+                    &config,
+                    input,
+                    mapper,
+                    partitioner,
+                    grouping,
+                    reducer,
+                    combine_fn,
+                )
+            })
+            .expect("spawn job driver");
+        JobHandle { handle }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_inner<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: &JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+        combine_fn: Option<CombineFn<KT, VT>>,
+    ) -> JobResult<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        let inner = &self.inner;
+        let spec = inner.cfg.speculative.then(|| inner.cfg.policy.clone());
+        let t_start = Instant::now();
+        let counters = Arc::new(Counters::new());
+        let r = config.num_reduce_tasks;
+        let sort_budget = config.sort_buffer_records;
+
+        counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
+        let splits = split_input(input, config.num_map_tasks);
+
+        // ---- map wave on the shared map slots -----------------------------
+        // Each attempt runs against private counters; only the winning
+        // attempt's are merged, so a losing speculative clone never
+        // double-counts user-code increments.  Without speculation each
+        // attempt is the sole owner of its split and consumes it in
+        // place; a speculative wave retains a reference per task (so a
+        // clone can re-run it), which forces the deep-clone fallback.
+        let t_map = Instant::now();
+        let map_attempt = {
+            let mapper = Arc::clone(&mapper);
+            let partitioner = Arc::clone(&partitioner);
+            let combine_fn = combine_fn.clone();
+            move |_i: usize, split: Arc<Vec<(KI, VI)>>| {
+                let local = Counters::new();
+                let split = Arc::try_unwrap(split).unwrap_or_else(|shared| (*shared).clone());
+                let out = exec_map_task(
+                    split,
+                    r,
+                    sort_budget,
+                    mapper.as_ref(),
+                    partitioner.as_ref(),
+                    combine_fn.as_ref(),
+                    &local,
+                );
+                (out, local)
+            }
+        };
+        let map_results: Vec<(MapTaskOutput<KT, VT>, Counters)> = speculate::run_tasks(
+            &inner.map_pool,
+            splits,
+            Arc::new(map_attempt),
+            spec.clone(),
+            &counters,
+        );
+        let mut map_outputs: Vec<MapTaskOutput<KT, VT>> = Vec::with_capacity(map_results.len());
+        for (out, local) in map_results {
+            counters.merge(&local);
+            map_outputs.push(out);
+        }
+        let map_phase_secs = t_map.elapsed().as_secs_f64();
+
+        let mut stats = JobStats {
+            map_task_secs: map_outputs.iter().map(|o| o.secs).collect(),
+            map_phase_secs,
+            ..Default::default()
+        };
+        stats.map_output_records = record_map_wave(&counters, &map_outputs, combine_fn.is_some());
+
+        // ---- shuffle transpose (driver-side, cheap) -----------------------
+        let t_shuffle = Instant::now();
+        let (per_reducer_runs, shuffle_bytes) = transpose_runs(map_outputs, r);
+        counters.add(names::SHUFFLE_BYTES, shuffle_bytes.iter().sum());
+        stats.shuffle_bytes_per_reducer = shuffle_bytes;
+        stats.shuffle_phase_secs = t_shuffle.elapsed().as_secs_f64();
+
+        // ---- reduce wave on the shared reduce slots -----------------------
+        let t_reduce = Instant::now();
+        let reduce_attempt = {
+            let reducer = Arc::clone(&reducer);
+            let grouping = Arc::clone(&grouping);
+            move |_j: usize, runs: Arc<Vec<Vec<(KT, VT)>>>| {
+                let local = Counters::new();
+                let runs = Arc::try_unwrap(runs).unwrap_or_else(|shared| (*shared).clone());
+                let out = exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &local);
+                (out, local)
+            }
+        };
+        let red_results: Vec<(ReduceTaskOutput<KO, VO>, Counters)> = speculate::run_tasks(
+            &inner.reduce_pool,
+            per_reducer_runs,
+            Arc::new(reduce_attempt),
+            spec,
+            &counters,
+        );
+        let mut red_outputs: Vec<ReduceTaskOutput<KO, VO>> = Vec::with_capacity(red_results.len());
+        for (out, local) in red_results {
+            counters.merge(&local);
+            red_outputs.push(out);
+        }
+        stats.reduce_phase_secs = t_reduce.elapsed().as_secs_f64();
+        stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
+        stats.reduce_output_records = record_reduce_wave(&counters, &red_outputs);
+        let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
+        stats.total_secs = t_start.elapsed().as_secs_f64();
+
+        JobResult {
+            outputs,
+            counters,
+            stats,
+        }
+    }
+}
+
+/// Wrap a [`Combiner`] into the engine's type-erased combine step (the
+/// same fold [`run_job_with_combiner`] builds on the serial path).
+fn make_combine_fn<KT, VT>(combiner: Arc<dyn Combiner<KT, VT>>) -> CombineFn<KT, VT>
+where
+    KT: Ord + Clone + SizeEstimate + 'static,
+    VT: SizeEstimate + 'static,
+{
+    Arc::new(move |run: &mut Vec<(KT, VT)>, c: &Counters| {
+        combine_sorted_bucket(run, combiner.as_ref(), c)
+    })
+}
+
+/// How a caller executes an engine job: on a job-private pool (the
+/// serial [`run_job`] driver), or through a shared [`JobScheduler`] whose
+/// slots are contended by every concurrently submitted job.
+#[derive(Clone, Copy)]
+pub enum Exec<'a> {
+    /// `run_job` / `run_job_with_combiner` on a job-private pool.
+    Serial,
+    /// Tasks on the scheduler's shared slots (inline on this thread).
+    Scheduler(&'a JobScheduler),
+}
+
+impl Exec<'_> {
+    /// Dispatch a job to this executor.
+    pub fn run_job<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: &JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+    ) -> JobResult<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        match self {
+            Exec::Serial => run_job(config, input, mapper, partitioner, grouping, reducer),
+            Exec::Scheduler(s) => s.run(config, input, mapper, partitioner, grouping, reducer),
+        }
+    }
+
+    /// Dispatch a combiner job to this executor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_job_with_combiner<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: &JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+        combiner: Arc<dyn Combiner<KT, VT>>,
+    ) -> JobResult<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        match self {
+            Exec::Serial => run_job_with_combiner(
+                config,
+                input,
+                mapper,
+                partitioner,
+                grouping,
+                reducer,
+                combiner,
+            ),
+            Exec::Scheduler(s) => s.run_with_combiner(
+                config,
+                input,
+                mapper,
+                partitioner,
+                grouping,
+                reducer,
+                combiner,
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::types::{Emitter, FnMapTask, FnReduceTask, HashPartitioner, ValuesIter};
+    use std::time::Duration;
+
+    fn busy_wait(d: Duration) {
+        let t0 = Instant::now();
+        while t0.elapsed() < d {
+            std::hint::spin_loop();
+        }
+    }
+
+    fn histogram_job(
+        n: u64,
+        modulus: u64,
+    ) -> (
+        Vec<((), u64)>,
+        Arc<FnMapTask<impl Fn((), u64, &mut Emitter<u64, u64>, &Counters)>>,
+        Arc<FnReduceTask<impl Fn(&u64, ValuesIter<'_, u64>, &mut Emitter<u64, u64>, &Counters)>>,
+    ) {
+        let input: Vec<((), u64)> = (0..n).map(|i| ((), i)).collect();
+        let mapper = Arc::new(FnMapTask::new(
+            move |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(v % modulus, 1);
+            },
+        ));
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(*k, vals.map(|v| *v).sum());
+            },
+        ));
+        (input, mapper, reducer)
+    }
+
+    fn grouping() -> GroupFn<u64> {
+        Arc::new(|a: &u64, b: &u64| a == b)
+    }
+
+    #[test]
+    fn scheduler_matches_serial_run_job() {
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        let cfg = JobConfig::named("hist").with_tasks(4, 3).with_workers(2);
+        let serial = run_job(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        let sched = JobScheduler::with_slots(3);
+        let scheduled = sched.run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(serial.outputs, scheduled.outputs);
+        assert_eq!(serial.counters.snapshot(), scheduled.counters.snapshot());
+        assert_eq!(
+            serial.stats.map_output_records,
+            scheduled.stats.map_output_records
+        );
+        assert_eq!(
+            serial.stats.reduce_output_records,
+            scheduled.stats.reduce_output_records
+        );
+    }
+
+    #[test]
+    fn concurrent_jobs_share_slots_and_keep_separate_stats() {
+        let sched = JobScheduler::with_slots(4);
+        let mut handles = Vec::new();
+        for j in 0..3u64 {
+            let (input, mapper, reducer) = histogram_job(400 + 100 * j, 5 + j);
+            let cfg = JobConfig::named(&format!("job{j}")).with_tasks(4, 2);
+            handles.push(sched.submit(
+                cfg,
+                input,
+                mapper,
+                Arc::new(HashPartitioner::new(|k: &u64| *k)),
+                grouping(),
+                reducer,
+            ));
+        }
+        for (j, h) in handles.into_iter().enumerate() {
+            let j = j as u64;
+            let res = h.join();
+            let n = 400 + 100 * j;
+            let total: u64 = res.outputs.iter().flatten().map(|(_, c)| *c).sum();
+            assert_eq!(total, n, "job {j} lost records");
+            assert_eq!(res.stats.map_task_secs.len(), 4);
+            assert_eq!(res.counters.get(names::MAP_INPUT_RECORDS), n);
+        }
+    }
+
+    #[test]
+    fn speculation_preserves_output_and_launches_on_straggler() {
+        // one of 8 single-record splits busy-waits 150ms, the rest ~1ms:
+        // a clean straggler for the median detector
+        let input: Vec<((), u64)> = (0..8).map(|i| ((), i)).collect();
+        let mapper = Arc::new(FnMapTask::new(
+            |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                busy_wait(Duration::from_millis(if v == 7 { 150 } else { 1 }));
+                out.emit(v % 3, v);
+            },
+        ));
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(*k, vals.map(|v| *v).sum());
+            },
+        ));
+        let cfg = JobConfig::named("straggle").with_tasks(8, 2);
+        let plain = JobScheduler::with_slots(4).run(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        let spec_sched = JobScheduler::new(SchedulerConfig::slots(4).with_speculation(true));
+        let spec = spec_sched.run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(plain.outputs, spec.outputs);
+        assert_eq!(plain.counters.get(names::SPECULATIVE_LAUNCHED), 0);
+        assert!(
+            spec.counters.get(names::SPECULATIVE_LAUNCHED) >= 1,
+            "straggler should trigger at least one clone"
+        );
+        // engine counters unaffected by losing attempts
+        assert_eq!(
+            plain.counters.get(names::MAP_OUTPUT_RECORDS),
+            spec.counters.get(names::MAP_OUTPUT_RECORDS)
+        );
+        assert_eq!(
+            plain.counters.get(names::REDUCE_INPUT_RECORDS),
+            spec.counters.get(names::REDUCE_INPUT_RECORDS)
+        );
+    }
+
+    #[test]
+    fn combiner_job_on_scheduler_matches_serial() {
+        use crate::mapreduce::combiner::FnCombiner;
+        let (input, mapper, reducer) = histogram_job(500, 5);
+        let cfg = JobConfig::named("comb").with_tasks(4, 2).with_workers(2);
+        let combiner = || {
+            Arc::new(FnCombiner::new(|_k: &u64, vals: Vec<u64>, _c: &Counters| {
+                vec![vals.into_iter().sum()]
+            }))
+        };
+        let serial = run_job_with_combiner(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+            combiner(),
+        );
+        let scheduled = JobScheduler::with_slots(2).run_with_combiner(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+            combiner(),
+        );
+        assert_eq!(serial.outputs, scheduled.outputs);
+        assert_eq!(
+            serial.counters.get(names::COMBINE_INPUT_RECORDS),
+            scheduled.counters.get(names::COMBINE_INPUT_RECORDS)
+        );
+        assert_eq!(
+            serial.counters.get(names::SHUFFLE_BYTES),
+            scheduled.counters.get(names::SHUFFLE_BYTES)
+        );
+    }
+}

@@ -1,0 +1,358 @@
+//! Speculative task-attempt execution on a shared slot pool.
+//!
+//! One *task* may run as several *attempts*: the primary attempt, plus at
+//! most one speculative clone launched by the straggler detector.  All
+//! attempts of all concurrently running jobs contend for the same pool
+//! slots; first-completion-wins is decided by
+//! [`OnceSlots::try_put`](crate::util::threadpool::OnceSlots::try_put) —
+//! exactly one attempt's EMPTY→WRITING transition succeeds, and the
+//! loser's result is dropped without ever becoming observable.  Because
+//! attempts execute a pure function of the task input, speculation can
+//! change *when* a result is produced but never *what* it is.
+//!
+//! The straggler rule mirrors Hadoop's: a running task whose elapsed time
+//! exceeds `slowdown ×` the running median of completed task durations
+//! (and at least `min_secs`) is cloned — but only onto an *idle* slot, so
+//! speculation never delays a primary attempt that is still queued.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::mapreduce::counters::{names, Counters};
+use crate::util::threadpool::{OnceSlots, ThreadPool};
+
+/// Straggler-detection knobs (Hadoop's speculative-execution analogue).
+#[derive(Debug, Clone)]
+pub struct SpecPolicy {
+    /// A running task becomes a straggler when its elapsed time exceeds
+    /// `slowdown ×` the running median of completed task durations.
+    pub slowdown: f64,
+    /// Never speculate before a task has run at least this long (Hadoop
+    /// waits 60 s; our in-process tasks take milliseconds, so the default
+    /// is small).
+    pub min_secs: f64,
+    /// How often the job driver re-scans running tasks for stragglers.
+    pub poll: Duration,
+}
+
+impl Default for SpecPolicy {
+    fn default() -> Self {
+        Self {
+            slowdown: 1.5,
+            min_secs: 0.02,
+            poll: Duration::from_millis(1),
+        }
+    }
+}
+
+struct BoardState {
+    /// Tasks whose winner is decided.
+    winners: usize,
+    /// Winning-attempt durations, in completion order (median source).
+    durations: Vec<f64>,
+    panics: usize,
+}
+
+/// Per-wave bookkeeping shared between the job driver and its attempts.
+struct Board {
+    epoch: Instant,
+    /// Micros since `epoch` (+1 so 0 means "still queued") when the
+    /// primary attempt started executing.
+    started_us: Vec<AtomicU64>,
+    /// A speculative clone has been launched for this task.
+    cloned: Vec<AtomicBool>,
+    /// The task's outcome is decided (winner stored, or attempt panicked).
+    decided: Vec<AtomicBool>,
+    state: Mutex<BoardState>,
+    cv: Condvar,
+}
+
+impl Board {
+    fn new(n: usize) -> Self {
+        Self {
+            epoch: Instant::now(),
+            started_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            cloned: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            decided: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            state: Mutex::new(BoardState {
+                winners: 0,
+                durations: Vec::new(),
+                panics: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+/// Run one wave of tasks on `pool`, optionally cloning stragglers onto
+/// idle slots.  Returns results in task order.  Panics if any attempt
+/// panicked (matching `run_owned`'s contract).
+///
+/// Each attempt receives its input behind an `Arc`.  Without speculation
+/// the attempt holds the *only* reference, so the task body can
+/// `Arc::try_unwrap` and consume the input in place — no copy, and each
+/// input is freed as its task finishes, exactly like the serial path.
+/// With speculation on, a second reference per task is retained so a
+/// straggler clone can re-run from the same input; only then does the
+/// task body fall back to a deep clone.
+pub(crate) fn run_tasks<I, T, F>(
+    pool: &ThreadPool,
+    items: Vec<I>,
+    f: Arc<F>,
+    spec: Option<SpecPolicy>,
+    counters: &Arc<Counters>,
+) -> Vec<T>
+where
+    I: Send + Sync + 'static,
+    T: Send + 'static,
+    F: Fn(usize, Arc<I>) -> T + Send + Sync + 'static,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let attempt_inputs: Vec<Arc<I>> = items.into_iter().map(Arc::new).collect();
+    let retained: Option<Vec<Arc<I>>> = spec.as_ref().map(|_| attempt_inputs.clone());
+    let results = Arc::new(OnceSlots::<T>::empty(n));
+    let board = Arc::new(Board::new(n));
+    for (i, input) in attempt_inputs.into_iter().enumerate() {
+        submit_attempt(
+            pool,
+            i,
+            false,
+            input,
+            Arc::clone(&f),
+            Arc::clone(&results),
+            Arc::clone(&board),
+            Arc::clone(counters),
+        );
+    }
+
+    let mut st = board.state.lock().unwrap();
+    loop {
+        if st.winners >= n {
+            break;
+        }
+        match &spec {
+            None => st = board.cv.wait(st).unwrap(),
+            Some(policy) => {
+                let (guard, _) = board.cv.wait_timeout(st, policy.poll).unwrap();
+                st = guard;
+                if st.winners >= n {
+                    break;
+                }
+                if st.durations.is_empty() {
+                    continue; // no completed task yet: no median baseline
+                }
+                let mut ds = st.durations.clone();
+                drop(st);
+                ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let median = ds[ds.len() / 2];
+                let threshold = policy.min_secs.max(policy.slowdown * median);
+                let now_us = board.epoch.elapsed().as_micros() as u64 + 1;
+                for i in 0..n {
+                    if board.decided[i].load(Ordering::Acquire)
+                        || board.cloned[i].load(Ordering::Acquire)
+                    {
+                        continue;
+                    }
+                    let s = board.started_us[i].load(Ordering::Acquire);
+                    if s == 0 {
+                        continue; // still queued: a clone would not start sooner
+                    }
+                    let elapsed = now_us.saturating_sub(s) as f64 / 1e6;
+                    if elapsed < threshold {
+                        continue;
+                    }
+                    if pool.in_flight() >= pool.size() {
+                        break; // no idle slot: never delay primary attempts
+                    }
+                    if board.cloned[i].swap(true, Ordering::AcqRel) {
+                        continue;
+                    }
+                    counters.inc(names::SPECULATIVE_LAUNCHED);
+                    let inputs = retained.as_ref().expect("inputs retained when speculating");
+                    submit_attempt(
+                        pool,
+                        i,
+                        true,
+                        Arc::clone(&inputs[i]),
+                        Arc::clone(&f),
+                        Arc::clone(&results),
+                        Arc::clone(&board),
+                        Arc::clone(counters),
+                    );
+                }
+                st = board.state.lock().unwrap();
+            }
+        }
+    }
+    let panics = st.panics;
+    drop(st);
+    assert_eq!(panics, 0, "{panics} task attempt(s) panicked");
+    // Losing attempts may still be running; `take` transitions each slot
+    // FULL→TAKEN, after which a late loser's `try_put` simply fails.
+    (0..n).map(|i| results.take(i)).collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn submit_attempt<I, T, F>(
+    pool: &ThreadPool,
+    i: usize,
+    speculative: bool,
+    input: Arc<I>,
+    f: Arc<F>,
+    results: Arc<OnceSlots<T>>,
+    board: Arc<Board>,
+    counters: Arc<Counters>,
+) where
+    I: Send + Sync + 'static,
+    T: Send + 'static,
+    F: Fn(usize, Arc<I>) -> T + Send + Sync + 'static,
+{
+    pool.execute(move || {
+        if board.decided[i].load(Ordering::Acquire) {
+            return; // winner finished while this attempt was queued
+        }
+        if !speculative {
+            board.started_us[i].store(
+                board.epoch.elapsed().as_micros() as u64 + 1,
+                Ordering::Release,
+            );
+        }
+        let t0 = Instant::now();
+        match catch_unwind(AssertUnwindSafe(|| f(i, input))) {
+            Ok(t) => {
+                if results.try_put(i, t) {
+                    board.decided[i].store(true, Ordering::Release);
+                    if speculative {
+                        counters.inc(names::SPECULATIVE_WON);
+                    }
+                    let mut st = board.state.lock().unwrap();
+                    st.winners += 1;
+                    st.durations.push(t0.elapsed().as_secs_f64());
+                    board.cv.notify_all();
+                }
+                // a losing attempt's result is dropped right here
+            }
+            Err(_) => {
+                // mark decided so the driver unblocks, then report via the
+                // panic count — the wave fails loudly, like `run_owned`
+                let first = !board.decided[i].swap(true, Ordering::AcqRel);
+                let mut st = board.state.lock().unwrap();
+                st.panics += 1;
+                if first {
+                    st.winners += 1;
+                }
+                board.cv.notify_all();
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_wait(d: Duration) {
+        let t0 = Instant::now();
+        while t0.elapsed() < d {
+            std::hint::spin_loop();
+        }
+    }
+
+    #[test]
+    fn all_tasks_complete_without_speculation() {
+        let pool = ThreadPool::new(3);
+        let counters = Arc::new(Counters::new());
+        let out = run_tasks(
+            &pool,
+            (0..20u64).collect::<Vec<_>>(),
+            Arc::new(|_i, v: Arc<u64>| *v * 2),
+            None,
+            &counters,
+        );
+        assert_eq!(out, (0..20u64).map(|v| v * 2).collect::<Vec<_>>());
+        assert_eq!(counters.get(names::SPECULATIVE_LAUNCHED), 0);
+    }
+
+    #[test]
+    fn without_speculation_attempts_own_their_input() {
+        // no retained references ⇒ every attempt can consume its input in
+        // place, like the serial path moves splits into tasks
+        let pool = ThreadPool::new(2);
+        let counters = Arc::new(Counters::new());
+        let out = run_tasks(
+            &pool,
+            vec![vec![1u64, 2], vec![3, 4]],
+            Arc::new(|_i, v: Arc<Vec<u64>>| {
+                let owned = Arc::try_unwrap(v).expect("attempt must be sole owner");
+                owned.into_iter().sum::<u64>()
+            }),
+            None,
+            &counters,
+        );
+        assert_eq!(out, vec![3, 7]);
+    }
+
+    #[test]
+    fn straggler_gets_cloned_and_output_is_unchanged() {
+        let pool = ThreadPool::new(4);
+        let counters = Arc::new(Counters::new());
+        let items: Vec<u64> = (0..8).collect();
+        let f = Arc::new(|_i: usize, v: Arc<u64>| {
+            if *v == 7 {
+                busy_wait(Duration::from_millis(150));
+            } else {
+                busy_wait(Duration::from_millis(2));
+            }
+            *v + 100
+        });
+        let out = run_tasks(&pool, items, f, Some(SpecPolicy::default()), &counters);
+        assert_eq!(out, (0..8u64).map(|v| v + 100).collect::<Vec<_>>());
+        assert!(
+            counters.get(names::SPECULATIVE_LAUNCHED) >= 1,
+            "the 150ms straggler should have been cloned"
+        );
+        // whether the clone wins is timing-dependent; only the invariant
+        // won <= launched is guaranteed
+        assert!(
+            counters.get(names::SPECULATIVE_WON) <= counters.get(names::SPECULATIVE_LAUNCHED)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "task attempt(s) panicked")]
+    fn attempt_panic_fails_the_wave() {
+        let pool = ThreadPool::new(2);
+        let counters = Arc::new(Counters::new());
+        let _ = run_tasks(
+            &pool,
+            vec![0u64, 1],
+            Arc::new(|_i, v: Arc<u64>| {
+                if *v == 1 {
+                    panic!("boom");
+                }
+                *v
+            }),
+            None,
+            &counters,
+        );
+    }
+
+    #[test]
+    fn empty_wave_is_fine() {
+        let pool = ThreadPool::new(2);
+        let counters = Arc::new(Counters::new());
+        let out: Vec<u64> = run_tasks(
+            &pool,
+            Vec::new(),
+            Arc::new(|_i, v: Arc<u64>| *v),
+            None,
+            &counters,
+        );
+        assert!(out.is_empty());
+    }
+}

@@ -13,7 +13,13 @@
 //! * a per-job setup/teardown charge (the overhead that makes JobSN pay
 //!   for its second job),
 //! * intermediate materialization charged at disk bandwidth (the paper
-//!   attributes its sub-linear speedup to exactly this materialization).
+//!   attributes its sub-linear speedup to exactly this materialization),
+//! * optional **speculative execution** ([`ClusterSpec::speculative`]) and
+//!   degraded nodes ([`ClusterSpec::with_slow_nodes`]): the paper turns
+//!   speculation off in §5.1, but the engine's
+//!   [`scheduler`](crate::mapreduce::scheduler) now implements it, so the
+//!   simulator models the same straggler-cloning rule ([`wave_schedule`])
+//!   to keep simulated and measured makespans comparable.
 //!
 //! The simulator is deliberately *not* calibrated to the paper's absolute
 //! numbers — DESIGN.md §3 explains the substitution; EXPERIMENTS.md
@@ -34,11 +40,25 @@ pub struct ClusterSpec {
     pub net_bytes_per_s: f64,
     /// Disk bandwidth per node for intermediate materialization, bytes/s.
     pub disk_bytes_per_s: f64,
+    /// Speculative execution (the paper disables it in §5.1; the engine's
+    /// [`scheduler`](crate::mapreduce::scheduler) implements it for real —
+    /// this is the matching simulator knob).  Stragglers are cloned onto
+    /// slots that have drained their primary queue; the earlier completion
+    /// wins.  See [`wave_schedule`].
+    pub speculative: bool,
+    /// Number of degraded nodes (machine skew, the failure mode
+    /// speculation actually fixes — as opposed to data skew, which it
+    /// cannot; that contrast is the point of the Fig. 9 speculation
+    /// sweep).  0 = homogeneous cluster, the paper's setup.
+    pub slow_nodes: usize,
+    /// Runtime multiplier for tasks placed on a slow node (≥ 1).
+    pub slow_node_factor: f64,
 }
 
 impl ClusterSpec {
     /// A cluster like the paper's: `cores` total cores, 2 cores per node,
-    /// 2 map + 2 reduce slots per node, GbE network, one SATA disk.
+    /// 2 map + 2 reduce slots per node, GbE network, one SATA disk,
+    /// speculation off (§5.1), no degraded nodes.
     pub fn paper_like(cores: usize) -> Self {
         let nodes = cores.div_ceil(2).max(1);
         let slots = if cores == 1 { 1 } else { 2 };
@@ -49,7 +69,24 @@ impl ClusterSpec {
             job_setup_s: 6.0,
             net_bytes_per_s: 110e6,  // ~GbE effective
             disk_bytes_per_s: 80e6,  // 2007-era SATA sequential
+            speculative: false,
+            slow_nodes: 0,
+            slow_node_factor: 1.0,
         }
+    }
+
+    /// Toggle speculative execution.
+    pub fn with_speculation(mut self, on: bool) -> Self {
+        self.speculative = on;
+        self
+    }
+
+    /// Degrade `n` nodes to run their tasks `factor`× slower.
+    pub fn with_slow_nodes(mut self, n: usize, factor: f64) -> Self {
+        assert!(factor >= 1.0, "slow nodes cannot be faster");
+        self.slow_nodes = n.min(self.nodes);
+        self.slow_node_factor = factor;
+        self
     }
 
     pub fn map_slots(&self) -> usize {
@@ -91,6 +128,10 @@ pub struct SimBreakdown {
     pub materialize_s: f64,
     pub shuffle_s: f64,
     pub reduce_s: f64,
+    /// Speculative clones launched / won across both waves (0 with the
+    /// `speculative` knob off).
+    pub speculative_launched: u64,
+    pub speculative_won: u64,
 }
 
 impl SimBreakdown {
@@ -100,8 +141,10 @@ impl SimBreakdown {
 }
 
 /// FIFO list scheduling: assign tasks in index order to the earliest-free
-/// slot; returns the makespan.  This is Hadoop's FIFO scheduler with
-/// speculative execution off (as configured in §5.1).
+/// slot; returns the makespan.  This is Hadoop's FIFO scheduler on a
+/// homogeneous cluster with speculative execution off — the exact §5.1
+/// configuration.  [`wave_schedule`] generalizes it with the
+/// [`ClusterSpec::speculative`] and slow-node knobs.
 pub fn list_schedule_makespan(durations: &[f64], slots: usize) -> f64 {
     assert!(slots >= 1);
     if durations.is_empty() {
@@ -120,9 +163,168 @@ pub fn list_schedule_makespan(durations: &[f64], slots: usize) -> f64 {
     free_at.iter().cloned().fold(0.0, f64::max)
 }
 
+/// Straggler thresholds, matching the runtime scheduler's
+/// [`SpecPolicy`](crate::mapreduce::scheduler::SpecPolicy) defaults so
+/// simulated and measured speculation behave alike.
+pub const SPEC_SLOWDOWN: f64 = 1.5;
+pub const SPEC_MIN_SECS: f64 = 0.02;
+
+/// One scheduled wave's outcome.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WaveOutcome {
+    pub makespan: f64,
+    pub speculative_launched: u64,
+    pub speculative_won: u64,
+}
+
+/// Slot scheduling with the full cluster model.
+///
+/// Primary assignment is FIFO to the earliest-free slot (identical to
+/// [`list_schedule_makespan`]); slot `s` lives on node `s % nodes`, and
+/// slots on the first [`ClusterSpec::slow_nodes`] nodes stretch their
+/// tasks by [`ClusterSpec::slow_node_factor`].  With
+/// [`ClusterSpec::speculative`] on, whenever a slot has drained its
+/// primary queue it clones the longest-remaining running task whose
+/// elapsed time exceeds `max(SPEC_MIN_SECS, SPEC_SLOWDOWN × running
+/// median of completed task durations)` — the same rule as the runtime
+/// detector; the clone re-runs the task from scratch at the idle slot's
+/// speed and the earlier completion wins — which is why speculation
+/// rescues *machine*-skew stragglers (slow node, fast clone elsewhere)
+/// but cannot beat *data*-skew stragglers (the clone re-processes the
+/// same oversized partition).  Each task is cloned at most once,
+/// mirroring the runtime scheduler.
+pub fn wave_schedule(durations: &[f64], slots: usize, spec: &ClusterSpec) -> WaveOutcome {
+    assert!(slots >= 1);
+    if durations.is_empty() {
+        return WaveOutcome::default();
+    }
+    let nodes = spec.nodes.max(1);
+    let speed = |s: usize| {
+        if (s % nodes) < spec.slow_nodes {
+            spec.slow_node_factor.max(1.0)
+        } else {
+            1.0
+        }
+    };
+    let argmin = |free_at: &[f64]| -> (usize, f64) {
+        let (idx, t) = free_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        (idx, *t)
+    };
+    struct Run {
+        start: f64,
+        dur: f64,
+        end: f64,
+        cloned: bool,
+    }
+    let mut free_at = vec![0.0f64; slots.min(durations.len())];
+    let mut runs: Vec<Run> = Vec::with_capacity(durations.len());
+    for &d in durations {
+        let (s, t) = argmin(&free_at);
+        let end = t + d * speed(s);
+        free_at[s] = end;
+        runs.push(Run {
+            start: t,
+            dur: d,
+            end,
+            cloned: false,
+        });
+    }
+    let mut launched = 0u64;
+    let mut won = 0u64;
+    if spec.speculative {
+        loop {
+            let makespan = runs.iter().fold(0.0f64, |m, r| m.max(r.end));
+            let (s, now) = argmin(&free_at);
+            if now >= makespan {
+                break; // every slot is busy until the wave ends
+            }
+            // The runtime detector thresholds against the *running* median
+            // of completed task durations, not the full-wave median (which
+            // would let a majority of stragglers raise the bar above their
+            // own runtimes) — recompute it at every scheduling decision.
+            let mut done: Vec<f64> = runs
+                .iter()
+                .filter(|r| r.end <= now)
+                .map(|r| r.end - r.start)
+                .collect();
+            if done.is_empty() {
+                // no baseline yet: idle until the first completion
+                let next_done = runs
+                    .iter()
+                    .filter(|r| r.end > now)
+                    .map(|r| r.end)
+                    .fold(f64::INFINITY, f64::min);
+                if next_done.is_finite() && next_done < makespan {
+                    free_at[s] = next_done;
+                    continue;
+                }
+                break;
+            }
+            done.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = done[done.len() / 2];
+            let threshold = SPEC_MIN_SECS.max(SPEC_SLOWDOWN * median);
+            // longest-remaining straggler already eligible at `now`, plus
+            // the earliest future time any task becomes eligible (under
+            // the current threshold; it is re-derived next iteration)
+            let mut best: Option<usize> = None;
+            let mut next_eligible = f64::INFINITY;
+            for (i, r) in runs.iter().enumerate() {
+                if r.cloned || r.end <= now {
+                    continue;
+                }
+                let eligible_at = r.start + threshold;
+                if eligible_at >= r.end {
+                    continue; // finishes before ever qualifying
+                }
+                if eligible_at <= now {
+                    let longer = match best {
+                        None => true,
+                        Some(b) => runs[b].end < r.end,
+                    };
+                    if longer {
+                        best = Some(i);
+                    }
+                } else {
+                    next_eligible = next_eligible.min(eligible_at);
+                }
+            }
+            match best {
+                Some(i) => {
+                    let clone_end = now + runs[i].dur * speed(s);
+                    runs[i].cloned = true;
+                    launched += 1;
+                    if clone_end < runs[i].end {
+                        runs[i].end = clone_end;
+                        won += 1;
+                    }
+                    // the slot is held until the task is decided (the
+                    // losing attempt is killed at that point)
+                    free_at[s] = runs[i].end;
+                }
+                None => {
+                    if next_eligible.is_finite() && next_eligible < makespan {
+                        free_at[s] = next_eligible; // idle until one qualifies
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    WaveOutcome {
+        makespan: runs.iter().fold(0.0f64, |m, r| m.max(r.end)),
+        speculative_launched: launched,
+        speculative_won: won,
+    }
+}
+
 /// Simulate one MapReduce job on a cluster.
 pub fn simulate_job(profile: &JobProfile, spec: &ClusterSpec) -> SimBreakdown {
-    let map_s = list_schedule_makespan(&profile.map_task_secs, spec.map_slots());
+    let map_wave = wave_schedule(&profile.map_task_secs, spec.map_slots().max(1), spec);
     // map outputs written to local disk once (sort spill), read once at
     // shuffle: 2 passes over the bytes at aggregate disk bandwidth
     let disk_agg = spec.disk_bytes_per_s * spec.nodes as f64;
@@ -138,13 +340,15 @@ pub fn simulate_job(profile: &JobProfile, spec: &ClusterSpec) -> SimBreakdown {
         .iter()
         .map(|&b| b as f64 / spec.net_bytes_per_s)
         .fold(0.0, f64::max);
-    let reduce_s = list_schedule_makespan(&profile.reduce_task_secs, reduce_slots);
+    let reduce_wave = wave_schedule(&profile.reduce_task_secs, reduce_slots, spec);
     SimBreakdown {
         setup_s: spec.job_setup_s,
-        map_s,
+        map_s: map_wave.makespan,
         materialize_s,
         shuffle_s,
-        reduce_s,
+        reduce_s: reduce_wave.makespan,
+        speculative_launched: map_wave.speculative_launched + reduce_wave.speculative_launched,
+        speculative_won: map_wave.speculative_won + reduce_wave.speculative_won,
     }
 }
 
@@ -219,6 +423,112 @@ mod tests {
         let (_, two) = simulate_job_chain(&[p.clone(), p], &spec);
         assert!((two - 2.0 * one).abs() < 1e-9);
         assert!(two > one + spec.job_setup_s - 1e-9);
+    }
+
+    /// The sim's straggler thresholds must track the runtime scheduler's
+    /// defaults, or "simulated and measured makespans stay comparable"
+    /// silently stops being true.
+    #[test]
+    fn sim_thresholds_match_runtime_policy() {
+        let p = crate::mapreduce::scheduler::SpecPolicy::default();
+        assert!((SPEC_SLOWDOWN - p.slowdown).abs() < 1e-12);
+        assert!((SPEC_MIN_SECS - p.min_secs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wave_schedule_matches_list_schedule_without_knobs() {
+        let spec = ClusterSpec::paper_like(8);
+        for durations in [
+            vec![1.0, 2.0, 3.0],
+            vec![1.0; 8],
+            vec![10.0, 1.0, 1.0, 1.0],
+            vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0, 5.0, 3.0, 5.0],
+        ] {
+            for slots in [1usize, 2, 4, 8] {
+                let w = wave_schedule(&durations, slots, &spec);
+                let l = list_schedule_makespan(&durations, slots);
+                assert!(
+                    (w.makespan - l).abs() < 1e-9,
+                    "wave {} != list {l} (slots={slots})",
+                    w.makespan
+                );
+                assert_eq!(w.speculative_launched, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn speculation_rescues_machine_skew_stragglers() {
+        // 9 equal tasks on 8 slots; node 0 (slots 0 and 4) is 4× slow.
+        // Without speculation the slow-slot tasks run 16s; with it, idle
+        // fast slots clone them once eligible (1.5 × 4s median = 6s) and
+        // finish by ~10s.
+        let durations = vec![4.0; 9];
+        let base = ClusterSpec::paper_like(8).with_slow_nodes(1, 4.0);
+        let off = wave_schedule(&durations, base.map_slots(), &base);
+        let on = wave_schedule(
+            &durations,
+            base.map_slots(),
+            &base.clone().with_speculation(true),
+        );
+        assert!(off.makespan > 15.9, "slow node must straggle: {off:?}");
+        assert!(
+            on.makespan < off.makespan - 1.0,
+            "speculation should rescue machine skew: on={on:?} off={off:?}"
+        );
+        assert!(on.speculative_launched >= 1);
+        assert!(on.speculative_won >= 1);
+    }
+
+    /// A full-wave median (12) would put the threshold above the
+    /// stragglers' own runtimes and never clone; the running median of
+    /// *completed* tasks (1) — the runtime detector's rule — clones all
+    /// three.  (They still cannot win on a homogeneous cluster.)
+    #[test]
+    fn running_median_speculates_despite_straggler_majority() {
+        let durations = vec![1.0, 1.0, 1.0, 12.0, 12.0, 12.0];
+        let spec = ClusterSpec::paper_like(8).with_speculation(true);
+        let w = wave_schedule(&durations, spec.map_slots(), &spec);
+        assert_eq!(
+            w.speculative_launched, 3,
+            "every straggler should be cloned: {w:?}"
+        );
+        assert_eq!(w.speculative_won, 0);
+        assert!((w.makespan - 12.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speculation_cannot_fix_data_skew() {
+        // one giant task on a homogeneous cluster (the Fig. 9 story): a
+        // clone re-runs the same oversized partition and never wins
+        let durations = vec![10.0, 1.0, 1.0, 1.0];
+        let spec = ClusterSpec::paper_like(8);
+        let off = wave_schedule(&durations, spec.map_slots(), &spec);
+        let on = wave_schedule(
+            &durations,
+            spec.map_slots(),
+            &spec.clone().with_speculation(true),
+        );
+        assert!((on.makespan - off.makespan).abs() < 1e-9);
+        assert_eq!(on.speculative_won, 0);
+    }
+
+    #[test]
+    fn simulate_job_reports_speculation() {
+        let profile = JobProfile {
+            map_task_secs: vec![4.0; 9],
+            reduce_task_secs: vec![1.0; 4],
+            shuffle_bytes_per_reducer: vec![0; 4],
+            map_output_bytes: 0,
+        };
+        let spec = ClusterSpec::paper_like(8)
+            .with_slow_nodes(1, 4.0)
+            .with_speculation(true);
+        let b = simulate_job(&profile, &spec);
+        assert!(b.speculative_launched >= 1);
+        let off = simulate_job(&profile, &spec.clone().with_speculation(false));
+        assert_eq!(off.speculative_launched, 0);
+        assert!(b.map_s < off.map_s);
     }
 
     #[test]

@@ -20,11 +20,24 @@
 //!    one big partition with the parallelism of `v` small ones.  (This is
 //!    the direction the authors later published as "Load Balancing for
 //!    MapReduce-based Entity Resolution", ICDE 2012.)
+//!
+//! 3. [`key_histogram_job`] / [`manual_partitioner_job`] — the blocking-key
+//!    histogram the Manual partitioner is built from, computed as a
+//!    MapReduce job *with a map-side combiner* instead of driver-side.
+//!    This is the analysis job the paper's "manually defined" partitioning
+//!    implies (sample the key distribution, cut it at the quantiles), and
+//!    it exercises the combiner on the real SN data path: the map output
+//!    is one `(key, 1)` per entity, which the combiner collapses to one
+//!    `(key, count)` per distinct key per task before the shuffle.
 
 use std::sync::Arc;
 
 use crate::er::blockkey::BlockingKey;
 use crate::er::entity::Entity;
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::engine::run_job_with_combiner;
+use crate::mapreduce::types::{Emitter, FnMapTask, FnReduceTask, HashPartitioner, ValuesIter};
+use crate::mapreduce::{FnCombiner, JobConfig};
 use crate::sn::partition::{partition_sizes, PartitionFn, RangePartition};
 
 /// Build boundaries that equalize Σ cost(entity) per partition.
@@ -80,6 +93,88 @@ where
         boundaries.push(runs.last().map(|(k, _)| k.clone()).unwrap_or_default());
     }
     RangePartition::new(boundaries, &format!("PairBalanced{r}"))
+}
+
+/// Compute the blocking-key histogram as a MapReduce job with a map-side
+/// combiner: map emits `(key, 1)` per entity, the combiner pre-sums each
+/// sorted run (collapsing a task's records to one per distinct key), and
+/// a single reduce task emits the key-sorted histogram.  Returns the
+/// histogram and the job's counters (so callers can report the combiner's
+/// shuffle saving on real SN data).
+pub fn key_histogram_job(
+    entities: &[Entity],
+    key_fn: &Arc<dyn BlockingKey>,
+    num_map_tasks: usize,
+    workers: usize,
+) -> (Vec<(String, u64)>, Arc<Counters>) {
+    let input: Vec<((), Arc<Entity>)> = entities
+        .iter()
+        .map(|e| ((), Arc::new(e.clone())))
+        .collect();
+    let bk = Arc::clone(key_fn);
+    let mapper = Arc::new(FnMapTask::new(
+        move |_k: (), e: Arc<Entity>, out: &mut Emitter<String, u64>, _c: &Counters| {
+            out.emit(bk.key(&e), 1);
+        },
+    ));
+    let reducer = Arc::new(FnReduceTask::new(
+        |k: &String, vals: ValuesIter<'_, u64>, out: &mut Emitter<String, u64>, _c: &Counters| {
+            out.emit(k.clone(), vals.copied().sum());
+        },
+    ));
+    let cfg = JobConfig::named("key-histogram")
+        .with_tasks(num_map_tasks.max(1), 1)
+        .with_workers(workers.max(1));
+    let res = run_job_with_combiner(
+        &cfg,
+        input,
+        mapper,
+        Arc::new(HashPartitioner::new(|_: &String| 0)),
+        Arc::new(|a: &String, b: &String| a == b),
+        reducer,
+        Arc::new(FnCombiner::new(|_k: &String, vals: Vec<u64>, _c: &Counters| {
+            vec![vals.into_iter().sum()]
+        })),
+    );
+    let counters = Arc::clone(&res.counters);
+    (res.merged_output(), counters)
+}
+
+/// Boundaries at the count quantiles of a key histogram — exactly the
+/// keys [`RangePartition::balanced`] picks from the sorted key multiset,
+/// recovered from `(key, count)` runs instead of individual records.
+pub fn balanced_from_histogram(hist: &[(String, u64)], r: usize) -> RangePartition {
+    assert!(r >= 1);
+    let n: u64 = hist.iter().map(|(_, c)| *c).sum();
+    let mut boundaries = Vec::with_capacity(r.saturating_sub(1));
+    for i in 1..r {
+        let idx = (i as u64 * n) / r as u64; // position in the sorted multiset
+        let mut cum = 0u64;
+        let mut boundary = String::new();
+        for (k, c) in hist {
+            if cum + c > idx {
+                boundary = k.clone();
+                break;
+            }
+            cum += c;
+        }
+        boundaries.push(boundary);
+    }
+    RangePartition::new(boundaries, &format!("Manual{r}"))
+}
+
+/// The paper's Manual partitioner with its key statistics computed by the
+/// engine ([`key_histogram_job`]) rather than driver-side; produces the
+/// same boundaries as [`RangePartition::balanced`] on the same input.
+pub fn manual_partitioner_job(
+    entities: &[Entity],
+    key_fn: &Arc<dyn BlockingKey>,
+    r: usize,
+    num_map_tasks: usize,
+    workers: usize,
+) -> RangePartition {
+    let (hist, _) = key_histogram_job(entities, key_fn, num_map_tasks, workers);
+    balanced_from_histogram(&hist, r)
 }
 
 /// A partition function that refines a base function by splitting its
@@ -190,6 +285,52 @@ mod tests {
                 Entity::new(i, &format!("{k} title {i}"), "")
             })
             .collect()
+    }
+
+    #[test]
+    fn histogram_job_matches_driver_side_count() {
+        let entities = skewed_entities(600);
+        let bk: Arc<dyn BlockingKey> = Arc::new(TitlePrefixKey::new(2));
+        let (hist, counters) = key_histogram_job(&entities, &bk, 4, 2);
+        // reference: driver-side BTreeMap count
+        let mut expect: std::collections::BTreeMap<String, u64> = Default::default();
+        for e in &entities {
+            *expect.entry(bk.key(e)).or_insert(0) += 1;
+        }
+        let expect: Vec<(String, u64)> = expect.into_iter().collect();
+        assert_eq!(hist, expect);
+        // the combiner must actually have collapsed records on this path
+        use crate::mapreduce::counters::names;
+        assert_eq!(counters.get(names::COMBINE_INPUT_RECORDS), 600);
+        assert!(
+            counters.get(names::COMBINE_OUTPUT_RECORDS)
+                < counters.get(names::COMBINE_INPUT_RECORDS)
+        );
+        assert_eq!(
+            counters.get(names::REDUCE_INPUT_RECORDS),
+            counters.get(names::COMBINE_OUTPUT_RECORDS)
+        );
+    }
+
+    #[test]
+    fn manual_partitioner_job_equals_driver_side_balanced() {
+        let entities = skewed_entities(800);
+        let bk_dyn: Arc<dyn BlockingKey> = Arc::new(TitlePrefixKey::new(2));
+        let bk = TitlePrefixKey::new(2);
+        for r in [1usize, 3, 8] {
+            let from_job = manual_partitioner_job(&entities, &bk_dyn, r, 4, 2);
+            let driver = RangePartition::balanced(&entities, |e| bk.key(e), r);
+            assert_eq!(from_job.num_partitions(), driver.num_partitions());
+            assert_eq!(from_job.name(), driver.name());
+            for e in &entities {
+                let k = bk.key(e);
+                assert_eq!(
+                    from_job.partition(&k),
+                    driver.partition(&k),
+                    "partition mismatch for key {k} at r={r}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use crate::er::entity::Entity;
 use crate::mapreduce::counters::Counters;
-use crate::mapreduce::engine::run_job;
+use crate::mapreduce::scheduler::Exec;
 use crate::mapreduce::sim::JobProfile;
 use crate::mapreduce::types::{Emitter, FnMapTask, ReduceTask, ReduceTaskFactory, ValuesIter};
 use crate::mapreduce::JobConfig;
@@ -68,7 +68,15 @@ impl ReduceTaskFactory<SnKey, (u32, Arc<Entity>), SnKey, SnVal> for BoundaryRedu
 /// reduce tasks (one per boundary); the paper runs it with a single
 /// reducer (`r = 1` in §5.2) — set `second_job_reducers` to override.
 pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
-    run_with_options(entities, cfg, None)
+    run_with_options(entities, cfg, None, Exec::Serial)
+}
+
+/// As [`run`], on an explicit executor.  On a shared scheduler the two
+/// jobs form a dependency chain — phase 2's input is phase 1's boundary
+/// output — so they run back-to-back *within* this workflow while their
+/// tasks still interleave with any other concurrently submitted job.
+pub fn run_on(entities: &[Entity], cfg: &SnConfig, exec: Exec<'_>) -> anyhow::Result<SnResult> {
+    run_with_options(entities, cfg, None, exec)
 }
 
 /// As [`run`], with an explicit reduce-task count for the second job
@@ -79,11 +87,12 @@ pub fn run_with_options(
     entities: &[Entity],
     cfg: &SnConfig,
     second_job_reducers: Option<usize>,
+    exec: Exec<'_>,
 ) -> anyhow::Result<SnResult> {
     let r = cfg.partitioner.num_partitions();
 
     // ---- phase 1: SRP + boundary emission --------------------------------
-    let res1 = run_srp_job(entities, cfg, r > 1, "jobsn-phase1");
+    let res1 = run_srp_job(entities, cfg, r > 1, "jobsn-phase1", exec);
     let (mut pairs, mut matches, boundaries) = split_output(&res1);
     let profile1 = JobProfile::from_stats(
         &res1.stats,
@@ -127,7 +136,7 @@ pub fn run_with_options(
                 key.bound as usize % num_reducers
             }
         }
-        let res2 = run_job(
+        let res2 = exec.run_job(
             &job_cfg,
             input,
             mapper,
@@ -247,7 +256,19 @@ mod tests {
 
     #[test]
     fn jobsn_one_reducer_second_job_like_paper() {
-        let res = run_with_options(&fig5_entities(), &fig5_cfg(), Some(1)).unwrap();
+        let res =
+            run_with_options(&fig5_entities(), &fig5_cfg(), Some(1), Exec::Serial).unwrap();
         assert_eq!(res.pair_set().len(), expected_pair_count(9, 3));
+    }
+
+    #[test]
+    fn jobsn_on_scheduler_matches_serial() {
+        let entities = fig5_entities();
+        let cfg = fig5_cfg();
+        let serial = run(&entities, &cfg).unwrap();
+        let sched = crate::mapreduce::scheduler::JobScheduler::with_slots(3);
+        let scheduled = run_on(&entities, &cfg, Exec::Scheduler(&sched)).unwrap();
+        assert_eq!(serial.pair_set(), scheduled.pair_set());
+        assert_eq!(scheduled.stats.len(), 2, "both jobs must run through the scheduler");
     }
 }

@@ -5,6 +5,14 @@
 //!
 //! Each pass is a full RepSN run with its own blocking key; results are
 //! unioned (set semantics on pairs, max-score on matches).
+//!
+//! The passes are *independent* MapReduce jobs, so [`run`] submits all of
+//! them to one shared [`JobScheduler`] and their map/reduce tasks
+//! interleave across its slots — pass 2's map wave runs while pass 1 is
+//! still reducing, instead of the old job-at-a-time loop.  The union is
+//! folded in key order regardless of completion order, so the result is
+//! byte-identical to the serial baseline ([`run_serial`], kept as the
+//! reference the property tests and the skew bench compare against).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -12,26 +20,79 @@ use std::sync::Arc;
 use crate::er::blockkey::BlockingKey;
 use crate::er::entity::{Entity, Pair, ScoredPair};
 use crate::mapreduce::counters::Counters;
+use crate::mapreduce::scheduler::{JobScheduler, SchedulerConfig};
 use crate::sn::types::{SnConfig, SnResult};
 use crate::sn::{repsn, SnMode};
 
 /// Union results of several RepSN passes with different blocking keys.
+///
+/// All passes run concurrently on a scheduler with `base_cfg.workers` map
+/// and reduce slots (speculation off); use [`run_on`] to supply your own
+/// scheduler — e.g. one shared with other jobs, or one with speculative
+/// execution enabled.
 pub fn run(
     entities: &[Entity],
     base_cfg: &SnConfig,
     keys: &[Arc<dyn BlockingKey>],
 ) -> anyhow::Result<MultipassResult> {
+    let sched = JobScheduler::new(SchedulerConfig::slots(base_cfg.workers.max(1)));
+    run_on(entities, base_cfg, keys, &sched)
+}
+
+/// As [`run`], submitting every pass to the given shared scheduler.
+pub fn run_on(
+    entities: &[Entity],
+    base_cfg: &SnConfig,
+    keys: &[Arc<dyn BlockingKey>],
+    sched: &JobScheduler,
+) -> anyhow::Result<MultipassResult> {
     anyhow::ensure!(!keys.is_empty(), "multipass needs at least one key");
-    let counters = Arc::new(Counters::new());
-    let mut pair_set: BTreeMap<Pair, f32> = BTreeMap::new();
-    let mut per_pass = Vec::new();
-    let mut new_per_pass = Vec::new();
+    // fan out: every per-key job is in flight before the first joins
+    let pending: Vec<repsn::PendingRepSn> = keys
+        .iter()
+        .map(|key| {
+            let cfg = SnConfig {
+                blocking_key: Arc::clone(key),
+                ..base_cfg.clone()
+            };
+            repsn::submit(entities, &cfg, sched)
+        })
+        .collect();
+    let mut per_pass = Vec::with_capacity(pending.len());
+    for p in pending {
+        per_pass.push(p.join()?);
+    }
+    Ok(union_passes(base_cfg, per_pass))
+}
+
+/// The serial baseline: one pass at a time, each on its own private
+/// worker pool.  Kept as the reference implementation the scheduler path
+/// is checked against (`tests/prop_sched.rs`) and the speedup baseline
+/// the skew bench measures.
+pub fn run_serial(
+    entities: &[Entity],
+    base_cfg: &SnConfig,
+    keys: &[Arc<dyn BlockingKey>],
+) -> anyhow::Result<MultipassResult> {
+    anyhow::ensure!(!keys.is_empty(), "multipass needs at least one key");
+    let mut per_pass = Vec::with_capacity(keys.len());
     for key in keys {
         let cfg = SnConfig {
             blocking_key: Arc::clone(key),
             ..base_cfg.clone()
         };
-        let res = repsn::run(entities, &cfg)?;
+        per_pass.push(repsn::run(entities, &cfg)?);
+    }
+    Ok(union_passes(base_cfg, per_pass))
+}
+
+/// Fold finished passes (in key order) into the union result.  Pure
+/// post-processing: identical no matter how the passes were executed.
+fn union_passes(base_cfg: &SnConfig, per_pass: Vec<SnResult>) -> MultipassResult {
+    let counters = Arc::new(Counters::new());
+    let mut pair_set: BTreeMap<Pair, f32> = BTreeMap::new();
+    let mut new_per_pass = Vec::with_capacity(per_pass.len());
+    for res in &per_pass {
         counters.merge(&res.counters);
         let mut newly = 0usize;
         match base_cfg.mode {
@@ -55,7 +116,6 @@ pub fn run(
             }
         }
         new_per_pass.push(newly);
-        per_pass.push(res);
     }
     let is_matching = matches!(base_cfg.mode, SnMode::Matching(_));
     let (pairs, matches) = if is_matching {
@@ -69,7 +129,7 @@ pub fn run(
     } else {
         (pair_set.into_keys().collect(), Vec::new())
     };
-    Ok(MultipassResult {
+    MultipassResult {
         union: SnResult {
             pairs,
             matches,
@@ -79,7 +139,7 @@ pub fn run(
         },
         per_pass,
         new_per_pass,
-    })
+    }
 }
 
 /// Result of a multi-pass run.
@@ -87,7 +147,7 @@ pub fn run(
 pub struct MultipassResult {
     /// Unioned pairs/matches across passes.
     pub union: SnResult,
-    /// Individual pass results (diagnostics).
+    /// Individual pass results (diagnostics), in blocking-key order.
     pub per_pass: Vec<SnResult>,
     /// How many pairs each pass contributed that earlier passes missed.
     pub new_per_pass: Vec<usize>,
@@ -154,6 +214,43 @@ mod tests {
             for p in pass.pair_set() {
                 assert!(union.contains(&p));
             }
+        }
+    }
+
+    #[test]
+    fn concurrent_run_matches_serial_baseline() {
+        let entities: Vec<Entity> = (0..120)
+            .map(|i| {
+                let c1 = (b'a' + (i % 11) as u8) as char;
+                Entity::new(i, &format!("{c1}x some title word{}", i % 6), "")
+            })
+            .collect();
+        let base = SnConfig {
+            window: 4,
+            num_map_tasks: 3,
+            workers: 4,
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            ..Default::default()
+        };
+        let keys: Vec<Arc<dyn BlockingKey>> = vec![
+            Arc::new(TitlePrefixKey::new(2)),
+            Arc::new(TitleSuffixKey),
+            Arc::new(TitlePrefixKey::new(1)),
+        ];
+        let serial = run_serial(&entities, &base, &keys).unwrap();
+        let concurrent = run(&entities, &base, &keys).unwrap();
+        assert_eq!(serial.union.pair_set(), concurrent.union.pair_set());
+        assert_eq!(serial.new_per_pass, concurrent.new_per_pass);
+        for (s, c) in serial.per_pass.iter().zip(&concurrent.per_pass) {
+            assert_eq!(s.pair_set(), c.pair_set());
+            assert_eq!(
+                s.stats[0].map_output_records,
+                c.stats[0].map_output_records
+            );
+            assert_eq!(
+                s.stats[0].reduce_output_records,
+                c.stats[0].reduce_output_records
+            );
         }
     }
 }

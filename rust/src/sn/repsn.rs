@@ -20,7 +20,8 @@ use std::sync::Arc;
 use crate::er::blockkey::BlockingKey;
 use crate::er::entity::Entity;
 use crate::mapreduce::counters::Counters;
-use crate::mapreduce::engine::run_job;
+use crate::mapreduce::engine::JobResult;
+use crate::mapreduce::scheduler::{Exec, JobHandle, JobScheduler};
 use crate::mapreduce::sim::JobProfile;
 use crate::mapreduce::types::{
     Emitter, MapTask, MapTaskFactory, ReduceTask, ReduceTaskFactory, ValuesIter,
@@ -197,8 +198,17 @@ impl ReduceTask<SnKey, Arc<Entity>, SnKey, SnVal> for RepSnReduceImpl {
     }
 }
 
-/// Run RepSN (§4.3): the complete SN result in a single MapReduce job.
-pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
+/// The assembled parts of a RepSN job, shared by every execution path.
+#[allow(clippy::type_complexity)]
+fn job_parts(
+    entities: &[Entity],
+    cfg: &SnConfig,
+) -> (
+    JobConfig,
+    Vec<((), Arc<Entity>)>,
+    Arc<dyn MapTaskFactory<(), Arc<Entity>, SnKey, Arc<Entity>>>,
+    Arc<dyn ReduceTaskFactory<SnKey, Arc<Entity>, SnKey, SnVal>>,
+) {
     let r = cfg.partitioner.num_partitions();
     let input: Vec<((), Arc<Entity>)> = entities
         .iter()
@@ -208,24 +218,25 @@ pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
         .with_tasks(cfg.num_map_tasks, r)
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records);
-    let res = run_job(
-        &job_cfg,
-        input,
+    let mapper: Arc<dyn MapTaskFactory<(), Arc<Entity>, SnKey, Arc<Entity>>> =
         Arc::new(RepSnMapFactory {
             w: cfg.window,
             r,
             blocking_key: Arc::clone(&cfg.blocking_key),
             partitioner: Arc::clone(&cfg.partitioner),
-        }),
-        Arc::new(BoundPartitioner),
-        group_by_bound(),
+        });
+    let reducer: Arc<dyn ReduceTaskFactory<SnKey, Arc<Entity>, SnKey, SnVal>> =
         Arc::new(RepSnReduceFactory {
             w: cfg.window,
             mode: cfg.mode.clone(),
             blocking_key: Arc::clone(&cfg.blocking_key),
             partitioner: Arc::clone(&cfg.partitioner),
-        }),
-    );
+        });
+    (job_cfg, input, mapper, reducer)
+}
+
+/// Post-process a finished RepSN engine job into an [`SnResult`].
+fn finish(res: JobResult<SnKey, SnVal>) -> anyhow::Result<SnResult> {
     let (pairs, matches, boundaries) = crate::sn::srp::split_output(&res);
     debug_assert!(boundaries.is_empty());
     let profile = JobProfile::from_stats(
@@ -240,6 +251,54 @@ pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
         stats: vec![res.stats.clone()],
         profiles: vec![profile],
     })
+}
+
+/// Run RepSN (§4.3): the complete SN result in a single MapReduce job.
+pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
+    run_on(entities, cfg, Exec::Serial)
+}
+
+/// As [`run`], on an explicit executor (serial or shared scheduler).
+pub fn run_on(entities: &[Entity], cfg: &SnConfig, exec: Exec<'_>) -> anyhow::Result<SnResult> {
+    let (job_cfg, input, mapper, reducer) = job_parts(entities, cfg);
+    finish(exec.run_job(
+        &job_cfg,
+        input,
+        mapper,
+        Arc::new(BoundPartitioner),
+        group_by_bound(),
+        reducer,
+    ))
+}
+
+/// A RepSN job submitted to a shared scheduler; [`PendingRepSn::join`]
+/// blocks for the result.
+pub struct PendingRepSn {
+    handle: JobHandle<SnKey, SnVal>,
+}
+
+impl PendingRepSn {
+    pub fn join(self) -> anyhow::Result<SnResult> {
+        finish(self.handle.join())
+    }
+}
+
+/// Submit RepSN to a shared [`JobScheduler`] and return immediately; the
+/// job's map/reduce tasks interleave with every other submitted job's on
+/// the scheduler's slots (this is how [`multipass`](crate::sn::multipass)
+/// runs its independent per-key passes concurrently).
+pub fn submit(entities: &[Entity], cfg: &SnConfig, sched: &JobScheduler) -> PendingRepSn {
+    let (job_cfg, input, mapper, reducer) = job_parts(entities, cfg);
+    PendingRepSn {
+        handle: sched.submit(
+            job_cfg,
+            input,
+            mapper,
+            Arc::new(BoundPartitioner),
+            group_by_bound(),
+            reducer,
+        ),
+    }
 }
 
 #[cfg(test)]

@@ -13,7 +13,8 @@ use std::sync::Arc;
 use crate::er::blockkey::BlockingKey;
 use crate::er::entity::{Entity, Pair, ScoredPair};
 use crate::mapreduce::counters::Counters;
-use crate::mapreduce::engine::{run_job, GroupFn, JobResult};
+use crate::mapreduce::engine::{GroupFn, JobResult};
+use crate::mapreduce::scheduler::Exec;
 use crate::mapreduce::sim::JobProfile;
 use crate::mapreduce::types::{
     Emitter, FnMapTask, Partitioner, ReduceTask, ReduceTaskFactory, ValuesIter,
@@ -144,12 +145,14 @@ impl ReduceTaskFactory<SnKey, Arc<Entity>, SnKey, SnVal> for SnWindowReduceFacto
 }
 
 /// Run the SRP job (optionally with JobSN phase-1 boundary emission) and
-/// return the raw engine result.
+/// return the raw engine result.  `exec` selects a job-private pool or a
+/// shared [`JobScheduler`](crate::mapreduce::scheduler::JobScheduler).
 pub(crate) fn run_srp_job(
     entities: &[Entity],
     cfg: &SnConfig,
     emit_boundaries: bool,
     job_name: &str,
+    exec: Exec<'_>,
 ) -> JobResult<SnKey, SnVal> {
     let r = cfg.partitioner.num_partitions();
     let input: Vec<((), Arc<Entity>)> = entities
@@ -160,7 +163,7 @@ pub(crate) fn run_srp_job(
         .with_tasks(cfg.num_map_tasks, r)
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records);
-    run_job(
+    exec.run_job(
         &job_cfg,
         input,
         srp_mapper(cfg),
@@ -198,7 +201,12 @@ pub(crate) fn split_output(
 /// Run plain SRP (§4.1): sorted reduce partitions *without* boundary
 /// handling.  Misses `(r−1)·w·(w−1)/2` pairs by design.
 pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
-    let res = run_srp_job(entities, cfg, false, "srp");
+    run_on(entities, cfg, Exec::Serial)
+}
+
+/// As [`run`], on an explicit executor (serial or shared scheduler).
+pub fn run_on(entities: &[Entity], cfg: &SnConfig, exec: Exec<'_>) -> anyhow::Result<SnResult> {
+    let res = run_srp_job(entities, cfg, false, "srp", exec);
     let (pairs, matches, _) = split_output(&res);
     let profile = JobProfile::from_stats(
         &res.stats,

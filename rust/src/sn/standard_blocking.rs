@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use crate::er::entity::{Entity, Pair};
 use crate::mapreduce::counters::Counters;
-use crate::mapreduce::engine::run_job;
+use crate::mapreduce::scheduler::Exec;
 use crate::mapreduce::sim::JobProfile;
 use crate::mapreduce::types::{Emitter, FnMapTask, FnReduceTask, HashPartitioner, ValuesIter};
 use crate::mapreduce::JobConfig;
@@ -21,6 +21,11 @@ use crate::sn::types::{counter_names, SnConfig, SnKey, SnMode, SnResult, SnVal};
 /// task counts; `window` is ignored; the partitioner is replaced by key
 /// hashing (blocks are independent — no order needed).
 pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
+    run_on(entities, cfg, Exec::Serial)
+}
+
+/// As [`run`], on an explicit executor (serial or shared scheduler).
+pub fn run_on(entities: &[Entity], cfg: &SnConfig, exec: Exec<'_>) -> anyhow::Result<SnResult> {
     let input: Vec<((), Arc<Entity>)> = entities
         .iter()
         .map(|e| ((), Arc::new(e.clone())))
@@ -83,7 +88,7 @@ pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
         .with_tasks(cfg.num_map_tasks, r)
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records);
-    let res = run_job(
+    let res = exec.run_job(
         &job_cfg,
         input,
         mapper,

@@ -81,6 +81,15 @@ impl ThreadPool {
     pub fn size(&self) -> usize {
         self.workers.len()
     }
+
+    /// Jobs submitted but not yet finished (queued + running).  The job
+    /// scheduler's straggler detector uses `in_flight() < size()` as its
+    /// "a slot is idle" test before cloning a slow task — speculation must
+    /// never delay a primary task that is still waiting for a slot.
+    pub fn in_flight(&self) -> usize {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap()
+    }
 }
 
 fn worker_loop(
@@ -193,6 +202,28 @@ impl<T> OnceSlots<T> {
             *self.slots[i].get() = Some(t);
         }
         self.state[i].store(SLOT_FULL, Ordering::Release);
+    }
+
+    /// Racing fill: fill slot `i` iff it is still empty, returning whether
+    /// this caller won.  The value of a losing attempt is dropped.  This is
+    /// the first-completion-wins primitive speculative task execution is
+    /// built on: the original task and its clone both `try_put`, exactly
+    /// one transition EMPTY→WRITING succeeds, and the loser's result never
+    /// becomes observable.
+    pub fn try_put(&self, i: usize, t: T) -> bool {
+        if self.state[i]
+            .compare_exchange(SLOT_EMPTY, SLOT_WRITING, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false;
+        }
+        // SAFETY: as in `put` — winning the EMPTY→WRITING CAS grants this
+        // thread exclusive access to the cell.
+        unsafe {
+            *self.slots[i].get() = Some(t);
+        }
+        self.state[i].store(SLOT_FULL, Ordering::Release);
+        true
     }
 
     /// Consume all slots in index order.  Panics if any slot is unfilled.
@@ -326,6 +357,26 @@ mod tests {
         sink.put(0, 10u32);
         sink.put(1, 20u32);
         assert_eq!(sink.into_vec(), vec![10, 20]);
+    }
+
+    #[test]
+    fn try_put_first_wins_second_loses() {
+        let sink = OnceSlots::empty(1);
+        assert!(sink.try_put(0, 1u32));
+        assert!(!sink.try_put(0, 2u32));
+        assert_eq!(sink.take(0), 1);
+        // after the winner was taken, a late loser still loses
+        assert!(!sink.try_put(0, 3u32));
+    }
+
+    #[test]
+    fn in_flight_drains_to_zero() {
+        let pool = ThreadPool::new(2);
+        for _ in 0..10 {
+            pool.execute(|| {});
+        }
+        assert_eq!(pool.join(), 0);
+        assert_eq!(pool.in_flight(), 0);
     }
 
     #[test]

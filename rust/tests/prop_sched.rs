@@ -1,0 +1,166 @@
+//! Scheduler equivalence properties (ISSUE 2 acceptance).
+//!
+//! The multi-job scheduler must be *output-invisible*: concurrent
+//! execution on shared slots, and speculative execution on top of it, may
+//! change when results are produced but never what they are.  Each
+//! property compares the scheduler path against the serial reference
+//! (`multipass::run_serial` / `run_job`) on randomized corpora and
+//! configurations — match pairs, per-job `JobStats` record counts, and
+//! engine counters all have to agree exactly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey, TitleSuffixKey};
+use snmr::er::entity::Entity;
+use snmr::mapreduce::counters::names;
+use snmr::mapreduce::scheduler::{JobScheduler, SchedulerConfig, SpecPolicy};
+use snmr::sn::multipass;
+use snmr::sn::partition::RangePartition;
+use snmr::sn::types::{SnConfig, SnMode};
+use snmr::util::prop::Cases;
+use snmr::util::rng::Rng;
+use snmr::{prop_assert, prop_assert_eq};
+
+/// Random corpus whose 2-letter keys spread over `key_span` distinct
+/// prefixes (same generator as `prop_sn.rs`).
+fn random_entities(rng: &mut Rng, n: usize, key_span: usize) -> Vec<Entity> {
+    (0..n as u64)
+        .map(|i| {
+            let k = rng.range(0, key_span);
+            let c1 = (b'a' + (k / 5) as u8) as char;
+            let c2 = (b'a' + (k % 5) as u8) as char;
+            Entity::new(i, &format!("{c1}{c2} title {i}"), "abstract text")
+        })
+        .collect()
+}
+
+fn random_config(rng: &mut Rng, entities: &[Entity]) -> SnConfig {
+    let bk = TitlePrefixKey::new(2);
+    let r = rng.range(1, 5);
+    SnConfig {
+        window: rng.range(2, 6),
+        num_map_tasks: rng.range(1, 5),
+        workers: rng.range(1, 5),
+        partitioner: Arc::new(RangePartition::balanced(entities, |e| bk.key(e), r)),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+        sort_buffer_records: None,
+    }
+}
+
+fn random_keys(rng: &mut Rng) -> Vec<Arc<dyn BlockingKey>> {
+    let mut keys: Vec<Arc<dyn BlockingKey>> = vec![Arc::new(TitlePrefixKey::new(2))];
+    if rng.chance(0.7) {
+        keys.push(Arc::new(TitleSuffixKey));
+    }
+    if rng.chance(0.5) {
+        keys.push(Arc::new(TitlePrefixKey::new(1)));
+    }
+    keys
+}
+
+/// Compare a scheduler-path multipass result against the serial baseline:
+/// identical union, per-pass outputs, novelty counts, and per-job record
+/// stats.
+fn assert_equivalent(
+    serial: &multipass::MultipassResult,
+    other: &multipass::MultipassResult,
+    label: &str,
+) -> Result<(), String> {
+    prop_assert_eq!(serial.union.pair_set(), other.union.pair_set());
+    prop_assert_eq!(&serial.new_per_pass, &other.new_per_pass);
+    prop_assert!(
+        serial.per_pass.len() == other.per_pass.len(),
+        "{label}: pass count mismatch"
+    );
+    for (i, (s, o)) in serial.per_pass.iter().zip(&other.per_pass).enumerate() {
+        prop_assert_eq!(s.pair_set(), o.pair_set());
+        prop_assert!(
+            s.stats.len() == o.stats.len(),
+            "{label}: pass {i} job count mismatch"
+        );
+        for (ss, os) in s.stats.iter().zip(&o.stats) {
+            prop_assert!(
+                ss.map_output_records == os.map_output_records,
+                "{label}: pass {i} map_output_records {} != {}",
+                ss.map_output_records,
+                os.map_output_records
+            );
+            prop_assert!(
+                ss.reduce_output_records == os.reduce_output_records,
+                "{label}: pass {i} reduce_output_records {} != {}",
+                ss.reduce_output_records,
+                os.reduce_output_records
+            );
+        }
+        // user + engine counters must agree too (losing attempts and
+        // concurrent interleaving must not leak into accounting)
+        for name in [
+            names::MAP_OUTPUT_RECORDS,
+            names::REDUCE_INPUT_RECORDS,
+            names::SHUFFLE_BYTES,
+            "sn.window_comparisons",
+            "sn.replicated_entities",
+        ] {
+            prop_assert!(
+                s.counters.get(name) == o.counters.get(name),
+                "{label}: pass {i} counter {name}: {} != {}",
+                s.counters.get(name),
+                o.counters.get(name)
+            );
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_multipass_on_scheduler_equals_serial() {
+    Cases::new("multipass scheduler == serial", 25).run(|rng| {
+        let entities = random_entities(rng, rng.range(40, 200), rng.range(6, 25));
+        let cfg = random_config(rng, &entities);
+        let keys = random_keys(rng);
+        let serial = multipass::run_serial(&entities, &cfg, &keys).map_err(|e| e.to_string())?;
+        let concurrent = multipass::run(&entities, &cfg, &keys).map_err(|e| e.to_string())?;
+        assert_equivalent(&serial, &concurrent, "concurrent")
+    });
+}
+
+#[test]
+fn prop_speculation_never_changes_output() {
+    // an intentionally trigger-happy policy: threshold 1× median from the
+    // first completion, sub-millisecond polling — clones fire constantly,
+    // and first-completion-wins must absorb every race
+    let policy = SpecPolicy {
+        slowdown: 1.0,
+        min_secs: 0.0,
+        poll: Duration::from_micros(200),
+    };
+    Cases::new("speculation output-invariant", 15).run(|rng| {
+        let entities = random_entities(rng, rng.range(40, 160), rng.range(6, 20));
+        let cfg = random_config(rng, &entities);
+        let keys = random_keys(rng);
+        let serial = multipass::run_serial(&entities, &cfg, &keys).map_err(|e| e.to_string())?;
+        let sched = JobScheduler::new(
+            SchedulerConfig::slots(cfg.workers.max(2))
+                .with_speculation(true)
+                .with_policy(policy.clone()),
+        );
+        let spec = multipass::run_on(&entities, &cfg, &keys, &sched).map_err(|e| e.to_string())?;
+        assert_equivalent(&serial, &spec, "speculative")?;
+        // speculation counters never appear in the serial path
+        prop_assert!(
+            serial
+                .union
+                .counters
+                .get(names::SPECULATIVE_LAUNCHED)
+                == 0,
+            "serial path must not speculate"
+        );
+        Ok(())
+    });
+}
+
+// The wall-clock speedup demonstration lives in its own test binary
+// (`tests/sched_speedup.rs`) so its timing is not distorted by these
+// CPU-heavy properties running concurrently in the same libtest harness.

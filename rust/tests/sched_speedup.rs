@@ -1,0 +1,101 @@
+//! The ISSUE-2 acceptance demonstration: `sn/multipass.rs` no longer
+//! loops jobs serially — all per-key RepSN jobs submit to one
+//! `JobScheduler`, and at ≥4 slots the concurrent run beats the serial
+//! job-at-a-time baseline on wall-clock while producing byte-identical
+//! match output, with and without speculation.
+//!
+//! Kept in its own test binary so the measurement is not distorted by
+//! other tests running concurrently inside the same libtest harness
+//! (cargo executes test binaries sequentially).  Skipped on single-core
+//! machines, where concurrency cannot buy wall-clock time.
+
+use std::sync::Arc;
+
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey, TitleSuffixKey};
+use snmr::er::entity::Entity;
+use snmr::mapreduce::scheduler::{JobScheduler, SchedulerConfig};
+use snmr::sn::multipass;
+use snmr::sn::partition::RangePartition;
+use snmr::sn::types::{SnConfig, SnMode};
+use snmr::util::rng::Rng;
+
+fn random_entities(rng: &mut Rng, n: usize, key_span: usize) -> Vec<Entity> {
+    (0..n as u64)
+        .map(|i| {
+            let k = rng.range(0, key_span);
+            let c1 = (b'a' + (k / 5) as u8) as char;
+            let c2 = (b'a' + (k % 5) as u8) as char;
+            Entity::new(i, &format!("{c1}{c2} title {i}"), "abstract text")
+        })
+        .collect()
+}
+
+#[test]
+fn multipass_concurrency_speedup_over_serial() {
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    if cores < 2 {
+        eprintln!("skipping speedup check: single-core machine");
+        return;
+    }
+    let mut rng = Rng::new(0x5CED);
+    let entities = random_entities(&mut rng, 6000, 40);
+    let bk = TitlePrefixKey::new(2);
+    let base = SnConfig {
+        window: 40,
+        num_map_tasks: 8,
+        workers: 1, // serial baseline: one task at a time, one job at a time
+        partitioner: Arc::new(RangePartition::balanced(&entities, |e| bk.key(e), 8)),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+        sort_buffer_records: None,
+    };
+    let keys: Vec<Arc<dyn BlockingKey>> = vec![
+        Arc::new(TitlePrefixKey::new(1)),
+        Arc::new(TitlePrefixKey::new(2)),
+        Arc::new(TitlePrefixKey::new(3)),
+        Arc::new(TitleSuffixKey),
+    ];
+
+    let t0 = std::time::Instant::now();
+    let serial = multipass::run_serial(&entities, &base, &keys).unwrap();
+    let mut serial_secs = t0.elapsed().as_secs_f64();
+
+    for speculative in [false, true] {
+        let sched = JobScheduler::new(SchedulerConfig::slots(4).with_speculation(speculative));
+        let t0 = std::time::Instant::now();
+        let concurrent = multipass::run_on(&entities, &base, &keys, &sched).unwrap();
+        let mut concurrent_secs = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            serial.union.pair_set(),
+            concurrent.union.pair_set(),
+            "speculative={speculative}: output must be byte-identical"
+        );
+        assert_eq!(serial.new_per_pass, concurrent.new_per_pass);
+        // only assert timing when the workload is big enough to measure
+        if serial_secs <= 0.15 {
+            eprintln!(
+                "workload too small to assert speedup (serial {serial_secs:.3}s); \
+                 outputs verified identical"
+            );
+            continue;
+        }
+        if concurrent_secs >= serial_secs * 0.9 {
+            // transient machine load can distort either measurement on a
+            // shared runner: re-measure both once, back to back, before
+            // declaring the concurrency claim false
+            let t0 = std::time::Instant::now();
+            let _ = multipass::run_serial(&entities, &base, &keys).unwrap();
+            serial_secs = t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            let _ = multipass::run_on(&entities, &base, &keys, &sched).unwrap();
+            concurrent_secs = t0.elapsed().as_secs_f64();
+        }
+        assert!(
+            concurrent_secs < serial_secs * 0.9,
+            "speculative={speculative}: expected wall-clock speedup at 4 slots \
+             on {cores} cores: serial {serial_secs:.3}s vs concurrent {concurrent_secs:.3}s"
+        );
+    }
+}

@@ -1,18 +1,29 @@
 #!/usr/bin/env bash
-# Run the engine ablation bench and leave the perf-trajectory summary in
-# BENCH_engine.json at the repo root (the bench binary writes it to its
-# working directory).  Extra flags are forwarded, e.g.:
+# Run the perf-trajectory benches and leave their summaries at the repo
+# root (the bench binaries write to their working directory):
+#
+#   BENCH_engine.json — engine ablation (streaming shuffle, combiner)
+#   BENCH_skew.json   — fig9 skew ladder + speculation sweep + concurrent
+#                       multipass (scheduler vs serial)
+#
+# Extra flags are forwarded to the engine bench, e.g.:
 #
 #   scripts/bench.sh --n 100000
+#
+# The skew bench runs at a bounded size so CI stays fast; override with
+# SKEW_N / SKEW_W / SKEW_ZIPF.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo bench --bench engine_ablation -- "$@"
+cargo bench --bench fig9_skew -- --n "${SKEW_N:-5000}" --window "${SKEW_W:-30}" --zipf "${SKEW_ZIPF:-1.2}"
 
-if [[ -f rust/BENCH_engine.json ]]; then
-  # cargo may run the bench with the crate dir as cwd; always take the
-  # fresh summary over any stale root-level copy
-  mv -f rust/BENCH_engine.json BENCH_engine.json
-fi
-test -f BENCH_engine.json
-echo "perf summary: $(pwd)/BENCH_engine.json"
+for f in BENCH_engine.json BENCH_skew.json; do
+  if [[ -f "rust/$f" ]]; then
+    # cargo may run the bench with the crate dir as cwd; always take the
+    # fresh summary over any stale root-level copy
+    mv -f "rust/$f" "$f"
+  fi
+  test -f "$f"
+  echo "perf summary: $(pwd)/$f"
+done
