@@ -96,6 +96,7 @@ fn main() -> anyhow::Result<()> {
             scorer,
         }),
         sort_buffer_records: None,
+        balance: Default::default(),
     };
     let truth = corpus.truth_pairs();
     let mut table = Table::new(

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
         blocking_key: Arc::new(TitlePrefixKey::new(2)),
         mode: SnMode::Matching(MatchStrategyConfig::default()),
         sort_buffer_records: None,
+        balance: Default::default(),
     };
     let keys: Vec<Arc<dyn BlockingKey>> = vec![
         Arc::new(TitlePrefixKey::new(2)),

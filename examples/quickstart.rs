@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
         blocking_key: Arc::new(key),
         mode: SnMode::Matching(MatchStrategyConfig::default()),
         sort_buffer_records: None,
+        balance: Default::default(),
     };
     let t0 = std::time::Instant::now();
     let result = repsn::run(&corpus.entities, &cfg)?;

@@ -17,22 +17,30 @@
 //! checked identical to the serial runs, and the straggler-cloning
 //! counters are reported next to simulated slow-node makespans.
 //!
+//! With `--balance blocksplit|pairrange`, a Zipf *block-key*-skewed copy
+//! of the corpus (giant blocks no key-range partitioner can split) is run
+//! through unbalanced RepSN and the chosen `sn::loadbalance` strategy:
+//! outputs are asserted identical and the max-reduce-task pair counts are
+//! reported side by side — the load-balancing smoke test CI runs.
+//!
 //! ```bash
 //! cargo run --release --example skew_study -- --n 20000
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --speculative
+//! cargo run --release --example skew_study -- --n 2000 --window 20 --balance blocksplit
 //! ```
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use snmr::data::corpus::{generate, CorpusConfig};
-use snmr::data::skew::skew_to_last_partition;
+use snmr::data::skew::{skew_to_last_partition, zipf_skew_block_keys};
 use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
 use snmr::mapreduce::counters::names;
 use snmr::mapreduce::scheduler::{JobScheduler, SchedulerConfig};
 use snmr::mapreduce::sim::{simulate_job_chain, ClusterSpec};
 use snmr::metrics::report::{write_report, Table};
-use snmr::sn::balance::{balanced_from_histogram, key_histogram_job};
+use snmr::sn::balance::{balanced_from_histogram, key_histogram_job, pair_balanced_min_size};
+use snmr::sn::loadbalance::{counter_names as balance_counters, reduce_pair_skew, BalanceStrategy};
 use snmr::sn::partition::{gini, partition_sizes, EvenPartition, PartitionFn};
 use snmr::sn::repsn;
 use snmr::sn::types::{SnConfig, SnMode, SnResult};
@@ -65,6 +73,10 @@ fn main() -> anyhow::Result<()> {
                 "speculative",
                 "re-run the ladder concurrently on a shared scheduler with speculation",
             ),
+            flag(
+                "balance",
+                "also run the load-balancing study with this strategy (blocksplit|pairrange)",
+            ),
         ],
         false,
     )
@@ -72,6 +84,14 @@ fn main() -> anyhow::Result<()> {
     let n = args.get_usize("n", 20_000).map_err(anyhow::Error::msg)?;
     let window = args.get_usize("window", 100).map_err(anyhow::Error::msg)?;
     let speculative = args.get_bool("speculative");
+    let balance = match args.get("balance") {
+        None => None,
+        Some(s) => Some(
+            BalanceStrategy::parse(s)
+                .filter(|b| *b != BalanceStrategy::None)
+                .ok_or_else(|| anyhow::anyhow!("--balance must be blocksplit or pairrange"))?,
+        ),
+    };
 
     let corpus = generate(&CorpusConfig {
         n_entities: n,
@@ -123,6 +143,7 @@ fn main() -> anyhow::Result<()> {
         blocking_key: Arc::new(TitlePrefixKey::new(2)),
         mode: SnMode::Blocking,
         sort_buffer_records: None,
+        balance: Default::default(),
     };
 
     let mut table = Table::new(
@@ -209,6 +230,61 @@ fn main() -> anyhow::Result<()> {
         println!(
             "all {} jobs concurrently in {wall:.2}s wall; outputs identical to serial.",
             configs.len()
+        );
+    }
+
+    if let Some(strategy) = balance {
+        // Load-balancing study: a Zipf block-key corpus (a few giant
+        // blocks) through unbalanced RepSN vs the chosen two-job pipeline.
+        println!("\n--- load balancing: unbalanced RepSN vs {} ---", strategy.name());
+        let mut bal_entities = corpus.entities.clone();
+        zipf_skew_block_keys(&mut bal_entities, 150, 1.5, 0xB10C);
+        let partitioner = pair_balanced_min_size(&bal_entities, &bk, 8, window);
+        let r = partitioner.num_partitions();
+        let cfg = |strategy: BalanceStrategy| SnConfig {
+            window,
+            num_map_tasks: 8,
+            workers: 2,
+            partitioner: Arc::new(partitioner.clone()),
+            blocking_key: Arc::new(TitlePrefixKey::new(2)),
+            mode: SnMode::Blocking,
+            sort_buffer_records: None,
+            balance: strategy,
+        };
+        let unbalanced = repsn::run(&bal_entities, &cfg(BalanceStrategy::None))?;
+        let (unb_max, unb_total) = reduce_pair_skew(&unbalanced.stats[0]);
+        let balanced = repsn::run(&bal_entities, &cfg(strategy))?;
+        let identical = pair_digest(&balanced) == pair_digest(&unbalanced);
+        assert!(identical, "{}: output diverged from RepSN", strategy.name());
+        let max_task = balanced.counters.get(balance_counters::PAIRS_MAX_TASK);
+        assert!(
+            max_task <= unb_max,
+            "{}: max task {max_task} worse than unbalanced {unb_max}",
+            strategy.name()
+        );
+        let mut t3 = Table::new(
+            &format!("Reduce-task pair skew (r={r}, w={window})"),
+            &["strategy", "pairs_max_task", "pairs_total", "blocks_split", "identical"],
+        );
+        t3.row(vec![
+            "none".into(),
+            unb_max.to_string(),
+            unb_total.to_string(),
+            "-".into(),
+            "-".into(),
+        ]);
+        t3.row(vec![
+            strategy.name().into(),
+            max_task.to_string(),
+            balanced.counters.get(balance_counters::PAIRS_TOTAL).to_string(),
+            balanced.counters.get(balance_counters::BLOCKS_SPLIT).to_string(),
+            identical.to_string(),
+        ]);
+        println!("{}", t3.render());
+        println!(
+            "{}: hottest reduce task {unb_max} → {max_task} pairs ({:.1}× flatter), same output.",
+            strategy.name(),
+            unb_max as f64 / max_task.max(1) as f64
         );
     }
     Ok(())

@@ -76,6 +76,7 @@ fn main() -> anyhow::Result<()> {
                 SnMode::Matching(MatchStrategyConfig::default())
             },
             sort_buffer_records: None,
+            balance: Default::default(),
         };
         eprintln!("w={w}: running RepSN...");
         let t0 = std::time::Instant::now();

@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
                 blocking_key: Arc::new(TitlePrefixKey::new(2)),
                 mode: SnMode::Blocking,
                 sort_buffer_records: None,
+                balance: Default::default(),
             };
             let srp_res = srp::run(&corpus.entities, &cfg)?;
             let rep_res = repsn::run(&corpus.entities, &cfg)?;

@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
                 blocking_key: Arc::new(TitlePrefixKey::new(2)),
                 mode: SnMode::Blocking,
                 sort_buffer_records: None,
+                balance: Default::default(),
             };
             let seq_pairs = seq::run_blocking(&corpus.entities, &bk, w).len();
             let srp_pairs = srp::run(&corpus.entities, &cfg)?.pair_set().len();

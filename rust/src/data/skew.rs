@@ -75,6 +75,33 @@ pub fn zipf_skew_titles(entities: &mut [Entity], s: f64, seed: u64) {
     }
 }
 
+/// Rewrite every entity's two-character key prefix to one of
+/// `distinct_keys` two-letter keys chosen by a **single** Zipf(`s`) rank
+/// draw — skewing the *blocking-key* distribution itself, as opposed to
+/// [`zipf_skew_titles`]'s independent per-letter draws.  One draw per
+/// entity means the head of the distribution is a handful of giant
+/// *blocks* (key runs), which no monotone key-range partitioner can
+/// split — the reduce-side skew that `sn::loadbalance`'s BlockSplit /
+/// PairRange exist for, dialed independently of matcher cost.  Hot keys
+/// are scattered over the key space by a fixed unit permutation so a
+/// range partitioner cannot dodge them by accident.  Deterministic for a
+/// given `(entities, distinct_keys, s, seed)`.
+pub fn zipf_skew_block_keys(entities: &mut [Entity], distinct_keys: usize, s: f64, seed: u64) {
+    assert!(s > 0.0);
+    const SPAN: usize = 26 * 26;
+    let k = distinct_keys.clamp(1, SPAN);
+    let mut rng = Rng::new(seed ^ 0x0B10_C4B1_0C4B_10C4);
+    for e in entities.iter_mut() {
+        let rank = rng.zipf(k, s);
+        // 131 is coprime to 676, so this is a bijection on the key space
+        let slot = (rank * 131) % SPAN;
+        let c1 = (b'a' + (slot / 26) as u8) as char;
+        let c2 = (b'a' + (slot % 26) as u8) as char;
+        let rest: String = e.title.chars().skip(2).collect();
+        e.title = format!("{c1}{c2}{rest}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +180,40 @@ mod tests {
         let p = EvenPartition::ascii(8);
         let n = skew_to_last_partition(&mut entities, &TitlePrefixKey::new(2), &p, 0.5, 1);
         assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn zipf_block_keys_concentrate_mass_on_few_blocks() {
+        let corpus = generate(&CorpusConfig {
+            n_entities: 4000,
+            ..Default::default()
+        });
+        let bk = TitlePrefixKey::new(2);
+        let mut a = corpus.entities.clone();
+        zipf_skew_block_keys(&mut a, 200, 1.5, 7);
+        // block-size histogram: the hottest single key must dominate
+        let mut counts: std::collections::BTreeMap<String, usize> = Default::default();
+        for e in &a {
+            *counts.entry(bk.key(e)).or_insert(0) += 1;
+        }
+        let hottest = *counts.values().max().unwrap();
+        assert!(
+            hottest > 4000 / 5,
+            "s=1.5 head should hold >20% of entities in ONE block, got {hottest}"
+        );
+        assert!(counts.len() > 20, "tail must still spread: {}", counts.len());
+        // deterministic
+        let mut b = corpus.entities.clone();
+        zipf_skew_block_keys(&mut b, 200, 1.5, 7);
+        assert_eq!(a, b);
+        // heavier exponent ⇒ bigger head block
+        let mut c = corpus.entities.clone();
+        zipf_skew_block_keys(&mut c, 200, 2.0, 7);
+        let mut counts2: std::collections::BTreeMap<String, usize> = Default::default();
+        for e in &c {
+            *counts2.entry(bk.key(e)).or_insert(0) += 1;
+        }
+        assert!(*counts2.values().max().unwrap() > hottest);
     }
 
     #[test]

@@ -169,6 +169,7 @@ mod tests {
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
             sort_buffer_records: None,
+            balance: Default::default(),
         }
     }
 

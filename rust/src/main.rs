@@ -206,6 +206,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         blocking_key: Arc::clone(&key),
         mode: Default::default(),
         sort_buffer_records: None,
+        balance: Default::default(),
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {
@@ -259,6 +260,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         blocking_key: Arc::clone(&key),
         mode: Default::default(),
         sort_buffer_records: None,
+        balance: Default::default(),
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {

@@ -69,6 +69,12 @@ pub struct JobStats {
     /// Records emitted by map / reduce.
     pub map_output_records: u64,
     pub reduce_output_records: u64,
+    /// Records emitted by each reduce task, indexed by partition.  In SN
+    /// blocking mode every window comparison emits one pair, so this is
+    /// the per-reduce-task *pair count* — the reduce-side data-skew signal
+    /// the `sn::loadbalance` strategies exist to flatten
+    /// (`max / (total / tasks)` is the skew ratio they report).
+    pub reduce_task_output_records: Vec<u64>,
 }
 
 /// Everything a finished job returns.
@@ -514,6 +520,7 @@ where
     };
     stats.reduce_phase_secs = t_reduce.elapsed().as_secs_f64();
     stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
+    stats.reduce_task_output_records = red_outputs.iter().map(|o| o.output.len() as u64).collect();
     stats.reduce_output_records = record_reduce_wave(&counters, &red_outputs);
     let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
     stats.total_secs = t_start.elapsed().as_secs_f64();

@@ -73,6 +73,18 @@
 //! for the slot model, and [`sim::ClusterSpec::speculative`] for the
 //! matching simulator knob.
 //!
+//! Speculation cannot fix *data* skew (a clone re-runs the same oversized
+//! partition), so the engine also supports jobs whose **output
+//! partitioning is computed by a prior job**: the
+//! [`sn::loadbalance`](crate::sn::loadbalance) subsystem runs a Block
+//! Distribution Matrix analysis job and uses it to route a second job's
+//! reduce work by BlockSplit / PairRange (Kolb et al. 2012).  The engine
+//! reports [`JobStats::reduce_task_output_records`](engine::JobStats)
+//! per task so that reduce-side skew — and what those strategies do to
+//! it — is directly measurable, and
+//! [`sim::reduce_secs_from_pairs`]/[`sim::fit_secs_per_pair`] give the
+//! simulator the matching per-pair reduce cost model.
+//!
 //! Still deliberately unmodeled: task failure/retry and rack topology.
 
 pub mod combiner;

@@ -429,6 +429,8 @@ impl JobScheduler {
         }
         stats.reduce_phase_secs = t_reduce.elapsed().as_secs_f64();
         stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
+        stats.reduce_task_output_records =
+            red_outputs.iter().map(|o| o.output.len() as u64).collect();
         stats.reduce_output_records = record_reduce_wave(&counters, &red_outputs);
         let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
         stats.total_secs = t_start.elapsed().as_secs_f64();

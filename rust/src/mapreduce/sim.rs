@@ -322,6 +322,31 @@ pub fn wave_schedule(durations: &[f64], slots: usize, spec: &ClusterSpec) -> Wav
     }
 }
 
+/// Per-pair reduce cost model, matching the `sn::loadbalance` strategies'
+/// planning unit: a reduce task's runtime is `pairs × secs_per_pair`, so a
+/// repartitioning plan's per-task pair counts (or a measured job's
+/// `JobStats::reduce_task_output_records`) induce predicted task
+/// durations that [`wave_schedule`] can turn into a makespan — before the
+/// balanced job ever runs, and with the *same* cost model the simulator
+/// charges the measured run, so simulated and predicted makespans stay
+/// comparable.
+pub fn reduce_secs_from_pairs(pairs_per_task: &[u64], secs_per_pair: f64) -> Vec<f64> {
+    pairs_per_task
+        .iter()
+        .map(|&p| p as f64 * secs_per_pair)
+        .collect()
+}
+
+/// Calibrate the per-pair cost from a measured job: total reduce seconds
+/// over total pairs (0 when no pairs were produced).
+pub fn fit_secs_per_pair(reduce_task_secs: &[f64], pairs_per_task: &[u64]) -> f64 {
+    let total: u64 = pairs_per_task.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    reduce_task_secs.iter().sum::<f64>() / total as f64
+}
+
 /// Simulate one MapReduce job on a cluster.
 pub fn simulate_job(profile: &JobProfile, spec: &ClusterSpec) -> SimBreakdown {
     let map_wave = wave_schedule(&profile.map_task_secs, spec.map_slots().max(1), spec);
@@ -529,6 +554,54 @@ mod tests {
         let off = simulate_job(&profile, &spec.clone().with_speculation(false));
         assert_eq!(off.speculative_launched, 0);
         assert!(b.map_s < off.map_s);
+    }
+
+    /// The pair cost model: a balanced plan's modeled reduce wave beats an
+    /// unbalanced one with the same pair total — and speculation does not
+    /// help the unbalanced wave (data skew), which is the whole argument
+    /// for computing the partitioning instead of cloning stragglers.
+    #[test]
+    fn pair_cost_model_prefers_balanced_plans() {
+        let secs_per_pair = 1e-4;
+        let unbalanced = [70_000u64, 5_000, 5_000, 5_000, 5_000, 5_000, 2_500, 2_500];
+        let balanced = [12_500u64; 8];
+        assert_eq!(
+            unbalanced.iter().sum::<u64>(),
+            balanced.iter().sum::<u64>()
+        );
+        let spec = ClusterSpec::paper_like(8);
+        let t_unb = wave_schedule(
+            &reduce_secs_from_pairs(&unbalanced, secs_per_pair),
+            spec.reduce_slots(),
+            &spec,
+        );
+        let t_bal = wave_schedule(
+            &reduce_secs_from_pairs(&balanced, secs_per_pair),
+            spec.reduce_slots(),
+            &spec,
+        );
+        assert!(
+            t_bal.makespan * 2.0 < t_unb.makespan,
+            "balanced {:.2}s vs unbalanced {:.2}s",
+            t_bal.makespan,
+            t_unb.makespan
+        );
+        let t_spec = wave_schedule(
+            &reduce_secs_from_pairs(&unbalanced, secs_per_pair),
+            spec.reduce_slots(),
+            &spec.clone().with_speculation(true),
+        );
+        assert!((t_spec.makespan - t_unb.makespan).abs() < 1e-9);
+        assert_eq!(t_spec.speculative_won, 0);
+    }
+
+    #[test]
+    fn fit_secs_per_pair_round_trips() {
+        let pairs = [100u64, 300, 50];
+        let secs = reduce_secs_from_pairs(&pairs, 2e-3);
+        let fitted = fit_secs_per_pair(&secs, &pairs);
+        assert!((fitted - 2e-3).abs() < 1e-12);
+        assert_eq!(fit_secs_per_pair(&[], &[]), 0.0);
     }
 
     #[test]

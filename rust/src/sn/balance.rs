@@ -95,6 +95,29 @@ where
     RangePartition::new(boundaries, &format!("PairBalanced{r}"))
 }
 
+/// [`pair_balanced`] boundaries (entity-count cost) with `r` shrunk until
+/// every partition holds ≥ `w−1` entities — classic RepSN's one-step
+/// boundary-replication assumption, which the *unbalanced* baselines of
+/// the load-balancing benches and property tests must satisfy to stay
+/// exact (`pair_balanced` never produces empty partitions, so only the
+/// minimum size needs enforcing).
+pub fn pair_balanced_min_size(
+    entities: &[Entity],
+    key_fn: &dyn BlockingKey,
+    r: usize,
+    w: usize,
+) -> RangePartition {
+    let mut r = r.max(1);
+    loop {
+        let p = pair_balanced(entities, key_fn, r, |_| 1.0);
+        let sizes = partition_sizes(entities.iter().map(|e| key_fn.key(e)), &p);
+        if r == 1 || sizes.iter().all(|&s| s + 1 >= w) {
+            return p;
+        }
+        r -= 1;
+    }
+}
+
 /// Compute the blocking-key histogram as a MapReduce job with a map-side
 /// combiner: map emits `(key, 1)` per entity, the combiner pre-sums each
 /// sorted run (collapsing a task's records to one per distinct key), and
@@ -189,22 +212,43 @@ impl VirtualPartition {
     /// Split every partition of `base` whose share of entities exceeds
     /// `max_share` into enough equal-count sub-ranges to go below it.
     /// Total reduce tasks grow accordingly.
+    ///
+    /// Superseded for hot-*block* splitting by
+    /// [`loadbalance`](crate::sn::loadbalance): a key-granularity range
+    /// function like this one cannot split a single hot key run, which is
+    /// BlockSplit's whole point.  Kept as the lightweight option when a
+    /// [`PartitionFn`] is required; its key statistics now come from the
+    /// shared [`Bdm`](crate::sn::loadbalance::Bdm) histogram (one
+    /// hot-block code path) instead of a private sort of all keys.
     pub fn split_hot(
         entities: &[Entity],
         key_fn: &dyn BlockingKey,
         base: &dyn PartitionFn,
         max_share: f64,
     ) -> Self {
+        let hist = crate::sn::loadbalance::Bdm::from_entities(entities, key_fn, 1).key_histogram();
+        Self::split_hot_from_histogram(&hist, base, max_share)
+    }
+
+    /// As [`VirtualPartition::split_hot`], from a `(key, count)` histogram
+    /// in key order (e.g. [`key_histogram_job`] output or
+    /// [`Bdm::key_histogram`](crate::sn::loadbalance::Bdm::key_histogram)).
+    pub fn split_hot_from_histogram(
+        hist: &[(String, u64)],
+        base: &dyn PartitionFn,
+        max_share: f64,
+    ) -> Self {
         assert!(max_share > 0.0 && max_share <= 1.0);
-        let n = entities.len().max(1);
-        let sizes = partition_sizes(entities.iter().map(|e| key_fn.key(e)), base);
-        // sorted keys per base partition for sub-boundary selection
-        let mut keys: Vec<String> = entities.iter().map(|e| key_fn.key(e)).collect();
-        keys.sort_unstable();
+        let n: u64 = hist.iter().map(|(_, c)| *c).sum::<u64>().max(1);
+        // group the histogram's key runs by base partition
+        let mut per_part: Vec<Vec<(&str, u64)>> = vec![Vec::new(); base.num_partitions()];
+        for (k, c) in hist {
+            per_part[base.partition(k)].push((k.as_str(), *c));
+        }
         let mut boundaries: Vec<String> = Vec::new();
         let mut virtual_of = Vec::new();
-        let mut offset = 0usize;
-        for (part, &size) in sizes.iter().enumerate() {
+        for (part, runs) in per_part.iter().enumerate() {
+            let size: u64 = runs.iter().map(|(_, c)| *c).sum();
             let share = size as f64 / n as f64;
             let splits = if share > max_share {
                 (share / max_share).ceil() as usize
@@ -212,21 +256,33 @@ impl VirtualPartition {
                 1
             };
             virtual_of.extend(std::iter::repeat(part).take(splits));
-            let slice = &keys[offset..offset + size];
             for v in 1..splits {
-                let idx = (v * size) / splits;
-                boundaries.push(slice[idx].clone());
+                // sub-boundary: the key at cumulative count ⌊v·size/splits⌋
+                // within this partition (same quantile walk as
+                // `balanced_from_histogram`)
+                let idx = (v as u64 * size) / splits as u64;
+                let mut cum = 0u64;
+                let mut b = runs.last().map(|(k, _)| k.to_string()).unwrap_or_default();
+                for (k, c) in runs {
+                    if cum + c > idx {
+                        b = k.to_string();
+                        break;
+                    }
+                    cum += c;
+                }
+                boundaries.push(b);
             }
-            offset += size;
-            // base boundary after this partition (except the last)
-            if part + 1 < sizes.len() {
-                // base partitions are contiguous in the sorted key list;
-                // the boundary is the first key of the next partition —
-                // safe upper bound: next slice's first element (if any),
-                // else repeat the last key seen.
-                let next = keys.get(offset).cloned().unwrap_or_else(|| {
-                    keys.last().cloned().unwrap_or_default()
-                });
+            // base boundary after this partition (except the last): first
+            // key of the next non-empty partition, else repeat the global
+            // last key (empty partitions are legal)
+            if part + 1 < per_part.len() {
+                let next = per_part[part + 1..]
+                    .iter()
+                    .flatten()
+                    .next()
+                    .map(|(k, _)| k.to_string())
+                    .or_else(|| hist.last().map(|(k, _)| k.clone()))
+                    .unwrap_or_default();
                 boundaries.push(next);
             }
         }
@@ -413,6 +469,7 @@ mod tests {
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
             sort_buffer_records: None,
+            balance: Default::default(),
         };
         let res = crate::sn::repsn::run(&entities, &cfg).unwrap();
         let mut expect = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), w);

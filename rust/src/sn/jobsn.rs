@@ -89,6 +89,14 @@ pub fn run_with_options(
     second_job_reducers: Option<usize>,
     exec: Exec<'_>,
 ) -> anyhow::Result<SnResult> {
+    // A balance strategy replaces JobSN's two-job structure with the
+    // loadbalance two-job pipeline: the BDM analysis job takes the place
+    // of the boundary job (still SRP-shaped map + extra job, still the
+    // same pair set), and the repartition job handles boundaries via
+    // rank-contiguous routing, so `second_job_reducers` does not apply.
+    if cfg.balance != crate::sn::loadbalance::BalanceStrategy::None {
+        return crate::sn::loadbalance::run_balanced(entities, cfg, exec);
+    }
     let r = cfg.partitioner.num_partitions();
 
     // ---- phase 1: SRP + boundary emission --------------------------------
@@ -198,6 +206,7 @@ mod tests {
             blocking_key: Arc::new(TitlePrefixKey::new(1)),
             mode: SnMode::Blocking,
             sort_buffer_records: None,
+            balance: Default::default(),
         }
     }
 
@@ -231,6 +240,7 @@ mod tests {
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
             sort_buffer_records: None,
+            balance: Default::default(),
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 4);

@@ -1,0 +1,425 @@
+//! The Block Distribution Matrix (BDM) analysis job.
+//!
+//! Kolb, Thor & Rahm's load-balancing strategies (arXiv:1108.1631) start
+//! with a lightweight MapReduce **analysis job** that counts, for every
+//! blocking key (= block) and every **map input partition**, how many
+//! entities fall into that cell.  The resulting |B| × m matrix is enough
+//! to (a) compute every block's size and pair count, and (b) assign each
+//! entity a **global rank** in the `(blocking key, id)` sort order from
+//! purely local information: the mapper of the *second* job knows its
+//! input partition `p` and counts how many same-key entities it has seen
+//! locally, and the BDM supplies the rank offset of cell `(key, p)`.
+//!
+//! The rank arithmetic relies on one input invariant, established by
+//! [`partitioned_input`]: the job input is sorted by entity id and cut
+//! into `m` contiguous chunks (the same [`even_splits`] arithmetic the
+//! engine's split step uses, so chunk `p` *is* map task `p`'s split).
+//! Then, inside one key run, every entity of chunk `p` has a smaller id
+//! than every entity of chunk `p+1`, and `rank = key_start + cell_offset
+//! + local_index` reproduces the `(key, id)` order exactly — which is why
+//! the balanced repartitioners emit the very same pair set as unbalanced
+//! RepSN (`tests/prop_balance.rs` asserts it).
+//!
+//! The job itself reuses the [`key_histogram_job`] pattern: map emits one
+//! `((key, partition), 1)` per entity, a map-side combiner collapses each
+//! task's records to one per distinct cell before the shuffle, and a
+//! single reduce task emits the cell-sorted matrix.
+//!
+//! [`key_histogram_job`]: crate::sn::balance::key_histogram_job
+//! [`even_splits`]: crate::mapreduce::splits::even_splits
+
+use std::sync::Arc;
+
+use crate::er::blockkey::BlockingKey;
+use crate::er::entity::Entity;
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::engine::JobStats;
+use crate::mapreduce::scheduler::Exec;
+use crate::mapreduce::sim::JobProfile;
+use crate::mapreduce::splits::even_splits;
+use crate::mapreduce::types::{Emitter, FnMapTask, FnReduceTask, HashPartitioner, ValuesIter};
+use crate::mapreduce::{FnCombiner, JobConfig};
+
+/// One cell of the matrix: `count` entities of `key` in input partition
+/// `part`, whose key run starts at global rank `start`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BdmCell {
+    pub key_idx: usize,
+    pub part: u32,
+    /// Global rank of the first entity of this cell.
+    pub start: u64,
+    pub count: u64,
+}
+
+/// The Block Distribution Matrix: entity counts per
+/// (blocking key × map input partition), with the prefix sums that turn a
+/// `(key, partition, local index)` triple into a global `(key, id)` rank.
+#[derive(Debug, Clone)]
+pub struct Bdm {
+    m: usize,
+    /// Distinct blocking keys, sorted ascending.
+    keys: Vec<String>,
+    /// `key_starts[k]` = global rank of the first entity of key `k`;
+    /// `key_starts[K]` = total entity count.
+    key_starts: Vec<u64>,
+    /// `cell_starts[k]` has length `m + 1`: prefix sums of key `k`'s
+    /// per-partition counts (cell `(k, p)` holds ranks
+    /// `key_starts[k] + cell_starts[k][p] .. key_starts[k] + cell_starts[k][p+1]`).
+    cell_starts: Vec<Vec<u64>>,
+}
+
+impl Bdm {
+    /// Build from the analysis job's reduce output: `((key, part), count)`
+    /// rows sorted by `(key, part)` (a single reducer emits them sorted).
+    pub fn from_rows(rows: Vec<((String, u32), u64)>, m: usize) -> Self {
+        let m = m.max(1);
+        let mut keys: Vec<String> = Vec::new();
+        let mut per_key_counts: Vec<Vec<u64>> = Vec::new();
+        for ((key, part), count) in rows {
+            if keys.last().map(|k| k != &key).unwrap_or(true) {
+                keys.push(key);
+                per_key_counts.push(vec![0; m]);
+            }
+            let row = per_key_counts.last_mut().unwrap();
+            row[part as usize] += count;
+        }
+        let mut key_starts = Vec::with_capacity(keys.len() + 1);
+        let mut cell_starts = Vec::with_capacity(keys.len());
+        let mut rank = 0u64;
+        for counts in &per_key_counts {
+            key_starts.push(rank);
+            let mut prefix = Vec::with_capacity(m + 1);
+            let mut off = 0u64;
+            prefix.push(0);
+            for &c in counts {
+                off += c;
+                prefix.push(off);
+            }
+            cell_starts.push(prefix);
+            rank += off;
+        }
+        key_starts.push(rank);
+        Self {
+            m,
+            keys,
+            key_starts,
+            cell_starts,
+        }
+    }
+
+    /// Driver-side reference constructor (no MapReduce job): the matrix
+    /// [`bdm_job`] computes, built directly.  Shared statistics source for
+    /// [`VirtualPartition::split_hot`](crate::sn::balance::VirtualPartition)
+    /// and the property tests that pin the job to it.
+    pub fn from_entities(entities: &[Entity], key_fn: &dyn BlockingKey, m: usize) -> Self {
+        let mut cells: std::collections::BTreeMap<(String, u32), u64> = Default::default();
+        for (part, e) in partition_assignment(entities, m) {
+            *cells.entry((key_fn.key(e), part)).or_insert(0) += 1;
+        }
+        Self::from_rows(cells.into_iter().collect(), m)
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.m
+    }
+
+    pub fn num_keys(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn num_entities(&self) -> u64 {
+        *self.key_starts.last().unwrap_or(&0)
+    }
+
+    /// Global `(key, id)` rank of the `local_idx`-th entity (in id order)
+    /// of `key` within input partition `part`.  Panics if the key is
+    /// unknown — the analysis job and the balanced job must run over the
+    /// same corpus and key function.
+    pub fn rank(&self, key: &str, part: u32, local_idx: u64) -> u64 {
+        let k = self
+            .keys
+            .binary_search_by(|probe| probe.as_str().cmp(key))
+            .unwrap_or_else(|_| panic!("key {key:?} not in the BDM"));
+        let cell = &self.cell_starts[k];
+        debug_assert!(local_idx < cell[part as usize + 1] - cell[part as usize]);
+        self.key_starts[k] + cell[part as usize] + local_idx
+    }
+
+    /// Global rank range `[start, end)` of one key's run.
+    pub fn key_run(&self, key_idx: usize) -> (u64, u64) {
+        (self.key_starts[key_idx], self.key_starts[key_idx + 1])
+    }
+
+    /// Index of the key whose run contains global rank `rank`.
+    pub fn key_of_rank(&self, rank: u64) -> usize {
+        debug_assert!(rank < self.num_entities());
+        self.key_starts[1..].partition_point(|&s| s <= rank)
+    }
+
+    pub fn key(&self, key_idx: usize) -> &str {
+        &self.keys[key_idx]
+    }
+
+    /// Non-empty cells in global rank order (key-major, partition-minor):
+    /// the candidate split granularity of BlockSplit — a block can be cut
+    /// at any cell boundary, never inside one.
+    pub fn cells(&self) -> Vec<BdmCell> {
+        let mut out = Vec::new();
+        for (k, prefix) in self.cell_starts.iter().enumerate() {
+            for p in 0..self.m {
+                let count = prefix[p + 1] - prefix[p];
+                if count > 0 {
+                    out.push(BdmCell {
+                        key_idx: k,
+                        part: p as u32,
+                        start: self.key_starts[k] + prefix[p],
+                        count,
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// Collapse the partition dimension: the blocking-key histogram
+    /// (`(key, block size)` in key order), as
+    /// [`key_histogram_job`](crate::sn::balance::key_histogram_job)
+    /// computes it.
+    pub fn key_histogram(&self) -> Vec<(String, u64)> {
+        self.keys
+            .iter()
+            .enumerate()
+            .map(|(k, key)| (key.clone(), self.key_starts[k + 1] - self.key_starts[k]))
+            .collect()
+    }
+}
+
+/// Assign each entity its map input partition: sort by id, cut into `m`
+/// contiguous chunks with the engine's own [`even_splits`] arithmetic.
+/// Both the analysis job and the balanced job feed their input through
+/// this, which is what makes the rank invariant (module docs) hold.
+fn partition_assignment(entities: &[Entity], m: usize) -> Vec<(u32, &Entity)> {
+    let mut by_id: Vec<&Entity> = entities.iter().collect();
+    by_id.sort_by_key(|e| e.id);
+    let mut out = Vec::with_capacity(by_id.len());
+    for (p, (start, end)) in even_splits(by_id.len(), m.max(1)).into_iter().enumerate() {
+        for e in &by_id[start..end] {
+            out.push((p as u32, *e));
+        }
+    }
+    out
+}
+
+/// The id-sorted, partition-tagged job input shared by the analysis job
+/// and both balanced repartition jobs.  The record key is the input
+/// partition index; with `num_map_tasks = m` the engine's contiguous
+/// splits coincide with the tagged chunks, so one map task sees exactly
+/// one partition's records, in id order.  Built **once** per balanced
+/// pipeline — the second job reuses it with shallow `Arc` clones.
+pub fn partitioned_input(entities: &[Entity], m: usize) -> Vec<(u32, Arc<Entity>)> {
+    partition_assignment(entities, m)
+        .into_iter()
+        .map(|(p, e)| (p, Arc::new(e.clone())))
+        .collect()
+}
+
+/// The mapper-local half of the BDM rank derivation: counts same-key
+/// entities seen so far and combines the local index with the matrix
+/// offsets.  This is the single implementation both repartition mappers
+/// route through, so their rank assignments can never diverge.
+///
+/// Counts are keyed by blocking key alone: one map task sees exactly one
+/// input partition (the engine's contiguous splits coincide with the
+/// [`partitioned_input`] tags by construction), asserted in debug builds.
+#[derive(Default)]
+pub struct RankTracker {
+    part: Option<u32>,
+    seen: std::collections::HashMap<String, u64>,
+}
+
+impl RankTracker {
+    /// Global `(key, id)` rank of the next `key`-keyed entity of input
+    /// partition `part` (records must arrive in id order, which
+    /// [`partitioned_input`] + the engine's contiguous splits guarantee).
+    pub fn rank(&mut self, bdm: &Bdm, key: &str, part: u32) -> u64 {
+        debug_assert_eq!(
+            *self.part.get_or_insert(part),
+            part,
+            "one map task must see exactly one input partition"
+        );
+        // allocate the key String only on first sighting
+        if !self.seen.contains_key(key) {
+            self.seen.insert(key.to_string(), 0);
+        }
+        let local = self.seen.get_mut(key).unwrap();
+        let rank = bdm.rank(key, part, *local);
+        *local += 1;
+        rank
+    }
+
+    /// Forget all counts (map-task `configure`).
+    pub fn reset(&mut self) {
+        self.part = None;
+        self.seen.clear();
+    }
+}
+
+/// Everything the analysis job produces: the matrix plus the job's
+/// observability (merged into the balanced run's [`SnResult`]).
+///
+/// [`SnResult`]: crate::sn::types::SnResult
+pub struct BdmJobResult {
+    pub bdm: Bdm,
+    pub counters: Arc<Counters>,
+    pub stats: JobStats,
+    pub profile: JobProfile,
+}
+
+/// Compute the BDM as a MapReduce job with a map-side combiner: map emits
+/// `((key, partition), 1)` per entity, the combiner pre-sums each sorted
+/// run (one record per distinct cell per task reaches the shuffle), and a
+/// single reduce task emits the cell-sorted matrix.  `input` is the
+/// [`partitioned_input`] the repartition job will reuse.
+pub fn bdm_job(
+    input: Vec<(u32, Arc<Entity>)>,
+    key_fn: &Arc<dyn BlockingKey>,
+    m: usize,
+    workers: usize,
+    sort_buffer_records: Option<usize>,
+    exec: Exec<'_>,
+) -> BdmJobResult {
+    let m = m.max(1);
+    let bk = Arc::clone(key_fn);
+    let mapper = Arc::new(FnMapTask::new(
+        move |part: u32, e: Arc<Entity>, out: &mut Emitter<(String, u32), u64>, _c: &Counters| {
+            out.emit((bk.key(&e), part), 1);
+        },
+    ));
+    let reducer = Arc::new(FnReduceTask::new(
+        |k: &(String, u32),
+         vals: ValuesIter<'_, u64>,
+         out: &mut Emitter<(String, u32), u64>,
+         _c: &Counters| {
+            out.emit(k.clone(), vals.copied().sum());
+        },
+    ));
+    let cfg = JobConfig::named("bdm")
+        .with_tasks(m, 1)
+        .with_workers(workers.max(1))
+        .with_sort_buffer(sort_buffer_records);
+    let res = exec.run_job_with_combiner(
+        &cfg,
+        input,
+        mapper,
+        Arc::new(HashPartitioner::new(|_: &(String, u32)| 0)),
+        Arc::new(|a: &(String, u32), b: &(String, u32)| a == b),
+        reducer,
+        Arc::new(FnCombiner::new(
+            |_k: &(String, u32), vals: Vec<u64>, _c: &Counters| vec![vals.into_iter().sum()],
+        )),
+    );
+    let counters = Arc::clone(&res.counters);
+    let stats = res.stats.clone();
+    let profile = JobProfile::from_stats(
+        &stats,
+        counters.get(crate::mapreduce::counters::names::MAP_OUTPUT_BYTES),
+    );
+    let bdm = Bdm::from_rows(res.merged_output(), m);
+    BdmJobResult {
+        bdm,
+        counters,
+        stats,
+        profile,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::blockkey::TitlePrefixKey;
+
+    fn entities(n: usize) -> Vec<Entity> {
+        (0..n as u64)
+            .map(|i| {
+                let c = (b'a' + (i % 7) as u8) as char;
+                Entity::new(i, &format!("{c}{c} title {i}"), "")
+            })
+            .collect()
+    }
+
+    #[test]
+    fn job_matches_driver_side_matrix() {
+        let es = entities(200);
+        let bk: Arc<dyn BlockingKey> = Arc::new(TitlePrefixKey::new(2));
+        let job = bdm_job(partitioned_input(&es, 4), &bk, 4, 2, None, Exec::Serial);
+        let reference = Bdm::from_entities(&es, bk.as_ref(), 4);
+        assert_eq!(job.bdm.keys, reference.keys);
+        assert_eq!(job.bdm.key_starts, reference.key_starts);
+        assert_eq!(job.bdm.cell_starts, reference.cell_starts);
+        // combiner collapsed per-task records to one per distinct cell
+        use crate::mapreduce::counters::names;
+        assert_eq!(job.counters.get(names::COMBINE_INPUT_RECORDS), 200);
+        assert!(
+            job.counters.get(names::COMBINE_OUTPUT_RECORDS)
+                < job.counters.get(names::COMBINE_INPUT_RECORDS)
+        );
+    }
+
+    #[test]
+    fn ranks_reproduce_key_id_order() {
+        // shuffle ids so input order ≠ id order
+        let mut es = entities(150);
+        es.reverse();
+        let bk = TitlePrefixKey::new(2);
+        let m = 3;
+        let bdm = Bdm::from_entities(&es, &bk, m);
+        // recompute each entity's (part, local) the way a mapper would
+        let mut local: std::collections::HashMap<(u32, String), u64> = Default::default();
+        let mut ranked: Vec<(u64, String, u64)> = Vec::new(); // (rank, key, id)
+        for (part, e) in partition_assignment(&es, m) {
+            let k = bk.key(e);
+            let l = local.entry((part, k.clone())).or_insert(0);
+            ranked.push((bdm.rank(&k, part, *l), k, e.id));
+            *l += 1;
+        }
+        ranked.sort();
+        // ranks are 0..n and ordered exactly like (key, id)
+        let mut sorted: Vec<(String, u64)> =
+            es.iter().map(|e| (bk.key(e), e.id)).collect();
+        sorted.sort();
+        assert_eq!(ranked.len(), sorted.len());
+        for (i, ((rank, key, id), (sk, sid))) in ranked.iter().zip(&sorted).enumerate() {
+            assert_eq!(*rank, i as u64, "ranks must be dense");
+            assert_eq!((key, id), (sk, sid), "rank order must be (key, id) order");
+        }
+    }
+
+    #[test]
+    fn histogram_collapses_partitions() {
+        let es = entities(90);
+        let bk = TitlePrefixKey::new(2);
+        let bdm = Bdm::from_entities(&es, &bk, 5);
+        let mut expect: std::collections::BTreeMap<String, u64> = Default::default();
+        for e in &es {
+            *expect.entry(bk.key(e)).or_insert(0) += 1;
+        }
+        assert_eq!(
+            bdm.key_histogram(),
+            expect.into_iter().collect::<Vec<_>>()
+        );
+        assert_eq!(bdm.num_entities(), 90);
+    }
+
+    #[test]
+    fn cells_are_rank_ordered_and_cover() {
+        let es = entities(77);
+        let bdm = Bdm::from_entities(&es, &TitlePrefixKey::new(2), 4);
+        let cells = bdm.cells();
+        let mut next = 0u64;
+        for c in &cells {
+            assert_eq!(c.start, next, "cells must tile the rank space");
+            next = c.start + c.count;
+        }
+        assert_eq!(next, 77);
+    }
+}

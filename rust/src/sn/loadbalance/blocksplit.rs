@@ -1,0 +1,445 @@
+//! BlockSplit: split oversized blocks at BDM cell boundaries and assign
+//! the resulting sub-blocks to reduce tasks by pair count.
+//!
+//! The strategy of arXiv:1108.1631 §4.1, adapted to Sorted Neighborhood:
+//! the unit of work is a contiguous range of the global `(key, id)` sort
+//! order, and the cost of a range is its **window pair count** (the SN
+//! analogue of the paper's `|b|·(|b|−1)/2` block cost — see
+//! [`segment_pairs`](super::segment_pairs)).  Planning walks the BDM's
+//! cells — `(blocking key × input partition)` sub-blocks, the paper's
+//! split granularity — in rank order and greedily closes a reduce task
+//! when it has accumulated its fair share of the remaining pair cost.  An
+//! oversized block (hot key run) is thereby *split across reduce tasks at
+//! sub-block boundaries*, which no monotone key-range partitioner can do:
+//! the cut happens mid-run, between ids.  Small blocks stay unsplit and
+//! ride along whole.
+//!
+//! Execution is a single RepSN-shaped job.  The mapper derives each
+//! entity's global rank from the BDM ([`Bdm::rank`]), routes it to
+//! `task_of(rank)` (the composite key's `bound` — split and unsplit
+//! blocks alike become normal reduce groups), and replicates its `w−1`
+//! highest-ranked entities per task to the succeeding task exactly like
+//! RepSN's map does per partition.  Every reduce task therefore receives
+//! a contiguous rank range plus the `w−1` ranks before it, seeds the
+//! window with those replicas and slides over the originals — emitting
+//! precisely the SN pairs whose *later* element lives in its range.  The
+//! union over tasks is the exact unbalanced-RepSN pair set
+//! (`tests/prop_balance.rs`), with the per-task maximum flattened to
+//! ≈ `pairs_total / r`.
+//!
+//! Every cut keeps at least `w−1` entities on both sides, the same
+//! minimum-partition-size assumption classic RepSN's one-step boundary
+//! replication already relies on.
+
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use super::bdm::Bdm;
+use super::{segment_pairs, total_pairs, Ranked};
+use crate::er::blockkey::BlockingKey;
+use crate::er::entity::Entity;
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::engine::JobResult;
+use crate::mapreduce::scheduler::Exec;
+use crate::mapreduce::types::{
+    Emitter, MapTask, MapTaskFactory, ReduceTask, ReduceTaskFactory, ValuesIter,
+};
+use crate::mapreduce::JobConfig;
+use crate::sn::pairs::WindowProc;
+use crate::sn::srp::{group_by_bound, BoundPartitioner};
+use crate::sn::types::{counter_names, SnConfig, SnKey, SnMode, SnVal};
+
+/// A BlockSplit repartitioning plan: reduce-task start ranks chosen at
+/// BDM cell boundaries so per-task pair counts are near-equal.
+#[derive(Debug, Clone)]
+pub struct BlockSplitPlan {
+    /// Start rank of each reduce task; `starts[0] == 0`, strictly
+    /// increasing, every task spans ≥ `w−1` entities.
+    starts: Vec<u64>,
+    n: u64,
+    /// Number of blocks (key runs) cut across two or more reduce tasks.
+    pub blocks_split: u64,
+    /// Cost-model prediction of each task's pair count; in blocking mode
+    /// the measured per-task output matches this exactly.
+    pub expected_pairs: Vec<u64>,
+}
+
+impl BlockSplitPlan {
+    pub fn num_tasks(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// Which reduce task owns global rank `rank`.
+    pub fn task_of(&self, rank: u64) -> usize {
+        self.starts[1..].partition_point(|&s| s <= rank)
+    }
+
+    /// First rank of task `t`.
+    pub fn start(&self, t: usize) -> u64 {
+        self.starts[t]
+    }
+
+    /// One-past-last rank of task `t`.
+    pub fn end(&self, t: usize) -> u64 {
+        self.starts.get(t + 1).copied().unwrap_or(self.n)
+    }
+}
+
+/// Choose up to `r` reduce tasks from the BDM: walk cells in rank order,
+/// close the current task when adding the next cell would overshoot its
+/// fair share of the *remaining* pair cost (the same adaptive rule as
+/// [`pair_balanced`](crate::sn::balance::pair_balanced), at sub-block
+/// instead of whole-block granularity).
+pub fn plan(bdm: &Bdm, r: usize, w: usize) -> BlockSplitPlan {
+    let n = bdm.num_entities();
+    let w = w.max(2);
+    let min_size = (w - 1) as u64;
+    let total = total_pairs(n, w);
+    let mut starts = vec![0u64];
+    let mut parts_left = r.max(1);
+    let mut remaining = total as f64;
+    let mut seg_start = 0u64;
+    for cell in bdm.cells() {
+        let b = cell.start;
+        if parts_left <= 1 || b == seg_start {
+            continue;
+        }
+        // a cut is feasible only if both sides keep ≥ w−1 entities (the
+        // RepSN replication-stitching assumption) and every later task
+        // can still be that large
+        if b - seg_start < min_size || n - b < min_size * (parts_left as u64 - 1) {
+            continue;
+        }
+        let acc = segment_pairs(seg_start, b, w) as f64;
+        let next = segment_pairs(b, b + cell.count, w) as f64;
+        let target = remaining / parts_left as f64;
+        if acc + next / 2.0 >= target {
+            starts.push(b);
+            parts_left -= 1;
+            remaining -= acc;
+            seg_start = b;
+        }
+    }
+    // which key runs did the cuts land inside?
+    let mut split_keys: Vec<usize> = starts[1..]
+        .iter()
+        .filter_map(|&cut| {
+            let k = bdm.key_of_rank(cut);
+            (bdm.key_run(k).0 < cut).then_some(k)
+        })
+        .collect();
+    split_keys.dedup();
+    let expected_pairs = (0..starts.len())
+        .map(|t| {
+            let end = starts.get(t + 1).copied().unwrap_or(n);
+            segment_pairs(starts[t], end, w)
+        })
+        .collect();
+    BlockSplitPlan {
+        starts,
+        n,
+        blocks_split: split_keys.len() as u64,
+        expected_pairs,
+    }
+}
+
+/// Min-heap entry for the per-task replication buffers (RepSN's
+/// replace-min policy, keyed by global rank instead of `(key, id)`).
+struct RepRank {
+    rank: u64,
+    key: String,
+    id: u64,
+    entity: Arc<Entity>,
+}
+
+impl PartialEq for RepRank {
+    fn eq(&self, other: &Self) -> bool {
+        self.rank == other.rank
+    }
+}
+impl Eq for RepRank {}
+
+impl Ord for RepRank {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed → BinaryHeap pops the smallest rank first
+        other.rank.cmp(&self.rank)
+    }
+}
+
+impl PartialOrd for RepRank {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The BlockSplit map task: rank-derive, route, replicate.
+struct BlockSplitMap {
+    w: usize,
+    bdm: Arc<Bdm>,
+    plan: Arc<BlockSplitPlan>,
+    blocking_key: Arc<dyn BlockingKey>,
+    ranks: super::bdm::RankTracker,
+    /// `rep[t]`: candidates for replication to reduce task `t + 1`.
+    rep: Vec<BinaryHeap<RepRank>>,
+}
+
+impl MapTask<u32, Arc<Entity>, SnKey, Ranked> for BlockSplitMap {
+    fn configure(&mut self, _out: &mut Emitter<SnKey, Ranked>, _c: &Counters) {
+        let tasks = self.plan.num_tasks();
+        self.rep = (0..tasks.saturating_sub(1)).map(|_| BinaryHeap::new()).collect();
+        self.ranks.reset();
+    }
+
+    fn map(&mut self, part: u32, e: Arc<Entity>, out: &mut Emitter<SnKey, Ranked>, _c: &Counters) {
+        let k = self.blocking_key.key(&e);
+        let rank = self.ranks.rank(&self.bdm, &k, part);
+        let bound = self.plan.task_of(rank);
+        if bound + 1 < self.plan.num_tasks() && self.w >= 2 {
+            let heap = &mut self.rep[bound];
+            if heap.len() < self.w - 1 {
+                heap.push(RepRank {
+                    rank,
+                    key: k.clone(),
+                    id: e.id,
+                    entity: Arc::clone(&e),
+                });
+            } else if let Some(min) = heap.peek() {
+                if rank > min.rank {
+                    heap.pop();
+                    heap.push(RepRank {
+                        rank,
+                        key: k.clone(),
+                        id: e.id,
+                        entity: Arc::clone(&e),
+                    });
+                }
+            }
+        }
+        out.emit(
+            SnKey {
+                bound: bound as u32,
+                part: bound as u32,
+                key: k,
+                id: e.id,
+            },
+            Ranked { rank, entity: e },
+        );
+    }
+
+    fn close(&mut self, out: &mut Emitter<SnKey, Ranked>, c: &Counters) {
+        let mut replicated = 0u64;
+        for (t, heap) in self.rep.drain(..).enumerate() {
+            for entry in heap.into_vec() {
+                out.emit(
+                    SnKey {
+                        bound: (t + 1) as u32,
+                        part: t as u32,
+                        key: entry.key,
+                        id: entry.id,
+                    },
+                    Ranked {
+                        rank: entry.rank,
+                        entity: entry.entity,
+                    },
+                );
+                replicated += 1;
+            }
+        }
+        c.add(counter_names::REPLICATED_ENTITIES, replicated);
+    }
+}
+
+struct BlockSplitMapFactory {
+    w: usize,
+    bdm: Arc<Bdm>,
+    plan: Arc<BlockSplitPlan>,
+    blocking_key: Arc<dyn BlockingKey>,
+}
+
+impl MapTaskFactory<u32, Arc<Entity>, SnKey, Ranked> for BlockSplitMapFactory {
+    fn create_task(&self) -> Box<dyn MapTask<u32, Arc<Entity>, SnKey, Ranked> + Send> {
+        Box::new(BlockSplitMap {
+            w: self.w,
+            bdm: Arc::clone(&self.bdm),
+            plan: Arc::clone(&self.plan),
+            blocking_key: Arc::clone(&self.blocking_key),
+            ranks: Default::default(),
+            rep: Vec::new(),
+        })
+    }
+}
+
+/// The BlockSplit reduce task: RepSN's seed-and-slide, classifying
+/// replicas by rank (< the task's start rank) instead of by recomputed
+/// home partition.
+struct BlockSplitReduce {
+    w: usize,
+    mode: SnMode,
+    plan: Arc<BlockSplitPlan>,
+}
+
+impl ReduceTask<SnKey, Ranked, SnKey, SnVal> for BlockSplitReduce {
+    fn reduce(
+        &mut self,
+        key: &SnKey,
+        values: ValuesIter<'_, Ranked>,
+        out: &mut Emitter<SnKey, SnVal>,
+        counters: &Counters,
+    ) {
+        let b = key.bound;
+        let start = self.plan.start(b as usize);
+        let keep = self.w.saturating_sub(1);
+        let mut proc = WindowProc::new(self.w, &self.mode);
+        let mut head: std::collections::VecDeque<Arc<Entity>> =
+            std::collections::VecDeque::with_capacity(keep + 1);
+        let mut discarded = 0u64;
+        let mut seeded = false;
+        for v in values {
+            if v.rank < start {
+                // replica from the preceding task (head of the input)
+                debug_assert!(!seeded, "replica after originals violates sort order");
+                head.push_back(Arc::clone(&v.entity));
+                if head.len() > keep {
+                    head.pop_front();
+                    discarded += 1;
+                }
+            } else {
+                if !seeded {
+                    for rep in head.drain(..) {
+                        proc.seed(&rep, b.wrapping_sub(1));
+                    }
+                    seeded = true;
+                }
+                proc.push(&v.entity, b, |_, _| true);
+            }
+        }
+        counters.add(counter_names::REPLICAS_DISCARDED, discarded);
+        proc.finish(key, out, counters);
+    }
+}
+
+struct BlockSplitReduceFactory {
+    w: usize,
+    mode: SnMode,
+    plan: Arc<BlockSplitPlan>,
+}
+
+impl ReduceTaskFactory<SnKey, Ranked, SnKey, SnVal> for BlockSplitReduceFactory {
+    fn create_task(&self) -> Box<dyn ReduceTask<SnKey, Ranked, SnKey, SnVal> + Send> {
+        Box::new(BlockSplitReduce {
+            w: self.w,
+            mode: self.mode.clone(),
+            plan: Arc::clone(&self.plan),
+        })
+    }
+}
+
+/// Run the BlockSplit repartition job over the pipeline's shared
+/// [`partitioned_input`](super::bdm::partitioned_input).
+pub(super) fn run_job(
+    input: Vec<(u32, Arc<Entity>)>,
+    cfg: &SnConfig,
+    bdm: Arc<Bdm>,
+    plan: Arc<BlockSplitPlan>,
+    exec: Exec<'_>,
+) -> JobResult<SnKey, SnVal> {
+    let m = cfg.num_map_tasks.max(1);
+    let job_cfg = JobConfig::named("blocksplit")
+        .with_tasks(m, plan.num_tasks())
+        .with_workers(cfg.workers)
+        .with_sort_buffer(cfg.sort_buffer_records);
+    let mapper: Arc<dyn MapTaskFactory<u32, Arc<Entity>, SnKey, Ranked>> =
+        Arc::new(BlockSplitMapFactory {
+            w: cfg.window,
+            bdm,
+            plan: Arc::clone(&plan),
+            blocking_key: Arc::clone(&cfg.blocking_key),
+        });
+    let reducer: Arc<dyn ReduceTaskFactory<SnKey, Ranked, SnKey, SnVal>> =
+        Arc::new(BlockSplitReduceFactory {
+            w: cfg.window,
+            mode: cfg.mode.clone(),
+            plan,
+        });
+    exec.run_job(
+        &job_cfg,
+        input,
+        mapper,
+        Arc::new(BoundPartitioner),
+        group_by_bound(),
+        reducer,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::er::blockkey::TitlePrefixKey;
+
+    /// One hot key holding 60% of the corpus — unsplittable by any
+    /// monotone key-range function, BlockSplit's home turf.
+    fn hot_key_entities(n: usize) -> Vec<Entity> {
+        (0..n as u64)
+            .map(|i| {
+                let k = if i % 10 < 6 {
+                    "aa".to_string()
+                } else {
+                    format!("{}{}", (b'b' + (i % 13) as u8) as char, (b'a' + (i % 7) as u8) as char)
+                };
+                Entity::new(i, &format!("{k} title {i}"), "")
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_cuts_the_hot_block() {
+        let es = hot_key_entities(1000);
+        let bdm = Bdm::from_entities(&es, &TitlePrefixKey::new(2), 8);
+        let w = 10;
+        let p = plan(&bdm, 8, w);
+        assert!(p.num_tasks() > 1);
+        assert!(
+            p.blocks_split >= 1,
+            "the 600-entity hot block must be split: {p:?}"
+        );
+        // the plan's tasks tile [0, n) with ≥ w−1 entities each
+        let mut prev = 0;
+        for t in 0..p.num_tasks() {
+            assert_eq!(p.start(t), prev);
+            assert!(p.end(t) - p.start(t) >= (w - 1) as u64);
+            prev = p.end(t);
+        }
+        assert_eq!(prev, 1000);
+        // pair cost near-equal: max ≤ 2× mean
+        let total: u64 = p.expected_pairs.iter().sum();
+        let max = *p.expected_pairs.iter().max().unwrap();
+        assert_eq!(total, total_pairs(1000, w));
+        assert!(
+            max as f64 <= 2.0 * total as f64 / p.num_tasks() as f64,
+            "lumpy plan: {:?}",
+            p.expected_pairs
+        );
+    }
+
+    #[test]
+    fn plan_respects_min_task_size() {
+        // tiny corpus, huge window: fewer tasks than requested
+        let es = hot_key_entities(20);
+        let bdm = Bdm::from_entities(&es, &TitlePrefixKey::new(2), 4);
+        let p = plan(&bdm, 8, 15);
+        for t in 0..p.num_tasks() {
+            assert!(p.end(t) - p.start(t) >= 14);
+        }
+    }
+
+    #[test]
+    fn task_of_matches_starts() {
+        let es = hot_key_entities(500);
+        let bdm = Bdm::from_entities(&es, &TitlePrefixKey::new(2), 4);
+        let p = plan(&bdm, 6, 5);
+        for rank in 0..500u64 {
+            let t = p.task_of(rank);
+            assert!(p.start(t) <= rank && rank < p.end(t));
+        }
+    }
+}

@@ -1,0 +1,392 @@
+//! Skew-aware load balancing: BDM analysis job + BlockSplit / PairRange
+//! repartitioning (the Kolb, Thor & Rahm 2012 direction,
+//! arXiv:1108.1631, adapted to Sorted Neighborhood).
+//!
+//! ## Why speculation is not enough
+//!
+//! PR 2's speculation sweep (`BENCH_skew.json`) demonstrates the paper's
+//! limitation: cloning a straggler rescues *machine* skew (slow node,
+//! fast clone elsewhere) but cannot beat *data* skew — the clone re-runs
+//! the same oversized partition.  Worse, a monotone key-range partitioner
+//! ([`PartitionFn`](crate::sn::partition::PartitionFn)) cannot split a
+//! hot *block* (one giant blocking-key run) at all: every equal key lands
+//! in one partition.  Fixing data skew needs the *output partitioning
+//! itself* to be computed from the data — by a prior MapReduce job.
+//!
+//! ## The two-job architecture
+//!
+//! 1. **Analysis** — the [`bdm`] module's Block Distribution Matrix job
+//!    counts entities per (blocking key × map input partition), a real
+//!    engine job with a map-side combiner (the
+//!    [`key_histogram_job`](crate::sn::balance::key_histogram_job)
+//!    pattern with the partition dimension added).  Its prefix sums let
+//!    the second job's mappers compute every entity's **global rank** in
+//!    the `(key, id)` SN sort order from local information alone.
+//! 2. **Balanced repartition** — one of two strategies turns ranks into
+//!    reduce routing:
+//!    * [`blocksplit`] cuts the rank space at BDM *cell* boundaries
+//!      (block × input partition sub-blocks) so each reduce task gets a
+//!      near-equal share of the window-pair cost; oversized blocks are
+//!      split mid-run, small blocks ride along unsplit, and RepSN-style
+//!      replication of the `w−1` highest ranks per cut stitches the
+//!      windows.
+//!    * [`pairrange`] enumerates all `P` comparison pairs by a closed-form
+//!      global index and assigns each reduce task a contiguous range of
+//!      `≈ P/r` pair indices — exact balance, slightly more replication.
+//!
+//! Both strategies emit **exactly the pair set of unbalanced RepSN**
+//! (property-tested in `tests/prop_balance.rs`); only *where* each pair
+//! is produced changes.  They plug in behind [`BalanceStrategy`] on
+//! [`SnConfig`](crate::sn::types::SnConfig): `repsn`, `jobsn` and (through
+//! them) `multipass` dispatch here when a strategy is selected, on
+//! whatever executor they were given — so balanced jobs run on the shared
+//! [`JobScheduler`](crate::mapreduce::scheduler::JobScheduler) and
+//! *compose with* speculation rather than replacing it (speculation still
+//! covers machine skew; the repartitioning removes the data skew it
+//! cannot).
+//!
+//! ## Observability
+//!
+//! [`counter_names::PAIRS_TOTAL`] / [`counter_names::PAIRS_MAX_TASK`]
+//! expose the reduce-pair skew ratio (`max / (total / tasks)`), and
+//! [`counter_names::BLOCKS_SPLIT`] reports how many blocks BlockSplit had
+//! to cut; `benches/fig9_skew.rs` sweeps speculation vs BlockSplit vs
+//! PairRange into `BENCH_balance.json`, with
+//! [`sim::reduce_secs_from_pairs`](crate::mapreduce::sim::reduce_secs_from_pairs)
+//! as the matching simulator cost model.
+
+pub mod bdm;
+pub mod blocksplit;
+pub mod pairrange;
+
+pub use bdm::{bdm_job, Bdm, BdmJobResult};
+pub use blocksplit::BlockSplitPlan;
+pub use pairrange::PairRangePlan;
+
+use std::sync::Arc;
+
+use crate::er::entity::Entity;
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::engine::JobStats;
+use crate::mapreduce::scheduler::{Exec, JobScheduler};
+use crate::mapreduce::sim::JobProfile;
+use crate::mapreduce::types::SizeEstimate;
+use crate::sn::types::{SnConfig, SnResult};
+
+/// Which reduce-side load-balancing strategy an SN job runs with.
+///
+/// Threaded through [`SnConfig`](crate::sn::types::SnConfig): `None` is
+/// the paper's plain key-range repartitioning; the other two run the
+/// two-job architecture of this module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BalanceStrategy {
+    /// Plain RepSN: reduce tasks = key-range partitions, skew and all.
+    #[default]
+    None,
+    /// BDM analysis + block splitting at sub-block granularity.
+    BlockSplit,
+    /// BDM analysis + contiguous global pair-index ranges.
+    PairRange,
+}
+
+impl BalanceStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BalanceStrategy::None => "none",
+            BalanceStrategy::BlockSplit => "blocksplit",
+            BalanceStrategy::PairRange => "pairrange",
+        }
+    }
+
+    /// Parse a CLI flag value (`none` / `blocksplit` / `pairrange`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Some(BalanceStrategy::None),
+            "blocksplit" | "block-split" => Some(BalanceStrategy::BlockSplit),
+            "pairrange" | "pair-range" => Some(BalanceStrategy::PairRange),
+            _ => None,
+        }
+    }
+}
+
+/// Counter names reported by the balanced jobs.
+pub mod counter_names {
+    /// Total reduce-task output records of the repartition job (in SN
+    /// blocking mode: the total window-pair count).
+    pub const PAIRS_TOTAL: &str = "balance.pairs_total";
+    /// The largest single reduce task's output record count — the
+    /// numerator of the reduce-pair skew ratio the strategies flatten.
+    pub const PAIRS_MAX_TASK: &str = "balance.pairs_max_task";
+    /// Blocks (key runs) BlockSplit cut across ≥ 2 reduce tasks.
+    pub const BLOCKS_SPLIT: &str = "balance.blocks_split";
+}
+
+/// An intermediate value carrying its entity's global `(key, id)` rank —
+/// what lets balanced reduce tasks reason about window adjacency and pair
+/// indices without any global state.
+#[derive(Debug, Clone)]
+pub struct Ranked {
+    pub rank: u64,
+    pub entity: Arc<Entity>,
+}
+
+impl SizeEstimate for Ranked {
+    fn size_bytes(&self) -> usize {
+        8 + self.entity.size_bytes()
+    }
+}
+
+/// Number of SN window pairs whose *later* element has global rank `< j`:
+/// `Σ_{t<j} min(t, w−1)`, closed form.  `cum_pairs(n, w)` is the total
+/// pair count ([`total_pairs`]) and matches
+/// [`expected_pair_count`](crate::sn::window::expected_pair_count).
+pub fn cum_pairs(j: u64, w: usize) -> u64 {
+    let w1 = (w.max(2) - 1) as u64;
+    if j <= w1 {
+        j * j.saturating_sub(1) / 2
+    } else {
+        w1 * (w1 - 1) / 2 + (j - w1) * w1
+    }
+}
+
+/// Total SN window pairs over `n` rank-ordered entities.
+pub fn total_pairs(n: u64, w: usize) -> u64 {
+    cum_pairs(n, w)
+}
+
+/// Window pairs whose later element's rank lies in `[a, b)` — the reduce
+/// cost of a contiguous rank segment under RepSN semantics (the later
+/// element's reducer produces the pair).
+pub fn segment_pairs(a: u64, b: u64, w: usize) -> u64 {
+    cum_pairs(b, w) - cum_pairs(a, w)
+}
+
+/// Global index of pair `(i, j)` (`i < j`, `j − i < w`): pairs are
+/// ordered by later element, then by decreasing earlier element.
+pub fn pair_index(i: u64, j: u64, w: usize) -> u64 {
+    debug_assert!(i < j && j - i < w.max(2) as u64);
+    cum_pairs(j, w) + (j - 1 - i)
+}
+
+/// Reduce-side pair skew of a finished job: `(max per-task output
+/// records, total)`.  In SN blocking mode output records are window
+/// pairs, so `max / (total / tasks)` is the skew ratio the balanced
+/// strategies flatten; apply it to an unbalanced RepSN job's
+/// [`JobStats`] for the baseline.
+pub fn reduce_pair_skew(stats: &JobStats) -> (u64, u64) {
+    let max = stats
+        .reduce_task_output_records
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(0);
+    let total = stats.reduce_task_output_records.iter().sum();
+    (max, total)
+}
+
+/// Run the two-job balanced pipeline on `exec`: BDM analysis, then the
+/// repartition job of `cfg.balance`.  The partitioner on `cfg` only
+/// contributes its partition count (the reduce-task target `r`); routing
+/// is computed from the BDM.  Result shape matches the other SN variants:
+/// two `stats`/`profiles` entries (analysis + repartition, like JobSN's
+/// two jobs), merged counters, and a pair set identical to unbalanced
+/// RepSN.
+pub fn run_balanced(
+    entities: &[Entity],
+    cfg: &SnConfig,
+    exec: Exec<'_>,
+) -> anyhow::Result<SnResult> {
+    if cfg.balance == BalanceStrategy::None {
+        return crate::sn::repsn::run_on(entities, cfg, exec);
+    }
+    if !check_viable(entities.len(), cfg)? {
+        return Ok(empty_result());
+    }
+    // one id-sort + deep copy for the whole pipeline; the second job gets
+    // shallow Arc clones of the same records
+    let input = bdm::partitioned_input(entities, cfg.num_map_tasks.max(1));
+    run_pipeline(input, cfg, exec)
+}
+
+/// The pipeline's viability guards, shared by [`run_balanced`] and
+/// [`submit`] so they cannot drift: `Ok(true)` = run it, `Ok(false)` =
+/// the result is trivially empty, `Err` = unusable config.
+fn check_viable(n_entities: usize, cfg: &SnConfig) -> anyhow::Result<bool> {
+    anyhow::ensure!(cfg.window >= 2, "SN window must be ≥ 2");
+    anyhow::ensure!(
+        n_entities < u32::MAX as usize,
+        "corpus too large for the u32 rank tags"
+    );
+    Ok(n_entities >= 2)
+}
+
+fn empty_result() -> SnResult {
+    SnResult {
+        pairs: Vec::new(),
+        matches: Vec::new(),
+        counters: Arc::new(Counters::new()),
+        stats: Vec::new(),
+        profiles: Vec::new(),
+    }
+}
+
+/// The two jobs themselves, over a prebuilt
+/// [`partitioned_input`](bdm::partitioned_input) (guards already checked).
+fn run_pipeline(
+    input: Vec<(u32, Arc<Entity>)>,
+    cfg: &SnConfig,
+    exec: Exec<'_>,
+) -> anyhow::Result<SnResult> {
+    let m = cfg.num_map_tasks.max(1);
+    let r = cfg.partitioner.num_partitions().max(1);
+
+    // ---- job 1: BDM analysis ---------------------------------------------
+    let analysis = bdm::bdm_job(
+        input.clone(),
+        &cfg.blocking_key,
+        m,
+        cfg.workers,
+        cfg.sort_buffer_records,
+        exec,
+    );
+    let matrix = Arc::new(analysis.bdm);
+    let counters = Arc::new(Counters::new());
+    counters.merge(&analysis.counters);
+
+    // ---- job 2: balanced repartition -------------------------------------
+    let res = match cfg.balance {
+        BalanceStrategy::BlockSplit => {
+            let plan = Arc::new(blocksplit::plan(&matrix, r, cfg.window));
+            counters.add(counter_names::BLOCKS_SPLIT, plan.blocks_split);
+            blocksplit::run_job(input, cfg, matrix, plan, exec)
+        }
+        BalanceStrategy::PairRange => {
+            let plan = Arc::new(pairrange::plan(matrix.num_entities(), r, cfg.window));
+            pairrange::run_job(input, cfg, matrix, plan, exec)
+        }
+        BalanceStrategy::None => unreachable!(),
+    };
+    let (pairs, matches, boundaries) = crate::sn::srp::split_output(&res);
+    debug_assert!(boundaries.is_empty());
+    let profile = JobProfile::from_stats(
+        &res.stats,
+        res.counters
+            .get(crate::mapreduce::counters::names::MAP_OUTPUT_BYTES),
+    );
+    counters.merge(&res.counters);
+    let (max_task, total) = reduce_pair_skew(&res.stats);
+    counters.add(counter_names::PAIRS_TOTAL, total);
+    counters.add(counter_names::PAIRS_MAX_TASK, max_task);
+    Ok(SnResult {
+        pairs,
+        matches,
+        counters,
+        stats: vec![analysis.stats, res.stats.clone()],
+        profiles: vec![analysis.profile, profile],
+    })
+}
+
+/// A balanced pipeline submitted to a shared scheduler;
+/// [`PendingBalanced::join`] blocks for the result.
+pub struct PendingBalanced {
+    handle: std::thread::JoinHandle<anyhow::Result<SnResult>>,
+}
+
+impl PendingBalanced {
+    pub fn join(self) -> anyhow::Result<SnResult> {
+        match self.handle.join() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    }
+}
+
+/// Submit the two-job balanced pipeline to a shared [`JobScheduler`] and
+/// return immediately.  A driver thread chains the BDM job and the
+/// repartition job (a DAG edge, like JobSN's phase 1 → phase 2) while
+/// both jobs' tasks interleave with every other submitted job's on the
+/// scheduler's slots — this is how `multipass` runs balanced per-key
+/// passes concurrently.
+pub fn submit(entities: &[Entity], cfg: &SnConfig, sched: &JobScheduler) -> PendingBalanced {
+    let cfg = cfg.clone();
+    let sched = sched.clone();
+    let work: Box<dyn FnOnce() -> anyhow::Result<SnResult> + Send> =
+        if cfg.balance == BalanceStrategy::None {
+            // direct callers with no strategy get run_balanced's RepSN
+            // delegation, which needs the corpus itself (repsn::submit
+            // never routes this case here)
+            let entities = entities.to_vec();
+            Box::new(move || run_balanced(&entities, &cfg, Exec::Scheduler(&sched)))
+        } else {
+            match check_viable(entities.len(), &cfg) {
+                Err(e) => Box::new(move || Err(e)),
+                Ok(false) => Box::new(move || Ok(empty_result())),
+                // common case: ship the partition-tagged input (shallow
+                // Arc clones after the one deep copy) to the driver thread
+                Ok(true) => {
+                    let input = bdm::partitioned_input(entities, cfg.num_map_tasks.max(1));
+                    Box::new(move || run_pipeline(input, &cfg, Exec::Scheduler(&sched)))
+                }
+            }
+        };
+    let handle = std::thread::Builder::new()
+        .name("snmr-balance".into())
+        .spawn(work)
+        .expect("spawn balance driver");
+    PendingBalanced { handle }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sn::window::expected_pair_count;
+
+    #[test]
+    fn cum_pairs_matches_window_formula() {
+        for (n, w) in [(0u64, 3usize), (1, 3), (5, 2), (9, 3), (100, 10), (50, 60)] {
+            assert_eq!(
+                total_pairs(n, w),
+                expected_pair_count(n as usize, w) as u64,
+                "n={n} w={w}"
+            );
+        }
+    }
+
+    #[test]
+    fn segment_pairs_tile_the_total() {
+        let (n, w) = (137u64, 7usize);
+        let cuts = [0u64, 20, 55, 90, 137];
+        let sum: u64 = cuts.windows(2).map(|c| segment_pairs(c[0], c[1], w)).sum();
+        assert_eq!(sum, total_pairs(n, w));
+    }
+
+    #[test]
+    fn pair_index_enumerates_segments_consistently() {
+        // indices of pairs with later element in [a, b) fill
+        // [cum(a), cum(b)) exactly
+        let w = 4usize;
+        for (a, b) in [(0u64, 10u64), (10, 25), (3, 7)] {
+            let mut idxs: Vec<u64> = Vec::new();
+            for j in a.max(1)..b {
+                for i in j.saturating_sub(w as u64 - 1)..j {
+                    idxs.push(pair_index(i, j, w));
+                }
+            }
+            idxs.sort_unstable();
+            let expect: Vec<u64> = (cum_pairs(a.max(1), w)..cum_pairs(b, w)).collect();
+            assert_eq!(idxs, expect, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn strategy_parse_round_trips() {
+        for s in [
+            BalanceStrategy::None,
+            BalanceStrategy::BlockSplit,
+            BalanceStrategy::PairRange,
+        ] {
+            assert_eq!(BalanceStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(BalanceStrategy::parse("nope"), None);
+    }
+}

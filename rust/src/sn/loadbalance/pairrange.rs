@@ -1,0 +1,333 @@
+//! PairRange: enumerate every SN comparison pair globally and give each
+//! reduce task a near-equal contiguous range of pair indices.
+//!
+//! The strategy of arXiv:1108.1631 §4.2, adapted to Sorted Neighborhood.
+//! The global pair enumeration orders pairs by their *later* element's
+//! rank, then by decreasing earlier-element rank: pair `(i, j)` (ranks in
+//! the global `(key, id)` sort order, `0 < j − i < w`) has index
+//! `cum_pairs(j) + (j − 1 − i)` — a closed form, so both mapper and
+//! reducer compute it from ranks alone, no lookup tables.  The `P` total
+//! pairs are cut into `r` ranges of `⌈P/r⌉`/`⌊P/r⌋`; range `t` *is*
+//! reduce task `t`, so per-task pair counts are equal by construction —
+//! the finest-grained balancing possible, at the price of a little more
+//! replication than BlockSplit.
+//!
+//! The mapper derives each entity's rank from the BDM ([`Bdm::rank`]),
+//! computes the closed interval of pair indices the entity participates
+//! in ([`pair_span`]) and emits one copy to every range overlapping it.
+//! The reducer walks its copies in rank order (the composite-key sort)
+//! through the shared sliding window and keeps exactly the comparisons
+//! whose pair index falls inside its range — pairs outside are some other
+//! task's responsibility, so the union over tasks is the exact
+//! unbalanced-RepSN pair set with no duplicates.
+
+use std::sync::Arc;
+
+use super::bdm::Bdm;
+use super::{cum_pairs, pair_index, total_pairs, Ranked};
+use crate::er::blockkey::BlockingKey;
+use crate::er::entity::Entity;
+use crate::mapreduce::counters::Counters;
+use crate::mapreduce::engine::JobResult;
+use crate::mapreduce::scheduler::Exec;
+use crate::mapreduce::types::{
+    Emitter, MapTask, MapTaskFactory, ReduceTask, ReduceTaskFactory, ValuesIter,
+};
+use crate::mapreduce::JobConfig;
+use crate::sn::pairs::WindowProc;
+use crate::sn::srp::{group_by_bound, BoundPartitioner};
+use crate::sn::types::{counter_names, SnConfig, SnKey, SnMode, SnVal};
+
+/// A PairRange plan: the pair-index range starts, one per reduce task.
+#[derive(Debug, Clone)]
+pub struct PairRangePlan {
+    /// Start pair index of each range; `starts[0] == 0`, strictly
+    /// increasing (empty ranges are dropped, so `num_tasks ≤ r`).
+    starts: Vec<u64>,
+    total: u64,
+    n: u64,
+    w: usize,
+}
+
+impl PairRangePlan {
+    pub fn num_tasks(&self) -> usize {
+        self.starts.len()
+    }
+
+    pub fn total_pairs(&self) -> u64 {
+        self.total
+    }
+
+    /// Which reduce task owns pair index `idx`.
+    pub fn range_of(&self, idx: u64) -> usize {
+        debug_assert!(idx < self.total);
+        self.starts[1..].partition_point(|&s| s <= idx)
+    }
+
+    /// Half-open pair-index range `[lo, hi)` of task `t`.
+    pub fn bounds(&self, t: usize) -> (u64, u64) {
+        (
+            self.starts[t],
+            self.starts.get(t + 1).copied().unwrap_or(self.total),
+        )
+    }
+}
+
+/// Cut the `total_pairs(n, w)` global pair indices into ≤ `r` near-equal
+/// contiguous ranges.
+pub fn plan(n: u64, r: usize, w: usize) -> PairRangePlan {
+    let w = w.max(2);
+    let r = r.max(1);
+    let total = total_pairs(n, w);
+    let mut starts: Vec<u64> = (0..r as u64)
+        .map(|t| ((total as u128 * t as u128) / r as u128) as u64)
+        .collect();
+    starts.dedup(); // drop empty ranges when total < r
+    PairRangePlan {
+        starts,
+        total,
+        n,
+        w,
+    }
+}
+
+/// Closed interval `[lo, hi]` of global pair indices involving the entity
+/// at rank `t`, or `None` if it participates in no pair (`n < 2`).
+pub fn pair_span(t: u64, n: u64, w: usize) -> Option<(u64, u64)> {
+    let w = w.max(2) as u64;
+    if n < 2 {
+        return None;
+    }
+    // as the later element: indices cum(t) .. cum(t) + min(t, w−1) − 1
+    let later = (t >= 1).then(|| {
+        let c = cum_pairs(t, w as usize);
+        (c, c + t.min(w - 1) - 1)
+    });
+    // as the earlier element: partner ranks t+1 ..= min(n−1, t+w−1)
+    let jmax = (n - 1).min(t + w - 1);
+    let earlier = (jmax > t).then(|| {
+        (
+            cum_pairs(t + 1, w as usize), // pair (t, t+1): offset 0
+            cum_pairs(jmax, w as usize) + (jmax - 1 - t),
+        )
+    });
+    match (later, earlier) {
+        (Some((a, b)), Some((c, d))) => Some((a.min(c), b.max(d))),
+        (Some(s), None) | (None, Some(s)) => Some(s),
+        (None, None) => None,
+    }
+}
+
+/// The PairRange map task: rank-derive, then emit one copy per
+/// overlapping range.
+struct PairRangeMap {
+    bdm: Arc<Bdm>,
+    plan: Arc<PairRangePlan>,
+    blocking_key: Arc<dyn BlockingKey>,
+    ranks: super::bdm::RankTracker,
+    replicated: u64,
+}
+
+impl MapTask<u32, Arc<Entity>, SnKey, Ranked> for PairRangeMap {
+    fn configure(&mut self, _out: &mut Emitter<SnKey, Ranked>, _c: &Counters) {
+        self.ranks.reset();
+        self.replicated = 0;
+    }
+
+    fn map(&mut self, part: u32, e: Arc<Entity>, out: &mut Emitter<SnKey, Ranked>, _c: &Counters) {
+        let k = self.blocking_key.key(&e);
+        let rank = self.ranks.rank(&self.bdm, &k, part);
+        let Some((lo, hi)) = pair_span(rank, self.plan.n, self.plan.w) else {
+            return;
+        };
+        let t_lo = self.plan.range_of(lo);
+        let t_hi = self.plan.range_of(hi);
+        for t in t_lo..=t_hi {
+            out.emit(
+                SnKey {
+                    bound: t as u32,
+                    part: t as u32,
+                    key: k.clone(),
+                    id: e.id,
+                },
+                Ranked {
+                    rank,
+                    entity: Arc::clone(&e),
+                },
+            );
+        }
+        self.replicated += (t_hi - t_lo) as u64;
+    }
+
+    fn close(&mut self, _out: &mut Emitter<SnKey, Ranked>, c: &Counters) {
+        c.add(counter_names::REPLICATED_ENTITIES, self.replicated);
+    }
+}
+
+struct PairRangeMapFactory {
+    bdm: Arc<Bdm>,
+    plan: Arc<PairRangePlan>,
+    blocking_key: Arc<dyn BlockingKey>,
+}
+
+impl MapTaskFactory<u32, Arc<Entity>, SnKey, Ranked> for PairRangeMapFactory {
+    fn create_task(&self) -> Box<dyn MapTask<u32, Arc<Entity>, SnKey, Ranked> + Send> {
+        Box::new(PairRangeMap {
+            bdm: Arc::clone(&self.bdm),
+            plan: Arc::clone(&self.plan),
+            blocking_key: Arc::clone(&self.blocking_key),
+            ranks: Default::default(),
+            replicated: 0,
+        })
+    }
+}
+
+/// The PairRange reduce task: slide the shared window over the received
+/// rank-ordered copies and keep exactly the in-range pair indices.
+///
+/// Entity ranks travel through the window's provenance tag, which is
+/// `u32` — fine for this testbed's corpus sizes (`run_balanced` checks).
+struct PairRangeReduce {
+    w: usize,
+    mode: SnMode,
+    plan: Arc<PairRangePlan>,
+}
+
+impl ReduceTask<SnKey, Ranked, SnKey, SnVal> for PairRangeReduce {
+    fn reduce(
+        &mut self,
+        key: &SnKey,
+        values: ValuesIter<'_, Ranked>,
+        out: &mut Emitter<SnKey, SnVal>,
+        counters: &Counters,
+    ) {
+        let (lo, hi) = self.plan.bounds(key.bound as usize);
+        let w = self.w.max(2);
+        let mut proc = WindowProc::new(w, &self.mode);
+        for v in values {
+            debug_assert!(v.rank <= u32::MAX as u64);
+            proc.push(&v.entity, v.rank as u32, |older, newer| {
+                let (i, j) = (older.tag as u64, newer.tag as u64);
+                if j - i >= w as u64 {
+                    return false; // rank gap wider than the window
+                }
+                let idx = pair_index(i, j, w);
+                lo <= idx && idx < hi
+            });
+        }
+        proc.finish(key, out, counters);
+    }
+}
+
+struct PairRangeReduceFactory {
+    w: usize,
+    mode: SnMode,
+    plan: Arc<PairRangePlan>,
+}
+
+impl ReduceTaskFactory<SnKey, Ranked, SnKey, SnVal> for PairRangeReduceFactory {
+    fn create_task(&self) -> Box<dyn ReduceTask<SnKey, Ranked, SnKey, SnVal> + Send> {
+        Box::new(PairRangeReduce {
+            w: self.w,
+            mode: self.mode.clone(),
+            plan: Arc::clone(&self.plan),
+        })
+    }
+}
+
+/// Run the PairRange repartition job over the pipeline's shared
+/// [`partitioned_input`](super::bdm::partitioned_input).
+pub(super) fn run_job(
+    input: Vec<(u32, Arc<Entity>)>,
+    cfg: &SnConfig,
+    bdm: Arc<Bdm>,
+    plan: Arc<PairRangePlan>,
+    exec: Exec<'_>,
+) -> JobResult<SnKey, SnVal> {
+    let m = cfg.num_map_tasks.max(1);
+    let job_cfg = JobConfig::named("pairrange")
+        .with_tasks(m, plan.num_tasks())
+        .with_workers(cfg.workers)
+        .with_sort_buffer(cfg.sort_buffer_records);
+    let mapper: Arc<dyn MapTaskFactory<u32, Arc<Entity>, SnKey, Ranked>> =
+        Arc::new(PairRangeMapFactory {
+            bdm,
+            plan: Arc::clone(&plan),
+            blocking_key: Arc::clone(&cfg.blocking_key),
+        });
+    let reducer: Arc<dyn ReduceTaskFactory<SnKey, Ranked, SnKey, SnVal>> =
+        Arc::new(PairRangeReduceFactory {
+            w: cfg.window,
+            mode: cfg.mode.clone(),
+            plan,
+        });
+    exec.run_job(
+        &job_cfg,
+        input,
+        mapper,
+        Arc::new(BoundPartitioner),
+        group_by_bound(),
+        reducer,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_cover_every_pair_exactly() {
+        // every pair index is inside both endpoints' spans
+        let (n, w) = (40u64, 5usize);
+        for j in 1..n {
+            for i in j.saturating_sub(w as u64 - 1)..j {
+                let idx = pair_index(i, j, w);
+                for t in [i, j] {
+                    let (lo, hi) = pair_span(t, n, w).unwrap();
+                    assert!(
+                        lo <= idx && idx <= hi,
+                        "pair ({i},{j}) idx {idx} outside span of {t} [{lo},{hi}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pair_indices_are_dense() {
+        let (n, w) = (30u64, 4usize);
+        let mut seen = vec![false; total_pairs(n, w) as usize];
+        for j in 1..n {
+            for i in j.saturating_sub(w as u64 - 1)..j {
+                let idx = pair_index(i, j, w) as usize;
+                assert!(!seen[idx], "index {idx} assigned twice");
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "pair indices must be dense");
+    }
+
+    #[test]
+    fn plan_ranges_are_near_equal() {
+        let p = plan(1000, 8, 10);
+        assert_eq!(p.num_tasks(), 8);
+        let sizes: Vec<u64> = (0..8).map(|t| { let (lo, hi) = p.bounds(t); hi - lo }).collect();
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap();
+        assert!(max - min <= 1, "ranges must differ by ≤ 1 pair: {sizes:?}");
+        assert_eq!(sizes.iter().sum::<u64>(), total_pairs(1000, 10));
+    }
+
+    #[test]
+    fn degenerate_plans() {
+        // fewer pairs than tasks → empty ranges dropped
+        let p = plan(3, 8, 2); // 2 pairs
+        assert!(p.num_tasks() <= 2);
+        assert_eq!(p.total_pairs(), 2);
+        // no pairs at all
+        let p1 = plan(1, 4, 3);
+        assert_eq!(p1.total_pairs(), 0);
+        assert_eq!(p1.num_tasks(), 1);
+        assert!(pair_span(0, 1, 3).is_none());
+    }
+}

@@ -15,6 +15,11 @@
 //!   `i + 1` (composite key `bound.p(k).k`).
 //! * [`standard_blocking`] — the §3 baseline (group by exact key).
 //! * [`multipass`] — multi-pass SN (§4's robustness extension).
+//! * [`balance`] — skew-aware key-range boundary selection (partition
+//!   granularity) and the combiner-powered key-histogram job.
+//! * [`loadbalance`] — the Kolb et al. 2012 two-job load balancers: a
+//!   Block Distribution Matrix analysis job plus BlockSplit / PairRange
+//!   repartitioning, selected by [`BalanceStrategy`] on [`SnConfig`].
 //!
 //! ## Determinism note
 //!
@@ -27,6 +32,7 @@
 
 pub mod balance;
 pub mod jobsn;
+pub mod loadbalance;
 pub mod multipass;
 pub mod pairs;
 pub mod partition;
@@ -37,4 +43,5 @@ pub mod standard_blocking;
 pub mod types;
 pub mod window;
 
+pub use loadbalance::BalanceStrategy;
 pub use types::{SnConfig, SnKey, SnMode, SnResult};

@@ -13,6 +13,12 @@
 //! folded in key order regardless of completion order, so the result is
 //! byte-identical to the serial baseline ([`run_serial`], kept as the
 //! reference the property tests and the skew bench compare against).
+//!
+//! A [`BalanceStrategy`](crate::sn::loadbalance::BalanceStrategy) on the
+//! base config applies to every pass: each per-key submission becomes the
+//! two-job BDM + repartition pipeline (see
+//! [`repsn::submit`](crate::sn::repsn::submit)), all still interleaved on
+//! the one scheduler.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;

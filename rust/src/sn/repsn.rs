@@ -27,6 +27,7 @@ use crate::mapreduce::types::{
     Emitter, MapTask, MapTaskFactory, ReduceTask, ReduceTaskFactory, ValuesIter,
 };
 use crate::mapreduce::JobConfig;
+use crate::sn::loadbalance::{self, BalanceStrategy};
 use crate::sn::pairs::WindowProc;
 use crate::sn::partition::PartitionFn;
 use crate::sn::srp::{group_by_bound, BoundPartitioner};
@@ -259,7 +260,15 @@ pub fn run(entities: &[Entity], cfg: &SnConfig) -> anyhow::Result<SnResult> {
 }
 
 /// As [`run`], on an explicit executor (serial or shared scheduler).
+///
+/// With a [`BalanceStrategy`] other than `None` on the config, execution
+/// routes through [`loadbalance::run_balanced`]: the BDM analysis job
+/// plus the balanced repartition job, same pair set, flattened
+/// reduce-task skew.
 pub fn run_on(entities: &[Entity], cfg: &SnConfig, exec: Exec<'_>) -> anyhow::Result<SnResult> {
+    if cfg.balance != BalanceStrategy::None {
+        return loadbalance::run_balanced(entities, cfg, exec);
+    }
     let (job_cfg, input, mapper, reducer) = job_parts(entities, cfg);
     finish(exec.run_job(
         &job_cfg,
@@ -272,32 +281,49 @@ pub fn run_on(entities: &[Entity], cfg: &SnConfig, exec: Exec<'_>) -> anyhow::Re
 }
 
 /// A RepSN job submitted to a shared scheduler; [`PendingRepSn::join`]
-/// blocks for the result.
+/// blocks for the result.  With a balance strategy the pending work is
+/// the whole two-job pipeline (analysis → repartition).
 pub struct PendingRepSn {
-    handle: JobHandle<SnKey, SnVal>,
+    inner: PendingInner,
+}
+
+enum PendingInner {
+    Classic(JobHandle<SnKey, SnVal>),
+    Balanced(loadbalance::PendingBalanced),
 }
 
 impl PendingRepSn {
     pub fn join(self) -> anyhow::Result<SnResult> {
-        finish(self.handle.join())
+        match self.inner {
+            PendingInner::Classic(handle) => finish(handle.join()),
+            PendingInner::Balanced(pending) => pending.join(),
+        }
     }
 }
 
 /// Submit RepSN to a shared [`JobScheduler`] and return immediately; the
 /// job's map/reduce tasks interleave with every other submitted job's on
 /// the scheduler's slots (this is how [`multipass`](crate::sn::multipass)
-/// runs its independent per-key passes concurrently).
+/// runs its independent per-key passes concurrently).  A configured
+/// [`BalanceStrategy`] submits the balanced two-job pipeline instead,
+/// still on the shared slots — balancing composes with whatever
+/// speculation policy the scheduler runs.
 pub fn submit(entities: &[Entity], cfg: &SnConfig, sched: &JobScheduler) -> PendingRepSn {
+    if cfg.balance != BalanceStrategy::None {
+        return PendingRepSn {
+            inner: PendingInner::Balanced(loadbalance::submit(entities, cfg, sched)),
+        };
+    }
     let (job_cfg, input, mapper, reducer) = job_parts(entities, cfg);
     PendingRepSn {
-        handle: sched.submit(
+        inner: PendingInner::Classic(sched.submit(
             job_cfg,
             input,
             mapper,
             Arc::new(BoundPartitioner),
             group_by_bound(),
             reducer,
-        ),
+        )),
     }
 }
 
@@ -328,6 +354,7 @@ mod tests {
             blocking_key: Arc::new(TitlePrefixKey::new(1)),
             mode: SnMode::Blocking,
             sort_buffer_records: None,
+            balance: Default::default(),
         }
     }
 
@@ -363,6 +390,7 @@ mod tests {
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
             sort_buffer_records: None,
+            balance: Default::default(),
         };
         let res = run(&entities, &cfg).unwrap();
         let replicated = res.counters.get(counter_names::REPLICATED_ENTITIES);
@@ -394,6 +422,7 @@ mod tests {
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
             sort_buffer_records: None,
+            balance: Default::default(),
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 6);

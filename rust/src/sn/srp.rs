@@ -251,6 +251,7 @@ mod tests {
             blocking_key: Arc::new(TitlePrefixKey::new(1)),
             mode: SnMode::Blocking,
             sort_buffer_records: None,
+            balance: Default::default(),
         };
         let res = run(&entities, &cfg).unwrap();
         assert_eq!(res.pairs.len(), 12);
@@ -279,6 +280,7 @@ mod tests {
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
             sort_buffer_records: None,
+            balance: Default::default(),
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 5);

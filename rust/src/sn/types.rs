@@ -9,6 +9,7 @@ use crate::mapreduce::counters::Counters;
 use crate::mapreduce::engine::JobStats;
 use crate::mapreduce::sim::JobProfile;
 use crate::mapreduce::types::SizeEstimate;
+use crate::sn::loadbalance::BalanceStrategy;
 use crate::sn::partition::PartitionFn;
 
 /// The composite intermediate key of Algorithms 1–2.
@@ -112,6 +113,12 @@ pub struct SnConfig {
     /// [`crate::mapreduce::JobConfig::sort_buffer_records`] by every SN
     /// job.  `None` (default) sorts whole buckets in memory.
     pub sort_buffer_records: Option<usize>,
+    /// Reduce-side load balancing.  [`BalanceStrategy::None`] (default)
+    /// is the paper's plain key-range repartitioning; `BlockSplit` /
+    /// `PairRange` route `repsn`/`jobsn`/`multipass` through the
+    /// [`loadbalance`](crate::sn::loadbalance) two-job pipeline (the
+    /// partitioner then only supplies the reduce-task target `r`).
+    pub balance: BalanceStrategy,
 }
 
 impl Default for SnConfig {
@@ -124,6 +131,7 @@ impl Default for SnConfig {
             blocking_key: Arc::new(TitlePrefixKey::new(2)),
             mode: SnMode::Blocking,
             sort_buffer_records: None,
+            balance: BalanceStrategy::None,
         }
     }
 }
@@ -136,6 +144,7 @@ impl std::fmt::Debug for SnConfig {
             .field("workers", &self.workers)
             .field("partitions", &self.partitioner.num_partitions())
             .field("mode", &self.mode)
+            .field("balance", &self.balance)
             .finish()
     }
 }

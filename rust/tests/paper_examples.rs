@@ -53,6 +53,7 @@ fn fig_cfg(w: usize, m: usize) -> SnConfig {
         blocking_key: Arc::new(TitlePrefixKey::new(1)),
         mode: SnMode::Blocking,
         sort_buffer_records: None,
+        balance: Default::default(),
     }
 }
 

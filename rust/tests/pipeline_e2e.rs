@@ -36,6 +36,7 @@ fn sn_config(entities: &[Entity], w: usize) -> SnConfig {
         blocking_key: Arc::new(TitlePrefixKey::new(2)),
         mode: Default::default(),
         sort_buffer_records: None,
+        balance: Default::default(),
     }
 }
 

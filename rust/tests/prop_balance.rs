@@ -1,0 +1,262 @@
+//! Load-balancing equivalence properties (ISSUE 3 acceptance).
+//!
+//! The BlockSplit and PairRange repartitioners must be *output-invisible*
+//! and *skew-flattening*: on random Zipf-skewed corpora each produces
+//! exactly the match-pair set of unbalanced RepSN (== sequential SN),
+//! while the largest reduce task's pair count never exceeds — and under a
+//! hot block is at least halved versus — the unbalanced baseline.
+
+use std::sync::Arc;
+
+use snmr::data::skew::zipf_skew_block_keys;
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
+use snmr::er::entity::Entity;
+use snmr::mapreduce::scheduler::{JobScheduler, SchedulerConfig};
+use snmr::sn::balance::pair_balanced_min_size;
+use snmr::sn::loadbalance::{self, counter_names, reduce_pair_skew, BalanceStrategy};
+use snmr::sn::partition::PartitionFn;
+use snmr::sn::types::{SnConfig, SnMode};
+use snmr::sn::window::expected_pair_count;
+use snmr::sn::{multipass, repsn};
+use snmr::util::prop::Cases;
+use snmr::util::rng::Rng;
+use snmr::{prop_assert, prop_assert_eq};
+
+/// A corpus whose blocking-key distribution is Zipf-skewed (hot *blocks*,
+/// the case key-range partitioning cannot fix), with shuffled ids so the
+/// input order exercises the BDM rank derivation.
+fn skewed_entities(rng: &mut Rng, n: usize, distinct_keys: usize, s: f64) -> Vec<Entity> {
+    let mut ids: Vec<u64> = (0..(2 * n) as u64).collect();
+    rng.shuffle(&mut ids);
+    let mut entities: Vec<Entity> = (0..n)
+        .map(|i| Entity::new(ids[i], &format!("xx title {i}"), "abstract"))
+        .collect();
+    zipf_skew_block_keys(&mut entities, distinct_keys, s, rng.next_u64());
+    entities
+}
+
+/// An unbalanced config whose partitioner keeps classic RepSN exact
+/// (`pair_balanced_min_size`: non-empty partitions of ≥ w−1 entities, the
+/// assumption RepSN's one-step boundary replication relies on).
+fn unbalanced_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConfig {
+    let bk = TitlePrefixKey::new(2);
+    let partitioner = pair_balanced_min_size(entities, &bk, r, w);
+    SnConfig {
+        window: w,
+        num_map_tasks: rng.range(1, 7),
+        workers: rng.range(1, 4),
+        partitioner: Arc::new(partitioner),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+        sort_buffer_records: None,
+        balance: BalanceStrategy::None,
+    }
+}
+
+#[test]
+fn prop_balanced_strategies_equal_unbalanced_repsn() {
+    Cases::new("blocksplit/pairrange == repsn", 30).run(|rng| {
+        let n = rng.range(80, 400);
+        let w = rng.range(2, 8);
+        let entities = skewed_entities(rng, n, rng.range(8, 40), 1.2 + rng.f64());
+        let cfg = unbalanced_config(rng, &entities, w, rng.range(4, 9));
+
+        let unbalanced = repsn::run(&entities, &cfg).map_err(|e| e.to_string())?;
+        let mut seq = snmr::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), w);
+        seq.sort_unstable();
+        seq.dedup();
+        prop_assert_eq!(unbalanced.pair_set(), seq);
+
+        for strategy in [BalanceStrategy::BlockSplit, BalanceStrategy::PairRange] {
+            let balanced = repsn::run(
+                &entities,
+                &SnConfig {
+                    balance: strategy,
+                    ..cfg.clone()
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            prop_assert_eq!(balanced.pair_set(), unbalanced.pair_set());
+            // two jobs: BDM analysis + repartition
+            prop_assert!(
+                balanced.stats.len() == 2,
+                "{}: expected 2 jobs, got {}",
+                strategy.name(),
+                balanced.stats.len()
+            );
+            // every window comparison produced exactly once across tasks
+            let (max_task, total) = reduce_pair_skew(&balanced.stats[1]);
+            prop_assert!(
+                total == expected_pair_count(n, w) as u64,
+                "{}: per-task totals {total} != {}",
+                strategy.name(),
+                expected_pair_count(n, w)
+            );
+            prop_assert_eq!(balanced.counters.get(counter_names::PAIRS_TOTAL), total);
+            prop_assert_eq!(balanced.counters.get(counter_names::PAIRS_MAX_TASK), max_task);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_balanced_max_task_never_exceeds_unbalanced() {
+    Cases::new("balanced max-task <= unbalanced", 25).run(|rng| {
+        let n = rng.range(200, 500);
+        let w = rng.range(2, 8);
+        let entities = skewed_entities(rng, n, rng.range(8, 40), 1.2 + 0.8 * rng.f64());
+        let cfg = unbalanced_config(rng, &entities, w, rng.range(4, 9));
+        let unbalanced = repsn::run(&entities, &cfg).map_err(|e| e.to_string())?;
+        let (unb_max, unb_total) = reduce_pair_skew(&unbalanced.stats[0]);
+        prop_assert!(
+            unb_total == expected_pair_count(n, w) as u64,
+            "unbalanced totals"
+        );
+        for strategy in [BalanceStrategy::BlockSplit, BalanceStrategy::PairRange] {
+            let balanced = repsn::run(
+                &entities,
+                &SnConfig {
+                    balance: strategy,
+                    ..cfg.clone()
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            let max_task = balanced.counters.get(counter_names::PAIRS_MAX_TASK);
+            prop_assert!(
+                max_task <= unb_max,
+                "{}: max task {max_task} > unbalanced {unb_max}",
+                strategy.name()
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The ISSUE 3 acceptance shape at test scale: one Zipf hot block, ≥ 4
+/// reduce tasks — both strategies at least halve the max-task pair count,
+/// identical output, and BlockSplit reports the cut.
+#[test]
+fn hot_block_max_task_halved() {
+    let mut rng = Rng::new(0xBA1A_FF5E);
+    let (n, w) = (3000, 12);
+    let entities = skewed_entities(&mut rng, n, 150, 1.5);
+    let cfg = SnConfig {
+        // BlockSplit's split granularity is the BDM cell (block × input
+        // partition): give the hot block 8 cells to be cut at
+        num_map_tasks: 8,
+        ..unbalanced_config(&mut rng, &entities, w, 8)
+    };
+    assert!(
+        cfg.partitioner.num_partitions() >= 4,
+        "need ≥ 4 reduce tasks, got {}",
+        cfg.partitioner.num_partitions()
+    );
+    let unbalanced = repsn::run(&entities, &cfg).unwrap();
+    let (unb_max, _) = reduce_pair_skew(&unbalanced.stats[0]);
+    for strategy in [BalanceStrategy::BlockSplit, BalanceStrategy::PairRange] {
+        let balanced = repsn::run(
+            &entities,
+            &SnConfig {
+                balance: strategy,
+                ..cfg.clone()
+            },
+        )
+        .unwrap();
+        assert_eq!(balanced.pair_set(), unbalanced.pair_set());
+        let max_task = balanced.counters.get(counter_names::PAIRS_MAX_TASK);
+        assert!(
+            2 * max_task <= unb_max,
+            "{}: expected ≥2× reduction, got {max_task} vs unbalanced {unb_max}",
+            strategy.name()
+        );
+        if strategy == BalanceStrategy::BlockSplit {
+            assert!(
+                balanced.counters.get(counter_names::BLOCKS_SPLIT) >= 1,
+                "the hot block must have been split"
+            );
+        }
+    }
+}
+
+/// Balancing must compose with the scheduler and with speculation: the
+/// two-job pipeline submitted to shared (speculative) slots produces the
+/// same output as the serial unbalanced run — and jobsn dispatches to the
+/// same pipeline.
+#[test]
+fn prop_balanced_on_scheduler_and_jobsn_dispatch() {
+    Cases::new("balanced scheduler/speculation invariant", 10).run(|rng| {
+        let n = rng.range(80, 250);
+        let w = rng.range(2, 6);
+        let entities = skewed_entities(rng, n, rng.range(8, 30), 1.5);
+        let cfg = unbalanced_config(rng, &entities, w, rng.range(4, 7));
+        let unbalanced = repsn::run(&entities, &cfg).map_err(|e| e.to_string())?;
+        let sched =
+            JobScheduler::new(SchedulerConfig::slots(rng.range(2, 5)).with_speculation(true));
+        for strategy in [BalanceStrategy::BlockSplit, BalanceStrategy::PairRange] {
+            let bal_cfg = SnConfig {
+                balance: strategy,
+                ..cfg.clone()
+            };
+            let on_sched = repsn::submit(&entities, &bal_cfg, &sched)
+                .join()
+                .map_err(|e| e.to_string())?;
+            prop_assert_eq!(on_sched.pair_set(), unbalanced.pair_set());
+            let via_jobsn =
+                snmr::sn::jobsn::run(&entities, &bal_cfg).map_err(|e| e.to_string())?;
+            prop_assert_eq!(via_jobsn.pair_set(), unbalanced.pair_set());
+            prop_assert!(
+                via_jobsn.stats.len() == 2,
+                "jobsn dispatch keeps the two-job shape"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Multipass inherits balancing through `repsn::submit`: every per-key
+/// pass runs the two-job pipeline on one shared scheduler, same union.
+#[test]
+fn multipass_with_balance_matches_unbalanced_union() {
+    let mut rng = Rng::new(0x0B1A);
+    let entities = skewed_entities(&mut rng, 220, 20, 1.5);
+    let w = 4;
+    let base = unbalanced_config(&mut rng, &entities, w, 5);
+    let keys: Vec<Arc<dyn BlockingKey>> = vec![
+        Arc::new(TitlePrefixKey::new(2)),
+        Arc::new(TitlePrefixKey::new(1)),
+    ];
+    let plain = multipass::run_serial(&entities, &base, &keys).unwrap();
+    let balanced_cfg = SnConfig {
+        balance: BalanceStrategy::BlockSplit,
+        ..base
+    };
+    let balanced = multipass::run(&entities, &balanced_cfg, &keys).unwrap();
+    assert_eq!(plain.union.pair_set(), balanced.union.pair_set());
+    for (p, b) in plain.per_pass.iter().zip(&balanced.per_pass) {
+        assert_eq!(p.pair_set(), b.pair_set());
+        assert_eq!(b.stats.len(), 2, "each balanced pass is two jobs");
+    }
+}
+
+/// Degenerate corpora flow through the balanced paths without panicking.
+#[test]
+fn degenerate_inputs() {
+    for n in [0usize, 1, 2, 3] {
+        let entities: Vec<Entity> = (0..n as u64)
+            .map(|i| Entity::new(i, "aa title", ""))
+            .collect();
+        for strategy in [BalanceStrategy::BlockSplit, BalanceStrategy::PairRange] {
+            let cfg = SnConfig {
+                window: 3,
+                balance: strategy,
+                ..Default::default()
+            };
+            let res = loadbalance::run_balanced(&entities, &cfg, snmr::mapreduce::Exec::Serial)
+                .unwrap();
+            let mut seq = snmr::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 3);
+            seq.sort_unstable();
+            seq.dedup();
+            assert_eq!(res.pair_set(), seq, "n={n} {}", strategy.name());
+        }
+    }
+}

@@ -46,6 +46,7 @@ fn random_config(rng: &mut Rng, entities: &[Entity]) -> SnConfig {
         blocking_key: Arc::new(TitlePrefixKey::new(2)),
         mode: SnMode::Blocking,
         sort_buffer_records: None,
+        balance: Default::default(),
     }
 }
 

@@ -50,6 +50,7 @@ fn multipass_concurrency_speedup_over_serial() {
         blocking_key: Arc::new(TitlePrefixKey::new(2)),
         mode: SnMode::Blocking,
         sort_buffer_records: None,
+        balance: Default::default(),
     };
     let keys: Vec<Arc<dyn BlockingKey>> = vec![
         Arc::new(TitlePrefixKey::new(1)),

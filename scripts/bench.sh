@@ -2,9 +2,12 @@
 # Run the perf-trajectory benches and leave their summaries at the repo
 # root (the bench binaries write to their working directory):
 #
-#   BENCH_engine.json — engine ablation (streaming shuffle, combiner)
-#   BENCH_skew.json   — fig9 skew ladder + speculation sweep + concurrent
-#                       multipass (scheduler vs serial)
+#   BENCH_engine.json  — engine ablation (streaming shuffle, combiner)
+#   BENCH_skew.json    — fig9 skew ladder + speculation sweep + concurrent
+#                        multipass (scheduler vs serial)
+#   BENCH_balance.json — speculation vs BlockSplit vs PairRange on a Zipf
+#                        block-key corpus (max-reduce-task pair counts,
+#                        identical outputs asserted in the bench itself)
 #
 # Extra flags are forwarded to the engine bench, e.g.:
 #
@@ -16,9 +19,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo bench --bench engine_ablation -- "$@"
-cargo bench --bench fig9_skew -- --n "${SKEW_N:-5000}" --window "${SKEW_W:-30}" --zipf "${SKEW_ZIPF:-1.2}"
+cargo bench --bench fig9_skew -- --n "${SKEW_N:-5000}" --window "${SKEW_W:-30}" --zipf "${SKEW_ZIPF:-1.2}" --balance-zipf "${BALANCE_ZIPF:-1.5}"
 
-for f in BENCH_engine.json BENCH_skew.json; do
+for f in BENCH_engine.json BENCH_skew.json BENCH_balance.json; do
   if [[ -f "rust/$f" ]]; then
     # cargo may run the bench with the crate dir as cwd; always take the
     # fresh summary over any stale root-level copy
