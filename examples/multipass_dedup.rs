@@ -59,6 +59,7 @@ fn main() -> anyhow::Result<()> {
         mode: SnMode::Matching(MatchStrategyConfig::default()),
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     };
     let keys: Vec<Arc<dyn BlockingKey>> = vec![
         Arc::new(TitlePrefixKey::new(2)),

@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         mode: SnMode::Matching(MatchStrategyConfig::default()),
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     };
     let t0 = std::time::Instant::now();
     let result = repsn::run(&corpus.entities, &cfg)?;

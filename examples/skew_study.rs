@@ -23,10 +23,18 @@
 //! outputs are asserted identical and the max-reduce-task pair counts are
 //! reported side by side — the load-balancing smoke test CI runs.
 //!
+//! With `--sort-buffer N`, every ladder configuration is additionally
+//! re-run **disk-backed**: sealed map-side runs spill through the codec
+//! layer into DEFLATE-compressed run files under a temp spill dir, the
+//! pair digests are asserted identical to the in-memory runs, and the
+//! compressed-vs-raw shuffle ratio is reported — the spill smoke test CI
+//! runs.
+//!
 //! ```bash
 //! cargo run --release --example skew_study -- --n 20000
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --speculative
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --balance blocksplit
+//! cargo run --release --example skew_study -- --n 2000 --window 20 --sort-buffer 64
 //! ```
 
 use std::sync::Arc;
@@ -38,12 +46,13 @@ use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
 use snmr::mapreduce::counters::names;
 use snmr::mapreduce::scheduler::{JobScheduler, SchedulerConfig};
 use snmr::mapreduce::sim::{simulate_job_chain, ClusterSpec};
+use snmr::mapreduce::TempSpillDir;
 use snmr::metrics::report::{write_report, Table};
 use snmr::sn::balance::{balanced_from_histogram, key_histogram_job, pair_balanced_min_size};
 use snmr::sn::loadbalance::{counter_names as balance_counters, reduce_pair_skew, BalanceStrategy};
 use snmr::sn::partition::{gini, partition_sizes, EvenPartition, PartitionFn};
 use snmr::sn::repsn;
-use snmr::sn::types::{SnConfig, SnMode, SnResult};
+use snmr::sn::types::{SnConfig, SnMode, SnResult, SnSpill};
 use snmr::util::cli::{flag, switch, Args};
 use snmr::util::json::Json;
 
@@ -77,6 +86,10 @@ fn main() -> anyhow::Result<()> {
                 "balance",
                 "also run the load-balancing study with this strategy (blocksplit|pairrange)",
             ),
+            flag(
+                "sort-buffer",
+                "also re-run the ladder disk-backed + compressed with this sort budget",
+            ),
         ],
         false,
     )
@@ -84,6 +97,10 @@ fn main() -> anyhow::Result<()> {
     let n = args.get_usize("n", 20_000).map_err(anyhow::Error::msg)?;
     let window = args.get_usize("window", 100).map_err(anyhow::Error::msg)?;
     let speculative = args.get_bool("speculative");
+    let sort_buffer = match args.get("sort-buffer") {
+        None => None,
+        Some(_) => Some(args.get_usize("sort-buffer", 64).map_err(anyhow::Error::msg)?),
+    };
     let balance = match args.get("balance") {
         None => None,
         Some(s) => Some(
@@ -144,6 +161,7 @@ fn main() -> anyhow::Result<()> {
         mode: SnMode::Blocking,
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     };
 
     let mut table = Table::new(
@@ -250,6 +268,7 @@ fn main() -> anyhow::Result<()> {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: strategy,
+            spill: None,
         };
         let unbalanced = repsn::run(&bal_entities, &cfg(BalanceStrategy::None))?;
         let (unb_max, unb_total) = reduce_pair_skew(&unbalanced.stats[0]);
@@ -285,6 +304,42 @@ fn main() -> anyhow::Result<()> {
             "{}: hottest reduce task {unb_max} → {max_task} pairs ({:.1}× flatter), same output.",
             strategy.name(),
             unb_max as f64 / max_task.max(1) as f64
+        );
+    }
+
+    if let Some(budget) = sort_buffer {
+        // Disk-backed re-run: the whole ladder again with a tiny sort
+        // budget and DEFLATE-compressed run files — output digests must
+        // match the in-memory runs exactly (the spill smoke test CI runs).
+        println!("\n--- disk-backed re-run: sort budget {budget}, DEFLATE run files ---");
+        let spill_dir = TempSpillDir::new("skew-study")?;
+        let mut t4 = Table::new(
+            &format!("Disk-backed ladder (sort buffer {budget} records, compressed)"),
+            &["p", "identical", "run_files", "shuffle_raw_b", "shuffle_comp_b", "ratio"],
+        );
+        for ((name, p, entities), digest) in configs.iter().zip(&digests) {
+            let mut cfg = sn_cfg(p);
+            cfg.sort_buffer_records = Some(budget);
+            cfg.spill = Some(SnSpill::new(spill_dir.path()));
+            let res = repsn::run(entities, &cfg)?;
+            let identical = pair_digest(&res) == *digest;
+            assert!(identical, "{name}: disk-backed output diverged from in-memory");
+            let raw = res.counters.get(names::SHUFFLE_BYTES_RAW);
+            let comp = res.counters.get(names::SHUFFLE_BYTES);
+            assert!(comp < raw, "{name}: compression did not shrink the shuffle");
+            t4.row(vec![
+                name.clone(),
+                identical.to_string(),
+                res.counters.get(names::SPILLED_RUNS).to_string(),
+                raw.to_string(),
+                comp.to_string(),
+                format!("{:.2}", comp as f64 / raw.max(1) as f64),
+            ]);
+        }
+        println!("{}", t4.render());
+        println!(
+            "all ladder runs disk-backed with compressed intermediates:\n\
+             outputs identical, SHUFFLE_BYTES < SHUFFLE_BYTES_RAW."
         );
     }
     Ok(())

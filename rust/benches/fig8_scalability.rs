@@ -77,6 +77,7 @@ fn main() -> anyhow::Result<()> {
             },
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         };
         eprintln!("w={w}: running RepSN...");
         let t0 = std::time::Instant::now();

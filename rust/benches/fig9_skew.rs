@@ -132,6 +132,7 @@ fn main() -> anyhow::Result<()> {
             mode: SnMode::Matching(MatchStrategyConfig::default()),
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         };
         eprintln!("running RepSN with {name} (g={g:.2})...");
         let res = repsn::run(entities, &cfg)?;
@@ -182,6 +183,7 @@ fn main() -> anyhow::Result<()> {
         mode: SnMode::Matching(MatchStrategyConfig::default()),
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     };
     let zipf_res = repsn::run(&zipf_entities, &zipf_cfg)?;
     let mut t_spec = Table::new(
@@ -248,6 +250,7 @@ fn main() -> anyhow::Result<()> {
         mode: SnMode::Blocking,
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     };
     eprintln!("running multipass: serial baseline...");
     let t0 = Instant::now();
@@ -330,6 +333,7 @@ fn main() -> anyhow::Result<()> {
         mode: SnMode::Blocking,
         sort_buffer_records: None,
         balance: strategy,
+        spill: None,
     };
     let cluster8 = ClusterSpec::paper_like(8);
     let mut t_bal = Table::new(

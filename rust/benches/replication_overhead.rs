@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
                 mode: SnMode::Blocking,
                 sort_buffer_records: None,
                 balance: Default::default(),
+                spill: None,
             };
             let srp_res = srp::run(&corpus.entities, &cfg)?;
             let rep_res = repsn::run(&corpus.entities, &cfg)?;

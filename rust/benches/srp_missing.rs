@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
                 mode: SnMode::Blocking,
                 sort_buffer_records: None,
                 balance: Default::default(),
+                spill: None,
             };
             let seq_pairs = seq::run_blocking(&corpus.entities, &bk, w).len();
             let srp_pairs = srp::run(&corpus.entities, &cfg)?.pair_set().len();

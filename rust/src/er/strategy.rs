@@ -6,11 +6,12 @@
 //! non-match", with the §5.1 instantiation (edit distance on title,
 //! TriGram on abstract, weighted average, τ = 0.75).
 //!
-//! [`MatchStrategy`] wraps a [`PairScorer`] backend and adds the batcher
-//! that the SN reducers feed candidate pairs into: pairs accumulate until
-//! the backend's preferred batch size is reached, then are scored in one
-//! dispatch (this is what amortizes the PJRT call overhead for the XLA
-//! backend — see EXPERIMENTS.md §Perf for the batch-size sweep).
+//! [`MatchStrategyConfig`] wraps a [`PairScorer`] backend and
+//! [`PairBatcher`] adds the batcher that the SN reducers feed candidate
+//! pairs into: pairs accumulate until the backend's preferred batch size
+//! is reached, then are scored in one dispatch (this is what amortizes
+//! the PJRT call overhead for the XLA backend — see EXPERIMENTS.md §Perf
+//! for the batch-size sweep).
 
 use std::sync::Arc;
 

@@ -170,6 +170,7 @@ mod tests {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         }
     }
 

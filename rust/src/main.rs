@@ -207,6 +207,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         mode: Default::default(),
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {
@@ -261,6 +262,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         mode: Default::default(),
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {

@@ -1,5 +1,7 @@
 //! Job configuration.
 
+use super::sortspill::SpillSpec;
+
 /// Configuration for one MapReduce job, mirroring the Hadoop knobs the
 //  paper sets in §5.1.
 #[derive(Debug, Clone)]
@@ -32,6 +34,15 @@ pub struct JobConfig {
     /// per bucket, not per task: a map task holds up to `n` records in
     /// the emitter plus `n` unsorted per reduce partition.
     pub sort_buffer_records: Option<usize>,
+    /// Disk-backed intermediates: when set, every sealed (and combined)
+    /// map-side run is serialized through the spec's
+    /// [`Codec`](crate::mapreduce::sortspill::Codec) into a run file —
+    /// optionally whole-run DEFLATE-compressed, like the paper's cluster
+    /// config — and the reduce-side k-way merge streams the files back.
+    /// `SHUFFLE_BYTES` then reports the on-disk (compressed) volume, with
+    /// `SHUFFLE_BYTES_RAW` / `SPILL_BYTES_WRITTEN` / `SPILLED_RUNS`
+    /// alongside.  `None` (default) keeps runs in memory.
+    pub spill: Option<SpillSpec>,
 }
 
 impl Default for JobConfig {
@@ -46,6 +57,7 @@ impl Default for JobConfig {
             sim_job_setup_s: 6.0,
             record_task_timings: true,
             sort_buffer_records: None,
+            spill: None,
         }
     }
 }
@@ -76,6 +88,14 @@ impl JobConfig {
         self.sort_buffer_records = records.map(|n| n.max(1));
         self
     }
+
+    /// Set (or clear) disk-backed intermediates.  The spec's codec must
+    /// encode the job's `(KT, VT)` intermediate pairs — the engine panics
+    /// at job start on a type mismatch.
+    pub fn with_spill(mut self, spill: Option<SpillSpec>) -> Self {
+        self.spill = spill;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -98,6 +118,18 @@ mod tests {
         assert_eq!(c.sort_buffer_records, Some(1));
         let c = c.with_sort_buffer(None);
         assert_eq!(c.sort_buffer_records, None);
+    }
+
+    #[test]
+    fn spill_builder_sets_and_clears() {
+        use crate::mapreduce::sortspill::{SpillSpec, StringPairCodec};
+        use std::sync::Arc;
+        let spec = SpillSpec::new::<(String, String)>("/tmp/spill", Arc::new(StringPairCodec));
+        assert!(spec.compress(), "compression defaults on");
+        let c = JobConfig::default().with_spill(Some(spec));
+        assert!(c.spill.is_some());
+        let c = c.with_spill(None);
+        assert!(c.spill.is_none());
     }
 
     #[test]

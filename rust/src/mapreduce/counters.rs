@@ -21,7 +21,18 @@ pub mod names {
     pub const MAP_INPUT_RECORDS: &str = "engine.map_input_records";
     pub const MAP_OUTPUT_RECORDS: &str = "engine.map_output_records";
     pub const MAP_OUTPUT_BYTES: &str = "engine.map_output_bytes";
+    /// Intermediate bytes handed to the shuffle.  On the in-memory path
+    /// this is the size estimate of every run; with
+    /// [`JobConfig::spill`](crate::mapreduce::JobConfig::spill) set it is
+    /// the **on-disk run-file volume** — compressed when the spec
+    /// compresses, matching the paper's cluster config where reported
+    /// intermediate volumes are compressed bytes.
     pub const SHUFFLE_BYTES: &str = "engine.shuffle_bytes";
+    /// Pre-compression estimate of the same intermediate bytes; equals
+    /// `SHUFFLE_BYTES` on the in-memory path, exceeds it when spill
+    /// compression is on (`SHUFFLE_BYTES / SHUFFLE_BYTES_RAW` is the
+    /// compression ratio the benches report).
+    pub const SHUFFLE_BYTES_RAW: &str = "engine.shuffle_bytes_raw";
     pub const REDUCE_GROUPS: &str = "engine.reduce_groups";
     pub const REDUCE_INPUT_RECORDS: &str = "engine.reduce_input_records";
     pub const REDUCE_OUTPUT_RECORDS: &str = "engine.reduce_output_records";
@@ -29,6 +40,11 @@ pub mod names {
     /// Sorted runs sealed map-side (1 per bucket without a sort budget;
     /// one per sealed chunk with one).
     pub const MAP_SPILL_RUNS: &str = "engine.map_spill_runs";
+    /// Run files written to disk (only present on spill-configured jobs).
+    pub const SPILLED_RUNS: &str = "engine.spilled_runs";
+    /// Bytes written to spill run files, post-compression (only present
+    /// on spill-configured jobs).
+    pub const SPILL_BYTES_WRITTEN: &str = "engine.spill_bytes_written";
     /// Records entering / leaving the map-side combiner (only present
     /// when the job registers one).
     pub const COMBINE_INPUT_RECORDS: &str = "engine.combine_input_records";

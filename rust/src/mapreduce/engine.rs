@@ -29,7 +29,7 @@ use super::combiner::{combine_sorted_bucket, Combiner};
 use super::config::JobConfig;
 use super::counters::{names, Counters};
 use super::shuffle::MergeIter;
-use super::sortspill::RunSorter;
+use super::sortspill::{ResolvedSpill, Run, RunRecords, RunSorter};
 use super::splits::even_splits;
 use super::types::{
     Emitter, MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate, ValuesIter,
@@ -56,9 +56,21 @@ pub struct JobStats {
     /// Wall time of each reduce task, in seconds, indexed by partition.
     /// Includes that reducer's k-way merge, which streams inside the task.
     pub reduce_task_secs: Vec<f64>,
-    /// Estimated intermediate bytes routed to each reduce partition
-    /// (post-combine when a combiner is registered).
+    /// Intermediate bytes routed to each reduce partition (post-combine
+    /// when a combiner is registered): the size estimate on the in-memory
+    /// path, the on-disk (possibly compressed) run-file bytes when
+    /// [`JobConfig::spill`] is set.
     pub shuffle_bytes_per_reducer: Vec<u64>,
+    /// Pre-compression estimate of the total intermediate bytes
+    /// (`SHUFFLE_BYTES_RAW`); equals the `shuffle_bytes_per_reducer` sum
+    /// on the in-memory path.
+    pub shuffle_bytes_raw: u64,
+    /// Bytes written to spill run files (0 on the in-memory path).
+    pub spill_bytes_written: u64,
+    /// True when intermediate runs were spilled DEFLATE-compressed — the
+    /// signal [`JobProfile`](crate::mapreduce::sim::JobProfile) uses to
+    /// charge (de)compression CPU in the simulator.
+    pub intermediate_compressed: bool,
     /// Wall time of the whole map phase (tasks + sort), reduce phase
     /// (merge + reduce), and the driver's shuffle transpose, as executed
     /// on the real worker pool.
@@ -130,27 +142,39 @@ where
 
 /// Everything one map task hands to the shuffle, plus its measurements.
 pub(crate) struct MapTaskOutput<KT, VT> {
-    /// Sorted runs per reduce partition: one run per bucket without a
-    /// sort budget, one per sealed chunk with one.
-    pub bucket_runs: Vec<Vec<Vec<(KT, VT)>>>,
-    /// Post-combine intermediate bytes per reduce partition.
+    /// Sorted runs per reduce partition — in-memory or codec-serialized
+    /// run files ([`Run`]): one run per bucket without a sort budget, one
+    /// per sealed chunk with one.
+    pub bucket_runs: Vec<Vec<Run<(KT, VT)>>>,
+    /// Post-combine intermediate bytes per reduce partition, as the
+    /// shuffle charges them: the size estimate in memory, the on-disk
+    /// (possibly compressed) run-file bytes when spilled.
     pub bucket_bytes: Vec<u64>,
+    /// Pre-compression size estimate per reduce partition.
+    pub bucket_raw_bytes: Vec<u64>,
     pub secs: f64,
     pub records: u64,
     pub bytes: u64,
     pub spilled: u64,
     pub spill_runs: u64,
+    /// Run files written / bytes written to disk (0 without a spill spec).
+    pub spill_file_runs: u64,
+    pub spill_file_bytes: u64,
     pub combine_in: u64,
     pub combine_out: u64,
 }
 
 /// Execute one map task over one owned split: `configure` → `map`* →
 /// `close`, draining emitted records into per-partition [`RunSorter`]s,
-/// then pre-reducing each sealed run with the optional combiner.
+/// pre-reducing each sealed run with the optional combiner, then — when
+/// `spill` is set — serializing every run to disk through the codec so
+/// the task's intermediates leave memory before the shuffle.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn exec_map_task<KI, VI, KT, VT>(
     split: Vec<(KI, VI)>,
     r: usize,
     sort_budget: Option<usize>,
+    spill: Option<&ResolvedSpill<(KT, VT)>>,
     mapper: &dyn MapTaskFactory<KI, VI, KT, VT>,
     partitioner: &dyn Partitioner<KT>,
     combine_fn: Option<&CombineFn<KT, VT>>,
@@ -182,16 +206,16 @@ where
     records += drain_emitter(&mut out, partitioner, r, &mut sorters);
     let bytes = out.bytes();
 
-    let mut bucket_runs: Vec<Vec<Vec<(KT, VT)>>> = Vec::with_capacity(r);
+    let mut mem_bucket_runs: Vec<Vec<Vec<(KT, VT)>>> = Vec::with_capacity(r);
     let mut spill_runs = 0u64;
     for s in sorters {
         let runs = s.into_runs();
         spill_runs += runs.len() as u64;
-        bucket_runs.push(runs);
+        mem_bucket_runs.push(runs);
     }
     let (mut combine_in, mut combine_out) = (0u64, 0u64);
     if let Some(cf) = combine_fn {
-        for runs in &mut bucket_runs {
+        for runs in &mut mem_bucket_runs {
             for run in runs.iter_mut() {
                 let (ci, co) = cf(run, counters);
                 combine_in += ci;
@@ -200,7 +224,7 @@ where
         }
     }
     let mut spilled = 0u64;
-    let bucket_bytes: Vec<u64> = bucket_runs
+    let bucket_raw_bytes: Vec<u64> = mem_bucket_runs
         .iter()
         .map(|runs| {
             runs.iter()
@@ -209,19 +233,51 @@ where
                 .sum()
         })
         .collect();
-    for runs in &bucket_runs {
+    for runs in &mem_bucket_runs {
         for run in runs {
             spilled += run.len() as u64;
+        }
+    }
+
+    // hand each sorted (and combined) run to the shuffle — in memory, or
+    // serialized to disk through the codec when a spill spec is set
+    let mut spill_file_runs = 0u64;
+    let mut spill_file_bytes = 0u64;
+    let mut bucket_runs: Vec<Vec<Run<(KT, VT)>>> = Vec::with_capacity(r);
+    let mut bucket_bytes: Vec<u64> = Vec::with_capacity(r);
+    for (b, runs) in mem_bucket_runs.into_iter().enumerate() {
+        match spill {
+            None => {
+                bucket_bytes.push(bucket_raw_bytes[b]);
+                bucket_runs.push(runs.into_iter().map(Run::Mem).collect());
+            }
+            Some(sp) => {
+                let mut buf = sp.buffer(key_cmp::<KT, VT>);
+                for run in runs {
+                    buf.push_run(run)
+                        .unwrap_or_else(|e| panic!("spill map run: {e:#}"));
+                }
+                spill_file_bytes += buf.spilled_bytes;
+                spill_file_runs += buf.run_count() as u64;
+                bucket_bytes.push(buf.spilled_bytes);
+                bucket_runs.push(
+                    buf.into_runs()
+                        .unwrap_or_else(|e| panic!("seal spill runs: {e:#}")),
+                );
+            }
         }
     }
     MapTaskOutput {
         bucket_runs,
         bucket_bytes,
+        bucket_raw_bytes,
         secs: t0.elapsed().as_secs_f64(),
         records,
         bytes,
         spilled,
         spill_runs,
+        spill_file_runs,
+        spill_file_bytes,
         combine_in,
         combine_out,
     }
@@ -235,11 +291,12 @@ pub(crate) struct ReduceTaskOutput<KO, VO> {
     pub in_records: u64,
 }
 
-/// Execute one reduce task: lazily k-way-merge `runs` and walk
-/// grouping-comparator groups straight off the heap, buffering only the
-/// current group's values.
+/// Execute one reduce task: lazily k-way-merge `runs` — in-memory and
+/// spilled run files stream identically through [`Run::into_records`] —
+/// and walk grouping-comparator groups straight off the heap, buffering
+/// only the current group's values.
 pub(crate) fn exec_reduce_task<KT, VT, KO, VO>(
-    runs: Vec<Vec<(KT, VT)>>,
+    runs: Vec<Run<(KT, VT)>>,
     reducer: &dyn ReduceTaskFactory<KT, VT, KO, VO>,
     grouping: &(dyn Fn(&KT, &KT) -> bool + Send + Sync),
     counters: &Counters,
@@ -250,7 +307,8 @@ where
     VO: SizeEstimate,
 {
     let t0 = Instant::now();
-    let mut merge = MergeIter::new(runs);
+    let sources: Vec<RunRecords<(KT, VT)>> = runs.into_iter().map(Run::into_records).collect();
+    let mut merge = MergeIter::from_iters(sources);
     let in_records = merge.len() as u64;
     let mut task = reducer.create_task();
     let mut out = Emitter::new();
@@ -301,26 +359,35 @@ pub(crate) fn split_input<KI, VI>(input: Vec<(KI, VI)>, m: usize) -> Vec<Vec<(KI
 
 /// The shuffle transpose: reducer `j` receives every map task's bucket-`j`
 /// runs, appended in map-task order (the merge's stability contract).  No
-/// record is touched.  Returns `(per_reducer_runs, shuffle_bytes)`.
+/// record is touched — spilled runs move as file handles.  Returns
+/// `(per_reducer_runs, shuffle_bytes, shuffle_bytes_raw)`.
 #[allow(clippy::type_complexity)]
 pub(crate) fn transpose_runs<KT, VT>(
     map_outputs: Vec<MapTaskOutput<KT, VT>>,
     r: usize,
-) -> (Vec<Vec<Vec<(KT, VT)>>>, Vec<u64>) {
-    let mut per_reducer_runs: Vec<Vec<Vec<(KT, VT)>>> = (0..r).map(|_| Vec::new()).collect();
+) -> (Vec<Vec<Run<(KT, VT)>>>, Vec<u64>, Vec<u64>) {
+    let mut per_reducer_runs: Vec<Vec<Run<(KT, VT)>>> = (0..r).map(|_| Vec::new()).collect();
     let mut shuffle_bytes = vec![0u64; r];
+    let mut shuffle_bytes_raw = vec![0u64; r];
     for mo in map_outputs {
         let MapTaskOutput {
             bucket_runs,
             bucket_bytes,
+            bucket_raw_bytes,
             ..
         } = mo;
-        for (j, (runs, b)) in bucket_runs.into_iter().zip(bucket_bytes).enumerate() {
+        for (j, ((runs, b), raw)) in bucket_runs
+            .into_iter()
+            .zip(bucket_bytes)
+            .zip(bucket_raw_bytes)
+            .enumerate()
+        {
             shuffle_bytes[j] += b;
+            shuffle_bytes_raw[j] += raw;
             per_reducer_runs[j].extend(runs);
         }
     }
-    (per_reducer_runs, shuffle_bytes)
+    (per_reducer_runs, shuffle_bytes, shuffle_bytes_raw)
 }
 
 /// Fold a finished map wave's measurements into the job counters; returns
@@ -339,6 +406,14 @@ pub(crate) fn record_map_wave<KT, VT>(
         names::MAP_SPILL_RUNS,
         outs.iter().map(|o| o.spill_runs).sum(),
     );
+    let file_runs: u64 = outs.iter().map(|o| o.spill_file_runs).sum();
+    if file_runs > 0 {
+        counters.add(names::SPILLED_RUNS, file_runs);
+        counters.add(
+            names::SPILL_BYTES_WRITTEN,
+            outs.iter().map(|o| o.spill_file_bytes).sum(),
+        );
+    }
     if has_combiner {
         counters.add(
             names::COMBINE_INPUT_RECORDS,
@@ -454,6 +529,10 @@ where
     let m = config.num_map_tasks;
     let r = config.num_reduce_tasks;
     let sort_budget = config.sort_buffer_records;
+    // resolve the type-erased spill codec once per job (panics on a codec
+    // built for different record types — a wiring bug, not a data error)
+    let spill: Option<ResolvedSpill<(KT, VT)>> = config.spill.as_ref().map(|s| s.resolve());
+    let compressed_spill = config.spill.as_ref().map(|s| s.compress()).unwrap_or(false);
 
     // ---- split ------------------------------------------------------------
     counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
@@ -470,11 +549,13 @@ where
         let partitioner = Arc::clone(&partitioner);
         let counters = Arc::clone(&counters);
         let combine_fn = combine_fn.clone();
+        let spill = spill.clone();
         run_owned(config.workers, splits, move |_i, split: Vec<(KI, VI)>| {
             exec_map_task(
                 split,
                 r,
                 sort_budget,
+                spill.as_ref(),
                 mapper.as_ref(),
                 partitioner.as_ref(),
                 combine_fn.as_ref(),
@@ -490,14 +571,18 @@ where
         ..Default::default()
     };
     stats.map_output_records = record_map_wave(&counters, &map_outputs, combine_fn.is_some());
+    stats.spill_bytes_written = map_outputs.iter().map(|o| o.spill_file_bytes).sum();
 
     // ---- shuffle -----------------------------------------------------------
     // Transpose run ownership only — the k-way merge itself streams inside
     // each reduce task below.
     let t_shuffle = Instant::now();
-    let (per_reducer_runs, shuffle_bytes) = transpose_runs(map_outputs, r);
+    let (per_reducer_runs, shuffle_bytes, shuffle_bytes_raw) = transpose_runs(map_outputs, r);
     counters.add(names::SHUFFLE_BYTES, shuffle_bytes.iter().sum());
+    counters.add(names::SHUFFLE_BYTES_RAW, shuffle_bytes_raw.iter().sum());
     stats.shuffle_bytes_per_reducer = shuffle_bytes;
+    stats.shuffle_bytes_raw = shuffle_bytes_raw.iter().sum();
+    stats.intermediate_compressed = compressed_spill && stats.spill_bytes_written > 0;
     stats.shuffle_phase_secs = t_shuffle.elapsed().as_secs_f64();
 
     // ---- reduce phase --------------------------------------------------
@@ -513,7 +598,7 @@ where
         run_owned(
             config.workers,
             per_reducer_runs,
-            move |_j, runs: Vec<Vec<(KT, VT)>>| {
+            move |_j, runs: Vec<Run<(KT, VT)>>| {
                 exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &counters)
             },
         )
@@ -857,5 +942,105 @@ mod tests {
             "expected chunked spill runs: {spill_runs} vs {base_runs}"
         );
         assert_eq!(spilled.counters.get(names::SPILLED_RECORDS), 600);
+    }
+
+    /// The disk-backed data path: identical outputs, honest spill
+    /// counters, and `SHUFFLE_BYTES` reporting on-disk volume.
+    #[test]
+    fn disk_backed_runs_are_output_equivalent() {
+        use crate::mapreduce::sortspill::{Codec, KeyValueCodec, SpillSpec, TempSpillDir, U64Codec};
+        let (input, mapper, reducer) = histogram_fixtures();
+        let dir = TempSpillDir::new("engine-disk").unwrap();
+        let codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+        let base_cfg = JobConfig::named("disk")
+            .with_tasks(4, 3)
+            .with_workers(2)
+            .with_sort_buffer(Some(16));
+        let disk_cfg = base_cfg
+            .clone()
+            .with_spill(Some(SpillSpec::new(dir.path(), codec)));
+        let mem = run_job(
+            &base_cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer.clone(),
+        );
+        let disk = run_job(
+            &disk_cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer,
+        );
+        assert_eq!(mem.outputs, disk.outputs);
+        // every sealed run became a run file
+        assert_eq!(
+            disk.counters.get(names::SPILLED_RUNS),
+            disk.counters.get(names::MAP_SPILL_RUNS)
+        );
+        assert!(disk.counters.get(names::SPILL_BYTES_WRITTEN) > 0);
+        // the raw estimate matches the in-memory accounting; the charged
+        // shuffle volume is the on-disk bytes
+        assert_eq!(
+            disk.counters.get(names::SHUFFLE_BYTES_RAW),
+            mem.counters.get(names::SHUFFLE_BYTES)
+        );
+        assert_eq!(
+            disk.counters.get(names::SHUFFLE_BYTES),
+            disk.counters.get(names::SPILL_BYTES_WRITTEN)
+        );
+        assert!(disk.stats.intermediate_compressed);
+        assert_eq!(disk.stats.spill_bytes_written, disk.counters.get(names::SPILL_BYTES_WRITTEN));
+        // in-memory jobs report raw == charged
+        assert_eq!(
+            mem.counters.get(names::SHUFFLE_BYTES_RAW),
+            mem.counters.get(names::SHUFFLE_BYTES)
+        );
+        assert_eq!(mem.counters.get(names::SPILLED_RUNS), 0);
+        assert!(!mem.stats.intermediate_compressed);
+    }
+
+    /// A combiner composes with the disk-backed path: runs are combined
+    /// *before* serialization, so spilled bytes reflect combined records.
+    #[test]
+    fn combiner_runs_before_spill_serialization() {
+        use crate::mapreduce::sortspill::{Codec, KeyValueCodec, SpillSpec, TempSpillDir, U64Codec};
+        let (input, mapper, reducer) = histogram_fixtures();
+        let dir = TempSpillDir::new("engine-comb").unwrap();
+        let codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+        let cfg = JobConfig::named("disk-comb")
+            .with_tasks(4, 2)
+            .with_workers(2)
+            .with_spill(Some(SpillSpec::new(dir.path(), codec).with_compress(false)));
+        let combined = run_job_with_combiner(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer,
+            Arc::new(FnCombiner::new(|_k: &u64, vals: Vec<u64>, _c: &Counters| {
+                vec![vals.into_iter().sum()]
+            })),
+        );
+        // 4 tasks × ≤5 distinct keys, 16 encoded bytes per record + 9-byte
+        // run-file header: far below the 600-record uncombined volume
+        let combined_records = combined.counters.get(names::COMBINE_OUTPUT_RECORDS);
+        assert!(combined_records <= 20);
+        assert_eq!(
+            combined.counters.get(names::SHUFFLE_BYTES_RAW),
+            combined_records * 16
+        );
+        assert!(!combined.stats.intermediate_compressed, "compression off");
+        let total: u64 = combined
+            .outputs
+            .iter()
+            .flatten()
+            .map(|(_, c)| *c)
+            .sum();
+        assert_eq!(total, 600);
     }
 }

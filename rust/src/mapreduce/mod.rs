@@ -37,16 +37,41 @@
 //! 2. **Combine** — if the job registers a [`Combiner`], every sealed run
 //!    is pre-reduced in place before shuffling, shrinking
 //!    `SHUFFLE_BYTES` for associative aggregations.
-//! 3. **Shuffle transpose** — the driver only reassigns run *ownership*
-//!    (reducer `j` takes every map task's bucket-`j` runs, in map-task
-//!    order).  `shuffle_phase_secs` measures exactly this, so it no
-//!    longer hides a single-threaded merge stall between the two waves.
-//! 4. **Streaming reduce-side merge** — each reduce task lazily k-way
+//! 3. **Disk-backed, compressed runs** (optional) — with
+//!    [`JobConfig::spill`] set, every sealed (and combined) run is
+//!    serialized through a [`sortspill::Codec`] into a run file,
+//!    whole-run DEFLATE-compressed by default (the paper's cluster
+//!    compresses intermediates, §5.1).  The intermediate currency
+//!    becomes the either/or [`sortspill::Run`]: owned in-memory records
+//!    *or* a codec-serialized run file — both executors handle both
+//!    forms identically.  Map-side memory is released before the
+//!    shuffle; reduce-side, each run's (inflated) *bytes* are loaded
+//!    while its records decode lazily into the merge, so peak reduce
+//!    memory is one partition's byte volume rather than its decoded
+//!    record graph.  (True record-streaming reads from disk are the
+//!    remaining step to fully larger-than-RAM partitions.)
+//!    `SHUFFLE_BYTES` then reports the on-disk (compressed) volume;
+//!    `SHUFFLE_BYTES_RAW`, `SPILL_BYTES_WRITTEN` and `SPILLED_RUNS`
+//!    report the raw estimate and the spill I/O alongside.
+//! 4. **Shuffle transpose** — the driver only reassigns run *ownership*
+//!    (reducer `j` takes every map task's bucket-`j` runs — or their
+//!    file handles — in map-task order).  `shuffle_phase_secs` measures
+//!    exactly this, so it no longer hides a single-threaded merge stall
+//!    between the two waves.
+//! 5. **Streaming reduce-side merge** — each reduce task lazily k-way
 //!    merges its runs with [`shuffle::MergeIter`] and walks
 //!    grouping-comparator groups straight off the heap, buffering only
-//!    the current group's values.  The per-reducer merges therefore run
+//!    the current group's values.  Spilled runs stream through the same
+//!    merge via [`sortspill::RunRecords`] (one loaded run buffer each,
+//!    decoded record-by-record).  The per-reducer merges therefore run
 //!    in parallel on the worker pool, and reduce can start on the first
 //!    group before the last run is fully consumed.
+//!
+//! The cluster simulator charges the matching costs: a compressed
+//! profile shrinks the simulated shuffle and disk materialization but
+//! pays DEFLATE CPU ([`sim::JobProfile::compress_secs_per_mb`] /
+//! `decompress_secs_per_mb`) — the CPU-vs-network trade the paper's
+//! cluster config makes.
 //!
 //! Task inputs and results are handed to the worker pool through atomic
 //! index-owned slots ([`crate::util::threadpool::OnceSlots`]) — no shared
@@ -106,6 +131,9 @@ pub use counters::Counters;
 pub use engine::{run_job, run_job_with_combiner, JobResult, JobStats};
 pub use scheduler::{Exec, JobHandle, JobScheduler, SchedulerConfig, SpecPolicy};
 pub use shuffle::MergeIter;
+pub use sortspill::{
+    Codec, DeflateCodec, KeyValueCodec, SpillingBuffer, SpillSpec, StringPairCodec, TempSpillDir,
+};
 pub use types::{
     Emitter, FnMapTask, FnReduceTask, HashPartitioner, MapTask, MapTaskFactory, Partitioner,
     ReduceTask, ReduceTaskFactory, SizeEstimate, ValuesIter,

@@ -62,6 +62,7 @@ use super::engine::{
     MapTaskOutput, ReduceTaskOutput,
 };
 use super::sim::ClusterSpec;
+use super::sortspill::{ResolvedSpill, Run};
 use super::types::{MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate};
 use crate::util::threadpool::ThreadPool;
 
@@ -344,6 +345,11 @@ impl JobScheduler {
         let counters = Arc::new(Counters::new());
         let r = config.num_reduce_tasks;
         let sort_budget = config.sort_buffer_records;
+        // same spill plumbing as the serial driver: resolve the codec
+        // once, hand it to every map attempt (speculative clones write
+        // their own run files; only the winner's reach the shuffle)
+        let spill: Option<ResolvedSpill<(KT, VT)>> = config.spill.as_ref().map(|s| s.resolve());
+        let compressed_spill = config.spill.as_ref().map(|s| s.compress()).unwrap_or(false);
 
         counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
         let splits = split_input(input, config.num_map_tasks);
@@ -360,6 +366,7 @@ impl JobScheduler {
             let mapper = Arc::clone(&mapper);
             let partitioner = Arc::clone(&partitioner);
             let combine_fn = combine_fn.clone();
+            let spill = spill.clone();
             move |_i: usize, split: Arc<Vec<(KI, VI)>>| {
                 let local = Counters::new();
                 let split = Arc::try_unwrap(split).unwrap_or_else(|shared| (*shared).clone());
@@ -367,6 +374,7 @@ impl JobScheduler {
                     split,
                     r,
                     sort_budget,
+                    spill.as_ref(),
                     mapper.as_ref(),
                     partitioner.as_ref(),
                     combine_fn.as_ref(),
@@ -395,12 +403,16 @@ impl JobScheduler {
             ..Default::default()
         };
         stats.map_output_records = record_map_wave(&counters, &map_outputs, combine_fn.is_some());
+        stats.spill_bytes_written = map_outputs.iter().map(|o| o.spill_file_bytes).sum();
 
         // ---- shuffle transpose (driver-side, cheap) -----------------------
         let t_shuffle = Instant::now();
-        let (per_reducer_runs, shuffle_bytes) = transpose_runs(map_outputs, r);
+        let (per_reducer_runs, shuffle_bytes, shuffle_bytes_raw) = transpose_runs(map_outputs, r);
         counters.add(names::SHUFFLE_BYTES, shuffle_bytes.iter().sum());
+        counters.add(names::SHUFFLE_BYTES_RAW, shuffle_bytes_raw.iter().sum());
         stats.shuffle_bytes_per_reducer = shuffle_bytes;
+        stats.shuffle_bytes_raw = shuffle_bytes_raw.iter().sum();
+        stats.intermediate_compressed = compressed_spill && stats.spill_bytes_written > 0;
         stats.shuffle_phase_secs = t_shuffle.elapsed().as_secs_f64();
 
         // ---- reduce wave on the shared reduce slots -----------------------
@@ -408,7 +420,7 @@ impl JobScheduler {
         let reduce_attempt = {
             let reducer = Arc::clone(&reducer);
             let grouping = Arc::clone(&grouping);
-            move |_j: usize, runs: Arc<Vec<Vec<(KT, VT)>>>| {
+            move |_j: usize, runs: Arc<Vec<Run<(KT, VT)>>>| {
                 let local = Counters::new();
                 let runs = Arc::try_unwrap(runs).unwrap_or_else(|shared| (*shared).clone());
                 let out = exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &local);
@@ -603,6 +615,93 @@ mod tests {
         assert_eq!(
             serial.stats.reduce_output_records,
             scheduled.stats.reduce_output_records
+        );
+    }
+
+    #[test]
+    fn disk_backed_job_on_scheduler_matches_serial() {
+        use crate::mapreduce::sortspill::{Codec, KeyValueCodec, SpillSpec, TempSpillDir, U64Codec};
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        let dir = TempSpillDir::new("sched-disk").unwrap();
+        let codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+        let cfg = JobConfig::named("hist-disk")
+            .with_tasks(4, 3)
+            .with_workers(2)
+            .with_sort_buffer(Some(32))
+            .with_spill(Some(SpillSpec::new(dir.path(), codec)));
+        let serial = run_job(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        let scheduled = JobScheduler::with_slots(3).run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(serial.outputs, scheduled.outputs);
+        // run files and their contents are deterministic, so even the
+        // byte-level spill counters agree across executors
+        assert_eq!(serial.counters.snapshot(), scheduled.counters.snapshot());
+        assert!(serial.counters.get(names::SPILLED_RUNS) > 0);
+        assert_eq!(
+            serial.stats.spill_bytes_written,
+            scheduled.stats.spill_bytes_written
+        );
+    }
+
+    #[test]
+    fn speculation_composes_with_disk_backed_runs() {
+        use crate::mapreduce::sortspill::{Codec, KeyValueCodec, SpillSpec, TempSpillDir, U64Codec};
+        let input: Vec<((), u64)> = (0..8).map(|i| ((), i)).collect();
+        let mapper = Arc::new(FnMapTask::new(
+            |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                busy_wait(Duration::from_millis(if v == 7 { 120 } else { 1 }));
+                out.emit(v % 3, v);
+            },
+        ));
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(*k, vals.map(|v| *v).sum());
+            },
+        ));
+        let dir = TempSpillDir::new("sched-spec-disk").unwrap();
+        let codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+        let cfg = JobConfig::named("straggle-disk")
+            .with_tasks(8, 2)
+            .with_spill(Some(SpillSpec::new(dir.path(), codec)));
+        let plain = JobScheduler::with_slots(4).run(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        let spec = JobScheduler::new(SchedulerConfig::slots(4).with_speculation(true)).run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        // losing attempts' run files are discarded (and deleted); output
+        // and engine counters stay identical
+        assert_eq!(plain.outputs, spec.outputs);
+        assert_eq!(
+            plain.counters.get(names::SHUFFLE_BYTES),
+            spec.counters.get(names::SHUFFLE_BYTES)
+        );
+        assert_eq!(
+            plain.counters.get(names::SPILL_BYTES_WRITTEN),
+            spec.counters.get(names::SPILL_BYTES_WRITTEN)
         );
     }
 

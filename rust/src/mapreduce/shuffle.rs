@@ -9,7 +9,13 @@
 //! [`MergeIter`] is the streaming form: it holds only one parked value per
 //! run plus a heap of run heads, and yields `(key, value)` pairs lazily —
 //! the engine drives reduce groups directly off it, so the merged run is
-//! never materialized.  [`merge_sorted_runs`] is the materializing wrapper
+//! never materialized.  It is generic over the per-run record source: the
+//! in-memory default ([`MergeIter::new`] over `Vec` runs) and any
+//! [`ExactSizeIterator`] via [`MergeIter::from_iters`] — in particular the
+//! engine's [`RunRecords`](crate::mapreduce::sortspill::RunRecords), which
+//! decodes codec-serialized spill run files record-by-record, so the
+//! disk-backed data path streams through the *same* merge as the
+//! in-memory one.  [`merge_sorted_runs`] is the materializing wrapper
 //! (collect the iterator into a `Vec`), kept as the equivalence baseline
 //! for tests and the `engine_ablation` bench.
 
@@ -49,12 +55,17 @@ impl<K: Ord> Ord for Head<K> {
 
 /// Lazy k-way merge of key-sorted runs.
 ///
-/// Each inner `Vec` must already be sorted by `K`; the iterator yields a
+/// Each run source must already be sorted by `K`; the iterator yields a
 /// globally sorted stream, ties in key order keeping run-index order
-/// (stability).  Memory held beyond the input runs themselves is one
-/// parked value and one heap entry per run — O(k), not O(n).
-pub struct MergeIter<K: Ord, V> {
-    iters: Vec<std::vec::IntoIter<(K, V)>>,
+/// (stability).  Memory held beyond the run sources themselves is one
+/// parked value and one heap entry per run — O(k), not O(n).  The source
+/// type `I` defaults to owned `Vec` runs; [`MergeIter::from_iters`]
+/// accepts any exact-size record iterators (e.g. spill run-file readers).
+pub struct MergeIter<K: Ord, V, I = std::vec::IntoIter<(K, V)>>
+where
+    I: Iterator<Item = (K, V)>,
+{
+    iters: Vec<I>,
     heap: BinaryHeap<Head<K>>,
     pending: Vec<Option<V>>,
     remaining: usize,
@@ -62,9 +73,17 @@ pub struct MergeIter<K: Ord, V> {
 
 impl<K: Ord, V> MergeIter<K, V> {
     pub fn new(runs: Vec<Vec<(K, V)>>) -> Self {
-        let remaining: usize = runs.iter().map(|r| r.len()).sum();
-        let mut iters: Vec<std::vec::IntoIter<(K, V)>> =
-            runs.into_iter().map(|r| r.into_iter()).collect();
+        Self::from_iters(runs.into_iter().map(|r| r.into_iter()).collect())
+    }
+}
+
+impl<K: Ord, V, I> MergeIter<K, V, I>
+where
+    I: ExactSizeIterator<Item = (K, V)>,
+{
+    /// Merge arbitrary sorted record sources (one per run).
+    pub fn from_iters(mut iters: Vec<I>) -> Self {
+        let remaining: usize = iters.iter().map(|it| it.len()).sum();
         let mut heap = BinaryHeap::with_capacity(iters.len());
         let mut pending: Vec<Option<V>> = Vec::with_capacity(iters.len());
         for (i, it) in iters.iter_mut().enumerate() {
@@ -83,7 +102,10 @@ impl<K: Ord, V> MergeIter<K, V> {
     }
 }
 
-impl<K: Ord, V> Iterator for MergeIter<K, V> {
+impl<K: Ord, V, I> Iterator for MergeIter<K, V, I>
+where
+    I: Iterator<Item = (K, V)>,
+{
     type Item = (K, V);
 
     fn next(&mut self) -> Option<(K, V)> {
@@ -102,7 +124,7 @@ impl<K: Ord, V> Iterator for MergeIter<K, V> {
     }
 }
 
-impl<K: Ord, V> ExactSizeIterator for MergeIter<K, V> {}
+impl<K: Ord, V, I> ExactSizeIterator for MergeIter<K, V, I> where I: Iterator<Item = (K, V)> {}
 
 /// K-way merge of key-sorted runs into one materialized `Vec` (the
 /// pre-streaming data path, byte-identical to draining a [`MergeIter`]).
@@ -155,6 +177,34 @@ mod tests {
         assert_eq!(it.len(), 2);
         assert_eq!(it.size_hint(), (2, Some(2)));
         assert_eq!(it.by_ref().count(), 2);
+    }
+
+    #[test]
+    fn merge_streams_spilled_run_files_identically() {
+        use crate::mapreduce::sortspill::{Codec, Run, RunFile, StringPairCodec, TempSpillDir};
+        use std::sync::Arc;
+        let dir = TempSpillDir::new("shuffle").unwrap();
+        let codec: Arc<dyn Codec<(String, String)>> = Arc::new(StringPairCodec);
+        let mk = |pairs: &[(&str, &str)]| -> Vec<(String, String)> {
+            pairs
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect()
+        };
+        let runs = vec![
+            mk(&[("a", "1"), ("a", "2"), ("c", "3")]),
+            mk(&[("a", "4"), ("b", "5")]),
+            mk(&[]),
+        ];
+        let spilled: Vec<_> = runs
+            .iter()
+            .map(|r| {
+                Run::Spilled(RunFile::write(dir.path(), Arc::clone(&codec), true, r).unwrap())
+                    .into_records()
+            })
+            .collect();
+        let streamed: Vec<_> = MergeIter::from_iters(spilled).collect();
+        assert_eq!(streamed, merge_sorted_runs(runs));
     }
 
     #[test]

@@ -98,24 +98,60 @@ impl ClusterSpec {
     }
 }
 
+/// DEFLATE (`Compression::fast`) throughput on 2007-era cluster cores,
+/// as seconds per raw megabyte — the CPU price the simulator charges for
+/// compressed intermediates ([`JobProfile::compress_secs_per_mb`]).
+/// Compression is the expensive side; inflate runs ~3× faster.
+pub const DEFLATE_COMPRESS_SECS_PER_MB: f64 = 1.0 / 90.0;
+pub const DEFLATE_DECOMPRESS_SECS_PER_MB: f64 = 1.0 / 250.0;
+
 /// Measured inputs for one job (taken from `JobStats` of a `workers = 1`
 /// engine run, so task times are interference-free).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct JobProfile {
     pub map_task_secs: Vec<f64>,
     pub reduce_task_secs: Vec<f64>,
+    /// Per-reducer intermediate bytes as shuffled over the network —
+    /// compressed bytes when the engine ran with a compressing spill spec
+    /// (the paper's cluster config reports compressed volumes too).
     pub shuffle_bytes_per_reducer: Vec<u64>,
     /// Total map-output bytes (materialized to local disk before shuffle).
     pub map_output_bytes: u64,
+    /// Bytes the engine actually wrote to spill run files (0 when the run
+    /// kept its intermediates in memory).  When set, this — the measured
+    /// on-disk volume, compressed or not — is the materialization basis
+    /// instead of the `map_output_bytes` estimate.
+    pub spill_bytes_written: u64,
+    /// Pre-compression intermediate bytes — the volume the (de)compression
+    /// CPU charges apply to.  0 disables both charges.
+    pub shuffle_bytes_raw: u64,
+    /// CPU seconds per raw MB spent compressing map-side (0 = uncompressed
+    /// intermediates).
+    pub compress_secs_per_mb: f64,
+    /// CPU seconds per raw MB spent inflating reduce-side.
+    pub decompress_secs_per_mb: f64,
 }
 
 impl JobProfile {
+    /// Build from measured engine stats.  When the run spilled compressed
+    /// intermediates, the DEFLATE rate constants are charged; the
+    /// CPU-vs-network trade (smaller `shuffle_bytes_per_reducer`, added
+    /// compress/decompress seconds) is then visible in [`simulate_job`].
     pub fn from_stats(stats: &crate::mapreduce::engine::JobStats, map_output_bytes: u64) -> Self {
+        let (compress, decompress) = if stats.intermediate_compressed {
+            (DEFLATE_COMPRESS_SECS_PER_MB, DEFLATE_DECOMPRESS_SECS_PER_MB)
+        } else {
+            (0.0, 0.0)
+        };
         Self {
             map_task_secs: stats.map_task_secs.clone(),
             reduce_task_secs: stats.reduce_task_secs.clone(),
             shuffle_bytes_per_reducer: stats.shuffle_bytes_per_reducer.clone(),
             map_output_bytes,
+            spill_bytes_written: stats.spill_bytes_written,
+            shuffle_bytes_raw: stats.shuffle_bytes_raw,
+            compress_secs_per_mb: compress,
+            decompress_secs_per_mb: decompress,
         }
     }
 }
@@ -126,7 +162,12 @@ pub struct SimBreakdown {
     pub setup_s: f64,
     pub map_s: f64,
     pub materialize_s: f64,
+    /// Map-side DEFLATE CPU over the raw intermediate volume, spread over
+    /// the map slots (0 for uncompressed intermediates).
+    pub compress_s: f64,
     pub shuffle_s: f64,
+    /// Reduce-side inflate CPU, spread over the reduce slots.
+    pub decompress_s: f64,
     pub reduce_s: f64,
     /// Speculative clones launched / won across both waves (0 with the
     /// `speculative` knob off).
@@ -136,7 +177,13 @@ pub struct SimBreakdown {
 
 impl SimBreakdown {
     pub fn total(&self) -> f64 {
-        self.setup_s + self.map_s + self.materialize_s + self.shuffle_s + self.reduce_s
+        self.setup_s
+            + self.map_s
+            + self.materialize_s
+            + self.compress_s
+            + self.shuffle_s
+            + self.decompress_s
+            + self.reduce_s
     }
 }
 
@@ -348,12 +395,30 @@ pub fn fit_secs_per_pair(reduce_task_secs: &[f64], pairs_per_task: &[u64]) -> f6
 }
 
 /// Simulate one MapReduce job on a cluster.
+///
+/// With a compressed-intermediates profile
+/// ([`JobProfile::compress_secs_per_mb`] > 0) the model exposes the
+/// CPU-vs-network trade: `shuffle_bytes_per_reducer` are already the
+/// smaller compressed volumes, and the raw volume is charged once at the
+/// compress rate across the map slots and once at the decompress rate
+/// across the reduce slots.
 pub fn simulate_job(profile: &JobProfile, spec: &ClusterSpec) -> SimBreakdown {
     let map_wave = wave_schedule(&profile.map_task_secs, spec.map_slots().max(1), spec);
     // map outputs written to local disk once (sort spill), read once at
-    // shuffle: 2 passes over the bytes at aggregate disk bandwidth
+    // shuffle: 2 passes over the bytes at aggregate disk bandwidth.  A
+    // disk-backed run reports the bytes it *actually* wrote (compressed
+    // or not); otherwise the size estimate stands in.
     let disk_agg = spec.disk_bytes_per_s * spec.nodes as f64;
-    let materialize_s = 2.0 * profile.map_output_bytes as f64 / disk_agg;
+    let materialized_bytes = if profile.spill_bytes_written > 0 {
+        profile.spill_bytes_written
+    } else {
+        profile.map_output_bytes
+    };
+    let materialize_s = 2.0 * materialized_bytes as f64 / disk_agg;
+    // (de)compression CPU: DEFLATE runs on the same cores as the tasks,
+    // parallel across slots, so the wall charge is volume / slots
+    let raw_mb = profile.shuffle_bytes_raw as f64 / 1e6;
+    let compress_s = raw_mb * profile.compress_secs_per_mb / spec.map_slots().max(1) as f64;
     // shuffle: every reducer pulls its bytes over its node's NIC; reducers
     // run spread over nodes, so the bottleneck is the max per-node inflow
     let reduce_slots = spec.reduce_slots().max(1);
@@ -365,12 +430,15 @@ pub fn simulate_job(profile: &JobProfile, spec: &ClusterSpec) -> SimBreakdown {
         .iter()
         .map(|&b| b as f64 / spec.net_bytes_per_s)
         .fold(0.0, f64::max);
+    let decompress_s = raw_mb * profile.decompress_secs_per_mb / reduce_slots as f64;
     let reduce_wave = wave_schedule(&profile.reduce_task_secs, reduce_slots, spec);
     SimBreakdown {
         setup_s: spec.job_setup_s,
         map_s: map_wave.makespan,
         materialize_s,
+        compress_s,
         shuffle_s,
+        decompress_s,
         reduce_s: reduce_wave.makespan,
         speculative_launched: map_wave.speculative_launched + reduce_wave.speculative_launched,
         speculative_won: map_wave.speculative_won + reduce_wave.speculative_won,
@@ -427,6 +495,7 @@ mod tests {
             reduce_task_secs: vec![10.0; 8],
             shuffle_bytes_per_reducer: vec![1_000_000; 8],
             map_output_bytes: 8_000_000,
+            ..Default::default()
         };
         let t1 = simulate_job(&profile, &ClusterSpec::paper_like(1)).total();
         let t8 = simulate_job(&profile, &ClusterSpec::paper_like(8)).total();
@@ -441,7 +510,7 @@ mod tests {
             map_task_secs: vec![1.0],
             reduce_task_secs: vec![1.0],
             shuffle_bytes_per_reducer: vec![0],
-            map_output_bytes: 0,
+            ..Default::default()
         };
         let spec = ClusterSpec::paper_like(2);
         let (_, one) = simulate_job_chain(std::slice::from_ref(&p), &spec);
@@ -544,7 +613,7 @@ mod tests {
             map_task_secs: vec![4.0; 9],
             reduce_task_secs: vec![1.0; 4],
             shuffle_bytes_per_reducer: vec![0; 4],
-            map_output_bytes: 0,
+            ..Default::default()
         };
         let spec = ClusterSpec::paper_like(8)
             .with_slow_nodes(1, 4.0)
@@ -595,6 +664,61 @@ mod tests {
         assert_eq!(t_spec.speculative_won, 0);
     }
 
+    /// The CPU-vs-network trade: compressed intermediates shrink the
+    /// shuffle but pay (de)compression CPU.  On a slow network the trade
+    /// wins; the CPU charges are visible either way.
+    #[test]
+    fn compression_trades_cpu_for_network() {
+        let raw_bytes = 800_000_000u64; // 100 MB per reducer, raw
+        let mk = |compressed: bool| {
+            let per_reducer = if compressed {
+                raw_bytes / 8 / 4 // 4:1 DEFLATE ratio
+            } else {
+                raw_bytes / 8
+            };
+            JobProfile {
+                map_task_secs: vec![10.0; 8],
+                reduce_task_secs: vec![10.0; 8],
+                shuffle_bytes_per_reducer: vec![per_reducer; 8],
+                map_output_bytes: raw_bytes,
+                spill_bytes_written: if compressed { per_reducer * 8 } else { 0 },
+                shuffle_bytes_raw: raw_bytes,
+                compress_secs_per_mb: if compressed {
+                    DEFLATE_COMPRESS_SECS_PER_MB
+                } else {
+                    0.0
+                },
+                decompress_secs_per_mb: if compressed {
+                    DEFLATE_DECOMPRESS_SECS_PER_MB
+                } else {
+                    0.0
+                },
+            }
+        };
+        let spec = ClusterSpec::paper_like(8);
+        let raw = simulate_job(&mk(false), &spec);
+        let comp = simulate_job(&mk(true), &spec);
+        assert_eq!(raw.compress_s, 0.0);
+        assert_eq!(raw.decompress_s, 0.0);
+        assert!(comp.compress_s > 0.0 && comp.decompress_s > 0.0);
+        assert!(
+            comp.shuffle_s < raw.shuffle_s / 3.0,
+            "compressed shuffle must move ~4x fewer bytes"
+        );
+        // on the paper's GbE cluster the saved network time beats the
+        // DEFLATE CPU for a 4:1 corpus
+        assert!(
+            comp.total() < raw.total(),
+            "compression should win on GbE: {:.2} vs {:.2}",
+            comp.total(),
+            raw.total()
+        );
+        // compress charge halves when map slots double (it runs in the
+        // task slots, not on a global core)
+        let comp16 = simulate_job(&mk(true), &ClusterSpec::paper_like(16));
+        assert!(comp16.compress_s < comp.compress_s);
+    }
+
     #[test]
     fn fit_secs_per_pair_round_trips() {
         let pairs = [100u64, 300, 50];
@@ -606,12 +730,7 @@ mod tests {
 
     #[test]
     fn empty_profile_is_setup_only() {
-        let p = JobProfile {
-            map_task_secs: vec![],
-            reduce_task_secs: vec![],
-            shuffle_bytes_per_reducer: vec![],
-            map_output_bytes: 0,
-        };
+        let p = JobProfile::default();
         let spec = ClusterSpec::paper_like(4);
         let b = simulate_job(&p, &spec);
         assert!((b.total() - spec.job_setup_s).abs() < 1e-9);

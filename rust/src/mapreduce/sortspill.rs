@@ -1,31 +1,64 @@
 //! Map-side external sort: bounded sort buffers with sealed sorted runs
 //! (Hadoop's `io.sort.mb` mechanism, the source of the "spilled records"
-//! counter).
+//! counter) — plus the codec layer that lets those runs live on disk as
+//! (optionally DEFLATE-compressed) **run files**.
 //!
-//! Two layers live here:
+//! Layers, bottom-up:
 //!
-//! * [`RunSorter`] — the bounded buffer the engine's map tasks sort
-//!   through when [`crate::mapreduce::JobConfig::sort_buffer_records`] is
-//!   set: records accumulate up to the budget, each full chunk is
-//!   stable-sorted and sealed as one run, and the reducer-side streaming
-//!   merge ([`crate::mapreduce::shuffle::MergeIter`]) consumes the runs
-//!   directly — the map side never sorts (or holds a sort of) more than
-//!   `budget` records at once.
-//! * [`SpillingBuffer`] — the on-disk variant for codec-serializable
-//!   records: sealed runs are written as (optionally DEFLATE-compressed)
-//!   segments, giving the honest I/O cost the cluster simulator charges
-//!   for materialization.  Records are serialized through a user
-//!   [`Codec`] (the offline crate set has no serde).
+//! * [`Codec`] — binary record serialization (the offline crate set has no
+//!   serde).  Primitive codecs ([`StringCodec`], [`U32Codec`],
+//!   [`U64Codec`], [`StringPairCodec`]) compose through
+//!   [`KeyValueCodec`] for the engine's generic `(K, V)` intermediate
+//!   pairs, and [`DeflateCodec`] wraps any inner codec with per-record
+//!   DEFLATE for large payloads.
+//! * [`RunFile`] — one sorted run serialized to disk, whole-run DEFLATE
+//!   optional (the paper's cluster compresses intermediates, §5.1).  The
+//!   file is deleted when the last [`RunFile`] handle drops;
+//!   [`RunFile::iter`] yields records lazily off the loaded byte buffer,
+//!   which is what the shuffle's streaming
+//!   [`MergeIter`](crate::mapreduce::shuffle::MergeIter) consumes.
+//! * [`Run`] — the engine's either/or intermediate run: owned in-memory
+//!   records or a codec-serialized run file.  Every run handed to the
+//!   shuffle is one of these; the reduce-side k-way merge streams both
+//!   forms identically through [`Run::into_records`].
+//! * [`RunSorter`] — the bounded in-memory buffer the engine's map tasks
+//!   sort through when [`crate::mapreduce::JobConfig::sort_buffer_records`]
+//!   is set: records accumulate up to the budget, each full chunk is
+//!   stable-sorted and sealed as one run.
+//! * [`SpillingBuffer`] — RunSorter's disk-backed sibling: sealed runs are
+//!   written as [`RunFile`]s instead of staying resident, giving the
+//!   honest I/O cost the cluster simulator charges for materialization.
+//! * [`SpillSpec`] — the type-erased `(codec, directory, compress)` triple
+//!   [`crate::mapreduce::JobConfig::spill`] carries through the
+//!   non-generic job config into the generic engine.
+//! * [`TempSpillDir`] — RAII spill directory for tests/benches: unique per
+//!   construction (pid + process-wide counter), removed on drop, so
+//!   parallel `cargo test` runs cannot collide.
 
+use std::any::Any;
+use std::cmp::Ordering;
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
 use flate2::read::DeflateDecoder;
 use flate2::write::DeflateEncoder;
 use flate2::Compression;
+
+/// Process-wide sequence for unique spill file / directory names.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn next_seq() -> u64 {
+    SPILL_SEQ.fetch_add(1, AtomicOrdering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// RunSorter: bounded in-memory sort with sealed runs
+// ---------------------------------------------------------------------------
 
 /// A bounded in-memory sorter producing sealed sorted runs.
 ///
@@ -37,7 +70,7 @@ use flate2::Compression;
 /// tie-break contract the shuffle merge's run-index ordering preserves.
 pub struct RunSorter<T, C>
 where
-    C: Fn(&T, &T) -> std::cmp::Ordering,
+    C: Fn(&T, &T) -> Ordering,
 {
     budget: usize,
     buffer: Vec<T>,
@@ -47,7 +80,7 @@ where
 
 impl<T, C> RunSorter<T, C>
 where
-    C: Fn(&T, &T) -> std::cmp::Ordering,
+    C: Fn(&T, &T) -> Ordering,
 {
     /// `budget` is the maximum records held unsorted at once (clamped to
     /// at least 1); pass `usize::MAX` to sort everything in one run.
@@ -88,10 +121,69 @@ where
     }
 }
 
+// ---------------------------------------------------------------------------
+// Codecs
+// ---------------------------------------------------------------------------
+
 /// Binary codec for spill records.
 pub trait Codec<T>: Send + Sync {
     fn encode(&self, t: &T, out: &mut Vec<u8>);
     fn decode(&self, cur: &mut &[u8]) -> Result<T>;
+}
+
+/// Decode a length-prefixed UTF-8 string off a cursor (the one string
+/// framing every codec in the crate shares — see also `sn::codec`).
+pub(crate) fn decode_string(cur: &mut &[u8]) -> Result<String> {
+    let len = cur.read_u32::<LittleEndian>()? as usize;
+    anyhow::ensure!(cur.len() >= len, "truncated spill record");
+    let (head, rest) = cur.split_at(len);
+    let s = std::str::from_utf8(head)?.to_string();
+    *cur = rest;
+    Ok(s)
+}
+
+pub(crate) fn encode_string(s: &str, out: &mut Vec<u8>) {
+    out.write_u32::<LittleEndian>(s.len() as u32).unwrap();
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Codec for length-prefixed UTF-8 `String`s.
+pub struct StringCodec;
+
+impl Codec<String> for StringCodec {
+    fn encode(&self, t: &String, out: &mut Vec<u8>) {
+        encode_string(t, out);
+    }
+
+    fn decode(&self, cur: &mut &[u8]) -> Result<String> {
+        decode_string(cur)
+    }
+}
+
+/// Codec for `u32` (little-endian).
+pub struct U32Codec;
+
+impl Codec<u32> for U32Codec {
+    fn encode(&self, t: &u32, out: &mut Vec<u8>) {
+        out.write_u32::<LittleEndian>(*t).unwrap();
+    }
+
+    fn decode(&self, cur: &mut &[u8]) -> Result<u32> {
+        Ok(cur.read_u32::<LittleEndian>()?)
+    }
+}
+
+/// Codec for `u64` (little-endian).
+pub struct U64Codec;
+
+impl Codec<u64> for U64Codec {
+    fn encode(&self, t: &u64, out: &mut Vec<u8>) {
+        out.write_u64::<LittleEndian>(*t).unwrap();
+    }
+
+    fn decode(&self, cur: &mut &[u8]) -> Result<u64> {
+        Ok(cur.read_u64::<LittleEndian>()?)
+    }
 }
 
 /// Codec for `(String, String)` pairs (length-prefixed UTF-8).
@@ -99,33 +191,537 @@ pub struct StringPairCodec;
 
 impl Codec<(String, String)> for StringPairCodec {
     fn encode(&self, t: &(String, String), out: &mut Vec<u8>) {
-        out.write_u32::<LittleEndian>(t.0.len() as u32).unwrap();
-        out.extend_from_slice(t.0.as_bytes());
-        out.write_u32::<LittleEndian>(t.1.len() as u32).unwrap();
-        out.extend_from_slice(t.1.as_bytes());
+        encode_string(&t.0, out);
+        encode_string(&t.1, out);
     }
 
     fn decode(&self, cur: &mut &[u8]) -> Result<(String, String)> {
-        let take = |cur: &mut &[u8]| -> Result<String> {
-            let len = cur.read_u32::<LittleEndian>()? as usize;
-            anyhow::ensure!(cur.len() >= len, "truncated spill record");
-            let (head, rest) = cur.split_at(len);
-            let s = std::str::from_utf8(head)?.to_string();
-            *cur = rest;
-            Ok(s)
-        };
-        Ok((take(cur)?, take(cur)?))
+        Ok((decode_string(cur)?, decode_string(cur)?))
     }
 }
+
+/// Compose two codecs into a codec for the engine's generic `(K, V)`
+/// intermediate pairs — the shape every
+/// [`JobConfig::spill`](crate::mapreduce::JobConfig::spill) codec has.
+pub struct KeyValueCodec<CK, CV> {
+    key: CK,
+    val: CV,
+}
+
+impl<CK, CV> KeyValueCodec<CK, CV> {
+    pub fn new(key: CK, val: CV) -> Self {
+        Self { key, val }
+    }
+}
+
+impl<K, V, CK, CV> Codec<(K, V)> for KeyValueCodec<CK, CV>
+where
+    CK: Codec<K>,
+    CV: Codec<V>,
+{
+    fn encode(&self, t: &(K, V), out: &mut Vec<u8>) {
+        self.key.encode(&t.0, out);
+        self.val.encode(&t.1, out);
+    }
+
+    fn decode(&self, cur: &mut &[u8]) -> Result<(K, V)> {
+        Ok((self.key.decode(cur)?, self.val.decode(cur)?))
+    }
+}
+
+/// Per-record DEFLATE over any inner codec: each record is encoded with
+/// the inner codec, deflated, and stored length-prefixed.  Worth it for
+/// large compressible payloads (entity abstracts); run files already
+/// apply whole-run DEFLATE, which compresses better for small records.
+pub struct DeflateCodec<C> {
+    inner: C,
+}
+
+impl<C> DeflateCodec<C> {
+    pub fn new(inner: C) -> Self {
+        Self { inner }
+    }
+}
+
+impl<T, C: Codec<T>> Codec<T> for DeflateCodec<C> {
+    fn encode(&self, t: &T, out: &mut Vec<u8>) {
+        let mut raw = Vec::new();
+        self.inner.encode(t, &mut raw);
+        let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(&raw).expect("in-memory deflate write");
+        let comp = enc.finish().expect("in-memory deflate finish");
+        out.write_u32::<LittleEndian>(comp.len() as u32).unwrap();
+        out.extend_from_slice(&comp);
+    }
+
+    fn decode(&self, cur: &mut &[u8]) -> Result<T> {
+        let len = cur.read_u32::<LittleEndian>()? as usize;
+        anyhow::ensure!(cur.len() >= len, "truncated deflate record");
+        let (head, rest) = cur.split_at(len);
+        let mut raw = Vec::new();
+        DeflateDecoder::new(head)
+            .read_to_end(&mut raw)
+            .context("inflate record")?;
+        *cur = rest;
+        let mut inner_cur = raw.as_slice();
+        let t = self.inner.decode(&mut inner_cur)?;
+        anyhow::ensure!(
+            inner_cur.is_empty(),
+            "trailing bytes after deflate record payload"
+        );
+        Ok(t)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Run files
+// ---------------------------------------------------------------------------
+
+/// Deletes the run file when the last handle drops.
+struct RunFileGuard {
+    path: PathBuf,
+}
+
+impl Drop for RunFileGuard {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// One sorted run serialized to disk.
+///
+/// Layout: `[compress: u8][records: u64 LE][payload]`, payload being the
+/// concatenated codec encodings, whole-run DEFLATE-compressed when the
+/// flag is set.  Handles are cheap to clone and share the underlying
+/// file; it is removed when the last handle drops (speculative task
+/// attempts may read the same run concurrently).
+pub struct RunFile<T> {
+    guard: Arc<RunFileGuard>,
+    codec: Arc<dyn Codec<T>>,
+    compressed: bool,
+    records: u64,
+    raw_bytes: u64,
+    file_bytes: u64,
+}
+
+impl<T> Clone for RunFile<T> {
+    fn clone(&self) -> Self {
+        Self {
+            guard: Arc::clone(&self.guard),
+            codec: Arc::clone(&self.codec),
+            compressed: self.compressed,
+            records: self.records,
+            raw_bytes: self.raw_bytes,
+            file_bytes: self.file_bytes,
+        }
+    }
+}
+
+impl<T> std::fmt::Debug for RunFile<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("RunFile")
+            .field("path", &self.guard.path)
+            .field("compressed", &self.compressed)
+            .field("records", &self.records)
+            .field("raw_bytes", &self.raw_bytes)
+            .field("file_bytes", &self.file_bytes)
+            .finish()
+    }
+}
+
+impl<T> RunFile<T> {
+    /// Serialize one sorted run into a fresh uniquely-named file under
+    /// `dir` (created on demand).  Records are encoded one at a time into
+    /// the (optionally compressing) writer, so peak memory is one encoded
+    /// record, not the whole run.
+    pub fn write(
+        dir: &Path,
+        codec: Arc<dyn Codec<T>>,
+        compress: bool,
+        records: &[T],
+    ) -> Result<Self> {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+        let path = dir.join(format!("run-{}-{}.seg", std::process::id(), next_seq()));
+        let file = File::create(&path).with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_u8(u8::from(compress))?;
+        w.write_u64::<LittleEndian>(records.len() as u64)?;
+        let mut raw_bytes = 0u64;
+        let mut scratch = Vec::new();
+        let mut encode_all = |sink: &mut dyn Write| -> Result<()> {
+            for t in records {
+                scratch.clear();
+                codec.encode(t, &mut scratch);
+                raw_bytes += scratch.len() as u64;
+                sink.write_all(&scratch)?;
+            }
+            Ok(())
+        };
+        if compress {
+            let mut enc = DeflateEncoder::new(&mut w, Compression::fast());
+            encode_all(&mut enc)?;
+            enc.finish()?;
+        } else {
+            encode_all(&mut w)?;
+        }
+        w.flush()?;
+        drop(w);
+        let file_bytes = std::fs::metadata(&path)?.len();
+        Ok(Self {
+            guard: Arc::new(RunFileGuard { path }),
+            codec,
+            compressed: compress,
+            records: records.len() as u64,
+            raw_bytes,
+            file_bytes,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.guard.path
+    }
+
+    /// Records in the run.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Encoded payload size before compression.
+    pub fn raw_bytes(&self) -> u64 {
+        self.raw_bytes
+    }
+
+    /// On-disk size (header + possibly compressed payload).
+    pub fn file_bytes(&self) -> u64 {
+        self.file_bytes
+    }
+
+    /// Load and (if compressed) inflate the payload.
+    fn load(&self) -> Result<Vec<u8>> {
+        let path = self.path();
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut reader = BufReader::new(file);
+        let compressed = reader.read_u8().context("run file header")? != 0;
+        let n = reader.read_u64::<LittleEndian>().context("run file header")?;
+        anyhow::ensure!(
+            n == self.records,
+            "run file {} header says {n} records, handle says {}",
+            path.display(),
+            self.records
+        );
+        let mut raw = Vec::new();
+        if compressed {
+            DeflateDecoder::new(reader)
+                .read_to_end(&mut raw)
+                .with_context(|| format!("inflate {}", path.display()))?;
+        } else {
+            reader.read_to_end(&mut raw)?;
+        }
+        Ok(raw)
+    }
+
+    /// A lazy record iterator over the loaded payload: holds the run's
+    /// *bytes*, decoding records one at a time as the shuffle merge pulls
+    /// them.  Fails here on I/O errors or a truncated compressed stream.
+    pub fn iter(&self) -> Result<RunFileIter<T>> {
+        Ok(RunFileIter {
+            buf: self.load()?,
+            pos: 0,
+            remaining: self.records as usize,
+            codec: Arc::clone(&self.codec),
+            origin: self.path().display().to_string(),
+        })
+    }
+
+    /// Decode every record, propagating codec/truncation errors (the
+    /// error-path API; the engine streams through [`Self::iter`]).
+    pub fn read_all(&self) -> Result<Vec<T>> {
+        let buf = self.load()?;
+        let mut cur = buf.as_slice();
+        let mut out = Vec::with_capacity(self.records as usize);
+        while !cur.is_empty() {
+            out.push(self.codec.decode(&mut cur)?);
+        }
+        anyhow::ensure!(
+            out.len() as u64 == self.records,
+            "run file {} decoded {} records, expected {}",
+            self.path().display(),
+            out.len(),
+            self.records
+        );
+        Ok(out)
+    }
+}
+
+/// Streaming decoder over one run file's loaded payload.
+pub struct RunFileIter<T> {
+    buf: Vec<u8>,
+    pos: usize,
+    remaining: usize,
+    codec: Arc<dyn Codec<T>>,
+    origin: String,
+}
+
+impl<T> Iterator for RunFileIter<T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let mut cur = &self.buf[self.pos..];
+        let before = cur.len();
+        // a record that fails to decode here was corrupted *after* a
+        // successful write — an engine invariant violation, not a
+        // recoverable condition
+        let t = self
+            .codec
+            .decode(&mut cur)
+            .unwrap_or_else(|e| panic!("corrupt spill run {}: {e}", self.origin));
+        self.pos += before - cur.len();
+        self.remaining -= 1;
+        Some(t)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl<T> ExactSizeIterator for RunFileIter<T> {}
+
+// ---------------------------------------------------------------------------
+// Run: the engine's in-memory / on-disk either-or
+// ---------------------------------------------------------------------------
+
+/// One sorted intermediate run, owned in memory or serialized on disk.
+///
+/// This is the engine's central intermediate currency: map tasks produce
+/// them, the shuffle transposes their *ownership*, and each reduce task's
+/// k-way merge streams them through [`Run::into_records`] — identically
+/// for both forms.
+#[derive(Debug, Clone)]
+pub enum Run<T> {
+    /// Owned in-memory records (the historical engine form).
+    Mem(Vec<T>),
+    /// A codec-serialized run file.
+    Spilled(RunFile<T>),
+}
+
+impl<T> Run<T> {
+    pub fn len(&self) -> usize {
+        match self {
+            Run::Mem(v) => v.len(),
+            Run::Spilled(f) => f.records() as usize,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stream the run's records.  Spilled runs load + inflate their bytes
+    /// here and decode lazily; failures at this point mean the spill file
+    /// vanished or was corrupted between map and reduce — fatal.
+    pub fn into_records(self) -> RunRecords<T> {
+        match self {
+            Run::Mem(v) => RunRecords::Mem(v.into_iter()),
+            Run::Spilled(f) => RunRecords::File(
+                f.iter()
+                    .unwrap_or_else(|e| panic!("open spill run {}: {e}", f.path().display())),
+            ),
+        }
+    }
+}
+
+/// Record iterator over either [`Run`] form.
+pub enum RunRecords<T> {
+    Mem(std::vec::IntoIter<T>),
+    File(RunFileIter<T>),
+}
+
+impl<T> Iterator for RunRecords<T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        match self {
+            RunRecords::Mem(it) => it.next(),
+            RunRecords::File(it) => it.next(),
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match self {
+            RunRecords::Mem(it) => it.size_hint(),
+            RunRecords::File(it) => it.size_hint(),
+        }
+    }
+}
+
+impl<T> ExactSizeIterator for RunRecords<T> {}
+
+// ---------------------------------------------------------------------------
+// SpillSpec: the type-erased plumbing through JobConfig
+// ---------------------------------------------------------------------------
+
+/// Disk-backing for a job's intermediate runs, carried by the non-generic
+/// [`JobConfig`](crate::mapreduce::JobConfig).
+///
+/// The codec is type-erased (`JobConfig` knows nothing about a job's
+/// `(KT, VT)`); the engine recovers it at job start and panics loudly if
+/// the spec was built for different record types — silently falling back
+/// to memory would misreport every spill counter.
+#[derive(Clone)]
+pub struct SpillSpec {
+    dir: PathBuf,
+    compress: bool,
+    codec: Arc<dyn Any + Send + Sync>,
+    codec_type: &'static str,
+}
+
+impl SpillSpec {
+    /// A spec spilling `(K, V)`-shaped records (whatever `T` the job's
+    /// intermediate pairs are) under `dir`, DEFLATE-compressed by default.
+    pub fn new<T: 'static>(dir: impl Into<PathBuf>, codec: Arc<dyn Codec<T>>) -> Self {
+        Self {
+            dir: dir.into(),
+            compress: true,
+            codec: Arc::new(codec),
+            codec_type: std::any::type_name::<T>(),
+        }
+    }
+
+    /// Toggle whole-run DEFLATE.
+    pub fn with_compress(mut self, on: bool) -> Self {
+        self.compress = on;
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn compress(&self) -> bool {
+        self.compress
+    }
+
+    /// Recover the typed codec.  Panics if the spec was built for a
+    /// different record type than the job's `(KT, VT)`.
+    pub(crate) fn resolve<T: 'static>(&self) -> ResolvedSpill<T> {
+        let codec = self
+            .codec
+            .downcast_ref::<Arc<dyn Codec<T>>>()
+            .unwrap_or_else(|| {
+                panic!(
+                    "spill codec mismatch: spec encodes {}, job intermediates are {}",
+                    self.codec_type,
+                    std::any::type_name::<T>()
+                )
+            })
+            .clone();
+        ResolvedSpill {
+            dir: self.dir.clone(),
+            compress: self.compress,
+            codec,
+        }
+    }
+}
+
+impl std::fmt::Debug for SpillSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SpillSpec")
+            .field("dir", &self.dir)
+            .field("compress", &self.compress)
+            .field("codec", &self.codec_type)
+            .finish()
+    }
+}
+
+/// A [`SpillSpec`] with its codec downcast to the job's record type.
+pub(crate) struct ResolvedSpill<T> {
+    pub dir: PathBuf,
+    pub compress: bool,
+    pub codec: Arc<dyn Codec<T>>,
+}
+
+impl<T> Clone for ResolvedSpill<T> {
+    fn clone(&self) -> Self {
+        Self {
+            dir: self.dir.clone(),
+            compress: self.compress,
+            codec: Arc::clone(&self.codec),
+        }
+    }
+}
+
+impl<T> ResolvedSpill<T> {
+    /// A [`SpillingBuffer`] under this spec — the engine creates one per
+    /// partition bucket and feeds it the [`RunSorter`]'s sealed (and
+    /// combined) runs via [`SpillingBuffer::push_run`].  The buffer's own
+    /// budget is unbounded: run sizes are already bounded upstream.
+    pub fn buffer(&self, cmp: fn(&T, &T) -> Ordering) -> SpillingBuffer<T> {
+        SpillingBuffer::new(
+            SpillConfig {
+                buffer_records: usize::MAX,
+                dir: self.dir.clone(),
+                compress: self.compress,
+            },
+            Arc::clone(&self.codec),
+            cmp,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TempSpillDir: RAII spill directories for tests and benches
+// ---------------------------------------------------------------------------
+
+/// A uniquely-named spill directory removed (recursively) on drop.
+///
+/// Uniqueness combines the process id with a process-wide counter, so
+/// parallel `cargo test` threads *and* concurrently running test binaries
+/// get disjoint directories.
+#[derive(Debug)]
+pub struct TempSpillDir {
+    path: PathBuf,
+}
+
+impl TempSpillDir {
+    /// Create `$TMPDIR/snmr-spill-<tag>-<pid>-<seq>`.
+    pub fn new(tag: &str) -> std::io::Result<Self> {
+        let path = std::env::temp_dir().join(format!(
+            "snmr-spill-{tag}-{}-{}",
+            std::process::id(),
+            next_seq()
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempSpillDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SpillConfig / SpillingBuffer
+// ---------------------------------------------------------------------------
 
 /// Spill configuration.
 #[derive(Debug, Clone)]
 pub struct SpillConfig {
     /// Max records buffered in memory before a spill (io.sort.mb proxy).
     pub buffer_records: usize,
-    /// Directory for spill segments (cleaned up on drop).
+    /// Directory for spill run files (each file is deleted when its last
+    /// [`RunFile`] handle drops).
     pub dir: PathBuf,
-    /// DEFLATE-compress segments (the paper compresses intermediates).
+    /// DEFLATE-compress run files (the paper compresses intermediates).
     pub compress: bool,
 }
 
@@ -139,28 +735,37 @@ impl SpillConfig {
     }
 }
 
-/// An external-sorting buffer for `(K, V)` records.
-pub struct SpillingBuffer<T, C> {
+/// An external-sorting buffer: records accumulate up to the budget, each
+/// full chunk is sorted and sealed to disk as one [`RunFile`].  The
+/// engine's map tasks route their sealed [`RunSorter`] runs through
+/// [`SpillingBuffer::push_run`] when
+/// [`JobConfig::spill`](crate::mapreduce::JobConfig::spill) is set; the
+/// standalone `push`/`into_sorted` path is the self-contained external
+/// sort used by tests and tools.
+pub struct SpillingBuffer<T> {
     config: SpillConfig,
-    codec: C,
+    codec: Arc<dyn Codec<T>>,
     buffer: Vec<T>,
-    segments: Vec<PathBuf>,
+    runs: Vec<RunFile<T>>,
     /// Total records spilled to disk (the Hadoop counter).
     pub spilled_records: u64,
-    /// Bytes written across all segments (compressed size).
+    /// Bytes written across all run files (on-disk, post-compression).
     pub spilled_bytes: u64,
-    cmp: fn(&T, &T) -> std::cmp::Ordering,
+    /// Encoded bytes before compression.
+    pub raw_bytes: u64,
+    cmp: fn(&T, &T) -> Ordering,
 }
 
-impl<T, C: Codec<T>> SpillingBuffer<T, C> {
-    pub fn new(config: SpillConfig, codec: C, cmp: fn(&T, &T) -> std::cmp::Ordering) -> Self {
+impl<T> SpillingBuffer<T> {
+    pub fn new(config: SpillConfig, codec: Arc<dyn Codec<T>>, cmp: fn(&T, &T) -> Ordering) -> Self {
         Self {
             config,
             codec,
             buffer: Vec::new(),
-            segments: Vec::new(),
+            runs: Vec::new(),
             spilled_records: 0,
             spilled_bytes: 0,
+            raw_bytes: 0,
             cmp,
         }
     }
@@ -174,66 +779,56 @@ impl<T, C: Codec<T>> SpillingBuffer<T, C> {
         Ok(())
     }
 
-    fn spill(&mut self) -> Result<()> {
+    /// Sort and seal the current buffer to disk (no-op when empty).
+    pub fn spill(&mut self) -> Result<()> {
         if self.buffer.is_empty() {
             return Ok(());
         }
         self.buffer.sort_by(self.cmp);
-        std::fs::create_dir_all(&self.config.dir)
-            .with_context(|| format!("mkdir {}", self.config.dir.display()))?;
-        let path = self
-            .config
-            .dir
-            .join(format!("spill-{}.seg", self.segments.len()));
-        let file = File::create(&path).with_context(|| format!("create {}", path.display()))?;
-        let mut raw = Vec::new();
-        for t in &self.buffer {
-            self.codec.encode(t, &mut raw);
+        let run = std::mem::take(&mut self.buffer);
+        self.push_run(run)
+    }
+
+    /// Seal one externally-sorted run straight to disk (the engine path:
+    /// [`RunSorter`] seals, the combiner folds, this writes).
+    pub fn push_run(&mut self, run: Vec<T>) -> Result<()> {
+        if run.is_empty() {
+            return Ok(());
         }
-        let mut w = BufWriter::new(file);
-        w.write_u8(u8::from(self.config.compress))?;
-        if self.config.compress {
-            let mut enc = DeflateEncoder::new(&mut w, Compression::fast());
-            enc.write_all(&raw)?;
-            enc.finish()?;
-        } else {
-            w.write_all(&raw)?;
-        }
-        w.flush()?;
-        self.spilled_records += self.buffer.len() as u64;
-        self.spilled_bytes += std::fs::metadata(&path)?.len();
-        self.segments.push(path);
-        self.buffer.clear();
+        let rf = RunFile::write(
+            &self.config.dir,
+            Arc::clone(&self.codec),
+            self.config.compress,
+            &run,
+        )?;
+        self.spilled_records += rf.records();
+        self.spilled_bytes += rf.file_bytes();
+        self.raw_bytes += rf.raw_bytes();
+        self.runs.push(rf);
         Ok(())
     }
 
-    /// Finish: merge all segments + the in-memory remainder into one
-    /// globally sorted `Vec` (streaming decode, heap merge).
+    /// Runs sealed so far, counting the unsealed remainder.
+    pub fn run_count(&self) -> usize {
+        self.runs.len() + usize::from(!self.buffer.is_empty())
+    }
+
+    /// Seal the remainder and hand every run file to the caller as
+    /// shuffle-ready [`Run::Spilled`]s, in seal order.
+    pub fn into_runs(mut self) -> Result<Vec<Run<T>>> {
+        self.spill()?;
+        Ok(self.runs.drain(..).map(Run::Spilled).collect())
+    }
+
+    /// Finish: merge all sealed runs + the in-memory remainder into one
+    /// globally sorted `Vec` (k-way head-slot merge, no `T: Ord` needed).
     pub fn into_sorted(mut self) -> Result<Vec<T>> {
         self.buffer.sort_by(self.cmp);
-        // decode every segment into a sorted run (segments are sorted)
-        let mut runs: Vec<Vec<T>> = Vec::with_capacity(self.segments.len() + 1);
-        for path in &self.segments {
-            let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
-            let mut reader = BufReader::new(file);
-            let compressed = reader.read_u8()? != 0;
-            let mut raw = Vec::new();
-            if compressed {
-                DeflateDecoder::new(reader).read_to_end(&mut raw)?;
-            } else {
-                reader.read_to_end(&mut raw)?;
-            }
-            let mut cur = raw.as_slice();
-            let mut run = Vec::new();
-            while !cur.is_empty() {
-                run.push(self.codec.decode(&mut cur)?);
-            }
-            runs.push(run);
+        let mut runs: Vec<Vec<T>> = Vec::with_capacity(self.runs.len() + 1);
+        for rf in &self.runs {
+            runs.push(rf.read_all()?);
         }
         runs.push(std::mem::take(&mut self.buffer));
-        // k-way merge over the (few) sorted runs without requiring
-        // `T: Ord`: park each run's head in a slot and repeatedly take
-        // the minimum (the shuffle merge's pending pattern).
         let cmp = self.cmp;
         let total: usize = runs.iter().map(|r| r.len()).sum();
         let mut iters: Vec<std::vec::IntoIter<T>> =
@@ -247,9 +842,7 @@ impl<T, C: Codec<T>> SpillingBuffer<T, C> {
                     best = match best {
                         None => Some(i),
                         Some(j) => {
-                            if cmp(h, heads[j].as_ref().unwrap())
-                                == std::cmp::Ordering::Less
-                            {
+                            if cmp(h, heads[j].as_ref().unwrap()) == Ordering::Less {
                                 Some(i)
                             } else {
                                 Some(j)
@@ -266,10 +859,6 @@ impl<T, C: Codec<T>> SpillingBuffer<T, C> {
                 }
             }
         }
-        // cleanup segments
-        for path in &self.segments {
-            let _ = std::fs::remove_file(path);
-        }
         Ok(out)
     }
 }
@@ -278,14 +867,12 @@ impl<T, C: Codec<T>> SpillingBuffer<T, C> {
 mod tests {
     use super::*;
 
-    fn tmpdir(tag: &str) -> PathBuf {
-        let d = std::env::temp_dir().join(format!("snmr_spill_{tag}_{}", std::process::id()));
-        std::fs::create_dir_all(&d).unwrap();
-        d
+    fn cmp(a: &(String, String), b: &(String, String)) -> Ordering {
+        a.cmp(b)
     }
 
-    fn cmp(a: &(String, String), b: &(String, String)) -> std::cmp::Ordering {
-        a.cmp(b)
+    fn string_pair_codec() -> Arc<dyn Codec<(String, String)>> {
+        Arc::new(StringPairCodec)
     }
 
     #[test]
@@ -319,8 +906,12 @@ mod tests {
 
     #[test]
     fn sorts_without_spilling() {
-        let dir = tmpdir("nospill");
-        let mut buf = SpillingBuffer::new(SpillConfig::new(&dir, 1000), StringPairCodec, cmp);
+        let dir = TempSpillDir::new("nospill").unwrap();
+        let mut buf = SpillingBuffer::new(
+            SpillConfig::new(dir.path(), 1000),
+            string_pair_codec(),
+            cmp,
+        );
         for k in ["c", "a", "b"] {
             buf.push((k.to_string(), "v".to_string())).unwrap();
         }
@@ -329,14 +920,17 @@ mod tests {
             out.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(),
             vec!["a", "b", "c"]
         );
-        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn spills_and_merges_correctly() {
         use crate::util::rng::Rng;
-        let dir = tmpdir("merge");
-        let mut buf = SpillingBuffer::new(SpillConfig::new(&dir, 100), StringPairCodec, cmp);
+        let dir = TempSpillDir::new("merge").unwrap();
+        let mut buf = SpillingBuffer::new(
+            SpillConfig::new(dir.path(), 100),
+            string_pair_codec(),
+            cmp,
+        );
         let mut rng = Rng::new(8);
         let mut expect = Vec::new();
         for i in 0..1000 {
@@ -352,16 +946,15 @@ mod tests {
         let out_keys: Vec<&String> = out.iter().map(|(k, _)| k).collect();
         let exp_keys: Vec<&String> = expect.iter().map(|(k, _)| k).collect();
         assert_eq!(out_keys, exp_keys);
-        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn compression_reduces_spill_bytes() {
-        let dir = tmpdir("codec");
+        let dir = TempSpillDir::new("codec").unwrap();
         let make = |compress: bool| {
-            let mut cfg = SpillConfig::new(&dir, 50);
+            let mut cfg = SpillConfig::new(dir.path(), 50);
             cfg.compress = compress;
-            let mut buf = SpillingBuffer::new(cfg, StringPairCodec, cmp);
+            let mut buf = SpillingBuffer::new(cfg, string_pair_codec(), cmp);
             for i in 0..500 {
                 buf.push((
                     format!("key{:04}", i % 10),
@@ -373,20 +966,170 @@ mod tests {
                 buf.spill().ok();
                 buf.spilled_bytes
             };
+            assert_eq!(buf.raw_bytes > bytes, compress);
             let _ = buf.into_sorted().unwrap();
             bytes
         };
         let raw = make(false);
         let comp = make(true);
         assert!(comp * 3 < raw, "compressed {comp} vs raw {raw}");
-        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn empty_buffer() {
-        let dir = tmpdir("empty");
-        let buf = SpillingBuffer::new(SpillConfig::new(&dir, 10), StringPairCodec, cmp);
+        let dir = TempSpillDir::new("empty").unwrap();
+        let buf = SpillingBuffer::new(
+            SpillConfig::new(dir.path(), 10),
+            string_pair_codec(),
+            cmp,
+        );
         assert!(buf.into_sorted().unwrap().is_empty());
-        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn into_runs_round_trips_through_run_files() {
+        let dir = TempSpillDir::new("intoruns").unwrap();
+        let mut buf = SpillingBuffer::new(
+            SpillConfig::new(dir.path(), 4),
+            string_pair_codec(),
+            cmp,
+        );
+        for i in 0..10 {
+            buf.push((format!("k{i:02}"), format!("v{i}"))).unwrap();
+        }
+        let runs = buf.into_runs().unwrap();
+        assert_eq!(runs.len(), 3); // 4 + 4 + 2
+        let total: usize = runs.iter().map(Run::len).sum();
+        assert_eq!(total, 10);
+        let all: Vec<(String, String)> = runs.into_iter().flat_map(Run::into_records).collect();
+        assert_eq!(all.len(), 10);
+        assert!(all.iter().any(|(k, _)| k == "k07"));
+    }
+
+    #[test]
+    fn run_file_iter_streams_exactly() {
+        let dir = TempSpillDir::new("iter").unwrap();
+        let recs: Vec<(String, String)> = (0..7)
+            .map(|i| (format!("k{i}"), format!("v{i}")))
+            .collect();
+        let rf = RunFile::write(dir.path(), string_pair_codec(), true, &recs).unwrap();
+        assert_eq!(rf.records(), 7);
+        assert!(rf.raw_bytes() > 0);
+        let it = rf.iter().unwrap();
+        assert_eq!(it.len(), 7);
+        let back: Vec<_> = it.collect();
+        assert_eq!(back, recs);
+        // second handle still reads after the first iterator is gone
+        assert_eq!(rf.read_all().unwrap(), recs);
+    }
+
+    #[test]
+    fn run_file_deleted_when_last_handle_drops() {
+        let dir = TempSpillDir::new("dropfile").unwrap();
+        let recs = vec![("a".to_string(), "b".to_string())];
+        let rf = RunFile::write(dir.path(), string_pair_codec(), false, &recs).unwrap();
+        let path = rf.path().to_path_buf();
+        let clone = rf.clone();
+        drop(rf);
+        assert!(path.exists(), "clone must keep the file alive");
+        drop(clone);
+        assert!(!path.exists(), "last drop must delete the file");
+    }
+
+    #[test]
+    fn truncated_run_file_is_an_error() {
+        let dir = TempSpillDir::new("trunc").unwrap();
+        let recs: Vec<(String, String)> = (0..50)
+            .map(|i| (format!("key{i:03}"), "some value text".to_string()))
+            .collect();
+        for compress in [true, false] {
+            let rf = RunFile::write(dir.path(), string_pair_codec(), compress, &recs).unwrap();
+            let bytes = std::fs::read(rf.path()).unwrap();
+            std::fs::write(rf.path(), &bytes[..bytes.len() / 2]).unwrap();
+            assert!(
+                rf.read_all().is_err(),
+                "truncated file (compress={compress}) must fail to decode"
+            );
+        }
+    }
+
+    #[test]
+    fn unwritable_spill_dir_is_an_error() {
+        // a *file* where the spill dir should be → create_dir_all fails
+        let dir = TempSpillDir::new("unwritable").unwrap();
+        let blocker = dir.path().join("not-a-dir");
+        std::fs::write(&blocker, b"file in the way").unwrap();
+        let mut buf = SpillingBuffer::new(
+            SpillConfig::new(&blocker, 1),
+            string_pair_codec(),
+            cmp,
+        );
+        let err = buf.push(("k".into(), "v".into()));
+        assert!(err.is_err(), "spilling into a non-directory must fail");
+    }
+
+    #[test]
+    fn temp_spill_dir_is_unique_and_cleaned_up() {
+        let a = TempSpillDir::new("uniq").unwrap();
+        let b = TempSpillDir::new("uniq").unwrap();
+        assert_ne!(a.path(), b.path());
+        let pa = a.path().to_path_buf();
+        std::fs::write(pa.join("junk"), b"x").unwrap();
+        drop(a);
+        assert!(!pa.exists(), "drop must remove the directory and contents");
+        assert!(b.path().exists());
+    }
+
+    #[test]
+    fn deflate_codec_roundtrip_property() {
+        use crate::util::rng::Rng;
+        let codec = DeflateCodec::new(StringPairCodec);
+        let mut rng = Rng::new(0xC0DEC);
+        for _ in 0..200 {
+            let klen = rng.below(40) as usize;
+            let vlen = rng.below(400) as usize;
+            let mk = |len: usize, rng: &mut Rng| -> String {
+                (0..len)
+                    .map(|_| char::from_u32(0x20 + rng.below(0x5e) as u32).unwrap())
+                    .collect()
+            };
+            let pair = (mk(klen, &mut rng), mk(vlen, &mut rng));
+            let mut buf = Vec::new();
+            codec.encode(&pair, &mut buf);
+            let mut cur = buf.as_slice();
+            let back = codec.decode(&mut cur).unwrap();
+            assert_eq!(back, pair, "decode∘encode must be identity");
+            assert!(cur.is_empty(), "decode must consume the record exactly");
+        }
+    }
+
+    #[test]
+    fn deflate_codec_rejects_truncation() {
+        let codec = DeflateCodec::new(StringPairCodec);
+        let mut buf = Vec::new();
+        codec.encode(&("key".to_string(), "value".repeat(50)), &mut buf);
+        let mut cur = &buf[..buf.len() - 3];
+        assert!(codec.decode(&mut cur).is_err());
+    }
+
+    #[test]
+    fn key_value_codec_composes() {
+        let codec = KeyValueCodec::new(U64Codec, KeyValueCodec::new(StringCodec, U32Codec));
+        let rec = (42u64, ("hello".to_string(), 7u32));
+        let mut buf = Vec::new();
+        codec.encode(&rec, &mut buf);
+        let mut cur = buf.as_slice();
+        assert_eq!(codec.decode(&mut cur).unwrap(), rec);
+        assert!(cur.is_empty());
+    }
+
+    #[test]
+    fn spill_spec_resolves_matching_type_only() {
+        let spec = SpillSpec::new::<(String, String)>("/tmp/x", Arc::new(StringPairCodec));
+        let _ok = spec.resolve::<(String, String)>();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            spec.resolve::<(u64, u64)>()
+        }));
+        assert!(r.is_err(), "mismatched codec type must panic");
     }
 }

@@ -470,6 +470,7 @@ mod tests {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         };
         let res = crate::sn::repsn::run(&entities, &cfg).unwrap();
         let mut expect = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), w);

@@ -1,0 +1,226 @@
+//! Codecs for the SN variants' intermediate record types, and the
+//! [`SpillSpec`] builders that plug them into the engine's disk-backed
+//! data path.
+//!
+//! Every SN MapReduce job shuffles one of a handful of `(key, value)`
+//! shapes; this module gives each shape a [`Codec`] so
+//! [`SnConfig::spill`](crate::sn::types::SnConfig) can route the *whole*
+//! SN family — SRP, JobSN (both phases), RepSN, standard blocking,
+//! multipass, and the loadbalance BDM + repartition pipeline — through
+//! codec-serialized, optionally DEFLATE-compressed run files:
+//!
+//! | job                          | intermediate `(K, V)`          | spec builder            |
+//! |------------------------------|--------------------------------|-------------------------|
+//! | SRP / JobSN p1 / RepSN       | `(SnKey, Arc<Entity>)`         | [`entity_job_spec`]     |
+//! | JobSN phase 2                | `(SnKey, (u32, Arc<Entity>))`  | [`boundary_job_spec`]   |
+//! | standard blocking            | `(String, Arc<Entity>)`        | [`block_job_spec`]      |
+//! | BlockSplit / PairRange       | `(SnKey, Ranked)`              | [`ranked_job_spec`]     |
+//! | BDM analysis                 | `((String, u32), u64)`         | [`bdm_job_spec`]        |
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
+
+use crate::er::entity::Entity;
+use crate::mapreduce::sortspill::{
+    decode_string, encode_string, Codec, KeyValueCodec, SpillSpec, StringCodec, U32Codec, U64Codec,
+};
+use crate::sn::loadbalance::Ranked;
+use crate::sn::types::{SnKey, SnSpill};
+
+/// Codec for the composite [`SnKey`]: `bound`, `part`, blocking key, id.
+pub struct SnKeyCodec;
+
+impl Codec<SnKey> for SnKeyCodec {
+    fn encode(&self, t: &SnKey, out: &mut Vec<u8>) {
+        out.write_u32::<LittleEndian>(t.bound).unwrap();
+        out.write_u32::<LittleEndian>(t.part).unwrap();
+        encode_string(&t.key, out);
+        out.write_u64::<LittleEndian>(t.id).unwrap();
+    }
+
+    fn decode(&self, cur: &mut &[u8]) -> Result<SnKey> {
+        Ok(SnKey {
+            bound: cur.read_u32::<LittleEndian>()?,
+            part: cur.read_u32::<LittleEndian>()?,
+            key: decode_string(cur)?,
+            id: cur.read_u64::<LittleEndian>()?,
+        })
+    }
+}
+
+/// Codec for full [`Entity`] records (every field, so decode∘encode is
+/// identity — the reduce side sees exactly the mapped entities).
+pub struct EntityCodec;
+
+impl Codec<Entity> for EntityCodec {
+    fn encode(&self, e: &Entity, out: &mut Vec<u8>) {
+        out.write_u64::<LittleEndian>(e.id).unwrap();
+        encode_string(&e.title, out);
+        encode_string(&e.abstract_text, out);
+        encode_string(&e.authors, out);
+        out.write_u16::<LittleEndian>(e.year).unwrap();
+        encode_string(&e.venue, out);
+    }
+
+    fn decode(&self, cur: &mut &[u8]) -> Result<Entity> {
+        Ok(Entity {
+            id: cur.read_u64::<LittleEndian>()?,
+            title: decode_string(cur)?,
+            abstract_text: decode_string(cur)?,
+            authors: decode_string(cur)?,
+            year: cur.read_u16::<LittleEndian>()?,
+            venue: decode_string(cur)?,
+        })
+    }
+}
+
+/// Lift a codec for `T` to `Arc<T>` (decode allocates a fresh `Arc` —
+/// spilled runs trade the sharing for bounded memory, by design).
+pub struct ArcCodec<C>(pub C);
+
+impl<T, C: Codec<T>> Codec<Arc<T>> for ArcCodec<C> {
+    fn encode(&self, t: &Arc<T>, out: &mut Vec<u8>) {
+        self.0.encode(t, out);
+    }
+
+    fn decode(&self, cur: &mut &[u8]) -> Result<Arc<T>> {
+        Ok(Arc::new(self.0.decode(cur)?))
+    }
+}
+
+/// Codec for the loadbalance [`Ranked`] value: global rank + entity.
+pub struct RankedCodec;
+
+impl Codec<Ranked> for RankedCodec {
+    fn encode(&self, t: &Ranked, out: &mut Vec<u8>) {
+        out.write_u64::<LittleEndian>(t.rank).unwrap();
+        EntityCodec.encode(&t.entity, out);
+    }
+
+    fn decode(&self, cur: &mut &[u8]) -> Result<Ranked> {
+        Ok(Ranked {
+            rank: cur.read_u64::<LittleEndian>()?,
+            entity: Arc::new(EntityCodec.decode(cur)?),
+        })
+    }
+}
+
+/// Spill spec for the `(SnKey, Arc<Entity>)` jobs (SRP, JobSN phase 1,
+/// RepSN).
+pub fn entity_job_spec(spill: &SnSpill) -> SpillSpec {
+    let codec: Arc<dyn Codec<(SnKey, Arc<Entity>)>> =
+        Arc::new(KeyValueCodec::new(SnKeyCodec, ArcCodec(EntityCodec)));
+    SpillSpec::new(spill.dir.clone(), codec).with_compress(spill.compress)
+}
+
+/// Spill spec for JobSN's phase-2 boundary job:
+/// `(SnKey, (u32, Arc<Entity>))`.
+pub fn boundary_job_spec(spill: &SnSpill) -> SpillSpec {
+    let codec: Arc<dyn Codec<(SnKey, (u32, Arc<Entity>))>> = Arc::new(KeyValueCodec::new(
+        SnKeyCodec,
+        KeyValueCodec::new(U32Codec, ArcCodec(EntityCodec)),
+    ));
+    SpillSpec::new(spill.dir.clone(), codec).with_compress(spill.compress)
+}
+
+/// Spill spec for standard blocking: `(String, Arc<Entity>)`.
+pub fn block_job_spec(spill: &SnSpill) -> SpillSpec {
+    let codec: Arc<dyn Codec<(String, Arc<Entity>)>> =
+        Arc::new(KeyValueCodec::new(StringCodec, ArcCodec(EntityCodec)));
+    SpillSpec::new(spill.dir.clone(), codec).with_compress(spill.compress)
+}
+
+/// Spill spec for the BlockSplit / PairRange repartition jobs:
+/// `(SnKey, Ranked)`.
+pub fn ranked_job_spec(spill: &SnSpill) -> SpillSpec {
+    let codec: Arc<dyn Codec<(SnKey, Ranked)>> =
+        Arc::new(KeyValueCodec::new(SnKeyCodec, RankedCodec));
+    SpillSpec::new(spill.dir.clone(), codec).with_compress(spill.compress)
+}
+
+/// Spill spec for the BDM analysis job: `((String, u32), u64)`.
+pub fn bdm_job_spec(spill: &SnSpill) -> SpillSpec {
+    let codec: Arc<dyn Codec<((String, u32), u64)>> = Arc::new(KeyValueCodec::new(
+        KeyValueCodec::new(StringCodec, U32Codec),
+        U64Codec,
+    ));
+    SpillSpec::new(spill.dir.clone(), codec).with_compress(spill.compress)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: PartialEq + std::fmt::Debug>(codec: &dyn Codec<T>, t: &T) {
+        let mut buf = Vec::new();
+        codec.encode(t, &mut buf);
+        let mut cur = buf.as_slice();
+        let back = codec.decode(&mut cur).unwrap();
+        assert_eq!(&back, t);
+        assert!(cur.is_empty(), "decode must consume the record exactly");
+    }
+
+    #[test]
+    fn snkey_roundtrip() {
+        roundtrip(
+            &SnKeyCodec,
+            &SnKey {
+                bound: 3,
+                part: 2,
+                key: "ab".into(),
+                id: 99,
+            },
+        );
+        roundtrip(&SnKeyCodec, &SnKey::srp(0, String::new(), 0));
+    }
+
+    #[test]
+    fn entity_roundtrip_all_fields() {
+        let e = Entity {
+            id: 42,
+            title: "A Title with ünïcode".into(),
+            abstract_text: "Some abstract. ".repeat(10),
+            authors: "Kolb, Thor, Rahm".into(),
+            year: 2010,
+            venue: "BTW".into(),
+        };
+        roundtrip(&EntityCodec, &e);
+        roundtrip(&ArcCodec(EntityCodec), &Arc::new(e));
+    }
+
+    #[test]
+    fn ranked_roundtrip() {
+        let r = Ranked {
+            rank: 1234,
+            entity: Arc::new(Entity::new(7, "t", "a")),
+        };
+        let mut buf = Vec::new();
+        RankedCodec.encode(&r, &mut buf);
+        let mut cur = buf.as_slice();
+        let back = RankedCodec.decode(&mut cur).unwrap();
+        assert_eq!(back.rank, r.rank);
+        assert_eq!(&*back.entity, &*r.entity);
+    }
+
+    #[test]
+    fn composed_job_record_roundtrip() {
+        let codec = KeyValueCodec::new(
+            SnKeyCodec,
+            KeyValueCodec::new(U32Codec, ArcCodec(EntityCodec)),
+        );
+        let rec = (
+            SnKey::srp(1, "zz".into(), 5),
+            (3u32, Arc::new(Entity::new(5, "zz title", "abs"))),
+        );
+        let mut buf = Vec::new();
+        codec.encode(&rec, &mut buf);
+        let mut cur = buf.as_slice();
+        let (k, (p, e)) = codec.decode(&mut cur).unwrap();
+        assert_eq!(k, rec.0);
+        assert_eq!(p, 3);
+        assert_eq!(&*e, &*rec.1 .1);
+        assert!(cur.is_empty());
+    }
+}

@@ -136,7 +136,8 @@ pub fn run_with_options(
         let job_cfg = JobConfig::named("jobsn-phase2")
             .with_tasks(cfg.num_map_tasks.min(input.len().max(1)), r2)
             .with_workers(cfg.workers)
-            .with_sort_buffer(cfg.sort_buffer_records);
+            .with_sort_buffer(cfg.sort_buffer_records)
+            .with_spill(cfg.spill.as_ref().map(crate::sn::codec::boundary_job_spec));
         // boundary index spreads over the phase-2 reduce tasks
         struct BoundaryPartitioner;
         impl crate::mapreduce::types::Partitioner<SnKey> for BoundaryPartitioner {
@@ -207,6 +208,7 @@ mod tests {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         }
     }
 
@@ -241,6 +243,7 @@ mod tests {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 4);

@@ -279,13 +279,17 @@ pub struct BdmJobResult {
 /// `((key, partition), 1)` per entity, the combiner pre-sums each sorted
 /// run (one record per distinct cell per task reaches the shuffle), and a
 /// single reduce task emits the cell-sorted matrix.  `input` is the
-/// [`partitioned_input`] the repartition job will reuse.
+/// [`partitioned_input`] the repartition job will reuse.  `spill`
+/// (usually [`crate::sn::codec::bdm_job_spec`] via
+/// [`SnConfig::spill`](crate::sn::types::SnConfig)) routes even this
+/// analysis job's combined cell counts through disk-backed runs.
 pub fn bdm_job(
     input: Vec<(u32, Arc<Entity>)>,
     key_fn: &Arc<dyn BlockingKey>,
     m: usize,
     workers: usize,
     sort_buffer_records: Option<usize>,
+    spill: Option<crate::mapreduce::sortspill::SpillSpec>,
     exec: Exec<'_>,
 ) -> BdmJobResult {
     let m = m.max(1);
@@ -306,7 +310,8 @@ pub fn bdm_job(
     let cfg = JobConfig::named("bdm")
         .with_tasks(m, 1)
         .with_workers(workers.max(1))
-        .with_sort_buffer(sort_buffer_records);
+        .with_sort_buffer(sort_buffer_records)
+        .with_spill(spill);
     let res = exec.run_job_with_combiner(
         &cfg,
         input,
@@ -351,7 +356,7 @@ mod tests {
     fn job_matches_driver_side_matrix() {
         let es = entities(200);
         let bk: Arc<dyn BlockingKey> = Arc::new(TitlePrefixKey::new(2));
-        let job = bdm_job(partitioned_input(&es, 4), &bk, 4, 2, None, Exec::Serial);
+        let job = bdm_job(partitioned_input(&es, 4), &bk, 4, 2, None, None, Exec::Serial);
         let reference = Bdm::from_entities(&es, bk.as_ref(), 4);
         assert_eq!(job.bdm.keys, reference.keys);
         assert_eq!(job.bdm.key_starts, reference.key_starts);

@@ -247,6 +247,7 @@ fn run_pipeline(
         m,
         cfg.workers,
         cfg.sort_buffer_records,
+        cfg.spill.as_ref().map(crate::sn::codec::bdm_job_spec),
         exec,
     );
     let matrix = Arc::new(analysis.bdm);

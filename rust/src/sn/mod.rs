@@ -20,6 +20,9 @@
 //! * [`loadbalance`] — the Kolb et al. 2012 two-job load balancers: a
 //!   Block Distribution Matrix analysis job plus BlockSplit / PairRange
 //!   repartitioning, selected by [`BalanceStrategy`] on [`SnConfig`].
+//! * [`codec`] — binary codecs for every SN intermediate record shape,
+//!   letting [`SnSpill`] on [`SnConfig`] route all of the above through
+//!   the engine's disk-backed, DEFLATE-compressed run files.
 //!
 //! ## Determinism note
 //!
@@ -31,6 +34,7 @@
 //! about which *distances* are compared, only makes tie order stable.
 
 pub mod balance;
+pub mod codec;
 pub mod jobsn;
 pub mod loadbalance;
 pub mod multipass;
@@ -44,4 +48,4 @@ pub mod types;
 pub mod window;
 
 pub use loadbalance::BalanceStrategy;
-pub use types::{SnConfig, SnKey, SnMode, SnResult};
+pub use types::{SnConfig, SnKey, SnMode, SnResult, SnSpill};

@@ -18,7 +18,9 @@
 //! base config applies to every pass: each per-key submission becomes the
 //! two-job BDM + repartition pipeline (see
 //! [`repsn::submit`](crate::sn::repsn::submit)), all still interleaved on
-//! the one scheduler.
+//! the one scheduler.  Likewise an [`SnSpill`](crate::sn::types::SnSpill)
+//! on the base config makes every pass run disk-backed (concurrent passes
+//! share the spill directory; run files are globally uniquely named).
 
 use std::collections::BTreeMap;
 use std::sync::Arc;

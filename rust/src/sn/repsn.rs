@@ -218,7 +218,8 @@ fn job_parts(
     let job_cfg = JobConfig::named("repsn")
         .with_tasks(cfg.num_map_tasks, r)
         .with_workers(cfg.workers)
-        .with_sort_buffer(cfg.sort_buffer_records);
+        .with_sort_buffer(cfg.sort_buffer_records)
+        .with_spill(cfg.spill.as_ref().map(crate::sn::codec::entity_job_spec));
     let mapper: Arc<dyn MapTaskFactory<(), Arc<Entity>, SnKey, Arc<Entity>>> =
         Arc::new(RepSnMapFactory {
             w: cfg.window,
@@ -355,6 +356,7 @@ mod tests {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         }
     }
 
@@ -391,6 +393,7 @@ mod tests {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let replicated = res.counters.get(counter_names::REPLICATED_ENTITIES);
@@ -423,6 +426,7 @@ mod tests {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 6);

@@ -162,7 +162,8 @@ pub(crate) fn run_srp_job(
     let job_cfg = JobConfig::named(job_name)
         .with_tasks(cfg.num_map_tasks, r)
         .with_workers(cfg.workers)
-        .with_sort_buffer(cfg.sort_buffer_records);
+        .with_sort_buffer(cfg.sort_buffer_records)
+        .with_spill(cfg.spill.as_ref().map(crate::sn::codec::entity_job_spec));
     exec.run_job(
         &job_cfg,
         input,
@@ -252,6 +253,7 @@ mod tests {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         };
         let res = run(&entities, &cfg).unwrap();
         assert_eq!(res.pairs.len(), 12);
@@ -281,6 +283,7 @@ mod tests {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: Default::default(),
+            spill: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 5);

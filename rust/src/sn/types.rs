@@ -1,5 +1,6 @@
 //! Shared types for the SN MapReduce jobs.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::er::blockkey::{BlockingKey, TitlePrefixKey};
@@ -92,6 +93,40 @@ impl std::fmt::Debug for SnMode {
     }
 }
 
+/// Disk-backed intermediate settings shared by every SN variant.
+///
+/// Threaded through [`SnConfig::spill`]: each SN job builds the matching
+/// [`SpillSpec`](crate::mapreduce::sortspill::SpillSpec) for its own
+/// intermediate record type (see [`crate::sn::codec`]), so one knob makes
+/// the whole variant — including JobSN's second job and the loadbalance
+/// BDM pipeline — run disk-backed.
+#[derive(Debug, Clone)]
+pub struct SnSpill {
+    /// Directory for the codec-serialized run files (each file is deleted
+    /// as soon as its last reader drops; pass a
+    /// [`TempSpillDir`](crate::mapreduce::sortspill::TempSpillDir) path
+    /// in tests).
+    pub dir: PathBuf,
+    /// Whole-run DEFLATE, on by default (the paper's cluster compresses
+    /// intermediates, §5.1 — `SHUFFLE_BYTES` then reports compressed
+    /// volume, with `SHUFFLE_BYTES_RAW` alongside).
+    pub compress: bool,
+}
+
+impl SnSpill {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            compress: true,
+        }
+    }
+
+    pub fn with_compress(mut self, on: bool) -> Self {
+        self.compress = on;
+        self
+    }
+}
+
 /// Configuration shared by all SN MapReduce variants.
 #[derive(Clone)]
 pub struct SnConfig {
@@ -119,6 +154,9 @@ pub struct SnConfig {
     /// [`loadbalance`](crate::sn::loadbalance) two-job pipeline (the
     /// partitioner then only supplies the reduce-task target `r`).
     pub balance: BalanceStrategy,
+    /// Disk-backed, optionally compressed intermediates for every job the
+    /// variant runs.  `None` (default) keeps runs in memory.
+    pub spill: Option<SnSpill>,
 }
 
 impl Default for SnConfig {
@@ -132,6 +170,7 @@ impl Default for SnConfig {
             mode: SnMode::Blocking,
             sort_buffer_records: None,
             balance: BalanceStrategy::None,
+            spill: None,
         }
     }
 }
@@ -145,6 +184,7 @@ impl std::fmt::Debug for SnConfig {
             .field("partitions", &self.partitioner.num_partitions())
             .field("mode", &self.mode)
             .field("balance", &self.balance)
+            .field("spill", &self.spill)
             .finish()
     }
 }

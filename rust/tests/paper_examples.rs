@@ -54,6 +54,7 @@ fn fig_cfg(w: usize, m: usize) -> SnConfig {
         mode: SnMode::Blocking,
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     }
 }
 

@@ -37,6 +37,7 @@ fn sn_config(entities: &[Entity], w: usize) -> SnConfig {
         mode: Default::default(),
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     }
 }
 

@@ -50,6 +50,7 @@ fn unbalanced_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> 
         mode: SnMode::Blocking,
         sort_buffer_records: None,
         balance: BalanceStrategy::None,
+        spill: None,
     }
 }
 

@@ -47,6 +47,7 @@ fn random_config(rng: &mut Rng, entities: &[Entity]) -> SnConfig {
         mode: SnMode::Blocking,
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     }
 }
 

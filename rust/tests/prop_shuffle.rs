@@ -92,7 +92,14 @@ fn run_histogram(
     workers: usize,
     sort_buffer: Option<usize>,
     combine: bool,
+    disk: bool,
 ) -> Vec<Vec<(u64, Vec<u64>)>> {
+    use snmr::mapreduce::sortspill::{Codec, KeyValueCodec, SpillSpec, TempSpillDir, U64Codec};
+    let spill_dir = disk.then(|| TempSpillDir::new("prop-shuffle").expect("temp spill dir"));
+    let spill = spill_dir.as_ref().map(|d| {
+        let codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+        SpillSpec::new(d.path(), codec)
+    });
     let mapper = Arc::new(FnMapTask::new(
         |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
             out.emit(v % 13, v);
@@ -106,7 +113,8 @@ fn run_histogram(
     let cfg = JobConfig::named("prop")
         .with_tasks(maps, reduces)
         .with_workers(workers)
-        .with_sort_buffer(sort_buffer);
+        .with_sort_buffer(sort_buffer)
+        .with_spill(spill);
     let partitioner = Arc::new(HashPartitioner::new(|k: &u64| k.wrapping_mul(0x9E37)));
     let grouping = Arc::new(|a: &u64, b: &u64| a == b);
     if combine {
@@ -138,13 +146,16 @@ fn engine_outputs_identical_across_pipeline_configs() {
         let input: Vec<((), u64)> = (0..n).map(|_| ((), rng.below(1_000))).collect();
         let maps = rng.range(1, 6);
         let reduces = rng.range(1, 5);
-        let reference = run_histogram(input.clone(), maps, reduces, 1, None, false);
-        for (workers, sort_buffer, combine) in [
-            (3, None, false),
-            (1, Some(rng.range(1, 20)), false),
-            (4, Some(rng.range(1, 20)), false),
-            (2, None, true),
-            (3, Some(rng.range(1, 20)), true),
+        let reference = run_histogram(input.clone(), maps, reduces, 1, None, false, false);
+        for (workers, sort_buffer, combine, disk) in [
+            (3, None, false, false),
+            (1, Some(rng.range(1, 20)), false, false),
+            (4, Some(rng.range(1, 20)), false, false),
+            (2, None, true, false),
+            (3, Some(rng.range(1, 20)), true, false),
+            // the disk-backed data path: codec-serialized, compressed runs
+            (2, None, false, true),
+            (3, Some(rng.range(1, 20)), true, true),
         ] {
             let got = run_histogram(
                 input.clone(),
@@ -153,11 +164,12 @@ fn engine_outputs_identical_across_pipeline_configs() {
                 workers,
                 sort_buffer,
                 combine,
+                disk,
             );
             if got != reference {
                 return Err(format!(
                     "outputs diverge at workers={workers} sort_buffer={sort_buffer:?} \
-                     combine={combine}: {got:?} vs {reference:?}"
+                     combine={combine} disk={disk}: {got:?} vs {reference:?}"
                 ));
             }
         }

@@ -47,6 +47,7 @@ fn config(
         mode: SnMode::Blocking,
         sort_buffer_records: None,
         balance: Default::default(),
+        spill: None,
     }
 }
 

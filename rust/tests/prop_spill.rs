@@ -1,0 +1,210 @@
+//! Disk-backed compressed intermediates equivalence (ISSUE 4 acceptance).
+//!
+//! For every SN variant — standard blocking, SRP, JobSN, RepSN,
+//! multipass, and the BlockSplit/PairRange two-job pipeline — a
+//! disk-backed + compressed run must produce byte-identical match output
+//! to the in-memory run, on both the serial engine and the
+//! `JobScheduler` path, with `SHUFFLE_BYTES` (compressed volume) strictly
+//! below `SHUFFLE_BYTES_RAW` on the skewed text corpora.
+
+use std::sync::Arc;
+
+use snmr::data::skew::zipf_skew_block_keys;
+use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
+use snmr::er::entity::Entity;
+use snmr::er::strategy::MatchStrategyConfig;
+use snmr::mapreduce::counters::names;
+use snmr::mapreduce::scheduler::{Exec, JobScheduler, SchedulerConfig};
+use snmr::mapreduce::TempSpillDir;
+use snmr::sn::balance::pair_balanced_min_size;
+use snmr::sn::loadbalance::BalanceStrategy;
+use snmr::sn::types::{SnConfig, SnMode, SnResult, SnSpill};
+use snmr::sn::{jobsn, multipass, repsn, srp, standard_blocking};
+use snmr::util::prop::Cases;
+use snmr::util::rng::Rng;
+use snmr::{prop_assert, prop_assert_eq};
+
+/// Zipf block-key corpus with compressible text payloads (titles repeat a
+/// small vocabulary; abstracts repeat whole phrases — like real
+/// publication records, DEFLATE finds plenty to remove).
+fn corpus(rng: &mut Rng, n: usize) -> Vec<Entity> {
+    let mut ids: Vec<u64> = (0..(2 * n) as u64).collect();
+    rng.shuffle(&mut ids);
+    let mut entities: Vec<Entity> = (0..n)
+        .map(|i| {
+            Entity::new(
+                ids[i],
+                &format!("xx parallel sorted neighborhood {i}"),
+                &"entity resolution with mapreduce ".repeat(4),
+            )
+        })
+        .collect();
+    zipf_skew_block_keys(&mut entities, rng.range(8, 40), 1.3, rng.next_u64());
+    entities
+}
+
+fn base_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConfig {
+    let bk = TitlePrefixKey::new(2);
+    let partitioner = pair_balanced_min_size(entities, &bk, r, w);
+    SnConfig {
+        window: w,
+        num_map_tasks: rng.range(1, 7),
+        workers: rng.range(1, 4),
+        partitioner: Arc::new(partitioner),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+        sort_buffer_records: Some(rng.range(8, 64)),
+        balance: BalanceStrategy::None,
+        spill: None,
+    }
+}
+
+type VariantFn = fn(&[Entity], &SnConfig, Exec<'_>) -> anyhow::Result<SnResult>;
+
+/// Every SN variant behind one `(entities, cfg, exec)` signature.  The
+/// balanced strategies ride on `repsn::run_on`, which dispatches to the
+/// BDM two-job pipeline when `cfg.balance` is set.
+fn variants() -> Vec<(&'static str, VariantFn, BalanceStrategy)> {
+    vec![
+        ("standard_blocking", standard_blocking::run_on, BalanceStrategy::None),
+        ("srp", srp::run_on, BalanceStrategy::None),
+        ("jobsn", jobsn::run_on, BalanceStrategy::None),
+        ("repsn", repsn::run_on, BalanceStrategy::None),
+        ("blocksplit", repsn::run_on, BalanceStrategy::BlockSplit),
+        ("pairrange", repsn::run_on, BalanceStrategy::PairRange),
+    ]
+}
+
+#[test]
+fn prop_disk_backed_compressed_runs_match_in_memory() {
+    Cases::new("disk+compress == memory, serial and scheduler", 8).run(|rng| {
+        let n = rng.range(120, 350);
+        let w = rng.range(2, 7);
+        let entities = corpus(rng, n);
+        let base = base_config(rng, &entities, w, rng.range(4, 8));
+        let sched =
+            JobScheduler::new(SchedulerConfig::slots(rng.range(2, 5)).with_speculation(true));
+        for (name, run, strategy) in variants() {
+            let mem_cfg = SnConfig {
+                balance: strategy,
+                ..base.clone()
+            };
+            let dir = TempSpillDir::new(&format!("prop-{name}")).map_err(|e| e.to_string())?;
+            let disk_cfg = SnConfig {
+                spill: Some(SnSpill::new(dir.path())),
+                ..mem_cfg.clone()
+            };
+            let mem = run(&entities, &mem_cfg, Exec::Serial).map_err(|e| e.to_string())?;
+            let disk = run(&entities, &disk_cfg, Exec::Serial).map_err(|e| e.to_string())?;
+            prop_assert_eq!(disk.pairs, mem.pairs);
+            prop_assert_eq!(disk.pair_set(), mem.pair_set());
+            let on_sched =
+                run(&entities, &disk_cfg, Exec::Scheduler(&sched)).map_err(|e| e.to_string())?;
+            prop_assert_eq!(on_sched.pair_set(), mem.pair_set());
+
+            // honest spill accounting: runs went to disk, and the charged
+            // shuffle volume is the compressed one
+            let spilled_runs = disk.counters.get(names::SPILLED_RUNS);
+            prop_assert!(spilled_runs > 0, "{name}: no run files written");
+            let sb = disk.counters.get(names::SHUFFLE_BYTES);
+            let raw = disk.counters.get(names::SHUFFLE_BYTES_RAW);
+            prop_assert!(
+                sb < raw,
+                "{name}: compressed shuffle {sb} not below raw {raw}"
+            );
+            prop_assert_eq!(sb, disk.counters.get(names::SPILL_BYTES_WRITTEN));
+            // the in-memory twin reports raw == charged
+            prop_assert_eq!(
+                mem.counters.get(names::SHUFFLE_BYTES),
+                mem.counters.get(names::SHUFFLE_BYTES_RAW)
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Matching mode: scored match output is byte-identical too (scores are
+/// deterministic functions of the compared entities, which round-trip
+/// through the codec unchanged).
+#[test]
+fn disk_backed_matching_mode_scores_identical() {
+    let mut rng = Rng::new(0x5B111);
+    let entities = corpus(&mut rng, 250);
+    let base = SnConfig {
+        mode: SnMode::Matching(MatchStrategyConfig::default()),
+        ..base_config(&mut rng, &entities, 5, 5)
+    };
+    let dir = TempSpillDir::new("matching").unwrap();
+    let disk_cfg = SnConfig {
+        spill: Some(SnSpill::new(dir.path())),
+        ..base.clone()
+    };
+    let mem = repsn::run(&entities, &base).unwrap();
+    let disk = repsn::run(&entities, &disk_cfg).unwrap();
+    let key = |r: &SnResult| {
+        let mut v: Vec<(u64, u64, f32)> = r
+            .matches
+            .iter()
+            .map(|m| (m.pair.a, m.pair.b, m.score))
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    };
+    assert_eq!(key(&mem), key(&disk));
+}
+
+/// Uncompressed disk-backing is its own point on the trade-off: identical
+/// output, `SHUFFLE_BYTES` ≈ raw encoded volume (no DEFLATE win).
+#[test]
+fn uncompressed_spill_reports_full_volume() {
+    let mut rng = Rng::new(0xD15C);
+    let entities = corpus(&mut rng, 200);
+    let base = base_config(&mut rng, &entities, 4, 4);
+    let dir = TempSpillDir::new("nocompress").unwrap();
+    let disk_cfg = SnConfig {
+        spill: Some(SnSpill::new(dir.path()).with_compress(false)),
+        ..base.clone()
+    };
+    let mem = repsn::run(&entities, &base).unwrap();
+    let disk = repsn::run(&entities, &disk_cfg).unwrap();
+    assert_eq!(disk.pair_set(), mem.pair_set());
+    let sb = disk.counters.get(names::SHUFFLE_BYTES);
+    let raw = disk.counters.get(names::SHUFFLE_BYTES_RAW);
+    // encoded bytes differ from the SizeEstimate only by small per-field
+    // framing; without compression they stay the same order of magnitude
+    assert!(
+        sb * 2 > raw,
+        "uncompressed spill should not shrink the volume: {sb} vs raw {raw}"
+    );
+    // the simulator is only charged for compression when it happened
+    assert!(disk.profiles[0].compress_secs_per_mb == 0.0);
+}
+
+/// Multipass: every per-key pass of a spill-configured base runs
+/// disk-backed on the shared scheduler, union unchanged.
+#[test]
+fn multipass_disk_backed_union_matches_serial() {
+    let mut rng = Rng::new(0x3A55);
+    let entities = corpus(&mut rng, 220);
+    let base = base_config(&mut rng, &entities, 4, 5);
+    let keys: Vec<Arc<dyn BlockingKey>> = vec![
+        Arc::new(TitlePrefixKey::new(2)),
+        Arc::new(TitlePrefixKey::new(1)),
+    ];
+    let plain = multipass::run_serial(&entities, &base, &keys).unwrap();
+    let dir = TempSpillDir::new("multipass").unwrap();
+    let disk_cfg = SnConfig {
+        spill: Some(SnSpill::new(dir.path())),
+        ..base
+    };
+    let disk = multipass::run(&entities, &disk_cfg, &keys).unwrap();
+    assert_eq!(plain.union.pair_set(), disk.union.pair_set());
+    assert!(disk.union.counters.get(names::SPILLED_RUNS) > 0);
+    assert!(
+        disk.union.counters.get(names::SHUFFLE_BYTES)
+            < disk.union.counters.get(names::SHUFFLE_BYTES_RAW)
+    );
+    for (p, d) in plain.per_pass.iter().zip(&disk.per_pass) {
+        assert_eq!(p.pair_set(), d.pair_set());
+    }
+}

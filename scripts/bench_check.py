@@ -1,0 +1,309 @@
+#!/usr/bin/env python3
+"""Bench-trajectory regression gate.
+
+Compares the perf summaries `scripts/bench.sh` leaves at the repo root
+(`BENCH_engine.json`, `BENCH_skew.json`, `BENCH_balance.json`) against the
+committed snapshots in `BENCH_baseline/`, and fails (exit 1) when a gated
+metric regresses by more than the tolerance (default 25%) in its bad
+direction.
+
+Gated metrics are the *machine-stable* ones: byte volumes, compression
+ratios, pair counts, and same-machine speedup ratios (with a wider band).
+Raw wall-clock seconds are deliberately not gated — CI runner variance
+routinely exceeds any useful threshold; the speedup ratios capture the
+perf trajectory without the noise.
+
+Boolean invariants (`identical_output`) are checked on the current run
+alone: they encode correctness claims the benches assert in-process, and
+a `false` here means an assertion was bypassed.
+
+Usage:
+    scripts/bench_check.py                 # gate current vs baseline
+    scripts/bench_check.py --update        # refresh BENCH_baseline/ from current
+    scripts/bench_check.py --selftest      # prove the gate trips on a >25% regression
+
+A baseline file containing `"bootstrap": true` vacuously passes its
+relative gates (invariants still run) and prints a reminder to refresh it
+with `--update` after a trusted bench run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import sys
+
+TOLERANCE = 0.25
+
+# (path, direction, tolerance): direction "lower" = lower is better
+# (fail when current > baseline * (1 + tol)); "higher" = higher is
+# better (fail when current < baseline * (1 - tol)).
+GATES = {
+    "BENCH_engine.json": [
+        ("combiner_histogram.shuffle_bytes_off", "lower", TOLERANCE),
+        ("combiner_histogram.shuffle_bytes_on", "lower", TOLERANCE),
+        ("spill_compression.shuffle_bytes_raw", "lower", TOLERANCE),
+        ("spill_compression.compressed_over_raw_ratio", "lower", TOLERANCE),
+        # same-machine ratio, but still timing-derived: wider band
+        ("shuffle_reduce[workers=8].speedup", "higher", 0.5),
+    ],
+    "BENCH_skew.json": [
+        ("multipass_measured[mode=scheduler].speedup", "higher", 0.5),
+    ],
+    "BENCH_balance.json": [
+        ("rows[strategy=blocksplit].pairs_max_task", "lower", TOLERANCE),
+        ("rows[strategy=pairrange].pairs_max_task", "lower", TOLERANCE),
+        ("rows[strategy=blocksplit].max_reduction_vs_unbalanced", "higher", TOLERANCE),
+        ("rows[strategy=pairrange].max_reduction_vs_unbalanced", "higher", TOLERANCE),
+    ],
+}
+
+# Boolean must-hold facts checked on the *current* summaries alone.
+INVARIANTS = {
+    "BENCH_skew.json": [
+        "multipass_measured[mode=scheduler].identical_output",
+        "multipass_measured[mode=scheduler+spec].identical_output",
+    ],
+    "BENCH_balance.json": [
+        "rows[strategy=blocksplit].identical_output",
+        "rows[strategy=pairrange].identical_output",
+    ],
+}
+
+BASELINE_DIR = "BENCH_baseline"
+
+
+def lookup(doc, path):
+    """Resolve `a.b[k=v].c` against nested dicts/lists; None if absent."""
+    cur = doc
+    for part in path.split("."):
+        if cur is None:
+            return None
+        if "[" in part:
+            name, selector = part[:-1].split("[", 1)
+            key, _, want = selector.partition("=")
+            cur = cur.get(name) if isinstance(cur, dict) else None
+            if not isinstance(cur, list):
+                return None
+            match = None
+            for item in cur:
+                if isinstance(item, dict) and str(item.get(key)) == want:
+                    match = item
+                    break
+                # numeric selector values serialize as floats ("8" vs 8.0)
+                try:
+                    if isinstance(item, dict) and float(item.get(key)) == float(want):
+                        match = item
+                        break
+                except (TypeError, ValueError):
+                    pass
+            cur = match
+        else:
+            cur = cur.get(part) if isinstance(cur, dict) else None
+    return cur
+
+
+def check_file(name, current, baseline):
+    """Return a list of failure strings for one summary file."""
+    failures = []
+    for path in INVARIANTS.get(name, []):
+        val = lookup(current, path)
+        if val is None:
+            failures.append(f"{name}: invariant {path} missing from current run")
+        elif val is not True:
+            failures.append(f"{name}: invariant {path} is {val!r}, expected true")
+    if baseline is None:
+        failures.append(f"{name}: no baseline ({BASELINE_DIR}/{name} missing)")
+        return failures
+    if baseline.get("bootstrap") is True:
+        print(
+            f"NOTE {name}: baseline is a bootstrap placeholder — relative gates "
+            f"skipped; refresh with `scripts/bench_check.py --update` after a "
+            f"trusted bench run."
+        )
+        return failures
+    for path, direction, tol in GATES.get(name, []):
+        base = lookup(baseline, path)
+        cur = lookup(current, path)
+        if base is None:
+            print(f"WARN {name}: {path} absent from baseline, skipping")
+            continue
+        if cur is None:
+            failures.append(f"{name}: gated metric {path} missing from current run")
+            continue
+        base, cur = float(base), float(cur)
+        if direction == "lower":
+            limit = base * (1.0 + tol)
+            bad = cur > limit
+        else:
+            limit = base * (1.0 - tol)
+            bad = cur < limit
+        verdict = "REGRESSION" if bad else "ok"
+        print(
+            f"{verdict:>10}  {name}: {path} = {cur:.4g} "
+            f"(baseline {base:.4g}, {direction}-is-better, limit {limit:.4g})"
+        )
+        if bad:
+            failures.append(
+                f"{name}: {path} regressed {cur:.4g} vs baseline {base:.4g} "
+                f"(> {tol:.0%} in the {direction}-is-better direction)"
+            )
+    return failures
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def run_gate(root):
+    failures = []
+    for name in GATES:
+        current = load(os.path.join(root, name))
+        if current is None:
+            failures.append(f"{name}: current summary missing (run scripts/bench.sh)")
+            continue
+        baseline = load(os.path.join(root, BASELINE_DIR, name))
+        failures.extend(check_file(name, current, baseline))
+    return failures
+
+
+def update_baseline(root):
+    os.makedirs(os.path.join(root, BASELINE_DIR), exist_ok=True)
+    for name in GATES:
+        current = load(os.path.join(root, name))
+        if current is None:
+            print(f"SKIP {name}: no current summary")
+            continue
+        dest = os.path.join(root, BASELINE_DIR, name)
+        with open(dest, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline refreshed: {dest}")
+
+
+# Minimal but schema-faithful samples so --selftest runs anywhere,
+# independent of real bench output.
+SELFTEST_SAMPLES = {
+    "BENCH_engine.json": {
+        "bench": "engine_ablation",
+        "shuffle_reduce": [
+            {"workers": 1.0, "speedup": 1.0},
+            {"workers": 8.0, "speedup": 4.0},
+        ],
+        "combiner_histogram": {
+            "shuffle_bytes_off": 1_000_000.0,
+            "shuffle_bytes_on": 2_000.0,
+            "secs_off": 0.5,
+            "secs_on": 0.4,
+        },
+        "spill_compression": {
+            "shuffle_bytes_raw": 3_000_000.0,
+            "shuffle_bytes_compressed": 900_000.0,
+            "compressed_over_raw_ratio": 0.3,
+            "spilled_runs": 32.0,
+        },
+    },
+    "BENCH_skew.json": {
+        "bench": "fig9_skew",
+        "multipass_measured": [
+            {"mode": "serial", "speedup": 1.0},
+            {"mode": "scheduler", "speedup": 2.4, "identical_output": True},
+            {"mode": "scheduler+spec", "speedup": 2.3, "identical_output": True},
+        ],
+    },
+    "BENCH_balance.json": {
+        "bench": "fig9_balance",
+        "rows": [
+            {"strategy": "none", "pairs_max_task": 70_000.0, "pairs_total": 100_000.0},
+            {
+                "strategy": "blocksplit",
+                "pairs_max_task": 16_000.0,
+                "max_reduction_vs_unbalanced": 4.4,
+                "identical_output": True,
+            },
+            {
+                "strategy": "pairrange",
+                "pairs_max_task": 13_000.0,
+                "max_reduction_vs_unbalanced": 5.4,
+                "identical_output": True,
+            },
+        ],
+    },
+}
+
+
+def degrade(doc, path, direction, tol):
+    """Return a copy of `doc` with the metric at `path` worse than its
+    gate tolerance allows (tolerance + 10 points)."""
+    worse = copy.deepcopy(doc)
+    # walk to the parent dict, then bump the leaf
+    parent_path, _, leaf = path.rpartition(".")
+    parent = lookup(worse, parent_path) if parent_path else worse
+    factor = 1.0 + tol + 0.10 if direction == "lower" else 1.0 - (tol + 0.10)
+    parent[leaf] = float(parent[leaf]) * factor
+    return worse
+
+
+def selftest():
+    bad = 0
+    for name, gates in GATES.items():
+        sample = SELFTEST_SAMPLES[name]
+        # identical current vs baseline must pass
+        if check_file(name, copy.deepcopy(sample), copy.deepcopy(sample)):
+            print(f"SELFTEST FAIL: {name} flagged an identical run")
+            bad += 1
+        # each gated metric degraded past its tolerance must trip the gate
+        for path, direction, tol in gates:
+            worse = degrade(sample, path, direction, tol)
+            failures = check_file(name, worse, copy.deepcopy(sample))
+            if not any(path in f for f in failures):
+                print(f"SELFTEST FAIL: {name} missed a beyond-tolerance regression on {path}")
+                bad += 1
+        # a broken invariant must be flagged
+        for path in INVARIANTS.get(name, []):
+            broken = copy.deepcopy(sample)
+            parent_path, _, leaf = path.rpartition(".")
+            lookup(broken, parent_path)[leaf] = False
+            if not check_file(name, broken, copy.deepcopy(sample)):
+                print(f"SELFTEST FAIL: {name} missed broken invariant {path}")
+                bad += 1
+        # bootstrap baselines pass vacuously
+        if check_file(name, copy.deepcopy(sample), {"bootstrap": True}):
+            print(f"SELFTEST FAIL: {name} bootstrap baseline did not pass")
+            bad += 1
+    if bad:
+        print(f"selftest: {bad} failure(s)")
+        return 1
+    print("selftest: the gate trips on synthetic >25% regressions and broken "
+          "invariants, and passes identical runs")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=".", help="repo root holding BENCH_*.json")
+    ap.add_argument("--update", action="store_true", help="refresh BENCH_baseline/")
+    ap.add_argument("--selftest", action="store_true", help="verify the gate logic")
+    args = ap.parse_args()
+    if args.selftest:
+        sys.exit(selftest())
+    if args.update:
+        update_baseline(args.root)
+        return
+    failures = run_gate(args.root)
+    if failures:
+        print("\nbench gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        sys.exit(1)
+    print("\nbench gate passed.")
+
+
+if __name__ == "__main__":
+    main()
