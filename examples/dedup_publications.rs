@@ -98,6 +98,7 @@ fn main() -> anyhow::Result<()> {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     };
     let truth = corpus.truth_pairs();
     let mut table = Table::new(

@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     };
     let t0 = std::time::Instant::now();
     let result = repsn::run(&corpus.entities, &cfg)?;

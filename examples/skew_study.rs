@@ -30,11 +30,20 @@
 //! compressed-vs-raw shuffle ratio is reported — the spill smoke test CI
 //! runs.
 //!
+//! With `--push`, every ladder configuration is re-run on a 4-slot
+//! `JobScheduler` with the **push-based shuffle**: reduce tasks start on
+//! their first runs instead of after the map wave.  Pair digests are
+//! asserted identical to the serial barrier runs, and
+//! `reduce_first_start_secs` must strictly precede the last map-task
+//! completion (`overlap_secs > 0`) on every ladder row — the push smoke
+//! test CI runs.
+//!
 //! ```bash
 //! cargo run --release --example skew_study -- --n 20000
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --speculative
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --balance blocksplit
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --sort-buffer 64
+//! cargo run --release --example skew_study -- --n 2000 --window 20 --push
 //! ```
 
 use std::sync::Arc;
@@ -44,8 +53,8 @@ use snmr::data::corpus::{generate, CorpusConfig};
 use snmr::data::skew::{skew_to_last_partition, zipf_skew_block_keys};
 use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
 use snmr::mapreduce::counters::names;
-use snmr::mapreduce::scheduler::{JobScheduler, SchedulerConfig};
-use snmr::mapreduce::sim::{simulate_job_chain, ClusterSpec};
+use snmr::mapreduce::scheduler::{Exec, JobScheduler, PushMode, SchedulerConfig};
+use snmr::mapreduce::sim::{simulate_job, simulate_job_chain, simulate_job_overlap, ClusterSpec};
 use snmr::mapreduce::TempSpillDir;
 use snmr::metrics::report::{write_report, Table};
 use snmr::sn::balance::{balanced_from_histogram, key_histogram_job, pair_balanced_min_size};
@@ -82,6 +91,10 @@ fn main() -> anyhow::Result<()> {
                 "speculative",
                 "re-run the ladder concurrently on a shared scheduler with speculation",
             ),
+            switch(
+                "push",
+                "re-run the ladder on a 4-slot scheduler with the push-based shuffle",
+            ),
             flag(
                 "balance",
                 "also run the load-balancing study with this strategy (blocksplit|pairrange)",
@@ -97,6 +110,7 @@ fn main() -> anyhow::Result<()> {
     let n = args.get_usize("n", 20_000).map_err(anyhow::Error::msg)?;
     let window = args.get_usize("window", 100).map_err(anyhow::Error::msg)?;
     let speculative = args.get_bool("speculative");
+    let push = args.get_bool("push");
     let sort_buffer = match args.get("sort-buffer") {
         None => None,
         Some(_) => Some(args.get_usize("sort-buffer", 64).map_err(anyhow::Error::msg)?),
@@ -162,6 +176,7 @@ fn main() -> anyhow::Result<()> {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     };
 
     let mut table = Table::new(
@@ -251,6 +266,85 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    if push {
+        // Push-based shuffle re-run: every ladder configuration on a
+        // 4-slot scheduler with run-granular reduce scheduling.  Output
+        // digests must match the serial barrier runs exactly, and the
+        // first reduce task must start strictly before the map wave ends.
+        println!("\n--- push-based shuffle re-run: 4-slot scheduler, run-granular flow ---");
+        let sched = JobScheduler::new(SchedulerConfig::slots(4).with_push(PushMode::Push));
+        let spec8 = ClusterSpec::paper_like(8);
+        let mut t5 = Table::new(
+            "Push ladder (4 shared slots): reduce starts on first runs",
+            &[
+                "p",
+                "identical",
+                "first_reduce_s",
+                "map_done_s",
+                "overlap_s",
+                "pushed_runs",
+                "sim8_push/barrier",
+            ],
+        );
+        for (((name, p, entities), digest), profiles) in
+            configs.iter().zip(&digests).zip(&serial_profiles)
+        {
+            // many map tasks → many map waves on 4 slots, so the first
+            // committed run precedes the wave end by a wide margin (the
+            // pair *set* is invariant to the map task count)
+            let mut cfg = sn_cfg(p);
+            cfg.num_map_tasks = 32;
+            // wall-clock overlap is scheduling-sensitive on loaded CI
+            // runners: allow a couple of retries before calling it a
+            // regression
+            let mut res = repsn::run_on(entities, &cfg, Exec::Scheduler(&sched))?;
+            for _retry in 0..2 {
+                if res.stats[0].overlap_secs > 0.0 {
+                    break;
+                }
+                res = repsn::run_on(entities, &cfg, Exec::Scheduler(&sched))?;
+            }
+            let identical = pair_digest(&res) == *digest;
+            assert!(identical, "{name}: push output diverged from the barrier run");
+            let stats = &res.stats[0];
+            assert!(
+                stats.overlap_secs > 0.0,
+                "{name}: push run showed no map/reduce overlap \
+                 (first reduce {:.4}s, map done {:.4}s)",
+                stats.reduce_first_start_secs,
+                stats.map_wave_done_secs
+            );
+            // simulated 8-core makespans from the serial workers=1
+            // profiles: the overlap mode must never exceed the barrier
+            let barrier_sim: f64 = profiles
+                .iter()
+                .map(|pr| simulate_job(pr, &spec8).total())
+                .sum();
+            let push_sim: f64 = profiles
+                .iter()
+                .map(|pr| simulate_job_overlap(pr, &spec8).total())
+                .sum();
+            assert!(
+                push_sim <= barrier_sim + 1e-9,
+                "{name}: simulated push makespan {push_sim:.2}s exceeds barrier {barrier_sim:.2}s"
+            );
+            t5.row(vec![
+                name.clone(),
+                identical.to_string(),
+                format!("{:.4}", stats.reduce_first_start_secs),
+                format!("{:.4}", stats.map_wave_done_secs),
+                format!("{:.4}", stats.overlap_secs),
+                res.counters.get(names::PUSHED_RUNS).to_string(),
+                format!("{:.3}", push_sim / barrier_sim.max(1e-12)),
+            ]);
+        }
+        println!("{}", t5.render());
+        println!(
+            "all ladder runs pushed: outputs identical to the barrier digests,\n\
+             every first reduce start preceded its map wave's completion."
+        );
+    }
+
     if let Some(strategy) = balance {
         // Load-balancing study: a Zipf block-key corpus (a few giant
         // blocks) through unbalanced RepSN vs the chosen two-job pipeline.
@@ -269,6 +363,7 @@ fn main() -> anyhow::Result<()> {
             sort_buffer_records: None,
             balance: strategy,
             spill: None,
+            push: false,
         };
         let unbalanced = repsn::run(&bal_entities, &cfg(BalanceStrategy::None))?;
         let (unb_max, unb_total) = reduce_pair_skew(&unbalanced.stats[0]);

@@ -78,6 +78,7 @@ fn main() -> anyhow::Result<()> {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         };
         eprintln!("w={w}: running RepSN...");
         let t0 = std::time::Instant::now();

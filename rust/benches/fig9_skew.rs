@@ -133,6 +133,7 @@ fn main() -> anyhow::Result<()> {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         };
         eprintln!("running RepSN with {name} (g={g:.2})...");
         let res = repsn::run(entities, &cfg)?;
@@ -184,6 +185,7 @@ fn main() -> anyhow::Result<()> {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     };
     let zipf_res = repsn::run(&zipf_entities, &zipf_cfg)?;
     let mut t_spec = Table::new(
@@ -251,6 +253,7 @@ fn main() -> anyhow::Result<()> {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     };
     eprintln!("running multipass: serial baseline...");
     let t0 = Instant::now();
@@ -334,6 +337,7 @@ fn main() -> anyhow::Result<()> {
         sort_buffer_records: None,
         balance: strategy,
         spill: None,
+        push: false,
     };
     let cluster8 = ClusterSpec::paper_like(8);
     let mut t_bal = Table::new(

@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
                 sort_buffer_records: None,
                 balance: Default::default(),
                 spill: None,
+                push: false,
             };
             let srp_res = srp::run(&corpus.entities, &cfg)?;
             let rep_res = repsn::run(&corpus.entities, &cfg)?;

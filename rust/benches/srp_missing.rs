@@ -54,6 +54,7 @@ fn main() -> anyhow::Result<()> {
                 sort_buffer_records: None,
                 balance: Default::default(),
                 spill: None,
+                push: false,
             };
             let seq_pairs = seq::run_blocking(&corpus.entities, &bk, w).len();
             let srp_pairs = srp::run(&corpus.entities, &cfg)?.pair_set().len();

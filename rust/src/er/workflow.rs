@@ -171,6 +171,7 @@ mod tests {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         }
     }
 

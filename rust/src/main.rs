@@ -208,6 +208,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {
@@ -263,6 +264,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {

@@ -43,6 +43,17 @@ pub struct JobConfig {
     /// `SHUFFLE_BYTES_RAW` / `SPILL_BYTES_WRITTEN` / `SPILLED_RUNS`
     /// alongside.  `None` (default) keeps runs in memory.
     pub spill: Option<SpillSpec>,
+    /// Request the push-based shuffle for this job: sealed map-side runs
+    /// flow to reducers through the
+    /// [`ShuffleService`](crate::mapreduce::push::ShuffleService) and the
+    /// job's reduce tasks start on their first runs instead of after the
+    /// map wave.  Honored when the job executes on a
+    /// [`JobScheduler`](crate::mapreduce::scheduler::JobScheduler)
+    /// (equivalent to the scheduler-wide
+    /// [`PushMode`](crate::mapreduce::scheduler::PushMode) knob, per
+    /// job); the serial [`run_job`](crate::mapreduce::run_job) driver is
+    /// the barrier reference path and ignores it.
+    pub push: bool,
 }
 
 impl Default for JobConfig {
@@ -58,6 +69,7 @@ impl Default for JobConfig {
             record_task_timings: true,
             sort_buffer_records: None,
             spill: None,
+            push: false,
         }
     }
 }
@@ -96,6 +108,13 @@ impl JobConfig {
         self.spill = spill;
         self
     }
+
+    /// Request the push-based shuffle for this job (see
+    /// [`JobConfig::push`]).
+    pub fn with_push(mut self, push: bool) -> Self {
+        self.push = push;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +149,15 @@ mod tests {
         assert!(c.spill.is_some());
         let c = c.with_spill(None);
         assert!(c.spill.is_none());
+    }
+
+    #[test]
+    fn push_builder_round_trips() {
+        let c = JobConfig::default();
+        assert!(!c.push, "push defaults off (the barrier reference path)");
+        let c = c.with_push(true);
+        assert!(c.push);
+        assert!(!c.with_push(false).push);
     }
 
     #[test]

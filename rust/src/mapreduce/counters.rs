@@ -56,6 +56,17 @@ pub mod names {
     /// Speculative attempts that finished before the original task
     /// (first-completion-wins).
     pub const SPECULATIVE_WON: &str = "engine.speculative_won";
+    /// Intermediate runs committed through the push-based
+    /// [`ShuffleService`](crate::mapreduce::push::ShuffleService) (only
+    /// present on push-mode jobs).  Counts winning attempts' runs only:
+    /// a retracted speculative attempt's pushes never appear here.
+    pub const PUSHED_RUNS: &str = "engine.pushed_runs";
+    /// Push-mode runs a reduce task consumed only in its final catch-up
+    /// batch (delivered after the map wave sealed) rather than folding
+    /// them into its pre-merged prefix while maps were still running.
+    /// An upper bound on the truly-late runs: a reducer busy folding may
+    /// pick up pre-seal commits in the catch-up batch too.
+    pub const LATE_RUNS: &str = "engine.late_runs";
 }
 
 impl Counters {

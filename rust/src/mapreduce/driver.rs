@@ -1,0 +1,115 @@
+//! The shared barrier-job driver: split → map wave → shuffle transpose →
+//! reduce wave → stats, written once.
+//!
+//! Both executors run this exact control flow for barrier (two-wave)
+//! jobs — the serial [`run_job`](super::run_job) plugs in private-pool
+//! wave closures, the [`JobScheduler`](super::scheduler::JobScheduler)
+//! plugs in shared-slot, speculation-capable ones.  Before this module
+//! the plumbing lived twice (engine + scheduler) and the push-based
+//! shuffle would have made it three; now a wave executor is just the two
+//! closures and everything else — split accounting, per-phase timings,
+//! counter folds, the transpose, stats assembly — cannot drift between
+//! paths.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::config::JobConfig;
+use super::counters::{names, Counters};
+use super::engine::{
+    record_map_wave, record_reduce_wave, split_input, transpose_runs, JobResult, JobStats,
+    MapTaskOutput, ReduceTaskOutput,
+};
+use super::sortspill::Run;
+
+/// Fold a finished map wave into `stats` and the job counters, and
+/// transpose run ownership for the reduce side.  Shared by the barrier
+/// driver below **and** the scheduler's push path (where the runs
+/// already flowed through the `ShuffleService`, so the returned
+/// per-reducer lists come back empty and only the byte accounting
+/// matters) — one accounting surface, so the two phase structures
+/// cannot drift.
+pub(crate) fn record_map_phase<KT, VT>(
+    stats: &mut JobStats,
+    counters: &Counters,
+    map_outputs: Vec<MapTaskOutput<KT, VT>>,
+    r: usize,
+    has_combiner: bool,
+    compressed_spill: bool,
+) -> Vec<Vec<Run<(KT, VT)>>> {
+    stats.map_task_secs = map_outputs.iter().map(|o| o.secs).collect();
+    stats.map_output_records = record_map_wave(counters, &map_outputs, has_combiner);
+    stats.spill_bytes_written = map_outputs.iter().map(|o| o.spill_file_bytes).sum();
+    let (per_reducer_runs, shuffle_bytes, shuffle_bytes_raw) = transpose_runs(map_outputs, r);
+    counters.add(names::SHUFFLE_BYTES, shuffle_bytes.iter().sum());
+    counters.add(names::SHUFFLE_BYTES_RAW, shuffle_bytes_raw.iter().sum());
+    stats.shuffle_bytes_per_reducer = shuffle_bytes;
+    stats.shuffle_bytes_raw = shuffle_bytes_raw.iter().sum();
+    stats.intermediate_compressed = compressed_spill && stats.spill_bytes_written > 0;
+    per_reducer_runs
+}
+
+/// Drive one barrier job: `map_wave` executes every split into a
+/// [`MapTaskOutput`] (on whatever slots the caller owns), the driver
+/// transposes run ownership, and `reduce_wave` executes the per-reducer
+/// run bundles.  All counter recording and [`JobStats`] assembly happens
+/// here, identically for every executor.
+pub(crate) fn drive_barrier_job<KI, VI, KT, VT, KO, VO, MW, RW>(
+    config: &JobConfig,
+    input: Vec<(KI, VI)>,
+    counters: &Arc<Counters>,
+    has_combiner: bool,
+    map_wave: MW,
+    reduce_wave: RW,
+) -> JobResult<KO, VO>
+where
+    MW: FnOnce(Vec<Vec<(KI, VI)>>) -> Vec<MapTaskOutput<KT, VT>>,
+    RW: FnOnce(Vec<Vec<Run<(KT, VT)>>>) -> Vec<ReduceTaskOutput<KO, VO>>,
+{
+    let t_start = Instant::now();
+    let r = config.num_reduce_tasks;
+    let compressed_spill = config.spill.as_ref().map(|s| s.compress()).unwrap_or(false);
+
+    // ---- split ------------------------------------------------------------
+    counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
+    let splits = split_input(input, config.num_map_tasks); // may be fewer for tiny inputs
+
+    // ---- map wave ----------------------------------------------------------
+    let t_map = Instant::now();
+    let map_outputs = map_wave(splits);
+    let map_phase_secs = t_map.elapsed().as_secs_f64();
+
+    let mut stats = JobStats {
+        map_phase_secs,
+        map_wave_done_secs: t_start.elapsed().as_secs_f64(),
+        ..Default::default()
+    };
+
+    // ---- shuffle -----------------------------------------------------------
+    // Transpose run ownership only — the k-way merge itself streams inside
+    // each reduce task.
+    let t_shuffle = Instant::now();
+    let per_reducer_runs =
+        record_map_phase(&mut stats, counters, map_outputs, r, has_combiner, compressed_spill);
+    stats.shuffle_phase_secs = t_shuffle.elapsed().as_secs_f64();
+
+    // ---- reduce wave -------------------------------------------------------
+    // On the barrier paths the first reduce task starts here — strictly
+    // after the whole map wave; overlap_secs stays 0 (the push shuffle is
+    // what makes it positive).
+    let t_reduce = Instant::now();
+    stats.reduce_first_start_secs = t_start.elapsed().as_secs_f64();
+    let red_outputs = reduce_wave(per_reducer_runs);
+    stats.reduce_phase_secs = t_reduce.elapsed().as_secs_f64();
+    stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
+    stats.reduce_task_output_records = red_outputs.iter().map(|o| o.output.len() as u64).collect();
+    stats.reduce_output_records = record_reduce_wave(counters, &red_outputs);
+    let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
+    stats.total_secs = t_start.elapsed().as_secs_f64();
+
+    JobResult {
+        outputs,
+        counters: Arc::clone(counters),
+        stats,
+    }
+}

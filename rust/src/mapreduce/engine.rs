@@ -28,6 +28,7 @@ use std::time::Instant;
 use super::combiner::{combine_sorted_bucket, Combiner};
 use super::config::JobConfig;
 use super::counters::{names, Counters};
+use super::push::PushAttempt;
 use super::shuffle::MergeIter;
 use super::sortspill::{ResolvedSpill, Run, RunRecords, RunSorter};
 use super::splits::even_splits;
@@ -87,6 +88,23 @@ pub struct JobStats {
     /// the `sn::loadbalance` strategies exist to flatten
     /// (`max / (total / tasks)` is the skew ratio they report).
     pub reduce_task_output_records: Vec<u64>,
+    /// When the job's first reduce task started executing (stamped on
+    /// the reduce slot itself), in seconds after job start.  On the
+    /// barrier paths this is the reduce-wave start (strictly after every
+    /// map task); with the push-based shuffle ([`JobConfig::push`] / the
+    /// scheduler's [`PushMode`](crate::mapreduce::scheduler::PushMode))
+    /// a reduce task is submitted at its first mailbox arrival, so on a
+    /// multi-wave map phase with a free reduce slot this strictly
+    /// precedes the last map-task completion.
+    pub reduce_first_start_secs: f64,
+    /// When the last map task of the job was decided, in seconds after
+    /// job start.
+    pub map_wave_done_secs: f64,
+    /// How long reduce execution overlapped the job's own map wave:
+    /// `map_wave_done_secs − reduce_first_start_secs`, clamped at 0.
+    /// Always 0 on the barrier paths — a positive value is the direct
+    /// evidence the push shuffle removed the map→reduce barrier.
+    pub overlap_secs: f64,
 }
 
 /// Everything a finished job returns.
@@ -164,11 +182,133 @@ pub(crate) struct MapTaskOutput<KT, VT> {
     pub combine_out: u64,
 }
 
+/// Routes each sealed map-side run through combine → accounting → spill
+/// serialization, then either hands it to the push-based shuffle the
+/// moment it exists or retains it for the driver's barrier transpose.
+/// One code path for both modes — which is what keeps their byte and
+/// record counters identical.
+struct RunRouter<'a, KT, VT>
+where
+    KT: SizeEstimate,
+    VT: SizeEstimate,
+{
+    spill: Option<&'a ResolvedSpill<(KT, VT)>>,
+    combine_fn: Option<&'a CombineFn<KT, VT>>,
+    push: Option<&'a PushAttempt<(KT, VT)>>,
+    bucket_runs: Vec<Vec<Run<(KT, VT)>>>,
+    bucket_bytes: Vec<u64>,
+    bucket_raw_bytes: Vec<u64>,
+    spilled: u64,
+    spill_runs: u64,
+    spill_file_runs: u64,
+    spill_file_bytes: u64,
+    combine_in: u64,
+    combine_out: u64,
+}
+
+impl<'a, KT, VT> RunRouter<'a, KT, VT>
+where
+    KT: SizeEstimate,
+    VT: SizeEstimate,
+{
+    fn new(
+        r: usize,
+        spill: Option<&'a ResolvedSpill<(KT, VT)>>,
+        combine_fn: Option<&'a CombineFn<KT, VT>>,
+        push: Option<&'a PushAttempt<(KT, VT)>>,
+    ) -> Self {
+        Self {
+            spill,
+            combine_fn,
+            push,
+            bucket_runs: (0..r).map(|_| Vec::new()).collect(),
+            bucket_bytes: vec![0; r],
+            bucket_raw_bytes: vec![0; r],
+            spilled: 0,
+            spill_runs: 0,
+            spill_file_runs: 0,
+            spill_file_bytes: 0,
+            combine_in: 0,
+            combine_out: 0,
+        }
+    }
+
+    /// Route every run the sorters have sealed so far (mid-task, so a
+    /// push-mode map task ships spills while it is still mapping).
+    fn drain_sealed<C>(&mut self, sorters: &mut [RunSorter<(KT, VT), C>], counters: &Counters)
+    where
+        C: Fn(&(KT, VT), &(KT, VT)) -> std::cmp::Ordering,
+    {
+        for (b, sorter) in sorters.iter_mut().enumerate() {
+            for run in sorter.drain_sealed() {
+                self.route(b, run, counters);
+            }
+        }
+    }
+
+    /// Combine, account, optionally serialize, and dispatch one run.
+    fn route(&mut self, b: usize, mut run: Vec<(KT, VT)>, counters: &Counters) {
+        if run.is_empty() {
+            return;
+        }
+        self.spill_runs += 1;
+        if let Some(cf) = self.combine_fn {
+            let (ci, co) = cf(&mut run, counters);
+            self.combine_in += ci;
+            self.combine_out += co;
+        }
+        let raw: u64 = run
+            .iter()
+            .map(|(k, v)| (k.size_bytes() + v.size_bytes()) as u64)
+            .sum();
+        self.bucket_raw_bytes[b] += raw;
+        self.spilled += run.len() as u64;
+        let sealed = match self.spill {
+            None => {
+                self.bucket_bytes[b] += raw;
+                Run::Mem(run)
+            }
+            Some(sp) => {
+                let rf = sp
+                    .write_run(&run)
+                    .unwrap_or_else(|e| panic!("spill map run: {e:#}"));
+                self.spill_file_runs += 1;
+                self.spill_file_bytes += rf.file_bytes();
+                self.bucket_bytes[b] += rf.file_bytes();
+                Run::Spilled(rf)
+            }
+        };
+        match self.push {
+            Some(attempt) => attempt.push(b, sealed),
+            None => self.bucket_runs[b].push(sealed),
+        }
+    }
+
+    fn into_output(self, t0: Instant, records: u64, bytes: u64) -> MapTaskOutput<KT, VT> {
+        MapTaskOutput {
+            bucket_runs: self.bucket_runs,
+            bucket_bytes: self.bucket_bytes,
+            bucket_raw_bytes: self.bucket_raw_bytes,
+            secs: t0.elapsed().as_secs_f64(),
+            records,
+            bytes,
+            spilled: self.spilled,
+            spill_runs: self.spill_runs,
+            spill_file_runs: self.spill_file_runs,
+            spill_file_bytes: self.spill_file_bytes,
+            combine_in: self.combine_in,
+            combine_out: self.combine_out,
+        }
+    }
+}
+
 /// Execute one map task over one owned split: `configure` → `map`* →
-/// `close`, draining emitted records into per-partition [`RunSorter`]s,
-/// pre-reducing each sealed run with the optional combiner, then — when
-/// `spill` is set — serializing every run to disk through the codec so
-/// the task's intermediates leave memory before the shuffle.
+/// `close`, draining emitted records into per-partition [`RunSorter`]s.
+/// Every sealed run is routed — combined by the optional combiner,
+/// serialized to disk when `spill` is set — *at seal time*: with a
+/// `push` attempt the run leaves the task the moment it exists
+/// (mid-task under a sort budget), otherwise the sealed runs are
+/// returned for the barrier shuffle's transpose.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn exec_map_task<KI, VI, KT, VT>(
     split: Vec<(KI, VI)>,
@@ -179,6 +319,7 @@ pub(crate) fn exec_map_task<KI, VI, KT, VT>(
     partitioner: &dyn Partitioner<KT>,
     combine_fn: Option<&CombineFn<KT, VT>>,
     counters: &Counters,
+    push: Option<&PushAttempt<(KT, VT)>>,
 ) -> MapTaskOutput<KT, VT>
 where
     KT: Ord + SizeEstimate,
@@ -189,98 +330,31 @@ where
     let mut sorters: Vec<_> = (0..r)
         .map(|_| RunSorter::new(budget, key_cmp::<KT, VT>))
         .collect();
+    let mut router = RunRouter::new(r, spill, combine_fn, push);
     let mut task = mapper.create_task();
     let mut out = Emitter::new();
     let mut records: u64 = 0;
     task.configure(&mut out, counters);
     if out.len() >= budget {
         records += drain_emitter(&mut out, partitioner, r, &mut sorters);
+        router.drain_sealed(&mut sorters, counters);
     }
     for (k, v) in split {
         task.map(k, v, &mut out, counters);
         if out.len() >= budget {
             records += drain_emitter(&mut out, partitioner, r, &mut sorters);
+            router.drain_sealed(&mut sorters, counters);
         }
     }
     task.close(&mut out, counters);
     records += drain_emitter(&mut out, partitioner, r, &mut sorters);
     let bytes = out.bytes();
-
-    let mut mem_bucket_runs: Vec<Vec<Vec<(KT, VT)>>> = Vec::with_capacity(r);
-    let mut spill_runs = 0u64;
-    for s in sorters {
-        let runs = s.into_runs();
-        spill_runs += runs.len() as u64;
-        mem_bucket_runs.push(runs);
-    }
-    let (mut combine_in, mut combine_out) = (0u64, 0u64);
-    if let Some(cf) = combine_fn {
-        for runs in &mut mem_bucket_runs {
-            for run in runs.iter_mut() {
-                let (ci, co) = cf(run, counters);
-                combine_in += ci;
-                combine_out += co;
-            }
+    for (b, sorter) in sorters.into_iter().enumerate() {
+        for run in sorter.into_runs() {
+            router.route(b, run, counters);
         }
     }
-    let mut spilled = 0u64;
-    let bucket_raw_bytes: Vec<u64> = mem_bucket_runs
-        .iter()
-        .map(|runs| {
-            runs.iter()
-                .flatten()
-                .map(|(k, v)| (k.size_bytes() + v.size_bytes()) as u64)
-                .sum()
-        })
-        .collect();
-    for runs in &mem_bucket_runs {
-        for run in runs {
-            spilled += run.len() as u64;
-        }
-    }
-
-    // hand each sorted (and combined) run to the shuffle — in memory, or
-    // serialized to disk through the codec when a spill spec is set
-    let mut spill_file_runs = 0u64;
-    let mut spill_file_bytes = 0u64;
-    let mut bucket_runs: Vec<Vec<Run<(KT, VT)>>> = Vec::with_capacity(r);
-    let mut bucket_bytes: Vec<u64> = Vec::with_capacity(r);
-    for (b, runs) in mem_bucket_runs.into_iter().enumerate() {
-        match spill {
-            None => {
-                bucket_bytes.push(bucket_raw_bytes[b]);
-                bucket_runs.push(runs.into_iter().map(Run::Mem).collect());
-            }
-            Some(sp) => {
-                let mut buf = sp.buffer(key_cmp::<KT, VT>);
-                for run in runs {
-                    buf.push_run(run)
-                        .unwrap_or_else(|e| panic!("spill map run: {e:#}"));
-                }
-                spill_file_bytes += buf.spilled_bytes;
-                spill_file_runs += buf.run_count() as u64;
-                bucket_bytes.push(buf.spilled_bytes);
-                bucket_runs.push(
-                    buf.into_runs()
-                        .unwrap_or_else(|e| panic!("seal spill runs: {e:#}")),
-                );
-            }
-        }
-    }
-    MapTaskOutput {
-        bucket_runs,
-        bucket_bytes,
-        bucket_raw_bytes,
-        secs: t0.elapsed().as_secs_f64(),
-        records,
-        bytes,
-        spilled,
-        spill_runs,
-        spill_file_runs,
-        spill_file_bytes,
-        combine_in,
-        combine_out,
-    }
+    router.into_output(t0, records, bytes)
 }
 
 /// One reduce task's output plus its measurements.
@@ -524,97 +598,58 @@ where
     KO: Send + SizeEstimate + 'static,
     VO: Send + SizeEstimate + 'static,
 {
-    let t_start = Instant::now();
     let counters = Arc::new(Counters::new());
-    let m = config.num_map_tasks;
+    let workers = config.workers;
     let r = config.num_reduce_tasks;
     let sort_budget = config.sort_buffer_records;
     // resolve the type-erased spill codec once per job (panics on a codec
     // built for different record types — a wiring bug, not a data error)
     let spill: Option<ResolvedSpill<(KT, VT)>> = config.spill.as_ref().map(|s| s.resolve());
-    let compressed_spill = config.spill.as_ref().map(|s| s.compress()).unwrap_or(false);
+    let has_combiner = combine_fn.is_some();
 
-    // ---- split ------------------------------------------------------------
-    counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
-    let splits = split_input(input, m); // may be fewer than `m` for tiny inputs
-
-    // ---- map phase ---------------------------------------------------------
     // Each map task: configure → map* → close; emitted records drain into
     // per-partition RunSorters (Hadoop's map-side "sort & spill": every
     // sealed chunk is one sorted run), then the combiner pre-reduces each
     // run before it is handed to the shuffle.
-    let t_map = Instant::now();
-    let map_outputs: Vec<MapTaskOutput<KT, VT>> = {
+    let map_wave = {
         let mapper = Arc::clone(&mapper);
         let partitioner = Arc::clone(&partitioner);
         let counters = Arc::clone(&counters);
-        let combine_fn = combine_fn.clone();
-        let spill = spill.clone();
-        run_owned(config.workers, splits, move |_i, split: Vec<(KI, VI)>| {
-            exec_map_task(
-                split,
-                r,
-                sort_budget,
-                spill.as_ref(),
-                mapper.as_ref(),
-                partitioner.as_ref(),
-                combine_fn.as_ref(),
-                &counters,
-            )
-        })
+        move |splits: Vec<Vec<(KI, VI)>>| {
+            run_owned(workers, splits, move |_i, split: Vec<(KI, VI)>| {
+                exec_map_task(
+                    split,
+                    r,
+                    sort_budget,
+                    spill.as_ref(),
+                    mapper.as_ref(),
+                    partitioner.as_ref(),
+                    combine_fn.as_ref(),
+                    &counters,
+                    None,
+                )
+            })
+        }
     };
-    let map_phase_secs = t_map.elapsed().as_secs_f64();
-
-    let mut stats = JobStats {
-        map_task_secs: map_outputs.iter().map(|o| o.secs).collect(),
-        map_phase_secs,
-        ..Default::default()
-    };
-    stats.map_output_records = record_map_wave(&counters, &map_outputs, combine_fn.is_some());
-    stats.spill_bytes_written = map_outputs.iter().map(|o| o.spill_file_bytes).sum();
-
-    // ---- shuffle -----------------------------------------------------------
-    // Transpose run ownership only — the k-way merge itself streams inside
-    // each reduce task below.
-    let t_shuffle = Instant::now();
-    let (per_reducer_runs, shuffle_bytes, shuffle_bytes_raw) = transpose_runs(map_outputs, r);
-    counters.add(names::SHUFFLE_BYTES, shuffle_bytes.iter().sum());
-    counters.add(names::SHUFFLE_BYTES_RAW, shuffle_bytes_raw.iter().sum());
-    stats.shuffle_bytes_per_reducer = shuffle_bytes;
-    stats.shuffle_bytes_raw = shuffle_bytes_raw.iter().sum();
-    stats.intermediate_compressed = compressed_spill && stats.spill_bytes_written > 0;
-    stats.shuffle_phase_secs = t_shuffle.elapsed().as_secs_f64();
-
-    // ---- reduce phase --------------------------------------------------
     // Each reduce task lazily k-way-merges its runs and walks groups
     // straight off the heap; only the current group's values are buffered
     // (they must form a contiguous `&[VT]` for the forward-cursor
     // iterator).
-    let t_reduce = Instant::now();
-    let red_outputs: Vec<ReduceTaskOutput<KO, VO>> = {
+    let reduce_wave = {
         let reducer = Arc::clone(&reducer);
         let grouping = Arc::clone(&grouping);
         let counters = Arc::clone(&counters);
-        run_owned(
-            config.workers,
-            per_reducer_runs,
-            move |_j, runs: Vec<Run<(KT, VT)>>| {
-                exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &counters)
-            },
-        )
+        move |per_reducer_runs: Vec<Vec<Run<(KT, VT)>>>| {
+            run_owned(
+                workers,
+                per_reducer_runs,
+                move |_j, runs: Vec<Run<(KT, VT)>>| {
+                    exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &counters)
+                },
+            )
+        }
     };
-    stats.reduce_phase_secs = t_reduce.elapsed().as_secs_f64();
-    stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
-    stats.reduce_task_output_records = red_outputs.iter().map(|o| o.output.len() as u64).collect();
-    stats.reduce_output_records = record_reduce_wave(&counters, &red_outputs);
-    let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
-    stats.total_secs = t_start.elapsed().as_secs_f64();
-
-    JobResult {
-        outputs,
-        counters,
-        stats,
-    }
+    super::driver::drive_barrier_job(config, input, &counters, has_combiner, map_wave, reduce_wave)
 }
 
 #[cfg(test)]

@@ -39,20 +39,21 @@
 //!    `SHUFFLE_BYTES` for associative aggregations.
 //! 3. **Disk-backed, compressed runs** (optional) — with
 //!    [`JobConfig::spill`] set, every sealed (and combined) run is
-//!    serialized through a [`sortspill::Codec`] into a run file,
+//!    serialized through a [`sortspill::Codec`] into a run file —
+//!    *at seal time*, so runs can leave a still-running map task —
 //!    whole-run DEFLATE-compressed by default (the paper's cluster
 //!    compresses intermediates, §5.1).  The intermediate currency
 //!    becomes the either/or [`sortspill::Run`]: owned in-memory records
 //!    *or* a codec-serialized run file — both executors handle both
 //!    forms identically.  Map-side memory is released before the
-//!    shuffle; reduce-side, each run's (inflated) *bytes* are loaded
-//!    while its records decode lazily into the merge, so peak reduce
-//!    memory is one partition's byte volume rather than its decoded
-//!    record graph.  (True record-streaming reads from disk are the
-//!    remaining step to fully larger-than-RAM partitions.)
-//!    `SHUFFLE_BYTES` then reports the on-disk (compressed) volume;
-//!    `SHUFFLE_BYTES_RAW`, `SPILL_BYTES_WRITTEN` and `SPILLED_RUNS`
-//!    report the raw estimate and the spill I/O alongside.
+//!    shuffle; reduce-side, spilled records decode through a **chunked
+//!    streaming window** ([`sortspill::SPILL_READ_CHUNK`] bytes at a
+//!    time, pulled straight off the inflating reader), so peak reduce
+//!    memory per run source is a buffer size — partitions larger than
+//!    RAM stream end to end.  `SHUFFLE_BYTES` then reports the on-disk
+//!    (compressed) volume; `SHUFFLE_BYTES_RAW`, `SPILL_BYTES_WRITTEN`
+//!    and `SPILLED_RUNS` report the raw estimate and the spill I/O
+//!    alongside.
 //! 4. **Shuffle transpose** — the driver only reassigns run *ownership*
 //!    (reducer `j` takes every map task's bucket-`j` runs — or their
 //!    file handles — in map-task order).  `shuffle_phase_secs` measures
@@ -62,10 +63,35 @@
 //!    merges its runs with [`shuffle::MergeIter`] and walks
 //!    grouping-comparator groups straight off the heap, buffering only
 //!    the current group's values.  Spilled runs stream through the same
-//!    merge via [`sortspill::RunRecords`] (one loaded run buffer each,
-//!    decoded record-by-record).  The per-reducer merges therefore run
-//!    in parallel on the worker pool, and reduce can start on the first
-//!    group before the last run is fully consumed.
+//!    merge via [`sortspill::RunRecords`].  The per-reducer merges
+//!    therefore run in parallel on the worker pool, and reduce can
+//!    start on the first group before the last run is fully consumed.
+//!
+//! ## Phase structure: barrier vs push
+//!
+//! Two phase structures execute the same job with byte-identical
+//! output:
+//!
+//! * **Barrier** (the reference path, and the paper's Hadoop 0.20
+//!   model): map wave → shuffle transpose → reduce wave, with a hard
+//!   barrier between the waves — reduce slots idle for the whole map
+//!   phase, which is exactly the structure Figures 8/9 measure.  Both
+//!   [`run_job`] (private pools) and the [`scheduler`] (shared slots)
+//!   run this flow through one shared driver, so their accounting
+//!   cannot drift.
+//! * **Push** ([`scheduler::PushMode::Push`] or [`JobConfig::push`], on
+//!   the [`scheduler`] only): the [`push::ShuffleService`] replaces the
+//!   barrier with per-partition mailboxes — map attempts push each run
+//!   as it seals (mid-task under a sort budget), reduce tasks are
+//!   submitted at their **first run's arrival** and pre-merge the
+//!   committed prefix while maps still run, catching up on late runs
+//!   after the wave seals.  [`JobStats::reduce_first_start_secs`] /
+//!   [`JobStats::overlap_secs`] quantify the recovered overlap;
+//!   `PUSHED_RUNS` / `LATE_RUNS` count the flow.  The simulator's
+//!   [`sim::simulate_job_overlap`] models the same structure (release
+//!   the reduce wave at the first map completion, never finish before
+//!   the last), while the two-wave [`sim::simulate_job`] stays the
+//!   calibration reference.
 //!
 //! The cluster simulator charges the matching costs: a compressed
 //! profile shrinks the simulated shuffle and disk materialization but
@@ -116,7 +142,9 @@ pub mod combiner;
 pub mod config;
 pub mod counters;
 pub mod dfs;
+mod driver;
 pub mod engine;
+pub mod push;
 pub mod scheduler;
 pub mod seqfile;
 pub mod shuffle;
@@ -129,10 +157,11 @@ pub use combiner::{Combiner, FnCombiner};
 pub use config::JobConfig;
 pub use counters::Counters;
 pub use engine::{run_job, run_job_with_combiner, JobResult, JobStats};
-pub use scheduler::{Exec, JobHandle, JobScheduler, SchedulerConfig, SpecPolicy};
+pub use push::{PushAttempt, ShuffleService};
+pub use scheduler::{Exec, JobHandle, JobScheduler, PushMode, SchedulerConfig, SpecPolicy};
 pub use shuffle::MergeIter;
 pub use sortspill::{
-    Codec, DeflateCodec, KeyValueCodec, SpillingBuffer, SpillSpec, StringPairCodec, TempSpillDir,
+    Codec, DeflateCodec, KeyValueCodec, SpillSpec, StringPairCodec, TempSpillDir,
 };
 pub use types::{
     Emitter, FnMapTask, FnReduceTask, HashPartitioner, MapTask, MapTaskFactory, Partitioner,

@@ -44,29 +44,64 @@
 //! ([`engine::exec_map_task`](super::engine) / `exec_reduce_task`), which
 //! makes "scheduler output == serial output" structural rather than
 //! per-job luck; `tests/prop_sched.rs` asserts it property-style.
+//!
+//! ## Push-based shuffle
+//!
+//! With [`PushMode::Push`] (scheduler-wide) or
+//! [`JobConfig::push`](crate::mapreduce::JobConfig::push) (per job), a
+//! job's map→reduce barrier disappears: map attempts push each sealed
+//! run into the job's [`ShuffleService`](super::push::ShuffleService)
+//! mailboxes the moment it exists, a dispatcher thread submits each
+//! reduce task to the shared reduce slots at its **first run's
+//! arrival**, and reducers pre-merge the committed run prefix while the
+//! map wave is still running (the overlap the two-wave model forfeits —
+//! the communication/computation overlap Afrati et al. point to).
+//! Output stays byte-identical to the barrier path, which remains the
+//! reference baseline; see the [`push`](super::push) module docs for the
+//! ordering and speculation-retraction rules, and
+//! [`JobStats::overlap_secs`] for the measured effect.
 
 mod speculate;
 
 pub use speculate::SpecPolicy;
 
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::combiner::{combine_sorted_bucket, Combiner};
 use super::config::JobConfig;
 use super::counters::{names, Counters};
+use super::driver;
 use super::engine::{
-    exec_map_task, exec_reduce_task, record_map_wave, record_reduce_wave, run_job,
-    run_job_with_combiner, split_input, transpose_runs, CombineFn, GroupFn, JobResult, JobStats,
-    MapTaskOutput, ReduceTaskOutput,
+    exec_map_task, exec_reduce_task, record_reduce_wave, run_job, run_job_with_combiner,
+    split_input, CombineFn, GroupFn, JobResult, JobStats, MapTaskOutput, ReduceTaskOutput,
 };
+use super::push::{self, ShuffleService};
 use super::sim::ClusterSpec;
 use super::sortspill::{ResolvedSpill, Run};
 use super::types::{MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{OnceSlots, ThreadPool};
 
-/// Scheduler shape: shared slot counts plus the speculation knobs.
+/// Whether jobs on this scheduler ship intermediates through the barrier
+/// shuffle or the push-based [`ShuffleService`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PushMode {
+    /// Two synchronous waves per job: every reduce task starts only
+    /// after the whole map wave (the paper's Hadoop 0.20 model — the
+    /// reference path every push run is checked against).
+    #[default]
+    Barrier,
+    /// Run-granular flow: map attempts push each sealed run into
+    /// per-partition mailboxes and a job's reduce tasks are submitted to
+    /// the shared reduce slots as soon as their first runs arrive,
+    /// overlapping the job's reduce wave with its *own* map wave.
+    Push,
+}
+
+/// Scheduler shape: shared slot counts plus the speculation and shuffle
+/// knobs.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
     /// Concurrent map tasks across *all* jobs.
@@ -77,16 +112,22 @@ pub struct SchedulerConfig {
     pub speculative: bool,
     /// Straggler-detection thresholds.
     pub policy: SpecPolicy,
+    /// Barrier or push-based shuffle for every job on this scheduler
+    /// (a single job can also opt in via
+    /// [`JobConfig::push`](crate::mapreduce::JobConfig::push)).
+    pub push: PushMode,
 }
 
 impl SchedulerConfig {
-    /// `n` map slots and `n` reduce slots, speculation off.
+    /// `n` map slots and `n` reduce slots, speculation off, barrier
+    /// shuffle.
     pub fn slots(n: usize) -> Self {
         Self {
             map_slots: n.max(1),
             reduce_slots: n.max(1),
             speculative: false,
             policy: SpecPolicy::default(),
+            push: PushMode::Barrier,
         }
     }
 
@@ -100,6 +141,12 @@ impl SchedulerConfig {
         self
     }
 
+    /// Select the shuffle mode for every job on this scheduler.
+    pub fn with_push(mut self, push: PushMode) -> Self {
+        self.push = push;
+        self
+    }
+
     /// Mirror a simulated cluster's slot counts and speculation knob, so
     /// measured and simulated makespans stay comparable.
     pub fn from_cluster(spec: &ClusterSpec) -> Self {
@@ -108,6 +155,7 @@ impl SchedulerConfig {
             reduce_slots: spec.reduce_slots().max(1),
             speculative: spec.speculative,
             policy: SpecPolicy::default(),
+            push: PushMode::Barrier,
         }
     }
 }
@@ -170,6 +218,10 @@ impl JobScheduler {
 
     pub fn speculative(&self) -> bool {
         self.inner.cfg.speculative
+    }
+
+    pub fn push_mode(&self) -> PushMode {
+        self.inner.cfg.push
     }
 
     /// Run one job inline on the caller's thread; its tasks execute on the
@@ -339,9 +391,10 @@ impl JobScheduler {
         KO: Send + SizeEstimate + 'static,
         VO: Send + SizeEstimate + 'static,
     {
-        let inner = &self.inner;
-        let spec = inner.cfg.speculative.then(|| inner.cfg.policy.clone());
-        let t_start = Instant::now();
+        if self.inner.cfg.push == PushMode::Push || config.push {
+            return self.run_push(config, input, mapper, partitioner, grouping, reducer, combine_fn);
+        }
+        let spec = self.inner.cfg.speculative.then(|| self.inner.cfg.policy.clone());
         let counters = Arc::new(Counters::new());
         let r = config.num_reduce_tasks;
         let sort_budget = config.sort_buffer_records;
@@ -349,27 +402,229 @@ impl JobScheduler {
         // once, hand it to every map attempt (speculative clones write
         // their own run files; only the winner's reach the shuffle)
         let spill: Option<ResolvedSpill<(KT, VT)>> = config.spill.as_ref().map(|s| s.resolve());
-        let compressed_spill = config.spill.as_ref().map(|s| s.compress()).unwrap_or(false);
+        let has_combiner = combine_fn.is_some();
 
-        counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
-        let splits = split_input(input, config.num_map_tasks);
-
-        // ---- map wave on the shared map slots -----------------------------
+        // ---- the two barrier waves, on the shared slots -------------------
         // Each attempt runs against private counters; only the winning
         // attempt's are merged, so a losing speculative clone never
         // double-counts user-code increments.  Without speculation each
         // attempt is the sole owner of its split and consumes it in
         // place; a speculative wave retains a reference per task (so a
         // clone can re-run it), which forces the deep-clone fallback.
+        let map_wave = {
+            let sched = self.clone();
+            let mapper = Arc::clone(&mapper);
+            let partitioner = Arc::clone(&partitioner);
+            let counters = Arc::clone(&counters);
+            let spec = spec.clone();
+            move |splits: Vec<Vec<(KI, VI)>>| {
+                let map_attempt = move |_i: usize, split: Arc<Vec<(KI, VI)>>| {
+                    let local = Counters::new();
+                    let split = Arc::try_unwrap(split).unwrap_or_else(|shared| (*shared).clone());
+                    let out = exec_map_task(
+                        split,
+                        r,
+                        sort_budget,
+                        spill.as_ref(),
+                        mapper.as_ref(),
+                        partitioner.as_ref(),
+                        combine_fn.as_ref(),
+                        &local,
+                        None,
+                    );
+                    (out, local)
+                };
+                let map_results: Vec<(MapTaskOutput<KT, VT>, Counters)> = speculate::run_tasks(
+                    &sched.inner.map_pool,
+                    splits,
+                    Arc::new(map_attempt),
+                    spec,
+                    &counters,
+                );
+                let mut map_outputs = Vec::with_capacity(map_results.len());
+                for (out, local) in map_results {
+                    counters.merge(&local);
+                    map_outputs.push(out);
+                }
+                map_outputs
+            }
+        };
+        let reduce_wave = {
+            let sched = self.clone();
+            let reducer = Arc::clone(&reducer);
+            let grouping = Arc::clone(&grouping);
+            let counters = Arc::clone(&counters);
+            move |per_reducer_runs: Vec<Vec<Run<(KT, VT)>>>| {
+                let reduce_attempt = move |_j: usize, runs: Arc<Vec<Run<(KT, VT)>>>| {
+                    let local = Counters::new();
+                    let runs = Arc::try_unwrap(runs).unwrap_or_else(|shared| (*shared).clone());
+                    let out = exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &local);
+                    (out, local)
+                };
+                let red_results: Vec<(ReduceTaskOutput<KO, VO>, Counters)> = speculate::run_tasks(
+                    &sched.inner.reduce_pool,
+                    per_reducer_runs,
+                    Arc::new(reduce_attempt),
+                    spec,
+                    &counters,
+                );
+                let mut red_outputs = Vec::with_capacity(red_results.len());
+                for (out, local) in red_results {
+                    counters.merge(&local);
+                    red_outputs.push(out);
+                }
+                red_outputs
+            }
+        };
+        driver::drive_barrier_job(config, input, &counters, has_combiner, map_wave, reduce_wave)
+    }
+
+    /// The push-based shuffle path: no map→reduce barrier.  Map attempts
+    /// push every sealed run into the job's [`ShuffleService`] mailboxes
+    /// (mid-task when a sort budget seals early), a dispatcher thread
+    /// submits each reduce task to the shared reduce slots at its first
+    /// run's arrival, and reducers pre-merge the committed prefix while
+    /// the map wave is still running, catching up on late runs after the
+    /// seal.  Output is byte-identical to the barrier path (same task
+    /// bodies, same merge order — `tests/prop_push.rs`).
+    ///
+    /// Speculation applies to the map wave (staged pushes, losing
+    /// attempts retracted); reduce tasks are event-driven singletons —
+    /// their elapsed time includes waiting on mailboxes, which would
+    /// defeat the straggler detector's runtime comparison.
+    #[allow(clippy::too_many_arguments)]
+    fn run_push<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: &JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+        combine_fn: Option<CombineFn<KT, VT>>,
+    ) -> JobResult<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        let inner = &self.inner;
+        let spec = inner.cfg.speculative.then(|| inner.cfg.policy.clone());
+        let t_start = Instant::now();
+        let counters = Arc::new(Counters::new());
+        let r = config.num_reduce_tasks;
+        let sort_budget = config.sort_buffer_records;
+        let spill: Option<ResolvedSpill<(KT, VT)>> = config.spill.as_ref().map(|s| s.resolve());
+        let compressed_spill = config.spill.as_ref().map(|s| s.compress()).unwrap_or(false);
+
+        counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
+        let splits = split_input(input, config.num_map_tasks);
+        let m = splits.len();
+
+        // one mailbox per reduce partition; staged (retractable) pushes
+        // exactly when more than one attempt per task can exist
+        let service: Arc<ShuffleService<(KT, VT)>> = Arc::new(ShuffleService::new(
+            m,
+            r,
+            spec.is_some(),
+            Arc::clone(&counters),
+        ));
+        // each slot holds (output, task-local counters, execution-start
+        // seconds) — the start stamp is taken on the reduce slot itself,
+        // so overlap_secs reports real execution overlap even when slot
+        // contention delays a submitted task
+        let results: Arc<OnceSlots<(ReduceTaskOutput<KO, VO>, Counters, f64)>> =
+            Arc::new(OnceSlots::empty(r));
+        // (finished, panicked) reduce tasks — the driver's completion gate
+        let done: Arc<(Mutex<(usize, usize)>, Condvar)> =
+            Arc::new((Mutex::new((0, 0)), Condvar::new()));
+
+        // ---- dispatcher: event-driven reduce submission -------------------
+        // Runs until every partition is submitted: on first-run arrival
+        // for eager partitions, at seal for the rest (reduce tasks run
+        // their configure/close hooks even on empty input).
+        let dispatcher = {
+            let sched = self.clone();
+            let service = Arc::clone(&service);
+            let reducer = Arc::clone(&reducer);
+            let grouping = Arc::clone(&grouping);
+            let results = Arc::clone(&results);
+            let done = Arc::clone(&done);
+            std::thread::Builder::new()
+                .name(format!("snmr-push-{}", config.name))
+                .spawn(move || {
+                    let mut submitted = vec![false; r];
+                    let mut left = r;
+                    while left > 0 {
+                        let (ready, sealed) = service.wait_ready(&submitted);
+                        if ready.is_empty() && sealed {
+                            // aborted map wave: never start reduce tasks
+                            // for a job that failed before feeding them
+                            break;
+                        }
+                        for j in ready {
+                            submitted[j] = true;
+                            left -= 1;
+                            let service = Arc::clone(&service);
+                            let reducer = Arc::clone(&reducer);
+                            let grouping = Arc::clone(&grouping);
+                            let results = Arc::clone(&results);
+                            let done = Arc::clone(&done);
+                            sched.inner.reduce_pool.execute(move || {
+                                let started = t_start.elapsed().as_secs_f64();
+                                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                                    let local = Counters::new();
+                                    let (sources, late, fold_secs) =
+                                        push::collect_reduce_sources(&service, j);
+                                    if late > 0 {
+                                        local.add(names::LATE_RUNS, late);
+                                    }
+                                    let mut out = exec_reduce_task(
+                                        sources,
+                                        reducer.as_ref(),
+                                        grouping.as_ref(),
+                                        &local,
+                                    );
+                                    // the pre-merge folding is reduce work
+                                    // too (the waits are not measured)
+                                    out.secs += fold_secs;
+                                    (out, local, started)
+                                }));
+                                let (lock, cv) = &*done;
+                                let mut g = lock.lock().unwrap();
+                                match outcome {
+                                    Ok(pair) => {
+                                        results.put(j, pair);
+                                        g.0 += 1;
+                                    }
+                                    Err(_) => {
+                                        g.0 += 1;
+                                        g.1 += 1;
+                                    }
+                                }
+                                cv.notify_all();
+                            });
+                        }
+                    }
+                })
+                .expect("spawn push dispatcher")
+        };
+
+        // ---- map wave on the shared map slots, pushing as runs seal -------
         let t_map = Instant::now();
         let map_attempt = {
             let mapper = Arc::clone(&mapper);
             let partitioner = Arc::clone(&partitioner);
             let combine_fn = combine_fn.clone();
             let spill = spill.clone();
-            move |_i: usize, split: Arc<Vec<(KI, VI)>>| {
+            let service = Arc::clone(&service);
+            move |i: usize, split: Arc<Vec<(KI, VI)>>| {
                 let local = Counters::new();
                 let split = Arc::try_unwrap(split).unwrap_or_else(|shared| (*shared).clone());
+                let attempt = ShuffleService::begin_attempt(&service, i);
                 let out = exec_map_task(
                     split,
                     r,
@@ -379,67 +634,80 @@ impl JobScheduler {
                     partitioner.as_ref(),
                     combine_fn.as_ref(),
                     &local,
+                    Some(&attempt),
                 );
+                // first finisher wins the task; a loser's pushes are
+                // retracted before reducers could ever fold them
+                let _won = attempt.finish();
                 (out, local)
             }
         };
-        let map_results: Vec<(MapTaskOutput<KT, VT>, Counters)> = speculate::run_tasks(
-            &inner.map_pool,
-            splits,
-            Arc::new(map_attempt),
-            spec.clone(),
-            &counters,
-        );
+        let wave = AssertUnwindSafe(|| {
+            speculate::run_tasks(&inner.map_pool, splits, Arc::new(map_attempt), spec, &counters)
+        });
+        let map_results: Vec<(MapTaskOutput<KT, VT>, Counters)> = match catch_unwind(wave) {
+            Ok(results) => results,
+            Err(panic) => {
+                // unblock the reducers and the dispatcher before
+                // unwinding, or they would park reduce slots forever
+                service.abort();
+                let _ = dispatcher.join();
+                std::panic::resume_unwind(panic);
+            }
+        };
         let mut map_outputs: Vec<MapTaskOutput<KT, VT>> = Vec::with_capacity(map_results.len());
         for (out, local) in map_results {
             counters.merge(&local);
             map_outputs.push(out);
         }
         let map_phase_secs = t_map.elapsed().as_secs_f64();
+        let map_wave_done_secs = t_start.elapsed().as_secs_f64();
 
         let mut stats = JobStats {
-            map_task_secs: map_outputs.iter().map(|o| o.secs).collect(),
             map_phase_secs,
+            map_wave_done_secs,
             ..Default::default()
         };
-        stats.map_output_records = record_map_wave(&counters, &map_outputs, combine_fn.is_some());
-        stats.spill_bytes_written = map_outputs.iter().map(|o| o.spill_file_bytes).sum();
-
-        // ---- shuffle transpose (driver-side, cheap) -----------------------
-        let t_shuffle = Instant::now();
-        let (per_reducer_runs, shuffle_bytes, shuffle_bytes_raw) = transpose_runs(map_outputs, r);
-        counters.add(names::SHUFFLE_BYTES, shuffle_bytes.iter().sum());
-        counters.add(names::SHUFFLE_BYTES_RAW, shuffle_bytes_raw.iter().sum());
-        stats.shuffle_bytes_per_reducer = shuffle_bytes;
-        stats.shuffle_bytes_raw = shuffle_bytes_raw.iter().sum();
-        stats.intermediate_compressed = compressed_spill && stats.spill_bytes_written > 0;
-        stats.shuffle_phase_secs = t_shuffle.elapsed().as_secs_f64();
-
-        // ---- reduce wave on the shared reduce slots -----------------------
-        let t_reduce = Instant::now();
-        let reduce_attempt = {
-            let reducer = Arc::clone(&reducer);
-            let grouping = Arc::clone(&grouping);
-            move |_j: usize, runs: Arc<Vec<Run<(KT, VT)>>>| {
-                let local = Counters::new();
-                let runs = Arc::try_unwrap(runs).unwrap_or_else(|shared| (*shared).clone());
-                let out = exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &local);
-                (out, local)
-            }
-        };
-        let red_results: Vec<(ReduceTaskOutput<KO, VO>, Counters)> = speculate::run_tasks(
-            &inner.reduce_pool,
-            per_reducer_runs,
-            Arc::new(reduce_attempt),
-            spec,
+        // the exact accounting fold the barrier driver runs — the runs
+        // themselves already flowed through the service, so the returned
+        // per-reducer lists are empty and only the byte sums matter
+        // (attempts are deterministic: the winning outputs' volumes equal
+        // what the committed runs carried)
+        let _ = driver::record_map_phase(
+            &mut stats,
             &counters,
+            map_outputs,
+            r,
+            combine_fn.is_some(),
+            compressed_spill,
         );
-        let mut red_outputs: Vec<ReduceTaskOutput<KO, VO>> = Vec::with_capacity(red_results.len());
-        for (out, local) in red_results {
+
+        // every task decided → every run committed: wake the reducers for
+        // their catch-up pass and flush the dispatcher's remainder
+        service.seal();
+        dispatcher.join().expect("push dispatcher panicked");
+
+        // ---- gather the event-driven reduce wave --------------------------
+        {
+            let (lock, cv) = &*done;
+            let mut g = lock.lock().unwrap();
+            while g.0 < r {
+                g = cv.wait(g).unwrap();
+            }
+            assert_eq!(g.1, 0, "{} push reduce task attempt(s) panicked", g.1);
+        }
+        let mut red_outputs: Vec<ReduceTaskOutput<KO, VO>> = Vec::with_capacity(r);
+        let mut first_start = f64::INFINITY;
+        for j in 0..r {
+            let (out, local, started) = results.take(j);
             counters.merge(&local);
+            first_start = first_start.min(started);
             red_outputs.push(out);
         }
-        stats.reduce_phase_secs = t_reduce.elapsed().as_secs_f64();
+        stats.reduce_first_start_secs = if first_start.is_finite() { first_start } else { 0.0 };
+        stats.overlap_secs = (map_wave_done_secs - stats.reduce_first_start_secs).max(0.0);
+        stats.reduce_phase_secs =
+            (t_start.elapsed().as_secs_f64() - stats.reduce_first_start_secs).max(0.0);
         stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
         stats.reduce_task_output_records =
             red_outputs.iter().map(|o| o.output.len() as u64).collect();
@@ -820,5 +1088,178 @@ mod tests {
             serial.counters.get(names::SHUFFLE_BYTES),
             scheduled.counters.get(names::SHUFFLE_BYTES)
         );
+    }
+
+    #[test]
+    fn push_mode_matches_barrier_output_and_counters() {
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        let cfg = JobConfig::named("hist-push").with_tasks(4, 3);
+        let barrier = JobScheduler::with_slots(3).run(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        let push = JobScheduler::new(SchedulerConfig::slots(3).with_push(PushMode::Push)).run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(barrier.outputs, push.outputs);
+        for name in [
+            names::MAP_OUTPUT_RECORDS,
+            names::SHUFFLE_BYTES,
+            names::SHUFFLE_BYTES_RAW,
+            names::REDUCE_INPUT_RECORDS,
+            names::REDUCE_GROUPS,
+            names::MAP_SPILL_RUNS,
+        ] {
+            assert_eq!(
+                barrier.counters.get(name),
+                push.counters.get(name),
+                "engine counter {name} diverged under push"
+            );
+        }
+        // every sealed run flowed through the service, exactly once
+        assert_eq!(
+            push.counters.get(names::PUSHED_RUNS),
+            push.counters.get(names::MAP_SPILL_RUNS)
+        );
+        assert_eq!(barrier.counters.get(names::PUSHED_RUNS), 0);
+        assert_eq!(barrier.stats.overlap_secs, 0.0);
+    }
+
+    #[test]
+    fn job_level_push_opt_in_on_barrier_scheduler() {
+        let (input, mapper, reducer) = histogram_job(400, 5);
+        let cfg = JobConfig::named("hist-optin").with_tasks(4, 2).with_push(true);
+        let sched = JobScheduler::with_slots(2);
+        assert_eq!(sched.push_mode(), PushMode::Barrier);
+        let pushed = sched.run(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        let serial = run_job(
+            &cfg.clone().with_workers(2),
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(serial.outputs, pushed.outputs);
+        assert!(pushed.counters.get(names::PUSHED_RUNS) > 0);
+        // the serial driver is the barrier reference: push is ignored
+        assert_eq!(serial.counters.get(names::PUSHED_RUNS), 0);
+    }
+
+    #[test]
+    fn push_with_sort_budget_and_spill_matches_barrier() {
+        use crate::mapreduce::sortspill::{Codec, KeyValueCodec, SpillSpec, TempSpillDir, U64Codec};
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        let dir = TempSpillDir::new("push-disk").unwrap();
+        let codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+        let cfg = JobConfig::named("hist-push-disk")
+            .with_tasks(4, 3)
+            .with_sort_buffer(Some(16))
+            .with_spill(Some(SpillSpec::new(dir.path(), codec)));
+        let barrier = JobScheduler::with_slots(3).run(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        let push = JobScheduler::new(SchedulerConfig::slots(3).with_push(PushMode::Push)).run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(barrier.outputs, push.outputs);
+        // the sort budget seals runs mid-task, so pushes happen while the
+        // map function is still running; every one became a run file
+        assert_eq!(
+            push.counters.get(names::PUSHED_RUNS),
+            push.counters.get(names::SPILLED_RUNS)
+        );
+        assert_eq!(
+            barrier.counters.get(names::SPILL_BYTES_WRITTEN),
+            push.counters.get(names::SPILL_BYTES_WRITTEN)
+        );
+        assert_eq!(
+            barrier.counters.get(names::SHUFFLE_BYTES),
+            push.counters.get(names::SHUFFLE_BYTES)
+        );
+    }
+
+    /// A panicking map task in push mode must unwind cleanly: parked
+    /// reducers drain, the dispatcher stops submitting, nothing hangs.
+    #[test]
+    #[should_panic(expected = "task attempt(s) panicked")]
+    fn push_map_panic_unwinds_without_hanging() {
+        let input: Vec<((), u64)> = (0..8).map(|i| ((), i)).collect();
+        let mapper = Arc::new(FnMapTask::new(
+            |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                if v == 5 {
+                    panic!("boom");
+                }
+                out.emit(v % 2, v);
+            },
+        ));
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(*k, vals.map(|v| *v).sum());
+            },
+        ));
+        let cfg = JobConfig::named("boom-push").with_tasks(8, 2);
+        let _ = JobScheduler::new(SchedulerConfig::slots(2).with_push(PushMode::Push)).run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+    }
+
+    #[test]
+    fn push_runs_reducers_with_empty_mailboxes() {
+        let (input, mapper, reducer) = histogram_job(200, 4);
+        let cfg = JobConfig::named("hist-empty").with_tasks(2, 3);
+        // everything routes to partition 0; partitions 1 and 2 see no runs
+        let push = JobScheduler::new(SchedulerConfig::slots(2).with_push(PushMode::Push)).run(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|_: &u64| 0)),
+            grouping(),
+            reducer.clone(),
+        );
+        let barrier = JobScheduler::with_slots(2).run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|_: &u64| 0)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(barrier.outputs, push.outputs);
+        assert_eq!(push.outputs.len(), 3);
+        assert!(push.outputs[1].is_empty() && push.outputs[2].is_empty());
+        let total: u64 = push.outputs.iter().flatten().map(|(_, c)| *c).sum();
+        assert_eq!(total, 200);
     }
 }

@@ -220,6 +220,10 @@ pub const SPEC_MIN_SECS: f64 = 0.02;
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct WaveOutcome {
     pub makespan: f64,
+    /// When the wave's *first* task completed — the earliest moment a
+    /// push-based shuffle has a run to hand a reducer
+    /// ([`simulate_job_overlap`] releases the reduce wave here).
+    pub first_completion: f64,
     pub speculative_launched: u64,
     pub speculative_won: u64,
 }
@@ -364,6 +368,7 @@ pub fn wave_schedule(durations: &[f64], slots: usize, spec: &ClusterSpec) -> Wav
     }
     WaveOutcome {
         makespan: runs.iter().fold(0.0f64, |m, r| m.max(r.end)),
+        first_completion: runs.iter().fold(f64::INFINITY, |m, r| m.min(r.end)),
         speculative_launched: launched,
         speculative_won: won,
     }
@@ -394,6 +399,22 @@ pub fn fit_secs_per_pair(reduce_task_secs: &[f64], pairs_per_task: &[u64]) -> f6
     reduce_task_secs.iter().sum::<f64>() / total as f64
 }
 
+/// Phase-structure mode for [`simulate_job_mode`]: the paper's two-wave
+/// barrier (kept as the calibration reference) or the push-based overlap
+/// model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimShuffleMode {
+    /// Reduce wave starts after the whole map wave (Hadoop 0.20).
+    #[default]
+    TwoWave,
+    /// Push-based shuffle: the reduce wave is *released* at the first
+    /// map-task completion and overlaps the map wave; no reduce task can
+    /// complete before the map wave ends (its last inputs arrive then).
+    /// Structurally never slower than [`SimShuffleMode::TwoWave`] on the
+    /// same profile.
+    Overlap,
+}
+
 /// Simulate one MapReduce job on a cluster.
 ///
 /// With a compressed-intermediates profile
@@ -403,6 +424,24 @@ pub fn fit_secs_per_pair(reduce_task_secs: &[f64], pairs_per_task: &[u64]) -> f6
 /// compress rate across the map slots and once at the decompress rate
 /// across the reduce slots.
 pub fn simulate_job(profile: &JobProfile, spec: &ClusterSpec) -> SimBreakdown {
+    simulate_job_mode(profile, spec, SimShuffleMode::TwoWave)
+}
+
+/// As [`simulate_job`] with the push-based shuffle's overlapped phase
+/// structure ([`SimShuffleMode::Overlap`]): `map_s` is unchanged and
+/// `reduce_s` becomes the reduce wave's *tail* past the map wave, so
+/// `total()` directly compares against the barrier total.
+pub fn simulate_job_overlap(profile: &JobProfile, spec: &ClusterSpec) -> SimBreakdown {
+    simulate_job_mode(profile, spec, SimShuffleMode::Overlap)
+}
+
+/// The mode-parameterized simulator core behind [`simulate_job`] /
+/// [`simulate_job_overlap`].
+pub fn simulate_job_mode(
+    profile: &JobProfile,
+    spec: &ClusterSpec,
+    mode: SimShuffleMode,
+) -> SimBreakdown {
     let map_wave = wave_schedule(&profile.map_task_secs, spec.map_slots().max(1), spec);
     // map outputs written to local disk once (sort spill), read once at
     // shuffle: 2 passes over the bytes at aggregate disk bandwidth.  A
@@ -432,6 +471,22 @@ pub fn simulate_job(profile: &JobProfile, spec: &ClusterSpec) -> SimBreakdown {
         .fold(0.0, f64::max);
     let decompress_s = raw_mb * profile.decompress_secs_per_mb / reduce_slots as f64;
     let reduce_wave = wave_schedule(&profile.reduce_task_secs, reduce_slots, spec);
+    let reduce_s = match mode {
+        SimShuffleMode::TwoWave => reduce_wave.makespan,
+        SimShuffleMode::Overlap => {
+            // the reduce wave runs from the first map completion onward,
+            // but its last task cannot finish before the map wave does —
+            // the tail past the map wave is what the job still pays.
+            // release ≤ map makespan ⇒ tail ≤ the two-wave reduce_s.
+            let release = if profile.map_task_secs.is_empty() {
+                0.0
+            } else {
+                map_wave.first_completion
+            };
+            let combined = (release + reduce_wave.makespan).max(map_wave.makespan);
+            combined - map_wave.makespan
+        }
+    };
     SimBreakdown {
         setup_s: spec.job_setup_s,
         map_s: map_wave.makespan,
@@ -439,7 +494,7 @@ pub fn simulate_job(profile: &JobProfile, spec: &ClusterSpec) -> SimBreakdown {
         compress_s,
         shuffle_s,
         decompress_s,
-        reduce_s: reduce_wave.makespan,
+        reduce_s,
         speculative_launched: map_wave.speculative_launched + reduce_wave.speculative_launched,
         speculative_won: map_wave.speculative_won + reduce_wave.speculative_won,
     }
@@ -717,6 +772,84 @@ mod tests {
         // task slots, not on a global core)
         let comp16 = simulate_job(&mk(true), &ClusterSpec::paper_like(16));
         assert!(comp16.compress_s < comp.compress_s);
+    }
+
+    /// The overlap (push-shuffle) mode: structurally never slower than
+    /// the two-wave barrier on the same profile, and identical when
+    /// there is no reduce work to overlap.
+    #[test]
+    fn overlap_mode_never_exceeds_two_wave() {
+        let profiles = [
+            JobProfile {
+                map_task_secs: vec![10.0; 16],
+                reduce_task_secs: vec![3.0; 8],
+                shuffle_bytes_per_reducer: vec![1_000_000; 8],
+                map_output_bytes: 8_000_000,
+                ..Default::default()
+            },
+            JobProfile {
+                map_task_secs: vec![2.0; 3],
+                reduce_task_secs: vec![40.0, 1.0, 1.0],
+                shuffle_bytes_per_reducer: vec![0; 3],
+                ..Default::default()
+            },
+            JobProfile {
+                map_task_secs: vec![5.0; 8],
+                reduce_task_secs: Vec::new(),
+                ..Default::default()
+            },
+            JobProfile::default(),
+        ];
+        for (i, p) in profiles.iter().enumerate() {
+            for cores in [1usize, 4, 8] {
+                let spec = ClusterSpec::paper_like(cores);
+                let barrier = simulate_job(p, &spec).total();
+                let push = simulate_job_overlap(p, &spec).total();
+                assert!(
+                    push <= barrier + 1e-9,
+                    "profile {i}, cores {cores}: push {push} > barrier {barrier}"
+                );
+            }
+        }
+        // no reduce tasks → nothing to overlap → identical breakdowns
+        let spec = ClusterSpec::paper_like(8);
+        assert_eq!(
+            simulate_job(&profiles[2], &spec),
+            simulate_job_overlap(&profiles[2], &spec)
+        );
+    }
+
+    /// A long multi-wave map phase fully hides a short reduce wave that
+    /// was released at the first map completion — the overlap the
+    /// barrier model cannot express.
+    #[test]
+    fn overlap_mode_hides_reduce_behind_map_wave() {
+        // 16 × 10s map tasks on 8 slots → first completion 10s, done 20s;
+        // 8 × 1s reduce tasks released at 10s finish long before 20s
+        let profile = JobProfile {
+            map_task_secs: vec![10.0; 16],
+            reduce_task_secs: vec![1.0; 8],
+            shuffle_bytes_per_reducer: vec![0; 8],
+            ..Default::default()
+        };
+        let spec = ClusterSpec::paper_like(8);
+        let barrier = simulate_job(&profile, &spec);
+        let push = simulate_job_overlap(&profile, &spec);
+        assert!((barrier.reduce_s - 1.0).abs() < 1e-9);
+        assert!(
+            push.reduce_s.abs() < 1e-9,
+            "reduce tail should vanish: {push:?}"
+        );
+        assert_eq!(push.map_s, barrier.map_s);
+        assert!((barrier.total() - push.total() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wave_outcome_reports_first_completion() {
+        let spec = ClusterSpec::paper_like(8);
+        let w = wave_schedule(&[10.0; 16], spec.map_slots(), &spec);
+        assert!((w.first_completion - 10.0).abs() < 1e-9);
+        assert!((w.makespan - 20.0).abs() < 1e-9);
     }
 
     #[test]

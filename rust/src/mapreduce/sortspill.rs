@@ -14,9 +14,12 @@
 //! * [`RunFile`] — one sorted run serialized to disk, whole-run DEFLATE
 //!   optional (the paper's cluster compresses intermediates, §5.1).  The
 //!   file is deleted when the last [`RunFile`] handle drops;
-//!   [`RunFile::iter`] yields records lazily off the loaded byte buffer,
-//!   which is what the shuffle's streaming
-//!   [`MergeIter`](crate::mapreduce::shuffle::MergeIter) consumes.
+//!   [`RunFile::iter`] decodes records through a chunked streaming
+//!   window ([`SPILL_READ_CHUNK`] bytes at a time, straight off the
+//!   inflating reader), which is what the shuffle's streaming
+//!   [`MergeIter`](crate::mapreduce::shuffle::MergeIter) consumes — so
+//!   reduce memory per run source is a buffer size, not the partition's
+//!   inflated byte volume.
 //! * [`Run`] — the engine's either/or intermediate run: owned in-memory
 //!   records or a codec-serialized run file.  Every run handed to the
 //!   shuffle is one of these; the reduce-side k-way merge streams both
@@ -25,9 +28,6 @@
 //!   sort through when [`crate::mapreduce::JobConfig::sort_buffer_records`]
 //!   is set: records accumulate up to the budget, each full chunk is
 //!   stable-sorted and sealed as one run.
-//! * [`SpillingBuffer`] — RunSorter's disk-backed sibling: sealed runs are
-//!   written as [`RunFile`]s instead of staying resident, giving the
-//!   honest I/O cost the cluster simulator charges for materialization.
 //! * [`SpillSpec`] — the type-erased `(codec, directory, compress)` triple
 //!   [`crate::mapreduce::JobConfig::spill`] carries through the
 //!   non-generic job config into the generic engine.
@@ -112,6 +112,15 @@ where
     /// Runs produced so far, counting the unsealed remainder.
     pub fn run_count(&self) -> usize {
         self.runs.len() + usize::from(!self.buffer.is_empty())
+    }
+
+    /// Take every run sealed so far, leaving the unsealed remainder
+    /// buffered.  The engine drains mid-task when a push-based shuffle
+    /// wants sealed runs shipped the moment they exist; the returned
+    /// runs are in seal order, and later [`Self::drain_sealed`] /
+    /// [`Self::into_runs`] calls continue the same order.
+    pub fn drain_sealed(&mut self) -> Vec<Vec<T>> {
+        std::mem::take(&mut self.runs)
     }
 
     /// Seal the remainder and return all sorted runs in seal order.
@@ -396,8 +405,19 @@ impl<T> RunFile<T> {
         self.file_bytes
     }
 
-    /// Load and (if compressed) inflate the payload.
-    fn load(&self) -> Result<Vec<u8>> {
+    /// A streaming record iterator with the default
+    /// [`SPILL_READ_CHUNK`] refill size: reduce-side memory per run is
+    /// bounded by the chunk (plus one record), not the run's inflated
+    /// byte volume.  Fails here on I/O errors or a bad header.
+    pub fn iter(&self) -> Result<RunFileIter<T>> {
+        self.iter_with_chunk(SPILL_READ_CHUNK)
+    }
+
+    /// As [`Self::iter`] with an explicit refill chunk: bytes are pulled
+    /// from the (possibly inflating) reader `chunk` bytes at a time, so
+    /// the decode window never holds more than `chunk` bytes beyond the
+    /// largest single record.
+    pub fn iter_with_chunk(&self, chunk: usize) -> Result<RunFileIter<T>> {
         let path = self.path();
         let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
         let mut reader = BufReader::new(file);
@@ -409,78 +429,178 @@ impl<T> RunFile<T> {
             path.display(),
             self.records
         );
-        let mut raw = Vec::new();
-        if compressed {
-            DeflateDecoder::new(reader)
-                .read_to_end(&mut raw)
-                .with_context(|| format!("inflate {}", path.display()))?;
+        let src = if compressed {
+            RunPayload::Deflate(DeflateDecoder::new(reader))
         } else {
-            reader.read_to_end(&mut raw)?;
-        }
-        Ok(raw)
-    }
-
-    /// A lazy record iterator over the loaded payload: holds the run's
-    /// *bytes*, decoding records one at a time as the shuffle merge pulls
-    /// them.  Fails here on I/O errors or a truncated compressed stream.
-    pub fn iter(&self) -> Result<RunFileIter<T>> {
+            RunPayload::Plain(reader)
+        };
         Ok(RunFileIter {
-            buf: self.load()?,
-            pos: 0,
+            src,
+            // keep the file alive while the iterator streams it: the
+            // guard's unlink-on-last-drop must not race the open handle
+            // (unlinking an open file fails on some platforms)
+            _guard: Arc::clone(&self.guard),
+            buf: Vec::new(),
+            start: 0,
+            eof: false,
+            chunk: chunk.max(1),
+            max_buf: 0,
             remaining: self.records as usize,
             codec: Arc::clone(&self.codec),
-            origin: self.path().display().to_string(),
+            origin: path.display().to_string(),
         })
     }
 
     /// Decode every record, propagating codec/truncation errors (the
     /// error-path API; the engine streams through [`Self::iter`]).
     pub fn read_all(&self) -> Result<Vec<T>> {
-        let buf = self.load()?;
-        let mut cur = buf.as_slice();
+        let mut it = self.iter()?;
         let mut out = Vec::with_capacity(self.records as usize);
-        while !cur.is_empty() {
-            out.push(self.codec.decode(&mut cur)?);
+        while let Some(rec) = it.next_result() {
+            out.push(rec?);
         }
+        // a header that under-reports the count would otherwise truncate
+        // silently: the payload must end exactly at the last record
         anyhow::ensure!(
-            out.len() as u64 == self.records,
-            "run file {} decoded {} records, expected {}",
+            it.exhausted()?,
+            "run file {} has payload beyond its {} declared records",
             self.path().display(),
-            out.len(),
             self.records
         );
         Ok(out)
     }
 }
 
-/// Streaming decoder over one run file's loaded payload.
+/// Refill granularity for streaming run-file reads: the reduce-side
+/// memory bound per run source (64 KiB).
+pub const SPILL_READ_CHUNK: usize = 64 * 1024;
+
+/// The byte source behind a streaming run-file read: the raw file, or
+/// the file through a whole-run DEFLATE inflater.  Either way bytes are
+/// pulled on demand — never the whole payload at once.
+enum RunPayload {
+    Plain(BufReader<File>),
+    Deflate(DeflateDecoder<BufReader<File>>),
+}
+
+impl Read for RunPayload {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            RunPayload::Plain(r) => r.read(out),
+            RunPayload::Deflate(r) => r.read(out),
+        }
+    }
+}
+
+/// Chunked streaming decoder over one run file.
+///
+/// Holds a bounded window of undecoded bytes: when a record fails to
+/// decode (it straddles the window edge), another chunk is pulled from
+/// the reader and the decode retried, so peak memory is the chunk size
+/// plus the largest single record — the run's inflated byte volume never
+/// materializes.  A decode failure at end-of-stream is real corruption.
 pub struct RunFileIter<T> {
+    src: RunPayload,
+    /// Keeps the run file on disk until the stream is dropped.
+    _guard: Arc<RunFileGuard>,
+    /// Window of not-yet-decoded payload bytes (`start..` is live).
     buf: Vec<u8>,
-    pos: usize,
+    start: usize,
+    eof: bool,
+    chunk: usize,
+    /// High-water mark of the window, for memory-bound assertions.
+    max_buf: usize,
     remaining: usize,
     codec: Arc<dyn Codec<T>>,
     origin: String,
+}
+
+impl<T> RunFileIter<T> {
+    /// Largest byte window held at any point so far (tests assert the
+    /// streaming memory bound through this).
+    pub fn max_buffer_bytes(&self) -> usize {
+        self.max_buf
+    }
+
+    /// True when the payload is fully consumed: no undecoded window
+    /// bytes, and the reader yields nothing further.
+    fn exhausted(&mut self) -> Result<bool> {
+        if self.start < self.buf.len() {
+            return Ok(false);
+        }
+        if !self.eof {
+            self.refill()?;
+        }
+        Ok(self.start >= self.buf.len() && self.eof)
+    }
+
+    /// Pull one more chunk from the reader into the window, discarding
+    /// already-decoded bytes first.
+    fn refill(&mut self) -> Result<()> {
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        let old = self.buf.len();
+        self.buf.resize(old + self.chunk, 0);
+        let mut filled = old;
+        while filled < self.buf.len() {
+            let n = self
+                .src
+                .read(&mut self.buf[filled..])
+                .with_context(|| format!("read spill run {}", self.origin))?;
+            if n == 0 {
+                self.eof = true;
+                break;
+            }
+            filled += n;
+        }
+        self.buf.truncate(filled);
+        self.max_buf = self.max_buf.max(self.buf.len());
+        Ok(())
+    }
+
+    /// Decode the next record, surfacing I/O and corruption errors (the
+    /// fallible twin of `Iterator::next`, used by [`RunFile::read_all`]).
+    pub fn next_result(&mut self) -> Option<Result<T>> {
+        if self.remaining == 0 {
+            return None;
+        }
+        loop {
+            let mut cur = &self.buf[self.start..];
+            let avail = cur.len();
+            match self.codec.decode(&mut cur) {
+                Ok(t) => {
+                    self.start += avail - cur.len();
+                    self.remaining -= 1;
+                    return Some(Ok(t));
+                }
+                Err(e) => {
+                    if self.eof {
+                        // no more bytes can arrive: the failure is real
+                        return Some(Err(
+                            e.context(format!("decode spill run {}", self.origin))
+                        ));
+                    }
+                    // the record straddles the window edge: pull more
+                    if let Err(io) = self.refill() {
+                        return Some(Err(io));
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl<T> Iterator for RunFileIter<T> {
     type Item = T;
 
     fn next(&mut self) -> Option<T> {
-        if self.remaining == 0 {
-            return None;
-        }
-        let mut cur = &self.buf[self.pos..];
-        let before = cur.len();
         // a record that fails to decode here was corrupted *after* a
         // successful write — an engine invariant violation, not a
         // recoverable condition
-        let t = self
-            .codec
-            .decode(&mut cur)
-            .unwrap_or_else(|e| panic!("corrupt spill run {}: {e}", self.origin));
-        self.pos += before - cur.len();
-        self.remaining -= 1;
-        Some(t)
+        self.next_result()
+            .map(|r| r.unwrap_or_else(|e| panic!("corrupt spill run {}: {e}", self.origin)))
     }
 
     fn size_hint(&self) -> (usize, Option<usize>) {
@@ -520,9 +640,10 @@ impl<T> Run<T> {
         self.len() == 0
     }
 
-    /// Stream the run's records.  Spilled runs load + inflate their bytes
-    /// here and decode lazily; failures at this point mean the spill file
-    /// vanished or was corrupted between map and reduce — fatal.
+    /// Stream the run's records.  Spilled runs open a chunked streaming
+    /// decoder here (memory bounded by [`SPILL_READ_CHUNK`]); failures at
+    /// this point mean the spill file vanished or was corrupted between
+    /// map and reduce — fatal.
     pub fn into_records(self) -> RunRecords<T> {
         match self {
             Run::Mem(v) => RunRecords::Mem(v.into_iter()),
@@ -655,20 +776,11 @@ impl<T> Clone for ResolvedSpill<T> {
 }
 
 impl<T> ResolvedSpill<T> {
-    /// A [`SpillingBuffer`] under this spec — the engine creates one per
-    /// partition bucket and feeds it the [`RunSorter`]'s sealed (and
-    /// combined) runs via [`SpillingBuffer::push_run`].  The buffer's own
-    /// budget is unbounded: run sizes are already bounded upstream.
-    pub fn buffer(&self, cmp: fn(&T, &T) -> Ordering) -> SpillingBuffer<T> {
-        SpillingBuffer::new(
-            SpillConfig {
-                buffer_records: usize::MAX,
-                dir: self.dir.clone(),
-                compress: self.compress,
-            },
-            Arc::clone(&self.codec),
-            cmp,
-        )
+    /// Serialize one already-sorted (and combined) run to disk under this
+    /// spec.  The engine calls this per sealed run — at seal time, so a
+    /// push-based shuffle can ship the file before the map task ends.
+    pub fn write_run(&self, run: &[T]) -> Result<RunFile<T>> {
+        RunFile::write(&self.dir, Arc::clone(&self.codec), self.compress, run)
     }
 }
 
@@ -709,167 +821,9 @@ impl Drop for TempSpillDir {
     }
 }
 
-// ---------------------------------------------------------------------------
-// SpillConfig / SpillingBuffer
-// ---------------------------------------------------------------------------
-
-/// Spill configuration.
-#[derive(Debug, Clone)]
-pub struct SpillConfig {
-    /// Max records buffered in memory before a spill (io.sort.mb proxy).
-    pub buffer_records: usize,
-    /// Directory for spill run files (each file is deleted when its last
-    /// [`RunFile`] handle drops).
-    pub dir: PathBuf,
-    /// DEFLATE-compress run files (the paper compresses intermediates).
-    pub compress: bool,
-}
-
-impl SpillConfig {
-    pub fn new(dir: &Path, buffer_records: usize) -> Self {
-        Self {
-            buffer_records: buffer_records.max(1),
-            dir: dir.to_path_buf(),
-            compress: true,
-        }
-    }
-}
-
-/// An external-sorting buffer: records accumulate up to the budget, each
-/// full chunk is sorted and sealed to disk as one [`RunFile`].  The
-/// engine's map tasks route their sealed [`RunSorter`] runs through
-/// [`SpillingBuffer::push_run`] when
-/// [`JobConfig::spill`](crate::mapreduce::JobConfig::spill) is set; the
-/// standalone `push`/`into_sorted` path is the self-contained external
-/// sort used by tests and tools.
-pub struct SpillingBuffer<T> {
-    config: SpillConfig,
-    codec: Arc<dyn Codec<T>>,
-    buffer: Vec<T>,
-    runs: Vec<RunFile<T>>,
-    /// Total records spilled to disk (the Hadoop counter).
-    pub spilled_records: u64,
-    /// Bytes written across all run files (on-disk, post-compression).
-    pub spilled_bytes: u64,
-    /// Encoded bytes before compression.
-    pub raw_bytes: u64,
-    cmp: fn(&T, &T) -> Ordering,
-}
-
-impl<T> SpillingBuffer<T> {
-    pub fn new(config: SpillConfig, codec: Arc<dyn Codec<T>>, cmp: fn(&T, &T) -> Ordering) -> Self {
-        Self {
-            config,
-            codec,
-            buffer: Vec::new(),
-            runs: Vec::new(),
-            spilled_records: 0,
-            spilled_bytes: 0,
-            raw_bytes: 0,
-            cmp,
-        }
-    }
-
-    /// Add a record; may trigger a spill.
-    pub fn push(&mut self, t: T) -> Result<()> {
-        self.buffer.push(t);
-        if self.buffer.len() >= self.config.buffer_records {
-            self.spill()?;
-        }
-        Ok(())
-    }
-
-    /// Sort and seal the current buffer to disk (no-op when empty).
-    pub fn spill(&mut self) -> Result<()> {
-        if self.buffer.is_empty() {
-            return Ok(());
-        }
-        self.buffer.sort_by(self.cmp);
-        let run = std::mem::take(&mut self.buffer);
-        self.push_run(run)
-    }
-
-    /// Seal one externally-sorted run straight to disk (the engine path:
-    /// [`RunSorter`] seals, the combiner folds, this writes).
-    pub fn push_run(&mut self, run: Vec<T>) -> Result<()> {
-        if run.is_empty() {
-            return Ok(());
-        }
-        let rf = RunFile::write(
-            &self.config.dir,
-            Arc::clone(&self.codec),
-            self.config.compress,
-            &run,
-        )?;
-        self.spilled_records += rf.records();
-        self.spilled_bytes += rf.file_bytes();
-        self.raw_bytes += rf.raw_bytes();
-        self.runs.push(rf);
-        Ok(())
-    }
-
-    /// Runs sealed so far, counting the unsealed remainder.
-    pub fn run_count(&self) -> usize {
-        self.runs.len() + usize::from(!self.buffer.is_empty())
-    }
-
-    /// Seal the remainder and hand every run file to the caller as
-    /// shuffle-ready [`Run::Spilled`]s, in seal order.
-    pub fn into_runs(mut self) -> Result<Vec<Run<T>>> {
-        self.spill()?;
-        Ok(self.runs.drain(..).map(Run::Spilled).collect())
-    }
-
-    /// Finish: merge all sealed runs + the in-memory remainder into one
-    /// globally sorted `Vec` (k-way head-slot merge, no `T: Ord` needed).
-    pub fn into_sorted(mut self) -> Result<Vec<T>> {
-        self.buffer.sort_by(self.cmp);
-        let mut runs: Vec<Vec<T>> = Vec::with_capacity(self.runs.len() + 1);
-        for rf in &self.runs {
-            runs.push(rf.read_all()?);
-        }
-        runs.push(std::mem::take(&mut self.buffer));
-        let cmp = self.cmp;
-        let total: usize = runs.iter().map(|r| r.len()).sum();
-        let mut iters: Vec<std::vec::IntoIter<T>> =
-            runs.into_iter().map(|r| r.into_iter()).collect();
-        let mut heads: Vec<Option<T>> = iters.iter_mut().map(|it| it.next()).collect();
-        let mut out = Vec::with_capacity(total);
-        loop {
-            let mut best: Option<usize> = None;
-            for (i, head) in heads.iter().enumerate() {
-                if let Some(h) = head {
-                    best = match best {
-                        None => Some(i),
-                        Some(j) => {
-                            if cmp(h, heads[j].as_ref().unwrap()) == Ordering::Less {
-                                Some(i)
-                            } else {
-                                Some(j)
-                            }
-                        }
-                    };
-                }
-            }
-            match best {
-                None => break,
-                Some(i) => {
-                    out.push(heads[i].take().unwrap());
-                    heads[i] = iters[i].next();
-                }
-            }
-        }
-        Ok(out)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn cmp(a: &(String, String), b: &(String, String)) -> Ordering {
-        a.cmp(b)
-    }
 
     fn string_pair_codec() -> Arc<dyn Codec<(String, String)>> {
         Arc::new(StringPairCodec)
@@ -904,100 +858,50 @@ mod tests {
         assert!(s.into_runs().is_empty());
     }
 
-    #[test]
-    fn sorts_without_spilling() {
-        let dir = TempSpillDir::new("nospill").unwrap();
-        let mut buf = SpillingBuffer::new(
-            SpillConfig::new(dir.path(), 1000),
-            string_pair_codec(),
-            cmp,
-        );
-        for k in ["c", "a", "b"] {
-            buf.push((k.to_string(), "v".to_string())).unwrap();
-        }
-        let out = buf.into_sorted().unwrap();
-        assert_eq!(
-            out.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>(),
-            vec!["a", "b", "c"]
-        );
-    }
-
-    #[test]
-    fn spills_and_merges_correctly() {
-        use crate::util::rng::Rng;
-        let dir = TempSpillDir::new("merge").unwrap();
-        let mut buf = SpillingBuffer::new(
-            SpillConfig::new(dir.path(), 100),
-            string_pair_codec(),
-            cmp,
-        );
-        let mut rng = Rng::new(8);
-        let mut expect = Vec::new();
-        for i in 0..1000 {
-            let k = format!("{:06}", rng.below(10_000));
-            expect.push((k.clone(), i.to_string()));
-            buf.push((k, i.to_string())).unwrap();
-        }
-        assert!(buf.spilled_records >= 900, "should have spilled");
-        assert!(buf.spilled_bytes > 0);
-        let out = buf.into_sorted().unwrap();
-        assert_eq!(out.len(), 1000);
-        expect.sort();
-        let out_keys: Vec<&String> = out.iter().map(|(k, _)| k).collect();
-        let exp_keys: Vec<&String> = expect.iter().map(|(k, _)| k).collect();
-        assert_eq!(out_keys, exp_keys);
-    }
-
+    /// The ≥3× DEFLATE shrink on repeated text the ROADMAP pins: the same
+    /// sorted run written compressed and raw.
     #[test]
     fn compression_reduces_spill_bytes() {
         let dir = TempSpillDir::new("codec").unwrap();
-        let make = |compress: bool| {
-            let mut cfg = SpillConfig::new(dir.path(), 50);
-            cfg.compress = compress;
-            let mut buf = SpillingBuffer::new(cfg, string_pair_codec(), cmp);
-            for i in 0..500 {
-                buf.push((
+        let recs: Vec<(String, String)> = (0..500)
+            .map(|i| {
+                (
                     format!("key{:04}", i % 10),
                     "the same long repeated value text ".repeat(4),
-                ))
-                .unwrap();
-            }
-            let bytes = {
-                buf.spill().ok();
-                buf.spilled_bytes
-            };
-            assert_eq!(buf.raw_bytes > bytes, compress);
-            let _ = buf.into_sorted().unwrap();
-            bytes
-        };
-        let raw = make(false);
-        let comp = make(true);
-        assert!(comp * 3 < raw, "compressed {comp} vs raw {raw}");
-    }
-
-    #[test]
-    fn empty_buffer() {
-        let dir = TempSpillDir::new("empty").unwrap();
-        let buf = SpillingBuffer::new(
-            SpillConfig::new(dir.path(), 10),
-            string_pair_codec(),
-            cmp,
+                )
+            })
+            .collect();
+        let raw = RunFile::write(dir.path(), string_pair_codec(), false, &recs).unwrap();
+        let comp = RunFile::write(dir.path(), string_pair_codec(), true, &recs).unwrap();
+        assert_eq!(raw.raw_bytes(), comp.raw_bytes());
+        assert!(raw.file_bytes() >= raw.raw_bytes(), "no shrink without DEFLATE");
+        assert!(
+            comp.file_bytes() * 3 < raw.file_bytes(),
+            "compressed {} vs raw {}",
+            comp.file_bytes(),
+            raw.file_bytes()
         );
-        assert!(buf.into_sorted().unwrap().is_empty());
+        assert_eq!(comp.read_all().unwrap(), recs);
     }
 
+    /// Sealed runs round-trip through [`Run::Spilled`] exactly — the
+    /// sorter-seals / codec-writes / merge-streams path the engine runs.
     #[test]
-    fn into_runs_round_trips_through_run_files() {
+    fn sealed_runs_round_trip_through_run_files() {
         let dir = TempSpillDir::new("intoruns").unwrap();
-        let mut buf = SpillingBuffer::new(
-            SpillConfig::new(dir.path(), 4),
-            string_pair_codec(),
-            cmp,
-        );
+        let mut sorter = RunSorter::new(4, |a: &(String, String), b: &(String, String)| a.cmp(b));
         for i in 0..10 {
-            buf.push((format!("k{i:02}"), format!("v{i}"))).unwrap();
+            sorter.push((format!("k{:02}", 9 - i), format!("v{i}")));
         }
-        let runs = buf.into_runs().unwrap();
+        let runs: Vec<Run<(String, String)>> = sorter
+            .into_runs()
+            .into_iter()
+            .map(|run| {
+                Run::Spilled(
+                    RunFile::write(dir.path(), string_pair_codec(), true, &run).unwrap(),
+                )
+            })
+            .collect();
         assert_eq!(runs.len(), 3); // 4 + 4 + 2
         let total: usize = runs.iter().map(Run::len).sum();
         assert_eq!(total, 10);
@@ -1021,6 +925,38 @@ mod tests {
         assert_eq!(back, recs);
         // second handle still reads after the first iterator is gone
         assert_eq!(rf.read_all().unwrap(), recs);
+    }
+
+    /// The streaming reader's memory bound: a multi-megabyte run decodes
+    /// through a 64 KiB window — the whole inflated payload never sits in
+    /// memory at once.
+    #[test]
+    fn run_file_iter_decodes_multi_mb_run_within_buffer_cap() {
+        let dir = TempSpillDir::new("stream-cap").unwrap();
+        // ~3 MB of raw payload: 30k records of ~100 bytes each
+        let recs: Vec<(String, String)> = (0..30_000)
+            .map(|i| (format!("key{i:08}"), format!("value payload {i:06} ").repeat(4)))
+            .collect();
+        for compress in [true, false] {
+            let rf = RunFile::write(dir.path(), string_pair_codec(), compress, &recs).unwrap();
+            assert!(rf.raw_bytes() > 2_000_000, "corpus must be multi-MB");
+            let cap = 64 * 1024;
+            let mut it = rf.iter_with_chunk(cap).unwrap();
+            let mut n = 0usize;
+            for (i, rec) in it.by_ref().enumerate() {
+                assert_eq!(rec, recs[i]);
+                n += 1;
+            }
+            assert_eq!(n, recs.len());
+            // window ≤ one chunk of fresh bytes + the leftover tail of the
+            // previous chunk (records here are far smaller than the cap)
+            assert!(
+                it.max_buffer_bytes() <= 2 * cap,
+                "decode window {} exceeded the {}-byte cap (compress={compress})",
+                it.max_buffer_bytes(),
+                2 * cap
+            );
+        }
     }
 
     #[test]
@@ -1059,12 +995,12 @@ mod tests {
         let dir = TempSpillDir::new("unwritable").unwrap();
         let blocker = dir.path().join("not-a-dir");
         std::fs::write(&blocker, b"file in the way").unwrap();
-        let mut buf = SpillingBuffer::new(
-            SpillConfig::new(&blocker, 1),
+        let err = RunFile::write(
+            &blocker,
             string_pair_codec(),
-            cmp,
+            true,
+            &[("k".to_string(), "v".to_string())],
         );
-        let err = buf.push(("k".into(), "v".into()));
         assert!(err.is_err(), "spilling into a non-directory must fail");
     }
 

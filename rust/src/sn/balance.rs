@@ -471,6 +471,7 @@ mod tests {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         };
         let res = crate::sn::repsn::run(&entities, &cfg).unwrap();
         let mut expect = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), w);

@@ -137,7 +137,8 @@ pub fn run_with_options(
             .with_tasks(cfg.num_map_tasks.min(input.len().max(1)), r2)
             .with_workers(cfg.workers)
             .with_sort_buffer(cfg.sort_buffer_records)
-            .with_spill(cfg.spill.as_ref().map(crate::sn::codec::boundary_job_spec));
+            .with_spill(cfg.spill.as_ref().map(crate::sn::codec::boundary_job_spec))
+            .with_push(cfg.push);
         // boundary index spreads over the phase-2 reduce tasks
         struct BoundaryPartitioner;
         impl crate::mapreduce::types::Partitioner<SnKey> for BoundaryPartitioner {
@@ -209,6 +210,7 @@ mod tests {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         }
     }
 
@@ -244,6 +246,7 @@ mod tests {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 4);

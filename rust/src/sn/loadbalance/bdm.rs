@@ -283,6 +283,7 @@ pub struct BdmJobResult {
 /// (usually [`crate::sn::codec::bdm_job_spec`] via
 /// [`SnConfig::spill`](crate::sn::types::SnConfig)) routes even this
 /// analysis job's combined cell counts through disk-backed runs.
+#[allow(clippy::too_many_arguments)]
 pub fn bdm_job(
     input: Vec<(u32, Arc<Entity>)>,
     key_fn: &Arc<dyn BlockingKey>,
@@ -290,6 +291,7 @@ pub fn bdm_job(
     workers: usize,
     sort_buffer_records: Option<usize>,
     spill: Option<crate::mapreduce::sortspill::SpillSpec>,
+    push: bool,
     exec: Exec<'_>,
 ) -> BdmJobResult {
     let m = m.max(1);
@@ -311,7 +313,8 @@ pub fn bdm_job(
         .with_tasks(m, 1)
         .with_workers(workers.max(1))
         .with_sort_buffer(sort_buffer_records)
-        .with_spill(spill);
+        .with_spill(spill)
+        .with_push(push);
     let res = exec.run_job_with_combiner(
         &cfg,
         input,
@@ -356,7 +359,7 @@ mod tests {
     fn job_matches_driver_side_matrix() {
         let es = entities(200);
         let bk: Arc<dyn BlockingKey> = Arc::new(TitlePrefixKey::new(2));
-        let job = bdm_job(partitioned_input(&es, 4), &bk, 4, 2, None, None, Exec::Serial);
+        let job = bdm_job(partitioned_input(&es, 4), &bk, 4, 2, None, None, false, Exec::Serial);
         let reference = Bdm::from_entities(&es, bk.as_ref(), 4);
         assert_eq!(job.bdm.keys, reference.keys);
         assert_eq!(job.bdm.key_starts, reference.key_starts);

@@ -348,7 +348,8 @@ pub(super) fn run_job(
         .with_tasks(m, plan.num_tasks())
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records)
-        .with_spill(cfg.spill.as_ref().map(crate::sn::codec::ranked_job_spec));
+        .with_spill(cfg.spill.as_ref().map(crate::sn::codec::ranked_job_spec))
+        .with_push(cfg.push);
     let mapper: Arc<dyn MapTaskFactory<u32, Arc<Entity>, SnKey, Ranked>> =
         Arc::new(BlockSplitMapFactory {
             w: cfg.window,

@@ -248,6 +248,7 @@ fn run_pipeline(
         cfg.workers,
         cfg.sort_buffer_records,
         cfg.spill.as_ref().map(crate::sn::codec::bdm_job_spec),
+        cfg.push,
         exec,
     );
     let matrix = Arc::new(analysis.bdm);

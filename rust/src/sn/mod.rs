@@ -24,6 +24,28 @@
 //!   letting [`SnSpill`] on [`SnConfig`] route all of the above through
 //!   the engine's disk-backed, DEFLATE-compressed run files.
 //!
+//! ## Phase structure: barrier vs push
+//!
+//! Every variant above runs each of its MapReduce jobs in one of two
+//! phase structures, with byte-identical output either way
+//! (`tests/prop_push.rs`):
+//!
+//! * **Barrier** (default): the paper's Hadoop 0.20 model — a hard
+//!   map→reduce barrier inside each job, reduce slots idle during the
+//!   whole map wave.  This is the reference path and what the paper's
+//!   figures measure.
+//! * **Push** ([`SnConfig::push`], or a scheduler-wide
+//!   [`PushMode::Push`](crate::mapreduce::scheduler::PushMode)): on a
+//!   shared [`JobScheduler`](crate::mapreduce::scheduler::JobScheduler),
+//!   each job's sealed runs flow through the engine's push-based
+//!   [`ShuffleService`](crate::mapreduce::push::ShuffleService) and its
+//!   reduce tasks start on their first runs, overlapping the job's own
+//!   map wave (see
+//!   [`JobStats::overlap_secs`](crate::mapreduce::JobStats)).  JobSN's
+//!   two jobs each push internally; pushing *across* the phase-1 →
+//!   phase-2 boundary (phase 2 consuming boundary entities before
+//!   phase 1 completes) is a possible follow-up.
+//!
 //! ## Determinism note
 //!
 //! The paper sorts by blocking key alone; ties are ordered arbitrarily

@@ -219,7 +219,8 @@ fn job_parts(
         .with_tasks(cfg.num_map_tasks, r)
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records)
-        .with_spill(cfg.spill.as_ref().map(crate::sn::codec::entity_job_spec));
+        .with_spill(cfg.spill.as_ref().map(crate::sn::codec::entity_job_spec))
+        .with_push(cfg.push);
     let mapper: Arc<dyn MapTaskFactory<(), Arc<Entity>, SnKey, Arc<Entity>>> =
         Arc::new(RepSnMapFactory {
             w: cfg.window,
@@ -357,6 +358,7 @@ mod tests {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         }
     }
 
@@ -394,6 +396,7 @@ mod tests {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         };
         let res = run(&entities, &cfg).unwrap();
         let replicated = res.counters.get(counter_names::REPLICATED_ENTITIES);
@@ -427,6 +430,7 @@ mod tests {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 6);

@@ -163,7 +163,8 @@ pub(crate) fn run_srp_job(
         .with_tasks(cfg.num_map_tasks, r)
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records)
-        .with_spill(cfg.spill.as_ref().map(crate::sn::codec::entity_job_spec));
+        .with_spill(cfg.spill.as_ref().map(crate::sn::codec::entity_job_spec))
+        .with_push(cfg.push);
     exec.run_job(
         &job_cfg,
         input,
@@ -254,6 +255,7 @@ mod tests {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         };
         let res = run(&entities, &cfg).unwrap();
         assert_eq!(res.pairs.len(), 12);
@@ -284,6 +286,7 @@ mod tests {
             sort_buffer_records: None,
             balance: Default::default(),
             spill: None,
+            push: false,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 5);

@@ -88,7 +88,8 @@ pub fn run_on(entities: &[Entity], cfg: &SnConfig, exec: Exec<'_>) -> anyhow::Re
         .with_tasks(cfg.num_map_tasks, r)
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records)
-        .with_spill(cfg.spill.as_ref().map(crate::sn::codec::block_job_spec));
+        .with_spill(cfg.spill.as_ref().map(crate::sn::codec::block_job_spec))
+        .with_push(cfg.push);
     let res = exec.run_job(
         &job_cfg,
         input,

@@ -157,6 +157,15 @@ pub struct SnConfig {
     /// Disk-backed, optionally compressed intermediates for every job the
     /// variant runs.  `None` (default) keeps runs in memory.
     pub spill: Option<SnSpill>,
+    /// Push-based shuffle for every job the variant runs: reduce tasks
+    /// start on their first runs instead of after the map wave
+    /// ([`crate::mapreduce::JobConfig::push`]).  Takes effect when the
+    /// variant executes on a
+    /// [`JobScheduler`](crate::mapreduce::scheduler::JobScheduler) (any
+    /// [`Exec::Scheduler`](crate::mapreduce::scheduler::Exec)); the
+    /// serial executor is the barrier reference path and ignores it.
+    /// Output is identical either way (`tests/prop_push.rs`).
+    pub push: bool,
 }
 
 impl Default for SnConfig {
@@ -171,6 +180,7 @@ impl Default for SnConfig {
             sort_buffer_records: None,
             balance: BalanceStrategy::None,
             spill: None,
+            push: false,
         }
     }
 }
@@ -185,6 +195,7 @@ impl std::fmt::Debug for SnConfig {
             .field("mode", &self.mode)
             .field("balance", &self.balance)
             .field("spill", &self.spill)
+            .field("push", &self.push)
             .finish()
     }
 }

@@ -55,6 +55,7 @@ fn fig_cfg(w: usize, m: usize) -> SnConfig {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     }
 }
 

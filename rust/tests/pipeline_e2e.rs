@@ -38,6 +38,7 @@ fn sn_config(entities: &[Entity], w: usize) -> SnConfig {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     }
 }
 

@@ -51,6 +51,7 @@ fn unbalanced_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> 
         sort_buffer_records: None,
         balance: BalanceStrategy::None,
         spill: None,
+        push: false,
     }
 }
 

@@ -1,0 +1,287 @@
+//! Push-based shuffle equivalence (ISSUE 5 acceptance).
+//!
+//! With `PushMode::Push` on a 4-slot `JobScheduler`, every SN variant —
+//! standard blocking, SRP, JobSN, RepSN, and the BlockSplit/PairRange
+//! two-job pipeline — must produce byte-identical output to the barrier
+//! path, with the engine's data-volume counters unchanged and every
+//! committed run accounted in `PUSHED_RUNS` exactly once (speculative
+//! retraction never double-counts).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use snmr::data::skew::zipf_skew_block_keys;
+use snmr::er::blockkey::TitlePrefixKey;
+use snmr::er::entity::Entity;
+use snmr::mapreduce::counters::names;
+use snmr::mapreduce::scheduler::{Exec, JobScheduler, PushMode, SchedulerConfig};
+use snmr::mapreduce::{
+    run_job, Counters, Emitter, FnMapTask, FnReduceTask, HashPartitioner, JobConfig, TempSpillDir,
+    ValuesIter,
+};
+use snmr::sn::balance::pair_balanced_min_size;
+use snmr::sn::loadbalance::BalanceStrategy;
+use snmr::sn::types::{SnConfig, SnMode, SnResult, SnSpill};
+use snmr::sn::{jobsn, repsn, srp, standard_blocking};
+use snmr::util::prop::Cases;
+use snmr::util::rng::Rng;
+use snmr::{prop_assert, prop_assert_eq};
+
+/// Zipf block-key corpus (same shape as `prop_spill`): skewed blocks so
+/// map tasks finish at staggered times and partitions fill unevenly.
+fn corpus(rng: &mut Rng, n: usize) -> Vec<Entity> {
+    let mut ids: Vec<u64> = (0..(2 * n) as u64).collect();
+    rng.shuffle(&mut ids);
+    let mut entities: Vec<Entity> = (0..n)
+        .map(|i| {
+            Entity::new(
+                ids[i],
+                &format!("xx parallel sorted neighborhood {i}"),
+                &"entity resolution with mapreduce ".repeat(2),
+            )
+        })
+        .collect();
+    zipf_skew_block_keys(&mut entities, rng.range(8, 40), 1.3, rng.next_u64());
+    entities
+}
+
+fn base_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConfig {
+    let bk = TitlePrefixKey::new(2);
+    let partitioner = pair_balanced_min_size(entities, &bk, r, w);
+    SnConfig {
+        window: w,
+        num_map_tasks: rng.range(2, 7),
+        workers: rng.range(1, 4),
+        partitioner: Arc::new(partitioner),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+        sort_buffer_records: Some(rng.range(8, 64)),
+        balance: BalanceStrategy::None,
+        spill: None,
+        push: false,
+    }
+}
+
+type VariantFn = fn(&[Entity], &SnConfig, Exec<'_>) -> anyhow::Result<SnResult>;
+
+/// Every SN variant behind one `(entities, cfg, exec)` signature.  The
+/// balanced strategies ride on `repsn::run_on`, which dispatches to the
+/// BDM two-job pipeline when `cfg.balance` is set.
+fn variants() -> Vec<(&'static str, VariantFn, BalanceStrategy)> {
+    vec![
+        ("standard_blocking", standard_blocking::run_on, BalanceStrategy::None),
+        ("srp", srp::run_on, BalanceStrategy::None),
+        ("jobsn", jobsn::run_on, BalanceStrategy::None),
+        ("repsn", repsn::run_on, BalanceStrategy::None),
+        ("blocksplit", repsn::run_on, BalanceStrategy::BlockSplit),
+        ("pairrange", repsn::run_on, BalanceStrategy::PairRange),
+    ]
+}
+
+#[test]
+fn prop_push_mode_output_identical_across_variants() {
+    Cases::new("push == barrier, every SN variant, 4-slot scheduler", 6).run(|rng| {
+        let n = rng.range(120, 300);
+        let w = rng.range(2, 7);
+        let entities = corpus(rng, n);
+        let base = base_config(rng, &entities, w, rng.range(4, 8));
+        let push_sched = JobScheduler::new(
+            SchedulerConfig::slots(4)
+                .with_push(PushMode::Push)
+                .with_speculation(rng.below(2) == 0),
+        );
+        for (name, run, strategy) in variants() {
+            let cfg = SnConfig {
+                balance: strategy,
+                ..base.clone()
+            };
+            let barrier = run(&entities, &cfg, Exec::Serial).map_err(|e| e.to_string())?;
+            let pushed =
+                run(&entities, &cfg, Exec::Scheduler(&push_sched)).map_err(|e| e.to_string())?;
+            // byte-identical output: same pairs, in the same order
+            prop_assert_eq!(pushed.pairs, barrier.pairs);
+            prop_assert_eq!(pushed.pair_set(), barrier.pair_set());
+            // the engine's data-volume counters are mode-invariant
+            for cname in [
+                names::MAP_OUTPUT_RECORDS,
+                names::SHUFFLE_BYTES,
+                names::SHUFFLE_BYTES_RAW,
+                names::REDUCE_INPUT_RECORDS,
+                names::REDUCE_GROUPS,
+                names::MAP_SPILL_RUNS,
+            ] {
+                let (b, p) = (barrier.counters.get(cname), pushed.counters.get(cname));
+                prop_assert!(b == p, "{name}: counter {cname} diverged under push: {b} vs {p}");
+            }
+            // the push run really ran push: every sealed run committed
+            // through the service, exactly once
+            let pushed_runs = pushed.counters.get(names::PUSHED_RUNS);
+            prop_assert!(pushed_runs > 0, "{name}: no runs flowed through the service");
+            let sealed_runs = pushed.counters.get(names::MAP_SPILL_RUNS);
+            prop_assert!(
+                pushed_runs == sealed_runs,
+                "{name}: committed runs {pushed_runs} != sealed runs {sealed_runs}"
+            );
+            prop_assert_eq!(barrier.counters.get(names::PUSHED_RUNS), 0);
+
+            // disk-backed runs stream through the mailboxes identically
+            let dir = TempSpillDir::new(&format!("push-{name}")).map_err(|e| e.to_string())?;
+            let disk_cfg = SnConfig {
+                spill: Some(SnSpill::new(dir.path())),
+                ..cfg.clone()
+            };
+            let disk_push = run(&entities, &disk_cfg, Exec::Scheduler(&push_sched))
+                .map_err(|e| e.to_string())?;
+            prop_assert_eq!(disk_push.pairs, barrier.pairs);
+            prop_assert!(
+                disk_push.counters.get(names::SPILLED_RUNS) > 0,
+                "{name}: disk-backed push run wrote no run files"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The per-variant opt-in: `SnConfig::push` requests the push shuffle on
+/// an otherwise-barrier scheduler; the serial executor stays the barrier
+/// reference and ignores it.
+#[test]
+fn sn_config_push_opt_in_matches_serial_reference() {
+    let mut rng = Rng::new(0x9054);
+    let entities = corpus(&mut rng, 200);
+    let cfg = SnConfig {
+        push: true,
+        ..base_config(&mut rng, &entities, 4, 5)
+    };
+    let sched = JobScheduler::with_slots(4);
+    assert_eq!(sched.push_mode(), PushMode::Barrier);
+    let serial = repsn::run_on(&entities, &cfg, Exec::Serial).unwrap();
+    let pushed = repsn::run_on(&entities, &cfg, Exec::Scheduler(&sched)).unwrap();
+    assert_eq!(serial.pairs, pushed.pairs);
+    assert!(pushed.counters.get(names::PUSHED_RUNS) > 0);
+    assert_eq!(
+        serial.counters.get(names::PUSHED_RUNS),
+        0,
+        "the serial driver must ignore the push knob"
+    );
+    // barrier runs report no overlap; the stat only moves under push
+    assert!(serial.stats.iter().all(|s| s.overlap_secs == 0.0));
+}
+
+fn busy_wait(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+/// Speculation × push (ISSUE 5 satellite): a `SPECULATIVE_WON > 0` run
+/// with push on still produces the exact barrier-path output, and a
+/// retracted attempt's pushes never double-count in `PUSHED_RUNS`.
+///
+/// The straggler's slowness is *transient* (first execution only), so
+/// its speculative clone — which re-runs fast — reliably wins.
+#[test]
+fn speculation_with_push_preserves_output_and_run_accounting() {
+    let input: Vec<((), u64)> = (0..8).map(|i| ((), i)).collect();
+    let make_mapper = || {
+        let slow_once = Arc::new(AtomicBool::new(true));
+        Arc::new(FnMapTask::new(
+            move |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                if v == 7 && slow_once.swap(false, Ordering::SeqCst) {
+                    busy_wait(Duration::from_millis(250));
+                } else {
+                    busy_wait(Duration::from_millis(1));
+                }
+                out.emit(v % 3, v);
+            },
+        ))
+    };
+    let reducer = Arc::new(FnReduceTask::new(
+        |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+            out.emit(*k, vals.map(|v| *v).sum());
+        },
+    ));
+    let cfg = JobConfig::named("spec-push").with_tasks(8, 3);
+    let barrier = run_job(
+        &cfg.clone().with_workers(4),
+        input.clone(),
+        make_mapper(),
+        Arc::new(HashPartitioner::new(|k: &u64| *k)),
+        Arc::new(|a: &u64, b: &u64| a == b),
+        reducer.clone(),
+    );
+    let mut won = 0u64;
+    for iteration in 0..10 {
+        let sched = JobScheduler::new(
+            SchedulerConfig::slots(4)
+                .with_speculation(true)
+                .with_push(PushMode::Push),
+        );
+        let res = sched.run(
+            &cfg,
+            input.clone(),
+            make_mapper(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer.clone(),
+        );
+        assert_eq!(
+            res.outputs, barrier.outputs,
+            "push+speculation output diverged (iteration {iteration})"
+        );
+        assert!(res.counters.get(names::SPECULATIVE_LAUNCHED) >= 1);
+        // winner-only accounting: retracted attempts' pushes never count
+        assert_eq!(
+            res.counters.get(names::PUSHED_RUNS),
+            res.counters.get(names::MAP_SPILL_RUNS),
+            "a retracted attempt's runs leaked into PUSHED_RUNS"
+        );
+        won += res.counters.get(names::SPECULATIVE_WON);
+        if won > 0 {
+            break;
+        }
+    }
+    assert!(
+        won > 0,
+        "no speculative clone ever won in 10 runs — transient slowness should \
+         make the fast clone beat the 250ms primary"
+    );
+}
+
+/// Multi-wave map phases really overlap with reduce execution: on 2 map
+/// slots, 8 × ~20ms map tasks commit their first runs long before the
+/// wave ends, so the first reduce submission strictly precedes the last
+/// map completion and `overlap_secs` is positive.
+#[test]
+fn push_overlap_is_measured_on_multi_wave_maps() {
+    let input: Vec<((), u64)> = (0..8).map(|i| ((), i)).collect();
+    let mapper = Arc::new(FnMapTask::new(
+        |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+            busy_wait(Duration::from_millis(20));
+            out.emit(v % 2, v);
+        },
+    ));
+    let reducer = Arc::new(FnReduceTask::new(
+        |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+            out.emit(*k, vals.map(|v| *v).sum());
+        },
+    ));
+    let cfg = JobConfig::named("overlap").with_tasks(8, 2);
+    let res = JobScheduler::new(SchedulerConfig::slots(2).with_push(PushMode::Push)).run(
+        &cfg,
+        input,
+        mapper,
+        Arc::new(HashPartitioner::new(|k: &u64| *k)),
+        Arc::new(|a: &u64, b: &u64| a == b),
+        reducer,
+    );
+    assert!(
+        res.stats.reduce_first_start_secs < res.stats.map_wave_done_secs,
+        "first reduce start {} must precede map wave end {}",
+        res.stats.reduce_first_start_secs,
+        res.stats.map_wave_done_secs
+    );
+    assert!(res.stats.overlap_secs > 0.0, "no overlap measured: {:?}", res.stats);
+}

@@ -48,6 +48,7 @@ fn random_config(rng: &mut Rng, entities: &[Entity]) -> SnConfig {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     }
 }
 

@@ -48,6 +48,7 @@ fn config(
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     }
 }
 

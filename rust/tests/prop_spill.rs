@@ -56,6 +56,7 @@ fn base_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConf
         sort_buffer_records: Some(rng.range(8, 64)),
         balance: BalanceStrategy::None,
         spill: None,
+        push: false,
     }
 }
 

@@ -154,6 +154,7 @@ fn end_to_end_repsn_with_xla_matcher_matches_native_decisions() {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     };
     let res_native = snmr::sn::repsn::run(
         &corpus.entities,

@@ -52,6 +52,7 @@ fn multipass_concurrency_speedup_over_serial() {
         sort_buffer_records: None,
         balance: Default::default(),
         spill: None,
+        push: false,
     };
     let keys: Vec<Arc<dyn BlockingKey>> = vec![
         Arc::new(TitlePrefixKey::new(1)),

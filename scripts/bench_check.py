@@ -46,6 +46,10 @@ GATES = {
         ("combiner_histogram.shuffle_bytes_on", "lower", TOLERANCE),
         ("spill_compression.shuffle_bytes_raw", "lower", TOLERANCE),
         ("spill_compression.compressed_over_raw_ratio", "lower", TOLERANCE),
+        # simulated push/barrier makespan ratio: deterministic given the
+        # measured profile, must stay <= 1 (asserted in-bench) and must
+        # not drift up (losing overlap) beyond tolerance
+        ("push_overlap.makespan_ratio", "lower", TOLERANCE),
         # same-machine ratio, but still timing-derived: wider band
         ("shuffle_reduce[workers=8].speedup", "higher", 0.5),
     ],
@@ -62,6 +66,9 @@ GATES = {
 
 # Boolean must-hold facts checked on the *current* summaries alone.
 INVARIANTS = {
+    "BENCH_engine.json": [
+        "push_overlap.identical_output",
+    ],
     "BENCH_skew.json": [
         "multipass_measured[mode=scheduler].identical_output",
         "multipass_measured[mode=scheduler+spec].identical_output",
@@ -207,6 +214,13 @@ SELFTEST_SAMPLES = {
             "shuffle_bytes_compressed": 900_000.0,
             "compressed_over_raw_ratio": 0.3,
             "spilled_runs": 32.0,
+        },
+        "push_overlap": {
+            "barrier_sim_s": 40.0,
+            "push_sim_s": 34.0,
+            "makespan_ratio": 0.85,
+            "measured_overlap_secs": 0.02,
+            "identical_output": True,
         },
     },
     "BENCH_skew.json": {
