@@ -99,6 +99,8 @@ fn main() -> anyhow::Result<()> {
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     };
     let truth = corpus.truth_pairs();
     let mut table = Table::new(

@@ -61,6 +61,8 @@ fn main() -> anyhow::Result<()> {
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     };
     let keys: Vec<Arc<dyn BlockingKey>> = vec![
         Arc::new(TitlePrefixKey::new(2)),

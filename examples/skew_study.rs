@@ -30,6 +30,14 @@
 //! compressed-vs-raw shuffle ratio is reported — the spill smoke test CI
 //! runs.
 //!
+//! With `--faults`, every ladder configuration is re-run on a 4-slot
+//! `JobScheduler` with an **injected task panic** (`FaultPlan::seeded`
+//! kills the first attempt of one deterministically drawn task per job)
+//! and a retry budget of 2.  Rows alternate between the barrier and the
+//! push shuffle so both recovery paths are exercised; pair digests are
+//! asserted identical to the clean serial runs, and `TASK_RETRIES` must
+//! be positive across the ladder — the fault smoke test CI runs.
+//!
 //! With `--push`, every ladder configuration is re-run on a 4-slot
 //! `JobScheduler` with the **push-based shuffle**: reduce tasks start on
 //! their first runs instead of after the map wave.  Pair digests are
@@ -44,6 +52,7 @@
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --balance blocksplit
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --sort-buffer 64
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --push
+//! cargo run --release --example skew_study -- --n 2000 --window 20 --faults
 //! ```
 
 use std::sync::Arc;
@@ -55,7 +64,7 @@ use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
 use snmr::mapreduce::counters::names;
 use snmr::mapreduce::scheduler::{Exec, JobScheduler, PushMode, SchedulerConfig};
 use snmr::mapreduce::sim::{simulate_job, simulate_job_chain, simulate_job_overlap, ClusterSpec};
-use snmr::mapreduce::TempSpillDir;
+use snmr::mapreduce::{FaultPlan, TempSpillDir};
 use snmr::metrics::report::{write_report, Table};
 use snmr::sn::balance::{balanced_from_histogram, key_histogram_job, pair_balanced_min_size};
 use snmr::sn::loadbalance::{counter_names as balance_counters, reduce_pair_skew, BalanceStrategy};
@@ -95,6 +104,10 @@ fn main() -> anyhow::Result<()> {
                 "push",
                 "re-run the ladder on a 4-slot scheduler with the push-based shuffle",
             ),
+            switch(
+                "faults",
+                "re-run the ladder under injected task panics with retries enabled",
+            ),
             flag(
                 "balance",
                 "also run the load-balancing study with this strategy (blocksplit|pairrange)",
@@ -111,6 +124,7 @@ fn main() -> anyhow::Result<()> {
     let window = args.get_usize("window", 100).map_err(anyhow::Error::msg)?;
     let speculative = args.get_bool("speculative");
     let push = args.get_bool("push");
+    let faults = args.get_bool("faults");
     let sort_buffer = match args.get("sort-buffer") {
         None => None,
         Some(_) => Some(args.get_usize("sort-buffer", 64).map_err(anyhow::Error::msg)?),
@@ -177,6 +191,8 @@ fn main() -> anyhow::Result<()> {
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     };
 
     let mut table = Table::new(
@@ -345,6 +361,58 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    if faults {
+        // Fault-injection re-run: one deterministic task panic per ladder
+        // job, recovered by the scheduler's bounded retry.  Rows alternate
+        // between the barrier and the push shuffle so both recovery paths
+        // (wave resubmission vs staged-attempt retraction + re-pull) are
+        // exercised; output digests must match the clean serial runs.
+        println!("\n--- fault-injection re-run: 4-slot scheduler, injected panics + retry ---");
+        let barrier_sched = JobScheduler::new(SchedulerConfig::slots(4));
+        let push_sched = JobScheduler::new(SchedulerConfig::slots(4).with_push(PushMode::Push));
+        let mut t6 = Table::new(
+            "Fault ladder (4 shared slots): seeded panic, retry budget 2",
+            &["p", "mode", "identical", "task_retries", "tasks_failed"],
+        );
+        let mut total_retries = 0u64;
+        for (i, ((name, p, entities), digest)) in
+            configs.iter().zip(&digests).enumerate()
+        {
+            let mut cfg = sn_cfg(p);
+            cfg.faults = Some(FaultPlan::seeded(
+                i as u64,
+                cfg.num_map_tasks,
+                p.num_partitions(),
+            ));
+            cfg.max_task_retries = Some(2);
+            let (mode, sched) = if i % 2 == 0 {
+                ("barrier", &barrier_sched)
+            } else {
+                ("push", &push_sched)
+            };
+            let res = repsn::run_on(entities, &cfg, Exec::Scheduler(sched))?;
+            let identical = pair_digest(&res) == *digest;
+            assert!(identical, "{name}: faulted output diverged from the clean run");
+            let retries = res.counters.get(names::TASK_RETRIES);
+            let failed = res.counters.get(names::TASKS_FAILED);
+            assert_eq!(failed, 0, "{name}: a task exhausted its retry budget");
+            total_retries += retries;
+            t6.row(vec![
+                name.clone(),
+                mode.into(),
+                identical.to_string(),
+                retries.to_string(),
+                failed.to_string(),
+            ]);
+        }
+        assert!(total_retries > 0, "no injected fault actually fired");
+        println!("{}", t6.render());
+        println!(
+            "all ladder runs recovered {total_retries} injected panic(s) via retry;\n\
+             outputs identical to the clean serial digests."
+        );
+    }
+
     if let Some(strategy) = balance {
         // Load-balancing study: a Zipf block-key corpus (a few giant
         // blocks) through unbalanced RepSN vs the chosen two-job pipeline.
@@ -364,6 +432,8 @@ fn main() -> anyhow::Result<()> {
             balance: strategy,
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         };
         let unbalanced = repsn::run(&bal_entities, &cfg(BalanceStrategy::None))?;
         let (unb_max, unb_total) = reduce_pair_skew(&unbalanced.stats[0]);

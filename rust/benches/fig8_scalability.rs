@@ -79,6 +79,8 @@ fn main() -> anyhow::Result<()> {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         };
         eprintln!("w={w}: running RepSN...");
         let t0 = std::time::Instant::now();

@@ -134,6 +134,8 @@ fn main() -> anyhow::Result<()> {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         };
         eprintln!("running RepSN with {name} (g={g:.2})...");
         let res = repsn::run(entities, &cfg)?;
@@ -186,6 +188,8 @@ fn main() -> anyhow::Result<()> {
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     };
     let zipf_res = repsn::run(&zipf_entities, &zipf_cfg)?;
     let mut t_spec = Table::new(
@@ -254,6 +258,8 @@ fn main() -> anyhow::Result<()> {
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     };
     eprintln!("running multipass: serial baseline...");
     let t0 = Instant::now();
@@ -338,6 +344,8 @@ fn main() -> anyhow::Result<()> {
         balance: strategy,
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     };
     let cluster8 = ClusterSpec::paper_like(8);
     let mut t_bal = Table::new(

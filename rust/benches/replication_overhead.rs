@@ -66,6 +66,8 @@ fn main() -> anyhow::Result<()> {
                 balance: Default::default(),
                 spill: None,
                 push: false,
+                faults: None,
+                max_task_retries: None,
             };
             let srp_res = srp::run(&corpus.entities, &cfg)?;
             let rep_res = repsn::run(&corpus.entities, &cfg)?;

@@ -55,6 +55,8 @@ fn main() -> anyhow::Result<()> {
                 balance: Default::default(),
                 spill: None,
                 push: false,
+                faults: None,
+                max_task_retries: None,
             };
             let seq_pairs = seq::run_blocking(&corpus.entities, &bk, w).len();
             let srp_pairs = srp::run(&corpus.entities, &cfg)?.pair_set().len();

@@ -172,6 +172,8 @@ mod tests {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         }
     }
 

@@ -1,0 +1,742 @@
+//! Job checkpoint/resume: a JSON manifest of committed task outputs.
+//!
+//! With [`JobConfig::checkpoint`](crate::mapreduce::JobConfig::checkpoint)
+//! set, a scheduler-executed barrier job records every *committed* task
+//! into a manifest next to the spill directory, as the commits happen:
+//!
+//! * a committed **map task** contributes its sealed, sorted run files —
+//!   already-spilled runs are [persisted](super::sortspill::RunFile::persist)
+//!   in place, in-memory runs are serialized into the checkpoint
+//!   directory through the spec's codec (so checkpointing works without
+//!   a spill spec);
+//! * a committed **reduce partition** contributes its output records,
+//!   serialized through the spec's optional output codec.
+//!
+//! Re-submitting the same job restores manifest-covered tasks instead of
+//! re-executing them (`TASKS_RESUMED` counts the skips) — only map tasks
+//! whose runs are missing from the manifest and uncommitted reduce
+//! partitions re-run.  Restoration is **best-effort by construction**: a
+//! missing or corrupt checkpoint file silently falls back to normal
+//! execution, so a stale manifest can cost time but never correctness.
+//! A clean ([`JobOutcome::Ok`](super::engine::JobOutcome)) finish deletes
+//! the manifest and every file it references; a failed or degraded job
+//! leaves them for the next attempt.
+//!
+//! The commit hook rides the scheduler's first-completion-wins arbiter
+//! (the same one speculation uses), so a losing speculative clone can
+//! never checkpoint its output.  The manifest itself is JSON through
+//! [`crate::util::json`] (no serde offline), written atomically
+//! (tmp + rename) after every commit.
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::engine::{MapTaskOutput, ReduceTaskOutput};
+use super::sortspill::{Codec, Run, RunFile};
+use crate::util::json::{self, Json};
+
+// ---------------------------------------------------------------------------
+// CheckpointSpec: the type-erased plumbing through JobConfig
+// ---------------------------------------------------------------------------
+
+/// Checkpoint/resume configuration, carried by the non-generic
+/// [`JobConfig`](crate::mapreduce::JobConfig) — the same type-erasure
+/// pattern as [`SpillSpec`](super::sortspill::SpillSpec).
+///
+/// The intermediate codec (the job's `(KT, VT)` pairs) is required: it
+/// writes in-memory map runs to disk and re-opens spilled ones.  The
+/// output codec (the job's `(KO, VO)` pairs) is optional: without it,
+/// only the map wave checkpoints and every reduce partition re-runs on
+/// resume — still a win, since the map wave dominates SN jobs.
+#[derive(Clone)]
+pub struct CheckpointSpec {
+    dir: PathBuf,
+    codec: Arc<dyn Any + Send + Sync>,
+    codec_type: &'static str,
+    out_codec: Option<Arc<dyn Any + Send + Sync>>,
+    out_codec_type: &'static str,
+}
+
+impl CheckpointSpec {
+    /// A spec checkpointing `(KT, VT)`-shaped intermediate records under
+    /// `dir` (created on demand; the manifest lives inside it).
+    pub fn new<T: 'static>(dir: impl Into<PathBuf>, codec: Arc<dyn Codec<T>>) -> Self {
+        Self {
+            dir: dir.into(),
+            codec: Arc::new(codec),
+            codec_type: std::any::type_name::<T>(),
+            out_codec: None,
+            out_codec_type: "",
+        }
+    }
+
+    /// Also checkpoint committed reduce partitions, encoded as `O`
+    /// (the job's `(KO, VO)` output pairs).
+    pub fn with_output_codec<O: 'static>(mut self, codec: Arc<dyn Codec<O>>) -> Self {
+        self.out_codec = Some(Arc::new(codec));
+        self.out_codec_type = std::any::type_name::<O>();
+        self
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Where this spec's manifest lives.
+    pub fn manifest_path(&self) -> PathBuf {
+        self.dir.join("checkpoint-manifest.json")
+    }
+
+    /// Recover the typed intermediate codec.  Panics if the spec was
+    /// built for a different record type than the job's `(KT, VT)` —
+    /// silently skipping checkpointing would break resume guarantees.
+    pub(crate) fn resolve<T: 'static>(&self) -> Arc<dyn Codec<T>> {
+        self.codec
+            .downcast_ref::<Arc<dyn Codec<T>>>()
+            .unwrap_or_else(|| {
+                panic!(
+                    "checkpoint codec mismatch: spec encodes {}, job intermediates are {}",
+                    self.codec_type,
+                    std::any::type_name::<T>()
+                )
+            })
+            .clone()
+    }
+
+    /// Recover the typed output codec, if one was registered.  Panics on
+    /// a type mismatch like [`Self::resolve`].
+    pub(crate) fn resolve_output<O: 'static>(&self) -> Option<Arc<dyn Codec<O>>> {
+        self.out_codec.as_ref().map(|c| {
+            c.downcast_ref::<Arc<dyn Codec<O>>>()
+                .unwrap_or_else(|| {
+                    panic!(
+                        "checkpoint output codec mismatch: spec encodes {}, job outputs are {}",
+                        self.out_codec_type,
+                        std::any::type_name::<O>()
+                    )
+                })
+                .clone()
+        })
+    }
+}
+
+impl std::fmt::Debug for CheckpointSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CheckpointSpec")
+            .field("dir", &self.dir)
+            .field("codec", &self.codec_type)
+            .field("output_codec", &self.out_codec_type)
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manifest: the on-disk record of committed tasks
+// ---------------------------------------------------------------------------
+
+/// One checkpointed run file of a committed map task.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct RunEntry {
+    pub partition: usize,
+    pub file: String,
+    pub records: u64,
+    pub raw_bytes: u64,
+    pub file_bytes: u64,
+}
+
+/// A committed map task: its accounting scalars (restored verbatim so a
+/// resumed job's stats match what the original attempt reported) plus
+/// its sealed run files.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct MapEntry {
+    pub secs: f64,
+    pub records: u64,
+    pub bytes: u64,
+    pub spilled: u64,
+    pub spill_runs: u64,
+    pub spill_file_runs: u64,
+    pub spill_file_bytes: u64,
+    pub combine_in: u64,
+    pub combine_out: u64,
+    pub bucket_bytes: Vec<u64>,
+    pub bucket_raw_bytes: Vec<u64>,
+    pub runs: Vec<RunEntry>,
+}
+
+/// A committed reduce partition: its serialized output file.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct ReduceEntry {
+    pub file: String,
+    pub secs: f64,
+    pub groups: u64,
+    pub in_records: u64,
+    pub records: u64,
+}
+
+/// The manifest: which tasks of which job have committed, and where
+/// their bytes live.
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) struct Manifest {
+    pub job: String,
+    pub maps_total: usize,
+    pub reduces_total: usize,
+    pub maps: BTreeMap<usize, MapEntry>,
+    pub reduces: BTreeMap<usize, ReduceEntry>,
+}
+
+fn num_u(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn get_u(j: &Json, k: &str) -> Option<u64> {
+    j.get(k)?.as_f64().map(|f| f as u64)
+}
+
+fn get_u_arr(j: &Json, k: &str) -> Option<Vec<u64>> {
+    j.get(k)?
+        .as_arr()?
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as u64))
+        .collect()
+}
+
+impl RunEntry {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("partition", num_u(self.partition as u64)),
+            ("file", Json::str(self.file.as_str())),
+            ("records", num_u(self.records)),
+            ("raw_bytes", num_u(self.raw_bytes)),
+            ("file_bytes", num_u(self.file_bytes)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            partition: get_u(j, "partition")? as usize,
+            file: j.get("file")?.as_str()?.to_string(),
+            records: get_u(j, "records")?,
+            raw_bytes: get_u(j, "raw_bytes")?,
+            file_bytes: get_u(j, "file_bytes")?,
+        })
+    }
+}
+
+impl MapEntry {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("secs", Json::num(self.secs)),
+            ("records", num_u(self.records)),
+            ("bytes", num_u(self.bytes)),
+            ("spilled", num_u(self.spilled)),
+            ("spill_runs", num_u(self.spill_runs)),
+            ("spill_file_runs", num_u(self.spill_file_runs)),
+            ("spill_file_bytes", num_u(self.spill_file_bytes)),
+            ("combine_in", num_u(self.combine_in)),
+            ("combine_out", num_u(self.combine_out)),
+            (
+                "bucket_bytes",
+                Json::Arr(self.bucket_bytes.iter().map(|b| num_u(*b)).collect()),
+            ),
+            (
+                "bucket_raw_bytes",
+                Json::Arr(self.bucket_raw_bytes.iter().map(|b| num_u(*b)).collect()),
+            ),
+            ("runs", Json::Arr(self.runs.iter().map(RunEntry::to_json).collect())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            secs: j.get("secs")?.as_f64()?,
+            records: get_u(j, "records")?,
+            bytes: get_u(j, "bytes")?,
+            spilled: get_u(j, "spilled")?,
+            spill_runs: get_u(j, "spill_runs")?,
+            spill_file_runs: get_u(j, "spill_file_runs")?,
+            spill_file_bytes: get_u(j, "spill_file_bytes")?,
+            combine_in: get_u(j, "combine_in")?,
+            combine_out: get_u(j, "combine_out")?,
+            bucket_bytes: get_u_arr(j, "bucket_bytes")?,
+            bucket_raw_bytes: get_u_arr(j, "bucket_raw_bytes")?,
+            runs: j
+                .get("runs")?
+                .as_arr()?
+                .iter()
+                .map(RunEntry::from_json)
+                .collect::<Option<Vec<_>>>()?,
+        })
+    }
+}
+
+impl ReduceEntry {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("file", Json::str(self.file.as_str())),
+            ("secs", Json::num(self.secs)),
+            ("groups", num_u(self.groups)),
+            ("in_records", num_u(self.in_records)),
+            ("records", num_u(self.records)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            file: j.get("file")?.as_str()?.to_string(),
+            secs: j.get("secs")?.as_f64()?,
+            groups: get_u(j, "groups")?,
+            in_records: get_u(j, "in_records")?,
+            records: get_u(j, "records")?,
+        })
+    }
+}
+
+impl Manifest {
+    pub(crate) fn new(job: &str, maps_total: usize, reduces_total: usize) -> Self {
+        Self {
+            job: job.to_string(),
+            maps_total,
+            reduces_total,
+            maps: BTreeMap::new(),
+            reduces: BTreeMap::new(),
+        }
+    }
+
+    /// A manifest only resumes the job shape it was written for.
+    pub(crate) fn matches(&self, job: &str, maps_total: usize, reduces_total: usize) -> bool {
+        self.job == job && self.maps_total == maps_total && self.reduces_total == reduces_total
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job", Json::str(self.job.as_str())),
+            ("maps_total", num_u(self.maps_total as u64)),
+            ("reduces_total", num_u(self.reduces_total as u64)),
+            (
+                "maps",
+                Json::Obj(
+                    self.maps
+                        .iter()
+                        .map(|(i, e)| (i.to_string(), e.to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "reduces",
+                Json::Obj(
+                    self.reduces
+                        .iter()
+                        .map(|(i, e)| (i.to_string(), e.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        let tasks = |key: &str| -> Option<Vec<(usize, Json)>> {
+            match j.get(key)? {
+                Json::Obj(m) => m
+                    .iter()
+                    .map(|(k, v)| k.parse::<usize>().ok().map(|i| (i, v.clone())))
+                    .collect(),
+                _ => None,
+            }
+        };
+        Some(Self {
+            job: j.get("job")?.as_str()?.to_string(),
+            maps_total: get_u(j, "maps_total")? as usize,
+            reduces_total: get_u(j, "reduces_total")? as usize,
+            maps: tasks("maps")?
+                .iter()
+                .map(|(i, v)| MapEntry::from_json(v).map(|e| (*i, e)))
+                .collect::<Option<BTreeMap<_, _>>>()?,
+            reduces: tasks("reduces")?
+                .iter()
+                .map(|(i, v)| ReduceEntry::from_json(v).map(|e| (*i, e)))
+                .collect::<Option<BTreeMap<_, _>>>()?,
+        })
+    }
+
+    /// Load a manifest; `None` on a missing or unparseable file (resume
+    /// then degrades to a full re-run — never an error).
+    pub(crate) fn load(path: &Path) -> Option<Self> {
+        let text = std::fs::read_to_string(path).ok()?;
+        Self::from_json(&json::parse(&text).ok()?)
+    }
+
+    /// Rebuild a committed map task's output from its checkpoint files.
+    /// `None` (fall through to re-execution) if the task isn't in the
+    /// manifest, the partition count changed, or any file is missing or
+    /// inconsistent.
+    pub(crate) fn restore_map<KT, VT>(
+        &self,
+        task: usize,
+        r: usize,
+        codec: &Arc<dyn Codec<(KT, VT)>>,
+    ) -> Option<MapTaskOutput<KT, VT>> {
+        let e = self.maps.get(&task)?;
+        if e.bucket_bytes.len() != r || e.bucket_raw_bytes.len() != r {
+            return None;
+        }
+        let mut out = MapTaskOutput::empty(r);
+        for re in &e.runs {
+            if re.partition >= r {
+                return None;
+            }
+            let rf = RunFile::open(&re.file, Arc::clone(codec), re.raw_bytes).ok()?;
+            if rf.records() != re.records {
+                return None;
+            }
+            out.bucket_runs[re.partition].push(Run::Spilled(rf));
+        }
+        out.bucket_bytes = e.bucket_bytes.clone();
+        out.bucket_raw_bytes = e.bucket_raw_bytes.clone();
+        out.secs = e.secs;
+        out.records = e.records;
+        out.bytes = e.bytes;
+        out.spilled = e.spilled;
+        out.spill_runs = e.spill_runs;
+        out.spill_file_runs = e.spill_file_runs;
+        out.spill_file_bytes = e.spill_file_bytes;
+        out.combine_in = e.combine_in;
+        out.combine_out = e.combine_out;
+        Some(out)
+    }
+
+    /// Rebuild a committed reduce partition's output.  `None` falls
+    /// through to re-execution.
+    pub(crate) fn restore_reduce<KO, VO>(
+        &self,
+        task: usize,
+        codec: &Arc<dyn Codec<(KO, VO)>>,
+    ) -> Option<ReduceTaskOutput<KO, VO>> {
+        let e = self.reduces.get(&task)?;
+        let rf = RunFile::open(&e.file, Arc::clone(codec), 0).ok()?;
+        let output = rf.read_all().ok()?;
+        if output.len() as u64 != e.records {
+            return None;
+        }
+        Some(ReduceTaskOutput {
+            output,
+            secs: e.secs,
+            groups: e.groups,
+            in_records: e.in_records,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CheckpointWriter: the runtime commit hook
+// ---------------------------------------------------------------------------
+
+/// Per-job checkpoint state: the manifest under a mutex, saved atomically
+/// after every committed task.  Recording is best-effort — an I/O failure
+/// skips the entry (that task simply re-runs on resume) and never fails
+/// the job.
+pub(crate) struct CheckpointWriter {
+    dir: PathBuf,
+    path: PathBuf,
+    data: Mutex<Manifest>,
+}
+
+impl CheckpointWriter {
+    /// Open (or start) the manifest for this job shape.  Returns the
+    /// writer plus the prior manifest when one matches — the resume set.
+    /// A mismatched manifest (different job name or task counts) is
+    /// ignored and will be overwritten.
+    pub(crate) fn new(
+        spec: &CheckpointSpec,
+        job: &str,
+        maps_total: usize,
+        reduces_total: usize,
+    ) -> (Arc<Self>, Option<Manifest>) {
+        let _ = std::fs::create_dir_all(&spec.dir);
+        let path = spec.manifest_path();
+        let prior = Manifest::load(&path).filter(|m| m.matches(job, maps_total, reduces_total));
+        let data = prior
+            .clone()
+            .unwrap_or_else(|| Manifest::new(job, maps_total, reduces_total));
+        let writer = Arc::new(Self {
+            dir: spec.dir.clone(),
+            path,
+            data: Mutex::new(data),
+        });
+        (writer, prior)
+    }
+
+    fn save(&self, data: &Manifest) {
+        let tmp = self.path.with_extension("json.tmp");
+        if std::fs::write(&tmp, data.to_json().to_string()).is_ok() {
+            let _ = std::fs::rename(&tmp, &self.path);
+        }
+    }
+
+    /// Record a committed map task: persist its spilled runs in place,
+    /// serialize its in-memory runs into the checkpoint dir, and save
+    /// the manifest.
+    pub(crate) fn record_map<KT, VT>(
+        &self,
+        task: usize,
+        out: &MapTaskOutput<KT, VT>,
+        codec: &Arc<dyn Codec<(KT, VT)>>,
+    ) {
+        let mut runs = Vec::new();
+        for (b, bucket) in out.bucket_runs.iter().enumerate() {
+            for run in bucket {
+                let rf = match run {
+                    Run::Spilled(rf) => {
+                        rf.persist();
+                        rf.clone()
+                    }
+                    Run::Mem(v) => match RunFile::write(&self.dir, Arc::clone(codec), true, v) {
+                        Ok(rf) => {
+                            rf.persist();
+                            rf
+                        }
+                        Err(_) => return, // best-effort: the task re-runs on resume
+                    },
+                };
+                runs.push(RunEntry {
+                    partition: b,
+                    file: rf.path().display().to_string(),
+                    records: rf.records(),
+                    raw_bytes: rf.raw_bytes(),
+                    file_bytes: rf.file_bytes(),
+                });
+            }
+        }
+        let entry = MapEntry {
+            secs: out.secs,
+            records: out.records,
+            bytes: out.bytes,
+            spilled: out.spilled,
+            spill_runs: out.spill_runs,
+            spill_file_runs: out.spill_file_runs,
+            spill_file_bytes: out.spill_file_bytes,
+            combine_in: out.combine_in,
+            combine_out: out.combine_out,
+            bucket_bytes: out.bucket_bytes.clone(),
+            bucket_raw_bytes: out.bucket_raw_bytes.clone(),
+            runs,
+        };
+        let mut data = self.data.lock().unwrap();
+        data.maps.insert(task, entry);
+        self.save(&data);
+    }
+
+    /// Record a committed reduce partition's output.
+    pub(crate) fn record_reduce<KO, VO>(
+        &self,
+        task: usize,
+        out: &ReduceTaskOutput<KO, VO>,
+        codec: &Arc<dyn Codec<(KO, VO)>>,
+    ) {
+        let rf = match RunFile::write(&self.dir, Arc::clone(codec), true, &out.output) {
+            Ok(rf) => rf,
+            Err(_) => return,
+        };
+        rf.persist();
+        let entry = ReduceEntry {
+            file: rf.path().display().to_string(),
+            secs: out.secs,
+            groups: out.groups,
+            in_records: out.in_records,
+            records: out.output.len() as u64,
+        };
+        let mut data = self.data.lock().unwrap();
+        data.reduces.insert(task, entry);
+        self.save(&data);
+    }
+
+    /// The job finished clean: delete the manifest and every file it
+    /// references — nothing left to resume.
+    pub(crate) fn complete(&self) {
+        let data = self.data.lock().unwrap();
+        for e in data.maps.values() {
+            for r in &e.runs {
+                let _ = std::fs::remove_file(&r.file);
+            }
+        }
+        for e in data.reduces.values() {
+            let _ = std::fs::remove_file(&e.file);
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::sortspill::{StringPairCodec, TempSpillDir};
+
+    fn codec() -> Arc<dyn Codec<(String, String)>> {
+        Arc::new(StringPairCodec)
+    }
+
+    fn spec(dir: &TempSpillDir) -> CheckpointSpec {
+        CheckpointSpec::new::<(String, String)>(dir.path(), codec())
+            .with_output_codec::<(String, String)>(codec())
+    }
+
+    fn sample_map_output(r: usize) -> MapTaskOutput<String, String> {
+        let mut out = MapTaskOutput::empty(r);
+        out.bucket_runs[0] = vec![Run::Mem(vec![
+            ("a".to_string(), "1".to_string()),
+            ("b".to_string(), "2".to_string()),
+        ])];
+        out.bucket_runs[1] = vec![Run::Mem(vec![("c".to_string(), "3".to_string())])];
+        out.bucket_bytes = vec![4, 2];
+        out.bucket_raw_bytes = vec![4, 2];
+        out.records = 3;
+        out.secs = 0.5;
+        out.spilled = 3;
+        out.spill_runs = 2;
+        out
+    }
+
+    #[test]
+    fn manifest_json_round_trips() {
+        let mut m = Manifest::new("j", 4, 2);
+        m.maps.insert(
+            1,
+            MapEntry {
+                secs: 1.25,
+                records: 10,
+                bytes: 100,
+                spilled: 10,
+                spill_runs: 2,
+                spill_file_runs: 1,
+                spill_file_bytes: 64,
+                combine_in: 0,
+                combine_out: 0,
+                bucket_bytes: vec![60, 40],
+                bucket_raw_bytes: vec![80, 50],
+                runs: vec![RunEntry {
+                    partition: 0,
+                    file: "/tmp/x/run-1.seg".to_string(),
+                    records: 10,
+                    raw_bytes: 80,
+                    file_bytes: 64,
+                }],
+            },
+        );
+        m.reduces.insert(
+            0,
+            ReduceEntry {
+                file: "/tmp/x/out-0.seg".to_string(),
+                secs: 0.25,
+                groups: 3,
+                in_records: 10,
+                records: 5,
+            },
+        );
+        let back = Manifest::from_json(&json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert!(back.matches("j", 4, 2));
+        assert!(!back.matches("j", 4, 3), "shape mismatch must not resume");
+        assert!(!back.matches("other", 4, 2));
+    }
+
+    #[test]
+    fn record_and_restore_map_round_trip() {
+        let dir = TempSpillDir::new("ckpt-map").unwrap();
+        let sp = spec(&dir);
+        let (w, prior) = CheckpointWriter::new(&sp, "job", 2, 2);
+        assert!(prior.is_none(), "fresh dir has nothing to resume");
+        let out = sample_map_output(2);
+        w.record_map(0, &out, &codec());
+        // a second writer (the resumed job) sees the committed task
+        let (_w2, prior) = CheckpointWriter::new(&sp, "job", 2, 2);
+        let m = prior.expect("manifest must load after a commit");
+        assert_eq!(m.maps.len(), 1);
+        assert!(m.restore_map(1, 2, &codec()).is_none(), "uncommitted task");
+        let restored = m.restore_map(0, 2, &codec()).expect("restore task 0");
+        assert_eq!(restored.records, 3);
+        assert_eq!(restored.bucket_bytes, vec![4, 2]);
+        let p0: Vec<_> = restored.bucket_runs[0]
+            .iter()
+            .cloned()
+            .flat_map(Run::into_records)
+            .collect();
+        assert_eq!(
+            p0,
+            vec![
+                ("a".to_string(), "1".to_string()),
+                ("b".to_string(), "2".to_string())
+            ]
+        );
+        w.complete();
+        assert!(!sp.manifest_path().exists(), "complete removes the manifest");
+        let (_w3, prior) = CheckpointWriter::new(&sp, "job", 2, 2);
+        assert!(prior.is_none(), "nothing to resume after complete");
+    }
+
+    #[test]
+    fn record_and_restore_reduce_round_trip() {
+        let dir = TempSpillDir::new("ckpt-red").unwrap();
+        let sp = spec(&dir);
+        let (w, _) = CheckpointWriter::new(&sp, "job", 1, 2);
+        let out = ReduceTaskOutput {
+            output: vec![("k".to_string(), "v".to_string())],
+            secs: 0.125,
+            groups: 1,
+            in_records: 4,
+        };
+        w.record_reduce(1, &out, &codec());
+        let m = Manifest::load(&sp.manifest_path()).unwrap();
+        let restored = m
+            .restore_reduce::<String, String>(1, &codec())
+            .expect("restore reduce 1");
+        assert_eq!(restored.output, out.output);
+        assert_eq!(restored.groups, 1);
+        assert_eq!(restored.in_records, 4);
+        assert!(m.restore_reduce::<String, String>(0, &codec()).is_none());
+    }
+
+    #[test]
+    fn restore_falls_through_when_files_vanish() {
+        let dir = TempSpillDir::new("ckpt-gone").unwrap();
+        let sp = spec(&dir);
+        let (w, _) = CheckpointWriter::new(&sp, "job", 1, 1);
+        w.record_map(0, &sample_map_output(2), &codec());
+        let m = Manifest::load(&sp.manifest_path()).unwrap();
+        for e in m.maps.values() {
+            for r in &e.runs {
+                std::fs::remove_file(&r.file).unwrap();
+            }
+        }
+        assert!(
+            m.restore_map(0, 2, &codec()).is_none(),
+            "missing files must fall through to re-execution, not error"
+        );
+    }
+
+    #[test]
+    fn complete_removes_checkpoint_files() {
+        let dir = TempSpillDir::new("ckpt-done").unwrap();
+        let sp = spec(&dir);
+        let (w, _) = CheckpointWriter::new(&sp, "job", 1, 1);
+        w.record_map(0, &sample_map_output(2), &codec());
+        let m = Manifest::load(&sp.manifest_path()).unwrap();
+        let files: Vec<_> = m.maps.values().flat_map(|e| e.runs.iter()).collect();
+        assert!(!files.is_empty());
+        assert!(files.iter().all(|r| Path::new(&r.file).exists()));
+        w.complete();
+        assert!(files.iter().all(|r| !Path::new(&r.file).exists()));
+        assert!(!sp.manifest_path().exists());
+    }
+
+    #[test]
+    fn spec_resolves_matching_types_only() {
+        let sp = CheckpointSpec::new::<(String, String)>("/tmp/x", codec());
+        let _ok = sp.resolve::<(String, String)>();
+        assert!(sp.resolve_output::<(String, String)>().is_none());
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sp.resolve::<(u64, u64)>()
+        }));
+        assert!(r.is_err(), "mismatched codec type must panic");
+    }
+}

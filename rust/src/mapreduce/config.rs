@@ -1,5 +1,7 @@
 //! Job configuration.
 
+use super::checkpoint::CheckpointSpec;
+use super::fault::FaultPlan;
 use super::sortspill::SpillSpec;
 
 /// Configuration for one MapReduce job, mirroring the Hadoop knobs the
@@ -54,6 +56,34 @@ pub struct JobConfig {
     /// job); the serial [`run_job`](crate::mapreduce::run_job) driver is
     /// the barrier reference path and ignores it.
     pub push: bool,
+    /// Deterministic fault injection for this job's task attempts (see
+    /// [`FaultPlan`]).  `None` (default) injects nothing.  On the serial
+    /// driver an injected panic fails the job (the reference path stays
+    /// fail-fast); on a scheduler it exercises the retry / dead-letter
+    /// machinery.
+    pub faults: Option<FaultPlan>,
+    /// Per-task retry budget: a panicked attempt is caught, its staged
+    /// pushes retracted, and the task resubmitted up to this many times.
+    /// `None` (default) defers to the scheduler-wide
+    /// [`SchedulerConfig::max_task_retries`]
+    /// (crate::mapreduce::scheduler::SchedulerConfig::max_task_retries);
+    /// the serial driver ignores it (fail-fast reference path).
+    pub max_task_retries: Option<u32>,
+    /// Opt into dead-lettering: a task that exhausts its retries moves
+    /// its input-split descriptor into [`JobStats::dead_letters`]
+    /// (crate::mapreduce::engine::JobStats::dead_letters) and the job
+    /// completes with partial output and
+    /// [`JobOutcome::Degraded`](crate::mapreduce::engine::JobOutcome)
+    /// instead of panicking.  Off by default: fail-fast.
+    pub dead_letter: bool,
+    /// Checkpoint/resume manifest (see
+    /// [`CheckpointSpec`](crate::mapreduce::checkpoint::CheckpointSpec)).
+    /// When set, a scheduler-executed barrier job records every committed
+    /// map task's sealed run files and (codec permitting) committed
+    /// reduce partitions; re-submitting the same config restores those
+    /// tasks from the manifest instead of re-running them.  `None`
+    /// (default) checkpoints nothing.
+    pub checkpoint: Option<CheckpointSpec>,
 }
 
 impl Default for JobConfig {
@@ -70,6 +100,10 @@ impl Default for JobConfig {
             sort_buffer_records: None,
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
+            dead_letter: false,
+            checkpoint: None,
         }
     }
 }
@@ -113,6 +147,32 @@ impl JobConfig {
     /// [`JobConfig::push`]).
     pub fn with_push(mut self, push: bool) -> Self {
         self.push = push;
+        self
+    }
+
+    /// Set (or clear) the fault-injection plan (see [`JobConfig::faults`]).
+    pub fn with_faults(mut self, faults: Option<FaultPlan>) -> Self {
+        self.faults = faults.filter(|p| !p.is_empty());
+        self
+    }
+
+    /// Set (or clear) the per-job retry budget (see
+    /// [`JobConfig::max_task_retries`]).
+    pub fn with_retries(mut self, retries: Option<u32>) -> Self {
+        self.max_task_retries = retries;
+        self
+    }
+
+    /// Opt in/out of dead-lettering (see [`JobConfig::dead_letter`]).
+    pub fn with_dead_letter(mut self, on: bool) -> Self {
+        self.dead_letter = on;
+        self
+    }
+
+    /// Set (or clear) the checkpoint manifest (see
+    /// [`JobConfig::checkpoint`]).
+    pub fn with_checkpoint(mut self, ckpt: Option<CheckpointSpec>) -> Self {
+        self.checkpoint = ckpt;
         self
     }
 }
@@ -164,5 +224,22 @@ mod tests {
     #[should_panic]
     fn zero_tasks_rejected() {
         let _ = JobConfig::default().with_tasks(0, 1);
+    }
+
+    #[test]
+    fn fault_builders_round_trip() {
+        let c = JobConfig::default();
+        assert!(c.faults.is_none() && c.max_task_retries.is_none());
+        assert!(!c.dead_letter, "dead-letter defaults off (fail-fast)");
+        assert!(c.checkpoint.is_none());
+        let c = c
+            .with_faults(Some(FaultPlan::new().panic_map(0, 0)))
+            .with_retries(Some(2))
+            .with_dead_letter(true);
+        assert_eq!(c.faults.as_ref().unwrap().specs.len(), 1);
+        assert_eq!(c.max_task_retries, Some(2));
+        assert!(c.dead_letter);
+        let c = c.with_faults(Some(FaultPlan::new()));
+        assert!(c.faults.is_none(), "empty plans normalize to None");
     }
 }

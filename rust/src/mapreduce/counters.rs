@@ -67,6 +67,23 @@ pub mod names {
     /// An upper bound on the truly-late runs: a reducer busy folding may
     /// pick up pre-seal commits in the catch-up batch too.
     pub const LATE_RUNS: &str = "engine.late_runs";
+    /// Task attempts resubmitted after a panic, within the
+    /// [`max_task_retries`](crate::mapreduce::JobConfig::max_task_retries)
+    /// budget (only present on scheduler-executed jobs with retries on).
+    pub const TASK_RETRIES: &str = "engine.task_retries";
+    /// Tasks whose every attempt (primary + retries) panicked.  On the
+    /// default fail-fast path the job dies with the first such task; with
+    /// [`dead_letter`](crate::mapreduce::JobConfig::dead_letter) on the
+    /// job completes [`Degraded`](crate::mapreduce::engine::JobOutcome).
+    pub const TASKS_FAILED: &str = "engine.tasks_failed";
+    /// Tasks moved to [`JobStats::dead_letters`]
+    /// (crate::mapreduce::engine::JobStats::dead_letters) after
+    /// exhausting their retry budget (dead-letter mode only).
+    pub const DEAD_LETTERED: &str = "engine.dead_lettered";
+    /// Tasks restored from a checkpoint manifest instead of re-executed
+    /// (only present on resumed jobs — see
+    /// [`JobConfig::checkpoint`](crate::mapreduce::JobConfig::checkpoint)).
+    pub const TASKS_RESUMED: &str = "engine.tasks_resumed";
 }
 
 impl Counters {

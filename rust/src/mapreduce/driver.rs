@@ -17,8 +17,8 @@ use std::time::Instant;
 use super::config::JobConfig;
 use super::counters::{names, Counters};
 use super::engine::{
-    record_map_wave, record_reduce_wave, split_input, transpose_runs, JobResult, JobStats,
-    MapTaskOutput, ReduceTaskOutput,
+    record_map_wave, record_reduce_wave, split_input, transpose_runs, JobOutcome, JobResult,
+    JobStats, MapTaskOutput, ReduceTaskOutput,
 };
 use super::sortspill::Run;
 
@@ -107,9 +107,22 @@ where
     let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
     stats.total_secs = t_start.elapsed().as_secs_f64();
 
+    // ---- fault-tolerance accounting ---------------------------------------
+    // Both wave executors report retries/failures through the job counters
+    // (the serial path never retries, so these stay 0 there); the scheduler
+    // fills in the per-task dead-letter descriptors afterwards.
+    stats.task_retries = counters.get(names::TASK_RETRIES);
+    stats.tasks_failed = counters.get(names::TASKS_FAILED);
+    let outcome = if counters.get(names::DEAD_LETTERED) > 0 {
+        JobOutcome::Degraded
+    } else {
+        JobOutcome::Ok
+    };
+
     JobResult {
         outputs,
         counters: Arc::clone(counters),
         stats,
+        outcome,
     }
 }

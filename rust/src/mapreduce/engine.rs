@@ -105,6 +105,39 @@ pub struct JobStats {
     /// Always 0 on the barrier paths — a positive value is the direct
     /// evidence the push shuffle removed the map→reduce barrier.
     pub overlap_secs: f64,
+    /// Task attempts resubmitted after a panic (`TASK_RETRIES`).
+    pub task_retries: u64,
+    /// Tasks whose every attempt panicked (`TASKS_FAILED`).
+    pub tasks_failed: u64,
+    /// Tasks that exhausted their retry budget under
+    /// [`JobConfig::dead_letter`] — the job's dead-letter queue.  Always
+    /// empty on [`JobOutcome::Ok`] jobs.
+    pub dead_letters: Vec<DeadLetter>,
+}
+
+/// How a finished job finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum JobOutcome {
+    /// Every task committed.
+    #[default]
+    Ok,
+    /// One or more tasks were dead-lettered
+    /// ([`JobConfig::dead_letter`]): the output is partial — complete
+    /// except for the records of the [`JobStats::dead_letters`] entries.
+    Degraded,
+}
+
+/// The input-split descriptor of a task that exhausted its retries (see
+/// [`JobStats::dead_letters`]): enough to identify and re-drive the lost
+/// work from the caller's copy of the input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeadLetter {
+    pub phase: super::fault::TaskPhase,
+    /// Map-task index (= input-split index) or reduce partition.
+    pub task: usize,
+    /// Input records the lost task owned: the split length for a map
+    /// task, the committed input-run count for a reduce partition.
+    pub records: u64,
 }
 
 /// Everything a finished job returns.
@@ -114,6 +147,8 @@ pub struct JobResult<KO, VO> {
     pub outputs: Vec<Vec<(KO, VO)>>,
     pub counters: Arc<Counters>,
     pub stats: JobStats,
+    /// [`JobOutcome::Ok`] unless dead-lettering degraded the job.
+    pub outcome: JobOutcome,
 }
 
 impl<KO, VO> JobResult<KO, VO> {
@@ -180,6 +215,28 @@ pub(crate) struct MapTaskOutput<KT, VT> {
     pub spill_file_bytes: u64,
     pub combine_in: u64,
     pub combine_out: u64,
+}
+
+impl<KT, VT> MapTaskOutput<KT, VT> {
+    /// The output of a task that produced nothing — the placeholder a
+    /// dead-lettered map task leaves so the shuffle transpose and stats
+    /// vectors stay index-aligned.
+    pub(crate) fn empty(r: usize) -> Self {
+        Self {
+            bucket_runs: (0..r).map(|_| Vec::new()).collect(),
+            bucket_bytes: vec![0; r],
+            bucket_raw_bytes: vec![0; r],
+            secs: 0.0,
+            records: 0,
+            bytes: 0,
+            spilled: 0,
+            spill_runs: 0,
+            spill_file_runs: 0,
+            spill_file_bytes: 0,
+            combine_in: 0,
+            combine_out: 0,
+        }
+    }
 }
 
 /// Routes each sealed map-side run through combine → accounting → spill
@@ -363,6 +420,18 @@ pub(crate) struct ReduceTaskOutput<KO, VO> {
     pub secs: f64,
     pub groups: u64,
     pub in_records: u64,
+}
+
+impl<KO, VO> ReduceTaskOutput<KO, VO> {
+    /// The placeholder output of a dead-lettered reduce partition.
+    pub(crate) fn empty() -> Self {
+        Self {
+            output: Vec::new(),
+            secs: 0.0,
+            groups: 0,
+            in_records: 0,
+        }
+    }
 }
 
 /// Execute one reduce task: lazily k-way-merge `runs` — in-memory and
@@ -606,6 +675,10 @@ where
     // built for different record types — a wiring bug, not a data error)
     let spill: Option<ResolvedSpill<(KT, VT)>> = config.spill.as_ref().map(|s| s.resolve());
     let has_combiner = combine_fn.is_some();
+    // The serial driver is the fail-fast reference path: an injected
+    // panic fails the job (via `run_owned`'s panic accounting) — retry,
+    // dead-lettering, and checkpointing live on the scheduler.
+    let injector = super::fault::FaultInjector::from_plan(config.faults.clone());
 
     // Each map task: configure → map* → close; emitted records drain into
     // per-partition RunSorters (Hadoop's map-side "sort & spill": every
@@ -615,8 +688,10 @@ where
         let mapper = Arc::clone(&mapper);
         let partitioner = Arc::clone(&partitioner);
         let counters = Arc::clone(&counters);
+        let injector = Arc::clone(&injector);
         move |splits: Vec<Vec<(KI, VI)>>| {
-            run_owned(workers, splits, move |_i, split: Vec<(KI, VI)>| {
+            run_owned(workers, splits, move |i, split: Vec<(KI, VI)>| {
+                injector.fire(super::fault::TaskPhase::Map, i);
                 exec_map_task(
                     split,
                     r,
@@ -639,11 +714,13 @@ where
         let reducer = Arc::clone(&reducer);
         let grouping = Arc::clone(&grouping);
         let counters = Arc::clone(&counters);
+        let injector = Arc::clone(&injector);
         move |per_reducer_runs: Vec<Vec<Run<(KT, VT)>>>| {
             run_owned(
                 workers,
                 per_reducer_runs,
-                move |_j, runs: Vec<Run<(KT, VT)>>| {
+                move |j, runs: Vec<Run<(KT, VT)>>| {
+                    injector.fire(super::fault::TaskPhase::Reduce, j);
                     exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &counters)
                 },
             )

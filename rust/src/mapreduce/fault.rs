@@ -1,0 +1,260 @@
+//! Deterministic fault injection for task attempts.
+//!
+//! The test and bench harnesses drive retry, dead-lettering, and
+//! checkpoint/resume through a [`FaultPlan`]: a list of `(phase, task,
+//! attempt)` coordinates at which an attempt panics or stalls.  The plan
+//! is data, not randomness — a seeded constructor ([`FaultPlan::seeded`])
+//! derives a reproducible plan, and the runtime [`FaultInjector`] is a
+//! pure function of the plan plus an attempt counter, so the same plan
+//! always kills the same attempt no matter how the scheduler interleaves
+//! the wave.
+//!
+//! Attempt numbering: every execution of a task body — the primary
+//! attempt, each bounded retry, and each speculative clone — consumes the
+//! next attempt number for its `(phase, task)` coordinate, starting at 0.
+//! A plan that panics attempt 0 therefore exercises the retry path (the
+//! retry runs as attempt 1 and succeeds); a plan that panics attempts
+//! `0..=max_task_retries` exhausts the budget and exercises the
+//! dead-letter path.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Which side of the job an injected fault hits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskPhase {
+    Map,
+    Reduce,
+}
+
+impl std::fmt::Display for TaskPhase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TaskPhase::Map => write!(f, "map"),
+            TaskPhase::Reduce => write!(f, "reduce"),
+        }
+    }
+}
+
+/// What the injected fault does to the attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Panic at the start of the attempt (a crashed worker).  The panic
+    /// message starts with `"injected fault:"` so fail-fast test
+    /// expectations can match it.
+    Panic,
+    /// Sleep before doing the work (a straggling worker) — the attempt
+    /// still completes, so the stall is the speculation path's problem,
+    /// not the retry path's.
+    Stall(Duration),
+}
+
+/// One fault coordinate: phase + task index + attempt number.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    pub phase: TaskPhase,
+    pub task: usize,
+    pub attempt: u32,
+    pub kind: FaultKind,
+}
+
+/// A deterministic set of faults to inject into one job.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Panic attempt `attempt` of map task `task`.
+    pub fn panic_map(mut self, task: usize, attempt: u32) -> Self {
+        self.specs.push(FaultSpec {
+            phase: TaskPhase::Map,
+            task,
+            attempt,
+            kind: FaultKind::Panic,
+        });
+        self
+    }
+
+    /// Panic attempt `attempt` of reduce task `task`.
+    pub fn panic_reduce(mut self, task: usize, attempt: u32) -> Self {
+        self.specs.push(FaultSpec {
+            phase: TaskPhase::Reduce,
+            task,
+            attempt,
+            kind: FaultKind::Panic,
+        });
+        self
+    }
+
+    /// Stall attempt `attempt` of map task `task` for `dur`.
+    pub fn stall_map(mut self, task: usize, attempt: u32, dur: Duration) -> Self {
+        self.specs.push(FaultSpec {
+            phase: TaskPhase::Map,
+            task,
+            attempt,
+            kind: FaultKind::Stall(dur),
+        });
+        self
+    }
+
+    /// Stall attempt `attempt` of reduce task `task` for `dur`.
+    pub fn stall_reduce(mut self, task: usize, attempt: u32, dur: Duration) -> Self {
+        self.specs.push(FaultSpec {
+            phase: TaskPhase::Reduce,
+            task,
+            attempt,
+            kind: FaultKind::Stall(dur),
+        });
+        self
+    }
+
+    /// Derive a reproducible single-panic plan from a seed: kills attempt
+    /// 0 of one task drawn uniformly from the job's `m` map and `r`
+    /// reduce tasks.  The harness loops seeds to cover the space.
+    pub fn seeded(seed: u64, num_map_tasks: usize, num_reduce_tasks: usize) -> Self {
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0xfa17_fa17_fa17_fa17);
+        let total = num_map_tasks.max(1) + num_reduce_tasks.max(1);
+        let pick = rng.range(0, total);
+        let (phase, task) = if pick < num_map_tasks.max(1) {
+            (TaskPhase::Map, pick)
+        } else {
+            (TaskPhase::Reduce, pick - num_map_tasks.max(1))
+        };
+        Self::new().specs_with(FaultSpec {
+            phase,
+            task,
+            attempt: 0,
+            kind: FaultKind::Panic,
+        })
+    }
+
+    fn specs_with(mut self, spec: FaultSpec) -> Self {
+        self.specs.push(spec);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+/// Per-job runtime state: the plan plus an attempt counter per
+/// `(phase, task)` coordinate.  Shared by every attempt of the job.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    attempts: Mutex<HashMap<(TaskPhase, usize), u32>>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            plan,
+            attempts: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// An injector from an optional plan — `None` (and an empty plan)
+    /// never fires, so the call sites stay branch-free.
+    pub fn from_plan(plan: Option<FaultPlan>) -> std::sync::Arc<Self> {
+        std::sync::Arc::new(Self::new(plan.unwrap_or_default()))
+    }
+
+    /// Consume the next attempt number for `(phase, task)` and trigger
+    /// any matching fault: [`FaultKind::Panic`] panics the calling
+    /// attempt, [`FaultKind::Stall`] sleeps through it.  Call at the top
+    /// of every task-attempt body.
+    pub fn fire(&self, phase: TaskPhase, task: usize) {
+        if self.plan.specs.is_empty() {
+            return;
+        }
+        let attempt = {
+            let mut at = self.attempts.lock().unwrap();
+            let slot = at.entry((phase, task)).or_insert(0);
+            let a = *slot;
+            *slot += 1;
+            a
+        };
+        for spec in &self.plan.specs {
+            if spec.phase == phase && spec.task == task && spec.attempt == attempt {
+                match spec.kind {
+                    FaultKind::Panic => {
+                        panic!("injected fault: {phase} task {task} attempt {attempt}")
+                    }
+                    FaultKind::Stall(dur) => std::thread::sleep(dur),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let inj = FaultInjector::new(FaultPlan::new());
+        for _ in 0..10 {
+            inj.fire(TaskPhase::Map, 0);
+            inj.fire(TaskPhase::Reduce, 3);
+        }
+    }
+
+    #[test]
+    fn panic_fires_on_the_chosen_attempt_only() {
+        let inj = FaultInjector::new(FaultPlan::new().panic_map(2, 1));
+        inj.fire(TaskPhase::Map, 2); // attempt 0: clean
+        inj.fire(TaskPhase::Reduce, 2); // other phase: clean
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            inj.fire(TaskPhase::Map, 2) // attempt 1: boom
+        }));
+        assert!(err.is_err());
+        inj.fire(TaskPhase::Map, 2); // attempt 2: clean again
+    }
+
+    #[test]
+    fn attempt_counters_are_per_task() {
+        let inj = FaultInjector::new(FaultPlan::new().panic_map(1, 0));
+        inj.fire(TaskPhase::Map, 0);
+        inj.fire(TaskPhase::Map, 2);
+        assert!(std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            inj.fire(TaskPhase::Map, 1)
+        }))
+        .is_err());
+    }
+
+    #[test]
+    fn stall_delays_but_completes() {
+        let inj = FaultInjector::new(FaultPlan::new().stall_map(
+            0,
+            0,
+            Duration::from_millis(5),
+        ));
+        let t0 = std::time::Instant::now();
+        inj.fire(TaskPhase::Map, 0);
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn seeded_plan_is_reproducible_and_in_range() {
+        for seed in 0..50u64 {
+            let a = FaultPlan::seeded(seed, 4, 3);
+            let b = FaultPlan::seeded(seed, 4, 3);
+            assert_eq!(a, b);
+            assert_eq!(a.specs.len(), 1);
+            let s = a.specs[0];
+            assert_eq!(s.attempt, 0);
+            match s.phase {
+                TaskPhase::Map => assert!(s.task < 4),
+                TaskPhase::Reduce => assert!(s.task < 3),
+            }
+        }
+    }
+}

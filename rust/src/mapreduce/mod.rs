@@ -136,14 +136,58 @@
 //! [`sim::reduce_secs_from_pairs`]/[`sim::fit_secs_per_pair`] give the
 //! simulator the matching per-pair reduce cost model.
 //!
-//! Still deliberately unmodeled: task failure/retry and rack topology.
+//! ## Fault tolerance: retry, dead-letter, checkpoint/resume
+//!
+//! MapReduce's defining operational property — "the framework re-executes
+//! failed tasks" — is modeled end to end:
+//!
+//! * **Fault injection** ([`fault::FaultPlan`] via [`JobConfig::faults`])
+//!   makes a chosen task attempt panic or stall, deterministically and
+//!   seedably, so every recovery path below is testable.  The serial
+//!   [`run_job`] stays the **fail-fast reference path**: an injected
+//!   panic fails the job there, and its output is the byte-identity
+//!   baseline the recovery paths are checked against.
+//! * **Bounded retry** ([`JobConfig::max_task_retries`] /
+//!   [`scheduler::SchedulerConfig::max_task_retries`]): on a scheduler, a
+//!   panicked attempt is caught, its staged pushes and spill files
+//!   retracted through the same per-attempt machinery that discards
+//!   losing speculative clones, and the task resubmitted from its
+//!   retained input — up to the budget.  `TASK_RETRIES` counts
+//!   resubmissions.  Retry handles *crashed* attempts; *stalled* attempts
+//!   are the speculation path's problem ([`scheduler::SpecPolicy`]), and
+//!   the two compose: a task can be cloned for slowness and retried for a
+//!   panic in the same wave, first-completion-wins arbitrating as usual.
+//! * **Dead-lettering** ([`JobConfig::dead_letter`], off by default): a
+//!   task that exhausts its retry budget moves its input-split descriptor
+//!   into [`JobStats::dead_letters`](engine::JobStats::dead_letters)
+//!   (`DEAD_LETTERED` counts them) and the job **completes** with partial
+//!   output and [`JobOutcome::Degraded`](engine::JobOutcome) instead of
+//!   panicking.  Fail-fast remains the default: without the opt-in, an
+//!   exhausted task fails the job like the seed engine always did.
+//! * **Checkpoint/resume** ([`checkpoint::CheckpointSpec`] via
+//!   [`JobConfig::checkpoint`]): scheduler-executed barrier jobs write a
+//!   JSON manifest next to the spill dir as tasks commit — sealed map-run
+//!   files per map task, committed reduce partitions (codec permitting).
+//!   Re-submitting the job restores manifest-covered tasks
+//!   (`TASKS_RESUMED`) and re-runs only the rest; a clean finish deletes
+//!   the manifest.  Commit hooks ride the same first-completion-wins
+//!   arbiter as speculation, so a losing clone can never checkpoint.
+//!
+//! The simulator charges the matching cost:
+//! [`sim::ClusterSpec::task_failure_rate`] deterministically re-executes
+//! a fraction of simulated tasks, lengthening the makespan the way real
+//! retries do.
+//!
+//! Still deliberately unmodeled: rack topology.
 
+pub mod checkpoint;
 pub mod combiner;
 pub mod config;
 pub mod counters;
 pub mod dfs;
 mod driver;
 pub mod engine;
+pub mod fault;
 pub mod push;
 pub mod scheduler;
 pub mod seqfile;
@@ -153,10 +197,12 @@ pub mod sortspill;
 pub mod splits;
 pub mod types;
 
+pub use checkpoint::CheckpointSpec;
 pub use combiner::{Combiner, FnCombiner};
 pub use config::JobConfig;
 pub use counters::Counters;
-pub use engine::{run_job, run_job_with_combiner, JobResult, JobStats};
+pub use engine::{run_job, run_job_with_combiner, DeadLetter, JobOutcome, JobResult, JobStats};
+pub use fault::{FaultKind, FaultPlan, FaultSpec, TaskPhase};
 pub use push::{PushAttempt, ShuffleService};
 pub use scheduler::{Exec, JobHandle, JobScheduler, PushMode, SchedulerConfig, SpecPolicy};
 pub use shuffle::MergeIter;

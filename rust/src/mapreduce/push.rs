@@ -94,6 +94,12 @@ pub struct ShuffleService<T> {
     /// Stage pushes per attempt and commit on win (speculative mode); or
     /// commit every push immediately (single-attempt mode).
     staged_mode: bool,
+    /// Hand out *clones* of committed runs instead of taking them, so a
+    /// panicked reduce attempt can be retried against the same mailbox
+    /// (the scheduler's fault-tolerance path).  Cloning a spilled run is
+    /// cheap — handles share the file — and a committed reduce task
+    /// releases its mailbox explicitly ([`Self::release_partition`]).
+    retain_runs: bool,
     counters: Arc<Counters>,
     num_partitions: usize,
 }
@@ -123,9 +129,18 @@ impl<T> ShuffleService<T> {
             }),
             cv: Condvar::new(),
             staged_mode,
+            retain_runs: false,
             counters,
             num_partitions,
         }
+    }
+
+    /// Keep committed runs in the mailboxes after they are handed to a
+    /// reduce task, so a retried attempt can re-read them.  Must be set
+    /// whenever reduce-side retry or fault injection is active.
+    pub fn with_retained_runs(mut self, on: bool) -> Self {
+        self.retain_runs = on;
+        self
     }
 
     pub fn num_partitions(&self) -> usize {
@@ -226,6 +241,25 @@ impl<T> ShuffleService<T> {
         true
     }
 
+    /// Dead-letter `task`: the scheduler exhausted its retry budget and
+    /// is completing the job without this task's output.  Any staged
+    /// attempt is retracted (spill files delete with the run handles),
+    /// the task is marked decided with **zero committed runs**, and the
+    /// committed-prefix frontier advances past it — so reducers stop
+    /// waiting on a task that will never push.
+    pub(crate) fn fail_task(&self, task: usize) {
+        let mut st = self.state.lock().unwrap();
+        if st.task_done[task] {
+            return;
+        }
+        st.staged.retain(|_, s| s.task != task);
+        st.task_done[task] = true;
+        while st.done_prefix < st.task_done.len() && st.task_done[st.done_prefix] {
+            st.done_prefix += 1;
+        }
+        self.cv.notify_all();
+    }
+
     /// Mark the map wave complete: every run is now committed, every
     /// mailbox's remainder becomes the reducers' final catch-up batch.
     pub fn seal(&self) {
@@ -280,30 +314,64 @@ impl<T> ShuffleService<T> {
     /// — every earlier run position is final, so they may be pre-merged.
     /// Once the flag comes back true the batch is the final remainder
     /// (the catch-up work): nothing further will arrive.
-    pub fn wait_more(&self, j: usize, taken: usize) -> (Vec<Run<T>>, bool) {
+    ///
+    /// In [retained-runs](Self::with_retained_runs) mode each run is
+    /// *cloned* out instead of moved, so a retried reduce attempt can
+    /// restart from `taken == 0` against the intact mailbox.
+    pub fn wait_more(&self, j: usize, taken: usize) -> (Vec<Run<T>>, bool)
+    where
+        T: Clone,
+    {
         let mut st = self.state.lock().unwrap();
         loop {
             let limit = run_key(st.done_prefix + 1, 0);
             let eligible = st.committed[j].partition_point(|(k, _)| *k < limit);
             if eligible > taken {
-                let runs = st.committed[j][taken..eligible]
-                    .iter_mut()
-                    .map(|(_, r)| r.take().expect("run taken twice"))
-                    .collect();
+                let runs = Self::hand_out(&mut st.committed[j][taken..eligible], self.retain_runs);
                 // post-seal every run is eligible, so a sealed flag here
                 // means this batch is already the final one
                 return (runs, st.sealed);
             }
             if st.sealed {
                 let total = st.committed[j].len();
-                let runs = st.committed[j][taken..total]
-                    .iter_mut()
-                    .map(|(_, r)| r.take().expect("run taken twice"))
-                    .collect();
+                let runs = Self::hand_out(&mut st.committed[j][taken..total], self.retain_runs);
                 return (runs, true);
             }
             st = self.cv.wait(st).unwrap();
         }
+    }
+
+    fn hand_out(slots: &mut [(u64, Option<Run<T>>)], retain: bool) -> Vec<Run<T>>
+    where
+        T: Clone,
+    {
+        slots
+            .iter_mut()
+            .map(|(_, r)| {
+                if retain {
+                    r.as_ref().expect("run taken twice").clone()
+                } else {
+                    r.take().expect("run taken twice")
+                }
+            })
+            .collect()
+    }
+
+    /// Drop partition `j`'s retained runs after its reduce task
+    /// committed: clones handed to the winner keep the data alive, and
+    /// the mailbox's spill-file handles must release so run files are
+    /// deleted with the job.  No-op in the default (moving) mode, where
+    /// the hand-out already emptied the slots.
+    pub(crate) fn release_partition(&self, j: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.committed[j].clear();
+    }
+
+    /// How many runs have been committed into partition `j` so far — the
+    /// dead-letter record for a failed reduce task (its lost input, in
+    /// runs, at the moment it gave up).
+    pub(crate) fn committed_len(&self, j: usize) -> usize {
+        self.state.lock().unwrap().committed[j].len()
     }
 }
 
@@ -358,7 +426,8 @@ pub(crate) fn collect_reduce_sources<K, V>(
     j: usize,
 ) -> (Vec<Run<(K, V)>>, u64, f64)
 where
-    K: Ord,
+    K: Ord + Clone,
+    V: Clone,
 {
     let mut taken = 0usize;
     // pre-merged prefix segments, in run-position order
@@ -510,6 +579,55 @@ mod tests {
         let (ready, sealed) = svc.wait_ready(&[false, true, false]);
         assert_eq!(ready, vec![0, 2]);
         assert!(sealed);
+    }
+
+    #[test]
+    fn retained_runs_can_be_read_twice() {
+        let counters = Arc::new(Counters::new());
+        let svc = Arc::new(
+            ShuffleService::new(1, 1, true, Arc::clone(&counters)).with_retained_runs(true),
+        );
+        let a0 = ShuffleService::begin_attempt(&svc, 0);
+        a0.push(0, mem(&[(1, 0), (2, 0)]));
+        assert!(a0.finish());
+        svc.seal();
+        // first read (a reduce attempt that will "panic")
+        let (batch, sealed) = svc.wait_more(0, 0);
+        assert!(sealed);
+        assert_eq!(batch.len(), 1);
+        // second read from scratch (the retry) sees the same runs
+        let (again, sealed) = svc.wait_more(0, 0);
+        assert!(sealed);
+        assert_eq!(again.len(), 1);
+        assert_eq!(
+            again.into_iter().flat_map(Run::into_records).collect::<Vec<_>>(),
+            vec![(1, 0), (2, 0)]
+        );
+        svc.release_partition(0);
+        let (empty, sealed) = svc.wait_more(0, 0);
+        assert!(sealed);
+        assert!(empty.is_empty(), "released mailbox must be empty");
+    }
+
+    #[test]
+    fn fail_task_advances_prefix_and_allows_seal() {
+        let (svc, _) = service(2, 1, true);
+        // task 0 dead-letters: its staged runs retract, prefix advances
+        let a0 = ShuffleService::begin_attempt(&svc, 0);
+        a0.push(0, mem(&[(9, 9)]));
+        svc.fail_task(0);
+        assert!(!a0.finish(), "a dead-lettered task's attempt cannot win");
+        let a1 = ShuffleService::begin_attempt(&svc, 1);
+        a1.push(0, mem(&[(1, 0)]));
+        assert!(a1.finish());
+        svc.seal(); // all tasks decided — must not panic
+        let (batch, sealed) = svc.wait_more(0, 0);
+        assert!(sealed);
+        assert_eq!(batch.len(), 1, "only task 1's run is committed");
+        assert_eq!(
+            batch.into_iter().flat_map(Run::into_records).collect::<Vec<_>>(),
+            vec![(1, 0)]
+        );
     }
 
     #[test]

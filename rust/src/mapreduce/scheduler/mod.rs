@@ -70,14 +70,17 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use super::checkpoint::CheckpointWriter;
 use super::combiner::{combine_sorted_bucket, Combiner};
 use super::config::JobConfig;
 use super::counters::{names, Counters};
 use super::driver;
 use super::engine::{
     exec_map_task, exec_reduce_task, record_reduce_wave, run_job, run_job_with_combiner,
-    split_input, CombineFn, GroupFn, JobResult, JobStats, MapTaskOutput, ReduceTaskOutput,
+    split_input, CombineFn, DeadLetter, GroupFn, JobOutcome, JobResult, JobStats, MapTaskOutput,
+    ReduceTaskOutput,
 };
+use super::fault::{FaultInjector, FaultPlan, TaskPhase};
 use super::push::{self, ShuffleService};
 use super::sim::ClusterSpec;
 use super::sortspill::{ResolvedSpill, Run};
@@ -116,6 +119,13 @@ pub struct SchedulerConfig {
     /// (a single job can also opt in via
     /// [`JobConfig::push`](crate::mapreduce::JobConfig::push)).
     pub push: PushMode,
+    /// Scheduler-wide retry budget for panicked task attempts.  A job can
+    /// override it with [`JobConfig::max_task_retries`]; `0` (the
+    /// default) keeps the seed engine's fail-fast behavior.
+    pub max_task_retries: u32,
+    /// Scheduler-wide fault-injection plan, applied to every job that
+    /// does not carry its own [`JobConfig::faults`].
+    pub faults: Option<FaultPlan>,
 }
 
 impl SchedulerConfig {
@@ -128,11 +138,27 @@ impl SchedulerConfig {
             speculative: false,
             policy: SpecPolicy::default(),
             push: PushMode::Barrier,
+            max_task_retries: 0,
+            faults: None,
         }
     }
 
     pub fn with_speculation(mut self, on: bool) -> Self {
         self.speculative = on;
+        self
+    }
+
+    /// Retry budget for panicked task attempts on every job (unless the
+    /// job overrides it).
+    pub fn with_retries(mut self, n: u32) -> Self {
+        self.max_task_retries = n;
+        self
+    }
+
+    /// Inject faults into every job that doesn't carry its own plan.
+    /// An empty plan is normalized to `None`.
+    pub fn with_faults(mut self, plan: Option<FaultPlan>) -> Self {
+        self.faults = plan.filter(|p| !p.is_empty());
         self
     }
 
@@ -156,6 +182,8 @@ impl SchedulerConfig {
             speculative: spec.speculative,
             policy: SpecPolicy::default(),
             push: PushMode::Barrier,
+            max_task_retries: 0,
+            faults: None,
         }
     }
 }
@@ -404,47 +432,120 @@ impl JobScheduler {
         let spill: Option<ResolvedSpill<(KT, VT)>> = config.spill.as_ref().map(|s| s.resolve());
         let has_combiner = combine_fn.is_some();
 
+        // ---- fault-tolerance wiring ---------------------------------------
+        // Job-level knobs win over scheduler-wide defaults.
+        let retries = config
+            .max_task_retries
+            .unwrap_or(self.inner.cfg.max_task_retries);
+        let dead_letter = config.dead_letter;
+        let injector = FaultInjector::from_plan(
+            config
+                .faults
+                .clone()
+                .or_else(|| self.inner.cfg.faults.clone()),
+        );
+        let dead_letters: Arc<Mutex<Vec<DeadLetter>>> = Arc::new(Mutex::new(Vec::new()));
+        // Checkpoint state shared by both waves and the post-job cleanup:
+        // (writer, prior manifest if resumable, run codec, output codec).
+        let ckpt = config.checkpoint.as_ref().map(|c| {
+            let codec = c.resolve::<(KT, VT)>();
+            let out_codec = c.resolve_output::<(KO, VO)>();
+            let (writer, prior) =
+                CheckpointWriter::new(c, &config.name, config.num_map_tasks, r);
+            (writer, prior.map(Arc::new), codec, out_codec)
+        });
+
         // ---- the two barrier waves, on the shared slots -------------------
         // Each attempt runs against private counters; only the winning
         // attempt's are merged, so a losing speculative clone never
         // double-counts user-code increments.  Without speculation each
         // attempt is the sole owner of its split and consumes it in
-        // place; a speculative wave retains a reference per task (so a
-        // clone can re-run it), which forces the deep-clone fallback.
+        // place; a speculative or retryable wave retains a reference per
+        // task (so a clone or retry can re-run it), which forces the
+        // deep-clone fallback.
         let map_wave = {
             let sched = self.clone();
             let mapper = Arc::clone(&mapper);
             let partitioner = Arc::clone(&partitioner);
             let counters = Arc::clone(&counters);
             let spec = spec.clone();
+            let injector = Arc::clone(&injector);
+            let ckpt = ckpt.clone();
+            let dead_letters = Arc::clone(&dead_letters);
             move |splits: Vec<Vec<(KI, VI)>>| {
-                let map_attempt = move |_i: usize, split: Arc<Vec<(KI, VI)>>| {
-                    let local = Counters::new();
-                    let split = Arc::try_unwrap(split).unwrap_or_else(|shared| (*shared).clone());
-                    let out = exec_map_task(
-                        split,
-                        r,
-                        sort_budget,
-                        spill.as_ref(),
-                        mapper.as_ref(),
-                        partitioner.as_ref(),
-                        combine_fn.as_ref(),
-                        &local,
-                        None,
-                    );
-                    (out, local)
+                let split_lens: Vec<u64> = splits.iter().map(|s| s.len() as u64).collect();
+                let map_attempt = {
+                    let injector = Arc::clone(&injector);
+                    let ckpt = ckpt.clone();
+                    move |i: usize, split: Arc<Vec<(KI, VI)>>| {
+                        let local = Counters::new();
+                        // A task covered by a prior run's manifest restores
+                        // its sealed runs instead of executing (and never
+                        // fires the injector: it does not run).
+                        if let Some((_, Some(prior), codec, _)) = &ckpt {
+                            if let Some(out) = prior.restore_map(i, r, codec) {
+                                local.inc(names::TASKS_RESUMED);
+                                return (out, local);
+                            }
+                        }
+                        injector.fire(TaskPhase::Map, i);
+                        let split =
+                            Arc::try_unwrap(split).unwrap_or_else(|shared| (*shared).clone());
+                        let out = exec_map_task(
+                            split,
+                            r,
+                            sort_budget,
+                            spill.as_ref(),
+                            mapper.as_ref(),
+                            partitioner.as_ref(),
+                            combine_fn.as_ref(),
+                            &local,
+                            None,
+                        );
+                        (out, local)
+                    }
                 };
-                let map_results: Vec<(MapTaskOutput<KT, VT>, Counters)> = speculate::run_tasks(
+                // Checkpoint commits ride the decided-swap arbiter: on_win
+                // fires exactly once per task, never for a losing clone.
+                let on_win = ckpt.as_ref().map(|(writer, _, codec, _)| {
+                    let writer = Arc::clone(writer);
+                    let codec = Arc::clone(codec);
+                    Arc::new(move |i: usize, t: &(MapTaskOutput<KT, VT>, Counters)| {
+                        writer.record_map(i, &t.0, &codec);
+                    })
+                        as Arc<dyn Fn(usize, &(MapTaskOutput<KT, VT>, Counters)) + Send + Sync>
+                });
+                let wave = speculate::run_tasks_ft(
                     &sched.inner.map_pool,
                     splits,
                     Arc::new(map_attempt),
-                    spec,
+                    speculate::WaveOptions {
+                        spec,
+                        max_retries: retries,
+                        allow_failure: dead_letter,
+                        on_win,
+                    },
                     &counters,
                 );
-                let mut map_outputs = Vec::with_capacity(map_results.len());
-                for (out, local) in map_results {
-                    counters.merge(&local);
-                    map_outputs.push(out);
+                let mut map_outputs = Vec::with_capacity(wave.results.len());
+                for (i, slot) in wave.results.into_iter().enumerate() {
+                    match slot {
+                        Some((out, local)) => {
+                            counters.merge(&local);
+                            map_outputs.push(out);
+                        }
+                        None => {
+                            // Exhausted retries: dead-letter the split and
+                            // keep the wave going with an empty stand-in.
+                            counters.inc(names::DEAD_LETTERED);
+                            dead_letters.lock().unwrap().push(DeadLetter {
+                                phase: TaskPhase::Map,
+                                task: i,
+                                records: split_lens[i],
+                            });
+                            map_outputs.push(MapTaskOutput::empty(r));
+                        }
+                    }
                 }
                 map_outputs
             }
@@ -454,29 +555,95 @@ impl JobScheduler {
             let reducer = Arc::clone(&reducer);
             let grouping = Arc::clone(&grouping);
             let counters = Arc::clone(&counters);
+            let injector = Arc::clone(&injector);
+            let ckpt = ckpt.clone();
+            let dead_letters = Arc::clone(&dead_letters);
             move |per_reducer_runs: Vec<Vec<Run<(KT, VT)>>>| {
-                let reduce_attempt = move |_j: usize, runs: Arc<Vec<Run<(KT, VT)>>>| {
-                    let local = Counters::new();
-                    let runs = Arc::try_unwrap(runs).unwrap_or_else(|shared| (*shared).clone());
-                    let out = exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &local);
-                    (out, local)
+                let run_counts: Vec<u64> =
+                    per_reducer_runs.iter().map(|rs| rs.len() as u64).collect();
+                let reduce_attempt = {
+                    let injector = Arc::clone(&injector);
+                    let ckpt = ckpt.clone();
+                    move |j: usize, runs: Arc<Vec<Run<(KT, VT)>>>| {
+                        let local = Counters::new();
+                        if let Some((_, Some(prior), _, Some(oc))) = &ckpt {
+                            if let Some(out) = prior.restore_reduce(j, oc) {
+                                local.inc(names::TASKS_RESUMED);
+                                return (out, local);
+                            }
+                        }
+                        injector.fire(TaskPhase::Reduce, j);
+                        let runs =
+                            Arc::try_unwrap(runs).unwrap_or_else(|shared| (*shared).clone());
+                        let out =
+                            exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &local);
+                        (out, local)
+                    }
                 };
-                let red_results: Vec<(ReduceTaskOutput<KO, VO>, Counters)> = speculate::run_tasks(
+                // Reduce outputs are only worth persisting when nothing has
+                // been dead-lettered: a partial-input reduce output must not
+                // be restorable by a later (complete) run.
+                let on_win = ckpt.as_ref().and_then(|(writer, _, _, out_codec)| {
+                    out_codec.as_ref().map(|oc| {
+                        let writer = Arc::clone(writer);
+                        let oc = Arc::clone(oc);
+                        let dead_letters = Arc::clone(&dead_letters);
+                        Arc::new(move |j: usize, t: &(ReduceTaskOutput<KO, VO>, Counters)| {
+                            if dead_letters.lock().unwrap().is_empty() {
+                                writer.record_reduce(j, &t.0, &oc);
+                            }
+                        })
+                            as Arc<
+                                dyn Fn(usize, &(ReduceTaskOutput<KO, VO>, Counters))
+                                    + Send
+                                    + Sync,
+                            >
+                    })
+                });
+                let wave = speculate::run_tasks_ft(
                     &sched.inner.reduce_pool,
                     per_reducer_runs,
                     Arc::new(reduce_attempt),
-                    spec,
+                    speculate::WaveOptions {
+                        spec,
+                        max_retries: retries,
+                        allow_failure: dead_letter,
+                        on_win,
+                    },
                     &counters,
                 );
-                let mut red_outputs = Vec::with_capacity(red_results.len());
-                for (out, local) in red_results {
-                    counters.merge(&local);
-                    red_outputs.push(out);
+                let mut red_outputs = Vec::with_capacity(wave.results.len());
+                for (j, slot) in wave.results.into_iter().enumerate() {
+                    match slot {
+                        Some((out, local)) => {
+                            counters.merge(&local);
+                            red_outputs.push(out);
+                        }
+                        None => {
+                            counters.inc(names::DEAD_LETTERED);
+                            dead_letters.lock().unwrap().push(DeadLetter {
+                                phase: TaskPhase::Reduce,
+                                task: j,
+                                records: run_counts[j],
+                            });
+                            red_outputs.push(ReduceTaskOutput::empty());
+                        }
+                    }
                 }
                 red_outputs
             }
         };
-        driver::drive_barrier_job(config, input, &counters, has_combiner, map_wave, reduce_wave)
+        let mut res =
+            driver::drive_barrier_job(config, input, &counters, has_combiner, map_wave, reduce_wave);
+        res.stats.dead_letters = std::mem::take(&mut *dead_letters.lock().unwrap());
+        if res.outcome == JobOutcome::Ok {
+            if let Some((writer, _, _, _)) = &ckpt {
+                // Clean finish: the manifest (and any runs parked in the
+                // checkpoint dir) have nothing left to resume.
+                writer.complete();
+            }
+        }
+        res
     }
 
     /// The push-based shuffle path: no map→reduce barrier.  Map attempts
@@ -520,18 +687,36 @@ impl JobScheduler {
         let spill: Option<ResolvedSpill<(KT, VT)>> = config.spill.as_ref().map(|s| s.resolve());
         let compressed_spill = config.spill.as_ref().map(|s| s.compress()).unwrap_or(false);
 
+        // Fault-tolerance knobs (job-level wins over scheduler-wide).
+        // The push path ignores `config.checkpoint` — its commit points
+        // are run-granular, not task-granular; resumable jobs run barrier.
+        let retries = config
+            .max_task_retries
+            .unwrap_or(inner.cfg.max_task_retries);
+        let dead_letter = config.dead_letter;
+        let faults = config
+            .faults
+            .clone()
+            .or_else(|| inner.cfg.faults.clone());
+        let faults_active = faults.is_some();
+        let injector = FaultInjector::from_plan(faults);
+        let dead_letters: Arc<Mutex<Vec<DeadLetter>>> = Arc::new(Mutex::new(Vec::new()));
+
         counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
         let splits = split_input(input, config.num_map_tasks);
+        let split_lens: Vec<u64> = splits.iter().map(|s| s.len() as u64).collect();
         let m = splits.len();
 
         // one mailbox per reduce partition; staged (retractable) pushes
-        // exactly when more than one attempt per task can exist
-        let service: Arc<ShuffleService<(KT, VT)>> = Arc::new(ShuffleService::new(
-            m,
-            r,
-            spec.is_some(),
-            Arc::clone(&counters),
-        ));
+        // exactly when more than one attempt per task can exist — a retry
+        // or an injected panic mid-task must not leave half a task's runs
+        // committed.  Retained (clone-on-read) mailboxes exactly when a
+        // panicked reduce attempt may re-read its partition.
+        let staged = spec.is_some() || retries > 0 || dead_letter || faults_active;
+        let retain = retries > 0;
+        let service: Arc<ShuffleService<(KT, VT)>> = Arc::new(
+            ShuffleService::new(m, r, staged, Arc::clone(&counters)).with_retained_runs(retain),
+        );
         // each slot holds (output, task-local counters, execution-start
         // seconds) — the start stamp is taken on the reduce slot itself,
         // so overlap_secs reports real execution overlap even when slot
@@ -553,6 +738,9 @@ impl JobScheduler {
             let grouping = Arc::clone(&grouping);
             let results = Arc::clone(&results);
             let done = Arc::clone(&done);
+            let counters = Arc::clone(&counters);
+            let injector = Arc::clone(&injector);
+            let dead_letters = Arc::clone(&dead_letters);
             std::thread::Builder::new()
                 .name(format!("snmr-push-{}", config.name))
                 .spawn(move || {
@@ -573,36 +761,78 @@ impl JobScheduler {
                             let grouping = Arc::clone(&grouping);
                             let results = Arc::clone(&results);
                             let done = Arc::clone(&done);
+                            let counters = Arc::clone(&counters);
+                            let injector = Arc::clone(&injector);
+                            let dead_letters = Arc::clone(&dead_letters);
                             sched.inner.reduce_pool.execute(move || {
                                 let started = t_start.elapsed().as_secs_f64();
-                                let outcome = catch_unwind(AssertUnwindSafe(|| {
-                                    let local = Counters::new();
-                                    let (sources, late, fold_secs) =
-                                        push::collect_reduce_sources(&service, j);
-                                    if late > 0 {
-                                        local.add(names::LATE_RUNS, late);
+                                // Inline retry loop: a panicked attempt
+                                // restarts the whole merge against the
+                                // retained (clone-on-read) mailbox, just
+                                // like a barrier resubmission re-reads its
+                                // retained input.
+                                let mut attempts_left = retries;
+                                let outcome = loop {
+                                    let attempt = catch_unwind(AssertUnwindSafe(|| {
+                                        injector.fire(TaskPhase::Reduce, j);
+                                        let local = Counters::new();
+                                        let (sources, late, fold_secs) =
+                                            push::collect_reduce_sources(&service, j);
+                                        if late > 0 {
+                                            local.add(names::LATE_RUNS, late);
+                                        }
+                                        let mut out = exec_reduce_task(
+                                            sources,
+                                            reducer.as_ref(),
+                                            grouping.as_ref(),
+                                            &local,
+                                        );
+                                        // the pre-merge folding is reduce work
+                                        // too (the waits are not measured)
+                                        out.secs += fold_secs;
+                                        (out, local, started)
+                                    }));
+                                    match attempt {
+                                        Ok(pair) => break Ok(pair),
+                                        Err(p) => {
+                                            if attempts_left == 0 {
+                                                break Err(p);
+                                            }
+                                            attempts_left -= 1;
+                                            counters.inc(names::TASK_RETRIES);
+                                        }
                                     }
-                                    let mut out = exec_reduce_task(
-                                        sources,
-                                        reducer.as_ref(),
-                                        grouping.as_ref(),
-                                        &local,
-                                    );
-                                    // the pre-merge folding is reduce work
-                                    // too (the waits are not measured)
-                                    out.secs += fold_secs;
-                                    (out, local, started)
-                                }));
+                                };
                                 let (lock, cv) = &*done;
                                 let mut g = lock.lock().unwrap();
                                 match outcome {
                                     Ok(pair) => {
+                                        if retain {
+                                            // committed output: the retained
+                                            // mailbox is dead weight now
+                                            service.release_partition(j);
+                                        }
                                         results.put(j, pair);
                                         g.0 += 1;
                                     }
                                     Err(_) => {
-                                        g.0 += 1;
-                                        g.1 += 1;
+                                        counters.inc(names::TASKS_FAILED);
+                                        if dead_letter {
+                                            counters.inc(names::DEAD_LETTERED);
+                                            dead_letters.lock().unwrap().push(DeadLetter {
+                                                phase: TaskPhase::Reduce,
+                                                task: j,
+                                                records: service.committed_len(j) as u64,
+                                            });
+                                            results.put(
+                                                j,
+                                                (ReduceTaskOutput::empty(), Counters::new(), started),
+                                            );
+                                            g.0 += 1;
+                                        } else {
+                                            g.0 += 1;
+                                            g.1 += 1;
+                                        }
                                     }
                                 }
                                 cv.notify_all();
@@ -621,7 +851,11 @@ impl JobScheduler {
             let combine_fn = combine_fn.clone();
             let spill = spill.clone();
             let service = Arc::clone(&service);
+            let injector = Arc::clone(&injector);
             move |i: usize, split: Arc<Vec<(KI, VI)>>| {
+                // fire before opening the attempt: an injected panic here
+                // models a worker that died before producing anything
+                injector.fire(TaskPhase::Map, i);
                 let local = Counters::new();
                 let split = Arc::try_unwrap(split).unwrap_or_else(|shared| (*shared).clone());
                 let attempt = ShuffleService::begin_attempt(&service, i);
@@ -643,10 +877,21 @@ impl JobScheduler {
             }
         };
         let wave = AssertUnwindSafe(|| {
-            speculate::run_tasks(&inner.map_pool, splits, Arc::new(map_attempt), spec, &counters)
+            speculate::run_tasks_ft(
+                &inner.map_pool,
+                splits,
+                Arc::new(map_attempt),
+                speculate::WaveOptions {
+                    spec,
+                    max_retries: retries,
+                    allow_failure: dead_letter,
+                    on_win: None,
+                },
+                &counters,
+            )
         });
-        let map_results: Vec<(MapTaskOutput<KT, VT>, Counters)> = match catch_unwind(wave) {
-            Ok(results) => results,
+        let map_wave_out = match catch_unwind(wave) {
+            Ok(out) => out,
             Err(panic) => {
                 // unblock the reducers and the dispatcher before
                 // unwinding, or they would park reduce slots forever
@@ -655,10 +900,28 @@ impl JobScheduler {
                 std::panic::resume_unwind(panic);
             }
         };
-        let mut map_outputs: Vec<MapTaskOutput<KT, VT>> = Vec::with_capacity(map_results.len());
-        for (out, local) in map_results {
-            counters.merge(&local);
-            map_outputs.push(out);
+        let mut map_outputs: Vec<MapTaskOutput<KT, VT>> =
+            Vec::with_capacity(map_wave_out.results.len());
+        for (i, slot) in map_wave_out.results.into_iter().enumerate() {
+            match slot {
+                Some((out, local)) => {
+                    counters.merge(&local);
+                    map_outputs.push(out);
+                }
+                None => {
+                    // Dead-lettered map task: retract whatever its attempts
+                    // staged and release the commit prefix so downstream
+                    // reducers see a shorter (but consistent) stream.
+                    service.fail_task(i);
+                    counters.inc(names::DEAD_LETTERED);
+                    dead_letters.lock().unwrap().push(DeadLetter {
+                        phase: TaskPhase::Map,
+                        task: i,
+                        records: split_lens[i],
+                    });
+                    map_outputs.push(MapTaskOutput::empty(r));
+                }
+            }
         }
         let map_phase_secs = t_map.elapsed().as_secs_f64();
         let map_wave_done_secs = t_start.elapsed().as_secs_f64();
@@ -715,10 +978,25 @@ impl JobScheduler {
         let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
         stats.total_secs = t_start.elapsed().as_secs_f64();
 
+        // the push path bypasses the barrier driver's tail, so it folds
+        // the fault accounting into the result itself
+        stats.task_retries = counters.get(names::TASK_RETRIES);
+        stats.tasks_failed = counters.get(names::TASKS_FAILED);
+        stats.dead_letters = std::mem::take(&mut *dead_letters.lock().unwrap());
+        stats
+            .dead_letters
+            .sort_by_key(|d| (d.phase != TaskPhase::Map, d.task));
+        let outcome = if counters.get(names::DEAD_LETTERED) > 0 {
+            JobOutcome::Degraded
+        } else {
+            JobOutcome::Ok
+        };
+
         JobResult {
             outputs,
             counters,
             stats,
+            outcome,
         }
     }
 }
@@ -1261,5 +1539,313 @@ mod tests {
         assert!(push.outputs[1].is_empty() && push.outputs[2].is_empty());
         let total: u64 = push.outputs.iter().flatten().map(|(_, c)| *c).sum();
         assert_eq!(total, 200);
+    }
+
+    #[test]
+    fn barrier_retry_recovers_injected_panics() {
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        let clean_cfg = JobConfig::named("hist-ft").with_tasks(4, 3);
+        let clean = JobScheduler::with_slots(3).run(
+            &clean_cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        // kill the first attempt of one map and one reduce task; one
+        // retry each recovers the job byte-identically
+        let cfg = clean_cfg
+            .clone()
+            .with_faults(Some(FaultPlan::new().panic_map(1, 0).panic_reduce(0, 0)))
+            .with_retries(Some(1));
+        let retried = JobScheduler::with_slots(3).run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(clean.outputs, retried.outputs);
+        assert_eq!(retried.outcome, JobOutcome::Ok);
+        assert_eq!(retried.stats.task_retries, 2);
+        assert_eq!(retried.counters.get(names::TASK_RETRIES), 2);
+        assert!(retried.stats.dead_letters.is_empty());
+    }
+
+    #[test]
+    fn scheduler_wide_retry_budget_applies_to_jobs() {
+        let (input, mapper, reducer) = histogram_job(300, 5);
+        // retry budget and fault plan both set on the *scheduler*: jobs
+        // inherit them without any JobConfig opt-in
+        let sched = JobScheduler::new(
+            SchedulerConfig::slots(2)
+                .with_retries(1)
+                .with_faults(Some(FaultPlan::new().panic_map(0, 0))),
+        );
+        let cfg = JobConfig::named("hist-sched-ft").with_tasks(3, 2);
+        let res = sched.run(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        let clean = run_job(
+            &cfg.clone().with_workers(2),
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(clean.outputs, res.outputs);
+        assert_eq!(res.stats.task_retries, 1);
+    }
+
+    #[test]
+    fn push_retry_recovers_injected_panics() {
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        let clean_cfg = JobConfig::named("hist-push-ft").with_tasks(4, 3);
+        let sched = JobScheduler::new(SchedulerConfig::slots(3).with_push(PushMode::Push));
+        let clean = sched.run(
+            &clean_cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        // a map attempt dies after staging pushes, a reduce attempt dies
+        // after folding part of its mailbox: the retry re-stages and
+        // re-reads the retained partition
+        let cfg = clean_cfg
+            .clone()
+            .with_faults(Some(FaultPlan::new().panic_map(2, 0).panic_reduce(1, 0)))
+            .with_retries(Some(2));
+        let retried = sched.run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(clean.outputs, retried.outputs);
+        assert_eq!(retried.outcome, JobOutcome::Ok);
+        assert_eq!(retried.stats.task_retries, 2);
+        assert!(retried.stats.dead_letters.is_empty());
+    }
+
+    #[test]
+    fn exhausted_retries_dead_letter_and_degrade() {
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        // map task 1 panics on every attempt; with a 1-retry budget and
+        // dead-lettering on, the job completes without task 1's split
+        let cfg = JobConfig::named("hist-dl")
+            .with_tasks(4, 3)
+            .with_faults(Some(
+                FaultPlan::new().panic_map(1, 0).panic_map(1, 1),
+            ))
+            .with_retries(Some(1))
+            .with_dead_letter(true);
+        let res = JobScheduler::with_slots(3).run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(res.outcome, JobOutcome::Degraded);
+        assert_eq!(res.counters.get(names::DEAD_LETTERED), 1);
+        assert_eq!(res.stats.task_retries, 1);
+        assert_eq!(res.stats.dead_letters.len(), 1);
+        let dl = &res.stats.dead_letters[0];
+        assert_eq!((dl.phase, dl.task), (TaskPhase::Map, 1));
+        assert_eq!(dl.records, 150, "4 even splits of 600");
+        // partial output: exactly the dead-lettered split's records are
+        // missing
+        let total: u64 = res.outputs.iter().flatten().map(|(_, c)| *c).sum();
+        assert_eq!(total, 450);
+    }
+
+    #[test]
+    fn push_dead_letters_a_poisoned_reduce_partition() {
+        let (input, mapper, reducer) = histogram_job(400, 5);
+        let clean_cfg = JobConfig::named("push-dl").with_tasks(4, 3);
+        let sched = JobScheduler::new(SchedulerConfig::slots(3).with_push(PushMode::Push));
+        let clean = sched.run(
+            &clean_cfg,
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        // reduce partition 1 fails every attempt (0 retries): its output
+        // is empty, the rest of the job is untouched
+        let cfg = clean_cfg.clone().with_faults(Some(FaultPlan::new().panic_reduce(1, 0)))
+            .with_dead_letter(true);
+        let res = sched.run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(res.outcome, JobOutcome::Degraded);
+        assert!(res.outputs[1].is_empty());
+        assert_eq!(res.outputs[0], clean.outputs[0]);
+        assert_eq!(res.outputs[2], clean.outputs[2]);
+        assert_eq!(res.stats.dead_letters.len(), 1);
+        assert_eq!(res.stats.dead_letters[0].phase, TaskPhase::Reduce);
+        assert_eq!(res.stats.dead_letters[0].task, 1);
+    }
+
+    #[test]
+    fn checkpoint_resumes_only_missing_tasks() {
+        use crate::mapreduce::checkpoint::CheckpointSpec;
+        use crate::mapreduce::sortspill::{Codec, KeyValueCodec, TempSpillDir, U64Codec};
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        let dir = TempSpillDir::new("sched-ckpt").unwrap();
+        let codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+        let out_codec: Arc<dyn Codec<(u64, u64)>> =
+            Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+        let spec = CheckpointSpec::new::<(u64, u64)>(dir.path(), codec)
+            .with_output_codec::<(u64, u64)>(out_codec);
+        let cfg = JobConfig::named("hist-ckpt")
+            .with_tasks(4, 3)
+            .with_checkpoint(Some(spec.clone()));
+        let clean = run_job(
+            &cfg.clone().with_workers(2),
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer.clone(),
+        );
+        // run 1: the whole map wave commits to the manifest, then a
+        // poisoned reduce task fails the job (fail-fast, no retries)
+        let sched = JobScheduler::with_slots(3);
+        let killed = catch_unwind(AssertUnwindSafe(|| {
+            sched.run(
+                &cfg.clone()
+                    .with_faults(Some(FaultPlan::new().panic_reduce(0, 0))),
+                input.clone(),
+                mapper.clone(),
+                Arc::new(HashPartitioner::new(|k: &u64| *k)),
+                grouping(),
+                reducer.clone(),
+            )
+        }));
+        assert!(killed.is_err(), "fail-fast job should panic");
+        assert!(
+            spec.manifest_path().exists(),
+            "failed job must leave its manifest for resume"
+        );
+        // run 2: same job, no faults — every map task restores from the
+        // manifest instead of re-executing
+        let resumed = sched.run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
+        assert_eq!(clean.outputs, resumed.outputs);
+        assert_eq!(resumed.outcome, JobOutcome::Ok);
+        assert!(
+            resumed.counters.get(names::TASKS_RESUMED) >= 4,
+            "all 4 map tasks should restore, got {}",
+            resumed.counters.get(names::TASKS_RESUMED)
+        );
+        assert!(
+            !spec.manifest_path().exists(),
+            "clean finish must retire the manifest"
+        );
+    }
+
+    /// Satellite of the abort-path guarantee: a fail-fast disk-backed job
+    /// that dies mid-wave must delete every spill file it created.
+    #[test]
+    fn aborted_barrier_job_leaks_no_spill_files() {
+        use crate::mapreduce::sortspill::{Codec, KeyValueCodec, SpillSpec, TempSpillDir, U64Codec};
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        let dir = TempSpillDir::new("abort-barrier").unwrap();
+        let codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+        let cfg = JobConfig::named("abort-barrier")
+            .with_tasks(4, 3)
+            .with_sort_buffer(Some(16))
+            .with_spill(Some(SpillSpec::new(dir.path(), codec)))
+            .with_faults(Some(FaultPlan::new().panic_map(3, 0)));
+        let sched = JobScheduler::with_slots(3);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            sched.run(
+                &cfg,
+                input,
+                mapper,
+                Arc::new(HashPartitioner::new(|k: &u64| *k)),
+                grouping(),
+                reducer,
+            )
+        }));
+        assert!(res.is_err());
+        drop(sched); // join the slots: in-flight tasks release their runs
+        let leaked = std::fs::read_dir(dir.path()).unwrap().count();
+        assert_eq!(leaked, 0, "aborted barrier job leaked {leaked} spill files");
+    }
+
+    /// Same guarantee on the push path, where committed runs live in the
+    /// service mailboxes: aborting the wave must still drop every file.
+    #[test]
+    fn aborted_push_job_leaks_no_spill_files() {
+        use crate::mapreduce::sortspill::{Codec, KeyValueCodec, SpillSpec, TempSpillDir, U64Codec};
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        let dir = TempSpillDir::new("abort-push").unwrap();
+        let codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+        let cfg = JobConfig::named("abort-push")
+            .with_tasks(4, 3)
+            .with_sort_buffer(Some(16))
+            .with_spill(Some(SpillSpec::new(dir.path(), codec)))
+            .with_faults(Some(FaultPlan::new().panic_map(3, 0)));
+        let sched = JobScheduler::new(SchedulerConfig::slots(3).with_push(PushMode::Push));
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            sched.run(
+                &cfg,
+                input,
+                mapper,
+                Arc::new(HashPartitioner::new(|k: &u64| *k)),
+                grouping(),
+                reducer,
+            )
+        }));
+        assert!(res.is_err());
+        drop(sched);
+        let leaked = std::fs::read_dir(dir.path()).unwrap().count();
+        assert_eq!(leaked, 0, "aborted push job leaked {leaked} spill files");
+    }
+
+    /// A reduce-side panic in push mode (no retries, no dead-letter) must
+    /// fail the job without hanging the completion gate.
+    #[test]
+    #[should_panic(expected = "push reduce task attempt(s) panicked")]
+    fn push_reduce_panic_unwinds_without_hanging() {
+        let (input, mapper, reducer) = histogram_job(400, 5);
+        let cfg = JobConfig::named("boom-push-reduce")
+            .with_tasks(4, 2)
+            .with_faults(Some(FaultPlan::new().panic_reduce(0, 0)));
+        let _ = JobScheduler::new(SchedulerConfig::slots(2).with_push(PushMode::Push)).run(
+            &cfg,
+            input,
+            mapper,
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            grouping(),
+            reducer,
+        );
     }
 }

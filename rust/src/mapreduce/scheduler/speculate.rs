@@ -14,9 +14,20 @@
 //! exceeds `slowdown ×` the running median of completed task durations
 //! (and at least `min_secs`) is cloned — but only onto an *idle* slot, so
 //! speculation never delays a primary attempt that is still queued.
+//!
+//! **Bounded retry** ([`WaveOptions::max_retries`]): a panicked attempt is
+//! caught and — while the task is undecided and its cumulative panic
+//! count is within budget — queued for resubmission from the retained
+//! input; the wave driver relaunches it as a fresh primary attempt.  Only
+//! when the budget is exhausted does the task become *failed*: with
+//! [`WaveOptions::allow_failure`] the wave completes and reports the
+//! failed indices (the dead-letter path); without it the wave panics like
+//! `run_owned` — the default fail-fast contract of [`run_tasks`].
+//! Retries compose with speculation: a clone that wins while a retry is
+//! queued decides the task, and the stale retry is discarded at dispatch.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -48,11 +59,16 @@ impl Default for SpecPolicy {
 }
 
 struct BoardState {
-    /// Tasks whose winner is decided.
-    winners: usize,
+    /// Tasks that are settled: a winner is stored, or the task failed
+    /// permanently.
+    settled: usize,
     /// Winning-attempt durations, in completion order (median source).
     durations: Vec<f64>,
-    panics: usize,
+    /// Undecided tasks whose last attempt panicked within the retry
+    /// budget, waiting for the driver to resubmit them.
+    pending_retry: Vec<usize>,
+    /// Tasks whose every attempt panicked (budget exhausted).
+    failed: Vec<usize>,
 }
 
 /// Per-wave bookkeeping shared between the job driver and its attempts.
@@ -63,27 +79,73 @@ struct Board {
     started_us: Vec<AtomicU64>,
     /// A speculative clone has been launched for this task.
     cloned: Vec<AtomicBool>,
-    /// The task's outcome is decided (winner stored, or attempt panicked).
+    /// The task's outcome is decided (winner stored, or failed for good).
     decided: Vec<AtomicBool>,
+    /// Cumulative panicked attempts per task (retry budget accounting).
+    fail_counts: Vec<AtomicU32>,
+    /// Panicked attempts beyond this count fail the task.
+    max_retries: u32,
     state: Mutex<BoardState>,
     cv: Condvar,
 }
 
 impl Board {
-    fn new(n: usize) -> Self {
+    fn new(n: usize, max_retries: u32) -> Self {
         Self {
             epoch: Instant::now(),
             started_us: (0..n).map(|_| AtomicU64::new(0)).collect(),
             cloned: (0..n).map(|_| AtomicBool::new(false)).collect(),
             decided: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            fail_counts: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            max_retries,
             state: Mutex::new(BoardState {
-                winners: 0,
+                settled: 0,
                 durations: Vec::new(),
-                panics: 0,
+                pending_retry: Vec::new(),
+                failed: Vec::new(),
             }),
             cv: Condvar::new(),
         }
     }
+}
+
+/// Fault-handling knobs for one wave (see [`run_tasks_ft`]).
+pub(crate) struct WaveOptions<T> {
+    /// Straggler-cloning policy; `None` disables speculation.
+    pub spec: Option<SpecPolicy>,
+    /// Panicked-attempt budget per task before the task fails.
+    pub max_retries: u32,
+    /// `true`: failed tasks are reported in [`WaveOutcome::failed`] and
+    /// the wave completes (dead-letter mode).  `false`: any failed task
+    /// panics the wave (`run_owned`'s fail-fast contract).
+    pub allow_failure: bool,
+    /// Invoked once per task, on the winning attempt's thread, right
+    /// after the win is decided and before the result is published —
+    /// the checkpoint-commit hook.  A panicking callback is swallowed
+    /// (checkpointing is best-effort and must not fail a healthy wave).
+    pub on_win: Option<Arc<dyn Fn(usize, &T) + Send + Sync>>,
+}
+
+impl<T> Default for WaveOptions<T> {
+    fn default() -> Self {
+        Self {
+            spec: None,
+            max_retries: 0,
+            allow_failure: false,
+            on_win: None,
+        }
+    }
+}
+
+/// One wave's results under fault handling.
+pub(crate) struct WaveOutcome<T> {
+    /// Per-task results in task order; `None` marks a failed task (only
+    /// possible with [`WaveOptions::allow_failure`]).
+    pub results: Vec<Option<T>>,
+    /// Indices of failed tasks, in settlement order.
+    pub failed: Vec<usize>,
+    /// Retry attempts actually resubmitted.
+    pub retries: u64,
 }
 
 /// Run one wave of tasks on `pool`, optionally cloning stragglers onto
@@ -109,14 +171,53 @@ where
     T: Send + 'static,
     F: Fn(usize, Arc<I>) -> T + Send + Sync + 'static,
 {
+    run_tasks_ft(
+        pool,
+        items,
+        f,
+        WaveOptions {
+            spec,
+            ..WaveOptions::default()
+        },
+        counters,
+    )
+    .results
+    .into_iter()
+    .map(|t| t.expect("fail-fast wave cannot yield failed tasks"))
+    .collect()
+}
+
+/// As [`run_tasks`], with the fault-handling knobs exposed: bounded
+/// per-task retry, optional failure tolerance, and a winning-attempt
+/// commit hook.  See [`WaveOptions`] / [`WaveOutcome`].
+pub(crate) fn run_tasks_ft<I, T, F>(
+    pool: &ThreadPool,
+    items: Vec<I>,
+    f: Arc<F>,
+    opts: WaveOptions<T>,
+    counters: &Arc<Counters>,
+) -> WaveOutcome<T>
+where
+    I: Send + Sync + 'static,
+    T: Send + 'static,
+    F: Fn(usize, Arc<I>) -> T + Send + Sync + 'static,
+{
     let n = items.len();
     if n == 0 {
-        return Vec::new();
+        return WaveOutcome {
+            results: Vec::new(),
+            failed: Vec::new(),
+            retries: 0,
+        };
     }
     let attempt_inputs: Vec<Arc<I>> = items.into_iter().map(Arc::new).collect();
-    let retained: Option<Vec<Arc<I>>> = spec.as_ref().map(|_| attempt_inputs.clone());
+    // Without speculation or retries every attempt holds the *only*
+    // input reference and can consume it in place; either fault knob
+    // needs a second reference to re-run from.
+    let retained: Option<Vec<Arc<I>>> =
+        (opts.spec.is_some() || opts.max_retries > 0).then(|| attempt_inputs.clone());
     let results = Arc::new(OnceSlots::<T>::empty(n));
-    let board = Arc::new(Board::new(n));
+    let board = Arc::new(Board::new(n, opts.max_retries));
     for (i, input) in attempt_inputs.into_iter().enumerate() {
         submit_attempt(
             pool,
@@ -127,21 +228,48 @@ where
             Arc::clone(&results),
             Arc::clone(&board),
             Arc::clone(counters),
+            opts.on_win.clone(),
         );
     }
 
+    let mut retries_launched = 0u64;
     let mut st = board.state.lock().unwrap();
     loop {
-        if st.winners >= n {
+        // Drain retry requests before anything else: a queued retry is a
+        // task with no running attempt (unless a clone is still going),
+        // so waiting on it would deadlock a spec-less wave.
+        while let Some(i) = st.pending_retry.pop() {
+            drop(st);
+            if !board.decided[i].load(Ordering::Acquire) {
+                counters.inc(names::TASK_RETRIES);
+                retries_launched += 1;
+                let inputs = retained
+                    .as_ref()
+                    .expect("inputs retained when retries are budgeted");
+                submit_attempt(
+                    pool,
+                    i,
+                    false,
+                    Arc::clone(&inputs[i]),
+                    Arc::clone(&f),
+                    Arc::clone(&results),
+                    Arc::clone(&board),
+                    Arc::clone(counters),
+                    opts.on_win.clone(),
+                );
+            }
+            st = board.state.lock().unwrap();
+        }
+        if st.settled >= n {
             break;
         }
-        match &spec {
+        match &opts.spec {
             None => st = board.cv.wait(st).unwrap(),
             Some(policy) => {
                 let (guard, _) = board.cv.wait_timeout(st, policy.poll).unwrap();
                 st = guard;
-                if st.winners >= n {
-                    break;
+                if st.settled >= n || !st.pending_retry.is_empty() {
+                    continue;
                 }
                 if st.durations.is_empty() {
                     continue; // no completed task yet: no median baseline
@@ -183,18 +311,37 @@ where
                         Arc::clone(&results),
                         Arc::clone(&board),
                         Arc::clone(counters),
+                        opts.on_win.clone(),
                     );
                 }
                 st = board.state.lock().unwrap();
             }
         }
     }
-    let panics = st.panics;
+    let failed = std::mem::take(&mut st.failed);
     drop(st);
-    assert_eq!(panics, 0, "{panics} task attempt(s) panicked");
+    if !opts.allow_failure {
+        assert!(
+            failed.is_empty(),
+            "{} task attempt(s) panicked",
+            failed.len()
+        );
+    }
+    let mut is_failed = vec![false; n];
+    for &i in &failed {
+        is_failed[i] = true;
+    }
     // Losing attempts may still be running; `take` transitions each slot
-    // FULL→TAKEN, after which a late loser's `try_put` simply fails.
-    (0..n).map(|i| results.take(i)).collect()
+    // FULL→TAKEN, after which a late loser's publish simply never happens
+    // (the win was already decided by the `decided` flag).
+    let outputs = (0..n)
+        .map(|i| (!is_failed[i]).then(|| results.take(i)))
+        .collect();
+    WaveOutcome {
+        results: outputs,
+        failed,
+        retries: retries_launched,
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -207,6 +354,7 @@ fn submit_attempt<I, T, F>(
     results: Arc<OnceSlots<T>>,
     board: Arc<Board>,
     counters: Arc<Counters>,
+    on_win: Option<Arc<dyn Fn(usize, &T) + Send + Sync>>,
 ) where
     I: Send + Sync + 'static,
     T: Send + 'static,
@@ -225,28 +373,44 @@ fn submit_attempt<I, T, F>(
         let t0 = Instant::now();
         match catch_unwind(AssertUnwindSafe(|| f(i, input))) {
             Ok(t) => {
-                if results.try_put(i, t) {
-                    board.decided[i].store(true, Ordering::Release);
+                // `decided` is the single win arbiter: exactly one
+                // attempt's false→true transition succeeds, so the slot
+                // write below is exclusive and losers drop their result
+                // right here.
+                if !board.decided[i].swap(true, Ordering::AcqRel) {
+                    if let Some(cb) = &on_win {
+                        let _ = catch_unwind(AssertUnwindSafe(|| cb(i, &t)));
+                    }
+                    let won = results.try_put(i, t);
+                    debug_assert!(won, "decided attempt must own the slot");
                     if speculative {
                         counters.inc(names::SPECULATIVE_WON);
                     }
                     let mut st = board.state.lock().unwrap();
-                    st.winners += 1;
+                    st.settled += 1;
                     st.durations.push(t0.elapsed().as_secs_f64());
                     board.cv.notify_all();
                 }
-                // a losing attempt's result is dropped right here
             }
             Err(_) => {
-                // mark decided so the driver unblocks, then report via the
-                // panic count — the wave fails loudly, like `run_owned`
-                let first = !board.decided[i].swap(true, Ordering::AcqRel);
-                let mut st = board.state.lock().unwrap();
-                st.panics += 1;
-                if first {
-                    st.winners += 1;
+                // a panicked attempt consumes one unit of retry budget;
+                // within budget (and while undecided) the task is queued
+                // for resubmission, beyond it the task fails for good
+                let fails = board.fail_counts[i].fetch_add(1, Ordering::AcqRel) + 1;
+                if !board.decided[i].load(Ordering::Acquire) && fails <= board.max_retries {
+                    let mut st = board.state.lock().unwrap();
+                    st.pending_retry.push(i);
+                    board.cv.notify_all();
+                } else {
+                    let first = !board.decided[i].swap(true, Ordering::AcqRel);
+                    let mut st = board.state.lock().unwrap();
+                    if first {
+                        counters.inc(names::TASKS_FAILED);
+                        st.failed.push(i);
+                        st.settled += 1;
+                    }
+                    board.cv.notify_all();
                 }
-                board.cv.notify_all();
             }
         }
     });
@@ -354,5 +518,152 @@ mod tests {
             &counters,
         );
         assert!(out.is_empty());
+    }
+
+    /// A first-attempt panic within the retry budget is invisible to the
+    /// caller: the resubmitted attempt produces the same result the
+    /// clean run would have.
+    #[test]
+    fn retry_recovers_a_panicked_attempt() {
+        let pool = ThreadPool::new(2);
+        let counters = Arc::new(Counters::new());
+        let attempts = Arc::new(AtomicU32::new(0));
+        let a = Arc::clone(&attempts);
+        let out = run_tasks_ft(
+            &pool,
+            (0..6u64).collect::<Vec<_>>(),
+            Arc::new(move |_i, v: Arc<u64>| {
+                if *v == 3 && a.fetch_add(1, Ordering::SeqCst) == 0 {
+                    panic!("injected");
+                }
+                *v * 10
+            }),
+            WaveOptions {
+                max_retries: 2,
+                ..WaveOptions::default()
+            },
+            &counters,
+        );
+        let vals: Vec<u64> = out.results.into_iter().map(Option::unwrap).collect();
+        assert_eq!(vals, (0..6u64).map(|v| v * 10).collect::<Vec<_>>());
+        assert!(out.failed.is_empty());
+        assert_eq!(out.retries, 1);
+        assert_eq!(counters.get(names::TASK_RETRIES), 1);
+        assert_eq!(counters.get(names::TASKS_FAILED), 0);
+    }
+
+    /// Exhausting the budget still fails the wave loudly by default.
+    #[test]
+    #[should_panic(expected = "task attempt(s) panicked")]
+    fn exhausted_retries_fail_fast_by_default() {
+        let pool = ThreadPool::new(2);
+        let counters = Arc::new(Counters::new());
+        let _ = run_tasks_ft(
+            &pool,
+            vec![0u64, 1],
+            Arc::new(|_i, v: Arc<u64>| {
+                if *v == 1 {
+                    panic!("always");
+                }
+                *v
+            }),
+            WaveOptions {
+                max_retries: 2,
+                ..WaveOptions::default()
+            },
+            &counters,
+        );
+    }
+
+    /// With `allow_failure` the wave completes and reports the failed
+    /// index instead of panicking — the dead-letter substrate.
+    #[test]
+    fn allow_failure_reports_failed_tasks() {
+        let pool = ThreadPool::new(2);
+        let counters = Arc::new(Counters::new());
+        let out = run_tasks_ft(
+            &pool,
+            (0..4u64).collect::<Vec<_>>(),
+            Arc::new(|_i, v: Arc<u64>| {
+                if *v == 2 {
+                    panic!("always");
+                }
+                *v + 1
+            }),
+            WaveOptions {
+                max_retries: 1,
+                allow_failure: true,
+                ..WaveOptions::default()
+            },
+            &counters,
+        );
+        assert_eq!(out.failed, vec![2]);
+        assert_eq!(out.results[2], None);
+        assert_eq!(out.results[0], Some(1));
+        assert_eq!(out.results[3], Some(4));
+        assert_eq!(out.retries, 1, "budget of 1 consumed before failing");
+        assert_eq!(counters.get(names::TASKS_FAILED), 1);
+    }
+
+    /// Retries compose with speculation: the wave stays correct and no
+    /// task settles twice (every result slot is filled exactly once).
+    #[test]
+    fn retry_composes_with_speculation() {
+        let pool = ThreadPool::new(4);
+        let counters = Arc::new(Counters::new());
+        let attempts = Arc::new(AtomicU32::new(0));
+        let a = Arc::clone(&attempts);
+        let out = run_tasks_ft(
+            &pool,
+            (0..8u64).collect::<Vec<_>>(),
+            Arc::new(move |_i, v: Arc<u64>| {
+                if *v == 1 && a.fetch_add(1, Ordering::SeqCst) == 0 {
+                    panic!("injected");
+                }
+                if *v == 7 {
+                    busy_wait(Duration::from_millis(120));
+                } else {
+                    busy_wait(Duration::from_millis(2));
+                }
+                *v + 100
+            }),
+            WaveOptions {
+                spec: Some(SpecPolicy::default()),
+                max_retries: 2,
+                ..WaveOptions::default()
+            },
+            &counters,
+        );
+        let vals: Vec<u64> = out.results.into_iter().map(Option::unwrap).collect();
+        assert_eq!(vals, (0..8u64).map(|v| v + 100).collect::<Vec<_>>());
+        assert_eq!(counters.get(names::TASK_RETRIES), 1);
+        assert!(
+            counters.get(names::SPECULATIVE_WON) <= counters.get(names::SPECULATIVE_LAUNCHED)
+        );
+    }
+
+    /// The winning attempt invokes the commit hook exactly once per task.
+    #[test]
+    fn on_win_fires_once_per_task() {
+        let pool = ThreadPool::new(4);
+        let counters = Arc::new(Counters::new());
+        let fired = Arc::new(Mutex::new(Vec::new()));
+        let f2 = Arc::clone(&fired);
+        let out = run_tasks_ft(
+            &pool,
+            (0..10u64).collect::<Vec<_>>(),
+            Arc::new(|_i, v: Arc<u64>| *v),
+            WaveOptions {
+                on_win: Some(Arc::new(move |i, t: &u64| {
+                    f2.lock().unwrap().push((i, *t));
+                })),
+                ..WaveOptions::default()
+            },
+            &counters,
+        );
+        assert!(out.failed.is_empty());
+        let mut hits = fired.lock().unwrap().clone();
+        hits.sort_unstable();
+        assert_eq!(hits, (0..10usize).map(|i| (i, i as u64)).collect::<Vec<_>>());
     }
 }

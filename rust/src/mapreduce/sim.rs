@@ -53,6 +53,14 @@ pub struct ClusterSpec {
     pub slow_nodes: usize,
     /// Runtime multiplier for tasks placed on a slow node (≥ 1).
     pub slow_node_factor: f64,
+    /// Fraction of task attempts that crash and are re-executed — the
+    /// simulator's charge for the engine's bounded-retry fault tolerance
+    /// ([`JobConfig::max_task_retries`](super::JobConfig::max_task_retries)).
+    /// Deterministic: every `⌊1/rate⌋`-th task of a wave runs twice (the
+    /// failed attempt is paid in full before the rerun, Hadoop's
+    /// worst-case re-execution).  `0.0` (the paper's implicit setup —
+    /// no failures during the measured runs) charges nothing.
+    pub task_failure_rate: f64,
 }
 
 impl ClusterSpec {
@@ -72,6 +80,7 @@ impl ClusterSpec {
             speculative: false,
             slow_nodes: 0,
             slow_node_factor: 1.0,
+            task_failure_rate: 0.0,
         }
     }
 
@@ -86,6 +95,14 @@ impl ClusterSpec {
         assert!(factor >= 1.0, "slow nodes cannot be faster");
         self.slow_nodes = n.min(self.nodes);
         self.slow_node_factor = factor;
+        self
+    }
+
+    /// Crash-and-reexecute `rate` of all task attempts (see
+    /// [`ClusterSpec::task_failure_rate`]).
+    pub fn with_failures(mut self, rate: f64) -> Self {
+        assert!((0.0..1.0).contains(&rate), "failure rate must be in [0, 1)");
+        self.task_failure_rate = rate;
         self
     }
 
@@ -271,9 +288,19 @@ pub fn wave_schedule(durations: &[f64], slots: usize, spec: &ClusterSpec) -> Wav
         end: f64,
         cloned: bool,
     }
+    // Deterministic failure charge: every `period`-th task's attempt
+    // crashes at the end of its run and is re-executed from scratch on
+    // the same slot, doubling its occupancy (the engine's bounded-retry
+    // recovery, at its worst-case cost).
+    let fail_period = (spec.task_failure_rate > 0.0)
+        .then(|| ((1.0 / spec.task_failure_rate).round() as usize).max(1));
     let mut free_at = vec![0.0f64; slots.min(durations.len())];
     let mut runs: Vec<Run> = Vec::with_capacity(durations.len());
-    for &d in durations {
+    for (i, &d) in durations.iter().enumerate() {
+        let d = match fail_period {
+            Some(p) if (i + 1) % p == 0 => d * 2.0,
+            _ => d,
+        };
         let (s, t) = argmin(&free_at);
         let end = t + d * speed(s);
         free_at[s] = end;
@@ -604,6 +631,35 @@ mod tests {
                 assert_eq!(w.speculative_launched, 0);
             }
         }
+    }
+
+    #[test]
+    fn failure_rate_zero_charges_nothing() {
+        let durations = vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let spec = ClusterSpec::paper_like(8);
+        let clean = wave_schedule(&durations, spec.map_slots(), &spec);
+        let zero = wave_schedule(
+            &durations,
+            spec.map_slots(),
+            &spec.clone().with_failures(0.0),
+        );
+        assert!((clean.makespan - zero.makespan).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failure_rate_lengthens_makespan_deterministically() {
+        let durations = vec![4.0; 8];
+        let spec = ClusterSpec::paper_like(4); // 4 map slots, 2 waves
+        let clean = wave_schedule(&durations, spec.map_slots(), &spec);
+        let faulty = ClusterSpec::paper_like(4).with_failures(0.25);
+        let a = wave_schedule(&durations, faulty.map_slots(), &faulty);
+        let b = wave_schedule(&durations, faulty.map_slots(), &faulty);
+        // every 4th task re-executes: tasks 3 and 7 run 8s instead of 4s,
+        // and the charge is reproducible run to run
+        assert!(a.makespan > clean.makespan + 1e-9, "a={a:?} clean={clean:?}");
+        assert!((a.makespan - b.makespan).abs() < 1e-12);
+        // task 7 (doubled to 8s) starts at the 8s mark of its second wave
+        assert!((a.makespan - 16.0).abs() < 1e-9, "got {}", a.makespan);
     }
 
     #[test]

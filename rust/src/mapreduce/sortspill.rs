@@ -286,14 +286,19 @@ impl<T, C: Codec<T>> Codec<T> for DeflateCodec<C> {
 // Run files
 // ---------------------------------------------------------------------------
 
-/// Deletes the run file when the last handle drops.
+/// Deletes the run file when the last handle drops — unless the file has
+/// been persisted (checkpointed runs must outlive the job that wrote
+/// them; the checkpoint manifest owns their lifetime instead).
 struct RunFileGuard {
     path: PathBuf,
+    persist: std::sync::atomic::AtomicBool,
 }
 
 impl Drop for RunFileGuard {
     fn drop(&mut self) {
-        let _ = std::fs::remove_file(&self.path);
+        if !self.persist.load(AtomicOrdering::Acquire) {
+            let _ = std::fs::remove_file(&self.path);
+        }
     }
 }
 
@@ -377,13 +382,50 @@ impl<T> RunFile<T> {
         drop(w);
         let file_bytes = std::fs::metadata(&path)?.len();
         Ok(Self {
-            guard: Arc::new(RunFileGuard { path }),
+            guard: Arc::new(RunFileGuard {
+                path,
+                persist: std::sync::atomic::AtomicBool::new(false),
+            }),
             codec,
             compressed: compress,
             records: records.len() as u64,
             raw_bytes,
             file_bytes,
         })
+    }
+
+    /// Open an existing run file (a checkpointed run surviving from a
+    /// prior job execution).  The header supplies the compression flag
+    /// and record count; `raw_bytes` comes from the caller (the
+    /// checkpoint manifest records it — the file alone doesn't).  The
+    /// returned handle is already [persisted](Self::persist): restoring
+    /// a run must not burn the checkpoint it was restored from.
+    pub fn open(path: impl Into<PathBuf>, codec: Arc<dyn Codec<T>>, raw_bytes: u64) -> Result<Self> {
+        let path = path.into();
+        let file = File::open(&path).with_context(|| format!("open {}", path.display()))?;
+        let mut reader = BufReader::new(file);
+        let compressed = reader.read_u8().context("run file header")? != 0;
+        let records = reader.read_u64::<LittleEndian>().context("run file header")?;
+        drop(reader);
+        let file_bytes = std::fs::metadata(&path)?.len();
+        Ok(Self {
+            guard: Arc::new(RunFileGuard {
+                path,
+                persist: std::sync::atomic::AtomicBool::new(true),
+            }),
+            codec,
+            compressed,
+            records,
+            raw_bytes,
+            file_bytes,
+        })
+    }
+
+    /// Keep the file on disk past the last handle drop (checkpointed
+    /// runs).  Irreversible for this file; cleanup becomes the
+    /// checkpoint manifest's job.
+    pub fn persist(&self) {
+        self.guard.persist.store(true, AtomicOrdering::Release);
     }
 
     pub fn path(&self) -> &Path {
@@ -970,6 +1012,27 @@ mod tests {
         assert!(path.exists(), "clone must keep the file alive");
         drop(clone);
         assert!(!path.exists(), "last drop must delete the file");
+    }
+
+    #[test]
+    fn persisted_run_file_survives_drop_and_reopens() {
+        let dir = TempSpillDir::new("persist").unwrap();
+        let recs: Vec<(String, String)> = (0..20)
+            .map(|i| (format!("k{i:02}"), format!("v{i}")))
+            .collect();
+        let rf = RunFile::write(dir.path(), string_pair_codec(), true, &recs).unwrap();
+        let path = rf.path().to_path_buf();
+        let raw = rf.raw_bytes();
+        rf.persist();
+        drop(rf);
+        assert!(path.exists(), "persisted file must survive the last drop");
+        let back = RunFile::open(&path, string_pair_codec(), raw).unwrap();
+        assert_eq!(back.records(), 20);
+        assert_eq!(back.raw_bytes(), raw);
+        assert_eq!(back.read_all().unwrap(), recs);
+        drop(back);
+        assert!(path.exists(), "re-opened handles are persisted too");
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

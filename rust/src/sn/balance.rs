@@ -472,6 +472,8 @@ mod tests {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         };
         let res = crate::sn::repsn::run(&entities, &cfg).unwrap();
         let mut expect = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), w);

@@ -138,7 +138,9 @@ pub fn run_with_options(
             .with_workers(cfg.workers)
             .with_sort_buffer(cfg.sort_buffer_records)
             .with_spill(cfg.spill.as_ref().map(crate::sn::codec::boundary_job_spec))
-            .with_push(cfg.push);
+            .with_push(cfg.push)
+            .with_faults(cfg.faults.clone())
+            .with_retries(cfg.max_task_retries);
         // boundary index spreads over the phase-2 reduce tasks
         struct BoundaryPartitioner;
         impl crate::mapreduce::types::Partitioner<SnKey> for BoundaryPartitioner {
@@ -211,6 +213,8 @@ mod tests {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         }
     }
 
@@ -247,6 +251,8 @@ mod tests {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 4);

@@ -292,6 +292,8 @@ pub fn bdm_job(
     sort_buffer_records: Option<usize>,
     spill: Option<crate::mapreduce::sortspill::SpillSpec>,
     push: bool,
+    faults: Option<crate::mapreduce::fault::FaultPlan>,
+    max_task_retries: Option<u32>,
     exec: Exec<'_>,
 ) -> BdmJobResult {
     let m = m.max(1);
@@ -314,7 +316,9 @@ pub fn bdm_job(
         .with_workers(workers.max(1))
         .with_sort_buffer(sort_buffer_records)
         .with_spill(spill)
-        .with_push(push);
+        .with_push(push)
+        .with_faults(faults)
+        .with_retries(max_task_retries);
     let res = exec.run_job_with_combiner(
         &cfg,
         input,
@@ -359,7 +363,18 @@ mod tests {
     fn job_matches_driver_side_matrix() {
         let es = entities(200);
         let bk: Arc<dyn BlockingKey> = Arc::new(TitlePrefixKey::new(2));
-        let job = bdm_job(partitioned_input(&es, 4), &bk, 4, 2, None, None, false, Exec::Serial);
+        let job = bdm_job(
+            partitioned_input(&es, 4),
+            &bk,
+            4,
+            2,
+            None,
+            None,
+            false,
+            None,
+            None,
+            Exec::Serial,
+        );
         let reference = Bdm::from_entities(&es, bk.as_ref(), 4);
         assert_eq!(job.bdm.keys, reference.keys);
         assert_eq!(job.bdm.key_starts, reference.key_starts);

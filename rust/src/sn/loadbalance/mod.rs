@@ -249,6 +249,8 @@ fn run_pipeline(
         cfg.sort_buffer_records,
         cfg.spill.as_ref().map(crate::sn::codec::bdm_job_spec),
         cfg.push,
+        cfg.faults.clone(),
+        cfg.max_task_retries,
         exec,
     );
     let matrix = Arc::new(analysis.bdm);

@@ -250,7 +250,9 @@ pub(super) fn run_job(
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records)
         .with_spill(cfg.spill.as_ref().map(crate::sn::codec::ranked_job_spec))
-        .with_push(cfg.push);
+        .with_push(cfg.push)
+        .with_faults(cfg.faults.clone())
+        .with_retries(cfg.max_task_retries);
     let mapper: Arc<dyn MapTaskFactory<u32, Arc<Entity>, SnKey, Ranked>> =
         Arc::new(PairRangeMapFactory {
             bdm,

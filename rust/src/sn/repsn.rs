@@ -220,7 +220,9 @@ fn job_parts(
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records)
         .with_spill(cfg.spill.as_ref().map(crate::sn::codec::entity_job_spec))
-        .with_push(cfg.push);
+        .with_push(cfg.push)
+        .with_faults(cfg.faults.clone())
+        .with_retries(cfg.max_task_retries);
     let mapper: Arc<dyn MapTaskFactory<(), Arc<Entity>, SnKey, Arc<Entity>>> =
         Arc::new(RepSnMapFactory {
             w: cfg.window,
@@ -359,6 +361,8 @@ mod tests {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         }
     }
 
@@ -397,6 +401,8 @@ mod tests {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let replicated = res.counters.get(counter_names::REPLICATED_ENTITIES);
@@ -431,6 +437,8 @@ mod tests {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 6);

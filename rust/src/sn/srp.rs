@@ -164,7 +164,9 @@ pub(crate) fn run_srp_job(
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records)
         .with_spill(cfg.spill.as_ref().map(crate::sn::codec::entity_job_spec))
-        .with_push(cfg.push);
+        .with_push(cfg.push)
+        .with_faults(cfg.faults.clone())
+        .with_retries(cfg.max_task_retries);
     exec.run_job(
         &job_cfg,
         input,
@@ -256,6 +258,8 @@ mod tests {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         };
         let res = run(&entities, &cfg).unwrap();
         assert_eq!(res.pairs.len(), 12);
@@ -287,6 +291,8 @@ mod tests {
             balance: Default::default(),
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 5);

@@ -89,7 +89,9 @@ pub fn run_on(entities: &[Entity], cfg: &SnConfig, exec: Exec<'_>) -> anyhow::Re
         .with_workers(cfg.workers)
         .with_sort_buffer(cfg.sort_buffer_records)
         .with_spill(cfg.spill.as_ref().map(crate::sn::codec::block_job_spec))
-        .with_push(cfg.push);
+        .with_push(cfg.push)
+        .with_faults(cfg.faults.clone())
+        .with_retries(cfg.max_task_retries);
     let res = exec.run_job(
         &job_cfg,
         input,

@@ -8,6 +8,7 @@ use crate::er::entity::{Entity, Pair, ScoredPair};
 use crate::er::strategy::MatchStrategyConfig;
 use crate::mapreduce::counters::Counters;
 use crate::mapreduce::engine::JobStats;
+use crate::mapreduce::fault::FaultPlan;
 use crate::mapreduce::sim::JobProfile;
 use crate::mapreduce::types::SizeEstimate;
 use crate::sn::loadbalance::BalanceStrategy;
@@ -166,6 +167,15 @@ pub struct SnConfig {
     /// serial executor is the barrier reference path and ignores it.
     /// Output is identical either way (`tests/prop_push.rs`).
     pub push: bool,
+    /// Fault-injection plan forwarded to every job the variant runs
+    /// ([`crate::mapreduce::JobConfig::faults`]) — the harness knob
+    /// behind `tests/prop_fault.rs`.  `None` (default) injects nothing.
+    pub faults: Option<FaultPlan>,
+    /// Per-job panicked-attempt retry budget
+    /// ([`crate::mapreduce::JobConfig::max_task_retries`]).  `None`
+    /// (default) defers to the scheduler-wide budget; the serial
+    /// executor stays fail-fast regardless.
+    pub max_task_retries: Option<u32>,
 }
 
 impl Default for SnConfig {
@@ -181,6 +191,8 @@ impl Default for SnConfig {
             balance: BalanceStrategy::None,
             spill: None,
             push: false,
+            faults: None,
+            max_task_retries: None,
         }
     }
 }
@@ -196,6 +208,8 @@ impl std::fmt::Debug for SnConfig {
             .field("balance", &self.balance)
             .field("spill", &self.spill)
             .field("push", &self.push)
+            .field("faults", &self.faults)
+            .field("max_task_retries", &self.max_task_retries)
             .finish()
     }
 }

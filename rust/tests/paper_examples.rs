@@ -56,6 +56,8 @@ fn fig_cfg(w: usize, m: usize) -> SnConfig {
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     }
 }
 

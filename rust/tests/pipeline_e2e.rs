@@ -39,6 +39,8 @@ fn sn_config(entities: &[Entity], w: usize) -> SnConfig {
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     }
 }
 

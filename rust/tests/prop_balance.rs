@@ -52,6 +52,8 @@ fn unbalanced_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> 
         balance: BalanceStrategy::None,
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     }
 }
 

@@ -1,0 +1,314 @@
+//! Fault-tolerance equivalence (ISSUE 6 acceptance).
+//!
+//! A seeded `FaultPlan` kills a random task attempt at a random point on
+//! every SN variant — barrier and push shuffle, in-memory and disk-backed
+//! — and the scheduler's bounded retry must reproduce the unfaulted
+//! serial output byte-identically.  Speculation composes with injected
+//! faults (no double-counted winners), exhausted retries dead-letter the
+//! split and complete the job as `Degraded`, and a killed job re-submitted
+//! with the same checkpoint manifest re-runs only the missing tasks.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use snmr::data::skew::zipf_skew_block_keys;
+use snmr::er::blockkey::TitlePrefixKey;
+use snmr::er::entity::Entity;
+use snmr::mapreduce::checkpoint::CheckpointSpec;
+use snmr::mapreduce::counters::names;
+use snmr::mapreduce::scheduler::{Exec, JobScheduler, PushMode, SchedulerConfig};
+use snmr::mapreduce::sortspill::{Codec, KeyValueCodec, U64Codec};
+use snmr::mapreduce::{
+    run_job, Counters, Emitter, FaultPlan, FnMapTask, FnReduceTask, HashPartitioner, JobConfig,
+    JobOutcome, TaskPhase, TempSpillDir, ValuesIter,
+};
+use snmr::sn::balance::pair_balanced_min_size;
+use snmr::sn::loadbalance::BalanceStrategy;
+use snmr::sn::types::{SnConfig, SnMode, SnResult, SnSpill};
+use snmr::sn::{jobsn, repsn, srp, standard_blocking};
+use snmr::util::prop::Cases;
+use snmr::util::rng::Rng;
+use snmr::{prop_assert, prop_assert_eq};
+
+/// Zipf block-key corpus (same shape as `prop_push`): skewed blocks so
+/// map tasks finish at staggered times and partitions fill unevenly.
+fn corpus(rng: &mut Rng, n: usize) -> Vec<Entity> {
+    let mut ids: Vec<u64> = (0..(2 * n) as u64).collect();
+    rng.shuffle(&mut ids);
+    let mut entities: Vec<Entity> = (0..n)
+        .map(|i| {
+            Entity::new(
+                ids[i],
+                &format!("xx parallel sorted neighborhood {i}"),
+                &"entity resolution with mapreduce ".repeat(2),
+            )
+        })
+        .collect();
+    zipf_skew_block_keys(&mut entities, rng.range(8, 40), 1.3, rng.next_u64());
+    entities
+}
+
+fn base_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConfig {
+    let bk = TitlePrefixKey::new(2);
+    let partitioner = pair_balanced_min_size(entities, &bk, r, w);
+    SnConfig {
+        window: w,
+        num_map_tasks: rng.range(2, 7),
+        workers: rng.range(1, 4),
+        partitioner: Arc::new(partitioner),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+        sort_buffer_records: Some(rng.range(8, 64)),
+        balance: BalanceStrategy::None,
+        spill: None,
+        push: false,
+        faults: None,
+        max_task_retries: None,
+    }
+}
+
+type VariantFn = fn(&[Entity], &SnConfig, Exec<'_>) -> anyhow::Result<SnResult>;
+
+/// Every SN variant behind one `(entities, cfg, exec)` signature.  The
+/// balanced strategies ride on `repsn::run_on`, which dispatches to the
+/// BDM two-job pipeline when `cfg.balance` is set.
+fn variants() -> Vec<(&'static str, VariantFn, BalanceStrategy)> {
+    vec![
+        ("standard_blocking", standard_blocking::run_on, BalanceStrategy::None),
+        ("srp", srp::run_on, BalanceStrategy::None),
+        ("jobsn", jobsn::run_on, BalanceStrategy::None),
+        ("repsn", repsn::run_on, BalanceStrategy::None),
+        ("blocksplit", repsn::run_on, BalanceStrategy::BlockSplit),
+        ("pairrange", repsn::run_on, BalanceStrategy::PairRange),
+    ]
+}
+
+/// The headline property: a seeded kill of a random task attempt on every
+/// SN variant — barrier and push, in-memory and disk-backed, speculation
+/// on or off — is absorbed by the retry budget and the output stays
+/// byte-identical to the unfaulted serial reference.
+#[test]
+fn prop_injected_kill_recovers_on_every_variant() {
+    Cases::new("retry == clean, every SN variant, barrier + push", 5).run(|rng| {
+        let n = rng.range(120, 300);
+        let w = rng.range(2, 7);
+        let entities = corpus(rng, n);
+        let base = base_config(rng, &entities, w, rng.range(4, 8));
+        let speculate = rng.below(2) == 0;
+        let barrier_sched =
+            JobScheduler::new(SchedulerConfig::slots(4).with_speculation(speculate));
+        let push_sched = JobScheduler::new(
+            SchedulerConfig::slots(4)
+                .with_push(PushMode::Push)
+                .with_speculation(speculate),
+        );
+        for (name, run, strategy) in variants() {
+            let clean_cfg = SnConfig {
+                balance: strategy,
+                ..base.clone()
+            };
+            let reference = run(&entities, &clean_cfg, Exec::Serial).map_err(|e| e.to_string())?;
+            // a random attempt killed at a random point: the seeded plan
+            // draws one task uniformly from the job's map + reduce ranges
+            let cfg = SnConfig {
+                faults: Some(FaultPlan::seeded(
+                    rng.next_u64(),
+                    clean_cfg.num_map_tasks,
+                    clean_cfg.partitioner.num_partitions(),
+                )),
+                max_task_retries: Some(2),
+                ..clean_cfg.clone()
+            };
+            let barrier =
+                run(&entities, &cfg, Exec::Scheduler(&barrier_sched)).map_err(|e| e.to_string())?;
+            prop_assert_eq!(barrier.pairs, reference.pairs);
+            prop_assert!(
+                barrier.counters.get(names::TASKS_FAILED) == 0,
+                "{name}: a task exhausted its retry budget on the barrier path"
+            );
+            let pushed =
+                run(&entities, &cfg, Exec::Scheduler(&push_sched)).map_err(|e| e.to_string())?;
+            prop_assert_eq!(pushed.pairs, reference.pairs);
+            prop_assert!(
+                pushed.counters.get(names::TASKS_FAILED) == 0,
+                "{name}: a task exhausted its retry budget on the push path"
+            );
+            // retracted and retried attempts never double-count committed
+            // runs (speculation composes)
+            prop_assert_eq!(
+                pushed.counters.get(names::PUSHED_RUNS),
+                pushed.counters.get(names::MAP_SPILL_RUNS)
+            );
+
+            // disk-backed: the retried attempt re-reads its retained run
+            // files; spill cleanup still holds after the job
+            let dir = TempSpillDir::new(&format!("fault-{name}")).map_err(|e| e.to_string())?;
+            let disk_cfg = SnConfig {
+                spill: Some(SnSpill::new(dir.path())),
+                ..cfg.clone()
+            };
+            let disk = run(&entities, &disk_cfg, Exec::Scheduler(&push_sched))
+                .map_err(|e| e.to_string())?;
+            prop_assert_eq!(disk.pairs, reference.pairs);
+            prop_assert!(
+                disk.counters.get(names::SPILLED_RUNS) > 0,
+                "{name}: disk-backed faulted run wrote no run files"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The injection really fires: killing map task 0's first attempt (which
+/// every job has) costs exactly one resubmission per job, and the serial
+/// executor stays the fail-fast reference.
+#[test]
+fn injected_panic_fires_and_is_absorbed_by_one_retry() {
+    let mut rng = Rng::new(0xfa17);
+    let entities = corpus(&mut rng, 200);
+    let clean_cfg = base_config(&mut rng, &entities, 4, 5);
+    let reference = repsn::run_on(&entities, &clean_cfg, Exec::Serial).unwrap();
+    let cfg = SnConfig {
+        faults: Some(FaultPlan::new().panic_map(0, 0)),
+        max_task_retries: Some(1),
+        ..clean_cfg
+    };
+    let sched = JobScheduler::with_slots(4);
+    let res = repsn::run_on(&entities, &cfg, Exec::Scheduler(&sched)).unwrap();
+    assert_eq!(res.pairs, reference.pairs);
+    assert_eq!(res.counters.get(names::TASK_RETRIES), 1);
+    assert_eq!(res.counters.get(names::TASKS_FAILED), 0);
+    assert_eq!(res.stats[0].task_retries, 1);
+    // the serial executor ignores the retry budget: injected faults kill
+    // it outright, keeping it the trustworthy unfaulted reference
+    let serial = catch_unwind(AssertUnwindSafe(|| {
+        repsn::run_on(&entities, &cfg, Exec::Serial)
+    }));
+    assert!(serial.is_err(), "serial path must stay fail-fast");
+}
+
+/// Shared engine-level fixture: a u64 histogram job with enough input to
+/// give every map task a non-empty split.
+#[allow(clippy::type_complexity)]
+fn histogram_job(
+    n: u64,
+    r: u64,
+) -> (
+    Vec<((), u64)>,
+    Arc<FnMapTask<impl Fn((), u64, &mut Emitter<u64, u64>, &Counters)>>,
+    Arc<FnReduceTask<impl Fn(&u64, ValuesIter<'_, u64>, &mut Emitter<u64, u64>, &Counters)>>,
+) {
+    let input: Vec<((), u64)> = (0..n).map(|i| ((), i)).collect();
+    let mapper = Arc::new(FnMapTask::new(
+        move |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+            out.emit(v % r, 1);
+        },
+    ));
+    let reducer = Arc::new(FnReduceTask::new(
+        |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+            out.emit(*k, vals.map(|v| *v).sum());
+        },
+    ));
+    (input, mapper, reducer)
+}
+
+/// Exhausted retries with the dead-letter queue enabled: the job completes
+/// `Degraded` with the poisoned split recorded, instead of panicking —
+/// asserted through the public counters and stats.
+#[test]
+fn exhausted_retries_dead_letter_the_split_and_degrade() {
+    let (input, mapper, reducer) = histogram_job(600, 3);
+    let cfg = JobConfig::named("dlq")
+        .with_tasks(4, 3)
+        .with_faults(Some(FaultPlan::new().panic_map(1, 0).panic_map(1, 1)))
+        .with_retries(Some(1))
+        .with_dead_letter(true);
+    let sched = JobScheduler::with_slots(3);
+    let res = sched.run(
+        &cfg,
+        input,
+        mapper,
+        Arc::new(HashPartitioner::new(|k: &u64| *k)),
+        Arc::new(|a: &u64, b: &u64| a == b),
+        reducer,
+    );
+    assert_eq!(res.outcome, JobOutcome::Degraded);
+    assert_eq!(res.counters.get(names::DEAD_LETTERED), 1);
+    assert_eq!(res.counters.get(names::TASKS_FAILED), 1);
+    assert_eq!(res.counters.get(names::TASK_RETRIES), 1);
+    assert_eq!(res.stats.dead_letters.len(), 1);
+    let dl = &res.stats.dead_letters[0];
+    assert_eq!(dl.phase, TaskPhase::Map);
+    assert_eq!(dl.task, 1);
+    assert_eq!(dl.records, 150, "the dead letter records its lost split");
+    // partial output: the three surviving splits' records are all there
+    let total: u64 = res.outputs.iter().flatten().map(|(_, v)| v).sum();
+    assert_eq!(total, 450);
+}
+
+/// A killed-then-resumed job re-runs only the tasks absent from the
+/// checkpoint manifest: all committed map tasks restore (counted by
+/// `TASKS_RESUMED`), the output matches the clean run, and the manifest
+/// retires on success.
+#[test]
+fn killed_job_resumes_only_missing_tasks() {
+    let (input, mapper, reducer) = histogram_job(600, 3);
+    let dir = TempSpillDir::new("prop-fault-ckpt").unwrap();
+    let codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+    let out_codec: Arc<dyn Codec<(u64, u64)>> = Arc::new(KeyValueCodec::new(U64Codec, U64Codec));
+    let spec = CheckpointSpec::new::<(u64, u64)>(dir.path(), codec)
+        .with_output_codec::<(u64, u64)>(out_codec);
+    let cfg = JobConfig::named("resume")
+        .with_tasks(4, 3)
+        .with_checkpoint(Some(spec.clone()));
+    let clean = run_job(
+        &cfg.clone().with_workers(2),
+        input.clone(),
+        mapper.clone(),
+        Arc::new(HashPartitioner::new(|k: &u64| *k)),
+        Arc::new(|a: &u64, b: &u64| a == b),
+        reducer.clone(),
+    );
+    let sched = JobScheduler::with_slots(3);
+    // run 1: the map wave commits to the manifest, then a poisoned reduce
+    // task kills the fail-fast job
+    let killed = catch_unwind(AssertUnwindSafe(|| {
+        sched.run(
+            &cfg.clone()
+                .with_faults(Some(FaultPlan::new().panic_reduce(0, 0))),
+            input.clone(),
+            mapper.clone(),
+            Arc::new(HashPartitioner::new(|k: &u64| *k)),
+            Arc::new(|a: &u64, b: &u64| a == b),
+            reducer.clone(),
+        )
+    }));
+    assert!(killed.is_err(), "fail-fast job should panic");
+    assert!(spec.manifest_path().exists(), "manifest must survive the kill");
+    // run 2: same job, no faults — only the tasks absent from the
+    // manifest execute; the 4 committed map tasks restore
+    let resumed = sched.run(
+        &cfg,
+        input,
+        mapper,
+        Arc::new(HashPartitioner::new(|k: &u64| *k)),
+        Arc::new(|a: &u64, b: &u64| a == b),
+        reducer,
+    );
+    assert_eq!(resumed.outputs, clean.outputs);
+    assert_eq!(resumed.outcome, JobOutcome::Ok);
+    assert!(
+        resumed.counters.get(names::TASKS_RESUMED) >= 4,
+        "the 4 checkpointed map tasks (and any committed reduces) restore, got {}",
+        resumed.counters.get(names::TASKS_RESUMED)
+    );
+    assert_eq!(
+        resumed.counters.get(names::MAP_OUTPUT_RECORDS),
+        0,
+        "no map task re-executed on resume"
+    );
+    assert!(
+        !spec.manifest_path().exists(),
+        "clean finish must retire the manifest"
+    );
+}

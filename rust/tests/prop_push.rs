@@ -60,6 +60,8 @@ fn base_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConf
         balance: BalanceStrategy::None,
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     }
 }
 

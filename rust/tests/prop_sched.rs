@@ -49,6 +49,8 @@ fn random_config(rng: &mut Rng, entities: &[Entity]) -> SnConfig {
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     }
 }
 

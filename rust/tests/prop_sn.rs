@@ -49,6 +49,8 @@ fn config(
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     }
 }
 

@@ -155,6 +155,8 @@ fn end_to_end_repsn_with_xla_matcher_matches_native_decisions() {
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     };
     let res_native = snmr::sn::repsn::run(
         &corpus.entities,

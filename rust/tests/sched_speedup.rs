@@ -53,6 +53,8 @@ fn multipass_concurrency_speedup_over_serial() {
         balance: Default::default(),
         spill: None,
         push: false,
+        faults: None,
+        max_task_retries: None,
     };
     let keys: Vec<Arc<dyn BlockingKey>> = vec![
         Arc::new(TitlePrefixKey::new(1)),
