@@ -101,6 +101,7 @@ fn main() -> anyhow::Result<()> {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     };
     let truth = corpus.truth_pairs();
     let mut table = Table::new(

@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     };
     let keys: Vec<Arc<dyn BlockingKey>> = vec![
         Arc::new(TitlePrefixKey::new(2)),

@@ -52,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     };
     let t0 = std::time::Instant::now();
     let result = repsn::run(&corpus.entities, &cfg)?;

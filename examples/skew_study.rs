@@ -46,8 +46,17 @@
 //! completion (`overlap_secs > 0`) on every ladder row — the push smoke
 //! test CI runs.
 //!
+//! With `--trace DIR`, every ladder row records the full task-event
+//! stream (`mapreduce::trace`): per row, the raw events land in
+//! `DIR/<row>.trace.jsonl`, the reconstructed per-slot timeline in
+//! `DIR/<row>.timeline.json`, the rendered Gantt in `DIR/<row>.gantt.txt`,
+//! and a simulated-vs-measured drift report in `DIR/<row>.drift.json` —
+//! the trace smoke test CI runs.  The last row's Gantt and drift table are
+//! printed.
+//!
 //! ```bash
 //! cargo run --release --example skew_study -- --n 20000
+//! cargo run --release --example skew_study -- --n 2000 --window 20 --trace /tmp/skew-traces
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --speculative
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --balance blocksplit
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --sort-buffer 64
@@ -63,9 +72,12 @@ use snmr::data::skew::{skew_to_last_partition, zipf_skew_block_keys};
 use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
 use snmr::mapreduce::counters::names;
 use snmr::mapreduce::scheduler::{Exec, JobScheduler, PushMode, SchedulerConfig};
-use snmr::mapreduce::sim::{simulate_job, simulate_job_chain, simulate_job_overlap, ClusterSpec};
-use snmr::mapreduce::{FaultPlan, TempSpillDir};
+use snmr::mapreduce::sim::{
+    drift_report, simulate_job, simulate_job_chain, simulate_job_overlap, ClusterSpec,
+};
+use snmr::mapreduce::{FaultPlan, TempSpillDir, TraceSpec};
 use snmr::metrics::report::{write_report, Table};
+use snmr::metrics::timeline::JobTimeline;
 use snmr::sn::balance::{balanced_from_histogram, key_histogram_job, pair_balanced_min_size};
 use snmr::sn::loadbalance::{counter_names as balance_counters, reduce_pair_skew, BalanceStrategy};
 use snmr::sn::partition::{gini, partition_sizes, EvenPartition, PartitionFn};
@@ -116,6 +128,11 @@ fn main() -> anyhow::Result<()> {
                 "sort-buffer",
                 "also re-run the ladder disk-backed + compressed with this sort budget",
             ),
+            flag(
+                "trace",
+                "record task-event traces: per ladder row, write <row>.trace.jsonl, \
+                 <row>.timeline.json, <row>.gantt.txt and <row>.drift.json into this directory",
+            ),
         ],
         false,
     )
@@ -129,6 +146,10 @@ fn main() -> anyhow::Result<()> {
         None => None,
         Some(_) => Some(args.get_usize("sort-buffer", 64).map_err(anyhow::Error::msg)?),
     };
+    let trace_dir = args.get("trace").map(std::path::PathBuf::from);
+    if let Some(dir) = &trace_dir {
+        std::fs::create_dir_all(dir)?;
+    }
     let balance = match args.get("balance") {
         None => None,
         Some(s) => Some(
@@ -193,6 +214,7 @@ fn main() -> anyhow::Result<()> {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     };
 
     let mut table = Table::new(
@@ -201,10 +223,14 @@ fn main() -> anyhow::Result<()> {
     );
     let mut digests = Vec::new();
     let mut serial_profiles = Vec::new();
-    for (name, p, entities) in &configs {
+    let last_row = configs.len() - 1;
+    for (row, (name, p, entities)) in configs.iter().enumerate() {
         let sizes = partition_sizes(entities.iter().map(|e| bk.key(e)), p.as_ref());
         let g = gini(&sizes);
-        let cfg = sn_cfg(p);
+        let mut cfg = sn_cfg(p);
+        // one fresh sink per row, so each JSONL artifact is self-contained
+        let spec = trace_dir.as_ref().map(|_| TraceSpec::new());
+        cfg.trace = spec.clone();
         let t0 = Instant::now();
         let res = repsn::run(entities, &cfg)?;
         let wall = t0.elapsed().as_secs_f64();
@@ -216,6 +242,42 @@ fn main() -> anyhow::Result<()> {
             format!("{wall:.2}"),
             format!("{sim8:.1}"),
         ]);
+        if let (Some(dir), Some(spec)) = (&trace_dir, &spec) {
+            let records = spec.drain();
+            std::fs::write(
+                dir.join(format!("{name}.trace.jsonl")),
+                TraceSpec::to_jsonl(&records),
+            )?;
+            let timelines: Vec<JobTimeline> = JobTimeline::jobs(&records)
+                .iter()
+                .map(|j| JobTimeline::from_records(j, &records))
+                .collect();
+            let tl_json = Json::obj(vec![
+                ("row", Json::str(name.as_str())),
+                (
+                    "jobs",
+                    Json::Arr(timelines.iter().map(JobTimeline::to_json).collect()),
+                ),
+            ]);
+            std::fs::write(dir.join(format!("{name}.timeline.json")), tl_json.to_string())?;
+            let gantt: String = timelines.iter().map(|t| t.render_gantt(72)).collect();
+            std::fs::write(dir.join(format!("{name}.gantt.txt")), &gantt)?;
+            // drift: measured workers=1 stats vs the same profile simulated
+            // on a matching 1-slot cluster — cost-model error, not
+            // parallelism mismatch
+            let drift = drift_report(
+                &res.stats[0],
+                res.profiles[0].map_output_bytes,
+                &ClusterSpec::paper_like(1),
+            );
+            std::fs::write(dir.join(format!("{name}.drift.json")), drift.to_json())?;
+            if row == last_row {
+                println!("--- {name}: reconstructed timeline ---");
+                print!("{gantt}");
+                print!("{}", drift.render());
+                println!("trace artifacts for all rows in {}\n", dir.display());
+            }
+        }
         digests.push(pair_digest(&res));
         serial_profiles.push(res.profiles.clone());
     }
@@ -434,6 +496,7 @@ fn main() -> anyhow::Result<()> {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         };
         let unbalanced = repsn::run(&bal_entities, &cfg(BalanceStrategy::None))?;
         let (unb_max, unb_total) = reduce_pair_skew(&unbalanced.stats[0]);

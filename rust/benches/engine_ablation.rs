@@ -14,7 +14,9 @@ use snmr::mapreduce::counters::names;
 use snmr::mapreduce::scheduler::{JobScheduler, PushMode, SchedulerConfig};
 use snmr::mapreduce::seqfile;
 use snmr::mapreduce::shuffle::{merge_sorted_runs, MergeIter};
-use snmr::mapreduce::sim::{simulate_job, simulate_job_overlap, ClusterSpec, JobProfile};
+use snmr::mapreduce::sim::{
+    drift_report, simulate_job, simulate_job_overlap, ClusterSpec, JobProfile, SimShuffleMode,
+};
 use snmr::mapreduce::sortspill::{Codec, SpillSpec, StringPairCodec, TempSpillDir};
 use snmr::mapreduce::{
     run_job, run_job_with_combiner, Counters, Emitter, FnCombiner, FnMapTask, FnReduceTask,
@@ -432,6 +434,22 @@ fn main() -> anyhow::Result<()> {
         ),
     );
 
+    // sim-vs-measured drift: replay the measured 4-slot push run through
+    // the simulator on a matching spec and report per-wave deltas
+    let drift = drift_report(
+        &push_run.stats,
+        push_run.counters.get(names::MAP_OUTPUT_BYTES),
+        &ClusterSpec::paper_like(4),
+    );
+    println!("{}", drift.render());
+    push(
+        &mut table,
+        &mut rows,
+        "sim-drift",
+        "max per-wave drift (4-slot push run)",
+        format!("{:.3}", drift.max_drift_frac()),
+    );
+
     println!("{}", table.render());
     let path = write_report("engine_ablation", &Json::Arr(rows))?;
     eprintln!("report written to {}", path.display());
@@ -477,6 +495,41 @@ fn main() -> anyhow::Result<()> {
                 ("measured_barrier_wall_s", Json::num(barrier_wall)),
                 ("measured_push_wall_s", Json::num(push_wall)),
                 ("identical_output", Json::Bool(true)),
+            ]),
+        ),
+        (
+            "sim_drift",
+            Json::obj(vec![
+                // `complete` is the bench_check.py invariant hook
+                ("complete", Json::Bool(true)),
+                (
+                    "mode",
+                    Json::str(match drift.mode {
+                        SimShuffleMode::TwoWave => "two_wave",
+                        SimShuffleMode::Overlap => "overlap",
+                    }),
+                ),
+                ("measured_total_s", Json::num(drift.measured_total_s)),
+                ("simulated_total_s", Json::num(drift.simulated_total_s)),
+                ("max_drift_frac", Json::num(drift.max_drift_frac())),
+                (
+                    "waves",
+                    Json::Arr(
+                        drift
+                            .waves
+                            .iter()
+                            .map(|w| {
+                                Json::obj(vec![
+                                    ("wave", Json::str(w.wave)),
+                                    ("measured_s", Json::num(w.measured_s)),
+                                    ("simulated_s", Json::num(w.simulated_s)),
+                                    ("delta_s", Json::num(w.delta_s())),
+                                    ("drift_frac", Json::num(w.drift_frac())),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
         ),
     ]);

@@ -81,6 +81,7 @@ fn main() -> anyhow::Result<()> {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         };
         eprintln!("w={w}: running RepSN...");
         let t0 = std::time::Instant::now();

@@ -136,6 +136,7 @@ fn main() -> anyhow::Result<()> {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         };
         eprintln!("running RepSN with {name} (g={g:.2})...");
         let res = repsn::run(entities, &cfg)?;
@@ -190,6 +191,7 @@ fn main() -> anyhow::Result<()> {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     };
     let zipf_res = repsn::run(&zipf_entities, &zipf_cfg)?;
     let mut t_spec = Table::new(
@@ -260,6 +262,7 @@ fn main() -> anyhow::Result<()> {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     };
     eprintln!("running multipass: serial baseline...");
     let t0 = Instant::now();
@@ -346,6 +349,7 @@ fn main() -> anyhow::Result<()> {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     };
     let cluster8 = ClusterSpec::paper_like(8);
     let mut t_bal = Table::new(

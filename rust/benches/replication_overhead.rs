@@ -68,6 +68,7 @@ fn main() -> anyhow::Result<()> {
                 push: false,
                 faults: None,
                 max_task_retries: None,
+                trace: None,
             };
             let srp_res = srp::run(&corpus.entities, &cfg)?;
             let rep_res = repsn::run(&corpus.entities, &cfg)?;

@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
                 push: false,
                 faults: None,
                 max_task_retries: None,
+                trace: None,
             };
             let seq_pairs = seq::run_blocking(&corpus.entities, &bk, w).len();
             let srp_pairs = srp::run(&corpus.entities, &cfg)?.pair_set().len();

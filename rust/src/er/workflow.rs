@@ -174,6 +174,7 @@ mod tests {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         }
     }
 

@@ -211,6 +211,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {
@@ -269,6 +270,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {

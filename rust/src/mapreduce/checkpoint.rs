@@ -27,6 +27,16 @@
 //! never checkpoint its output.  The manifest itself is JSON through
 //! [`crate::util::json`] (no serde offline), written atomically
 //! (tmp + rename) after every commit.
+//!
+//! With [tracing](crate::mapreduce::trace) attached, each manifest commit
+//! emits [`TraceEvent::CheckpointCommit`] and each manifest-restored task
+//! emits [`TraceEvent::CheckpointRestore`] (stamped at attempt ordinal 0
+//! — the winning attempt number is not known at the commit hook), so a
+//! resumed job's timeline shows which tasks were replayed from disk
+//! rather than executed.
+//!
+//! [`TraceEvent::CheckpointCommit`]: crate::mapreduce::trace::TraceEvent::CheckpointCommit
+//! [`TraceEvent::CheckpointRestore`]: crate::mapreduce::trace::TraceEvent::CheckpointRestore
 
 use std::any::Any;
 use std::collections::BTreeMap;

@@ -3,6 +3,7 @@
 use super::checkpoint::CheckpointSpec;
 use super::fault::FaultPlan;
 use super::sortspill::SpillSpec;
+use super::trace::TraceSpec;
 
 /// Configuration for one MapReduce job, mirroring the Hadoop knobs the
 //  paper sets in §5.1.
@@ -84,6 +85,14 @@ pub struct JobConfig {
     /// tasks from the manifest instead of re-running them.  `None`
     /// (default) checkpoints nothing.
     pub checkpoint: Option<CheckpointSpec>,
+    /// Structured task-event tracing (see
+    /// [`trace`](crate::mapreduce::trace)).  When set, every execution
+    /// path — serial driver, barrier scheduler, push scheduler — records
+    /// typed per-attempt lifecycle events into the spec's shared sink;
+    /// drain it after the run for timelines
+    /// ([`crate::metrics::timeline`]) or a JSONL artifact.  `None`
+    /// (default) records nothing and allocates nothing.
+    pub trace: Option<TraceSpec>,
 }
 
 impl Default for JobConfig {
@@ -104,6 +113,7 @@ impl Default for JobConfig {
             max_task_retries: None,
             dead_letter: false,
             checkpoint: None,
+            trace: None,
         }
     }
 }
@@ -175,6 +185,13 @@ impl JobConfig {
         self.checkpoint = ckpt;
         self
     }
+
+    /// Attach (or clear) a task-event trace sink (see
+    /// [`JobConfig::trace`]).
+    pub fn with_trace(mut self, trace: Option<TraceSpec>) -> Self {
+        self.trace = trace;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -241,5 +258,15 @@ mod tests {
         assert!(c.dead_letter);
         let c = c.with_faults(Some(FaultPlan::new()));
         assert!(c.faults.is_none(), "empty plans normalize to None");
+    }
+
+    #[test]
+    fn trace_builder_round_trips() {
+        let c = JobConfig::default();
+        assert!(c.trace.is_none(), "tracing defaults off");
+        let spec = TraceSpec::new();
+        let c = c.with_trace(Some(spec.clone()));
+        assert!(c.trace.is_some());
+        assert!(c.with_trace(None).trace.is_none());
     }
 }

@@ -6,14 +6,25 @@
 //! RepSN's replicated entities ≤ `m·(r-1)·(w-1)`).
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
-/// Thread-safe named counters.  Increment cost is one mutex acquisition;
-/// hot loops should accumulate locally and `add` once per task (the SN
-/// reducers do).
+/// Registry shards: counter names hash onto independent locks so
+/// unrelated counters never contend on registration lookups.
+const SHARDS: usize = 8;
+
+/// Thread-safe named counters.
+///
+/// Internally sharded atomics: each counter is an `AtomicU64` cell held in
+/// one of [`SHARDS`] name-hashed registries.  An increment is a shared
+/// (read) lock on the owning shard plus one `fetch_add` — the exclusive
+/// lock is taken only the first time a name is seen.  Hot loops may still
+/// accumulate locally and `add` once per task (the SN reducers do), but the
+/// per-increment cost no longer serializes every worker through a single
+/// mutex the way the original `Mutex<BTreeMap>` implementation did.
 #[derive(Debug, Default)]
 pub struct Counters {
-    inner: Mutex<BTreeMap<String, u64>>,
+    shards: [RwLock<BTreeMap<String, Arc<AtomicU64>>>; SHARDS],
 }
 
 /// Well-known counter names used by the engine itself.
@@ -86,15 +97,36 @@ pub mod names {
     pub const TASKS_RESUMED: &str = "engine.tasks_resumed";
 }
 
+/// FNV-1a — the crate's standard cheap string hash; picks the shard.
+fn shard_of(name: &str) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % SHARDS as u64) as usize
+}
+
 impl Counters {
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// The atomic cell for `name`, creating it at 0 on first touch.  The
+    /// fast path is a shared lock + map lookup; the exclusive lock runs
+    /// once per distinct name per shard.
+    fn cell(&self, name: &str) -> Arc<AtomicU64> {
+        let shard = &self.shards[shard_of(name)];
+        if let Some(c) = shard.read().unwrap().get(name) {
+            return Arc::clone(c);
+        }
+        let mut m = shard.write().unwrap();
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
     /// Add `delta` to counter `name` (creates it at 0 first).
     pub fn add(&self, name: &str, delta: u64) {
-        let mut m = self.inner.lock().unwrap();
-        *m.entry(name.to_string()).or_insert(0) += delta;
+        self.cell(name).fetch_add(delta, Ordering::Relaxed);
     }
 
     /// Increment by one.
@@ -104,25 +136,32 @@ impl Counters {
 
     /// Current value (0 if never touched).
     pub fn get(&self, name: &str) -> u64 {
-        self.inner.lock().unwrap().get(name).copied().unwrap_or(0)
+        let shard = &self.shards[shard_of(name)];
+        shard
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     /// Snapshot of all counters, sorted by name.
     pub fn snapshot(&self) -> Vec<(String, u64)> {
-        self.inner
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, v)| (k.clone(), *v))
-            .collect()
+        let mut all = BTreeMap::new();
+        for shard in &self.shards {
+            for (k, v) in shard.read().unwrap().iter() {
+                all.insert(k.clone(), v.load(Ordering::Relaxed));
+            }
+        }
+        all.into_iter().collect()
     }
 
-    /// Merge another counter set into this one.
+    /// Merge another counter set into this one.  Zero-valued entries are
+    /// carried over too, so the merged snapshot lists every name the
+    /// source ever touched.
     pub fn merge(&self, other: &Counters) {
-        let other = other.inner.lock().unwrap();
-        let mut m = self.inner.lock().unwrap();
-        for (k, v) in other.iter() {
-            *m.entry(k.clone()).or_insert(0) += *v;
+        for (k, v) in other.snapshot() {
+            self.add(&k, v);
         }
     }
 
@@ -144,7 +183,6 @@ impl Counters {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
 
     #[test]
     fn add_get_inc() {
@@ -174,6 +212,29 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_distinct_names_land_in_shards_exactly() {
+        let c = Arc::new(Counters::new());
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                let name = format!("counter.{t}");
+                for _ in 0..500 {
+                    c.inc(&name);
+                    c.inc("shared");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for t in 0..8 {
+            assert_eq!(c.get(&format!("counter.{t}")), 500);
+        }
+        assert_eq!(c.get("shared"), 4000);
+    }
+
+    #[test]
     fn merge_sums() {
         let a = Counters::new();
         let b = Counters::new();
@@ -186,12 +247,24 @@ mod tests {
     }
 
     #[test]
+    fn merge_carries_zero_entries() {
+        let a = Counters::new();
+        let b = Counters::new();
+        b.add("touched_at_zero", 0);
+        a.merge(&b);
+        let names: Vec<String> = a.snapshot().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(names, vec!["touched_at_zero".to_string()]);
+        assert_eq!(a.get("touched_at_zero"), 0);
+    }
+
+    #[test]
     fn snapshot_sorted() {
         let c = Counters::new();
         c.add("z", 1);
         c.add("a", 2);
+        c.add("m", 3);
         let snap = c.snapshot();
-        assert_eq!(snap[0].0, "a");
-        assert_eq!(snap[1].0, "z");
+        let names: Vec<&str> = snap.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(names, vec!["a", "m", "z"]);
     }
 }

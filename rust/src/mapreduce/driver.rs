@@ -21,6 +21,7 @@ use super::engine::{
     JobStats, MapTaskOutput, ReduceTaskOutput,
 };
 use super::sortspill::Run;
+use super::trace::{JobTraceCtx, TraceEvent};
 
 /// Fold a finished map wave into `stats` and the job counters, and
 /// transpose run ownership for the reduce side.  Shared by the barrier
@@ -38,15 +39,41 @@ pub(crate) fn record_map_phase<KT, VT>(
     compressed_spill: bool,
 ) -> Vec<Vec<Run<(KT, VT)>>> {
     stats.map_task_secs = map_outputs.iter().map(|o| o.secs).collect();
+    for s in &stats.map_task_secs {
+        stats.map_task_us_hist.record((s * 1e6) as u64);
+    }
     stats.map_output_records = record_map_wave(counters, &map_outputs, has_combiner);
     stats.spill_bytes_written = map_outputs.iter().map(|o| o.spill_file_bytes).sum();
     let (per_reducer_runs, shuffle_bytes, shuffle_bytes_raw) = transpose_runs(map_outputs, r);
     counters.add(names::SHUFFLE_BYTES, shuffle_bytes.iter().sum());
     counters.add(names::SHUFFLE_BYTES_RAW, shuffle_bytes_raw.iter().sum());
+    for b in &shuffle_bytes {
+        stats.shuffle_bytes_hist.record(*b);
+    }
     stats.shuffle_bytes_per_reducer = shuffle_bytes;
     stats.shuffle_bytes_raw = shuffle_bytes_raw.iter().sum();
     stats.intermediate_compressed = compressed_spill && stats.spill_bytes_written > 0;
     per_reducer_runs
+}
+
+/// Fold a finished reduce wave into `stats` and the job counters —
+/// per-task timings, output-record skew vector, and the runtime/size
+/// histograms — shared by the barrier driver below and the scheduler's
+/// push path.
+pub(crate) fn record_reduce_phase<KO, VO>(
+    stats: &mut JobStats,
+    counters: &Counters,
+    red_outputs: &[ReduceTaskOutput<KO, VO>],
+) {
+    stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
+    stats.reduce_task_output_records = red_outputs.iter().map(|o| o.output.len() as u64).collect();
+    for s in &stats.reduce_task_secs {
+        stats.reduce_task_us_hist.record((s * 1e6) as u64);
+    }
+    for n in &stats.reduce_task_output_records {
+        stats.reduce_records_hist.record(*n);
+    }
+    stats.reduce_output_records = record_reduce_wave(counters, red_outputs);
 }
 
 /// Drive one barrier job: `map_wave` executes every split into a
@@ -61,6 +88,7 @@ pub(crate) fn drive_barrier_job<KI, VI, KT, VT, KO, VO, MW, RW>(
     has_combiner: bool,
     map_wave: MW,
     reduce_wave: RW,
+    trace: Option<JobTraceCtx>,
 ) -> JobResult<KO, VO>
 where
     MW: FnOnce(Vec<Vec<(KI, VI)>>) -> Vec<MapTaskOutput<KT, VT>>,
@@ -84,6 +112,11 @@ where
         map_wave_done_secs: t_start.elapsed().as_secs_f64(),
         ..Default::default()
     };
+    // Stamp the trace with the *same* f64 the stats carry, so metrics
+    // derived from the event stream equal the stats fields bit-for-bit.
+    if let Some(t) = &trace {
+        t.emit_job_at(TraceEvent::MapWaveDone, stats.map_wave_done_secs);
+    }
 
     // ---- shuffle -----------------------------------------------------------
     // Transpose run ownership only — the k-way merge itself streams inside
@@ -99,13 +132,17 @@ where
     // what makes it positive).
     let t_reduce = Instant::now();
     stats.reduce_first_start_secs = t_start.elapsed().as_secs_f64();
+    if let Some(t) = &trace {
+        t.emit_job_at(TraceEvent::ReduceFirstStart, stats.reduce_first_start_secs);
+    }
     let red_outputs = reduce_wave(per_reducer_runs);
     stats.reduce_phase_secs = t_reduce.elapsed().as_secs_f64();
-    stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
-    stats.reduce_task_output_records = red_outputs.iter().map(|o| o.output.len() as u64).collect();
-    stats.reduce_output_records = record_reduce_wave(counters, &red_outputs);
+    record_reduce_phase(&mut stats, counters, &red_outputs);
     let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
     stats.total_secs = t_start.elapsed().as_secs_f64();
+    if let Some(t) = &trace {
+        t.emit_job_at(TraceEvent::JobFinished, stats.total_secs);
+    }
 
     // ---- fault-tolerance accounting ---------------------------------------
     // Both wave executors report retries/failures through the job counters

@@ -32,9 +32,11 @@ use super::push::PushAttempt;
 use super::shuffle::MergeIter;
 use super::sortspill::{ResolvedSpill, Run, RunRecords, RunSorter};
 use super::splits::even_splits;
+use super::trace::{TaskTraceCtx, TraceEvent, TracePhase};
 use super::types::{
     Emitter, MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate, ValuesIter,
 };
+use crate::metrics::histogram::Histogram;
 use crate::util::threadpool::run_owned;
 
 /// Grouping comparator: `true` if two (adjacent, sort-ordered) keys belong
@@ -105,6 +107,18 @@ pub struct JobStats {
     /// Always 0 on the barrier paths — a positive value is the direct
     /// evidence the push shuffle removed the map→reduce barrier.
     pub overlap_secs: f64,
+    /// Per-task runtime distribution over the map wave, in microseconds
+    /// (log2-bucketed; same samples as [`JobStats::map_task_secs`]).
+    pub map_task_us_hist: Histogram,
+    /// Per-task runtime distribution over the reduce wave, in
+    /// microseconds.
+    pub reduce_task_us_hist: Histogram,
+    /// Distribution of intermediate bytes per reduce partition (same
+    /// samples as [`JobStats::shuffle_bytes_per_reducer`]).
+    pub shuffle_bytes_hist: Histogram,
+    /// Distribution of output records per reduce task — the reduce-side
+    /// skew signal in histogram form.
+    pub reduce_records_hist: Histogram,
     /// Task attempts resubmitted after a panic (`TASK_RETRIES`).
     pub task_retries: u64,
     /// Tasks whose every attempt panicked (`TASKS_FAILED`).
@@ -252,6 +266,7 @@ where
     spill: Option<&'a ResolvedSpill<(KT, VT)>>,
     combine_fn: Option<&'a CombineFn<KT, VT>>,
     push: Option<&'a PushAttempt<(KT, VT)>>,
+    trace: Option<&'a TaskTraceCtx>,
     bucket_runs: Vec<Vec<Run<(KT, VT)>>>,
     bucket_bytes: Vec<u64>,
     bucket_raw_bytes: Vec<u64>,
@@ -273,11 +288,13 @@ where
         spill: Option<&'a ResolvedSpill<(KT, VT)>>,
         combine_fn: Option<&'a CombineFn<KT, VT>>,
         push: Option<&'a PushAttempt<(KT, VT)>>,
+        trace: Option<&'a TaskTraceCtx>,
     ) -> Self {
         Self {
             spill,
             combine_fn,
             push,
+            trace,
             bucket_runs: (0..r).map(|_| Vec::new()).collect(),
             bucket_bytes: vec![0; r],
             bucket_raw_bytes: vec![0; r],
@@ -320,6 +337,12 @@ where
             .sum();
         self.bucket_raw_bytes[b] += raw;
         self.spilled += run.len() as u64;
+        if let Some(t) = self.trace {
+            t.emit(TraceEvent::RunSealed {
+                partition: b,
+                records: run.len() as u64,
+            });
+        }
         let sealed = match self.spill {
             None => {
                 self.bucket_bytes[b] += raw;
@@ -332,6 +355,13 @@ where
                 self.spill_file_runs += 1;
                 self.spill_file_bytes += rf.file_bytes();
                 self.bucket_bytes[b] += rf.file_bytes();
+                if let Some(t) = self.trace {
+                    t.emit(TraceEvent::SpillWritten {
+                        partition: b,
+                        records: rf.records(),
+                        file_bytes: rf.file_bytes(),
+                    });
+                }
                 Run::Spilled(rf)
             }
         };
@@ -377,6 +407,7 @@ pub(crate) fn exec_map_task<KI, VI, KT, VT>(
     combine_fn: Option<&CombineFn<KT, VT>>,
     counters: &Counters,
     push: Option<&PushAttempt<(KT, VT)>>,
+    trace: Option<&TaskTraceCtx>,
 ) -> MapTaskOutput<KT, VT>
 where
     KT: Ord + SizeEstimate,
@@ -387,7 +418,7 @@ where
     let mut sorters: Vec<_> = (0..r)
         .map(|_| RunSorter::new(budget, key_cmp::<KT, VT>))
         .collect();
-    let mut router = RunRouter::new(r, spill, combine_fn, push);
+    let mut router = RunRouter::new(r, spill, combine_fn, push, trace);
     let mut task = mapper.create_task();
     let mut out = Emitter::new();
     let mut records: u64 = 0;
@@ -443,6 +474,7 @@ pub(crate) fn exec_reduce_task<KT, VT, KO, VO>(
     reducer: &dyn ReduceTaskFactory<KT, VT, KO, VO>,
     grouping: &(dyn Fn(&KT, &KT) -> bool + Send + Sync),
     counters: &Counters,
+    trace: Option<&TaskTraceCtx>,
 ) -> ReduceTaskOutput<KO, VO>
 where
     KT: Ord,
@@ -450,6 +482,16 @@ where
     VO: SizeEstimate,
 {
     let t0 = Instant::now();
+    if let Some(t) = trace {
+        for run in &runs {
+            if let Run::Spilled(rf) = run {
+                t.emit(TraceEvent::SpillRead {
+                    records: rf.records(),
+                    file_bytes: rf.file_bytes(),
+                });
+            }
+        }
+    }
     let sources: Vec<RunRecords<(KT, VT)>> = runs.into_iter().map(Run::into_records).collect();
     let mut merge = MergeIter::from_iters(sources);
     let in_records = merge.len() as u64;
@@ -679,6 +721,9 @@ where
     // panic fails the job (via `run_owned`'s panic accounting) — retry,
     // dead-lettering, and checkpointing live on the scheduler.
     let injector = super::fault::FaultInjector::from_plan(config.faults.clone());
+    // One trace context per job: stamps `JobStarted` and anchors every
+    // record's `at_secs` to this job's start.
+    let jctx = config.trace.as_ref().map(|t| t.job_ctx(&config.name));
 
     // Each map task: configure → map* → close; emitted records drain into
     // per-partition RunSorters (Hadoop's map-side "sort & spill": every
@@ -689,10 +734,16 @@ where
         let partitioner = Arc::clone(&partitioner);
         let counters = Arc::clone(&counters);
         let injector = Arc::clone(&injector);
+        let jctx = jctx.clone();
         move |splits: Vec<Vec<(KI, VI)>>| {
             run_owned(workers, splits, move |i, split: Vec<(KI, VI)>| {
-                injector.fire(super::fault::TaskPhase::Map, i);
-                exec_map_task(
+                // the serial path runs exactly one attempt per task
+                let tctx = jctx.as_ref().map(|j| j.task(TracePhase::Map, i, 0));
+                if let Some(t) = &tctx {
+                    t.emit(TraceEvent::AttemptStarted);
+                }
+                injector.fire_traced(super::fault::TaskPhase::Map, i, tctx.as_ref());
+                let out = exec_map_task(
                     split,
                     r,
                     sort_budget,
@@ -702,7 +753,13 @@ where
                     combine_fn.as_ref(),
                     &counters,
                     None,
-                )
+                    tctx.as_ref(),
+                );
+                if let Some(t) = &tctx {
+                    t.emit(TraceEvent::AttemptFinished);
+                    t.emit(TraceEvent::AttemptWon);
+                }
+                out
             })
         }
     };
@@ -715,18 +772,42 @@ where
         let grouping = Arc::clone(&grouping);
         let counters = Arc::clone(&counters);
         let injector = Arc::clone(&injector);
+        let jctx = jctx.clone();
         move |per_reducer_runs: Vec<Vec<Run<(KT, VT)>>>| {
             run_owned(
                 workers,
                 per_reducer_runs,
                 move |j, runs: Vec<Run<(KT, VT)>>| {
-                    injector.fire(super::fault::TaskPhase::Reduce, j);
-                    exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &counters)
+                    let tctx = jctx.as_ref().map(|jc| jc.task(TracePhase::Reduce, j, 0));
+                    if let Some(t) = &tctx {
+                        t.emit(TraceEvent::AttemptStarted);
+                    }
+                    injector.fire_traced(super::fault::TaskPhase::Reduce, j, tctx.as_ref());
+                    let out = exec_reduce_task(
+                        runs,
+                        reducer.as_ref(),
+                        grouping.as_ref(),
+                        &counters,
+                        tctx.as_ref(),
+                    );
+                    if let Some(t) = &tctx {
+                        t.emit(TraceEvent::AttemptFinished);
+                        t.emit(TraceEvent::AttemptWon);
+                    }
+                    out
                 },
             )
         }
     };
-    super::driver::drive_barrier_job(config, input, &counters, has_combiner, map_wave, reduce_wave)
+    super::driver::drive_barrier_job(
+        config,
+        input,
+        &counters,
+        has_combiner,
+        map_wave,
+        reduce_wave,
+        jctx,
+    )
 }
 
 #[cfg(test)]

@@ -171,6 +171,19 @@ impl FaultInjector {
     /// attempt, [`FaultKind::Stall`] sleeps through it.  Call at the top
     /// of every task-attempt body.
     pub fn fire(&self, phase: TaskPhase, task: usize) {
+        self.fire_traced(phase, task, None);
+    }
+
+    /// [`FaultInjector::fire`] with an optional trace context: a matching
+    /// fault emits [`TraceEvent::FaultInjected`]
+    /// (crate::mapreduce::trace::TraceEvent::FaultInjected) *before*
+    /// acting, so a panicking fault is still visible in the event stream.
+    pub(crate) fn fire_traced(
+        &self,
+        phase: TaskPhase,
+        task: usize,
+        trace: Option<&crate::mapreduce::trace::TaskTraceCtx>,
+    ) {
         if self.plan.specs.is_empty() {
             return;
         }
@@ -183,6 +196,14 @@ impl FaultInjector {
         };
         for spec in &self.plan.specs {
             if spec.phase == phase && spec.task == task && spec.attempt == attempt {
+                if let Some(t) = trace {
+                    t.emit(crate::mapreduce::trace::TraceEvent::FaultInjected {
+                        kind: match spec.kind {
+                            FaultKind::Panic => "panic",
+                            FaultKind::Stall(_) => "stall",
+                        },
+                    });
+                }
                 match spec.kind {
                     FaultKind::Panic => {
                         panic!("injected fault: {phase} task {task} attempt {attempt}")

@@ -179,6 +179,40 @@
 //! retries do.
 //!
 //! Still deliberately unmodeled: rack topology.
+//!
+//! ## Observability: counters vs stats vs trace
+//!
+//! Three layers, in increasing resolution — use the cheapest one that
+//! answers the question:
+//!
+//! * **[`Counters`]** — named monotonic totals ("how much"), sharded
+//!   atomics, always on.  The SN variants report replication / boundary /
+//!   comparison volumes here, and the tests assert the paper's overhead
+//!   formulas against them.  No time axis: a counter cannot say *when*
+//!   bytes moved or which attempt moved them.
+//! * **[`JobStats`](engine::JobStats)** — per-job phase aggregates ("how
+//!   long"): wall-clock per phase, per-task seconds, wave metrics
+//!   (`map_wave_done_secs`, `reduce_first_start_secs`, `overlap_secs`),
+//!   plus per-task runtime/size
+//!   [`Histogram`](crate::metrics::histogram::Histogram)s for skew
+//!   analysis.  Always on, feeds the [`sim`]
+//!   calibration loop.  One number per phase/task: retries, speculative
+//!   clones, and retractions are invisible here.
+//! * **[`trace`]** — the full story ("what happened, exactly, and
+//!   when"): typed per-attempt lifecycle events (scheduled / started /
+//!   finished / panicked / retried / cloned / won / lost), run seal /
+//!   push / retract, spill I/O, checkpoint commit/restore, dead-letter —
+//!   each stamped `(job, phase, task, attempt, wall-clock)`.  Opt-in via
+//!   [`JobConfig::trace`]; `Option`-cheap when off.  Drain the spec after
+//!   the run and hand the records to
+//!   [`crate::metrics::timeline::JobTimeline`] for a per-slot wave Gantt,
+//!   or serialize them as JSONL ([`trace::TraceSpec::to_jsonl`]) for
+//!   external tooling.  The wave metrics above are *derivable* from the
+//!   trace (and `tests/prop_trace.rs` pins the equality); the stats
+//!   fields remain as the always-on summary.
+//!
+//! Rule of thumb: counters for volumes, stats for phase durations and
+//! skew summaries, trace for per-attempt forensics and timelines.
 
 pub mod checkpoint;
 pub mod combiner;
@@ -195,6 +229,7 @@ pub mod shuffle;
 pub mod sim;
 pub mod sortspill;
 pub mod splits;
+pub mod trace;
 pub mod types;
 
 pub use checkpoint::CheckpointSpec;
@@ -209,6 +244,7 @@ pub use shuffle::MergeIter;
 pub use sortspill::{
     Codec, DeflateCodec, KeyValueCodec, SpillSpec, StringPairCodec, TempSpillDir,
 };
+pub use trace::{TraceEvent, TracePhase, TraceRecord, TraceSpec};
 pub use types::{
     Emitter, FnMapTask, FnReduceTask, HashPartitioner, MapTask, MapTaskFactory, Partitioner,
     ReduceTask, ReduceTaskFactory, SizeEstimate, ValuesIter,

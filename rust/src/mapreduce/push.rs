@@ -55,6 +55,7 @@ use std::time::Instant;
 use super::counters::{names, Counters};
 use super::shuffle::MergeIter;
 use super::sortspill::Run;
+use super::trace::{JobTraceCtx, TraceEvent, TracePhase};
 
 /// Mailbox position of one committed run: `(map task) << 32 | seal seq`,
 /// the engine's global run order for a reduce partition.
@@ -64,6 +65,10 @@ fn run_key(task: usize, seq: u64) -> u64 {
 
 struct StagedAttempt<T> {
     task: usize,
+    /// The scheduler's attempt ordinal for this execution — stamped on
+    /// the [`TraceEvent::RunPushed`]/[`TraceEvent::RunRetracted`] records
+    /// this attempt's runs produce.
+    wave_attempt: u32,
     runs: Vec<(usize, Run<T>)>,
 }
 
@@ -101,6 +106,11 @@ pub struct ShuffleService<T> {
     /// releases its mailbox explicitly ([`Self::release_partition`]).
     retain_runs: bool,
     counters: Arc<Counters>,
+    /// Job trace context, when tracing is on: run commits and
+    /// retractions emit [`TraceEvent::RunPushed`] /
+    /// [`TraceEvent::RunRetracted`] stamped with the pushing map task's
+    /// coordinates.
+    trace: Option<JobTraceCtx>,
     num_partitions: usize,
 }
 
@@ -131,6 +141,7 @@ impl<T> ShuffleService<T> {
             staged_mode,
             retain_runs: false,
             counters,
+            trace: None,
             num_partitions,
         }
     }
@@ -143,6 +154,22 @@ impl<T> ShuffleService<T> {
         self
     }
 
+    /// Attach a job trace context so run commits and retractions land in
+    /// the event stream ([`TraceEvent::RunPushed`] /
+    /// [`TraceEvent::RunRetracted`]).  `None` keeps the service silent.
+    pub(crate) fn with_trace(mut self, trace: Option<JobTraceCtx>) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Emit `event` stamped with map task `task` / attempt
+    /// `wave_attempt`, when tracing is on.
+    fn emit(&self, task: usize, wave_attempt: u32, event: TraceEvent) {
+        if let Some(j) = &self.trace {
+            j.task(TracePhase::Map, task, wave_attempt).emit(event);
+        }
+    }
+
     pub fn num_partitions(&self) -> usize {
         self.num_partitions
     }
@@ -151,6 +178,17 @@ impl<T> ShuffleService<T> {
     /// gets its own attempt handle; with speculation a task may open
     /// several concurrently.
     pub fn begin_attempt(svc: &Arc<ShuffleService<T>>, task: usize) -> PushAttempt<T> {
+        Self::begin_attempt_traced(svc, task, 0)
+    }
+
+    /// [`Self::begin_attempt`] carrying the scheduler's attempt ordinal,
+    /// so the trace records this handle's runs produce are stamped with
+    /// the same attempt number as the task's lifecycle events.
+    pub fn begin_attempt_traced(
+        svc: &Arc<ShuffleService<T>>,
+        task: usize,
+        wave_attempt: u32,
+    ) -> PushAttempt<T> {
         let id = {
             let mut st = svc.state.lock().unwrap();
             let id = st.next_attempt;
@@ -160,6 +198,7 @@ impl<T> ShuffleService<T> {
                     id,
                     StagedAttempt {
                         task,
+                        wave_attempt,
                         runs: Vec::new(),
                     },
                 );
@@ -170,15 +209,18 @@ impl<T> ShuffleService<T> {
             svc: Arc::clone(svc),
             id,
             task,
+            wave_attempt,
         }
     }
 
-    fn push_run(&self, attempt: u64, task: usize, partition: usize, run: Run<T>) {
+    fn push_run(&self, attempt: u64, task: usize, wave_attempt: u32, partition: usize, run: Run<T>) {
         assert!(partition < self.num_partitions, "partition out of range");
         let mut st = self.state.lock().unwrap();
         if st.task_done[task] {
             // a loser still running after its task was decided: drop the
             // run (spill files are deleted when the handle drops)
+            drop(st);
+            self.emit(task, wave_attempt, TraceEvent::RunRetracted { partition });
             return;
         }
         if self.staged_mode {
@@ -191,9 +233,12 @@ impl<T> ShuffleService<T> {
         // reducers (and the dispatcher) see mid-task spills
         let seq = st.next_seq[task];
         st.next_seq[task] = seq + 1;
+        let records = run.len() as u64;
         Self::insert_committed(&mut st, task, seq, partition, run);
         self.counters.inc(names::PUSHED_RUNS);
         self.cv.notify_all();
+        drop(st);
+        self.emit(task, wave_attempt, TraceEvent::RunPushed { partition, records });
     }
 
     fn insert_committed(st: &mut State<T>, task: usize, seq: u64, partition: usize, run: Run<T>) {
@@ -209,10 +254,23 @@ impl<T> ShuffleService<T> {
     /// every other staged attempt of the task is retracted.  Returns
     /// whether this attempt won.
     fn commit_task(&self, task: usize, attempt: u64) -> bool {
+        // (wave_attempt, event) pairs emitted after the state lock drops
+        let mut emits: Vec<(u32, TraceEvent)> = Vec::new();
         let mut st = self.state.lock().unwrap();
         if st.task_done[task] {
             // lost the commit race: retract this attempt's staged runs
-            st.staged.remove(&attempt);
+            if let Some(staged) = st.staged.remove(&attempt) {
+                for (partition, _) in &staged.runs {
+                    emits.push((
+                        staged.wave_attempt,
+                        TraceEvent::RunRetracted { partition: *partition },
+                    ));
+                }
+            }
+            drop(st);
+            for (wa, ev) in emits {
+                self.emit(task, wa, ev);
+            }
             return false;
         }
         if self.staged_mode {
@@ -225,12 +283,27 @@ impl<T> ShuffleService<T> {
             for (partition, run) in staged.runs {
                 let seq = st.next_seq[task];
                 st.next_seq[task] = seq + 1;
+                let records = run.len() as u64;
+                emits.push((
+                    staged.wave_attempt,
+                    TraceEvent::RunPushed { partition, records },
+                ));
                 Self::insert_committed(&mut st, task, seq, partition, run);
             }
             if n > 0 {
                 self.counters.add(names::PUSHED_RUNS, n);
             }
             // retract any other attempt of this task that already staged
+            for s in st.staged.values() {
+                if s.task == task {
+                    for (partition, _) in &s.runs {
+                        emits.push((
+                            s.wave_attempt,
+                            TraceEvent::RunRetracted { partition: *partition },
+                        ));
+                    }
+                }
+            }
             st.staged.retain(|_, s| s.task != task);
         }
         st.task_done[task] = true;
@@ -238,6 +311,10 @@ impl<T> ShuffleService<T> {
             st.done_prefix += 1;
         }
         self.cv.notify_all();
+        drop(st);
+        for (wa, ev) in emits {
+            self.emit(task, wa, ev);
+        }
         true
     }
 
@@ -248,9 +325,20 @@ impl<T> ShuffleService<T> {
     /// committed-prefix frontier advances past it — so reducers stop
     /// waiting on a task that will never push.
     pub(crate) fn fail_task(&self, task: usize) {
+        let mut emits: Vec<(u32, TraceEvent)> = Vec::new();
         let mut st = self.state.lock().unwrap();
         if st.task_done[task] {
             return;
+        }
+        for s in st.staged.values() {
+            if s.task == task {
+                for (partition, _) in &s.runs {
+                    emits.push((
+                        s.wave_attempt,
+                        TraceEvent::RunRetracted { partition: *partition },
+                    ));
+                }
+            }
         }
         st.staged.retain(|_, s| s.task != task);
         st.task_done[task] = true;
@@ -258,6 +346,10 @@ impl<T> ShuffleService<T> {
             st.done_prefix += 1;
         }
         self.cv.notify_all();
+        drop(st);
+        for (wa, ev) in emits {
+            self.emit(task, wa, ev);
+        }
     }
 
     /// Mark the map wave complete: every run is now committed, every
@@ -380,6 +472,8 @@ pub struct PushAttempt<T> {
     svc: Arc<ShuffleService<T>>,
     id: u64,
     task: usize,
+    /// Scheduler attempt ordinal, stamped on this handle's trace records.
+    wave_attempt: u32,
 }
 
 impl<T> PushAttempt<T> {
@@ -387,7 +481,8 @@ impl<T> PushAttempt<T> {
     /// `partition`.  Visible to reducers immediately in single-attempt
     /// mode, on [`PushAttempt::finish`] in staged mode.
     pub fn push(&self, partition: usize, run: Run<T>) {
-        self.svc.push_run(self.id, self.task, partition, run);
+        self.svc
+            .push_run(self.id, self.task, self.wave_attempt, partition, run);
     }
 
     /// Close the attempt: first finisher wins the task, committing its

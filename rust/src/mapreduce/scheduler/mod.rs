@@ -76,14 +76,14 @@ use super::config::JobConfig;
 use super::counters::{names, Counters};
 use super::driver;
 use super::engine::{
-    exec_map_task, exec_reduce_task, record_reduce_wave, run_job, run_job_with_combiner,
-    split_input, CombineFn, DeadLetter, GroupFn, JobOutcome, JobResult, JobStats, MapTaskOutput,
-    ReduceTaskOutput,
+    exec_map_task, exec_reduce_task, run_job, run_job_with_combiner, split_input, CombineFn,
+    DeadLetter, GroupFn, JobOutcome, JobResult, JobStats, MapTaskOutput, ReduceTaskOutput,
 };
 use super::fault::{FaultInjector, FaultPlan, TaskPhase};
 use super::push::{self, ShuffleService};
 use super::sim::ClusterSpec;
 use super::sortspill::{ResolvedSpill, Run};
+use super::trace::{TraceEvent, TracePhase};
 use super::types::{MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate};
 use crate::util::threadpool::{OnceSlots, ThreadPool};
 
@@ -431,6 +431,8 @@ impl JobScheduler {
         // their own run files; only the winner's reach the shuffle)
         let spill: Option<ResolvedSpill<(KT, VT)>> = config.spill.as_ref().map(|s| s.resolve());
         let has_combiner = combine_fn.is_some();
+        // One trace context per job; wave closures carry clones of it.
+        let jctx = config.trace.as_ref().map(|t| t.job_ctx(&config.name));
 
         // ---- fault-tolerance wiring ---------------------------------------
         // Job-level knobs win over scheduler-wide defaults.
@@ -472,12 +474,15 @@ impl JobScheduler {
             let injector = Arc::clone(&injector);
             let ckpt = ckpt.clone();
             let dead_letters = Arc::clone(&dead_letters);
+            let jctx = jctx.clone();
             move |splits: Vec<Vec<(KI, VI)>>| {
                 let split_lens: Vec<u64> = splits.iter().map(|s| s.len() as u64).collect();
                 let map_attempt = {
                     let injector = Arc::clone(&injector);
                     let ckpt = ckpt.clone();
-                    move |i: usize, split: Arc<Vec<(KI, VI)>>| {
+                    let jctx = jctx.clone();
+                    move |i: usize, attempt: u32, split: Arc<Vec<(KI, VI)>>| {
+                        let tctx = jctx.as_ref().map(|j| j.task(TracePhase::Map, i, attempt));
                         let local = Counters::new();
                         // A task covered by a prior run's manifest restores
                         // its sealed runs instead of executing (and never
@@ -485,10 +490,13 @@ impl JobScheduler {
                         if let Some((_, Some(prior), codec, _)) = &ckpt {
                             if let Some(out) = prior.restore_map(i, r, codec) {
                                 local.inc(names::TASKS_RESUMED);
+                                if let Some(t) = &tctx {
+                                    t.emit(TraceEvent::CheckpointRestore);
+                                }
                                 return (out, local);
                             }
                         }
-                        injector.fire(TaskPhase::Map, i);
+                        injector.fire_traced(TaskPhase::Map, i, tctx.as_ref());
                         let split =
                             Arc::try_unwrap(split).unwrap_or_else(|shared| (*shared).clone());
                         let out = exec_map_task(
@@ -501,6 +509,7 @@ impl JobScheduler {
                             combine_fn.as_ref(),
                             &local,
                             None,
+                            tctx.as_ref(),
                         );
                         (out, local)
                     }
@@ -510,8 +519,14 @@ impl JobScheduler {
                 let on_win = ckpt.as_ref().map(|(writer, _, codec, _)| {
                     let writer = Arc::clone(writer);
                     let codec = Arc::clone(codec);
+                    let jctx = jctx.clone();
                     Arc::new(move |i: usize, t: &(MapTaskOutput<KT, VT>, Counters)| {
                         writer.record_map(i, &t.0, &codec);
+                        if let Some(j) = &jctx {
+                            // attempt is unknown here (the hook runs after
+                            // the win race); commits stamp ordinal 0
+                            j.task(TracePhase::Map, i, 0).emit(TraceEvent::CheckpointCommit);
+                        }
                     })
                         as Arc<dyn Fn(usize, &(MapTaskOutput<KT, VT>, Counters)) + Send + Sync>
                 });
@@ -524,6 +539,7 @@ impl JobScheduler {
                         max_retries: retries,
                         allow_failure: dead_letter,
                         on_win,
+                        trace: jctx.clone().map(|j| (j, TracePhase::Map)),
                     },
                     &counters,
                 );
@@ -538,6 +554,13 @@ impl JobScheduler {
                             // Exhausted retries: dead-letter the split and
                             // keep the wave going with an empty stand-in.
                             counters.inc(names::DEAD_LETTERED);
+                            if let Some(j) = &jctx {
+                                j.task(TracePhase::Map, i, 0).emit(TraceEvent::DeadLettered {
+                                    message: format!(
+                                        "map task {i} exhausted its retry budget"
+                                    ),
+                                });
+                            }
                             dead_letters.lock().unwrap().push(DeadLetter {
                                 phase: TaskPhase::Map,
                                 task: i,
@@ -558,25 +581,37 @@ impl JobScheduler {
             let injector = Arc::clone(&injector);
             let ckpt = ckpt.clone();
             let dead_letters = Arc::clone(&dead_letters);
+            let jctx = jctx.clone();
             move |per_reducer_runs: Vec<Vec<Run<(KT, VT)>>>| {
                 let run_counts: Vec<u64> =
                     per_reducer_runs.iter().map(|rs| rs.len() as u64).collect();
                 let reduce_attempt = {
                     let injector = Arc::clone(&injector);
                     let ckpt = ckpt.clone();
-                    move |j: usize, runs: Arc<Vec<Run<(KT, VT)>>>| {
+                    let jctx = jctx.clone();
+                    move |j: usize, attempt: u32, runs: Arc<Vec<Run<(KT, VT)>>>| {
+                        let tctx =
+                            jctx.as_ref().map(|jc| jc.task(TracePhase::Reduce, j, attempt));
                         let local = Counters::new();
                         if let Some((_, Some(prior), _, Some(oc))) = &ckpt {
                             if let Some(out) = prior.restore_reduce(j, oc) {
                                 local.inc(names::TASKS_RESUMED);
+                                if let Some(t) = &tctx {
+                                    t.emit(TraceEvent::CheckpointRestore);
+                                }
                                 return (out, local);
                             }
                         }
-                        injector.fire(TaskPhase::Reduce, j);
+                        injector.fire_traced(TaskPhase::Reduce, j, tctx.as_ref());
                         let runs =
                             Arc::try_unwrap(runs).unwrap_or_else(|shared| (*shared).clone());
-                        let out =
-                            exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &local);
+                        let out = exec_reduce_task(
+                            runs,
+                            reducer.as_ref(),
+                            grouping.as_ref(),
+                            &local,
+                            tctx.as_ref(),
+                        );
                         (out, local)
                     }
                 };
@@ -588,9 +623,14 @@ impl JobScheduler {
                         let writer = Arc::clone(writer);
                         let oc = Arc::clone(oc);
                         let dead_letters = Arc::clone(&dead_letters);
+                        let jctx = jctx.clone();
                         Arc::new(move |j: usize, t: &(ReduceTaskOutput<KO, VO>, Counters)| {
                             if dead_letters.lock().unwrap().is_empty() {
                                 writer.record_reduce(j, &t.0, &oc);
+                                if let Some(jc) = &jctx {
+                                    jc.task(TracePhase::Reduce, j, 0)
+                                        .emit(TraceEvent::CheckpointCommit);
+                                }
                             }
                         })
                             as Arc<
@@ -609,6 +649,7 @@ impl JobScheduler {
                         max_retries: retries,
                         allow_failure: dead_letter,
                         on_win,
+                        trace: jctx.clone().map(|j| (j, TracePhase::Reduce)),
                     },
                     &counters,
                 );
@@ -621,6 +662,15 @@ impl JobScheduler {
                         }
                         None => {
                             counters.inc(names::DEAD_LETTERED);
+                            if let Some(jc) = &jctx {
+                                jc.task(TracePhase::Reduce, j, 0).emit(
+                                    TraceEvent::DeadLettered {
+                                        message: format!(
+                                            "reduce task {j} exhausted its retry budget"
+                                        ),
+                                    },
+                                );
+                            }
                             dead_letters.lock().unwrap().push(DeadLetter {
                                 phase: TaskPhase::Reduce,
                                 task: j,
@@ -633,8 +683,15 @@ impl JobScheduler {
                 red_outputs
             }
         };
-        let mut res =
-            driver::drive_barrier_job(config, input, &counters, has_combiner, map_wave, reduce_wave);
+        let mut res = driver::drive_barrier_job(
+            config,
+            input,
+            &counters,
+            has_combiner,
+            map_wave,
+            reduce_wave,
+            jctx,
+        );
         res.stats.dead_letters = std::mem::take(&mut *dead_letters.lock().unwrap());
         if res.outcome == JobOutcome::Ok {
             if let Some((writer, _, _, _)) = &ckpt {
@@ -701,6 +758,9 @@ impl JobScheduler {
         let faults_active = faults.is_some();
         let injector = FaultInjector::from_plan(faults);
         let dead_letters: Arc<Mutex<Vec<DeadLetter>>> = Arc::new(Mutex::new(Vec::new()));
+        // One trace context per job, shared by the map wave, the shuffle
+        // service (run pushed/retracted events), and the dispatcher.
+        let jctx = config.trace.as_ref().map(|t| t.job_ctx(&config.name));
 
         counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
         let splits = split_input(input, config.num_map_tasks);
@@ -715,7 +775,9 @@ impl JobScheduler {
         let staged = spec.is_some() || retries > 0 || dead_letter || faults_active;
         let retain = retries > 0;
         let service: Arc<ShuffleService<(KT, VT)>> = Arc::new(
-            ShuffleService::new(m, r, staged, Arc::clone(&counters)).with_retained_runs(retain),
+            ShuffleService::new(m, r, staged, Arc::clone(&counters))
+                .with_retained_runs(retain)
+                .with_trace(jctx.clone()),
         );
         // each slot holds (output, task-local counters, execution-start
         // seconds) — the start stamp is taken on the reduce slot itself,
@@ -741,6 +803,7 @@ impl JobScheduler {
             let counters = Arc::clone(&counters);
             let injector = Arc::clone(&injector);
             let dead_letters = Arc::clone(&dead_letters);
+            let jctx = jctx.clone();
             std::thread::Builder::new()
                 .name(format!("snmr-push-{}", config.name))
                 .spawn(move || {
@@ -764,6 +827,7 @@ impl JobScheduler {
                             let counters = Arc::clone(&counters);
                             let injector = Arc::clone(&injector);
                             let dead_letters = Arc::clone(&dead_letters);
+                            let jctx = jctx.clone();
                             sched.inner.reduce_pool.execute(move || {
                                 let started = t_start.elapsed().as_secs_f64();
                                 // Inline retry loop: a panicked attempt
@@ -772,20 +836,46 @@ impl JobScheduler {
                                 // like a barrier resubmission re-reads its
                                 // retained input.
                                 let mut attempts_left = retries;
+                                let mut attempt_no: u32 = 0;
                                 let outcome = loop {
+                                    let tctx = jctx
+                                        .as_ref()
+                                        .map(|jc| jc.task(TracePhase::Reduce, j, attempt_no));
+                                    if let Some(t) = &tctx {
+                                        if attempt_no == 0 {
+                                            // the primary attempt's start is
+                                            // stamped with the exact slot-start
+                                            // second the stats use, so the
+                                            // trace-derived first-reduce-start
+                                            // equals the stats field
+                                            t.emit_at(TraceEvent::AttemptStarted, started);
+                                        } else {
+                                            t.emit(TraceEvent::AttemptStarted);
+                                        }
+                                    }
                                     let attempt = catch_unwind(AssertUnwindSafe(|| {
-                                        injector.fire(TaskPhase::Reduce, j);
+                                        injector.fire_traced(
+                                            TaskPhase::Reduce,
+                                            j,
+                                            tctx.as_ref(),
+                                        );
                                         let local = Counters::new();
                                         let (sources, late, fold_secs) =
                                             push::collect_reduce_sources(&service, j);
                                         if late > 0 {
                                             local.add(names::LATE_RUNS, late);
+                                            if let Some(t) = &tctx {
+                                                t.emit(TraceEvent::ReduceCatchUp {
+                                                    late_runs: late,
+                                                });
+                                            }
                                         }
                                         let mut out = exec_reduce_task(
                                             sources,
                                             reducer.as_ref(),
                                             grouping.as_ref(),
                                             &local,
+                                            tctx.as_ref(),
                                         );
                                         // the pre-merge folding is reduce work
                                         // too (the waits are not measured)
@@ -793,13 +883,31 @@ impl JobScheduler {
                                         (out, local, started)
                                     }));
                                     match attempt {
-                                        Ok(pair) => break Ok(pair),
+                                        Ok(pair) => {
+                                            if let Some(t) = &tctx {
+                                                t.emit(TraceEvent::AttemptFinished);
+                                                t.emit(TraceEvent::AttemptWon);
+                                            }
+                                            break Ok(pair);
+                                        }
                                         Err(p) => {
+                                            if let Some(t) = &tctx {
+                                                t.emit(TraceEvent::AttemptPanicked {
+                                                    message: speculate::panic_message(
+                                                        p.as_ref(),
+                                                    ),
+                                                });
+                                            }
                                             if attempts_left == 0 {
                                                 break Err(p);
                                             }
                                             attempts_left -= 1;
                                             counters.inc(names::TASK_RETRIES);
+                                            attempt_no += 1;
+                                            if let Some(jc) = &jctx {
+                                                jc.task(TracePhase::Reduce, j, attempt_no)
+                                                    .emit(TraceEvent::TaskRetried);
+                                            }
                                         }
                                     }
                                 };
@@ -819,6 +927,16 @@ impl JobScheduler {
                                         counters.inc(names::TASKS_FAILED);
                                         if dead_letter {
                                             counters.inc(names::DEAD_LETTERED);
+                                            if let Some(jc) = &jctx {
+                                                jc.task(TracePhase::Reduce, j, 0).emit(
+                                                    TraceEvent::DeadLettered {
+                                                        message: format!(
+                                                            "reduce task {j} exhausted its \
+                                                             retry budget"
+                                                        ),
+                                                    },
+                                                );
+                                            }
                                             dead_letters.lock().unwrap().push(DeadLetter {
                                                 phase: TaskPhase::Reduce,
                                                 task: j,
@@ -852,13 +970,15 @@ impl JobScheduler {
             let spill = spill.clone();
             let service = Arc::clone(&service);
             let injector = Arc::clone(&injector);
-            move |i: usize, split: Arc<Vec<(KI, VI)>>| {
+            let jctx = jctx.clone();
+            move |i: usize, attempt_no: u32, split: Arc<Vec<(KI, VI)>>| {
+                let tctx = jctx.as_ref().map(|j| j.task(TracePhase::Map, i, attempt_no));
                 // fire before opening the attempt: an injected panic here
                 // models a worker that died before producing anything
-                injector.fire(TaskPhase::Map, i);
+                injector.fire_traced(TaskPhase::Map, i, tctx.as_ref());
                 let local = Counters::new();
                 let split = Arc::try_unwrap(split).unwrap_or_else(|shared| (*shared).clone());
-                let attempt = ShuffleService::begin_attempt(&service, i);
+                let attempt = ShuffleService::begin_attempt_traced(&service, i, attempt_no);
                 let out = exec_map_task(
                     split,
                     r,
@@ -869,6 +989,7 @@ impl JobScheduler {
                     combine_fn.as_ref(),
                     &local,
                     Some(&attempt),
+                    tctx.as_ref(),
                 );
                 // first finisher wins the task; a loser's pushes are
                 // retracted before reducers could ever fold them
@@ -886,6 +1007,7 @@ impl JobScheduler {
                     max_retries: retries,
                     allow_failure: dead_letter,
                     on_win: None,
+                    trace: jctx.clone().map(|j| (j, TracePhase::Map)),
                 },
                 &counters,
             )
@@ -914,6 +1036,11 @@ impl JobScheduler {
                     // reducers see a shorter (but consistent) stream.
                     service.fail_task(i);
                     counters.inc(names::DEAD_LETTERED);
+                    if let Some(j) = &jctx {
+                        j.task(TracePhase::Map, i, 0).emit(TraceEvent::DeadLettered {
+                            message: format!("map task {i} exhausted its retry budget"),
+                        });
+                    }
                     dead_letters.lock().unwrap().push(DeadLetter {
                         phase: TaskPhase::Map,
                         task: i,
@@ -925,6 +1052,9 @@ impl JobScheduler {
         }
         let map_phase_secs = t_map.elapsed().as_secs_f64();
         let map_wave_done_secs = t_start.elapsed().as_secs_f64();
+        if let Some(jc) = &jctx {
+            jc.emit_job_at(TraceEvent::MapWaveDone, map_wave_done_secs);
+        }
 
         let mut stats = JobStats {
             map_phase_secs,
@@ -969,14 +1099,17 @@ impl JobScheduler {
         }
         stats.reduce_first_start_secs = if first_start.is_finite() { first_start } else { 0.0 };
         stats.overlap_secs = (map_wave_done_secs - stats.reduce_first_start_secs).max(0.0);
+        if let Some(jc) = &jctx {
+            jc.emit_job_at(TraceEvent::ReduceFirstStart, stats.reduce_first_start_secs);
+        }
         stats.reduce_phase_secs =
             (t_start.elapsed().as_secs_f64() - stats.reduce_first_start_secs).max(0.0);
-        stats.reduce_task_secs = red_outputs.iter().map(|o| o.secs).collect();
-        stats.reduce_task_output_records =
-            red_outputs.iter().map(|o| o.output.len() as u64).collect();
-        stats.reduce_output_records = record_reduce_wave(&counters, &red_outputs);
+        driver::record_reduce_phase(&mut stats, &counters, &red_outputs);
         let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
         stats.total_secs = t_start.elapsed().as_secs_f64();
+        if let Some(jc) = &jctx {
+            jc.emit_job_at(TraceEvent::JobFinished, stats.total_secs);
+        }
 
         // the push path bypasses the barrier driver's tail, so it folds
         // the fault accounting into the result itself

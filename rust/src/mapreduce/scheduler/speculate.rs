@@ -32,6 +32,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::mapreduce::counters::{names, Counters};
+use crate::mapreduce::trace::{JobTraceCtx, TraceEvent, TracePhase};
 use crate::util::threadpool::{OnceSlots, ThreadPool};
 
 /// Straggler-detection knobs (Hadoop's speculative-execution analogue).
@@ -83,6 +84,10 @@ struct Board {
     decided: Vec<AtomicBool>,
     /// Cumulative panicked attempts per task (retry budget accounting).
     fail_counts: Vec<AtomicU32>,
+    /// Next attempt ordinal per task — every submission (primary, retry,
+    /// speculative clone) consumes one, so the trace's attempt numbers
+    /// are dense and unique per task.
+    attempt_seq: Vec<AtomicU32>,
     /// Panicked attempts beyond this count fail the task.
     max_retries: u32,
     state: Mutex<BoardState>,
@@ -97,6 +102,7 @@ impl Board {
             cloned: (0..n).map(|_| AtomicBool::new(false)).collect(),
             decided: (0..n).map(|_| AtomicBool::new(false)).collect(),
             fail_counts: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            attempt_seq: (0..n).map(|_| AtomicU32::new(0)).collect(),
             max_retries,
             state: Mutex::new(BoardState {
                 settled: 0,
@@ -124,6 +130,10 @@ pub(crate) struct WaveOptions<T> {
     /// the checkpoint-commit hook.  A panicking callback is swallowed
     /// (checkpointing is best-effort and must not fail a healthy wave).
     pub on_win: Option<Arc<dyn Fn(usize, &T) + Send + Sync>>,
+    /// Trace context for this wave's attempt-lifecycle events: the job
+    /// context plus which phase the wave executes.  `None` traces
+    /// nothing.
+    pub trace: Option<(JobTraceCtx, TracePhase)>,
 }
 
 impl<T> Default for WaveOptions<T> {
@@ -133,8 +143,18 @@ impl<T> Default for WaveOptions<T> {
             max_retries: 0,
             allow_failure: false,
             on_win: None,
+            trace: None,
         }
     }
+}
+
+/// Why an attempt is being submitted — determines which trace breadcrumb
+/// precedes its `AttemptScheduled` event.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum AttemptKind {
+    Primary,
+    Retry,
+    Clone,
 }
 
 /// One wave's results under fault handling.
@@ -151,6 +171,12 @@ pub(crate) struct WaveOutcome<T> {
 /// Run one wave of tasks on `pool`, optionally cloning stragglers onto
 /// idle slots.  Returns results in task order.  Panics if any attempt
 /// panicked (matching `run_owned`'s contract).
+///
+/// The task body receives `(task, attempt, input)`: `attempt` is the
+/// dense per-task attempt ordinal (0 = primary; retries and speculative
+/// clones consume the next one) — the same ordinal the trace stamps on
+/// the attempt's lifecycle events, so task bodies can emit their own
+/// events under the matching identity.
 ///
 /// Each attempt receives its input behind an `Arc`.  Without speculation
 /// the attempt holds the *only* reference, so the task body can
@@ -169,7 +195,7 @@ pub(crate) fn run_tasks<I, T, F>(
 where
     I: Send + Sync + 'static,
     T: Send + 'static,
-    F: Fn(usize, Arc<I>) -> T + Send + Sync + 'static,
+    F: Fn(usize, u32, Arc<I>) -> T + Send + Sync + 'static,
 {
     run_tasks_ft(
         pool,
@@ -200,7 +226,7 @@ pub(crate) fn run_tasks_ft<I, T, F>(
 where
     I: Send + Sync + 'static,
     T: Send + 'static,
-    F: Fn(usize, Arc<I>) -> T + Send + Sync + 'static,
+    F: Fn(usize, u32, Arc<I>) -> T + Send + Sync + 'static,
 {
     let n = items.len();
     if n == 0 {
@@ -222,13 +248,14 @@ where
         submit_attempt(
             pool,
             i,
-            false,
+            AttemptKind::Primary,
             input,
             Arc::clone(&f),
             Arc::clone(&results),
             Arc::clone(&board),
             Arc::clone(counters),
             opts.on_win.clone(),
+            opts.trace.clone(),
         );
     }
 
@@ -249,13 +276,14 @@ where
                 submit_attempt(
                     pool,
                     i,
-                    false,
+                    AttemptKind::Retry,
                     Arc::clone(&inputs[i]),
                     Arc::clone(&f),
                     Arc::clone(&results),
                     Arc::clone(&board),
                     Arc::clone(counters),
                     opts.on_win.clone(),
+                    opts.trace.clone(),
                 );
             }
             st = board.state.lock().unwrap();
@@ -305,13 +333,14 @@ where
                     submit_attempt(
                         pool,
                         i,
-                        true,
+                        AttemptKind::Clone,
                         Arc::clone(&inputs[i]),
                         Arc::clone(&f),
                         Arc::clone(&results),
                         Arc::clone(&board),
                         Arc::clone(counters),
                         opts.on_win.clone(),
+                        opts.trace.clone(),
                     );
                 }
                 st = board.state.lock().unwrap();
@@ -344,22 +373,42 @@ where
     }
 }
 
+/// Best-effort extraction of a panic payload's message.
+pub(crate) fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    p.downcast_ref::<&str>()
+        .map(|s| (*s).to_string())
+        .or_else(|| p.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "panic".to_string())
+}
+
 #[allow(clippy::too_many_arguments)]
 fn submit_attempt<I, T, F>(
     pool: &ThreadPool,
     i: usize,
-    speculative: bool,
+    kind: AttemptKind,
     input: Arc<I>,
     f: Arc<F>,
     results: Arc<OnceSlots<T>>,
     board: Arc<Board>,
     counters: Arc<Counters>,
     on_win: Option<Arc<dyn Fn(usize, &T) + Send + Sync>>,
+    trace: Option<(JobTraceCtx, TracePhase)>,
 ) where
     I: Send + Sync + 'static,
     T: Send + 'static,
-    F: Fn(usize, Arc<I>) -> T + Send + Sync + 'static,
+    F: Fn(usize, u32, Arc<I>) -> T + Send + Sync + 'static,
 {
+    let attempt = board.attempt_seq[i].fetch_add(1, Ordering::Relaxed);
+    let tctx = trace.map(|(j, ph)| j.task(ph, i, attempt));
+    if let Some(t) = &tctx {
+        match kind {
+            AttemptKind::Retry => t.emit(TraceEvent::TaskRetried),
+            AttemptKind::Clone => t.emit(TraceEvent::SpeculativeCloned),
+            AttemptKind::Primary => {}
+        }
+        t.emit(TraceEvent::AttemptScheduled);
+    }
+    let speculative = kind == AttemptKind::Clone;
     pool.execute(move || {
         if board.decided[i].load(Ordering::Acquire) {
             return; // winner finished while this attempt was queued
@@ -370,14 +419,23 @@ fn submit_attempt<I, T, F>(
                 Ordering::Release,
             );
         }
+        if let Some(t) = &tctx {
+            t.emit(TraceEvent::AttemptStarted);
+        }
         let t0 = Instant::now();
-        match catch_unwind(AssertUnwindSafe(|| f(i, input))) {
+        match catch_unwind(AssertUnwindSafe(|| f(i, attempt, input))) {
             Ok(t) => {
+                if let Some(tc) = &tctx {
+                    tc.emit(TraceEvent::AttemptFinished);
+                }
                 // `decided` is the single win arbiter: exactly one
                 // attempt's false→true transition succeeds, so the slot
                 // write below is exclusive and losers drop their result
                 // right here.
                 if !board.decided[i].swap(true, Ordering::AcqRel) {
+                    if let Some(tc) = &tctx {
+                        tc.emit(TraceEvent::AttemptWon);
+                    }
                     if let Some(cb) = &on_win {
                         let _ = catch_unwind(AssertUnwindSafe(|| cb(i, &t)));
                     }
@@ -390,9 +448,16 @@ fn submit_attempt<I, T, F>(
                     st.settled += 1;
                     st.durations.push(t0.elapsed().as_secs_f64());
                     board.cv.notify_all();
+                } else if let Some(tc) = &tctx {
+                    tc.emit(TraceEvent::AttemptLost);
                 }
             }
-            Err(_) => {
+            Err(p) => {
+                if let Some(tc) = &tctx {
+                    tc.emit(TraceEvent::AttemptPanicked {
+                        message: panic_message(p.as_ref()),
+                    });
+                }
                 // a panicked attempt consumes one unit of retry budget;
                 // within budget (and while undecided) the task is queued
                 // for resubmission, beyond it the task fails for good
@@ -434,7 +499,7 @@ mod tests {
         let out = run_tasks(
             &pool,
             (0..20u64).collect::<Vec<_>>(),
-            Arc::new(|_i, v: Arc<u64>| *v * 2),
+            Arc::new(|_i, _a, v: Arc<u64>| *v * 2),
             None,
             &counters,
         );
@@ -451,7 +516,7 @@ mod tests {
         let out = run_tasks(
             &pool,
             vec![vec![1u64, 2], vec![3, 4]],
-            Arc::new(|_i, v: Arc<Vec<u64>>| {
+            Arc::new(|_i, _a, v: Arc<Vec<u64>>| {
                 let owned = Arc::try_unwrap(v).expect("attempt must be sole owner");
                 owned.into_iter().sum::<u64>()
             }),
@@ -466,7 +531,7 @@ mod tests {
         let pool = ThreadPool::new(4);
         let counters = Arc::new(Counters::new());
         let items: Vec<u64> = (0..8).collect();
-        let f = Arc::new(|_i: usize, v: Arc<u64>| {
+        let f = Arc::new(|_i: usize, _a: u32, v: Arc<u64>| {
             if *v == 7 {
                 busy_wait(Duration::from_millis(150));
             } else {
@@ -495,7 +560,7 @@ mod tests {
         let _ = run_tasks(
             &pool,
             vec![0u64, 1],
-            Arc::new(|_i, v: Arc<u64>| {
+            Arc::new(|_i, _a, v: Arc<u64>| {
                 if *v == 1 {
                     panic!("boom");
                 }
@@ -513,7 +578,7 @@ mod tests {
         let out: Vec<u64> = run_tasks(
             &pool,
             Vec::new(),
-            Arc::new(|_i, v: Arc<u64>| *v),
+            Arc::new(|_i, _a, v: Arc<u64>| *v),
             None,
             &counters,
         );
@@ -532,7 +597,7 @@ mod tests {
         let out = run_tasks_ft(
             &pool,
             (0..6u64).collect::<Vec<_>>(),
-            Arc::new(move |_i, v: Arc<u64>| {
+            Arc::new(move |_i, _a, v: Arc<u64>| {
                 if *v == 3 && a.fetch_add(1, Ordering::SeqCst) == 0 {
                     panic!("injected");
                 }
@@ -561,7 +626,7 @@ mod tests {
         let _ = run_tasks_ft(
             &pool,
             vec![0u64, 1],
-            Arc::new(|_i, v: Arc<u64>| {
+            Arc::new(|_i, _a, v: Arc<u64>| {
                 if *v == 1 {
                     panic!("always");
                 }
@@ -584,7 +649,7 @@ mod tests {
         let out = run_tasks_ft(
             &pool,
             (0..4u64).collect::<Vec<_>>(),
-            Arc::new(|_i, v: Arc<u64>| {
+            Arc::new(|_i, _a, v: Arc<u64>| {
                 if *v == 2 {
                     panic!("always");
                 }
@@ -616,7 +681,7 @@ mod tests {
         let out = run_tasks_ft(
             &pool,
             (0..8u64).collect::<Vec<_>>(),
-            Arc::new(move |_i, v: Arc<u64>| {
+            Arc::new(move |_i, _a, v: Arc<u64>| {
                 if *v == 1 && a.fetch_add(1, Ordering::SeqCst) == 0 {
                     panic!("injected");
                 }
@@ -652,7 +717,7 @@ mod tests {
         let out = run_tasks_ft(
             &pool,
             (0..10u64).collect::<Vec<_>>(),
-            Arc::new(|_i, v: Arc<u64>| *v),
+            Arc::new(|_i, _a, v: Arc<u64>| *v),
             WaveOptions {
                 on_win: Some(Arc::new(move |i, t: &u64| {
                     f2.lock().unwrap().push((i, *t));

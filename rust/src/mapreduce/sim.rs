@@ -535,6 +535,173 @@ pub fn simulate_job_chain(profiles: &[JobProfile], spec: &ClusterSpec) -> (Vec<S
     (parts, total)
 }
 
+/// One phase's simulated-vs-measured comparison inside a [`DriftReport`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct WaveDrift {
+    /// Phase label: `"map"`, `"shuffle"`, or `"reduce"`.
+    pub wave: &'static str,
+    /// Wall seconds the engine measured for the phase.
+    pub measured_s: f64,
+    /// Wall seconds the simulator predicts for the same phase on `spec`.
+    pub simulated_s: f64,
+}
+
+impl WaveDrift {
+    /// Signed prediction error, `simulated - measured` seconds.
+    pub fn delta_s(&self) -> f64 {
+        self.simulated_s - self.measured_s
+    }
+
+    /// Relative drift `|simulated - measured| / measured`; 0 when the
+    /// phase measured 0 s (nothing to be wrong about).
+    pub fn drift_frac(&self) -> f64 {
+        if self.measured_s <= 0.0 {
+            0.0
+        } else {
+            (self.simulated_s - self.measured_s).abs() / self.measured_s
+        }
+    }
+}
+
+/// Simulated-vs-measured drift for one job: the engine's measured
+/// [`JobStats`](crate::mapreduce::engine::JobStats) phase timings next to
+/// what [`simulate_job_mode`] predicts when the *same* per-task profile is
+/// scheduled on `spec` — per-wave deltas plus totals.  Built by
+/// [`drift_report`]; serialized into `BENCH_engine.json` by the engine
+/// ablation bench and rendered by `examples/skew_study`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftReport {
+    /// Phase structure the simulator used — [`SimShuffleMode::Overlap`]
+    /// when the measured job overlapped its waves (push shuffle),
+    /// [`SimShuffleMode::TwoWave`] otherwise.
+    pub mode: SimShuffleMode,
+    /// Per-phase rows, in `map`, `shuffle`, `reduce` order.
+    pub waves: Vec<WaveDrift>,
+    /// Measured end-to-end seconds ([`JobStats::total_secs`]).
+    ///
+    /// [`JobStats::total_secs`]: crate::mapreduce::engine::JobStats::total_secs
+    pub measured_total_s: f64,
+    /// Simulated end-to-end seconds, **excluding** the cluster's
+    /// [`ClusterSpec::job_setup_s`] charge — the in-process engine pays no
+    /// job-scheduling overhead, so including it would be pure bias.
+    pub simulated_total_s: f64,
+}
+
+impl DriftReport {
+    /// The worst per-wave relative drift — the headline number the bench
+    /// gate tracks.
+    pub fn max_drift_frac(&self) -> f64 {
+        self.waves.iter().map(WaveDrift::drift_frac).fold(0.0, f64::max)
+    }
+
+    /// Compact JSON object for bench artifacts.
+    pub fn to_json(&self) -> String {
+        let mode = match self.mode {
+            SimShuffleMode::TwoWave => "two_wave",
+            SimShuffleMode::Overlap => "overlap",
+        };
+        let waves: Vec<String> = self
+            .waves
+            .iter()
+            .map(|w| {
+                format!(
+                    "{{\"wave\":\"{}\",\"measured_s\":{:.6},\"simulated_s\":{:.6},\"delta_s\":{:.6},\"drift_frac\":{:.6}}}",
+                    w.wave,
+                    w.measured_s,
+                    w.simulated_s,
+                    w.delta_s(),
+                    w.drift_frac()
+                )
+            })
+            .collect();
+        format!(
+            "{{\"mode\":\"{}\",\"measured_total_s\":{:.6},\"simulated_total_s\":{:.6},\"max_drift_frac\":{:.6},\"waves\":[{}]}}",
+            mode,
+            self.measured_total_s,
+            self.simulated_total_s,
+            self.max_drift_frac(),
+            waves.join(",")
+        )
+    }
+
+    /// Human-readable drift table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "sim-vs-measured drift ({})\n",
+            match self.mode {
+                SimShuffleMode::TwoWave => "two-wave",
+                SimShuffleMode::Overlap => "overlap",
+            }
+        ));
+        out.push_str("  wave     measured    simulated   delta       drift\n");
+        for w in &self.waves {
+            out.push_str(&format!(
+                "  {:<8} {:>9.4}s {:>9.4}s {:>+9.4}s {:>6.1}%\n",
+                w.wave,
+                w.measured_s,
+                w.simulated_s,
+                w.delta_s(),
+                w.drift_frac() * 100.0
+            ));
+        }
+        out.push_str(&format!(
+            "  total    {:>9.4}s {:>9.4}s {:>+9.4}s\n",
+            self.measured_total_s,
+            self.simulated_total_s,
+            self.simulated_total_s - self.measured_total_s
+        ));
+        out
+    }
+}
+
+/// Run the simulator over a *measured* job and report per-wave drift.
+///
+/// The profile is taken from `stats` ([`JobProfile::from_stats`]) and
+/// scheduled on `spec` in the phase-structure mode the measured job
+/// actually ran: [`SimShuffleMode::Overlap`] when
+/// `stats.overlap_secs > 0` (push shuffle), the two-wave barrier
+/// otherwise.  For the drift to mean anything, `spec`'s slot counts
+/// should match the engine's worker count the stats were measured with —
+/// drift then isolates the simulator's *cost model* error rather than a
+/// parallelism mismatch.
+pub fn drift_report(
+    stats: &crate::mapreduce::engine::JobStats,
+    map_output_bytes: u64,
+    spec: &ClusterSpec,
+) -> DriftReport {
+    let profile = JobProfile::from_stats(stats, map_output_bytes);
+    let mode = if stats.overlap_secs > 0.0 {
+        SimShuffleMode::Overlap
+    } else {
+        SimShuffleMode::TwoWave
+    };
+    let sim = simulate_job_mode(&profile, spec, mode);
+    let waves = vec![
+        WaveDrift {
+            wave: "map",
+            measured_s: stats.map_phase_secs,
+            simulated_s: sim.map_s,
+        },
+        WaveDrift {
+            wave: "shuffle",
+            measured_s: stats.shuffle_phase_secs,
+            simulated_s: sim.materialize_s + sim.compress_s + sim.shuffle_s + sim.decompress_s,
+        },
+        WaveDrift {
+            wave: "reduce",
+            measured_s: stats.reduce_phase_secs,
+            simulated_s: sim.reduce_s,
+        },
+    ];
+    DriftReport {
+        mode,
+        waves,
+        measured_total_s: stats.total_secs,
+        simulated_total_s: sim.total() - sim.setup_s,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -923,5 +1090,79 @@ mod tests {
         let spec = ClusterSpec::paper_like(4);
         let b = simulate_job(&p, &spec);
         assert!((b.total() - spec.job_setup_s).abs() < 1e-9);
+    }
+
+    fn drift_stats() -> crate::mapreduce::engine::JobStats {
+        crate::mapreduce::engine::JobStats {
+            map_task_secs: vec![1.0, 2.0],
+            reduce_task_secs: vec![3.0],
+            shuffle_bytes_per_reducer: vec![1_000_000],
+            map_phase_secs: 3.0,
+            shuffle_phase_secs: 0.1,
+            reduce_phase_secs: 3.0,
+            total_secs: 6.1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn drift_report_picks_mode_from_overlap() {
+        let spec = ClusterSpec::paper_like(1);
+        let stats = drift_stats();
+        assert_eq!(
+            drift_report(&stats, 1_000_000, &spec).mode,
+            SimShuffleMode::TwoWave
+        );
+        let mut pushed = drift_stats();
+        pushed.overlap_secs = 0.5;
+        assert_eq!(
+            drift_report(&pushed, 1_000_000, &spec).mode,
+            SimShuffleMode::Overlap
+        );
+    }
+
+    #[test]
+    fn drift_report_excludes_setup_and_names_three_waves() {
+        let spec = ClusterSpec::paper_like(1);
+        let rep = drift_report(&drift_stats(), 1_000_000, &spec);
+        let names: Vec<&str> = rep.waves.iter().map(|w| w.wave).collect();
+        assert_eq!(names, vec!["map", "shuffle", "reduce"]);
+        // single slot, no setup: simulated map wave is the serial sum and
+        // matches the measured phase exactly → zero drift on that row
+        assert!((rep.waves[0].simulated_s - 3.0).abs() < 1e-9);
+        assert!(rep.waves[0].drift_frac() < 1e-9);
+        let sim_sum: f64 = rep.waves.iter().map(|w| w.simulated_s).sum();
+        assert!((rep.simulated_total_s - sim_sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drift_report_json_and_render_carry_the_rows() {
+        let spec = ClusterSpec::paper_like(1);
+        let rep = drift_report(&drift_stats(), 1_000_000, &spec);
+        let json = rep.to_json();
+        for key in [
+            "\"mode\":\"two_wave\"",
+            "\"max_drift_frac\":",
+            "\"wave\":\"map\"",
+            "\"wave\":\"shuffle\"",
+            "\"wave\":\"reduce\"",
+            "\"measured_total_s\":",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        let text = rep.render();
+        assert!(text.contains("sim-vs-measured drift"));
+        assert!(text.contains("reduce"));
+    }
+
+    #[test]
+    fn wave_drift_zero_measured_is_zero_drift() {
+        let w = WaveDrift {
+            wave: "shuffle",
+            measured_s: 0.0,
+            simulated_s: 0.5,
+        };
+        assert_eq!(w.drift_frac(), 0.0);
+        assert!((w.delta_s() - 0.5).abs() < 1e-12);
     }
 }

@@ -34,6 +34,18 @@
 //! * [`TempSpillDir`] — RAII spill directory for tests/benches: unique per
 //!   construction (pid + process-wide counter), removed on drop, so
 //!   parallel `cargo test` runs cannot collide.
+//!
+//! Run lifecycle is observable through the [trace
+//! layer](crate::mapreduce::trace): the engine emits
+//! [`TraceEvent::RunSealed`] when a map task seals a sorted run,
+//! [`TraceEvent::SpillWritten`] when the run serializes to a [`RunFile`]
+//! (with its [`records`](RunFile::records) /
+//! [`file_bytes`](RunFile::file_bytes) accounting), and
+//! [`TraceEvent::SpillRead`] when a reduce task streams it back.
+//!
+//! [`TraceEvent::RunSealed`]: crate::mapreduce::trace::TraceEvent::RunSealed
+//! [`TraceEvent::SpillWritten`]: crate::mapreduce::trace::TraceEvent::SpillWritten
+//! [`TraceEvent::SpillRead`]: crate::mapreduce::trace::TraceEvent::SpillRead
 
 use std::any::Any;
 use std::cmp::Ordering;

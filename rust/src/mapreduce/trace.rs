@@ -1,0 +1,619 @@
+//! Structured task-event tracing for the MapReduce engine.
+//!
+//! Counters say *how much*, [`JobStats`](crate::mapreduce::engine::JobStats)
+//! says *how long in aggregate* — the trace says **what happened, when**:
+//! every task attempt's schedule/start/finish (plus panics, retries,
+//! speculative clones and their win/lose arbitration), every sealed /
+//! pushed / retracted run, spill file writes and reads, reduce first-start
+//! and catch-up, checkpoint commits and restores, and dead-letters.  A
+//! job's complete per-attempt lifecycle is reconstructible from the event
+//! stream alone; [`crate::metrics::timeline`] renders it as a per-slot
+//! wave Gantt and re-derives the wave metrics (`map_wave_done_secs`,
+//! `reduce_first_start_secs`, `overlap_secs`) that used to be hand-plumbed
+//! per subsystem.
+//!
+//! # Enabling
+//!
+//! Create a [`TraceSpec`] and attach it via
+//! [`JobConfig::with_trace`](crate::mapreduce::JobConfig::with_trace) (or
+//! [`SnConfig::trace`](crate::sn::SnConfig) for the SN variants, which
+//! forward it to every job they run).  After the run, [`TraceSpec::drain`]
+//! returns the records in a deterministic total order.  One spec may be
+//! shared across several jobs (JobSN's two phases, multipass SN): records
+//! carry their job's name, and [`TraceRecord::at_secs`] is measured from
+//! *that job's* start.
+//!
+//! # Cost
+//!
+//! `Option`-cheap when disabled: a job without a spec carries `None`
+//! end-to-end — no sink exists, no buffer is allocated, and every emit
+//! site is a single discriminant test (`tests/prop_trace.rs` pins output
+//! byte-identical trace-on vs trace-off).  When enabled, workers append to
+//! per-worker buffers — the sink shards by worker thread, so appends
+//! never contend across workers in steady state; buffers are drained and
+//! sequence-merged only at [`TraceSpec::drain`].
+//!
+//! # Event schema (JSONL)
+//!
+//! [`TraceRecord::to_json`] flattens a record to one JSON object; a trace
+//! file is one object per line.  Fields:
+//!
+//! | field      | type            | meaning                                       |
+//! |------------|-----------------|-----------------------------------------------|
+//! | `seq`      | int             | global record sequence (total order)          |
+//! | `job`      | string          | job name ([`JobConfig::name`](crate::mapreduce::JobConfig::name)) |
+//! | `phase`    | `"map"` \| `"reduce"` \| `"job"` | event scope              |
+//! | `task`     | int \| null     | task index (`null` for job-level events)      |
+//! | `attempt`  | int             | attempt ordinal within the task (0 = primary) |
+//! | `at_secs`  | number          | seconds since the job started                 |
+//! | `event`    | string          | snake-case [`TraceEvent`] kind                |
+//!
+//! Payload-carrying events add their fields flat on the same object:
+//! `partition`, `records`, `file_bytes`, `late_runs`, `message`, `kind`.
+
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Scope of a trace event: one side of the job, or the job itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TracePhase {
+    Map,
+    Reduce,
+    /// Job-level lifecycle events (`task` is `None`).
+    Job,
+}
+
+impl fmt::Display for TracePhase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TracePhase::Map => write!(f, "map"),
+            TracePhase::Reduce => write!(f, "reduce"),
+            TracePhase::Job => write!(f, "job"),
+        }
+    }
+}
+
+/// Typed payload of one trace record — the event schema.
+///
+/// Attempt-lifecycle events come from the wave runners (serial driver,
+/// barrier scheduler, push dispatcher); run/spill events from the map
+/// task body and the [`ShuffleService`](crate::mapreduce::push);
+/// checkpoint/dead-letter events from the fault-tolerant wave driver.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// The engine opened this job's trace (always at `at_secs == 0.0`).
+    JobStarted,
+    /// The job's result was assembled.
+    JobFinished,
+    /// The map wave fully committed — barrier: before the reduce wave
+    /// launches; push: when the shuffle service seals.
+    MapWaveDone,
+    /// The engine's authoritative first-reduce-start stamp (equals the
+    /// `JobStats::reduce_first_start_secs` value of the same run).
+    ReduceFirstStart,
+    /// An attempt was handed to a slot pool (queued, not yet running).
+    AttemptScheduled,
+    /// The attempt body began executing on a worker slot.
+    AttemptStarted,
+    /// The attempt body completed (it may still lose the win race).
+    AttemptFinished,
+    /// The attempt body panicked; `message` is the panic payload.
+    AttemptPanicked { message: String },
+    /// This attempt's result was committed for its task.
+    AttemptWon,
+    /// The attempt completed but another attempt had already won.
+    AttemptLost,
+    /// A panicked task was resubmitted within its retry budget.
+    TaskRetried,
+    /// The straggler detector cloned a running task onto an idle slot.
+    SpeculativeCloned,
+    /// The map task sealed one sorted run for `partition`.
+    RunSealed { partition: usize, records: u64 },
+    /// A sealed run was serialized to a spill file.
+    SpillWritten { partition: usize, records: u64, file_bytes: u64 },
+    /// A reduce task is about to stream a spilled run file.
+    SpillRead { records: u64, file_bytes: u64 },
+    /// A sealed run was committed into the push shuffle's mailboxes.
+    RunPushed { partition: usize, records: u64 },
+    /// A failed/lost attempt's staged runs were retracted (never visible
+    /// in any committed prefix).
+    RunRetracted { partition: usize },
+    /// A push-mode reduce task's final catch-up batch after seal.
+    ReduceCatchUp { late_runs: u64 },
+    /// A winning attempt's output was committed to the checkpoint
+    /// manifest.
+    CheckpointCommit,
+    /// The task was restored from a checkpoint manifest instead of
+    /// re-executed.
+    CheckpointRestore,
+    /// The task exhausted its retry budget and was dead-lettered.
+    DeadLettered { message: String },
+    /// The deterministic fault injector fired on this attempt
+    /// (`kind` is `"panic"` or `"stall"`).
+    FaultInjected { kind: &'static str },
+}
+
+impl TraceEvent {
+    /// Stable snake-case kind string (the JSONL `event` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::JobStarted => "job_started",
+            TraceEvent::JobFinished => "job_finished",
+            TraceEvent::MapWaveDone => "map_wave_done",
+            TraceEvent::ReduceFirstStart => "reduce_first_start",
+            TraceEvent::AttemptScheduled => "attempt_scheduled",
+            TraceEvent::AttemptStarted => "attempt_started",
+            TraceEvent::AttemptFinished => "attempt_finished",
+            TraceEvent::AttemptPanicked { .. } => "attempt_panicked",
+            TraceEvent::AttemptWon => "attempt_won",
+            TraceEvent::AttemptLost => "attempt_lost",
+            TraceEvent::TaskRetried => "task_retried",
+            TraceEvent::SpeculativeCloned => "speculative_cloned",
+            TraceEvent::RunSealed { .. } => "run_sealed",
+            TraceEvent::SpillWritten { .. } => "spill_written",
+            TraceEvent::SpillRead { .. } => "spill_read",
+            TraceEvent::RunPushed { .. } => "run_pushed",
+            TraceEvent::RunRetracted { .. } => "run_retracted",
+            TraceEvent::ReduceCatchUp { .. } => "reduce_catch_up",
+            TraceEvent::CheckpointCommit => "checkpoint_commit",
+            TraceEvent::CheckpointRestore => "checkpoint_restore",
+            TraceEvent::DeadLettered { .. } => "dead_lettered",
+            TraceEvent::FaultInjected { .. } => "fault_injected",
+        }
+    }
+}
+
+/// One stamped event: `(job, phase, task, attempt, wall-clock)` plus the
+/// typed payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Global sequence number — a total order across all workers and jobs
+    /// sharing the sink.
+    pub seq: u64,
+    /// Name of the job the event belongs to.
+    pub job: Arc<str>,
+    /// Event scope.
+    pub phase: TracePhase,
+    /// Task index; `None` for job-level events.
+    pub task: Option<usize>,
+    /// Attempt ordinal within the task (0 = primary; retries and
+    /// speculative clones consume the next ordinal).
+    pub attempt: u32,
+    /// Seconds since the owning job's start.
+    pub at_secs: f64,
+    /// The typed event.
+    pub event: TraceEvent,
+}
+
+impl TraceRecord {
+    /// Flatten to one JSON object (one JSONL line) per the module-level
+    /// schema table.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("job", Json::str(self.job.as_ref())),
+            ("phase", Json::str(self.phase.to_string())),
+            (
+                "task",
+                match self.task {
+                    Some(t) => Json::num(t as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("attempt", Json::num(self.attempt as f64)),
+            ("at_secs", Json::Num(self.at_secs)),
+            ("event", Json::str(self.event.kind())),
+        ];
+        match &self.event {
+            TraceEvent::RunSealed { partition, records } => {
+                fields.push(("partition", Json::num(*partition as f64)));
+                fields.push(("records", Json::num(*records as f64)));
+            }
+            TraceEvent::SpillWritten {
+                partition,
+                records,
+                file_bytes,
+            } => {
+                fields.push(("partition", Json::num(*partition as f64)));
+                fields.push(("records", Json::num(*records as f64)));
+                fields.push(("file_bytes", Json::num(*file_bytes as f64)));
+            }
+            TraceEvent::SpillRead {
+                records,
+                file_bytes,
+            } => {
+                fields.push(("records", Json::num(*records as f64)));
+                fields.push(("file_bytes", Json::num(*file_bytes as f64)));
+            }
+            TraceEvent::RunPushed { partition, records } => {
+                fields.push(("partition", Json::num(*partition as f64)));
+                fields.push(("records", Json::num(*records as f64)));
+            }
+            TraceEvent::RunRetracted { partition } => {
+                fields.push(("partition", Json::num(*partition as f64)));
+            }
+            TraceEvent::ReduceCatchUp { late_runs } => {
+                fields.push(("late_runs", Json::num(*late_runs as f64)));
+            }
+            TraceEvent::AttemptPanicked { message }
+            | TraceEvent::DeadLettered { message } => {
+                fields.push(("message", Json::str(message.as_str())));
+            }
+            TraceEvent::FaultInjected { kind } => {
+                fields.push(("kind", Json::str(*kind)));
+            }
+            _ => {}
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Number of per-worker buffers.  Worker threads hash onto distinct
+/// buffers, so concurrent appends from different workers touch different
+/// locks — each lock is uncontended in steady state.
+const WORKER_SHARDS: usize = 32;
+
+/// The event store: per-worker append buffers plus a global sequence
+/// counter.  Created via [`TraceSpec`]; the engine only ever sees
+/// `Option<&…>` handles derived from it.
+pub struct TraceSink {
+    seq: AtomicU64,
+    shards: Box<[Mutex<Vec<TraceRecord>>]>,
+}
+
+impl TraceSink {
+    fn new() -> Self {
+        Self {
+            seq: AtomicU64::new(0),
+            // Vec::new allocates nothing: an enabled-but-quiet sink holds
+            // no buffers until the first event lands.
+            shards: (0..WORKER_SHARDS)
+                .map(|_| Mutex::new(Vec::new()))
+                .collect(),
+        }
+    }
+
+    /// The calling worker's buffer index.
+    fn shard_index() -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        (h.finish() % WORKER_SHARDS as u64) as usize
+    }
+
+    fn push(&self, mut rec: TraceRecord) {
+        rec.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.shards[Self::shard_index()].lock().unwrap().push(rec);
+    }
+
+    fn collect(&self, drain: bool) -> Vec<TraceRecord> {
+        let mut all = Vec::new();
+        for shard in self.shards.iter() {
+            let mut buf = shard.lock().unwrap();
+            if drain {
+                all.append(&mut buf);
+            } else {
+                all.extend(buf.iter().cloned());
+            }
+        }
+        all.sort_unstable_by_key(|r| r.seq);
+        all
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
+/// The user-facing tracing handle: create one, attach it to a job (or an
+/// SN run), read the records back out after the run.  Cloning shares the
+/// underlying sink.
+#[derive(Clone)]
+pub struct TraceSpec {
+    sink: Arc<TraceSink>,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSpec {
+    pub fn new() -> Self {
+        Self {
+            sink: Arc::new(TraceSink::new()),
+        }
+    }
+
+    /// Take all recorded events, sequence-ordered, clearing the sink.
+    pub fn drain(&self) -> Vec<TraceRecord> {
+        self.sink.collect(true)
+    }
+
+    /// Copy of all recorded events, sequence-ordered, without clearing.
+    pub fn snapshot(&self) -> Vec<TraceRecord> {
+        self.sink.collect(false)
+    }
+
+    /// Number of events recorded so far.
+    pub fn len(&self) -> usize {
+        self.sink.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialize records as JSONL (one event object per line).
+    pub fn to_jsonl(records: &[TraceRecord]) -> String {
+        let mut s = String::new();
+        for r in records {
+            s.push_str(&r.to_json().to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Open a job-scoped emitting context; stamps `JobStarted` at 0.0.
+    pub(crate) fn job_ctx(&self, job: &str) -> JobTraceCtx {
+        let ctx = JobTraceCtx {
+            sink: Arc::clone(&self.sink),
+            job: Arc::from(job),
+            t0: Instant::now(),
+        };
+        ctx.emit_job_at(TraceEvent::JobStarted, 0.0);
+        ctx
+    }
+}
+
+impl fmt::Debug for TraceSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TraceSpec")
+            .field("recorded", &self.sink.len())
+            .finish()
+    }
+}
+
+/// Per-job emitting context: the sink plus this job's name and start
+/// instant.  Cheap to clone into wave closures.
+#[derive(Clone)]
+pub(crate) struct JobTraceCtx {
+    sink: Arc<TraceSink>,
+    job: Arc<str>,
+    t0: Instant,
+}
+
+impl JobTraceCtx {
+    /// Seconds since this job's trace opened.
+    pub(crate) fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub(crate) fn emit_job(&self, event: TraceEvent) {
+        self.emit_job_at(event, self.now());
+    }
+
+    /// Job-level event with an explicit stamp — used where the engine
+    /// already computed the authoritative job-relative time (e.g. the
+    /// exact `map_wave_done_secs` written into `JobStats`), so derived
+    /// metrics match the stats fields bit-for-bit.
+    pub(crate) fn emit_job_at(&self, event: TraceEvent, at_secs: f64) {
+        self.sink.push(TraceRecord {
+            seq: 0,
+            job: Arc::clone(&self.job),
+            phase: TracePhase::Job,
+            task: None,
+            attempt: 0,
+            at_secs,
+            event,
+        });
+    }
+
+    /// Scope down to one task attempt.
+    pub(crate) fn task(&self, phase: TracePhase, task: usize, attempt: u32) -> TaskTraceCtx {
+        TaskTraceCtx {
+            ctx: self.clone(),
+            phase,
+            task,
+            attempt,
+        }
+    }
+}
+
+impl fmt::Debug for JobTraceCtx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "JobTraceCtx({})", self.job)
+    }
+}
+
+/// Per-attempt emitting context: `(job, phase, task, attempt)` pre-bound
+/// so task bodies stamp events with one call.
+#[derive(Clone)]
+pub(crate) struct TaskTraceCtx {
+    ctx: JobTraceCtx,
+    phase: TracePhase,
+    task: usize,
+    attempt: u32,
+}
+
+impl TaskTraceCtx {
+    pub(crate) fn emit(&self, event: TraceEvent) {
+        self.emit_at(event, self.ctx.now());
+    }
+
+    pub(crate) fn emit_at(&self, event: TraceEvent, at_secs: f64) {
+        self.ctx.sink.push(TraceRecord {
+            seq: 0,
+            job: Arc::clone(&self.ctx.job),
+            phase: self.phase,
+            task: Some(self.task),
+            attempt: self.attempt,
+            at_secs,
+            event,
+        });
+    }
+
+    pub(crate) fn attempt(&self) -> u32 {
+        self.attempt
+    }
+}
+
+impl fmt::Debug for TaskTraceCtx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "TaskTraceCtx({} {} task {} attempt {})",
+            self.ctx.job, self.phase, self.task, self.attempt
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_ctx_stamps_job_started_at_zero() {
+        let spec = TraceSpec::new();
+        let ctx = spec.job_ctx("j");
+        ctx.emit_job(TraceEvent::JobFinished);
+        let recs = spec.drain();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].event, TraceEvent::JobStarted);
+        assert_eq!(recs[0].at_secs, 0.0);
+        assert_eq!(recs[0].phase, TracePhase::Job);
+        assert_eq!(recs[0].task, None);
+        assert_eq!(recs[1].event, TraceEvent::JobFinished);
+        assert!(recs[1].at_secs >= 0.0);
+    }
+
+    #[test]
+    fn fresh_spec_holds_no_events() {
+        let spec = TraceSpec::new();
+        assert!(spec.is_empty());
+        assert!(spec.drain().is_empty());
+    }
+
+    #[test]
+    fn seq_is_a_total_order_across_worker_shards() {
+        let spec = TraceSpec::new();
+        let ctx = spec.job_ctx("j");
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let ctx = ctx.clone();
+            handles.push(std::thread::spawn(move || {
+                for a in 0..50u32 {
+                    ctx.task(TracePhase::Map, t, a)
+                        .emit(TraceEvent::AttemptStarted);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let recs = spec.drain();
+        assert_eq!(recs.len(), 1 + 8 * 50);
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.seq, i as u64, "drain must be seq-sorted and gap-free");
+        }
+    }
+
+    #[test]
+    fn snapshot_does_not_clear() {
+        let spec = TraceSpec::new();
+        let _ctx = spec.job_ctx("j");
+        assert_eq!(spec.snapshot().len(), 1);
+        assert_eq!(spec.snapshot().len(), 1);
+        assert_eq!(spec.drain().len(), 1);
+        assert!(spec.is_empty());
+    }
+
+    #[test]
+    fn jsonl_lines_carry_schema_fields() {
+        let spec = TraceSpec::new();
+        let ctx = spec.job_ctx("myjob");
+        ctx.task(TracePhase::Reduce, 3, 1).emit(TraceEvent::RunPushed {
+            partition: 2,
+            records: 7,
+        });
+        let recs = spec.drain();
+        let jsonl = TraceSpec::to_jsonl(&recs);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(v.get("job").unwrap().as_str(), Some("myjob"));
+        assert_eq!(v.get("phase").unwrap().as_str(), Some("reduce"));
+        assert_eq!(v.get("task").unwrap().as_i64(), Some(3));
+        assert_eq!(v.get("attempt").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("event").unwrap().as_str(), Some("run_pushed"));
+        assert_eq!(v.get("partition").unwrap().as_i64(), Some(2));
+        assert_eq!(v.get("records").unwrap().as_i64(), Some(7));
+        assert!(v.get("at_secs").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn kind_strings_are_stable() {
+        // The CI trace-smoke validator (scripts/validate_trace.py) pins
+        // the same list; renaming a kind is a schema change for both.
+        let cases: Vec<(TraceEvent, &str)> = vec![
+            (TraceEvent::JobStarted, "job_started"),
+            (TraceEvent::JobFinished, "job_finished"),
+            (TraceEvent::MapWaveDone, "map_wave_done"),
+            (TraceEvent::ReduceFirstStart, "reduce_first_start"),
+            (TraceEvent::AttemptScheduled, "attempt_scheduled"),
+            (TraceEvent::AttemptStarted, "attempt_started"),
+            (TraceEvent::AttemptFinished, "attempt_finished"),
+            (
+                TraceEvent::AttemptPanicked { message: String::new() },
+                "attempt_panicked",
+            ),
+            (TraceEvent::AttemptWon, "attempt_won"),
+            (TraceEvent::AttemptLost, "attempt_lost"),
+            (TraceEvent::TaskRetried, "task_retried"),
+            (TraceEvent::SpeculativeCloned, "speculative_cloned"),
+            (
+                TraceEvent::RunSealed { partition: 0, records: 0 },
+                "run_sealed",
+            ),
+            (
+                TraceEvent::SpillWritten { partition: 0, records: 0, file_bytes: 0 },
+                "spill_written",
+            ),
+            (
+                TraceEvent::SpillRead { records: 0, file_bytes: 0 },
+                "spill_read",
+            ),
+            (
+                TraceEvent::RunPushed { partition: 0, records: 0 },
+                "run_pushed",
+            ),
+            (TraceEvent::RunRetracted { partition: 0 }, "run_retracted"),
+            (TraceEvent::ReduceCatchUp { late_runs: 0 }, "reduce_catch_up"),
+            (TraceEvent::CheckpointCommit, "checkpoint_commit"),
+            (TraceEvent::CheckpointRestore, "checkpoint_restore"),
+            (
+                TraceEvent::DeadLettered { message: String::new() },
+                "dead_lettered",
+            ),
+            (TraceEvent::FaultInjected { kind: "panic" }, "fault_injected"),
+        ];
+        for (ev, want) in cases {
+            assert_eq!(ev.kind(), want);
+        }
+    }
+
+    #[test]
+    fn emit_at_preserves_exact_stamp() {
+        let spec = TraceSpec::new();
+        let ctx = spec.job_ctx("j");
+        let stamp = 0.123_456_789_f64;
+        ctx.emit_job_at(TraceEvent::MapWaveDone, stamp);
+        let recs = spec.drain();
+        assert_eq!(recs[1].at_secs, stamp, "stamps must round-trip exactly");
+    }
+}

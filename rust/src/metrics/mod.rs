@@ -1,5 +1,7 @@
-//! Reporting: phase timers and experiment report rendering.
+//! Reporting: phase timers, trace timelines, and experiment report
+//! rendering.
 
 pub mod histogram;
 pub mod report;
+pub mod timeline;
 pub mod timer;

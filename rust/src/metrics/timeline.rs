@@ -1,0 +1,540 @@
+//! Job timelines and wave Gantt rendering from the trace event stream.
+//!
+//! [`JobTimeline::from_records`] folds a [`trace`](crate::mapreduce::trace)
+//! event stream into per-attempt spans, assigns each span a *lane* (a
+//! reconstructed worker slot: the minimal set of sequential tracks that
+//! can host the observed concurrency, computed greedily per phase), and
+//! re-derives the wave metrics — `map_wave_done_secs`,
+//! `reduce_first_start_secs`, `overlap_secs` — that the engine previously
+//! hand-plumbed through `JobStats` per subsystem.  When the engine stamps
+//! its authoritative [`MapWaveDone`](crate::mapreduce::trace::TraceEvent)
+//! / [`ReduceFirstStart`](crate::mapreduce::trace::TraceEvent) events, the
+//! derived values equal the `JobStats` fields bit-for-bit
+//! (`tests/prop_trace.rs` pins this).
+//!
+//! Two artifacts come out: [`JobTimeline::render_gantt`] (a per-slot text
+//! Gantt for terminals) and [`JobTimeline::to_json`] (the machine-readable
+//! timeline consumed by CI's `trace-smoke` validator).
+
+use std::collections::BTreeMap;
+
+use crate::mapreduce::trace::{TraceEvent, TracePhase, TraceRecord};
+use crate::util::json::Json;
+
+/// How one task attempt ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Result committed for its task (scheduler paths emit explicit
+    /// win/lose arbitration).
+    Won,
+    /// Completed on a path without win arbitration (serial driver).
+    Finished,
+    /// Completed, but another attempt had already won the task.
+    Lost,
+    /// The attempt body panicked.
+    Panicked,
+    /// Started but never reached a terminal event (zero-width span).
+    Open,
+}
+
+impl SpanOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanOutcome::Won => "won",
+            SpanOutcome::Finished => "finished",
+            SpanOutcome::Lost => "lost",
+            SpanOutcome::Panicked => "panicked",
+            SpanOutcome::Open => "open",
+        }
+    }
+
+    fn glyph(&self) -> char {
+        match self {
+            SpanOutcome::Won | SpanOutcome::Finished => '#',
+            SpanOutcome::Lost => '=',
+            SpanOutcome::Panicked => 'x',
+            SpanOutcome::Open => '?',
+        }
+    }
+}
+
+/// One task attempt's lifetime on the timeline.
+#[derive(Debug, Clone)]
+pub struct TaskSpan {
+    /// [`TracePhase::Map`] or [`TracePhase::Reduce`].
+    pub phase: TracePhase,
+    pub task: usize,
+    pub attempt: u32,
+    /// First `attempt_started` stamp (falls back to `attempt_scheduled`).
+    pub start_secs: f64,
+    /// Last terminal stamp (finish/panic/win/lose); `start_secs` if the
+    /// attempt never reached one.
+    pub end_secs: f64,
+    pub outcome: SpanOutcome,
+    /// Reconstructed worker slot within the phase's pool (0-based,
+    /// contiguous).
+    pub lane: usize,
+}
+
+/// One job's reconstructed timeline.
+#[derive(Debug, Clone)]
+pub struct JobTimeline {
+    pub job: String,
+    /// All attempt spans, sorted by `(start, phase, task, attempt)`.
+    pub spans: Vec<TaskSpan>,
+    /// The engine's authoritative map-wave-commit stamp, if it emitted
+    /// one ([`TraceEvent::MapWaveDone`]).
+    pub map_wave_done_secs: Option<f64>,
+    /// The engine's authoritative first-reduce-start stamp, if present.
+    pub reduce_first_start_secs: Option<f64>,
+    /// Timeline extent: the max of every span end and job-level stamp.
+    pub duration_secs: f64,
+    /// Lanes used by map attempts (reconstructed map slots).
+    pub map_lanes: usize,
+    /// Lanes used by reduce attempts (reconstructed reduce slots).
+    pub reduce_lanes: usize,
+}
+
+/// Per-attempt fold state while scanning the event stream.
+#[derive(Default)]
+struct SpanBuild {
+    scheduled: Option<f64>,
+    started: Option<f64>,
+    terminal: Option<f64>,
+    finished: bool,
+    won: bool,
+    lost: bool,
+    panicked: bool,
+}
+
+impl SpanBuild {
+    fn outcome(&self) -> SpanOutcome {
+        if self.panicked {
+            SpanOutcome::Panicked
+        } else if self.lost {
+            SpanOutcome::Lost
+        } else if self.won {
+            SpanOutcome::Won
+        } else if self.finished {
+            SpanOutcome::Finished
+        } else {
+            SpanOutcome::Open
+        }
+    }
+}
+
+impl JobTimeline {
+    /// Distinct job names in the stream, in first-appearance order.
+    pub fn jobs(records: &[TraceRecord]) -> Vec<String> {
+        let mut seen = Vec::new();
+        for r in records {
+            if !seen.iter().any(|j: &String| j.as_str() == r.job.as_ref()) {
+                seen.push(r.job.to_string());
+            }
+        }
+        seen
+    }
+
+    /// Fold the records belonging to `job` into a timeline.
+    pub fn from_records(job: &str, records: &[TraceRecord]) -> Self {
+        let mut builds: BTreeMap<(u8, usize, u32), SpanBuild> = BTreeMap::new();
+        let mut map_wave_done = None;
+        let mut reduce_first_start = None;
+        let mut extent = 0.0f64;
+        for r in records.iter().filter(|r| r.job.as_ref() == job) {
+            extent = extent.max(r.at_secs);
+            let key = match (r.phase, r.task) {
+                (TracePhase::Map, Some(t)) => (0u8, t, r.attempt),
+                (TracePhase::Reduce, Some(t)) => (1u8, t, r.attempt),
+                _ => {
+                    match r.event {
+                        TraceEvent::MapWaveDone => map_wave_done = Some(r.at_secs),
+                        TraceEvent::ReduceFirstStart => reduce_first_start = Some(r.at_secs),
+                        _ => {}
+                    }
+                    continue;
+                }
+            };
+            let b = builds.entry(key).or_default();
+            match r.event {
+                TraceEvent::AttemptScheduled => {
+                    b.scheduled.get_or_insert(r.at_secs);
+                }
+                TraceEvent::AttemptStarted => {
+                    b.started.get_or_insert(r.at_secs);
+                }
+                TraceEvent::AttemptFinished => {
+                    b.finished = true;
+                    b.terminal = Some(b.terminal.unwrap_or(0.0).max(r.at_secs));
+                }
+                TraceEvent::AttemptPanicked { .. } => {
+                    b.panicked = true;
+                    b.terminal = Some(b.terminal.unwrap_or(0.0).max(r.at_secs));
+                }
+                TraceEvent::AttemptWon => {
+                    b.won = true;
+                    b.terminal = Some(b.terminal.unwrap_or(0.0).max(r.at_secs));
+                }
+                TraceEvent::AttemptLost => {
+                    b.lost = true;
+                    b.terminal = Some(b.terminal.unwrap_or(0.0).max(r.at_secs));
+                }
+                _ => {}
+            }
+        }
+        let mut spans: Vec<TaskSpan> = builds
+            .into_iter()
+            .filter_map(|((ph, task, attempt), b)| {
+                let start = b.started.or(b.scheduled)?;
+                let end = b.terminal.unwrap_or(start).max(start);
+                Some(TaskSpan {
+                    phase: if ph == 0 { TracePhase::Map } else { TracePhase::Reduce },
+                    task,
+                    attempt,
+                    start_secs: start,
+                    end_secs: end,
+                    outcome: b.outcome(),
+                    lane: 0,
+                })
+            })
+            .collect();
+        spans.sort_by(|a, b| {
+            a.start_secs
+                .partial_cmp(&b.start_secs)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| (a.phase == TracePhase::Reduce).cmp(&(b.phase == TracePhase::Reduce)))
+                .then_with(|| a.task.cmp(&b.task))
+                .then_with(|| a.attempt.cmp(&b.attempt))
+        });
+        let map_lanes = assign_lanes(&mut spans, TracePhase::Map);
+        let reduce_lanes = assign_lanes(&mut spans, TracePhase::Reduce);
+        for s in &spans {
+            extent = extent.max(s.end_secs);
+        }
+        Self {
+            job: job.to_string(),
+            spans,
+            map_wave_done_secs: map_wave_done,
+            reduce_first_start_secs: reduce_first_start,
+            duration_secs: extent,
+            map_lanes,
+            reduce_lanes,
+        }
+    }
+
+    /// Map-wave completion: the engine's stamp when present, else the
+    /// last map attempt end observed in the stream.
+    pub fn derived_map_wave_done(&self) -> Option<f64> {
+        self.map_wave_done_secs.or_else(|| {
+            self.spans
+                .iter()
+                .filter(|s| s.phase == TracePhase::Map)
+                .map(|s| s.end_secs)
+                .fold(None, |m: Option<f64>, e| Some(m.map_or(e, |m| m.max(e))))
+        })
+    }
+
+    /// First reduce start: the engine's stamp when present, else the
+    /// earliest reduce attempt start observed in the stream.
+    pub fn derived_reduce_first_start(&self) -> Option<f64> {
+        self.reduce_first_start_secs.or_else(|| {
+            self.spans
+                .iter()
+                .filter(|s| s.phase == TracePhase::Reduce)
+                .map(|s| s.start_secs)
+                .fold(None, |m: Option<f64>, e| Some(m.map_or(e, |m| m.min(e))))
+        })
+    }
+
+    /// Map/reduce wave overlap, with the engine's clamp semantics:
+    /// `(map_wave_done − reduce_first_start).max(0)`, 0 when either side
+    /// is absent.  Equals `JobStats::overlap_secs` for a traced run.
+    pub fn overlap_secs(&self) -> f64 {
+        match (self.derived_map_wave_done(), self.derived_reduce_first_start()) {
+            (Some(done), Some(first)) => (done - first).max(0.0),
+            _ => 0.0,
+        }
+    }
+
+    /// Total reconstructed slots (map + reduce lanes).
+    pub fn lanes(&self) -> usize {
+        self.map_lanes + self.reduce_lanes
+    }
+
+    /// Per-slot text Gantt, `width` columns wide.
+    ///
+    /// One row per reconstructed slot; `#` = committed/finished work,
+    /// `=` = a speculative or retried attempt that lost, `x` = a panicked
+    /// attempt, `?` = an attempt with no terminal event.
+    pub fn render_gantt(&self, width: usize) -> String {
+        let width = width.max(10);
+        let dur = self.duration_secs.max(1e-9);
+        let mut out = format!(
+            "job {}  span {:.3}s  map_wave_done {}  reduce_first_start {}  overlap {:.3}s\n",
+            self.job,
+            self.duration_secs,
+            self.map_wave_done_secs
+                .map(|v| format!("{v:.3}s"))
+                .unwrap_or_else(|| "-".into()),
+            self.reduce_first_start_secs
+                .map(|v| format!("{v:.3}s"))
+                .unwrap_or_else(|| "-".into()),
+            self.overlap_secs(),
+        );
+        let mut rows: Vec<(String, Vec<char>)> = Vec::new();
+        for lane in 0..self.map_lanes {
+            rows.push((format!("map[{lane}]"), vec![' '; width]));
+        }
+        for lane in 0..self.reduce_lanes {
+            rows.push((format!("red[{lane}]"), vec![' '; width]));
+        }
+        for s in &self.spans {
+            let row = match s.phase {
+                TracePhase::Map => s.lane,
+                _ => self.map_lanes + s.lane,
+            };
+            let c0 = ((s.start_secs / dur) * width as f64).floor() as usize;
+            let c1 = ((s.end_secs / dur) * width as f64).ceil() as usize;
+            let c0 = c0.min(width - 1);
+            let c1 = c1.clamp(c0 + 1, width);
+            for cell in rows[row].1[c0..c1].iter_mut() {
+                *cell = s.outcome.glyph();
+            }
+        }
+        let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+        for (label, cells) in rows {
+            out.push_str(&format!(
+                "  {label:<label_w$} |{}|\n",
+                cells.into_iter().collect::<String>()
+            ));
+        }
+        out.push_str("  legend: # committed  = lost attempt  x panicked  ? open\n");
+        out
+    }
+
+    /// Machine-readable timeline artifact (the `trace-smoke` CI job
+    /// validates this shape).
+    pub fn to_json(&self) -> Json {
+        let spans: Vec<Json> = self
+            .spans
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("phase", Json::str(s.phase.to_string())),
+                    ("task", Json::num(s.task as f64)),
+                    ("attempt", Json::num(s.attempt as f64)),
+                    ("lane", Json::num(s.lane as f64)),
+                    ("start_secs", Json::Num(s.start_secs)),
+                    ("end_secs", Json::Num(s.end_secs)),
+                    ("outcome", Json::str(s.outcome.as_str())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("job", Json::str(self.job.as_str())),
+            ("duration_secs", Json::Num(self.duration_secs)),
+            (
+                "map_wave_done_secs",
+                self.map_wave_done_secs.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "reduce_first_start_secs",
+                self.reduce_first_start_secs
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null),
+            ),
+            ("overlap_secs", Json::Num(self.overlap_secs())),
+            ("map_lanes", Json::num(self.map_lanes as f64)),
+            ("reduce_lanes", Json::num(self.reduce_lanes as f64)),
+            ("lanes", Json::num(self.lanes() as f64)),
+            ("spans", Json::Arr(spans)),
+        ])
+    }
+}
+
+/// Greedy interval-graph lane assignment for one phase: walk spans in
+/// start order, reuse the lowest-numbered lane that is free at the span's
+/// start, else open a new one.  The lane count is exactly the phase's
+/// peak observed concurrency — the reconstructed slot count.
+fn assign_lanes(spans: &mut [TaskSpan], phase: TracePhase) -> usize {
+    let mut lane_free_at: Vec<f64> = Vec::new();
+    for s in spans.iter_mut().filter(|s| s.phase == phase) {
+        let lane = lane_free_at
+            .iter()
+            .position(|&free| free <= s.start_secs + 1e-12);
+        let lane = match lane {
+            Some(l) => l,
+            None => {
+                lane_free_at.push(0.0);
+                lane_free_at.len() - 1
+            }
+        };
+        lane_free_at[lane] = s.end_secs;
+        s.lane = lane;
+    }
+    lane_free_at.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn rec(
+        seq: u64,
+        job: &str,
+        phase: TracePhase,
+        task: Option<usize>,
+        attempt: u32,
+        at: f64,
+        event: TraceEvent,
+    ) -> TraceRecord {
+        TraceRecord {
+            seq,
+            job: Arc::from(job),
+            phase,
+            task,
+            attempt,
+            at_secs: at,
+            event,
+        }
+    }
+
+    fn sample() -> Vec<TraceRecord> {
+        vec![
+            rec(0, "j", TracePhase::Job, None, 0, 0.0, TraceEvent::JobStarted),
+            // map task 0: two concurrent attempts, attempt 1 wins
+            rec(1, "j", TracePhase::Map, Some(0), 0, 0.00, TraceEvent::AttemptStarted),
+            rec(2, "j", TracePhase::Map, Some(0), 1, 0.01, TraceEvent::AttemptStarted),
+            rec(3, "j", TracePhase::Map, Some(0), 1, 0.05, TraceEvent::AttemptWon),
+            rec(4, "j", TracePhase::Map, Some(0), 0, 0.06, TraceEvent::AttemptLost),
+            // map task 1: single attempt
+            rec(5, "j", TracePhase::Map, Some(1), 0, 0.02, TraceEvent::AttemptStarted),
+            rec(6, "j", TracePhase::Map, Some(1), 0, 0.08, TraceEvent::AttemptWon),
+            rec(7, "j", TracePhase::Job, None, 0, 0.08, TraceEvent::MapWaveDone),
+            // reduce task 0 starts before the map wave sealed (overlap)
+            rec(8, "j", TracePhase::Reduce, Some(0), 0, 0.04, TraceEvent::AttemptStarted),
+            rec(9, "j", TracePhase::Job, None, 0, 0.04, TraceEvent::ReduceFirstStart),
+            rec(10, "j", TracePhase::Reduce, Some(0), 0, 0.10, TraceEvent::AttemptWon),
+            rec(11, "j", TracePhase::Job, None, 0, 0.11, TraceEvent::JobFinished),
+        ]
+    }
+
+    #[test]
+    fn folds_spans_and_wave_metrics() {
+        let tl = JobTimeline::from_records("j", &sample());
+        assert_eq!(tl.spans.len(), 4);
+        assert_eq!(tl.map_wave_done_secs, Some(0.08));
+        assert_eq!(tl.reduce_first_start_secs, Some(0.04));
+        assert!((tl.overlap_secs() - 0.04).abs() < 1e-12);
+        assert_eq!(tl.duration_secs, 0.11);
+        let won: Vec<_> = tl
+            .spans
+            .iter()
+            .filter(|s| s.outcome == SpanOutcome::Won)
+            .collect();
+        assert_eq!(won.len(), 3);
+        assert!(tl
+            .spans
+            .iter()
+            .any(|s| s.outcome == SpanOutcome::Lost && s.task == 0 && s.attempt == 0));
+    }
+
+    #[test]
+    fn lanes_reconstruct_peak_concurrency() {
+        let tl = JobTimeline::from_records("j", &sample());
+        // three map attempts overlap in [0.02, 0.05] → 3 map lanes
+        assert_eq!(tl.map_lanes, 3);
+        assert_eq!(tl.reduce_lanes, 1);
+        assert_eq!(tl.lanes(), 4);
+        // lanes are contiguous from 0 within each phase
+        for phase in [TracePhase::Map, TracePhase::Reduce] {
+            let lanes: std::collections::BTreeSet<usize> = tl
+                .spans
+                .iter()
+                .filter(|s| s.phase == phase)
+                .map(|s| s.lane)
+                .collect();
+            let n = lanes.len();
+            assert_eq!(lanes.into_iter().collect::<Vec<_>>(), (0..n).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn sequential_spans_share_a_lane() {
+        let recs = vec![
+            rec(0, "j", TracePhase::Map, Some(0), 0, 0.0, TraceEvent::AttemptStarted),
+            rec(1, "j", TracePhase::Map, Some(0), 0, 0.1, TraceEvent::AttemptFinished),
+            rec(2, "j", TracePhase::Map, Some(1), 0, 0.1, TraceEvent::AttemptStarted),
+            rec(3, "j", TracePhase::Map, Some(1), 0, 0.2, TraceEvent::AttemptFinished),
+        ];
+        let tl = JobTimeline::from_records("j", &recs);
+        assert_eq!(tl.map_lanes, 1, "back-to-back tasks fit one slot");
+    }
+
+    #[test]
+    fn derived_metrics_fall_back_to_spans() {
+        // no explicit MapWaveDone / ReduceFirstStart events
+        let recs = vec![
+            rec(0, "j", TracePhase::Map, Some(0), 0, 0.0, TraceEvent::AttemptStarted),
+            rec(1, "j", TracePhase::Map, Some(0), 0, 0.07, TraceEvent::AttemptFinished),
+            rec(2, "j", TracePhase::Reduce, Some(0), 0, 0.03, TraceEvent::AttemptStarted),
+            rec(3, "j", TracePhase::Reduce, Some(0), 0, 0.09, TraceEvent::AttemptFinished),
+        ];
+        let tl = JobTimeline::from_records("j", &recs);
+        assert_eq!(tl.map_wave_done_secs, None);
+        assert_eq!(tl.derived_map_wave_done(), Some(0.07));
+        assert_eq!(tl.derived_reduce_first_start(), Some(0.03));
+        assert!((tl.overlap_secs() - 0.04).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_overlap_clamps_to_zero() {
+        let recs = vec![
+            rec(0, "j", TracePhase::Job, None, 0, 0.05, TraceEvent::MapWaveDone),
+            rec(1, "j", TracePhase::Job, None, 0, 0.05, TraceEvent::ReduceFirstStart),
+        ];
+        let tl = JobTimeline::from_records("j", &recs);
+        assert_eq!(tl.overlap_secs(), 0.0);
+    }
+
+    #[test]
+    fn gantt_renders_all_lanes() {
+        let tl = JobTimeline::from_records("j", &sample());
+        let g = tl.render_gantt(40);
+        assert!(g.contains("map[0]"));
+        assert!(g.contains("map[2]"));
+        assert!(g.contains("red[0]"));
+        assert!(g.contains('#'));
+        assert!(g.contains('='), "lost attempt must render distinctly:\n{g}");
+    }
+
+    #[test]
+    fn json_artifact_shape() {
+        let tl = JobTimeline::from_records("j", &sample());
+        let j = tl.to_json();
+        assert_eq!(j.get("job").unwrap().as_str(), Some("j"));
+        assert_eq!(j.get("lanes").unwrap().as_i64(), Some(4));
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 4);
+        for s in spans {
+            for field in ["phase", "task", "attempt", "lane", "start_secs", "end_secs", "outcome"] {
+                assert!(s.get(field).is_some(), "span missing {field}");
+            }
+        }
+        // round-trips through the serializer
+        let re = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(re.get("lanes").unwrap().as_i64(), Some(4));
+    }
+
+    #[test]
+    fn multi_job_streams_split_by_name() {
+        let mut recs = sample();
+        recs.push(rec(12, "k", TracePhase::Map, Some(0), 0, 0.0, TraceEvent::AttemptStarted));
+        recs.push(rec(13, "k", TracePhase::Map, Some(0), 0, 0.01, TraceEvent::AttemptFinished));
+        assert_eq!(JobTimeline::jobs(&recs), vec!["j".to_string(), "k".to_string()]);
+        let tk = JobTimeline::from_records("k", &recs);
+        assert_eq!(tk.spans.len(), 1);
+        assert_eq!(tk.spans[0].outcome, SpanOutcome::Finished);
+    }
+}

@@ -474,6 +474,7 @@ mod tests {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         };
         let res = crate::sn::repsn::run(&entities, &cfg).unwrap();
         let mut expect = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), w);

@@ -140,7 +140,8 @@ pub fn run_with_options(
             .with_spill(cfg.spill.as_ref().map(crate::sn::codec::boundary_job_spec))
             .with_push(cfg.push)
             .with_faults(cfg.faults.clone())
-            .with_retries(cfg.max_task_retries);
+            .with_retries(cfg.max_task_retries)
+            .with_trace(cfg.trace.clone());
         // boundary index spreads over the phase-2 reduce tasks
         struct BoundaryPartitioner;
         impl crate::mapreduce::types::Partitioner<SnKey> for BoundaryPartitioner {
@@ -215,6 +216,7 @@ mod tests {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         }
     }
 
@@ -253,6 +255,7 @@ mod tests {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 4);

@@ -294,6 +294,7 @@ pub fn bdm_job(
     push: bool,
     faults: Option<crate::mapreduce::fault::FaultPlan>,
     max_task_retries: Option<u32>,
+    trace: Option<crate::mapreduce::trace::TraceSpec>,
     exec: Exec<'_>,
 ) -> BdmJobResult {
     let m = m.max(1);
@@ -318,7 +319,8 @@ pub fn bdm_job(
         .with_spill(spill)
         .with_push(push)
         .with_faults(faults)
-        .with_retries(max_task_retries);
+        .with_retries(max_task_retries)
+        .with_trace(trace);
     let res = exec.run_job_with_combiner(
         &cfg,
         input,
@@ -371,6 +373,7 @@ mod tests {
             None,
             None,
             false,
+            None,
             None,
             None,
             Exec::Serial,

@@ -351,7 +351,8 @@ pub(super) fn run_job(
         .with_spill(cfg.spill.as_ref().map(crate::sn::codec::ranked_job_spec))
         .with_push(cfg.push)
         .with_faults(cfg.faults.clone())
-        .with_retries(cfg.max_task_retries);
+        .with_retries(cfg.max_task_retries)
+        .with_trace(cfg.trace.clone());
     let mapper: Arc<dyn MapTaskFactory<u32, Arc<Entity>, SnKey, Ranked>> =
         Arc::new(BlockSplitMapFactory {
             w: cfg.window,

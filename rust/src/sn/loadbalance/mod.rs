@@ -251,6 +251,7 @@ fn run_pipeline(
         cfg.push,
         cfg.faults.clone(),
         cfg.max_task_retries,
+        cfg.trace.clone(),
         exec,
     );
     let matrix = Arc::new(analysis.bdm);

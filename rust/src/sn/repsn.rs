@@ -222,7 +222,8 @@ fn job_parts(
         .with_spill(cfg.spill.as_ref().map(crate::sn::codec::entity_job_spec))
         .with_push(cfg.push)
         .with_faults(cfg.faults.clone())
-        .with_retries(cfg.max_task_retries);
+        .with_retries(cfg.max_task_retries)
+        .with_trace(cfg.trace.clone());
     let mapper: Arc<dyn MapTaskFactory<(), Arc<Entity>, SnKey, Arc<Entity>>> =
         Arc::new(RepSnMapFactory {
             w: cfg.window,
@@ -363,6 +364,7 @@ mod tests {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         }
     }
 
@@ -403,6 +405,7 @@ mod tests {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let replicated = res.counters.get(counter_names::REPLICATED_ENTITIES);
@@ -439,6 +442,7 @@ mod tests {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 6);

@@ -166,7 +166,8 @@ pub(crate) fn run_srp_job(
         .with_spill(cfg.spill.as_ref().map(crate::sn::codec::entity_job_spec))
         .with_push(cfg.push)
         .with_faults(cfg.faults.clone())
-        .with_retries(cfg.max_task_retries);
+        .with_retries(cfg.max_task_retries)
+        .with_trace(cfg.trace.clone());
     exec.run_job(
         &job_cfg,
         input,
@@ -260,6 +261,7 @@ mod tests {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         };
         let res = run(&entities, &cfg).unwrap();
         assert_eq!(res.pairs.len(), 12);
@@ -293,6 +295,7 @@ mod tests {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 5);

@@ -91,7 +91,8 @@ pub fn run_on(entities: &[Entity], cfg: &SnConfig, exec: Exec<'_>) -> anyhow::Re
         .with_spill(cfg.spill.as_ref().map(crate::sn::codec::block_job_spec))
         .with_push(cfg.push)
         .with_faults(cfg.faults.clone())
-        .with_retries(cfg.max_task_retries);
+        .with_retries(cfg.max_task_retries)
+        .with_trace(cfg.trace.clone());
     let res = exec.run_job(
         &job_cfg,
         input,

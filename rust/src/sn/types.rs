@@ -10,6 +10,7 @@ use crate::mapreduce::counters::Counters;
 use crate::mapreduce::engine::JobStats;
 use crate::mapreduce::fault::FaultPlan;
 use crate::mapreduce::sim::JobProfile;
+use crate::mapreduce::trace::TraceSpec;
 use crate::mapreduce::types::SizeEstimate;
 use crate::sn::loadbalance::BalanceStrategy;
 use crate::sn::partition::PartitionFn;
@@ -176,6 +177,12 @@ pub struct SnConfig {
     /// (default) defers to the scheduler-wide budget; the serial
     /// executor stays fail-fast regardless.
     pub max_task_retries: Option<u32>,
+    /// Task-event trace sink forwarded to every job the variant runs
+    /// ([`crate::mapreduce::JobConfig::trace`]).  All jobs of a variant
+    /// share the sink — JobSN's two jobs interleave in one stream,
+    /// distinguished by the `job` field of each record.  `None` (default)
+    /// records nothing and allocates nothing.
+    pub trace: Option<TraceSpec>,
 }
 
 impl Default for SnConfig {
@@ -193,6 +200,7 @@ impl Default for SnConfig {
             push: false,
             faults: None,
             max_task_retries: None,
+            trace: None,
         }
     }
 }
@@ -210,6 +218,7 @@ impl std::fmt::Debug for SnConfig {
             .field("push", &self.push)
             .field("faults", &self.faults)
             .field("max_task_retries", &self.max_task_retries)
+            .field("trace", &self.trace.is_some())
             .finish()
     }
 }

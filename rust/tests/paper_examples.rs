@@ -58,6 +58,7 @@ fn fig_cfg(w: usize, m: usize) -> SnConfig {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     }
 }
 

@@ -41,6 +41,7 @@ fn sn_config(entities: &[Entity], w: usize) -> SnConfig {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     }
 }
 

@@ -54,6 +54,7 @@ fn unbalanced_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> 
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     }
 }
 

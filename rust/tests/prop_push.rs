@@ -62,6 +62,7 @@ fn base_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConf
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     }
 }
 

@@ -51,6 +51,7 @@ fn random_config(rng: &mut Rng, entities: &[Entity]) -> SnConfig {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     }
 }
 

@@ -51,6 +51,7 @@ fn config(
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     }
 }
 

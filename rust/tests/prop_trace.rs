@@ -1,0 +1,523 @@
+//! Task-event trace invariants (ISSUE 7 acceptance).
+//!
+//! With a [`TraceSpec`] attached through [`SnConfig::trace`], every SN
+//! variant — standard blocking, SRP, JobSN, RepSN, and the
+//! BlockSplit/PairRange two-job pipeline — must emit a stream that is
+//! well-ordered per attempt, names exactly one winner per decided task,
+//! never lets a retracted run masquerade as committed, and re-derives
+//! the engine's wave metrics (`map_wave_done_secs`,
+//! `reduce_first_start_secs`, `overlap_secs`) *exactly* from the
+//! job-level stamps.  A second guard pins the zero-overhead contract:
+//! running with `trace: None` produces byte-identical output to the
+//! traced run, and an unattached sink stays empty.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use snmr::data::skew::zipf_skew_block_keys;
+use snmr::er::blockkey::TitlePrefixKey;
+use snmr::er::entity::Entity;
+use snmr::mapreduce::counters::names;
+use snmr::mapreduce::scheduler::{Exec, JobScheduler, PushMode, SchedulerConfig};
+use snmr::mapreduce::trace::{TraceEvent, TracePhase, TraceRecord, TraceSpec};
+use snmr::mapreduce::FaultPlan;
+use snmr::metrics::timeline::{JobTimeline, SpanOutcome};
+use snmr::sn::balance::pair_balanced_min_size;
+use snmr::sn::loadbalance::BalanceStrategy;
+use snmr::sn::types::{SnConfig, SnMode, SnResult};
+use snmr::sn::{jobsn, repsn, srp, standard_blocking};
+use snmr::util::prop::Cases;
+use snmr::util::rng::Rng;
+use snmr::{prop_assert, prop_assert_eq};
+
+/// Zipf block-key corpus (same shape as `prop_push`): skewed blocks so
+/// map tasks finish at staggered times and attempts interleave.
+fn corpus(rng: &mut Rng, n: usize) -> Vec<Entity> {
+    let mut ids: Vec<u64> = (0..(2 * n) as u64).collect();
+    rng.shuffle(&mut ids);
+    let mut entities: Vec<Entity> = (0..n)
+        .map(|i| {
+            Entity::new(
+                ids[i],
+                &format!("xx parallel sorted neighborhood {i}"),
+                &"entity resolution with mapreduce ".repeat(2),
+            )
+        })
+        .collect();
+    zipf_skew_block_keys(&mut entities, rng.range(8, 40), 1.3, rng.next_u64());
+    entities
+}
+
+fn base_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConfig {
+    let bk = TitlePrefixKey::new(2);
+    let partitioner = pair_balanced_min_size(entities, &bk, r, w);
+    SnConfig {
+        window: w,
+        num_map_tasks: rng.range(2, 7),
+        workers: rng.range(1, 4),
+        partitioner: Arc::new(partitioner),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+        sort_buffer_records: Some(rng.range(8, 64)),
+        balance: BalanceStrategy::None,
+        spill: None,
+        push: false,
+        faults: None,
+        max_task_retries: None,
+        trace: None,
+    }
+}
+
+type VariantFn = fn(&[Entity], &SnConfig, Exec<'_>) -> anyhow::Result<SnResult>;
+
+fn variants() -> Vec<(&'static str, VariantFn, BalanceStrategy)> {
+    vec![
+        ("standard_blocking", standard_blocking::run_on, BalanceStrategy::None),
+        ("srp", srp::run_on, BalanceStrategy::None),
+        ("jobsn", jobsn::run_on, BalanceStrategy::None),
+        ("repsn", repsn::run_on, BalanceStrategy::None),
+        ("blocksplit", repsn::run_on, BalanceStrategy::BlockSplit),
+        ("pairrange", repsn::run_on, BalanceStrategy::PairRange),
+    ]
+}
+
+fn phase_ix(p: &TracePhase) -> u8 {
+    match p {
+        TracePhase::Map => 0,
+        TracePhase::Reduce => 1,
+        TracePhase::Job => 2,
+    }
+}
+
+/// `(job, phase, task, attempt)` — one task attempt's identity.
+type AttemptKey = (String, u8, usize, u32);
+
+/// Group task-scoped records by [`AttemptKey`], preserving global `seq`
+/// order within each group.
+fn attempt_groups(records: &[TraceRecord]) -> BTreeMap<AttemptKey, Vec<&TraceRecord>> {
+    let mut groups: BTreeMap<AttemptKey, Vec<&TraceRecord>> = BTreeMap::new();
+    for r in records {
+        if let Some(task) = r.task {
+            groups
+                .entry((r.job.to_string(), phase_ix(&r.phase), task, r.attempt))
+                .or_default()
+                .push(r);
+        }
+    }
+    groups
+}
+
+/// Every attempt's lifecycle events appear in causal order: scheduled
+/// before started, started before any terminal event, win/lose
+/// arbitration only after the body completed, and the deterministic
+/// fault breadcrumb before the panic it caused.
+fn assert_well_ordered(
+    name: &str,
+    records: &[TraceRecord],
+) -> Result<(), String> {
+    for ((job, _, task, attempt), evs) in attempt_groups(records) {
+        let pos = |want: &str| {
+            evs.iter()
+                .position(|r| r.event.kind() == want)
+        };
+        let scheduled = pos("attempt_scheduled");
+        let started = pos("attempt_started");
+        let finished = pos("attempt_finished");
+        let panicked = pos("attempt_panicked");
+        let won = pos("attempt_won");
+        let lost = pos("attempt_lost");
+        let fault = pos("fault_injected");
+        let ctx = format!("{name}: job {job} task {task} attempt {attempt}");
+        if let (Some(s), Some(b)) = (scheduled, started) {
+            prop_assert!(s < b, "{ctx}: started before scheduled");
+        }
+        prop_assert!(
+            !(finished.is_some() && panicked.is_some()),
+            "{ctx}: attempt both finished and panicked"
+        );
+        for (label, terminal) in [("finished", finished), ("panicked", panicked)] {
+            if let (Some(b), Some(t)) = (started, terminal) {
+                prop_assert!(b < t, "{ctx}: {label} before started");
+            }
+        }
+        if let Some(w) = won {
+            prop_assert!(
+                finished.is_some_and(|f| f < w),
+                "{ctx}: won without a completed body"
+            );
+            prop_assert!(lost.is_none(), "{ctx}: attempt both won and lost");
+        }
+        if let (Some(f), Some(l)) = (finished, lost) {
+            prop_assert!(f < l, "{ctx}: lost before finished");
+        }
+        if let (Some(i), Some(p)) = (fault, panicked) {
+            prop_assert!(i < p, "{ctx}: panic before its fault breadcrumb");
+        }
+        // seq is a total order: within one attempt it must be strictly
+        // increasing (the group preserved stream order)
+        for pair in evs.windows(2) {
+            prop_assert!(
+                pair[0].seq < pair[1].seq,
+                "{ctx}: seq not strictly increasing within the attempt"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Job-level lifecycle: one `job_started` at 0.0, one `job_finished`,
+/// and exactly one authoritative stamp for each wave metric, per job.
+fn assert_job_lifecycle(name: &str, records: &[TraceRecord]) -> Result<(), String> {
+    for job in JobTimeline::jobs(records) {
+        let count = |want: &str| {
+            records
+                .iter()
+                .filter(|r| &*r.job == job.as_str() && r.event.kind() == want)
+                .count()
+        };
+        let ctx = format!("{name}: job {job}");
+        prop_assert_eq!(count("job_started"), 1);
+        prop_assert_eq!(count("job_finished"), 1);
+        prop_assert_eq!(count("map_wave_done"), 1);
+        prop_assert_eq!(count("reduce_first_start"), 1);
+        let start = records
+            .iter()
+            .find(|r| &*r.job == job.as_str() && r.event.kind() == "job_started")
+            .unwrap();
+        prop_assert!(start.at_secs == 0.0, "{ctx}: job_started not at 0.0");
+        prop_assert!(start.task.is_none(), "{ctx}: job_started carries a task id");
+    }
+    Ok(())
+}
+
+/// Exactly one `attempt_won` per decided `(job, phase, task)` on the
+/// scheduler paths, and a retracted run's attempt never overlaps a
+/// committed one.
+fn assert_winners_and_retractions(
+    name: &str,
+    records: &[TraceRecord],
+    pushed_runs: u64,
+) -> Result<(), String> {
+    let mut winners: BTreeMap<(String, u8, usize), usize> = BTreeMap::new();
+    let mut tasks: BTreeSet<(String, u8, usize)> = BTreeSet::new();
+    let mut pushed: BTreeSet<(String, usize, u32)> = BTreeSet::new();
+    let mut retracted: BTreeSet<(String, usize, u32)> = BTreeSet::new();
+    let mut pushed_events: u64 = 0;
+    for r in records {
+        let Some(task) = r.task else { continue };
+        let key = (r.job.to_string(), phase_ix(&r.phase), task);
+        match &r.event {
+            TraceEvent::AttemptStarted | TraceEvent::AttemptScheduled => {
+                tasks.insert(key);
+            }
+            TraceEvent::AttemptWon => {
+                *winners.entry(key).or_insert(0) += 1;
+            }
+            TraceEvent::RunPushed { .. } => {
+                pushed_events += 1;
+                pushed.insert((r.job.to_string(), task, r.attempt));
+            }
+            TraceEvent::RunRetracted { .. } => {
+                retracted.insert((r.job.to_string(), task, r.attempt));
+            }
+            _ => {}
+        }
+    }
+    for (key, n) in &winners {
+        prop_assert!(
+            *n == 1,
+            "{name}: task {key:?} has {n} winners (exactly one expected)"
+        );
+    }
+    // every task with activity was decided (the runs here never
+    // dead-letter: the seeded single fault sits inside the retry budget)
+    for key in &tasks {
+        prop_assert!(
+            winners.contains_key(key),
+            "{name}: task {key:?} started but never produced a winner"
+        );
+    }
+    // an attempt either commits its runs or retracts them — never both,
+    // so no retracted run can sit in any committed prefix
+    let both: Vec<_> = pushed.intersection(&retracted).collect();
+    prop_assert!(
+        both.is_empty(),
+        "{name}: attempts {both:?} both pushed and retracted runs"
+    );
+    prop_assert_eq!(pushed_events, pushed_runs);
+    Ok(())
+}
+
+/// The timeline derived from the trace alone reproduces the engine's
+/// wave metrics bit-for-bit (the job-level stamps carry the exact
+/// `JobStats` values).
+fn assert_wave_metrics(
+    name: &str,
+    records: &[TraceRecord],
+    res: &SnResult,
+) -> Result<(), String> {
+    let jobs = JobTimeline::jobs(records);
+    prop_assert_eq!(jobs.len(), res.stats.len());
+    for (job, st) in jobs.iter().zip(res.stats.iter()) {
+        let tl = JobTimeline::from_records(job, records);
+        let ctx = format!("{name}: job {job}");
+        prop_assert!(!tl.spans.is_empty(), "{ctx}: timeline has no spans");
+        prop_assert!(
+            tl.derived_map_wave_done() == Some(st.map_wave_done_secs),
+            "{ctx}: derived map-wave-done {:?} != stats {}",
+            tl.derived_map_wave_done(),
+            st.map_wave_done_secs
+        );
+        prop_assert!(
+            tl.derived_reduce_first_start() == Some(st.reduce_first_start_secs),
+            "{ctx}: derived reduce-first-start {:?} != stats {}",
+            tl.derived_reduce_first_start(),
+            st.reduce_first_start_secs
+        );
+        prop_assert!(
+            tl.overlap_secs() == st.overlap_secs,
+            "{ctx}: derived overlap {} != stats {}",
+            tl.overlap_secs(),
+            st.overlap_secs
+        );
+        // the Gantt renders one row per occupied lane plus header/legend
+        let gantt = tl.render_gantt(64);
+        prop_assert!(
+            gantt.lines().count() >= tl.lanes(),
+            "{ctx}: Gantt dropped a lane"
+        );
+        // every launched retry left its breadcrumb: the trace count is
+        // the stats counter
+        let retried = records
+            .iter()
+            .filter(|r| &*r.job == job.as_str() && r.event.kind() == "task_retried")
+            .count() as u64;
+        prop_assert!(
+            retried == st.task_retries,
+            "{ctx}: {retried} task_retried records vs {} in stats",
+            st.task_retries
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_trace_invariants_across_variants() {
+    Cases::new("trace invariants, every SN variant, faults + speculation", 6).run(|rng| {
+        let n = rng.range(120, 300);
+        let w = rng.range(2, 7);
+        let entities = corpus(rng, n);
+        let base = base_config(rng, &entities, w, rng.range(4, 8));
+        let barrier_sched = JobScheduler::new(SchedulerConfig::slots(4).with_speculation(true));
+        let push_sched = JobScheduler::new(
+            SchedulerConfig::slots(4)
+                .with_push(PushMode::Push)
+                .with_speculation(true),
+        );
+        for (name, run, strategy) in variants() {
+            let clean = SnConfig {
+                balance: strategy,
+                ..base.clone()
+            };
+            let reference = run(&entities, &clean, Exec::Serial).map_err(|e| e.to_string())?;
+            // faults composed with speculation: one seeded panic, two
+            // retries of budget — every task stays recoverable
+            let faults = FaultPlan::seeded(
+                rng.next_u64(),
+                clean.num_map_tasks,
+                clean.partitioner.num_partitions(),
+            );
+            for (exec_name, sched) in [("barrier", &barrier_sched), ("push", &push_sched)] {
+                let spec = TraceSpec::new();
+                let cfg = SnConfig {
+                    faults: Some(faults.clone()),
+                    max_task_retries: Some(2),
+                    trace: Some(spec.clone()),
+                    ..clean.clone()
+                };
+                let res =
+                    run(&entities, &cfg, Exec::Scheduler(sched)).map_err(|e| e.to_string())?;
+                prop_assert_eq!(res.pairs.clone(), reference.pairs.clone());
+                prop_assert!(
+                    res.counters.get(names::TASKS_FAILED) == 0,
+                    "{name}/{exec_name}: a task exhausted its retry budget"
+                );
+                let mut records = spec.drain();
+                records.sort_by_key(|r| r.seq);
+                prop_assert!(
+                    !records.is_empty(),
+                    "{name}/{exec_name}: traced run produced no records"
+                );
+                let ctx = format!("{name}/{exec_name}");
+                assert_well_ordered(&ctx, &records)?;
+                assert_job_lifecycle(&ctx, &records)?;
+                assert_winners_and_retractions(
+                    &ctx,
+                    &records,
+                    res.counters.get(names::PUSHED_RUNS),
+                )?;
+                assert_wave_metrics(&ctx, &records, &res)?;
+                // the JSONL projection is loss-free: one line per record
+                let jsonl = TraceSpec::to_jsonl(&records);
+                prop_assert_eq!(jsonl.lines().count(), records.len());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A faulted, speculative push-mode run reconstructs a complete
+/// per-attempt history from the trace alone: the killed primary shows
+/// up as a panicked span with its fault breadcrumb, the retry as a
+/// distinct later attempt, and the winner count stays exactly one.
+#[test]
+fn faulted_push_run_reconstructs_per_attempt_timeline() {
+    let mut rng = Rng::new(0x7ace_7ace);
+    let entities = corpus(&mut rng, 200);
+    let base = base_config(&mut rng, &entities, 4, 5);
+    let sched = JobScheduler::new(
+        SchedulerConfig::slots(4)
+            .with_push(PushMode::Push)
+            .with_speculation(true),
+    );
+    let spec = TraceSpec::new();
+    let cfg = SnConfig {
+        faults: Some(FaultPlan::new().panic_map(0, 0)),
+        max_task_retries: Some(2),
+        trace: Some(spec.clone()),
+        ..base
+    };
+    let res = repsn::run_on(&entities, &cfg, Exec::Scheduler(&sched)).expect("repsn run");
+    assert_eq!(res.counters.get(names::TASKS_FAILED), 0);
+    assert!(res.stats[0].task_retries >= 1, "the injected panic must retry");
+
+    let mut records = spec.drain();
+    records.sort_by_key(|r| r.seq);
+    let map0: Vec<&TraceRecord> = records
+        .iter()
+        .filter(|r| {
+            matches!(r.phase, TracePhase::Map) && r.task == Some(0) && &*r.job == "repsn"
+        })
+        .collect();
+    // attempt 0: fault breadcrumb then the panic it caused
+    assert!(
+        map0.iter().any(|r| r.attempt == 0
+            && matches!(r.event, TraceEvent::FaultInjected { kind: "panic" })),
+        "missing fault_injected breadcrumb on the primary attempt"
+    );
+    assert!(
+        map0.iter()
+            .any(|r| r.attempt == 0 && matches!(r.event, TraceEvent::AttemptPanicked { .. })),
+        "missing attempt_panicked on the primary attempt"
+    );
+    // the resubmission is a distinct, later attempt ordinal that wins
+    assert!(
+        map0.iter().any(|r| matches!(r.event, TraceEvent::TaskRetried)),
+        "missing task_retried breadcrumb"
+    );
+    let winner = map0
+        .iter()
+        .find(|r| matches!(r.event, TraceEvent::AttemptWon))
+        .expect("map task 0 never won");
+    assert!(winner.attempt >= 1, "the killed primary cannot be the winner");
+
+    // the timeline reconstructs both attempts as distinct spans with the
+    // right outcomes — the per-attempt history is complete from the
+    // trace alone
+    let tl = JobTimeline::from_records("repsn", &records);
+    let spans0: Vec<_> = tl
+        .spans
+        .iter()
+        .filter(|s| matches!(s.phase, TracePhase::Map) && s.task == 0)
+        .collect();
+    assert!(
+        spans0
+            .iter()
+            .any(|s| s.attempt == 0 && s.outcome == SpanOutcome::Panicked),
+        "timeline lost the panicked primary span"
+    );
+    assert!(
+        spans0.iter().any(|s| s.outcome == SpanOutcome::Won),
+        "timeline lost the winning retry span"
+    );
+    // every attempt that started is a span: nothing fell out of the
+    // reconstruction
+    let started: BTreeSet<(usize, u32)> = records
+        .iter()
+        .filter(|r| {
+            &*r.job == "repsn"
+                && matches!(r.phase, TracePhase::Map)
+                && r.event.kind() == "attempt_started"
+        })
+        .map(|r| (r.task.unwrap(), r.attempt))
+        .collect();
+    let span_keys: BTreeSet<(usize, u32)> = tl
+        .spans
+        .iter()
+        .filter(|s| matches!(s.phase, TracePhase::Map))
+        .map(|s| (s.task, s.attempt))
+        .collect();
+    assert!(
+        started.is_subset(&span_keys),
+        "started attempts missing from the timeline: {:?}",
+        started.difference(&span_keys).collect::<Vec<_>>()
+    );
+}
+
+/// Zero-overhead-when-off guard (ISSUE 7 satellite): with
+/// `trace: None` every trace hook is an `Option` that never
+/// materializes a buffer — no sink exists to allocate into — and the
+/// job's output is byte-identical to the traced run's.
+#[test]
+fn trace_off_is_free_and_output_invariant() {
+    let mut rng = Rng::new(0x0ff_0ff);
+    let entities = corpus(&mut rng, 180);
+    let base = base_config(&mut rng, &entities, 3, 5);
+    let sched = JobScheduler::new(
+        SchedulerConfig::slots(4)
+            .with_push(PushMode::Push)
+            .with_speculation(true),
+    );
+
+    // an unattached sink stays empty forever: nothing global records
+    let idle = TraceSpec::new();
+    assert!(idle.is_empty());
+
+    let off_cfg = SnConfig {
+        trace: None,
+        ..base.clone()
+    };
+    let spec = TraceSpec::new();
+    let on_cfg = SnConfig {
+        trace: Some(spec.clone()),
+        ..base.clone()
+    };
+    let off = repsn::run_on(&entities, &off_cfg, Exec::Scheduler(&sched)).expect("untraced run");
+    let on = repsn::run_on(&entities, &on_cfg, Exec::Scheduler(&sched)).expect("traced run");
+
+    // byte-identical output: same pairs in the same order, and the
+    // data-volume counters are unchanged by observation
+    assert_eq!(off.pairs, on.pairs);
+    for cname in [
+        names::MAP_OUTPUT_RECORDS,
+        names::SHUFFLE_BYTES,
+        names::SHUFFLE_BYTES_RAW,
+        names::REDUCE_INPUT_RECORDS,
+        names::REDUCE_GROUPS,
+        names::MAP_SPILL_RUNS,
+        names::PUSHED_RUNS,
+    ] {
+        assert_eq!(
+            off.counters.get(cname),
+            on.counters.get(cname),
+            "counter {cname} diverged under tracing"
+        );
+    }
+
+    // the attached sink recorded the run; the idle sink never saw it
+    assert!(!spec.is_empty(), "the traced run recorded nothing");
+    assert!(idle.is_empty(), "an unattached sink picked up records");
+    // serial path honours the off switch too
+    let serial_off = repsn::run_on(&entities, &off_cfg, Exec::Serial).expect("serial run");
+    assert_eq!(serial_off.pairs, off.pairs);
+}

@@ -55,6 +55,7 @@ fn multipass_concurrency_speedup_over_serial() {
         push: false,
         faults: None,
         max_task_retries: None,
+        trace: None,
     };
     let keys: Vec<Arc<dyn BlockingKey>> = vec![
         Arc::new(TitlePrefixKey::new(1)),

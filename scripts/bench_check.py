@@ -68,6 +68,9 @@ GATES = {
 INVARIANTS = {
     "BENCH_engine.json": [
         "push_overlap.identical_output",
+        # the sim-vs-measured drift report must be present and fully
+        # assembled (mode picked, all three waves emitted)
+        "sim_drift.complete",
     ],
     "BENCH_skew.json": [
         "multipass_measured[mode=scheduler].identical_output",
@@ -221,6 +224,22 @@ SELFTEST_SAMPLES = {
             "makespan_ratio": 0.85,
             "measured_overlap_secs": 0.02,
             "identical_output": True,
+        },
+        "sim_drift": {
+            "complete": True,
+            "mode": "two_wave",
+            "measured_total_s": 0.05,
+            "simulated_total_s": 0.07,
+            "max_drift_frac": 0.4,
+            "waves": [
+                {
+                    "wave": "map",
+                    "measured_s": 0.02,
+                    "simulated_s": 0.03,
+                    "delta_s": 0.01,
+                    "drift_frac": 0.4,
+                }
+            ],
         },
     },
     "BENCH_skew.json": {

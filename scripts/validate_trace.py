@@ -1,0 +1,311 @@
+#!/usr/bin/env python3
+"""Validate task-event trace artifacts (JSONL + timeline) for CI.
+
+`skew_study --trace <dir>` writes, per ladder row:
+
+  <row>.trace.jsonl    one JSON object per trace record
+  <row>.timeline.json  {"row": ..., "jobs": [<JobTimeline::to_json()>, ...]}
+
+This script checks both against the schema documented in
+`rust/src/mapreduce/trace.rs` (the `kind_strings_are_stable` unit test
+pins the same event-kind list — renaming a kind is a schema change for
+both sides):
+
+  * every JSONL line parses and carries the seven core fields with the
+    right types; payload fields match the event kind exactly;
+  * `seq` is strictly increasing (the drain is sequence-ordered);
+  * per job: exactly one `job_started` at 0.0 seconds, exactly one
+    `job_finished`, and at most one of each wave stamp;
+  * the timeline artifact parses, every job has spans, and the spans
+    cover every lane in `0..lanes` — a Gantt with an empty slot row
+    means the lane assignment dropped work.
+
+Usage:
+  validate_trace.py <dir-or-file> [...]   validate *.trace.jsonl (and the
+                                          sibling *.timeline.json when
+                                          present) under each argument
+  validate_trace.py --selftest            run against synthetic good/bad
+                                          samples, no artifacts needed
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# Pinned copy of the Rust-side kind list (trace.rs kind_strings_are_stable).
+KINDS = {
+    "job_started",
+    "job_finished",
+    "map_wave_done",
+    "reduce_first_start",
+    "attempt_scheduled",
+    "attempt_started",
+    "attempt_finished",
+    "attempt_panicked",
+    "attempt_won",
+    "attempt_lost",
+    "task_retried",
+    "speculative_cloned",
+    "run_sealed",
+    "spill_written",
+    "spill_read",
+    "run_pushed",
+    "run_retracted",
+    "reduce_catch_up",
+    "checkpoint_commit",
+    "checkpoint_restore",
+    "dead_lettered",
+    "fault_injected",
+}
+
+CORE_FIELDS = {"seq", "job", "phase", "task", "attempt", "at_secs", "event"}
+
+# Extra payload fields each event kind carries (exactly — no more, no less).
+PAYLOAD = {
+    "run_sealed": {"partition", "records"},
+    "spill_written": {"partition", "records", "file_bytes"},
+    "spill_read": {"records", "file_bytes"},
+    "run_pushed": {"partition", "records"},
+    "run_retracted": {"partition"},
+    "reduce_catch_up": {"late_runs"},
+    "attempt_panicked": {"message"},
+    "dead_lettered": {"message"},
+    "fault_injected": {"kind"},
+}
+
+JOB_LEVEL = {"job_started", "job_finished", "map_wave_done", "reduce_first_start"}
+
+PHASES = {"map", "reduce", "job"}
+
+
+def check_record(rec, lineno, errors):
+    if not isinstance(rec, dict):
+        errors.append(f"line {lineno}: not a JSON object")
+        return None
+    missing = CORE_FIELDS - rec.keys()
+    if missing:
+        errors.append(f"line {lineno}: missing fields {sorted(missing)}")
+        return None
+    kind = rec["event"]
+    if kind not in KINDS:
+        errors.append(f"line {lineno}: unknown event kind {kind!r}")
+        return None
+    if rec["phase"] not in PHASES:
+        errors.append(f"line {lineno}: unknown phase {rec['phase']!r}")
+    if not isinstance(rec["job"], str) or not rec["job"]:
+        errors.append(f"line {lineno}: job must be a non-empty string")
+    for field in ("seq", "attempt"):
+        v = rec[field]
+        if not isinstance(v, (int, float)) or v < 0 or float(v) != int(v):
+            errors.append(f"line {lineno}: {field} must be a non-negative integer")
+    if not isinstance(rec["at_secs"], (int, float)) or rec["at_secs"] < 0:
+        errors.append(f"line {lineno}: at_secs must be a non-negative number")
+    if kind in JOB_LEVEL:
+        if rec["task"] is not None or rec["phase"] != "job":
+            errors.append(f"line {lineno}: {kind} must be job-scoped (phase=job, task=null)")
+    else:
+        task = rec["task"]
+        if not isinstance(task, (int, float)) or task < 0 or float(task) != int(task):
+            errors.append(f"line {lineno}: {kind} needs an integer task id")
+        if rec["phase"] == "job":
+            errors.append(f"line {lineno}: {kind} cannot be phase=job")
+    want = PAYLOAD.get(kind, set())
+    extras = rec.keys() - CORE_FIELDS
+    if extras != want:
+        errors.append(
+            f"line {lineno}: {kind} payload is {sorted(extras)}, schema says {sorted(want)}"
+        )
+    return rec
+
+
+def validate_jsonl(text, errors):
+    """Schema + stream invariants over one trace file's contents."""
+    last_seq = -1
+    jobs = {}
+    n = 0
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"line {lineno}: invalid JSON ({e})")
+            continue
+        rec = check_record(rec, lineno, errors)
+        if rec is None:
+            continue
+        n += 1
+        seq = int(rec["seq"])
+        if seq <= last_seq:
+            errors.append(f"line {lineno}: seq {seq} not strictly increasing")
+        last_seq = seq
+        counts = jobs.setdefault(rec["job"], {k: 0 for k in JOB_LEVEL})
+        if rec["event"] in JOB_LEVEL:
+            counts[rec["event"]] += 1
+            if rec["event"] == "job_started" and rec["at_secs"] != 0.0:
+                errors.append(f"line {lineno}: job_started at {rec['at_secs']}, not 0.0")
+    if n == 0:
+        errors.append("trace file holds no records")
+    for job, counts in jobs.items():
+        for stamp in ("job_started", "job_finished"):
+            if counts[stamp] != 1:
+                errors.append(f"job {job!r}: {counts[stamp]}x {stamp} (want exactly 1)")
+        for stamp in ("map_wave_done", "reduce_first_start"):
+            if counts[stamp] > 1:
+                errors.append(f"job {job!r}: {counts[stamp]}x {stamp} (want at most 1)")
+    return n
+
+
+def validate_timeline(doc, errors):
+    """The Gantt artifact parses and its spans cover every lane."""
+    timelines = doc.get("jobs") if isinstance(doc, dict) else None
+    if not isinstance(timelines, list) or not timelines:
+        errors.append("timeline: no jobs array")
+        return
+    for tl in timelines:
+        job = tl.get("job", "<unnamed>")
+        spans = tl.get("spans")
+        lanes = tl.get("lanes")
+        if not isinstance(spans, list) or not spans:
+            errors.append(f"timeline {job!r}: no spans")
+            continue
+        if not isinstance(lanes, (int, float)) or lanes < 1:
+            errors.append(f"timeline {job!r}: bad lane count {lanes!r}")
+            continue
+        occupied = set()
+        for s in spans:
+            lane = s.get("lane")
+            if not isinstance(lane, (int, float)) or not 0 <= lane < lanes:
+                errors.append(f"timeline {job!r}: span lane {lane!r} outside 0..{lanes}")
+                continue
+            occupied.add(int(lane))
+            if s.get("end_secs", 0) < s.get("start_secs", 0):
+                errors.append(f"timeline {job!r}: span ends before it starts: {s}")
+        empty = set(range(int(lanes))) - occupied
+        if empty:
+            errors.append(f"timeline {job!r}: lanes {sorted(empty)} hold no spans")
+
+
+def validate_pair(trace_path, errors):
+    with open(trace_path, encoding="utf-8") as f:
+        n = validate_jsonl(f.read(), errors)
+    timeline_path = trace_path[: -len(".trace.jsonl")] + ".timeline.json"
+    if os.path.exists(timeline_path):
+        with open(timeline_path, encoding="utf-8") as f:
+            try:
+                validate_timeline(json.load(f), errors)
+            except json.JSONDecodeError as e:
+                errors.append(f"{timeline_path}: invalid JSON ({e})")
+    return n
+
+
+def gather(paths):
+    files = []
+    for p in paths:
+        if os.path.isdir(p):
+            files.extend(
+                os.path.join(p, name)
+                for name in sorted(os.listdir(p))
+                if name.endswith(".trace.jsonl")
+            )
+        else:
+            files.append(p)
+    return files
+
+
+GOOD_SAMPLE = "\n".join(
+    [
+        '{"seq": 0, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.0, "event": "job_started"}',
+        '{"seq": 1, "job": "j", "phase": "map", "task": 0, "attempt": 0, "at_secs": 0.001, "event": "attempt_started"}',
+        '{"seq": 2, "job": "j", "phase": "map", "task": 0, "attempt": 0, "at_secs": 0.002, "event": "run_pushed", "partition": 1, "records": 10}',
+        '{"seq": 3, "job": "j", "phase": "map", "task": 0, "attempt": 0, "at_secs": 0.003, "event": "attempt_won"}',
+        '{"seq": 4, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.003, "event": "map_wave_done"}',
+        '{"seq": 5, "job": "j", "phase": "reduce", "task": 0, "attempt": 0, "at_secs": 0.004, "event": "fault_injected", "kind": "panic"}',
+        '{"seq": 6, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.01, "event": "job_finished"}',
+    ]
+)
+
+GOOD_TIMELINE = {
+    "jobs": [
+        {
+            "job": "j",
+            "lanes": 2,
+            "spans": [
+                {"lane": 0, "start_secs": 0.0, "end_secs": 0.003},
+                {"lane": 1, "start_secs": 0.004, "end_secs": 0.009},
+            ],
+        }
+    ]
+}
+
+
+def selftest():
+    errors = []
+    validate_jsonl(GOOD_SAMPLE, errors)
+    validate_timeline(GOOD_TIMELINE, errors)
+    if errors:
+        print("selftest: good sample rejected:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    bad_cases = [
+        # unknown kind
+        GOOD_SAMPLE.replace("attempt_won", "attempt_vanished"),
+        # payload missing on run_pushed
+        GOOD_SAMPLE.replace(', "partition": 1, "records": 10', ""),
+        # duplicated job_started
+        GOOD_SAMPLE + "\n" + GOOD_SAMPLE.splitlines()[0].replace('"seq": 0', '"seq": 7'),
+        # seq going backwards
+        GOOD_SAMPLE.replace('"seq": 3', '"seq": 1'),
+        # job-level stamp carrying a task id
+        GOOD_SAMPLE.replace(
+            '"phase": "job", "task": null, "attempt": 0, "at_secs": 0.003',
+            '"phase": "job", "task": 4, "attempt": 0, "at_secs": 0.003',
+        ),
+    ]
+    for i, text in enumerate(bad_cases):
+        errs = []
+        validate_jsonl(text, errs)
+        if not errs:
+            print(f"selftest: bad sample {i} passed validation", file=sys.stderr)
+            return 1
+    bad_timeline = {
+        "jobs": [{"job": "j", "lanes": 3, "spans": GOOD_TIMELINE["jobs"][0]["spans"]}]
+    }
+    errs = []
+    validate_timeline(bad_timeline, errs)
+    if not errs:
+        print("selftest: empty-lane timeline passed validation", file=sys.stderr)
+        return 1
+    print("selftest: good samples validate, broken schema/lanes are rejected")
+    return 0
+
+
+def main(argv):
+    if len(argv) >= 2 and argv[1] == "--selftest":
+        return selftest()
+    if len(argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    files = gather(argv[1:])
+    if not files:
+        print("validate_trace: no *.trace.jsonl files found", file=sys.stderr)
+        return 1
+    failed = False
+    for path in files:
+        errors = []
+        n = validate_pair(path, errors)
+        if errors:
+            failed = True
+            print(f"FAIL {path}")
+            for e in errors:
+                print(f"  {e}")
+        else:
+            print(f"  ok {path}: {n} records, schema + lane coverage hold")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
