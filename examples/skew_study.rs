@@ -54,9 +54,18 @@
 //! the trace smoke test CI runs.  The last row's Gantt and drift table are
 //! printed.
 //!
+//! With `--metrics DIR`, every ladder row is re-run on a 4-slot push
+//! scheduler with the live `HealthSampler` attached
+//! (`metrics::registry`): the snapshot ring lands in
+//! `DIR/<row>.snapshots.jsonl`, the last row's rendered dashboard in
+//! `DIR/dashboard.txt`.  Pair digests are asserted identical to the
+//! serial runs, and the sampler must have caught nonzero slot occupancy
+//! and mailbox depth on every row — the metrics smoke test CI runs.
+//!
 //! ```bash
 //! cargo run --release --example skew_study -- --n 20000
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --trace /tmp/skew-traces
+//! cargo run --release --example skew_study -- --n 2000 --window 20 --metrics /tmp/skew-metrics
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --speculative
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --balance blocksplit
 //! cargo run --release --example skew_study -- --n 2000 --window 20 --sort-buffer 64
@@ -65,7 +74,7 @@
 //! ```
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use snmr::data::corpus::{generate, CorpusConfig};
 use snmr::data::skew::{skew_to_last_partition, zipf_skew_block_keys};
@@ -76,6 +85,7 @@ use snmr::mapreduce::sim::{
     drift_report, simulate_job, simulate_job_chain, simulate_job_overlap, ClusterSpec,
 };
 use snmr::mapreduce::{FaultPlan, TempSpillDir, TraceSpec};
+use snmr::metrics::registry::MetricsSpec;
 use snmr::metrics::report::{write_report, Table};
 use snmr::metrics::timeline::JobTimeline;
 use snmr::sn::balance::{balanced_from_histogram, key_histogram_job, pair_balanced_min_size};
@@ -133,6 +143,11 @@ fn main() -> anyhow::Result<()> {
                 "record task-event traces: per ladder row, write <row>.trace.jsonl, \
                  <row>.timeline.json, <row>.gantt.txt and <row>.drift.json into this directory",
             ),
+            flag(
+                "metrics",
+                "re-run the ladder on a 4-slot push scheduler with the health sampler \
+                 attached: write <row>.snapshots.jsonl and dashboard.txt into this directory",
+            ),
         ],
         false,
     )
@@ -148,6 +163,10 @@ fn main() -> anyhow::Result<()> {
     };
     let trace_dir = args.get("trace").map(std::path::PathBuf::from);
     if let Some(dir) = &trace_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    let metrics_dir = args.get("metrics").map(std::path::PathBuf::from);
+    if let Some(dir) = &metrics_dir {
         std::fs::create_dir_all(dir)?;
     }
     let balance = match args.get("balance") {
@@ -420,6 +439,82 @@ fn main() -> anyhow::Result<()> {
         println!(
             "all ladder runs pushed: outputs identical to the barrier digests,\n\
              every first reduce start preceded its map wave's completion."
+        );
+    }
+
+    if let Some(dir) = &metrics_dir {
+        // Live-telemetry re-run: every ladder configuration on a 4-slot
+        // push scheduler with the health sampler attached.  The sampler
+        // must catch nonzero slot occupancy and mailbox depth on every
+        // row; pair digests must match the serial runs; per-row snapshot
+        // rings land as JSONL plus the last row's rendered dashboard —
+        // the metrics smoke test CI runs.
+        println!("\n--- live telemetry re-run: 4-slot push scheduler, health sampler on ---");
+        let mut t7 = Table::new(
+            "Metrics ladder (4 shared slots, push shuffle, 500µs sampler)",
+            &["p", "identical", "snapshots", "peak_running", "peak_mailbox_runs", "dead_letters"],
+        );
+        let mut last_dashboard = String::new();
+        for ((name, p, entities), digest) in configs.iter().zip(&digests) {
+            let mut cfg = sn_cfg(p);
+            // many map waves on 4 slots keep the slots and mailboxes busy
+            // long enough for the sampler to observe them
+            cfg.num_map_tasks = 32;
+            // sampler timing is scheduling-sensitive on loaded CI runners:
+            // allow a few fresh attempts before calling it a regression
+            let mut attempt = 0;
+            let (spec, res) = loop {
+                let spec = MetricsSpec::new()
+                    .with_cadence(Duration::from_micros(500))
+                    .with_ring_capacity(65_536);
+                let sched = JobScheduler::new(
+                    SchedulerConfig::slots(4)
+                        .with_push(PushMode::Push)
+                        .with_metrics(spec.clone()),
+                );
+                let res = repsn::run_on(entities, &cfg, Exec::Scheduler(&sched))?;
+                // one final explicit sample so every JSONL ends quiescent
+                sched.sample_metrics_now();
+                let snaps = spec.snapshots();
+                let busy = snaps.iter().any(|s| s.map_running + s.reduce_running > 0);
+                let fed = snaps.iter().any(|s| s.mailbox_runs > 0 || s.staged_bytes > 0);
+                if (busy && fed) || attempt >= 3 {
+                    break (spec, res);
+                }
+                attempt += 1;
+            };
+            let identical = pair_digest(&res) == *digest;
+            assert!(identical, "{name}: metrics re-run output diverged from serial");
+            let snaps = spec.snapshots();
+            assert!(
+                snaps.iter().any(|s| s.map_running + s.reduce_running > 0),
+                "{name}: sampler never observed an occupied slot"
+            );
+            assert!(
+                snaps.iter().any(|s| s.mailbox_runs > 0 || s.staged_bytes > 0),
+                "{name}: sampler never observed mailbox depth"
+            );
+            std::fs::write(
+                dir.join(format!("{name}.snapshots.jsonl")),
+                spec.snapshots_jsonl(),
+            )?;
+            last_dashboard = spec.render_dashboard();
+            t7.row(vec![
+                name.clone(),
+                identical.to_string(),
+                snaps.len().to_string(),
+                snaps.iter().map(|s| s.tasks_running).max().unwrap_or(0).to_string(),
+                snaps.iter().map(|s| s.mailbox_runs).max().unwrap_or(0).to_string(),
+                snaps.last().map(|s| s.dead_letters).unwrap_or(0).to_string(),
+            ]);
+        }
+        std::fs::write(dir.join("dashboard.txt"), &last_dashboard)?;
+        println!("{}", t7.render());
+        print!("{last_dashboard}");
+        println!(
+            "all ladder runs sampled live: outputs identical to serial,\n\
+             snapshot artifacts in {}",
+            dir.display()
         );
     }
 

@@ -450,6 +450,35 @@ fn main() -> anyhow::Result<()> {
         format!("{:.3}", drift.max_drift_frac()),
     );
 
+    // calibration loop: fit map/reduce/shuffle rates from the workers=1
+    // run's measured histograms and phase stamps, then replay the same
+    // stats through the default and the fitted spec — the calibrated spec
+    // must yield strictly lower mean |per-wave drift|.
+    let serial_bytes = serial1.counters.get(names::MAP_OUTPUT_BYTES);
+    let cal_spec = ClusterSpec::fit_from_stats(std::slice::from_ref(&serial1.stats));
+    let drift_default = drift_report(&serial1.stats, serial_bytes, &ClusterSpec::paper_like(1));
+    let drift_cal = drift_report(&serial1.stats, serial_bytes, &cal_spec);
+    assert!(
+        drift_cal.mean_abs_delta_s() < drift_default.mean_abs_delta_s(),
+        "calibrated spec must beat the default: {:.6}s vs {:.6}s mean |drift|",
+        drift_cal.mean_abs_delta_s(),
+        drift_default.mean_abs_delta_s()
+    );
+    push(
+        &mut table,
+        &mut rows,
+        "sim-drift",
+        "mean |drift| default / calibrated (w=1 run)",
+        format!(
+            "{:.4}s / {:.4}s (scales m={:.2} r={:.2} s={:.3})",
+            drift_default.mean_abs_delta_s(),
+            drift_cal.mean_abs_delta_s(),
+            cal_spec.map_secs_scale,
+            cal_spec.reduce_secs_scale,
+            cal_spec.shuffle_cpu_scale
+        ),
+    );
+
     println!("{}", table.render());
     let path = write_report("engine_ablation", &Json::Arr(rows))?;
     eprintln!("report written to {}", path.display());
@@ -512,6 +541,33 @@ fn main() -> anyhow::Result<()> {
                 ("measured_total_s", Json::num(drift.measured_total_s)),
                 ("simulated_total_s", Json::num(drift.simulated_total_s)),
                 ("max_drift_frac", Json::num(drift.max_drift_frac())),
+                // default vs trace-calibrated spec on the workers=1 run;
+                // bench_check.py gates calibrated <= default relatively
+                (
+                    "default",
+                    Json::obj(vec![
+                        (
+                            "mean_abs_delta_s",
+                            Json::num(drift_default.mean_abs_delta_s()),
+                        ),
+                        ("max_drift_frac", Json::num(drift_default.max_drift_frac())),
+                        (
+                            "simulated_total_s",
+                            Json::num(drift_default.simulated_total_s),
+                        ),
+                    ]),
+                ),
+                (
+                    "calibrated",
+                    Json::obj(vec![
+                        ("mean_abs_delta_s", Json::num(drift_cal.mean_abs_delta_s())),
+                        ("max_drift_frac", Json::num(drift_cal.max_drift_frac())),
+                        ("simulated_total_s", Json::num(drift_cal.simulated_total_s)),
+                        ("map_secs_scale", Json::num(cal_spec.map_secs_scale)),
+                        ("reduce_secs_scale", Json::num(cal_spec.reduce_secs_scale)),
+                        ("shuffle_cpu_scale", Json::num(cal_spec.shuffle_cpu_scale)),
+                    ]),
+                ),
                 (
                     "waves",
                     Json::Arr(

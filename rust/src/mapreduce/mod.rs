@@ -213,6 +213,27 @@
 //!
 //! Rule of thumb: counters for volumes, stats for phase durations and
 //! skew summaries, trace for per-attempt forensics and timelines.
+//!
+//! A fourth layer watches the engine itself, *while it runs*: the
+//! **metrics registry** ([`crate::metrics::registry`]).  Attach a
+//! [`MetricsSpec`](crate::metrics::registry::MetricsSpec) with
+//! [`SchedulerConfig::with_metrics`](scheduler::SchedulerConfig::with_metrics)
+//! and the scheduler updates typed gauges/counters in-line (queued /
+//! running / retried tasks per job, dead letters) while a background
+//! [`HealthSampler`](crate::metrics::registry::HealthSampler) snapshots
+//! slot occupancy, push-mailbox depth, staged-run bytes and spill-dir
+//! bytes on a fixed cadence into a ring of
+//! [`EngineSnapshot`](crate::metrics::registry::EngineSnapshot)s —
+//! exportable as JSONL, renderable as a text dashboard (the live
+//! sibling of the trace-derived Gantt).  `Option`-cheap when off, like
+//! trace.  The same layer closes the **calibration loop**: a finished
+//! job's measured histograms and phase stamps feed
+//! [`sim::ClusterSpec::fit_from_stats`], which fits the simulator's
+//! map/reduce/shuffle rates so that [`sim::drift_report`] on the
+//! calibrated spec beats the default spec (gated in
+//! `benches/engine_ablation.rs`), and the trace-informed
+//! [`scheduler::SpecMode::IdleGap`] speculation mode picks clone
+//! targets from the live timeline instead of the running median.
 
 pub mod checkpoint;
 pub mod combiner;
@@ -239,7 +260,9 @@ pub use counters::Counters;
 pub use engine::{run_job, run_job_with_combiner, DeadLetter, JobOutcome, JobResult, JobStats};
 pub use fault::{FaultKind, FaultPlan, FaultSpec, TaskPhase};
 pub use push::{PushAttempt, ShuffleService};
-pub use scheduler::{Exec, JobHandle, JobScheduler, PushMode, SchedulerConfig, SpecPolicy};
+pub use scheduler::{
+    Exec, JobHandle, JobScheduler, PushMode, SchedulerConfig, SpecMode, SpecPolicy,
+};
 pub use shuffle::MergeIter;
 pub use sortspill::{
     Codec, DeflateCodec, KeyValueCodec, SpillSpec, StringPairCodec, TempSpillDir,

@@ -56,6 +56,8 @@ use super::counters::{names, Counters};
 use super::shuffle::MergeIter;
 use super::sortspill::Run;
 use super::trace::{JobTraceCtx, TraceEvent, TracePhase};
+use super::types::SizeEstimate;
+use crate::metrics::registry::MailboxStats;
 
 /// Mailbox position of one committed run: `(map task) << 32 | seal seq`,
 /// the engine's global run order for a reduce partition.
@@ -465,6 +467,34 @@ impl<T> ShuffleService<T> {
     pub(crate) fn committed_len(&self, j: usize) -> usize {
         self.state.lock().unwrap().committed[j].len()
     }
+
+    /// Live mailbox depth for the metrics sampler
+    /// ([`MetricsSpec::register_mailbox_probe`]): committed runs still
+    /// parked in mailboxes (not yet handed to a reduce task, or retained
+    /// for retry) plus the byte volume staged by undecided attempts.
+    /// One scan under the state lock — cheap at sampler cadence.
+    ///
+    /// [`MetricsSpec::register_mailbox_probe`]:
+    ///     crate::metrics::registry::MetricsSpec
+    pub(crate) fn depth_stats(&self) -> MailboxStats
+    where
+        T: SizeEstimate,
+    {
+        let st = self.state.lock().unwrap();
+        let runs = st
+            .committed
+            .iter()
+            .flat_map(|mailbox| mailbox.iter())
+            .filter(|(_, run)| run.is_some())
+            .count() as u64;
+        let staged_bytes = st
+            .staged
+            .values()
+            .flat_map(|s| s.runs.iter())
+            .map(|(_, run)| run.estimate_bytes())
+            .sum();
+        MailboxStats { runs, staged_bytes }
+    }
 }
 
 /// One map attempt's write handle into the service.
@@ -702,6 +732,26 @@ mod tests {
         let (empty, sealed) = svc.wait_more(0, 0);
         assert!(sealed);
         assert!(empty.is_empty(), "released mailbox must be empty");
+    }
+
+    #[test]
+    fn depth_stats_track_staged_then_committed_volumes() {
+        let (svc, _) = service(2, 2, true);
+        let a0 = ShuffleService::begin_attempt(&svc, 0);
+        a0.push(0, mem(&[(1, 1), (2, 2)]));
+        let d = svc.depth_stats();
+        assert_eq!(d.runs, 0, "staged runs are not committed yet");
+        assert!(d.staged_bytes > 0, "staged attempt must have volume");
+        assert!(a0.finish());
+        let d = svc.depth_stats();
+        assert_eq!(d.runs, 1);
+        assert_eq!(d.staged_bytes, 0, "commit drains the staging area");
+        let a1 = ShuffleService::begin_attempt(&svc, 1);
+        assert!(a1.finish());
+        svc.seal();
+        // handing the run to its reducer empties the mailbox
+        let _ = svc.wait_more(0, 0);
+        assert_eq!(svc.depth_stats().runs, 0);
     }
 
     #[test]

@@ -63,7 +63,7 @@
 
 mod speculate;
 
-pub use speculate::SpecPolicy;
+pub use speculate::{SpecMode, SpecPolicy};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
@@ -85,6 +85,7 @@ use super::sim::ClusterSpec;
 use super::sortspill::{ResolvedSpill, Run};
 use super::trace::{TraceEvent, TracePhase};
 use super::types::{MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate};
+use crate::metrics::registry::{EngineSnapshot, HealthSampler, MetricsSpec, PoolOccupancy};
 use crate::util::threadpool::{OnceSlots, ThreadPool};
 
 /// Whether jobs on this scheduler ship intermediates through the barrier
@@ -126,6 +127,13 @@ pub struct SchedulerConfig {
     /// Scheduler-wide fault-injection plan, applied to every job that
     /// does not carry its own [`JobConfig::faults`].
     pub faults: Option<FaultPlan>,
+    /// Live-metrics registry ([`MetricsSpec`]): when set, the scheduler
+    /// updates its gauges/counters in-line and spawns a [`HealthSampler`]
+    /// thread that snapshots occupancy, queue depths, mailbox volumes,
+    /// and dead-letter counts on the spec's cadence.  `None` (the
+    /// default) keeps the engine metric-free — no thread, no atomics on
+    /// the task path.
+    pub metrics: Option<MetricsSpec>,
 }
 
 impl SchedulerConfig {
@@ -140,6 +148,7 @@ impl SchedulerConfig {
             push: PushMode::Barrier,
             max_task_retries: 0,
             faults: None,
+            metrics: None,
         }
     }
 
@@ -173,6 +182,16 @@ impl SchedulerConfig {
         self
     }
 
+    /// Attach a live-metrics registry.  The scheduler built from this
+    /// config updates the spec's gauges and counters as tasks move
+    /// through the slots and runs a background [`HealthSampler`] on the
+    /// spec's cadence; keep a clone of `spec` to read
+    /// [`MetricsSpec::snapshots`] / render the dashboard afterwards.
+    pub fn with_metrics(mut self, spec: MetricsSpec) -> Self {
+        self.metrics = Some(spec);
+        self
+    }
+
     /// Mirror a simulated cluster's slot counts and speculation knob, so
     /// measured and simulated makespans stay comparable.
     pub fn from_cluster(spec: &ClusterSpec) -> Self {
@@ -184,6 +203,7 @@ impl SchedulerConfig {
             push: PushMode::Barrier,
             max_task_retries: 0,
             faults: None,
+            metrics: None,
         }
     }
 }
@@ -192,6 +212,13 @@ struct SchedInner {
     cfg: SchedulerConfig,
     map_pool: ThreadPool,
     reduce_pool: ThreadPool,
+    /// Background snapshot thread, present iff `cfg.metrics` is.  Its
+    /// probe holds only a `Weak` back-reference, so the sampler never
+    /// keeps the scheduler alive; declared after the pools so the pools
+    /// are still valid while the sampler drains its final tick, and
+    /// dropping it (with the last scheduler clone) stops and joins the
+    /// thread.
+    sampler: Mutex<Option<HealthSampler>>,
 }
 
 /// The shared-slot multi-job scheduler.  Cheap to clone (all clones share
@@ -222,13 +249,32 @@ impl JobScheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
         let map_pool = ThreadPool::new(cfg.map_slots);
         let reduce_pool = ThreadPool::new(cfg.reduce_slots);
-        Self {
-            inner: Arc::new(SchedInner {
-                cfg,
-                map_pool,
-                reduce_pool,
-            }),
+        let metrics = cfg.metrics.clone();
+        let inner = Arc::new(SchedInner {
+            cfg,
+            map_pool,
+            reduce_pool,
+            sampler: Mutex::new(None),
+        });
+        if let Some(spec) = metrics {
+            // The probe holds a Weak reference: once the last scheduler
+            // clone drops, upgrade() fails and the sampler thread exits
+            // on its own (its owning handle also stops it on drop).
+            let weak = Arc::downgrade(&inner);
+            let sampler = HealthSampler::spawn(
+                spec,
+                Box::new(move || {
+                    weak.upgrade().map(|i| PoolOccupancy {
+                        map_slots: i.map_pool.size() as u64,
+                        reduce_slots: i.reduce_pool.size() as u64,
+                        map_running: i.map_pool.in_flight() as u64,
+                        reduce_running: i.reduce_pool.in_flight() as u64,
+                    })
+                }),
+            );
+            *inner.sampler.lock().unwrap() = Some(sampler);
         }
+        Self { inner }
     }
 
     /// Shorthand: `n` map + `n` reduce slots, speculation off.
@@ -250,6 +296,29 @@ impl JobScheduler {
 
     pub fn push_mode(&self) -> PushMode {
         self.inner.cfg.push
+    }
+
+    /// The live-metrics registry this scheduler reports into (a clone of
+    /// the spec handed to [`SchedulerConfig::with_metrics`] — same shared
+    /// registry), or `None` when metrics are off.
+    pub fn metrics(&self) -> Option<MetricsSpec> {
+        self.inner.cfg.metrics.clone()
+    }
+
+    /// Take one on-demand [`EngineSnapshot`] of the scheduler right now,
+    /// pushing it into the registry ring as if the background sampler had
+    /// ticked.  `None` when metrics are off.  Complements the sampler for
+    /// tests and end-of-run summaries, where "the state *after* the last
+    /// job" matters more than cadence alignment.
+    pub fn sample_metrics_now(&self) -> Option<EngineSnapshot> {
+        self.inner.cfg.metrics.as_ref().map(|m| {
+            m.sample(Some(PoolOccupancy {
+                map_slots: self.inner.map_pool.size() as u64,
+                reduce_slots: self.inner.reduce_pool.size() as u64,
+                map_running: self.inner.map_pool.in_flight() as u64,
+                reduce_running: self.inner.reduce_pool.in_flight() as u64,
+            }))
+        })
     }
 
     /// Run one job inline on the caller's thread; its tasks execute on the
@@ -433,6 +502,15 @@ impl JobScheduler {
         let has_combiner = combine_fn.is_some();
         // One trace context per job; wave closures carry clones of it.
         let jctx = config.trace.as_ref().map(|t| t.job_ctx(&config.name));
+        // Live-metrics handles, when the scheduler carries a registry:
+        // per-job queue/run gauges plus the engine-wide dead-letter and
+        // active-job accounting.  `jm` lives until this driver returns,
+        // which is what keeps `engine.jobs_active` honest.
+        let jm = self.inner.cfg.metrics.as_ref().map(|m| m.job_metrics(&config.name));
+        let map_wm = jm.as_ref().map(|j| j.wave());
+        let reduce_wm = jm.as_ref().map(|j| j.wave());
+        let map_dl = jm.as_ref().map(|j| j.dead_letters.clone());
+        let reduce_dl = jm.as_ref().map(|j| j.dead_letters.clone());
 
         // ---- fault-tolerance wiring ---------------------------------------
         // Job-level knobs win over scheduler-wide defaults.
@@ -540,6 +618,7 @@ impl JobScheduler {
                         allow_failure: dead_letter,
                         on_win,
                         trace: jctx.clone().map(|j| (j, TracePhase::Map)),
+                        metrics: map_wm.clone(),
                     },
                     &counters,
                 );
@@ -554,6 +633,9 @@ impl JobScheduler {
                             // Exhausted retries: dead-letter the split and
                             // keep the wave going with an empty stand-in.
                             counters.inc(names::DEAD_LETTERED);
+                            if let Some(c) = &map_dl {
+                                c.inc();
+                            }
                             if let Some(j) = &jctx {
                                 j.task(TracePhase::Map, i, 0).emit(TraceEvent::DeadLettered {
                                     message: format!(
@@ -650,6 +732,7 @@ impl JobScheduler {
                         allow_failure: dead_letter,
                         on_win,
                         trace: jctx.clone().map(|j| (j, TracePhase::Reduce)),
+                        metrics: reduce_wm.clone(),
                     },
                     &counters,
                 );
@@ -662,6 +745,9 @@ impl JobScheduler {
                         }
                         None => {
                             counters.inc(names::DEAD_LETTERED);
+                            if let Some(c) = &reduce_dl {
+                                c.inc();
+                            }
                             if let Some(jc) = &jctx {
                                 jc.task(TracePhase::Reduce, j, 0).emit(
                                     TraceEvent::DeadLettered {
@@ -699,6 +785,12 @@ impl JobScheduler {
                 // checkpoint dir) have nothing left to resume.
                 writer.complete();
             }
+        }
+        // Fold the finished job's counters and task-duration histograms
+        // into the registry, then let `jm` drop: jobs_active decrements
+        // and the job's gauges are already quiesced by the wave exits.
+        if let Some(m) = &self.inner.cfg.metrics {
+            m.absorb_job(&res.counters, &res.stats);
         }
         res
     }
@@ -761,6 +853,13 @@ impl JobScheduler {
         // One trace context per job, shared by the map wave, the shuffle
         // service (run pushed/retracted events), and the dispatcher.
         let jctx = config.trace.as_ref().map(|t| t.job_ctx(&config.name));
+        // Live-metrics handles (see `run_inner`).  The push path threads
+        // the reduce-wave handles through the dispatcher, whose
+        // event-driven submissions bypass the speculate wave runner.
+        let jm = inner.cfg.metrics.as_ref().map(|m| m.job_metrics(&config.name));
+        let map_wm = jm.as_ref().map(|j| j.wave());
+        let reduce_wm = jm.as_ref().map(|j| j.wave());
+        let reduce_dl = jm.as_ref().map(|j| j.dead_letters.clone());
 
         counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
         let splits = split_input(input, config.num_map_tasks);
@@ -779,6 +878,18 @@ impl JobScheduler {
                 .with_retained_runs(retain)
                 .with_trace(jctx.clone()),
         );
+        if let Some(mspec) = &inner.cfg.metrics {
+            // Mailbox-depth probe for the sampler: a Weak reference, so
+            // the finished job's service can free itself; the registry
+            // prunes the probe once it reports `None`.
+            let weak_service = Arc::downgrade(&service);
+            mspec.register_mailbox_probe(Box::new(move || {
+                weak_service.upgrade().map(|s| s.depth_stats())
+            }));
+            if let Some(s) = &config.spill {
+                mspec.register_spill_dir(s.dir());
+            }
+        }
         // each slot holds (output, task-local counters, execution-start
         // seconds) — the start stamp is taken on the reduce slot itself,
         // so overlap_secs reports real execution overlap even when slot
@@ -828,8 +939,16 @@ impl JobScheduler {
                             let injector = Arc::clone(&injector);
                             let dead_letters = Arc::clone(&dead_letters);
                             let jctx = jctx.clone();
+                            if let Some(m) = &reduce_wm {
+                                m.on_submit();
+                            }
+                            let wm = reduce_wm.clone();
+                            let dl = reduce_dl.clone();
                             sched.inner.reduce_pool.execute(move || {
                                 let started = t_start.elapsed().as_secs_f64();
+                                if let Some(m) = &wm {
+                                    m.on_start();
+                                }
                                 // Inline retry loop: a panicked attempt
                                 // restarts the whole merge against the
                                 // retained (clone-on-read) mailbox, just
@@ -903,6 +1022,9 @@ impl JobScheduler {
                                             }
                                             attempts_left -= 1;
                                             counters.inc(names::TASK_RETRIES);
+                                            if let Some(m) = &wm {
+                                                m.on_retry();
+                                            }
                                             attempt_no += 1;
                                             if let Some(jc) = &jctx {
                                                 jc.task(TracePhase::Reduce, j, attempt_no)
@@ -927,6 +1049,9 @@ impl JobScheduler {
                                         counters.inc(names::TASKS_FAILED);
                                         if dead_letter {
                                             counters.inc(names::DEAD_LETTERED);
+                                            if let Some(c) = &dl {
+                                                c.inc();
+                                            }
                                             if let Some(jc) = &jctx {
                                                 jc.task(TracePhase::Reduce, j, 0).emit(
                                                     TraceEvent::DeadLettered {
@@ -954,6 +1079,9 @@ impl JobScheduler {
                                     }
                                 }
                                 cv.notify_all();
+                                if let Some(m) = &wm {
+                                    m.on_exit();
+                                }
                             });
                         }
                     }
@@ -1008,6 +1136,7 @@ impl JobScheduler {
                     allow_failure: dead_letter,
                     on_win: None,
                     trace: jctx.clone().map(|j| (j, TracePhase::Map)),
+                    metrics: map_wm.clone(),
                 },
                 &counters,
             )
@@ -1036,6 +1165,9 @@ impl JobScheduler {
                     // reducers see a shorter (but consistent) stream.
                     service.fail_task(i);
                     counters.inc(names::DEAD_LETTERED);
+                    if let Some(j) = &jm {
+                        j.dead_letters.inc();
+                    }
                     if let Some(j) = &jctx {
                         j.task(TracePhase::Map, i, 0).emit(TraceEvent::DeadLettered {
                             message: format!("map task {i} exhausted its retry budget"),
@@ -1124,6 +1256,12 @@ impl JobScheduler {
         } else {
             JobOutcome::Ok
         };
+        // Fold the finished job into the registry (see `run_inner`); the
+        // job's mailbox probe starts answering `None` as soon as the
+        // service drops with this frame, and the sampler prunes it.
+        if let Some(mspec) = &inner.cfg.metrics {
+            mspec.absorb_job(&counters, &stats);
+        }
 
         JobResult {
             outputs,

@@ -33,7 +33,24 @@ use std::time::{Duration, Instant};
 
 use crate::mapreduce::counters::{names, Counters};
 use crate::mapreduce::trace::{JobTraceCtx, TraceEvent, TracePhase};
+use crate::metrics::registry::WaveMetrics;
 use crate::util::threadpool::{OnceSlots, ThreadPool};
+
+/// How the straggler detector assigns a speculative clone to a lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpecMode {
+    /// Hadoop's heuristic: clone a straggler only when a slot is idle
+    /// *right now*; a saturated pool launches nothing.
+    #[default]
+    RunningMedian,
+    /// Trace-informed: project each lane's idle gap from the live
+    /// attempt timeline (the board's start stamps plus the running
+    /// median) and pre-queue the clone onto the lane with the earliest
+    /// projected idle — but only when `gap + median` still beats the
+    /// straggler's own projected finish, so a clone is never launched
+    /// that the timeline says cannot win.
+    IdleGap,
+}
 
 /// Straggler-detection knobs (Hadoop's speculative-execution analogue).
 #[derive(Debug, Clone)]
@@ -47,6 +64,8 @@ pub struct SpecPolicy {
     pub min_secs: f64,
     /// How often the job driver re-scans running tasks for stragglers.
     pub poll: Duration,
+    /// How a detected straggler's clone is assigned to a lane.
+    pub mode: SpecMode,
 }
 
 impl Default for SpecPolicy {
@@ -55,7 +74,16 @@ impl Default for SpecPolicy {
             slowdown: 1.5,
             min_secs: 0.02,
             poll: Duration::from_millis(1),
+            mode: SpecMode::RunningMedian,
         }
+    }
+}
+
+impl SpecPolicy {
+    /// Switch the lane-assignment heuristic.
+    pub fn with_mode(mut self, mode: SpecMode) -> Self {
+        self.mode = mode;
+        self
     }
 }
 
@@ -134,6 +162,9 @@ pub(crate) struct WaveOptions<T> {
     /// context plus which phase the wave executes.  `None` traces
     /// nothing.
     pub trace: Option<(JobTraceCtx, TracePhase)>,
+    /// Live-metrics handles for this wave's attempt lifecycle (queued /
+    /// running gauges, retried counter).  `None` records nothing.
+    pub metrics: Option<WaveMetrics>,
 }
 
 impl<T> Default for WaveOptions<T> {
@@ -144,6 +175,7 @@ impl<T> Default for WaveOptions<T> {
             allow_failure: false,
             on_win: None,
             trace: None,
+            metrics: None,
         }
     }
 }
@@ -256,6 +288,7 @@ where
             Arc::clone(counters),
             opts.on_win.clone(),
             opts.trace.clone(),
+            opts.metrics.clone(),
         );
     }
 
@@ -270,6 +303,9 @@ where
             if !board.decided[i].load(Ordering::Acquire) {
                 counters.inc(names::TASK_RETRIES);
                 retries_launched += 1;
+                if let Some(m) = &opts.metrics {
+                    m.on_retry();
+                }
                 let inputs = retained
                     .as_ref()
                     .expect("inputs retained when retries are budgeted");
@@ -284,6 +320,7 @@ where
                     Arc::clone(counters),
                     opts.on_win.clone(),
                     opts.trace.clone(),
+                    opts.metrics.clone(),
                 );
             }
             st = board.state.lock().unwrap();
@@ -322,8 +359,43 @@ where
                     if elapsed < threshold {
                         continue;
                     }
-                    if pool.in_flight() >= pool.size() {
-                        break; // no idle slot: never delay primary attempts
+                    match policy.mode {
+                        SpecMode::RunningMedian => {
+                            if pool.in_flight() >= pool.size() {
+                                break; // no idle slot: never delay primary attempts
+                            }
+                        }
+                        SpecMode::IdleGap => {
+                            // Earliest projected idle gap across lanes:
+                            // zero when a slot is idle now, otherwise
+                            // the soonest median-projected completion
+                            // among the other running attempts on the
+                            // live board timeline.
+                            let gap = if pool.in_flight() < pool.size() {
+                                0.0
+                            } else {
+                                let mut earliest = f64::INFINITY;
+                                for j in 0..n {
+                                    if j == i || board.decided[j].load(Ordering::Acquire) {
+                                        continue;
+                                    }
+                                    let sj = board.started_us[j].load(Ordering::Acquire);
+                                    if sj == 0 {
+                                        continue;
+                                    }
+                                    let ej = now_us.saturating_sub(sj) as f64 / 1e6;
+                                    earliest = earliest.min((median - ej).max(0.0));
+                                }
+                                earliest
+                            };
+                            // A clone queued onto that lane starts after
+                            // `gap` and projects one median of work; skip
+                            // it when the straggler's own elapsed time
+                            // says the clone cannot finish first.
+                            if gap + median >= elapsed {
+                                continue;
+                            }
+                        }
                     }
                     if board.cloned[i].swap(true, Ordering::AcqRel) {
                         continue;
@@ -341,6 +413,7 @@ where
                         Arc::clone(counters),
                         opts.on_win.clone(),
                         opts.trace.clone(),
+                        opts.metrics.clone(),
                     );
                 }
                 st = board.state.lock().unwrap();
@@ -393,6 +466,7 @@ fn submit_attempt<I, T, F>(
     counters: Arc<Counters>,
     on_win: Option<Arc<dyn Fn(usize, &T) + Send + Sync>>,
     trace: Option<(JobTraceCtx, TracePhase)>,
+    metrics: Option<WaveMetrics>,
 ) where
     I: Send + Sync + 'static,
     T: Send + 'static,
@@ -408,9 +482,18 @@ fn submit_attempt<I, T, F>(
         }
         t.emit(TraceEvent::AttemptScheduled);
     }
+    if let Some(m) = &metrics {
+        m.on_submit();
+    }
     let speculative = kind == AttemptKind::Clone;
     pool.execute(move || {
+        if let Some(m) = &metrics {
+            m.on_start();
+        }
         if board.decided[i].load(Ordering::Acquire) {
+            if let Some(m) = &metrics {
+                m.on_exit();
+            }
             return; // winner finished while this attempt was queued
         }
         if !speculative {
@@ -477,6 +560,9 @@ fn submit_attempt<I, T, F>(
                     board.cv.notify_all();
                 }
             }
+        }
+        if let Some(m) = &metrics {
+            m.on_exit();
         }
     });
 }
@@ -550,6 +636,55 @@ mod tests {
         assert!(
             counters.get(names::SPECULATIVE_WON) <= counters.get(names::SPECULATIVE_LAUNCHED)
         );
+    }
+
+    #[test]
+    fn idle_gap_mode_clones_stragglers_and_output_is_unchanged() {
+        let pool = ThreadPool::new(4);
+        let counters = Arc::new(Counters::new());
+        let items: Vec<u64> = (0..8).collect();
+        let f = Arc::new(|_i: usize, _a: u32, v: Arc<u64>| {
+            if *v == 7 {
+                busy_wait(Duration::from_millis(150));
+            } else {
+                busy_wait(Duration::from_millis(2));
+            }
+            *v + 100
+        });
+        let policy = SpecPolicy::default().with_mode(SpecMode::IdleGap);
+        let out = run_tasks(&pool, items, f, Some(policy), &counters);
+        assert_eq!(out, (0..8u64).map(|v| v + 100).collect::<Vec<_>>());
+        assert!(
+            counters.get(names::SPECULATIVE_LAUNCHED) >= 1,
+            "the 150ms straggler should have been cloned onto a projected-idle lane"
+        );
+        assert!(
+            counters.get(names::SPECULATIVE_WON) <= counters.get(names::SPECULATIVE_LAUNCHED)
+        );
+    }
+
+    #[test]
+    fn wave_metrics_quiesce_after_the_wave() {
+        use crate::metrics::registry::MetricsSpec;
+        let pool = ThreadPool::new(2);
+        let counters = Arc::new(Counters::new());
+        let spec = MetricsSpec::new();
+        let jm = spec.job_metrics("wave");
+        let out = run_tasks_ft(
+            &pool,
+            (0..12u64).collect::<Vec<_>>(),
+            Arc::new(|_i, _a, v: Arc<u64>| *v * 2),
+            WaveOptions {
+                metrics: Some(jm.wave()),
+                ..WaveOptions::default()
+            },
+            &counters,
+        );
+        assert_eq!(out.results.len(), 12);
+        pool.join();
+        assert_eq!(jm.queued.get(), 0, "queued gauge must balance to zero");
+        assert_eq!(jm.running.get(), 0, "running gauge must balance to zero");
+        assert_eq!(jm.retried.get(), 0);
     }
 
     #[test]

@@ -61,6 +61,20 @@ pub struct ClusterSpec {
     /// worst-case re-execution).  `0.0` (the paper's implicit setup —
     /// no failures during the measured runs) charges nothing.
     pub task_failure_rate: f64,
+    /// Calibrated map-task rate: measured map-task durations are stretched
+    /// by this factor before scheduling, absorbing the per-task overhead
+    /// (scheduling, spill writes, push bookkeeping) that sits in the
+    /// measured map *phase* wall time but outside the task timers.  `1.0`
+    /// (the default) reproduces the uncalibrated model exactly; fitted by
+    /// [`ClusterSpec::fit_from_stats`].
+    pub map_secs_scale: f64,
+    /// Calibrated reduce-task rate (see [`ClusterSpec::map_secs_scale`]).
+    pub reduce_secs_scale: f64,
+    /// Calibrated (de)compression CPU rate: multiplier on the profile's
+    /// DEFLATE charges.  The shuffle-row fit scales CPU and bandwidth by
+    /// the same factor — one observable per job cannot separate them, so
+    /// the fit preserves the row's CPU-vs-bytes mix.  `1.0` by default.
+    pub shuffle_cpu_scale: f64,
 }
 
 impl ClusterSpec {
@@ -81,6 +95,9 @@ impl ClusterSpec {
             slow_nodes: 0,
             slow_node_factor: 1.0,
             task_failure_rate: 0.0,
+            map_secs_scale: 1.0,
+            reduce_secs_scale: 1.0,
+            shuffle_cpu_scale: 1.0,
         }
     }
 
@@ -112,6 +129,88 @@ impl ClusterSpec {
 
     pub fn reduce_slots(&self) -> usize {
         self.nodes * self.reduce_slots_per_node
+    }
+
+    /// Calibrate a single-node spec against measured jobs — the
+    /// generalization of [`fit_secs_per_pair`] from one per-pair cost to
+    /// the full phase cost model.  Starting from
+    /// [`ClusterSpec::paper_like`]`(1)` (the testbed the engine measures
+    /// on), three groups of rates are fitted so [`drift_report`] on the
+    /// returned spec tracks the measured phases instead of the 2007-era
+    /// defaults:
+    ///
+    /// * **map / reduce task rates** ([`ClusterSpec::map_secs_scale`] /
+    ///   [`ClusterSpec::reduce_secs_scale`]): measured phase wall seconds
+    ///   over the summed task seconds.  When a job carries no per-task
+    ///   vector the task-duration *histograms*
+    ///   ([`JobStats::map_task_us_hist`]) stand in — `mean × count`, the
+    ///   same total, which is all the ratio needs.
+    /// * **shuffle bandwidth + compression CPU**: the default-spec
+    ///   shuffle row (materialize + compress + network + decompress) is
+    ///   compared against the measured shuffle wall stamps, and the
+    ///   single common factor `λ = measured / simulated` is applied to
+    ///   the CPU charges ([`ClusterSpec::shuffle_cpu_scale`]) while the
+    ///   disk and network bandwidths divide by it — one observable per
+    ///   job cannot separate CPU from byte movement, so the fit
+    ///   preserves the row's internal mix.
+    ///
+    /// Phases that measured zero (or have no work) keep their default
+    /// rates, and every fitted factor is clamped to `[1e-3, 1e3]` so a
+    /// degenerate sample cannot produce a nonsensical cluster.  Fitting
+    /// over several jobs pools their totals (volume-weighted, like
+    /// [`fit_secs_per_pair`]).
+    ///
+    /// [`JobStats::map_task_us_hist`]:
+    ///     crate::mapreduce::engine::JobStats::map_task_us_hist
+    pub fn fit_from_stats(stats: &[crate::mapreduce::engine::JobStats]) -> ClusterSpec {
+        let mut spec = ClusterSpec::paper_like(1);
+        if stats.is_empty() {
+            return spec;
+        }
+        let clamp = |v: f64| v.clamp(1e-3, 1e3);
+        // Summed task seconds, falling back to the duration histogram
+        // (µs) when the per-task vector is absent.
+        fn task_sum(secs: &[f64], hist: &crate::metrics::histogram::Histogram) -> f64 {
+            if secs.is_empty() && hist.count() > 0 {
+                hist.mean() * hist.count() as f64 / 1e6
+            } else {
+                secs.iter().sum()
+            }
+        }
+        let (mut map_tasks, mut map_meas) = (0.0f64, 0.0f64);
+        let (mut red_tasks, mut red_meas) = (0.0f64, 0.0f64);
+        for s in stats {
+            map_tasks += task_sum(&s.map_task_secs, &s.map_task_us_hist);
+            map_meas += s.map_phase_secs;
+            red_tasks += task_sum(&s.reduce_task_secs, &s.reduce_task_us_hist);
+            red_meas += s.reduce_phase_secs;
+        }
+        if map_tasks > 0.0 && map_meas > 0.0 {
+            spec.map_secs_scale = clamp(map_meas / map_tasks);
+        }
+        if red_tasks > 0.0 && red_meas > 0.0 {
+            spec.reduce_secs_scale = clamp(red_meas / red_tasks);
+        }
+        // Shuffle row: simulate each job's row on the *pristine* default
+        // spec and scale the whole row onto the measured wall stamps.
+        let pristine = ClusterSpec::paper_like(1);
+        let (mut row_sim, mut row_meas) = (0.0f64, 0.0f64);
+        for s in stats {
+            // in-process runs don't report a separate map-output volume;
+            // the shuffled bytes are the same records, so they stand in
+            let bytes: u64 = s.shuffle_bytes_per_reducer.iter().sum();
+            let profile = JobProfile::from_stats(s, bytes);
+            let sim = simulate_job_mode(&profile, &pristine, SimShuffleMode::TwoWave);
+            row_sim += sim.materialize_s + sim.compress_s + sim.shuffle_s + sim.decompress_s;
+            row_meas += s.shuffle_phase_secs;
+        }
+        if row_sim > 0.0 && row_meas > 0.0 {
+            let lambda = clamp(row_meas / row_sim);
+            spec.shuffle_cpu_scale = lambda;
+            spec.disk_bytes_per_s /= lambda;
+            spec.net_bytes_per_s /= lambda;
+        }
+        spec
     }
 }
 
@@ -462,6 +561,16 @@ pub fn simulate_job_overlap(profile: &JobProfile, spec: &ClusterSpec) -> SimBrea
     simulate_job_mode(profile, spec, SimShuffleMode::Overlap)
 }
 
+/// Stretch measured task durations by a calibrated rate; borrows when the
+/// rate is the identity so the uncalibrated path stays allocation-free.
+fn scaled_secs(secs: &[f64], scale: f64) -> std::borrow::Cow<'_, [f64]> {
+    if scale == 1.0 {
+        std::borrow::Cow::Borrowed(secs)
+    } else {
+        std::borrow::Cow::Owned(secs.iter().map(|s| s * scale).collect())
+    }
+}
+
 /// The mode-parameterized simulator core behind [`simulate_job`] /
 /// [`simulate_job_overlap`].
 pub fn simulate_job_mode(
@@ -469,7 +578,8 @@ pub fn simulate_job_mode(
     spec: &ClusterSpec,
     mode: SimShuffleMode,
 ) -> SimBreakdown {
-    let map_wave = wave_schedule(&profile.map_task_secs, spec.map_slots().max(1), spec);
+    let map_secs = scaled_secs(&profile.map_task_secs, spec.map_secs_scale);
+    let map_wave = wave_schedule(&map_secs, spec.map_slots().max(1), spec);
     // map outputs written to local disk once (sort spill), read once at
     // shuffle: 2 passes over the bytes at aggregate disk bandwidth.  A
     // disk-backed run reports the bytes it *actually* wrote (compressed
@@ -484,7 +594,8 @@ pub fn simulate_job_mode(
     // (de)compression CPU: DEFLATE runs on the same cores as the tasks,
     // parallel across slots, so the wall charge is volume / slots
     let raw_mb = profile.shuffle_bytes_raw as f64 / 1e6;
-    let compress_s = raw_mb * profile.compress_secs_per_mb / spec.map_slots().max(1) as f64;
+    let compress_s = raw_mb * profile.compress_secs_per_mb * spec.shuffle_cpu_scale
+        / spec.map_slots().max(1) as f64;
     // shuffle: every reducer pulls its bytes over its node's NIC; reducers
     // run spread over nodes, so the bottleneck is the max per-node inflow
     let reduce_slots = spec.reduce_slots().max(1);
@@ -496,8 +607,10 @@ pub fn simulate_job_mode(
         .iter()
         .map(|&b| b as f64 / spec.net_bytes_per_s)
         .fold(0.0, f64::max);
-    let decompress_s = raw_mb * profile.decompress_secs_per_mb / reduce_slots as f64;
-    let reduce_wave = wave_schedule(&profile.reduce_task_secs, reduce_slots, spec);
+    let decompress_s =
+        raw_mb * profile.decompress_secs_per_mb * spec.shuffle_cpu_scale / reduce_slots as f64;
+    let reduce_secs = scaled_secs(&profile.reduce_task_secs, spec.reduce_secs_scale);
+    let reduce_wave = wave_schedule(&reduce_secs, reduce_slots, spec);
     let reduce_s = match mode {
         SimShuffleMode::TwoWave => reduce_wave.makespan,
         SimShuffleMode::Overlap => {
@@ -594,6 +707,19 @@ impl DriftReport {
         self.waves.iter().map(WaveDrift::drift_frac).fold(0.0, f64::max)
     }
 
+    /// Mean absolute per-wave prediction error in *seconds* — the
+    /// calibration objective [`ClusterSpec::fit_from_stats`] minimizes.
+    /// Unlike [`DriftReport::max_drift_frac`] it stays meaningful for
+    /// phases that measured ~0 s (where any prediction yields a 0 or
+    /// huge *fraction*), which is exactly where the uncalibrated spec's
+    /// disk/network charges show up.
+    pub fn mean_abs_delta_s(&self) -> f64 {
+        if self.waves.is_empty() {
+            return 0.0;
+        }
+        self.waves.iter().map(|w| w.delta_s().abs()).sum::<f64>() / self.waves.len() as f64
+    }
+
     /// Compact JSON object for bench artifacts.
     pub fn to_json(&self) -> String {
         let mode = match self.mode {
@@ -615,11 +741,12 @@ impl DriftReport {
             })
             .collect();
         format!(
-            "{{\"mode\":\"{}\",\"measured_total_s\":{:.6},\"simulated_total_s\":{:.6},\"max_drift_frac\":{:.6},\"waves\":[{}]}}",
+            "{{\"mode\":\"{}\",\"measured_total_s\":{:.6},\"simulated_total_s\":{:.6},\"max_drift_frac\":{:.6},\"mean_abs_delta_s\":{:.6},\"waves\":[{}]}}",
             mode,
             self.measured_total_s,
             self.simulated_total_s,
             self.max_drift_frac(),
+            self.mean_abs_delta_s(),
             waves.join(",")
         )
     }
@@ -1153,6 +1280,104 @@ mod tests {
         let text = rep.render();
         assert!(text.contains("sim-vs-measured drift"));
         assert!(text.contains("reduce"));
+    }
+
+    /// Measured stats with per-task overhead the task timers miss (the
+    /// usual shape of a real run): wall phases run longer than the task
+    /// sums, and the in-process shuffle is far cheaper than 2007 disk +
+    /// GbE.  The calibrated spec must track all three rows better than
+    /// the default — the acceptance criterion the engine bench asserts.
+    fn overheady_stats() -> crate::mapreduce::engine::JobStats {
+        crate::mapreduce::engine::JobStats {
+            map_task_secs: vec![1.0, 2.0, 1.5],
+            reduce_task_secs: vec![2.0, 1.0],
+            shuffle_bytes_per_reducer: vec![4_000_000, 4_000_000],
+            map_phase_secs: 5.4, // 1.2× the 4.5s task sum
+            shuffle_phase_secs: 0.004,
+            reduce_phase_secs: 3.45, // 1.15× the 3.0s task sum
+            total_secs: 8.854,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fit_from_stats_beats_default_spec() {
+        let stats = overheady_stats();
+        let bytes: u64 = stats.shuffle_bytes_per_reducer.iter().sum();
+        let default = ClusterSpec::paper_like(1);
+        let cal = ClusterSpec::fit_from_stats(std::slice::from_ref(&stats));
+        let d_def = drift_report(&stats, bytes, &default);
+        let d_cal = drift_report(&stats, bytes, &cal);
+        assert!(
+            d_cal.mean_abs_delta_s() < d_def.mean_abs_delta_s(),
+            "calibrated {:.6}s must beat default {:.6}s",
+            d_cal.mean_abs_delta_s(),
+            d_def.mean_abs_delta_s()
+        );
+        // the fitted rates reproduce the measured rows almost exactly
+        for w in &d_cal.waves {
+            assert!(
+                w.delta_s().abs() < 1e-6,
+                "calibrated row {} off by {:.9}s",
+                w.wave,
+                w.delta_s()
+            );
+        }
+        assert!((cal.map_secs_scale - 1.2).abs() < 1e-9);
+        assert!((cal.reduce_secs_scale - 1.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_from_stats_uses_histograms_when_task_vectors_are_absent() {
+        let mut stats = overheady_stats();
+        // same totals, carried only by the µs histograms
+        for s in std::mem::take(&mut stats.map_task_secs) {
+            stats.map_task_us_hist.record((s * 1e6) as u64);
+        }
+        for s in std::mem::take(&mut stats.reduce_task_secs) {
+            stats.reduce_task_us_hist.record((s * 1e6) as u64);
+        }
+        let cal = ClusterSpec::fit_from_stats(std::slice::from_ref(&stats));
+        assert!((cal.map_secs_scale - 1.2).abs() < 1e-6);
+        assert!((cal.reduce_secs_scale - 1.15).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fit_from_stats_empty_or_zero_keeps_defaults() {
+        let cal = ClusterSpec::fit_from_stats(&[]);
+        assert_eq!(cal.map_secs_scale, 1.0);
+        assert_eq!(cal.reduce_secs_scale, 1.0);
+        assert_eq!(cal.shuffle_cpu_scale, 1.0);
+        // zero-measured phases must not fit a degenerate rate
+        let cal = ClusterSpec::fit_from_stats(&[crate::mapreduce::engine::JobStats::default()]);
+        assert_eq!(cal.map_secs_scale, 1.0);
+        assert_eq!(cal.shuffle_cpu_scale, 1.0);
+    }
+
+    #[test]
+    fn calibration_scales_apply_in_simulation() {
+        let profile = JobProfile {
+            map_task_secs: vec![2.0; 4],
+            reduce_task_secs: vec![1.0; 2],
+            shuffle_bytes_per_reducer: vec![0; 2],
+            ..Default::default()
+        };
+        let base = ClusterSpec::paper_like(1);
+        let mut scaled = base.clone();
+        scaled.map_secs_scale = 2.0;
+        scaled.reduce_secs_scale = 3.0;
+        let b = simulate_job(&profile, &base);
+        let s = simulate_job(&profile, &scaled);
+        assert!((s.map_s - 2.0 * b.map_s).abs() < 1e-9);
+        assert!((s.reduce_s - 3.0 * b.reduce_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_abs_delta_is_published_in_json() {
+        let spec = ClusterSpec::paper_like(1);
+        let rep = drift_report(&drift_stats(), 1_000_000, &spec);
+        assert!(rep.to_json().contains("\"mean_abs_delta_s\":"));
+        assert!(rep.mean_abs_delta_s() >= 0.0);
     }
 
     #[test]

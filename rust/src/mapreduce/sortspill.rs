@@ -61,6 +61,8 @@ use flate2::read::DeflateDecoder;
 use flate2::write::DeflateEncoder;
 use flate2::Compression;
 
+use super::types::SizeEstimate;
+
 /// Process-wide sequence for unique spill file / directory names.
 static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
 
@@ -692,6 +694,20 @@ impl<T> Run<T> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Approximate payload bytes: summed [`SizeEstimate`] for in-memory
+    /// runs, serialized file size for spilled ones — the unit behind the
+    /// metrics registry's staged-run accounting
+    /// ([`MailboxStats::staged_bytes`](crate::metrics::registry::MailboxStats)).
+    pub fn estimate_bytes(&self) -> u64
+    where
+        T: SizeEstimate,
+    {
+        match self {
+            Run::Mem(v) => v.iter().map(|t| t.size_bytes() as u64).sum(),
+            Run::Spilled(f) => f.file_bytes(),
+        }
     }
 
     /// Stream the run's records.  Spilled runs open a chunked streaming

@@ -10,7 +10,9 @@
 //! stream alone; [`crate::metrics::timeline`] renders it as a per-slot
 //! wave Gantt and re-derives the wave metrics (`map_wave_done_secs`,
 //! `reduce_first_start_secs`, `overlap_secs`) that used to be hand-plumbed
-//! per subsystem.
+//! per subsystem.  For watching a *running* scheduler instead of
+//! reconstructing a finished job, see the live counterpart,
+//! [`crate::metrics::registry`].
 //!
 //! # Enabling
 //!

@@ -1,7 +1,8 @@
-//! Reporting: phase timers, trace timelines, and experiment report
-//! rendering.
+//! Reporting: phase timers, live metrics, trace timelines, and
+//! experiment report rendering.
 
 pub mod histogram;
+pub mod registry;
 pub mod report;
 pub mod timeline;
 pub mod timer;

@@ -1,0 +1,924 @@
+//! Live engine telemetry: a typed metrics registry plus a background
+//! health sampler.
+//!
+//! [`crate::mapreduce::trace`] is the *post-hoc* observability story —
+//! a complete per-attempt event log you read after the run.  This module
+//! is the *live* sibling: a lock-cheap [`MetricsSpec`] registry of
+//! gauges, monotonic counters, and windowed histograms that the engine
+//! updates in-line, and a [`HealthSampler`] thread that snapshots
+//! scheduler internals on a fixed cadence into a bounded ring of
+//! [`EngineSnapshot`]s.  Attach one via
+//! [`SchedulerConfig::with_metrics`](crate::mapreduce::SchedulerConfig::with_metrics);
+//! export the ring as JSONL with [`MetricsSpec::snapshots_jsonl`] or
+//! render it as a text dashboard with [`MetricsSpec::render_dashboard`]
+//! (the live counterpart of
+//! [`render_gantt`](crate::metrics::timeline::JobTimeline::render_gantt)).
+//!
+//! # Cost
+//!
+//! The same `Option`-cheap contract as tracing: a scheduler built
+//! without a spec spawns no sampler thread and every engine-side update
+//! site is a single `Option` discriminant test
+//! (`tests/prop_metrics.rs` pins output byte-identical metrics-on vs
+//! metrics-off).  When enabled, hot-path updates are one atomic
+//! add on an `Arc`-shared cell — no registry lock is touched after the
+//! handle is created.
+//!
+//! # Snapshot schema (JSONL)
+//!
+//! [`EngineSnapshot::to_json`] flattens one sample to one JSON object;
+//! a snapshot file is one object per line.  This schema is pinned —
+//! `scripts/validate_trace.py` validates the same field set, so adding
+//! or renaming a field is a schema change for both.  All values are
+//! numbers:
+//!
+//! | field             | meaning                                              |
+//! |-------------------|------------------------------------------------------|
+//! | `seq`             | sample ordinal (strictly increasing per spec)        |
+//! | `at_secs`         | seconds since the spec was created (nondecreasing)   |
+//! | `map_slots`       | scheduler map slot count                             |
+//! | `reduce_slots`    | scheduler reduce slot count                          |
+//! | `map_running`     | map tasks queued-or-running in the pool (≤ `map_slots` when idle-queue drained) |
+//! | `reduce_running`  | reduce tasks queued-or-running in the pool           |
+//! | `jobs_active`     | jobs currently inside `run`                          |
+//! | `tasks_queued`    | attempts handed to a pool, not yet started (Σ jobs)  |
+//! | `tasks_running`   | attempt bodies executing right now (Σ jobs)          |
+//! | `tasks_retried`   | cumulative retry resubmissions (Σ jobs)              |
+//! | `mailbox_runs`    | committed runs resident in push-shuffle mailboxes    |
+//! | `staged_bytes`    | estimated bytes of staged (uncommitted) push runs    |
+//! | `spill_dir_bytes` | on-disk bytes under registered spill directories     |
+//! | `dead_letters`    | cumulative dead-lettered tasks                       |
+//!
+//! Occupancy (`map_running`/`reduce_running`) reports the pools'
+//! `in_flight()` — queued plus running — so a burst of submissions can
+//! momentarily exceed the slot count; the validator therefore checks
+//! `tasks_running ≤ map_slots + reduce_slots` (actual bodies never
+//! exceed worker threads) and flags only negative or absurd values for
+//! the in-flight figures.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::histogram::Histogram;
+use crate::util::json::Json;
+
+/// A settable instantaneous value (occupancy, queue depth).  Handles are
+/// `Arc`-shared: updates are one atomic add, never a registry lock.
+#[derive(Clone)]
+pub struct Gauge {
+    cell: Arc<AtomicI64>,
+}
+
+impl Gauge {
+    fn new() -> Self {
+        Self {
+            cell: Arc::new(AtomicI64::new(0)),
+        }
+    }
+
+    pub fn add(&self, delta: i64) {
+        self.cell.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.cell.store(v, Ordering::Relaxed);
+    }
+
+    /// Raw signed value; transient negatives are possible mid-update
+    /// (snapshots clamp at zero).
+    pub fn get(&self) -> i64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+impl fmt::Debug for Gauge {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Gauge({})", self.get())
+    }
+}
+
+/// A monotonic event count.  Never decremented.
+#[derive(Clone)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    fn new() -> Self {
+        Self {
+            cell: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn add(&self, delta: u64) {
+        self.cell.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+impl fmt::Debug for Counter {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Counter({})", self.get())
+    }
+}
+
+/// A windowed distribution backed by [`Histogram`]: record on the hot
+/// side, [`HistogramHandle::window`] drains the accumulated window
+/// (e.g. per dashboard render), [`HistogramHandle::snapshot`] copies it
+/// without draining.
+#[derive(Clone)]
+pub struct HistogramHandle {
+    cell: Arc<Mutex<Histogram>>,
+}
+
+impl HistogramHandle {
+    fn new() -> Self {
+        Self {
+            cell: Arc::new(Mutex::new(Histogram::new())),
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.cell.lock().unwrap().record(v);
+    }
+
+    pub fn merge(&self, other: &Histogram) {
+        self.cell.lock().unwrap().merge(other);
+    }
+
+    /// Copy of the current window without draining it.
+    pub fn snapshot(&self) -> Histogram {
+        self.cell.lock().unwrap().clone()
+    }
+
+    /// Take the accumulated window, leaving an empty one behind.
+    pub fn window(&self) -> Histogram {
+        std::mem::take(&mut *self.cell.lock().unwrap())
+    }
+}
+
+impl fmt::Debug for HistogramHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "HistogramHandle(n={})", self.snapshot().count())
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Gauge(Gauge),
+    Counter(Counter),
+    Histogram(HistogramHandle),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Gauge(_) => "gauge",
+            Metric::Counter(_) => "counter",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Push-mailbox depth as reported by a shuffle-service probe.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MailboxStats {
+    /// Committed runs resident in mailboxes (not yet fully drained by
+    /// their reduce task).
+    pub runs: u64,
+    /// Estimated in-memory bytes of *staged* (uncommitted attempt)
+    /// runs.
+    pub staged_bytes: u64,
+}
+
+/// Live pool occupancy as reported by the scheduler probe.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolOccupancy {
+    pub map_slots: u64,
+    pub reduce_slots: u64,
+    /// Map pool `in_flight()` — queued plus running.
+    pub map_running: u64,
+    /// Reduce pool `in_flight()` — queued plus running.
+    pub reduce_running: u64,
+}
+
+type MailboxProbe = Box<dyn Fn() -> Option<MailboxStats> + Send + Sync>;
+
+/// One sampled view of the engine, per the module-level schema table.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EngineSnapshot {
+    pub seq: u64,
+    pub at_secs: f64,
+    pub map_slots: u64,
+    pub reduce_slots: u64,
+    pub map_running: u64,
+    pub reduce_running: u64,
+    pub jobs_active: u64,
+    pub tasks_queued: u64,
+    pub tasks_running: u64,
+    pub tasks_retried: u64,
+    pub mailbox_runs: u64,
+    pub staged_bytes: u64,
+    pub spill_dir_bytes: u64,
+    pub dead_letters: u64,
+}
+
+impl EngineSnapshot {
+    /// Flatten to one JSON object (one JSONL line) per the module-level
+    /// schema table.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("seq", Json::num(self.seq as f64)),
+            ("at_secs", Json::Num(self.at_secs)),
+            ("map_slots", Json::num(self.map_slots as f64)),
+            ("reduce_slots", Json::num(self.reduce_slots as f64)),
+            ("map_running", Json::num(self.map_running as f64)),
+            ("reduce_running", Json::num(self.reduce_running as f64)),
+            ("jobs_active", Json::num(self.jobs_active as f64)),
+            ("tasks_queued", Json::num(self.tasks_queued as f64)),
+            ("tasks_running", Json::num(self.tasks_running as f64)),
+            ("tasks_retried", Json::num(self.tasks_retried as f64)),
+            ("mailbox_runs", Json::num(self.mailbox_runs as f64)),
+            ("staged_bytes", Json::num(self.staged_bytes as f64)),
+            ("spill_dir_bytes", Json::num(self.spill_dir_bytes as f64)),
+            ("dead_letters", Json::num(self.dead_letters as f64)),
+        ])
+    }
+}
+
+struct MetricsInner {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+    ring: Mutex<VecDeque<EngineSnapshot>>,
+    ring_capacity: usize,
+    cadence: Duration,
+    seq: AtomicU64,
+    epoch: Instant,
+    mailbox_probes: Mutex<Vec<MailboxProbe>>,
+    spill_dirs: Mutex<Vec<PathBuf>>,
+}
+
+/// The user-facing metrics handle: create one, attach it to a
+/// [`SchedulerConfig`](crate::mapreduce::SchedulerConfig), read the
+/// snapshot ring back out during or after the run.  Cloning shares the
+/// underlying registry and ring.
+#[derive(Clone)]
+pub struct MetricsSpec {
+    inner: Arc<MetricsInner>,
+}
+
+impl Default for MetricsSpec {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsSpec {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(MetricsInner {
+                metrics: Mutex::new(BTreeMap::new()),
+                ring: Mutex::new(VecDeque::new()),
+                ring_capacity: 4096,
+                cadence: Duration::from_millis(2),
+                seq: AtomicU64::new(0),
+                epoch: Instant::now(),
+                mailbox_probes: Mutex::new(Vec::new()),
+                spill_dirs: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Sampler cadence (default 2 ms — fine enough to catch the waves
+    /// of a test-sized job, coarse enough to stay invisible in the
+    /// profile).
+    pub fn with_cadence(self, cadence: Duration) -> Self {
+        let mut inner = self.into_inner();
+        inner.cadence = cadence.max(Duration::from_micros(100));
+        Self {
+            inner: Arc::new(inner),
+        }
+    }
+
+    /// Snapshot ring capacity (default 4096; oldest samples are
+    /// evicted first).
+    pub fn with_ring_capacity(self, capacity: usize) -> Self {
+        let mut inner = self.into_inner();
+        inner.ring_capacity = capacity.max(1);
+        Self {
+            inner: Arc::new(inner),
+        }
+    }
+
+    /// Builders only make sense before the spec is shared; a shared
+    /// spec's knobs are frozen.
+    fn into_inner(self) -> MetricsInner {
+        Arc::try_unwrap(self.inner).unwrap_or_else(|arc| MetricsInner {
+            metrics: Mutex::new(arc.metrics.lock().unwrap().clone()),
+            ring: Mutex::new(arc.ring.lock().unwrap().clone()),
+            ring_capacity: arc.ring_capacity,
+            cadence: arc.cadence,
+            seq: AtomicU64::new(arc.seq.load(Ordering::Relaxed)),
+            epoch: arc.epoch,
+            mailbox_probes: Mutex::new(Vec::new()),
+            spill_dirs: Mutex::new(arc.spill_dirs.lock().unwrap().clone()),
+        })
+    }
+
+    pub(crate) fn cadence(&self) -> Duration {
+        self.inner.cadence
+    }
+
+    /// Get-or-create the gauge registered under `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric type.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.inner.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Gauge::new()))
+        {
+            Metric::Gauge(g) => g.clone(),
+            other => panic!("metric {name:?} is a {}, not a gauge", other.kind()),
+        }
+    }
+
+    /// Get-or-create the monotonic counter registered under `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric type.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.inner.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Counter::new()))
+        {
+            Metric::Counter(c) => c.clone(),
+            other => panic!("metric {name:?} is a {}, not a counter", other.kind()),
+        }
+    }
+
+    /// Get-or-create the windowed histogram registered under `name`.
+    ///
+    /// # Panics
+    /// If `name` is already registered as a different metric type.
+    pub fn histogram(&self, name: &str) -> HistogramHandle {
+        let mut m = self.inner.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(HistogramHandle::new()))
+        {
+            Metric::Histogram(h) => h.clone(),
+            other => panic!("metric {name:?} is a {}, not a histogram", other.kind()),
+        }
+    }
+
+    /// Register a push-shuffle mailbox probe.  The probe returns `None`
+    /// once its service is gone; dead probes are pruned at the next
+    /// sample.
+    pub(crate) fn register_mailbox_probe(&self, probe: MailboxProbe) {
+        self.inner.mailbox_probes.lock().unwrap().push(probe);
+    }
+
+    /// Register a spill directory whose on-disk bytes each sample sums.
+    pub fn register_spill_dir(&self, dir: &Path) {
+        let mut dirs = self.inner.spill_dirs.lock().unwrap();
+        if !dirs.iter().any(|d| d == dir) {
+            dirs.push(dir.to_path_buf());
+        }
+    }
+
+    /// Open the per-job handle bundle the scheduler updates in-line.
+    pub(crate) fn job_metrics(&self, job: &str) -> JobMetrics {
+        let jm = JobMetrics {
+            queued: self.gauge(&format!("job.{job}.tasks_queued")),
+            running: self.gauge(&format!("job.{job}.tasks_running")),
+            retried: self.counter(&format!("job.{job}.tasks_retried")),
+            dead_letters: self.counter("engine.dead_letters"),
+            jobs_active: self.gauge("engine.jobs_active"),
+        };
+        jm.jobs_active.inc();
+        jm
+    }
+
+    /// Fold a finished job's final [`Counters`](crate::mapreduce::Counters)
+    /// and task-duration histograms into the registry, so registry
+    /// counters agree with the job's `Counters` snapshot and the
+    /// dashboard's distributions cover completed work.
+    pub(crate) fn absorb_job(
+        &self,
+        counters: &crate::mapreduce::Counters,
+        stats: &crate::mapreduce::engine::JobStats,
+    ) {
+        for (name, value) in counters.snapshot() {
+            self.counter(&name).add(value);
+        }
+        self.histogram("engine.map_task_us")
+            .merge(&stats.map_task_us_hist);
+        self.histogram("engine.reduce_task_us")
+            .merge(&stats.reduce_task_us_hist);
+    }
+
+    /// Take one sample right now (the sampler thread's tick, also
+    /// callable synchronously for deterministic tests and end-of-run
+    /// flushes).  `occupancy` is `None` when no scheduler probe is
+    /// attached; slot fields then report zero.
+    pub fn sample(&self, occupancy: Option<PoolOccupancy>) -> EngineSnapshot {
+        let occ = occupancy.unwrap_or_default();
+        let mut snap = EngineSnapshot {
+            seq: self.inner.seq.fetch_add(1, Ordering::Relaxed),
+            at_secs: self.inner.epoch.elapsed().as_secs_f64(),
+            map_slots: occ.map_slots,
+            reduce_slots: occ.reduce_slots,
+            map_running: occ.map_running,
+            reduce_running: occ.reduce_running,
+            ..EngineSnapshot::default()
+        };
+        {
+            let metrics = self.inner.metrics.lock().unwrap();
+            for (name, metric) in metrics.iter() {
+                match metric {
+                    Metric::Gauge(g) => {
+                        let v = g.get().max(0) as u64;
+                        if name == "engine.jobs_active" {
+                            snap.jobs_active = v;
+                        } else if name.ends_with(".tasks_queued") {
+                            snap.tasks_queued += v;
+                        } else if name.ends_with(".tasks_running") {
+                            snap.tasks_running += v;
+                        }
+                    }
+                    Metric::Counter(c) => {
+                        if name == "engine.dead_letters" {
+                            snap.dead_letters = c.get();
+                        } else if name.ends_with(".tasks_retried") {
+                            snap.tasks_retried += c.get();
+                        }
+                    }
+                    Metric::Histogram(_) => {}
+                }
+            }
+        }
+        {
+            let mut probes = self.inner.mailbox_probes.lock().unwrap();
+            probes.retain(|probe| match probe() {
+                Some(stats) => {
+                    snap.mailbox_runs += stats.runs;
+                    snap.staged_bytes += stats.staged_bytes;
+                    true
+                }
+                None => false,
+            });
+        }
+        for dir in self.inner.spill_dirs.lock().unwrap().iter() {
+            snap.spill_dir_bytes += dir_bytes(dir);
+        }
+        let mut ring = self.inner.ring.lock().unwrap();
+        ring.push_back(snap.clone());
+        while ring.len() > self.inner.ring_capacity {
+            ring.pop_front();
+        }
+        snap
+    }
+
+    /// Copy of the snapshot ring, oldest first.
+    pub fn snapshots(&self) -> Vec<EngineSnapshot> {
+        self.inner.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Serialize the snapshot ring as JSONL (one snapshot object per
+    /// line).
+    pub fn snapshots_jsonl(&self) -> String {
+        let mut s = String::new();
+        for snap in self.snapshots() {
+            s.push_str(&snap.to_json().to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Render a text dashboard from the snapshot ring and registry —
+    /// the live sibling of
+    /// [`render_gantt`](crate::metrics::timeline::JobTimeline::render_gantt).
+    pub fn render_dashboard(&self) -> String {
+        let snaps = self.snapshots();
+        let mut s = String::from("== engine dashboard ==\n");
+        if snaps.is_empty() {
+            s.push_str("(no samples)\n");
+        } else {
+            let first = &snaps[0];
+            let last = &snaps[snaps.len() - 1];
+            let peak_map = snaps.iter().map(|x| x.map_running).max().unwrap_or(0);
+            let peak_reduce = snaps.iter().map(|x| x.reduce_running).max().unwrap_or(0);
+            let peak_mail = snaps.iter().map(|x| x.mailbox_runs).max().unwrap_or(0);
+            let peak_staged = snaps.iter().map(|x| x.staged_bytes).max().unwrap_or(0);
+            let peak_spill = snaps.iter().map(|x| x.spill_dir_bytes).max().unwrap_or(0);
+            s.push_str(&format!(
+                "samples {} spanning {:.3}s..{:.3}s\n",
+                snaps.len(),
+                first.at_secs,
+                last.at_secs
+            ));
+            s.push_str(&format!(
+                "slots   map {}/{} in-flight (peak {}), reduce {}/{} in-flight (peak {})\n",
+                last.map_running,
+                last.map_slots,
+                peak_map,
+                last.reduce_running,
+                last.reduce_slots,
+                peak_reduce
+            ));
+            s.push_str(&format!(
+                "jobs    active {}  queued {}  running {}  retried {}  dead-letters {}\n",
+                last.jobs_active,
+                last.tasks_queued,
+                last.tasks_running,
+                last.tasks_retried,
+                last.dead_letters
+            ));
+            s.push_str(&format!(
+                "push    mailbox runs {} (peak {})  staged bytes {} (peak {})\n",
+                last.mailbox_runs, peak_mail, last.staged_bytes, peak_staged
+            ));
+            s.push_str(&format!(
+                "spill   dir bytes {} (peak {})\n",
+                last.spill_dir_bytes, peak_spill
+            ));
+        }
+        let metrics = self.inner.metrics.lock().unwrap();
+        let counters: Vec<(&String, &Counter)> = metrics
+            .iter()
+            .filter_map(|(k, m)| match m {
+                Metric::Counter(c) if c.get() > 0 => Some((k, c)),
+                _ => None,
+            })
+            .collect();
+        if !counters.is_empty() {
+            s.push_str("-- counters --\n");
+            let width = counters.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+            for (k, c) in counters {
+                s.push_str(&format!("{k:<width$}  {}\n", c.get()));
+            }
+        }
+        let mut any_hist = false;
+        for (k, m) in metrics.iter() {
+            if let Metric::Histogram(h) = m {
+                let snap = h.snapshot();
+                if snap.count() == 0 {
+                    continue;
+                }
+                if !any_hist {
+                    s.push_str("-- histograms --\n");
+                    any_hist = true;
+                }
+                s.push_str(&format!("{k}: {}\n", snap.summary()));
+            }
+        }
+        s
+    }
+}
+
+impl fmt::Debug for MetricsSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MetricsSpec")
+            .field("cadence", &self.inner.cadence)
+            .field("samples", &self.inner.ring.lock().unwrap().len())
+            .finish()
+    }
+}
+
+/// Per-job handle bundle the scheduler updates in-line.  Creating one
+/// marks the job active; dropping it marks it inactive (panic-safe).
+pub(crate) struct JobMetrics {
+    pub(crate) queued: Gauge,
+    pub(crate) running: Gauge,
+    pub(crate) retried: Counter,
+    pub(crate) dead_letters: Counter,
+    jobs_active: Gauge,
+}
+
+impl JobMetrics {
+    /// Clone the wave-facing handles for a map or reduce wave closure.
+    pub(crate) fn wave(&self) -> WaveMetrics {
+        WaveMetrics {
+            queued: self.queued.clone(),
+            running: self.running.clone(),
+            retried: self.retried.clone(),
+        }
+    }
+}
+
+impl Drop for JobMetrics {
+    fn drop(&mut self) {
+        self.jobs_active.dec();
+    }
+}
+
+/// The attempt-lifecycle handles threaded into a wave runner: queued on
+/// submit, queued→running at body start, running cleared at body exit
+/// (every outcome), retried on resubmission.  Balances to zero once the
+/// wave settles.
+#[derive(Clone)]
+pub(crate) struct WaveMetrics {
+    pub(crate) queued: Gauge,
+    pub(crate) running: Gauge,
+    pub(crate) retried: Counter,
+}
+
+impl WaveMetrics {
+    pub(crate) fn on_submit(&self) {
+        self.queued.inc();
+    }
+
+    pub(crate) fn on_start(&self) {
+        self.queued.dec();
+        self.running.inc();
+    }
+
+    pub(crate) fn on_exit(&self) {
+        self.running.dec();
+    }
+
+    pub(crate) fn on_retry(&self) {
+        self.retried.inc();
+    }
+}
+
+/// Recursive on-disk byte total under `dir`; unreadable entries count
+/// as zero (the sampler must never fail a run).
+fn dir_bytes(dir: &Path) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return 0;
+    };
+    let mut total = 0u64;
+    for entry in entries.flatten() {
+        let Ok(meta) = entry.metadata() else { continue };
+        if meta.is_dir() {
+            total += dir_bytes(&entry.path());
+        } else {
+            total += meta.len();
+        }
+    }
+    total
+}
+
+/// The background sampling thread: ticks [`MetricsSpec::sample`] on the
+/// spec's cadence with live pool occupancy from the scheduler probe.
+/// The probe returns `None` once the scheduler is gone (it holds a
+/// `Weak` reference), which ends the thread; dropping the sampler also
+/// stops it promptly and joins.
+pub struct HealthSampler {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HealthSampler {
+    pub(crate) fn spawn(
+        spec: MetricsSpec,
+        probe: Box<dyn Fn() -> Option<PoolOccupancy> + Send + Sync>,
+    ) -> Self {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = Arc::clone(&stop);
+        let cadence = spec.cadence();
+        let handle = std::thread::Builder::new()
+            .name("snmr-health-sampler".into())
+            .spawn(move || {
+                let (lock, cv) = &*stop2;
+                loop {
+                    {
+                        let mut stopped = lock.lock().unwrap();
+                        while !*stopped {
+                            let (guard, timeout) =
+                                cv.wait_timeout(stopped, cadence).unwrap();
+                            stopped = guard;
+                            if timeout.timed_out() {
+                                break;
+                            }
+                        }
+                        if *stopped {
+                            return;
+                        }
+                    }
+                    match probe() {
+                        Some(occ) => {
+                            spec.sample(Some(occ));
+                        }
+                        // Scheduler dropped out from under us: stop
+                        // sampling, the spec's ring stays readable.
+                        None => return,
+                    }
+                }
+            })
+            .expect("spawn health sampler");
+        Self {
+            stop,
+            handle: Some(handle),
+        }
+    }
+}
+
+impl Drop for HealthSampler {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.stop;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl fmt::Debug for HealthSampler {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "HealthSampler(running={})", self.handle.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_counter_histogram_round_trip() {
+        let spec = MetricsSpec::new();
+        let g = spec.gauge("g");
+        g.add(3);
+        g.dec();
+        assert_eq!(g.get(), 2);
+        assert_eq!(spec.gauge("g").get(), 2, "same name shares the cell");
+        let c = spec.counter("c");
+        c.add(5);
+        c.inc();
+        assert_eq!(spec.counter("c").get(), 6);
+        let h = spec.histogram("h");
+        h.record(100);
+        h.record(200);
+        assert_eq!(spec.histogram("h").snapshot().count(), 2);
+        assert_eq!(h.window().count(), 2);
+        assert_eq!(h.snapshot().count(), 0, "window drains");
+    }
+
+    #[test]
+    #[should_panic(expected = "not a counter")]
+    fn type_mismatch_panics() {
+        let spec = MetricsSpec::new();
+        spec.gauge("x");
+        spec.counter("x");
+    }
+
+    #[test]
+    fn sample_aggregates_registry_and_ring_is_bounded() {
+        let spec = MetricsSpec::new().with_ring_capacity(4);
+        let jm = spec.job_metrics("j");
+        jm.queued.add(3);
+        jm.retried.add(2);
+        jm.dead_letters.inc();
+        let snap = spec.sample(Some(PoolOccupancy {
+            map_slots: 4,
+            reduce_slots: 2,
+            map_running: 3,
+            reduce_running: 1,
+        }));
+        assert_eq!(snap.map_slots, 4);
+        assert_eq!(snap.map_running, 3);
+        assert_eq!(snap.jobs_active, 1);
+        assert_eq!(snap.tasks_queued, 3);
+        assert_eq!(snap.tasks_running, 0);
+        assert_eq!(snap.tasks_retried, 2);
+        assert_eq!(snap.dead_letters, 1);
+        drop(jm);
+        for _ in 0..10 {
+            spec.sample(None);
+        }
+        let snaps = spec.snapshots();
+        assert_eq!(snaps.len(), 4, "ring evicts oldest");
+        assert_eq!(snaps.last().unwrap().jobs_active, 0, "drop quiesces");
+        for pair in snaps.windows(2) {
+            assert!(pair[1].seq > pair[0].seq);
+            assert!(pair[1].at_secs >= pair[0].at_secs);
+        }
+    }
+
+    #[test]
+    fn wave_metrics_balance_to_zero() {
+        let spec = MetricsSpec::new();
+        let jm = spec.job_metrics("j");
+        let wm = jm.wave();
+        for _ in 0..8 {
+            wm.on_submit();
+        }
+        for _ in 0..8 {
+            wm.on_start();
+            wm.on_exit();
+        }
+        wm.on_retry();
+        assert_eq!(jm.queued.get(), 0);
+        assert_eq!(jm.running.get(), 0);
+        assert_eq!(jm.retried.get(), 1);
+    }
+
+    #[test]
+    fn jsonl_lines_carry_schema_fields() {
+        let spec = MetricsSpec::new();
+        spec.sample(None);
+        let jsonl = spec.snapshots_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let v = crate::util::json::parse(lines[0]).unwrap();
+        for field in [
+            "seq",
+            "at_secs",
+            "map_slots",
+            "reduce_slots",
+            "map_running",
+            "reduce_running",
+            "jobs_active",
+            "tasks_queued",
+            "tasks_running",
+            "tasks_retried",
+            "mailbox_runs",
+            "staged_bytes",
+            "spill_dir_bytes",
+            "dead_letters",
+        ] {
+            assert!(v.get(field).is_some(), "snapshot JSONL missing {field}");
+        }
+    }
+
+    #[test]
+    fn mailbox_probe_prunes_when_gone() {
+        let spec = MetricsSpec::new();
+        let alive = Arc::new(AtomicU64::new(1));
+        let alive2 = Arc::clone(&alive);
+        spec.register_mailbox_probe(Box::new(move || {
+            if alive2.load(Ordering::Relaxed) == 1 {
+                Some(MailboxStats {
+                    runs: 7,
+                    staged_bytes: 128,
+                })
+            } else {
+                None
+            }
+        }));
+        let snap = spec.sample(None);
+        assert_eq!(snap.mailbox_runs, 7);
+        assert_eq!(snap.staged_bytes, 128);
+        alive.store(0, Ordering::Relaxed);
+        let snap = spec.sample(None);
+        assert_eq!(snap.mailbox_runs, 0);
+        assert_eq!(
+            spec.inner.mailbox_probes.lock().unwrap().len(),
+            0,
+            "dead probe pruned"
+        );
+    }
+
+    #[test]
+    fn sampler_thread_ticks_and_stops() {
+        let spec = MetricsSpec::new().with_cadence(Duration::from_millis(1));
+        let sampler = HealthSampler::spawn(
+            spec.clone(),
+            Box::new(|| Some(PoolOccupancy::default())),
+        );
+        let t0 = Instant::now();
+        while spec.snapshots().len() < 3 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(spec.snapshots().len() >= 3, "sampler must tick");
+        drop(sampler);
+        let n = spec.snapshots().len();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(spec.snapshots().len(), n, "drop stops the thread");
+    }
+
+    #[test]
+    fn dashboard_renders_counters_and_histograms() {
+        let spec = MetricsSpec::new();
+        spec.counter("engine.map.output_records").add(42);
+        spec.histogram("engine.map_task_us").record(1000);
+        spec.sample(None);
+        let dash = spec.render_dashboard();
+        assert!(dash.contains("== engine dashboard =="));
+        assert!(dash.contains("engine.map.output_records"));
+        assert!(dash.contains("engine.map_task_us"));
+    }
+}

@@ -14,7 +14,9 @@
 //!
 //! Two artifacts come out: [`JobTimeline::render_gantt`] (a per-slot text
 //! Gantt for terminals) and [`JobTimeline::to_json`] (the machine-readable
-//! timeline consumed by CI's `trace-smoke` validator).
+//! timeline consumed by CI's `trace-smoke` validator).  The Gantt is
+//! post-hoc; its live sibling is the health sampler's dashboard,
+//! [`MetricsSpec::render_dashboard`](crate::metrics::registry::MetricsSpec::render_dashboard).
 
 use std::collections::BTreeMap;
 

@@ -15,7 +15,10 @@ perf trajectory without the noise.
 
 Boolean invariants (`identical_output`) are checked on the current run
 alone: they encode correctness claims the benches assert in-process, and
-a `false` here means an assertion was bypassed.
+a `false` here means an assertion was bypassed.  Within-run relative
+gates compare two metrics of the *same* run (e.g. the trace-calibrated
+simulator spec's mean drift must not exceed the default spec's) — no
+baseline or tolerance involved.
 
 Usage:
     scripts/bench_check.py                 # gate current vs baseline
@@ -68,9 +71,6 @@ GATES = {
 INVARIANTS = {
     "BENCH_engine.json": [
         "push_overlap.identical_output",
-        # the sim-vs-measured drift report must be present and fully
-        # assembled (mode picked, all three waves emitted)
-        "sim_drift.complete",
     ],
     "BENCH_skew.json": [
         "multipass_measured[mode=scheduler].identical_output",
@@ -79,6 +79,18 @@ INVARIANTS = {
     "BENCH_balance.json": [
         "rows[strategy=blocksplit].identical_output",
         "rows[strategy=pairrange].identical_output",
+    ],
+}
+
+# Within-run relative gates: `lhs <= rhs` on the *current* summary alone.
+# Machine-independent by construction (both sides come from the same
+# run), so no tolerance band is needed.
+WITHIN_RUN = {
+    "BENCH_engine.json": [
+        # the trace-calibrated simulator spec must not lose to the
+        # default spec on mean |per-wave drift| (also asserted strictly
+        # in-bench; this gate catches a silently dropped assertion)
+        ("sim_drift.calibrated.mean_abs_delta_s", "sim_drift.default.mean_abs_delta_s"),
     ],
 }
 
@@ -124,6 +136,16 @@ def check_file(name, current, baseline):
             failures.append(f"{name}: invariant {path} missing from current run")
         elif val is not True:
             failures.append(f"{name}: invariant {path} is {val!r}, expected true")
+    for lhs, rhs in WITHIN_RUN.get(name, []):
+        a, b = lookup(current, lhs), lookup(current, rhs)
+        if a is None or b is None:
+            failures.append(f"{name}: within-run gate {lhs} <= {rhs}: metric missing")
+        elif float(a) > float(b):
+            failures.append(
+                f"{name}: {lhs} = {float(a):.4g} exceeds {rhs} = {float(b):.4g}"
+            )
+        else:
+            print(f"{'ok':>10}  {name}: {lhs} = {float(a):.4g} <= {rhs} = {float(b):.4g}")
     if baseline is None:
         failures.append(f"{name}: no baseline ({BASELINE_DIR}/{name} missing)")
         return failures
@@ -231,6 +253,19 @@ SELFTEST_SAMPLES = {
             "measured_total_s": 0.05,
             "simulated_total_s": 0.07,
             "max_drift_frac": 0.4,
+            "default": {
+                "mean_abs_delta_s": 0.02,
+                "max_drift_frac": 0.4,
+                "simulated_total_s": 0.07,
+            },
+            "calibrated": {
+                "mean_abs_delta_s": 0.001,
+                "max_drift_frac": 0.05,
+                "simulated_total_s": 0.051,
+                "map_secs_scale": 1.2,
+                "reduce_secs_scale": 1.15,
+                "shuffle_cpu_scale": 0.01,
+            },
             "waves": [
                 {
                     "wave": "map",
@@ -305,6 +340,16 @@ def selftest():
             lookup(broken, parent_path)[leaf] = False
             if not check_file(name, broken, copy.deepcopy(sample)):
                 print(f"SELFTEST FAIL: {name} missed broken invariant {path}")
+                bad += 1
+        # a violated within-run ordering must be flagged
+        for lhs, rhs in WITHIN_RUN.get(name, []):
+            broken = copy.deepcopy(sample)
+            parent_path, _, leaf = lhs.rpartition(".")
+            rhs_val = float(lookup(broken, rhs))
+            lookup(broken, parent_path)[leaf] = rhs_val * 2.0 + 1.0
+            failures = check_file(name, broken, copy.deepcopy(sample))
+            if not any(lhs in f for f in failures):
+                print(f"SELFTEST FAIL: {name} missed within-run violation {lhs} > {rhs}")
                 bad += 1
         # bootstrap baselines pass vacuously
         if check_file(name, copy.deepcopy(sample), {"bootstrap": True}):

@@ -1,29 +1,37 @@
 #!/usr/bin/env python3
-"""Validate task-event trace artifacts (JSONL + timeline) for CI.
+"""Validate task-event trace and engine-snapshot artifacts for CI.
 
 `skew_study --trace <dir>` writes, per ladder row:
 
   <row>.trace.jsonl    one JSON object per trace record
   <row>.timeline.json  {"row": ..., "jobs": [<JobTimeline::to_json()>, ...]}
 
-This script checks both against the schema documented in
-`rust/src/mapreduce/trace.rs` (the `kind_strings_are_stable` unit test
-pins the same event-kind list — renaming a kind is a schema change for
-both sides):
+and `skew_study --metrics <dir>` writes, per ladder row:
 
-  * every JSONL line parses and carries the seven core fields with the
+  <row>.snapshots.jsonl  one JSON object per `EngineSnapshot`
+
+This script checks all three against the schemas documented in
+`rust/src/mapreduce/trace.rs` and `rust/src/metrics/registry.rs` (the
+`kind_strings_are_stable` / snapshot-schema unit tests pin the same
+lists — renaming a field is a schema change for both sides):
+
+  * every trace line parses and carries the seven core fields with the
     right types; payload fields match the event kind exactly;
   * `seq` is strictly increasing (the drain is sequence-ordered);
   * per job: exactly one `job_started` at 0.0 seconds, exactly one
     `job_finished`, and at most one of each wave stamp;
   * the timeline artifact parses, every job has spans, and the spans
     cover every lane in `0..lanes` — a Gantt with an empty slot row
-    means the lane assignment dropped work.
+    means the lane assignment dropped work;
+  * every snapshot line carries exactly the pinned field set with
+    non-negative values, `seq` strictly increasing and `at_secs`
+    monotonic, and occupancy never exceeding the slot counts.
 
 Usage:
-  validate_trace.py <dir-or-file> [...]   validate *.trace.jsonl (and the
+  validate_trace.py <dir-or-file> [...]   validate *.trace.jsonl (plus the
                                           sibling *.timeline.json when
-                                          present) under each argument
+                                          present) and *.snapshots.jsonl
+                                          under each argument
   validate_trace.py --selftest            run against synthetic good/bad
                                           samples, no artifacts needed
 """
@@ -78,6 +86,25 @@ PAYLOAD = {
 JOB_LEVEL = {"job_started", "job_finished", "map_wave_done", "reduce_first_start"}
 
 PHASES = {"map", "reduce", "job"}
+
+# Pinned copy of the EngineSnapshot JSONL schema (registry.rs module docs
+# and `jsonl_lines_carry_schema_fields`).  Exactly these fields, no more.
+SNAPSHOT_FIELDS = {
+    "seq",
+    "at_secs",
+    "map_slots",
+    "reduce_slots",
+    "map_running",
+    "reduce_running",
+    "jobs_active",
+    "tasks_queued",
+    "tasks_running",
+    "tasks_retried",
+    "mailbox_runs",
+    "staged_bytes",
+    "spill_dir_bytes",
+    "dead_letters",
+}
 
 
 def check_record(rec, lineno, errors):
@@ -188,6 +215,68 @@ def validate_timeline(doc, errors):
             errors.append(f"timeline {job!r}: lanes {sorted(empty)} hold no spans")
 
 
+def validate_snapshots(text, errors):
+    """Schema + stream invariants over one snapshots file's contents."""
+    last_seq = -1
+    last_at = -1.0
+    n = 0
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        if not line.strip():
+            continue
+        try:
+            snap = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"line {lineno}: invalid JSON ({e})")
+            continue
+        if not isinstance(snap, dict):
+            errors.append(f"line {lineno}: not a JSON object")
+            continue
+        if snap.keys() != SNAPSHOT_FIELDS:
+            missing = SNAPSHOT_FIELDS - snap.keys()
+            extra = snap.keys() - SNAPSHOT_FIELDS
+            errors.append(
+                f"line {lineno}: snapshot fields are off "
+                f"(missing {sorted(missing)}, extra {sorted(extra)})"
+            )
+            continue
+        bad = False
+        for field in sorted(SNAPSHOT_FIELDS):
+            v = snap[field]
+            if not isinstance(v, (int, float)) or v < 0:
+                errors.append(f"line {lineno}: {field} must be a non-negative number")
+                bad = True
+            elif field != "at_secs" and float(v) != int(v):
+                errors.append(f"line {lineno}: {field} must be an integer")
+                bad = True
+        if bad:
+            continue
+        n += 1
+        seq = int(snap["seq"])
+        if seq <= last_seq:
+            errors.append(f"line {lineno}: seq {seq} not strictly increasing")
+        last_seq = seq
+        if snap["at_secs"] < last_at:
+            errors.append(f"line {lineno}: at_secs {snap['at_secs']} went backwards")
+        last_at = snap["at_secs"]
+        # queued tasks may exceed the slot counts (that is the queue);
+        # *running* occupancy cannot
+        slots = int(snap["map_slots"]) + int(snap["reduce_slots"])
+        if int(snap["tasks_running"]) > slots:
+            errors.append(
+                f"line {lineno}: tasks_running {snap['tasks_running']} "
+                f"exceeds {slots} total slots"
+            )
+        for kind in ("map", "reduce"):
+            if int(snap[f"{kind}_running"]) > int(snap[f"{kind}_slots"]):
+                errors.append(
+                    f"line {lineno}: {kind}_running {snap[f'{kind}_running']} "
+                    f"exceeds {kind}_slots {snap[f'{kind}_slots']}"
+                )
+    if n == 0:
+        errors.append("snapshots file holds no records")
+    return n
+
+
 def validate_pair(trace_path, errors):
     with open(trace_path, encoding="utf-8") as f:
         n = validate_jsonl(f.read(), errors)
@@ -208,7 +297,7 @@ def gather(paths):
             files.extend(
                 os.path.join(p, name)
                 for name in sorted(os.listdir(p))
-                if name.endswith(".trace.jsonl")
+                if name.endswith((".trace.jsonl", ".snapshots.jsonl"))
             )
         else:
             files.append(p)
@@ -239,6 +328,32 @@ GOOD_TIMELINE = {
         }
     ]
 }
+
+
+def _snapshot_line(seq, at_secs, running):
+    return json.dumps(
+        {
+            "seq": seq,
+            "at_secs": at_secs,
+            "map_slots": 4,
+            "reduce_slots": 4,
+            "map_running": running,
+            "reduce_running": 0,
+            "jobs_active": 1 if running else 0,
+            "tasks_queued": 3,
+            "tasks_running": running,
+            "tasks_retried": 0,
+            "mailbox_runs": 2,
+            "staged_bytes": 4096,
+            "spill_dir_bytes": 0,
+            "dead_letters": 0,
+        }
+    )
+
+
+GOOD_SNAPSHOTS = "\n".join(
+    [_snapshot_line(0, 0.001, 2), _snapshot_line(1, 0.003, 4), _snapshot_line(2, 0.005, 0)]
+)
 
 
 def selftest():
@@ -279,7 +394,32 @@ def selftest():
     if not errs:
         print("selftest: empty-lane timeline passed validation", file=sys.stderr)
         return 1
-    print("selftest: good samples validate, broken schema/lanes are rejected")
+    errs = []
+    validate_snapshots(GOOD_SNAPSHOTS, errs)
+    if errs:
+        print("selftest: good snapshots rejected:", file=sys.stderr)
+        for e in errs:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    bad_snapshot_cases = [
+        # occupancy above the slot count
+        GOOD_SNAPSHOTS.replace('"map_running": 4', '"map_running": 5'),
+        # seq going backwards
+        GOOD_SNAPSHOTS.replace('"seq": 2', '"seq": 1'),
+        # time going backwards
+        GOOD_SNAPSHOTS.replace('"at_secs": 0.005', '"at_secs": 0.002'),
+        # missing field
+        GOOD_SNAPSHOTS.replace('"mailbox_runs": 2, ', ""),
+        # negative gauge
+        GOOD_SNAPSHOTS.replace('"tasks_queued": 3', '"tasks_queued": -1'),
+    ]
+    for i, text in enumerate(bad_snapshot_cases):
+        errs = []
+        validate_snapshots(text, errs)
+        if not errs:
+            print(f"selftest: bad snapshot sample {i} passed validation", file=sys.stderr)
+            return 1
+    print("selftest: good samples validate, broken schema/lanes/snapshots are rejected")
     return 0
 
 
@@ -296,14 +436,20 @@ def main(argv):
     failed = False
     for path in files:
         errors = []
-        n = validate_pair(path, errors)
+        if path.endswith(".snapshots.jsonl"):
+            with open(path, encoding="utf-8") as f:
+                n = validate_snapshots(f.read(), errors)
+            what = "schema + occupancy bounds hold"
+        else:
+            n = validate_pair(path, errors)
+            what = "schema + lane coverage hold"
         if errors:
             failed = True
             print(f"FAIL {path}")
             for e in errors:
                 print(f"  {e}")
         else:
-            print(f"  ok {path}: {n} records, schema + lane coverage hold")
+            print(f"  ok {path}: {n} records, {what}")
     return 1 if failed else 0
 
 
