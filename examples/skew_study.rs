@@ -46,6 +46,17 @@
 //! completion (`overlap_secs > 0`) on every ladder row — the push smoke
 //! test CI runs.
 //!
+//! With `--executors N`, every ladder configuration is re-run on the
+//! **message-passing control plane** (`DistScheduler`): a scheduler
+//! event loop drives N channel-transport executors and reduce tasks
+//! fetch map runs by `(executor, run id)` location from the shuffle
+//! registry.  The flag composes with `--push` (location-addressed push
+//! shuffle) and `--faults` (seeded task panics + retry budget); one
+//! mid-ladder row additionally **kills an executor** after its first
+//! completed map task and must finish via loss resubmission.  Pair
+//! digests are asserted identical to the serial runs and no task may
+//! exhaust its retry budget — the dist smoke test CI runs.
+//!
 //! With `--trace DIR`, every ladder row records the full task-event
 //! stream (`mapreduce::trace`): per row, the raw events land in
 //! `DIR/<row>.trace.jsonl`, the reconstructed per-slot timeline in
@@ -80,7 +91,9 @@ use snmr::data::corpus::{generate, CorpusConfig};
 use snmr::data::skew::{skew_to_last_partition, zipf_skew_block_keys};
 use snmr::er::blockkey::{BlockingKey, TitlePrefixKey};
 use snmr::mapreduce::counters::names;
-use snmr::mapreduce::scheduler::{Exec, JobScheduler, PushMode, SchedulerConfig};
+use snmr::mapreduce::scheduler::{
+    DistConfig, DistScheduler, Exec, JobScheduler, KillPlan, PushMode, SchedulerConfig,
+};
 use snmr::mapreduce::sim::{
     drift_report, simulate_job, simulate_job_chain, simulate_job_overlap, ClusterSpec,
 };
@@ -131,6 +144,11 @@ fn main() -> anyhow::Result<()> {
                 "re-run the ladder under injected task panics with retries enabled",
             ),
             flag(
+                "executors",
+                "re-run the ladder on the message-passing control plane with this many \
+                 executors (composes with --push/--faults; one row kills an executor)",
+            ),
+            flag(
                 "balance",
                 "also run the load-balancing study with this strategy (blocksplit|pairrange)",
             ),
@@ -157,6 +175,10 @@ fn main() -> anyhow::Result<()> {
     let speculative = args.get_bool("speculative");
     let push = args.get_bool("push");
     let faults = args.get_bool("faults");
+    let executors = match args.get("executors") {
+        None => None,
+        Some(_) => Some(args.get_usize("executors", 4).map_err(anyhow::Error::msg)?.max(2)),
+    };
     let sort_buffer = match args.get("sort-buffer") {
         None => None,
         Some(_) => Some(args.get_usize("sort-buffer", 64).map_err(anyhow::Error::msg)?),
@@ -567,6 +589,99 @@ fn main() -> anyhow::Result<()> {
         println!(
             "all ladder runs recovered {total_retries} injected panic(s) via retry;\n\
              outputs identical to the clean serial digests."
+        );
+    }
+
+    if let Some(n_exec) = executors {
+        // Distributed re-run: every ladder configuration on the
+        // message-passing control plane — a scheduler event loop driving
+        // n_exec channel-transport executors, reduce tasks fetching map
+        // runs by location from the shuffle registry.  Composes with
+        // --push (location-addressed push shuffle) and --faults (seeded
+        // panics + retry).  One mid-ladder row kills executor 1 after its
+        // first completed map task; the job must finish via loss
+        // resubmission with the same digest — the dist smoke test CI runs.
+        println!(
+            "\n--- distributed re-run: {n_exec}-executor control plane \
+             (push={push}, faults={faults}) ---"
+        );
+        let kill_row = configs.len() / 2;
+        let mut t8 = Table::new(
+            &format!("Dist ladder ({n_exec} executors, location-addressed shuffle)"),
+            &[
+                "p",
+                "identical",
+                "executors_lost",
+                "task_retries",
+                "remote_fetches",
+                "tasks_failed",
+            ],
+        );
+        let mut total_retries = 0u64;
+        let mut total_lost = 0u64;
+        let mut total_failed = 0u64;
+        // retries on rows without a kill can only come from injected panics
+        let mut fault_retries = 0u64;
+        for (i, ((name, p, entities), digest)) in configs.iter().zip(&digests).enumerate() {
+            let mut cfg = sn_cfg(p);
+            cfg.push = push;
+            if faults {
+                cfg.faults = Some(FaultPlan::seeded(
+                    i as u64,
+                    cfg.num_map_tasks,
+                    p.num_partitions(),
+                ));
+                cfg.max_task_retries = Some(2);
+            }
+            let mut dist_cfg = DistConfig::executors(n_exec).with_retries(2);
+            if push {
+                dist_cfg = dist_cfg.with_push(PushMode::Push);
+            }
+            if i == kill_row {
+                // enough map tasks that the doomed executor completes one
+                // (and registers runs that will be lost) before dying
+                cfg.num_map_tasks = cfg.num_map_tasks.max(2 * n_exec);
+                dist_cfg = dist_cfg.with_kill(KillPlan {
+                    executor: 1,
+                    after_map_tasks: 1,
+                });
+            }
+            let dist = DistScheduler::new(dist_cfg);
+            let res = repsn::run_on(entities, &cfg, Exec::Dist(&dist))?;
+            let identical = pair_digest(&res) == *digest;
+            assert!(identical, "{name}: distributed output diverged from serial");
+            let lost = res.counters.get(names::EXECUTORS_LOST);
+            let retries = res.counters.get(names::TASK_RETRIES);
+            let failed = res.counters.get(names::TASKS_FAILED);
+            assert_eq!(failed, 0, "{name}: a task exhausted its retry budget");
+            if i == kill_row {
+                assert!(lost >= 1, "{name}: the kill plan never fired");
+                assert!(retries >= 1, "{name}: loss recovery resubmitted nothing");
+            }
+            total_retries += retries;
+            total_lost += lost;
+            total_failed += failed;
+            if i != kill_row {
+                fault_retries += retries;
+            }
+            t8.row(vec![
+                name.clone(),
+                identical.to_string(),
+                lost.to_string(),
+                retries.to_string(),
+                res.counters.get(names::DIST_REMOTE_FETCHES).to_string(),
+                failed.to_string(),
+            ]);
+        }
+        if faults {
+            assert!(fault_retries > 0, "no injected fault actually fired");
+        }
+        println!("{}", t8.render());
+        println!(
+            "dist ladder complete: outputs identical to the serial digests, \
+             no runs lost.\n\
+             dist ladder: EXECUTORS_LOST={total_lost} TASK_RETRIES={total_retries} \
+             TASKS_FAILED={total_failed}"
         );
     }
 

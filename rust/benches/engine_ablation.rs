@@ -11,7 +11,9 @@ use std::time::Instant;
 
 use snmr::data::corpus::{generate, CorpusConfig};
 use snmr::mapreduce::counters::names;
-use snmr::mapreduce::scheduler::{JobScheduler, PushMode, SchedulerConfig};
+use snmr::mapreduce::scheduler::{
+    DistConfig, DistScheduler, JobScheduler, PushMode, SchedulerConfig,
+};
 use snmr::mapreduce::seqfile;
 use snmr::mapreduce::shuffle::{merge_sorted_runs, MergeIter};
 use snmr::mapreduce::sim::{
@@ -398,11 +400,11 @@ fn main() -> anyhow::Result<()> {
     // simulator trajectory: workers=1 profile, two-wave vs overlap mode
     let serial1 = run_job(
         &push_cfg.clone().with_workers(1),
-        push_input,
-        push_mapper,
+        push_input.clone(),
+        push_mapper.clone(),
         Arc::new(HashPartitioner::new(hash)),
-        push_grouping,
-        push_reducer,
+        push_grouping.clone(),
+        push_reducer.clone(),
     );
     let profile = JobProfile::from_stats(
         &serial1.stats,
@@ -479,6 +481,69 @@ fn main() -> anyhow::Result<()> {
         ),
     );
 
+    // --- distributed scale-out ---------------------------------------------
+    // Real: the titles job on the message-passing control plane at 1, 2
+    // and 4 executors — every run must reproduce the in-process barrier
+    // output (the location-addressed shuffle loses nothing).  Simulated:
+    // the same workers=1 profile with the shuffle bottleneck moved from
+    // one executor link to four (the dist scheduler's round-robin reduce
+    // placement); the 4-link/1-link makespan ratio is the gated
+    // scale-out trajectory metric.
+    let mut dist_sweep = Vec::new();
+    let mut dist_identical = true;
+    for n_exec in [1usize, 2, 4] {
+        let dist = DistScheduler::new(DistConfig::executors(n_exec));
+        let t0 = Instant::now();
+        let res = dist.run(
+            &push_cfg,
+            push_input.clone(),
+            push_mapper.clone(),
+            Arc::new(HashPartitioner::new(hash)),
+            push_grouping.clone(),
+            push_reducer.clone(),
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        let identical = res.outputs == barrier_run.outputs;
+        assert!(identical, "dist({n_exec}) output diverged from the barrier run");
+        dist_identical &= identical;
+        dist_sweep.push(Json::obj(vec![
+            ("executors", Json::num(n_exec as f64)),
+            ("wall_s", Json::num(wall)),
+            (
+                "remote_fetches",
+                Json::num(res.counters.get(names::DIST_REMOTE_FETCHES) as f64),
+            ),
+            (
+                "local_fetches",
+                Json::num(res.counters.get(names::DIST_LOCAL_FETCHES) as f64),
+            ),
+        ]));
+    }
+    let links1_sim = simulate_job(&profile, &ClusterSpec::paper_like(8).with_executor_links(1))
+        .total();
+    let links4_sim = simulate_job(&profile, &ClusterSpec::paper_like(8).with_executor_links(4))
+        .total();
+    let dist_ratio = links4_sim / links1_sim.max(1e-12);
+    assert!(
+        dist_ratio <= 1.0 + 1e-9,
+        "4 executor links must not lengthen the simulated makespan: \
+         {links4_sim:.3}s vs {links1_sim:.3}s"
+    );
+    push(
+        &mut table,
+        &mut rows,
+        "dist-scaleout",
+        "sim8 makespan 1 link / 4 links",
+        format!("{links1_sim:.2}s / {links4_sim:.2}s ({dist_ratio:.3})"),
+    );
+    push(
+        &mut table,
+        &mut rows,
+        "dist-scaleout",
+        "real runs identical (1/2/4 executors)",
+        dist_identical.to_string(),
+    );
+
     println!("{}", table.render());
     let path = write_report("engine_ablation", &Json::Arr(rows))?;
     eprintln!("report written to {}", path.display());
@@ -524,6 +589,18 @@ fn main() -> anyhow::Result<()> {
                 ("measured_barrier_wall_s", Json::num(barrier_wall)),
                 ("measured_push_wall_s", Json::num(push_wall)),
                 ("identical_output", Json::Bool(true)),
+            ]),
+        ),
+        (
+            "dist_scaleout",
+            Json::obj(vec![
+                ("links1_sim_s", Json::num(links1_sim)),
+                ("links4_sim_s", Json::num(links4_sim)),
+                // gated: 4-link over 1-link simulated makespan, lower is better
+                ("makespan_ratio", Json::num(dist_ratio)),
+                // invariant: every real dist run reproduced the barrier bytes
+                ("identical_output", Json::Bool(dist_identical)),
+                ("executors", Json::Arr(dist_sweep)),
             ]),
         ),
         (

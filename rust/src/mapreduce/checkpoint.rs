@@ -35,6 +35,18 @@
 //! resumed job's timeline shows which tasks were replayed from disk
 //! rather than executed.
 //!
+//! ## Distributed path: restore-only
+//!
+//! The [`DistScheduler`](super::scheduler::DistScheduler) consumes
+//! manifests but never writes them: an executor launching a map task
+//! first asks the manifest for that task's committed runs
+//! ([`Manifest::restore_map`]) and, on a hit, registers the restored
+//! runs with the shuffle registry without re-executing the task
+//! (`TASKS_RESUMED`, `CheckpointRestore` trace).  Writing new
+//! checkpoints from executors would need a distributed commit protocol
+//! the message plane does not have yet; until it does, produce
+//! manifests on the in-process scheduler and *resume* them anywhere.
+//!
 //! [`TraceEvent::CheckpointCommit`]: crate::mapreduce::trace::TraceEvent::CheckpointCommit
 //! [`TraceEvent::CheckpointRestore`]: crate::mapreduce::trace::TraceEvent::CheckpointRestore
 

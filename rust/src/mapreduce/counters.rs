@@ -95,6 +95,18 @@ pub mod names {
     /// (only present on resumed jobs — see
     /// [`JobConfig::checkpoint`](crate::mapreduce::JobConfig::checkpoint)).
     pub const TASKS_RESUMED: &str = "engine.tasks_resumed";
+    /// Distributed shuffle: reduce-side source fetches satisfied from the
+    /// executor's own run store (no transport round-trip).
+    pub const DIST_LOCAL_FETCHES: &str = "engine.dist_local_fetches";
+    /// Distributed shuffle: reduce-side source fetches served by a peer
+    /// executor over the data plane.
+    pub const DIST_REMOTE_FETCHES: &str = "engine.dist_remote_fetches";
+    /// Distributed shuffle: fetch attempts re-sent after a timed-out or
+    /// torn reply link (see `TransportFaults::drop_data_sends`).
+    pub const DIST_FETCH_RETRIES: &str = "engine.dist_fetch_retries";
+    /// Executors the distributed scheduler declared dead (failed control
+    /// send or terminal fetch failure) and drained via resubmission.
+    pub const EXECUTORS_LOST: &str = "engine.executors_lost";
 }
 
 /// FNV-1a — the crate's standard cheap string hash; picks the shard.

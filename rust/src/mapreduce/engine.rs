@@ -251,6 +251,17 @@ impl<KT, VT> MapTaskOutput<KT, VT> {
             combine_out: 0,
         }
     }
+
+    /// Strip the runs out, leaving structurally empty buckets; every
+    /// accounting field (byte sums, timings, combine counts) stays
+    /// intact.  The distributed path parks the runs in the executor's
+    /// run store and ships only the accounting over the control plane —
+    /// downstream [`transpose_runs`]/`record_map_phase` see the same
+    /// byte sums either way.
+    pub(crate) fn take_runs(&mut self) -> Vec<Vec<Run<(KT, VT)>>> {
+        let r = self.bucket_runs.len();
+        std::mem::replace(&mut self.bucket_runs, (0..r).map(|_| Vec::new()).collect())
+    }
 }
 
 /// Routes each sealed map-side run through combine → accounting → spill

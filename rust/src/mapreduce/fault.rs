@@ -213,6 +213,38 @@ impl FaultInjector {
             }
         }
     }
+
+    /// Like [`fire_traced`](Self::fire_traced), but for an attempt number
+    /// assigned by an external scheduler instead of this injector's own
+    /// counter.  Distributed executors each hold their own injector, so a
+    /// retried attempt may run on a different process-local counter — the
+    /// scheduler-assigned ordinal is the only consistent one.
+    pub(crate) fn fire_attempt(
+        &self,
+        phase: TaskPhase,
+        task: usize,
+        attempt: u32,
+        trace: Option<&crate::mapreduce::trace::TaskTraceCtx>,
+    ) {
+        for spec in &self.plan.specs {
+            if spec.phase == phase && spec.task == task && spec.attempt == attempt {
+                if let Some(t) = trace {
+                    t.emit(crate::mapreduce::trace::TraceEvent::FaultInjected {
+                        kind: match spec.kind {
+                            FaultKind::Panic => "panic",
+                            FaultKind::Stall(_) => "stall",
+                        },
+                    });
+                }
+                match spec.kind {
+                    FaultKind::Panic => {
+                        panic!("injected fault: {phase} task {task} attempt {attempt}")
+                    }
+                    FaultKind::Stall(dur) => std::thread::sleep(dur),
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]

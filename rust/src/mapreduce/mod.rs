@@ -111,6 +111,37 @@
 //! preserved behaviorally by [`shuffle::merge_sorted_runs`] and checked
 //! byte-identical by `tests/prop_shuffle.rs`.
 //!
+//! ## Architecture: control plane and data plane
+//!
+//! The engine is layered so that "distributed" is a property of the
+//! wiring, not of the algorithms:
+//!
+//! 1. **Scheduler** ([`scheduler::DistScheduler`] and the in-process
+//!    [`JobScheduler`]) — owns the job and task **state machines**:
+//!    which attempt of which task is where, retry budgets, speculation
+//!    arbitration, loss detection, wave stamps.  The distributed
+//!    scheduler is a single event loop that never touches user data; it
+//!    only sends and receives typed control messages.
+//! 2. **Executors** ([`scheduler::transport`]-connected workers) — own
+//!    the **data**: they run `exec_map_task` / `exec_reduce_task` (the
+//!    same functions every in-process path calls), hold sealed runs in
+//!    a local run store, and serve them to peers.
+//! 3. **Transport** ([`scheduler::Transport`], channel-backed today,
+//!    socket-shaped by design) — typed control and data links with
+//!    explicit failure ([`scheduler::LinkClosed`]) and injectable frame
+//!    drops ([`scheduler::TransportFaults`]), so every recovery path is
+//!    testable without a network.
+//! 4. **Shuffle registry** — map outputs are **location-addressed**:
+//!    a completed map registers `(executor, run ids)` per partition
+//!    with the scheduler, and reduce tasks *fetch* the runs from the
+//!    owning executor over the transport (retrying from the registry on
+//!    dropped frames).  Nothing data-sized ever transits the scheduler.
+//!
+//! The in-process paths ([`run_job`], [`JobScheduler`]) are the
+//! **byte-identity reference**: `tests/prop_exec.rs` pins every SN
+//! variant's distributed output — across push, faults, executor loss
+//! and dropped fetches — to the serial engine's bytes.
+//!
 //! ## Multi-job execution and speculation
 //!
 //! [`run_job`] models a cluster running exactly one job.  The
@@ -261,7 +292,9 @@ pub use engine::{run_job, run_job_with_combiner, DeadLetter, JobOutcome, JobResu
 pub use fault::{FaultKind, FaultPlan, FaultSpec, TaskPhase};
 pub use push::{PushAttempt, ShuffleService};
 pub use scheduler::{
-    Exec, JobHandle, JobScheduler, PushMode, SchedulerConfig, SpecMode, SpecPolicy,
+    ChannelTransport, DistConfig, DistScheduler, Exec, JobHandle, JobScheduler, KillPlan,
+    LinkClass, LinkClosed, PushMode, SchedulerConfig, SpecMode, SpecPolicy, Transport,
+    TransportFaults,
 };
 pub use shuffle::MergeIter;
 pub use sortspill::{

@@ -46,6 +46,21 @@
 //! reason speculation itself is: attempts are deterministic functions of
 //! the task input, so both attempts push identical run contents.
 //!
+//! ## Relation to the distributed push path
+//!
+//! This mailbox service is the **in-process** push implementation: runs
+//! move by shared-memory handoff into per-partition mailboxes.  The
+//! [`DistScheduler`](super::scheduler::DistScheduler) implements the
+//! same phase structure with **location-addressed** flow instead: map
+//! completions stream `(executor, run ids)` *sources* to
+//! already-launched reduce tasks, which fetch the run bytes from the
+//! owning executor over the transport and seal on the wave stamp.  Both
+//! obey the committed-prefix rule above, so both are byte-identical to
+//! the barrier reference.  The distributed form is the first slice of
+//! *push across chained jobs*: a source is just an address, so a
+//! downstream job's reducers could fetch an upstream job's output
+//! without a materialization barrier between them.
+//!
 //! [`OnceSlots::try_put`]: crate::util::threadpool::OnceSlots::try_put
 
 use std::collections::HashMap;

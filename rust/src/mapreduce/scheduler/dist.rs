@@ -1,0 +1,1340 @@
+//! The distributed control plane: one event-loop scheduler driving N
+//! executor workers over typed message links (ballista-style split).
+//!
+//! The scheduler owns every job/task state machine ([`ControlState`]) and
+//! never touches task bodies or intermediate data; executors own both.
+//! Map outputs are addressed by *location*: when a map task seals its
+//! runs, the executor registers `(executor_id, run ids)` per reduce
+//! partition on the control plane, and reduce tasks fetch the runs
+//! themselves over the data plane ([`super::executor::FetchRequest`]).
+//! The channel-backed [`ChannelTransport`] is the reference wiring; the
+//! message protocol is the contract a socket transport would implement.
+//!
+//! What moves onto the message path (previously in-process calls):
+//! - **push dispatch** — reduces launch at the first `MapDone` with
+//!   `sealed: false`; every later registration streams in as
+//!   `AddSources`, and the wave end sends `SealReduce`,
+//! - **speculation** — the scheduler clones stragglers onto another
+//!   executor; first `MapDone` wins, the loser is retracted by a
+//!   `DropRuns` frame when its stale completion arrives,
+//! - **fault retry** — `TaskFailed` frames feed the same bounded-retry /
+//!   dead-letter policy as the in-process scheduler,
+//! - **loss recovery** — a dead control link (or a failed fetch pinned on
+//!   a source executor) marks the executor lost: its running tasks *and*
+//!   its committed map registrations are resubmitted to survivors, and
+//!   parked reduces relaunch once the registry is whole again,
+//! - **checkpoint restore** — executors short-circuit committed map tasks
+//!   to the manifest (restore-only; the dist path does not write).
+//!
+//! Output is byte-identical to the serial engine: splits are computed by
+//! the same `split_input`, task bodies are the shared `exec_map_task` /
+//! `exec_reduce_task`, and each reduce merges fetched runs in canonical
+//! map-task-ascending order — the same order `transpose_runs` produces.
+//! Shuffle-byte accounting stays with the data plane: the registry
+//! records run counts and ids, not bytes, so `SHUFFLE_BYTES` is zero on
+//! this path (the `DIST_*` counters describe the fetch traffic instead).
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::mapreduce::checkpoint::Manifest;
+use crate::mapreduce::combiner::Combiner;
+use crate::mapreduce::config::JobConfig;
+use crate::mapreduce::counters::{names, Counters};
+use crate::mapreduce::driver;
+use crate::mapreduce::engine::{
+    split_input, CombineFn, DeadLetter, GroupFn, JobOutcome, JobResult, JobStats, MapTaskOutput,
+    ReduceTaskOutput,
+};
+use crate::mapreduce::fault::{FaultInjector, FaultPlan, TaskPhase};
+use crate::mapreduce::trace::{TraceEvent, TracePhase};
+use crate::mapreduce::types::{MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate};
+use crate::metrics::registry::{ExecutorLane, MetricsSpec};
+
+use super::executor::{
+    run_executor, ExecutorSpec, FetchRequest, FromExecutor, KillPlan, RunLocation, ToExecutor,
+};
+use super::transport::{ChannelTransport, LinkClass, Transport, TransportFaults, TxLink};
+use super::{make_combine_fn, PushMode};
+
+/// Scheduler tick: how long one `recv_timeout` waits before the loop
+/// pings every executor (a failed ping is the loss signal on the
+/// channel transport, where sends only fail once the peer is gone).
+const TICK: Duration = Duration::from_millis(10);
+/// Reduce-side fetch budget per source (fresh reply link per try).
+const FETCH_ATTEMPTS: u32 = 4;
+const FETCH_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Configuration of a [`DistScheduler`]: executor count plus the
+/// job-policy knobs that live scheduler-side (per-job [`JobConfig`]
+/// fields override these where both exist).
+#[derive(Clone)]
+pub struct DistConfig {
+    pub executors: usize,
+    /// Barrier (two-wave) or push (reduces launch at first registration).
+    pub push: PushMode,
+    /// Retry budget for panicking tasks when the job doesn't set
+    /// [`JobConfig::max_task_retries`].
+    pub max_task_retries: u32,
+    /// Clone still-running maps onto another executor once half the map
+    /// wave is decided (first completion wins, loser retracted).
+    pub speculative: bool,
+    /// Fault plan applied when the job doesn't carry one.
+    pub faults: Option<FaultPlan>,
+    /// Deterministic executor-loss injection (requires ≥ 2 executors).
+    pub kill: Option<KillPlan>,
+    /// Drop the first N data-plane frames (fetch requests/replies) — the
+    /// torn-link path `prop_exec.rs` pins.
+    pub fetch_drops: u32,
+    pub metrics: Option<MetricsSpec>,
+}
+
+impl DistConfig {
+    pub fn executors(n: usize) -> Self {
+        DistConfig {
+            executors: n.max(1),
+            push: PushMode::Barrier,
+            max_task_retries: 0,
+            speculative: false,
+            faults: None,
+            kill: None,
+            fetch_drops: 0,
+            metrics: None,
+        }
+    }
+
+    pub fn with_push(mut self, mode: PushMode) -> Self {
+        self.push = mode;
+        self
+    }
+
+    pub fn with_retries(mut self, n: u32) -> Self {
+        self.max_task_retries = n;
+        self
+    }
+
+    pub fn with_speculation(mut self, on: bool) -> Self {
+        self.speculative = on;
+        self
+    }
+
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    pub fn with_kill(mut self, kill: KillPlan) -> Self {
+        self.kill = Some(kill);
+        self
+    }
+
+    pub fn with_fetch_drops(mut self, n: u32) -> Self {
+        self.fetch_drops = n;
+        self
+    }
+
+    pub fn with_metrics(mut self, metrics: MetricsSpec) -> Self {
+        self.metrics = Some(metrics);
+        self
+    }
+}
+
+/// The message-passing scheduler. Construct once, submit jobs through
+/// [`DistScheduler::run`] / [`run_with_combiner`](Self::run_with_combiner)
+/// (or route an SN variant through `Exec::Dist`).
+pub struct DistScheduler {
+    cfg: DistConfig,
+}
+
+impl DistScheduler {
+    pub fn new(cfg: DistConfig) -> Self {
+        DistScheduler { cfg }
+    }
+
+    pub fn with_executors(n: usize) -> Self {
+        Self::new(DistConfig::executors(n))
+    }
+
+    pub fn config(&self) -> &DistConfig {
+        &self.cfg
+    }
+
+    /// Run one job across this scheduler's executors. Same signature and
+    /// (byte-identical) output as the serial `run_job`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: &JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+    ) -> JobResult<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        self.run_inner(config, input, mapper, partitioner, grouping, reducer, None)
+    }
+
+    /// As [`DistScheduler::run`], with a map-side combiner.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_with_combiner<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: &JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+        combiner: Arc<dyn Combiner<KT, VT>>,
+    ) -> JobResult<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        self.run_inner(
+            config,
+            input,
+            mapper,
+            partitioner,
+            grouping,
+            reducer,
+            Some(make_combine_fn(combiner)),
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_inner<KI, VI, KT, VT, KO, VO>(
+        &self,
+        config: &JobConfig,
+        input: Vec<(KI, VI)>,
+        mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+        partitioner: Arc<dyn Partitioner<KT>>,
+        grouping: GroupFn<KT>,
+        reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+        combine_fn: Option<CombineFn<KT, VT>>,
+    ) -> JobResult<KO, VO>
+    where
+        KI: Clone + Send + Sync + 'static,
+        VI: Clone + Send + Sync + 'static,
+        KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+        VT: Clone + Send + Sync + SizeEstimate + 'static,
+        KO: Send + SizeEstimate + 'static,
+        VO: Send + SizeEstimate + 'static,
+    {
+        let n = self.cfg.executors.max(1);
+        let kill = self.cfg.kill;
+        if kill.is_some() {
+            assert!(n >= 2, "a kill plan needs >= 2 executors to fail over to");
+        }
+        let push = config.push || matches!(self.cfg.push, PushMode::Push);
+        let retries = config.max_task_retries.unwrap_or(self.cfg.max_task_retries);
+        let dead_letter = config.dead_letter;
+        let faults = config.faults.clone().or_else(|| self.cfg.faults.clone());
+        let r = config.num_reduce_tasks.max(1);
+        let compressed_spill = config.spill.as_ref().map(|s| s.compress()).unwrap_or(false);
+
+        let t_start = Instant::now();
+        let counters = Arc::new(Counters::new());
+        let jctx = config.trace.as_ref().map(|t| t.job_ctx(&config.name));
+
+        counters.add(names::MAP_INPUT_RECORDS, input.len() as u64);
+        let splits: Vec<Arc<Vec<(KI, VI)>>> = split_input(input, config.num_map_tasks)
+            .into_iter()
+            .map(Arc::new)
+            .collect();
+        let m = splits.len();
+        let split_lens: Vec<u64> = splits.iter().map(|s| s.len() as u64).collect();
+
+        let spill = config.spill.as_ref().map(|s| s.resolve::<(KT, VT)>());
+        let manifest: Option<(Arc<Manifest>, _)> = config.checkpoint.as_ref().and_then(|c| {
+            let man = Manifest::load(&c.manifest_path())?;
+            if !man.matches(&config.name, m, r) {
+                return None;
+            }
+            Some((Arc::new(man), c.resolve::<(KT, VT)>()))
+        });
+        let injector = FaultInjector::from_plan(faults);
+
+        // ---- wire the transport and spawn the executors -----------------
+        let transport = ChannelTransport::with_faults(TransportFaults {
+            drop_data_sends: self.cfg.fetch_drops,
+        });
+        let (tx_out, rx_out) = transport.link::<FromExecutor<KT, VT, KO, VO>>(LinkClass::Control);
+        let mut ctl_txs: Vec<TxLink<ToExecutor<KI, VI>>> = Vec::with_capacity(n);
+        let mut ctl_rxs = Vec::with_capacity(n);
+        let mut data_txs: Vec<TxLink<FetchRequest<(KT, VT)>>> = Vec::with_capacity(n);
+        let mut data_rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = transport.link(LinkClass::Control);
+            ctl_txs.push(tx);
+            ctl_rxs.push(Some(rx));
+            let (tx, rx) = transport.link(LinkClass::Data);
+            data_txs.push(tx);
+            data_rxs.push(Some(rx));
+        }
+        let mut handles = Vec::with_capacity(n);
+        for (e, (ctl_rx, data_rx)) in ctl_rxs.iter_mut().zip(data_rxs.iter_mut()).enumerate() {
+            let spec = ExecutorSpec {
+                id: e,
+                num_reducers: r,
+                rx_ctl: ctl_rx.take().expect("control link taken twice"),
+                tx_out: tx_out.clone(),
+                rx_data: data_rx.take().expect("data link taken twice"),
+                peers: data_txs.clone(),
+                mapper: Arc::clone(&mapper),
+                partitioner: Arc::clone(&partitioner),
+                combine_fn: combine_fn.clone(),
+                reducer: Arc::clone(&reducer),
+                grouping: Arc::clone(&grouping),
+                spill: spill.clone(),
+                sort_budget: config.sort_buffer_records,
+                injector: Arc::clone(&injector),
+                kill,
+                manifest: manifest.clone(),
+                jctx: jctx.clone(),
+                t0: t_start,
+                fetch_attempts: FETCH_ATTEMPTS,
+                fetch_timeout: FETCH_TIMEOUT,
+            };
+            let tp = transport.clone();
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("snmr-exec-{e}"))
+                    .spawn(move || run_executor(spec, tp))
+                    .expect("spawn executor"),
+            );
+        }
+        drop(tx_out);
+
+        let lanes: Option<Vec<ExecutorLane>> = self
+            .cfg
+            .metrics
+            .as_ref()
+            .map(|ms| (0..n).map(|e| ms.executor_lane(e)).collect());
+
+        // ---- scheduler-side state ---------------------------------------
+        struct RegistryEntry {
+            executor: usize,
+            run_counts: Vec<u32>,
+            run_ids: Vec<Vec<u64>>,
+        }
+        let mut state = ControlState::new(n, m, r, retries);
+        let mut registry: Vec<Option<RegistryEntry>> = (0..m).map(|_| None).collect();
+        let mut map_outs: Vec<Option<MapTaskOutput<KT, VT>>> = (0..m).map(|_| None).collect();
+        let mut map_counters: Vec<Option<Counters>> = (0..m).map(|_| None).collect();
+        let mut red_outs: Vec<Option<(ReduceTaskOutput<KO, VO>, f64)>> =
+            (0..r).map(|_| None).collect();
+        let mut dead_letters: Vec<DeadLetter> = Vec::new();
+        let mut sent_sources: Vec<Vec<bool>> = (0..r).map(|_| vec![false; m]).collect();
+        let mut parked_reduces = vec![false; r];
+        let mut lost_pending: Vec<usize> = Vec::new();
+        let mut reduces_launched = false;
+        let mut map_wave_done_secs: Option<f64> = None;
+        let speculative = self.cfg.speculative;
+
+        // The macros below expand inline over the locals above — the
+        // pragmatic way to share dispatch logic across the loop arms
+        // without fighting simultaneous closure borrows.
+        macro_rules! launch_map {
+            ($i:expr) => {{
+                let i: usize = $i;
+                let e = state.next_alive();
+                let attempt = state.begin(TaskPhase::Map, i, e);
+                if let Some(jc) = &jctx {
+                    jc.task(TracePhase::Map, i, attempt)
+                        .emit(TraceEvent::AttemptScheduled);
+                }
+                if let Some(l) = &lanes {
+                    l[e].in_flight.inc();
+                }
+                if ctl_txs[e]
+                    .send(ToExecutor::LaunchMap { task: i, attempt, split: Arc::clone(&splits[i]) })
+                    .is_err()
+                {
+                    lost_pending.push(e);
+                }
+            }};
+        }
+        macro_rules! sources_for {
+            ($j:expr) => {{
+                let j: usize = $j;
+                let mut v: Vec<RunLocation> = Vec::new();
+                for (i, entry) in registry.iter().enumerate() {
+                    if let Some(en) = entry {
+                        debug_assert_eq!(en.run_ids[j].len() as u32, en.run_counts[j]);
+                        sent_sources[j][i] = true;
+                        v.push(RunLocation {
+                            map_task: i,
+                            executor: en.executor,
+                            runs: en.run_counts[j],
+                        });
+                    }
+                }
+                v
+            }};
+        }
+        macro_rules! launch_reduce {
+            ($j:expr, $sealed:expr) => {{
+                let j: usize = $j;
+                sent_sources[j] = vec![false; m];
+                parked_reduces[j] = false;
+                let sources = sources_for!(j);
+                let e = state.next_alive();
+                let attempt = state.begin(TaskPhase::Reduce, j, e);
+                if let Some(jc) = &jctx {
+                    jc.task(TracePhase::Reduce, j, attempt)
+                        .emit(TraceEvent::AttemptScheduled);
+                }
+                if let Some(l) = &lanes {
+                    l[e].in_flight.inc();
+                }
+                if ctl_txs[e]
+                    .send(ToExecutor::LaunchReduce { task: j, attempt, sources, sealed: $sealed })
+                    .is_err()
+                {
+                    lost_pending.push(e);
+                }
+            }};
+        }
+
+        // Every map is dispatched up front, round-robin across executors
+        // (location-oblivious; the shuffle is fetch-by-location anyway).
+        for i in 0..m {
+            launch_map!(i);
+        }
+
+        // ---- the event loop ---------------------------------------------
+        loop {
+            // 1. Settle reported losses: resubmit what the dead executor
+            //    ran *and* what it had committed (its runs are gone).
+            while let Some(e) = lost_pending.pop() {
+                let report = state.mark_lost(e);
+                if !report.was_alive {
+                    continue;
+                }
+                counters.inc(names::EXECUTORS_LOST);
+                if let Some(jc) = &jctx {
+                    jc.emit_job(TraceEvent::ExecutorLost { executor: e as u64 });
+                }
+                if let Some(l) = &lanes {
+                    l[e].lost.inc();
+                    l[e].in_flight.set(0);
+                    l[e].runs_held.set(0);
+                }
+                for i in 0..m {
+                    if registry[i].as_ref().map(|en| en.executor == e).unwrap_or(false) {
+                        registry[i] = None;
+                        map_outs[i] = None;
+                        map_counters[i] = None;
+                    }
+                }
+                for i in report.maps {
+                    counters.inc(names::TASK_RETRIES);
+                    if let Some(jc) = &jctx {
+                        jc.task(TracePhase::Map, i, state.attempts(TaskPhase::Map, i))
+                            .emit(TraceEvent::TaskRetried);
+                    }
+                    launch_map!(i);
+                }
+                for j in report.reduces {
+                    counters.inc(names::TASK_RETRIES);
+                    if let Some(jc) = &jctx {
+                        jc.task(TracePhase::Reduce, j, state.attempts(TaskPhase::Reduce, j))
+                            .emit(TraceEvent::TaskRetried);
+                    }
+                    parked_reduces[j] = true;
+                }
+            }
+
+            // 2. Map wave decided → stamp it once, then launch (barrier) or
+            //    top-up-and-seal (push) every undecided reduce.
+            if map_wave_done_secs.is_none() && state.maps_all_done() {
+                let now = t_start.elapsed().as_secs_f64();
+                map_wave_done_secs = Some(now);
+                if let Some(jc) = &jctx {
+                    jc.emit_job_at(TraceEvent::MapWaveDone, now);
+                }
+                for j in 0..r {
+                    if state.reduces[j].done.is_some() || state.reduces[j].dead_lettered {
+                        continue;
+                    }
+                    if parked_reduces[j] || state.reduces[j].running.is_empty() {
+                        launch_reduce!(j, true);
+                    } else {
+                        // Pending push reduce: stream any sources it missed,
+                        // then seal it.
+                        let e_red = state.reduces[j].running[0].0;
+                        let mut extra = Vec::new();
+                        for (i, entry) in registry.iter().enumerate() {
+                            if let Some(en) = entry {
+                                if !sent_sources[j][i] {
+                                    sent_sources[j][i] = true;
+                                    extra.push(RunLocation {
+                                        map_task: i,
+                                        executor: en.executor,
+                                        runs: en.run_counts[j],
+                                    });
+                                }
+                            }
+                        }
+                        let mut down = false;
+                        if !extra.is_empty() {
+                            down = ctl_txs[e_red]
+                                .send(ToExecutor::AddSources { task: j, sources: extra })
+                                .is_err();
+                        }
+                        if !down {
+                            down = ctl_txs[e_red].send(ToExecutor::SealReduce { task: j }).is_err();
+                        }
+                        if down {
+                            lost_pending.push(e_red);
+                        }
+                    }
+                }
+                reduces_launched = true;
+                if !lost_pending.is_empty() {
+                    continue;
+                }
+            }
+
+            // 3. Relaunch parked reduces once their sources are resolvable.
+            for j in 0..r {
+                if !parked_reduces[j]
+                    || state.reduces[j].done.is_some()
+                    || state.reduces[j].dead_lettered
+                {
+                    continue;
+                }
+                if map_wave_done_secs.is_some() {
+                    if state.maps_all_done() {
+                        launch_reduce!(j, true);
+                    }
+                } else if reduces_launched {
+                    launch_reduce!(j, false);
+                }
+            }
+
+            // 4. Speculation: once half the map wave is decided, clone each
+            //    still-running map onto a different executor (once).
+            if speculative && n >= 2 && state.alive_count() >= 2 {
+                let done = state.maps.iter().filter(|s| s.done.is_some()).count();
+                if done * 2 >= m {
+                    for i in 0..m {
+                        let slot = &state.maps[i];
+                        if slot.done.is_some()
+                            || slot.dead_lettered
+                            || slot.clone_attempt.is_some()
+                            || slot.running.len() != 1
+                        {
+                            continue;
+                        }
+                        let primary = slot.running[0].0;
+                        if let Some(e) = state.next_alive_except(primary) {
+                            let attempt = state.begin_speculative(TaskPhase::Map, i, e);
+                            counters.inc(names::SPECULATIVE_LAUNCHED);
+                            if let Some(jc) = &jctx {
+                                jc.task(TracePhase::Map, i, attempt)
+                                    .emit(TraceEvent::SpeculativeCloned);
+                            }
+                            if let Some(l) = &lanes {
+                                l[e].in_flight.inc();
+                            }
+                            if ctl_txs[e]
+                                .send(ToExecutor::LaunchMap {
+                                    task: i,
+                                    attempt,
+                                    split: Arc::clone(&splits[i]),
+                                })
+                                .is_err()
+                            {
+                                lost_pending.push(e);
+                            }
+                        }
+                    }
+                }
+            }
+            if !lost_pending.is_empty() {
+                continue;
+            }
+
+            // 5. Done?
+            if state.maps_all_done() && state.reduces_all_done() {
+                break;
+            }
+
+            // 6. Wait for the next frame; an idle tick pings every live
+            //    executor so a silent disconnect can't stall the loop.
+            let msg = match rx_out.recv_timeout(TICK) {
+                Ok(Some(msg)) => msg,
+                Ok(None) => {
+                    for e in 0..n {
+                        if state.is_alive(e) && ctl_txs[e].send(ToExecutor::Ping).is_err() {
+                            lost_pending.push(e);
+                        }
+                    }
+                    continue;
+                }
+                Err(_) => panic!("dist scheduler: every executor disconnected"),
+            };
+            let now = t_start.elapsed().as_secs_f64();
+            match msg {
+                FromExecutor::Registered { executor } => {
+                    state.register(executor);
+                    state.heartbeat(executor, now);
+                    if let Some(jc) = &jctx {
+                        jc.emit_job(TraceEvent::ExecutorRegistered { executor: executor as u64 });
+                    }
+                }
+                FromExecutor::MapDone {
+                    executor,
+                    task,
+                    attempt,
+                    out,
+                    run_counts,
+                    run_ids,
+                    counters: local,
+                } => {
+                    if !state.is_alive(executor) {
+                        continue;
+                    }
+                    state.heartbeat(executor, now);
+                    if let Some(l) = &lanes {
+                        l[executor].in_flight.dec();
+                    }
+                    match state.complete(TaskPhase::Map, task, executor, attempt) {
+                        Committed::Stale => {
+                            // Speculation loser or superseded attempt: its
+                            // registered runs must not survive.
+                            if let Some(jc) = &jctx {
+                                jc.task(TracePhase::Map, task, attempt)
+                                    .emit(TraceEvent::AttemptLost);
+                            }
+                            let _ = ctl_txs[executor].send(ToExecutor::DropRuns { task, attempt });
+                        }
+                        Committed::Won => {
+                            if state.maps[task].clone_attempt == Some(attempt) {
+                                counters.inc(names::SPECULATIVE_WON);
+                            }
+                            if let Some(jc) = &jctx {
+                                jc.task(TracePhase::Map, task, attempt)
+                                    .emit(TraceEvent::AttemptWon);
+                            }
+                            if let Some(l) = &lanes {
+                                l[executor].tasks_done.inc();
+                                l[executor]
+                                    .runs_held
+                                    .add(run_counts.iter().map(|&c| c as i64).sum());
+                            }
+                            registry[task] = Some(RegistryEntry { executor, run_counts, run_ids });
+                            map_outs[task] = Some(out);
+                            map_counters[task] = Some(local);
+                            if push && !reduces_launched {
+                                reduces_launched = true;
+                                for j in 0..r {
+                                    launch_reduce!(j, false);
+                                }
+                            } else if push {
+                                // Stream this registration into pending
+                                // reduces that don't have it yet.
+                                for j in 0..r {
+                                    if sent_sources[j][task] || parked_reduces[j] {
+                                        continue;
+                                    }
+                                    if let Some(&(e_red, _)) = state.reduces[j].running.first() {
+                                        sent_sources[j][task] = true;
+                                        let en = registry[task].as_ref().expect("just registered");
+                                        if ctl_txs[e_red]
+                                            .send(ToExecutor::AddSources {
+                                                task: j,
+                                                sources: vec![RunLocation {
+                                                    map_task: task,
+                                                    executor: en.executor,
+                                                    runs: en.run_counts[j],
+                                                }],
+                                            })
+                                            .is_err()
+                                        {
+                                            lost_pending.push(e_red);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                FromExecutor::ReduceDone {
+                    executor,
+                    task,
+                    attempt,
+                    out,
+                    counters: local,
+                    started_secs,
+                } => {
+                    if !state.is_alive(executor) {
+                        continue;
+                    }
+                    state.heartbeat(executor, now);
+                    if let Some(l) = &lanes {
+                        l[executor].in_flight.dec();
+                    }
+                    match state.complete(TaskPhase::Reduce, task, executor, attempt) {
+                        Committed::Stale => {}
+                        Committed::Won => {
+                            if let Some(jc) = &jctx {
+                                jc.task(TracePhase::Reduce, task, attempt)
+                                    .emit(TraceEvent::AttemptWon);
+                            }
+                            if let Some(l) = &lanes {
+                                l[executor].tasks_done.inc();
+                            }
+                            counters.merge(&local);
+                            red_outs[task] = Some((out, started_secs));
+                            parked_reduces[task] = false;
+                        }
+                    }
+                }
+                FromExecutor::TaskFailed { executor, phase, task, attempt, message } => {
+                    if !state.is_alive(executor) {
+                        continue;
+                    }
+                    state.heartbeat(executor, now);
+                    if let Some(l) = &lanes {
+                        l[executor].in_flight.dec();
+                    }
+                    let tphase = trace_phase(phase);
+                    match state.fail(phase, task, attempt) {
+                        FailAction::Stale => {}
+                        FailAction::Retry => {
+                            counters.inc(names::TASK_RETRIES);
+                            if let Some(jc) = &jctx {
+                                jc.task(tphase, task, attempt).emit(TraceEvent::TaskRetried);
+                            }
+                            match phase {
+                                TaskPhase::Map => launch_map!(task),
+                                TaskPhase::Reduce => {
+                                    launch_reduce!(task, map_wave_done_secs.is_some())
+                                }
+                            }
+                        }
+                        FailAction::Exhausted => {
+                            counters.inc(names::TASKS_FAILED);
+                            if !dead_letter {
+                                // Fail fast, like the in-process paths: tear
+                                // the cluster down and re-raise the panic.
+                                for tx in &ctl_txs {
+                                    let _ = tx.send(ToExecutor::Shutdown);
+                                }
+                                drop(ctl_txs);
+                                drop(data_txs);
+                                for h in handles {
+                                    let _ = h.join();
+                                }
+                                panic!("{message}");
+                            }
+                            counters.inc(names::DEAD_LETTERED);
+                            state.dead_letter(phase, task);
+                            if let Some(jc) = &jctx {
+                                jc.task(tphase, task, attempt).emit(TraceEvent::DeadLettered {
+                                    message: format!(
+                                        "{phase} task {task} exhausted its retry budget"
+                                    ),
+                                });
+                            }
+                            match phase {
+                                TaskPhase::Map => {
+                                    dead_letters.push(DeadLetter {
+                                        phase,
+                                        task,
+                                        records: split_lens[task],
+                                    });
+                                    registry[task] = None;
+                                    map_outs[task] = Some(MapTaskOutput::empty(r));
+                                    map_counters[task] = None;
+                                }
+                                TaskPhase::Reduce => {
+                                    let records: u64 = registry
+                                        .iter()
+                                        .flatten()
+                                        .map(|en| en.run_counts[task] as u64)
+                                        .sum();
+                                    dead_letters.push(DeadLetter { phase, task, records });
+                                    red_outs[task] =
+                                        Some((ReduceTaskOutput::empty(), f64::INFINITY));
+                                    parked_reduces[task] = false;
+                                }
+                            }
+                        }
+                    }
+                }
+                FromExecutor::FetchFailed { executor, task, attempt, source } => {
+                    if !state.is_alive(executor) {
+                        continue;
+                    }
+                    state.heartbeat(executor, now);
+                    if let Some(l) = &lanes {
+                        l[executor].in_flight.dec();
+                    }
+                    // The reduce attempt aborted; the source executor could
+                    // not produce runs it had registered — treat it as lost
+                    // and park the reduce until the registry is whole again.
+                    if state.abort_attempt(TaskPhase::Reduce, task, attempt) {
+                        counters.inc(names::TASK_RETRIES);
+                        parked_reduces[task] = true;
+                    }
+                    if state.is_alive(source.executor) {
+                        lost_pending.push(source.executor);
+                    }
+                }
+            }
+        }
+
+        // ---- tear down and assemble the result --------------------------
+        for tx in &ctl_txs {
+            let _ = tx.send(ToExecutor::Shutdown);
+        }
+        drop(ctl_txs);
+        drop(data_txs);
+        for h in handles {
+            let _ = h.join();
+        }
+
+        let wave_secs =
+            map_wave_done_secs.unwrap_or_else(|| t_start.elapsed().as_secs_f64());
+        let mut stats = JobStats {
+            map_phase_secs: wave_secs,
+            map_wave_done_secs: wave_secs,
+            ..JobStats::default()
+        };
+        // Winning map attempts' counters merge exactly once, here — merging
+        // at MapDone would double-count any task re-run after a loss.
+        for local in map_counters.iter().flatten() {
+            counters.merge(local);
+        }
+        let map_outputs: Vec<MapTaskOutput<KT, VT>> = map_outs
+            .into_iter()
+            .map(|o| o.expect("map output missing at job end"))
+            .collect();
+        // The runs were stripped executor-side, so the transpose only
+        // feeds the (empty) byte accounting — same shape as the push path.
+        let _ = driver::record_map_phase(
+            &mut stats,
+            &counters,
+            map_outputs,
+            r,
+            combine_fn.is_some(),
+            compressed_spill,
+        );
+
+        let mut first_start = f64::INFINITY;
+        let mut red_outputs = Vec::with_capacity(r);
+        for slot in red_outs {
+            let (out, started) = slot.expect("reduce output missing at job end");
+            first_start = first_start.min(started);
+            red_outputs.push(out);
+        }
+        stats.reduce_first_start_secs = if first_start.is_finite() { first_start } else { 0.0 };
+        stats.overlap_secs = (wave_secs - stats.reduce_first_start_secs).max(0.0);
+        if let Some(jc) = &jctx {
+            jc.emit_job_at(TraceEvent::ReduceFirstStart, stats.reduce_first_start_secs);
+        }
+        stats.reduce_phase_secs =
+            (t_start.elapsed().as_secs_f64() - stats.reduce_first_start_secs).max(0.0);
+        driver::record_reduce_phase(&mut stats, &counters, &red_outputs);
+        let outputs: Vec<Vec<(KO, VO)>> = red_outputs.into_iter().map(|o| o.output).collect();
+        stats.total_secs = t_start.elapsed().as_secs_f64();
+        if let Some(jc) = &jctx {
+            jc.emit_job_at(TraceEvent::JobFinished, stats.total_secs);
+        }
+        stats.task_retries = counters.get(names::TASK_RETRIES);
+        stats.tasks_failed = counters.get(names::TASKS_FAILED);
+        stats.dead_letters = dead_letters;
+        stats.dead_letters.sort_by_key(|d| (d.phase != TaskPhase::Map, d.task));
+        let outcome = if counters.get(names::DEAD_LETTERED) > 0 {
+            JobOutcome::Degraded
+        } else {
+            JobOutcome::Ok
+        };
+        if let Some(ms) = &self.cfg.metrics {
+            ms.absorb_job(&counters, &stats);
+        }
+        JobResult { outputs, counters, stats, outcome }
+    }
+}
+
+fn trace_phase(p: TaskPhase) -> TracePhase {
+    match p {
+        TaskPhase::Map => TracePhase::Map,
+        TaskPhase::Reduce => TracePhase::Reduce,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pure task/executor state machines — everything the event loop decides,
+// with no transport attached, so loss/retry/arbitration transitions are
+// unit-testable (and reusable by a future socket-backed control plane).
+// ---------------------------------------------------------------------------
+
+/// One task's attempt ledger.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct TaskSlot {
+    /// Live attempts as `(executor, attempt)` — more than one only while
+    /// a speculative clone races the primary.
+    pub running: Vec<(usize, u32)>,
+    /// The committed attempt, if decided.
+    pub done: Option<(usize, u32)>,
+    pub dead_lettered: bool,
+    pub next_attempt: u32,
+    /// Panic-failure count (loss resubmissions don't count against it).
+    pub failures: u32,
+    /// The speculative clone's attempt number, if one was launched.
+    pub clone_attempt: Option<u32>,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct ExecutorSlot {
+    pub registered: bool,
+    pub alive: bool,
+    pub last_seen_secs: f64,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum Committed {
+    Won,
+    Stale,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum FailAction {
+    Retry,
+    Exhausted,
+    /// The failing attempt is no longer current (superseded or the task
+    /// already decided) — ignore it.
+    Stale,
+}
+
+/// What a lost executor takes with it: the tasks that must re-run.
+#[derive(Debug, Default, PartialEq, Eq)]
+pub(crate) struct LossReport {
+    pub was_alive: bool,
+    pub maps: Vec<usize>,
+    pub reduces: Vec<usize>,
+}
+
+pub(crate) struct ControlState {
+    pub executors: Vec<ExecutorSlot>,
+    pub maps: Vec<TaskSlot>,
+    pub reduces: Vec<TaskSlot>,
+    max_retries: u32,
+    cursor: usize,
+}
+
+impl ControlState {
+    pub fn new(n: usize, m: usize, r: usize, max_retries: u32) -> Self {
+        ControlState {
+            executors: (0..n)
+                .map(|_| ExecutorSlot { registered: false, alive: true, last_seen_secs: 0.0 })
+                .collect(),
+            maps: vec![TaskSlot::default(); m],
+            reduces: vec![TaskSlot::default(); r],
+            max_retries,
+            cursor: n.saturating_sub(1),
+        }
+    }
+
+    fn slot_mut(&mut self, phase: TaskPhase, task: usize) -> &mut TaskSlot {
+        match phase {
+            TaskPhase::Map => &mut self.maps[task],
+            TaskPhase::Reduce => &mut self.reduces[task],
+        }
+    }
+
+    fn slot(&self, phase: TaskPhase, task: usize) -> &TaskSlot {
+        match phase {
+            TaskPhase::Map => &self.maps[task],
+            TaskPhase::Reduce => &self.reduces[task],
+        }
+    }
+
+    pub fn register(&mut self, e: usize) {
+        self.executors[e].registered = true;
+    }
+
+    pub fn heartbeat(&mut self, e: usize, now: f64) {
+        self.executors[e].last_seen_secs = now;
+    }
+
+    /// Registered, still-alive executors whose last frame is older than
+    /// `timeout`. The channel transport detects loss by failed sends
+    /// instead; a socket control plane would drive `mark_lost` from this.
+    pub fn heartbeats_missed(&self, now: f64, timeout: f64) -> Vec<usize> {
+        self.executors
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.registered && s.alive && now - s.last_seen_secs > timeout)
+            .map(|(e, _)| e)
+            .collect()
+    }
+
+    pub fn is_alive(&self, e: usize) -> bool {
+        self.executors[e].alive
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.executors.iter().filter(|s| s.alive).count()
+    }
+
+    /// Round-robin over live executors.
+    pub fn next_alive(&mut self) -> usize {
+        assert!(self.alive_count() > 0, "dist scheduler: all executors lost");
+        loop {
+            self.cursor = (self.cursor + 1) % self.executors.len();
+            if self.executors[self.cursor].alive {
+                return self.cursor;
+            }
+        }
+    }
+
+    /// A live executor other than `not`, if one exists.
+    pub fn next_alive_except(&mut self, not: usize) -> Option<usize> {
+        for _ in 0..self.executors.len() {
+            let e = self.next_alive();
+            if e != not {
+                return Some(e);
+            }
+        }
+        None
+    }
+
+    /// Open a new attempt of `task` on `e`; returns the attempt number.
+    pub fn begin(&mut self, phase: TaskPhase, task: usize, e: usize) -> u32 {
+        let slot = self.slot_mut(phase, task);
+        let attempt = slot.next_attempt;
+        slot.next_attempt += 1;
+        slot.running.push((e, attempt));
+        attempt
+    }
+
+    /// As [`begin`](Self::begin), marking the attempt as the speculative
+    /// clone (at most one per task).
+    pub fn begin_speculative(&mut self, phase: TaskPhase, task: usize, e: usize) -> u32 {
+        let attempt = self.begin(phase, task, e);
+        self.slot_mut(phase, task).clone_attempt = Some(attempt);
+        attempt
+    }
+
+    /// First-completion-wins arbitration: the first live attempt to report
+    /// commits the task; everything else is stale.
+    pub fn complete(&mut self, phase: TaskPhase, task: usize, e: usize, attempt: u32) -> Committed {
+        let slot = self.slot_mut(phase, task);
+        // Only a currently-scheduled attempt can win — one cleared by
+        // `mark_lost` (and resubmitted elsewhere) reports as stale.
+        let was_scheduled = slot.running.iter().any(|&(re, ra)| (re, ra) == (e, attempt));
+        slot.running.retain(|&(re, ra)| (re, ra) != (e, attempt));
+        if !was_scheduled || slot.done.is_some() || slot.dead_lettered {
+            return Committed::Stale;
+        }
+        slot.done = Some((e, attempt));
+        slot.running.clear();
+        Committed::Won
+    }
+
+    /// A panicking attempt: consume a retry or declare exhaustion.
+    pub fn fail(&mut self, phase: TaskPhase, task: usize, attempt: u32) -> FailAction {
+        let max_retries = self.max_retries;
+        let slot = self.slot_mut(phase, task);
+        let had = slot.running.iter().any(|&(_, ra)| ra == attempt);
+        slot.running.retain(|&(_, ra)| ra != attempt);
+        if !had || slot.done.is_some() || slot.dead_lettered {
+            return FailAction::Stale;
+        }
+        slot.failures += 1;
+        if slot.failures <= max_retries {
+            FailAction::Retry
+        } else {
+            FailAction::Exhausted
+        }
+    }
+
+    /// Remove a live attempt without charging the retry budget (fetch
+    /// aborts — the attempt never ran its body). True if it was current.
+    pub fn abort_attempt(&mut self, phase: TaskPhase, task: usize, attempt: u32) -> bool {
+        let slot = self.slot_mut(phase, task);
+        let had = slot.running.iter().any(|&(_, ra)| ra == attempt);
+        slot.running.retain(|&(_, ra)| ra != attempt);
+        had && slot.done.is_none() && !slot.dead_lettered
+    }
+
+    pub fn dead_letter(&mut self, phase: TaskPhase, task: usize) {
+        let slot = self.slot_mut(phase, task);
+        slot.dead_lettered = true;
+        slot.running.clear();
+    }
+
+    /// Declare `e` dead: clear its attempts and its committed map wins
+    /// (their runs died with it) and report every task needing a re-run.
+    pub fn mark_lost(&mut self, e: usize) -> LossReport {
+        if !self.executors[e].alive {
+            return LossReport::default();
+        }
+        self.executors[e].alive = false;
+        let mut report = LossReport { was_alive: true, ..LossReport::default() };
+        for (i, slot) in self.maps.iter_mut().enumerate() {
+            let mut touched = false;
+            if slot.done.map(|(de, _)| de == e).unwrap_or(false) {
+                slot.done = None;
+                touched = true;
+            }
+            if slot.running.iter().any(|&(re, _)| re == e) {
+                slot.running.retain(|&(re, _)| re != e);
+                touched = true;
+            }
+            if touched && !slot.dead_lettered && slot.done.is_none() && slot.running.is_empty() {
+                slot.clone_attempt = None;
+                report.maps.push(i);
+            }
+        }
+        for (j, slot) in self.reduces.iter_mut().enumerate() {
+            // A decided reduce stays decided — its output already crossed
+            // the control plane.
+            if slot.done.is_some() || slot.dead_lettered {
+                continue;
+            }
+            if slot.running.iter().any(|&(re, _)| re == e) {
+                slot.running.retain(|&(re, _)| re != e);
+                if slot.running.is_empty() {
+                    slot.clone_attempt = None;
+                    report.reduces.push(j);
+                }
+            }
+        }
+        report
+    }
+
+    /// Total attempts opened so far for `task` (trace labelling).
+    pub fn attempts(&self, phase: TaskPhase, task: usize) -> u32 {
+        self.slot(phase, task).next_attempt
+    }
+
+    pub fn maps_all_done(&self) -> bool {
+        self.maps.iter().all(|s| s.done.is_some() || s.dead_lettered)
+    }
+
+    pub fn reduces_all_done(&self) -> bool {
+        self.reduces.iter().all(|s| s.done.is_some() || s.dead_lettered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::engine::run_job;
+    use crate::mapreduce::types::{Emitter, FnMapTask, FnReduceTask, HashPartitioner, ValuesIter};
+
+    // ---- ControlState transitions ------------------------------------
+
+    #[test]
+    fn loss_resubmits_running_and_committed_tasks() {
+        let mut st = ControlState::new(2, 3, 1, 0);
+        st.register(0);
+        st.register(1);
+        st.heartbeat(0, 0.0);
+        st.heartbeat(1, 0.0);
+
+        let a0 = st.begin(TaskPhase::Map, 0, 0);
+        let a1 = st.begin(TaskPhase::Map, 1, 1);
+        let _a2 = st.begin(TaskPhase::Map, 2, 0);
+        assert_eq!(st.complete(TaskPhase::Map, 1, 1, a1), Committed::Won);
+        assert_eq!(st.complete(TaskPhase::Map, 0, 0, a0), Committed::Won);
+
+        // Executor 1 goes silent; executor 0 keeps reporting.
+        st.heartbeat(0, 9.5);
+        assert_eq!(st.heartbeats_missed(10.0, 5.0), vec![1]);
+
+        // Losing executor 0 takes its running map 2 AND its committed
+        // map 0 (the runs lived there); map 1's win on executor 1 stays.
+        let report = st.mark_lost(0);
+        assert!(report.was_alive);
+        assert_eq!(report.maps, vec![0, 2]);
+        assert!(report.reduces.is_empty());
+        assert!(!st.is_alive(0));
+        assert!(!st.maps_all_done());
+
+        // Resubmit both to the survivor and finish.
+        for i in report.maps {
+            let e = st.next_alive();
+            assert_eq!(e, 1);
+            let a = st.begin(TaskPhase::Map, i, e);
+            assert_eq!(st.complete(TaskPhase::Map, i, e, a), Committed::Won);
+        }
+        assert!(st.maps_all_done());
+
+        // A second mark_lost is a no-op.
+        assert_eq!(st.mark_lost(0), LossReport::default());
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_dead_letters_the_task() {
+        let mut st = ControlState::new(1, 1, 1, 1);
+        let a0 = st.begin(TaskPhase::Map, 0, 0);
+        assert_eq!(st.fail(TaskPhase::Map, 0, a0), FailAction::Retry);
+        let a1 = st.begin(TaskPhase::Map, 0, 0);
+        assert_eq!(st.fail(TaskPhase::Map, 0, a1), FailAction::Exhausted);
+        st.dead_letter(TaskPhase::Map, 0);
+        assert!(st.maps_all_done());
+        // Reports about dead-lettered attempts are stale from here on.
+        assert_eq!(st.fail(TaskPhase::Map, 0, a1), FailAction::Stale);
+        assert_eq!(st.complete(TaskPhase::Map, 0, 0, a1), Committed::Stale);
+    }
+
+    #[test]
+    fn first_completion_wins_and_the_clone_loses() {
+        let mut st = ControlState::new(2, 1, 1, 0);
+        let primary = st.begin(TaskPhase::Map, 0, 0);
+        let clone = st.begin_speculative(TaskPhase::Map, 0, 1);
+        assert_eq!(st.maps[0].clone_attempt, Some(clone));
+        assert_eq!(st.complete(TaskPhase::Map, 0, 1, clone), Committed::Won);
+        assert_eq!(st.complete(TaskPhase::Map, 0, 0, primary), Committed::Stale);
+        assert_eq!(st.maps[0].done, Some((1, clone)));
+    }
+
+    #[test]
+    fn fetch_abort_does_not_charge_the_retry_budget() {
+        let mut st = ControlState::new(2, 1, 1, 0);
+        let a = st.begin(TaskPhase::Reduce, 0, 0);
+        assert!(st.abort_attempt(TaskPhase::Reduce, 0, a));
+        assert!(!st.abort_attempt(TaskPhase::Reduce, 0, a)); // idempotent
+        assert_eq!(st.reduces[0].failures, 0);
+        // The relaunch opens a fresh attempt and can still win.
+        let b = st.begin(TaskPhase::Reduce, 0, 1);
+        assert_eq!(st.complete(TaskPhase::Reduce, 0, 1, b), Committed::Won);
+    }
+
+    // ---- end-to-end over the channel transport -----------------------
+
+    fn histogram_job(
+        n: u64,
+        modulus: u64,
+    ) -> (
+        Vec<((), u64)>,
+        Arc<FnMapTask<impl Fn((), u64, &mut Emitter<u64, u64>, &Counters)>>,
+        Arc<FnReduceTask<impl Fn(&u64, ValuesIter<'_, u64>, &mut Emitter<u64, u64>, &Counters)>>,
+    ) {
+        let input: Vec<((), u64)> = (0..n).map(|i| ((), i)).collect();
+        let mapper = Arc::new(FnMapTask::new(
+            move |_k: (), v: u64, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(v % modulus, 1);
+            },
+        ));
+        let reducer = Arc::new(FnReduceTask::new(
+            |k: &u64, vals: ValuesIter<'_, u64>, out: &mut Emitter<u64, u64>, _c: &Counters| {
+                out.emit(*k, vals.map(|v| *v).sum());
+            },
+        ));
+        (input, mapper, reducer)
+    }
+
+    fn grouping() -> GroupFn<u64> {
+        Arc::new(|a: &u64, b: &u64| a == b)
+    }
+
+    fn part() -> Arc<HashPartitioner<u64>> {
+        Arc::new(HashPartitioner::new(|k: &u64| *k))
+    }
+
+    #[test]
+    fn dist_matches_serial_barrier_and_push() {
+        let (input, mapper, reducer) = histogram_job(600, 7);
+        let cfg = JobConfig::named("dist-hist").with_tasks(6, 3);
+        let serial = run_job(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            part(),
+            grouping(),
+            reducer.clone(),
+        );
+        for push in [PushMode::Barrier, PushMode::Push] {
+            let dist = DistScheduler::new(DistConfig::executors(4).with_push(push));
+            let got = dist.run(
+                &cfg,
+                input.clone(),
+                mapper.clone(),
+                part(),
+                grouping(),
+                reducer.clone(),
+            );
+            assert_eq!(serial.outputs, got.outputs);
+            assert_eq!(got.outcome, JobOutcome::Ok);
+            assert_eq!(
+                serial.counters.get(names::REDUCE_INPUT_RECORDS),
+                got.counters.get(names::REDUCE_INPUT_RECORDS),
+            );
+            assert_eq!(
+                serial.counters.get(names::MAP_OUTPUT_RECORDS),
+                got.counters.get(names::MAP_OUTPUT_RECORDS),
+            );
+        }
+    }
+
+    #[test]
+    fn killed_executor_resubmits_and_output_is_identical() {
+        let (input, mapper, reducer) = histogram_job(400, 5);
+        let cfg = JobConfig::named("dist-kill").with_tasks(6, 2);
+        let serial = run_job(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            part(),
+            grouping(),
+            reducer.clone(),
+        );
+        let dist = DistScheduler::new(
+            DistConfig::executors(2).with_kill(KillPlan { executor: 1, after_map_tasks: 1 }),
+        );
+        let got = dist.run(&cfg, input, mapper, part(), grouping(), reducer);
+        assert_eq!(serial.outputs, got.outputs);
+        assert_eq!(got.outcome, JobOutcome::Ok);
+        assert!(got.counters.get(names::EXECUTORS_LOST) >= 1);
+        assert!(got.counters.get(names::TASK_RETRIES) >= 1);
+        assert_eq!(
+            serial.counters.get(names::REDUCE_INPUT_RECORDS),
+            got.counters.get(names::REDUCE_INPUT_RECORDS),
+            "no runs may be lost across the resubmission"
+        );
+    }
+
+    #[test]
+    fn dropped_fetch_frames_are_retried_from_the_registry() {
+        let (input, mapper, reducer) = histogram_job(500, 9);
+        let cfg = JobConfig::named("dist-torn").with_tasks(5, 3);
+        let serial = run_job(
+            &cfg,
+            input.clone(),
+            mapper.clone(),
+            part(),
+            grouping(),
+            reducer.clone(),
+        );
+        let dist = DistScheduler::new(DistConfig::executors(4).with_fetch_drops(2));
+        let got = dist.run(&cfg, input, mapper, part(), grouping(), reducer);
+        assert_eq!(serial.outputs, got.outputs);
+        assert_eq!(got.outcome, JobOutcome::Ok);
+        assert_eq!(got.counters.get(names::TASKS_FAILED), 0);
+        assert_eq!(
+            serial.counters.get(names::REDUCE_INPUT_RECORDS),
+            got.counters.get(names::REDUCE_INPUT_RECORDS),
+        );
+    }
+}

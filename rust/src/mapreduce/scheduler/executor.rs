@@ -1,0 +1,611 @@
+//! Executor worker: runs map/reduce task bodies on behalf of the
+//! distributed scheduler ([`super::dist`]), communicating only via typed
+//! messages over a [`Transport`](super::transport::Transport).
+//!
+//! An executor owns a [`RunStore`] of the sealed map runs it produced,
+//! each registered upstream by *location* — `(executor_id, run_id)` — so
+//! reduce tasks on other executors fetch them over the data plane instead
+//! of receiving in-memory handles. A dedicated per-executor data-server
+//! thread answers [`FetchRequest`]s out of the store, so a control loop
+//! blocked on its own fetch can never deadlock a peer's.
+//!
+//! Reduce tasks accumulate sources as map tasks complete (the push
+//! dispatcher's first slice across the message boundary): `LaunchReduce
+//! { sealed: false }` opens a pending reduce, `AddSources` streams newly
+//! registered locations in (fetched eagerly, overlapping the map wave),
+//! and `SealReduce` merges everything in canonical map-task order and
+//! runs the reduce body inline. Barrier mode is the degenerate case —
+//! `LaunchReduce { sealed: true }` with the full source list.
+//!
+//! Failure semantics on the message path:
+//! - a panicking task body (including injected faults) reports
+//!   `TaskFailed`; the scheduler decides retry vs dead-letter,
+//! - a fetch that times out is retried with a fresh reply link up to a
+//!   budget (`DIST_FETCH_RETRIES`); exhaustion or a `Gone` reply reports
+//!   `FetchFailed` so the scheduler can re-run the lost map,
+//! - a [`KillPlan`] makes this executor silently disconnect after its
+//!   N-th completed map — the scheduler observes the dead link on its
+//!   next send and resubmits everything this executor held.
+
+use std::collections::{BTreeMap, HashMap};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::mapreduce::checkpoint::Manifest;
+use crate::mapreduce::counters::{names, Counters};
+use crate::mapreduce::engine::{
+    exec_map_task, exec_reduce_task, CombineFn, GroupFn, MapTaskOutput, ReduceTaskOutput,
+};
+use crate::mapreduce::fault::{FaultInjector, TaskPhase};
+use crate::mapreduce::sortspill::{next_run_id, Codec, ResolvedSpill, Run};
+use crate::mapreduce::trace::{JobTraceCtx, TraceEvent, TracePhase};
+use crate::mapreduce::types::{MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate};
+
+use super::transport::{LinkClass, RxLink, Transport, TxLink};
+
+/// Deterministic executor-loss injection: the named executor disconnects
+/// (drops its control link without a word) right after completing its
+/// `after_map_tasks`-th map task, leaving its registered runs
+/// unreachable. Used by `prop_exec.rs` and the `dist-smoke` CI leg to
+/// pin the resubmission path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillPlan {
+    /// Which executor dies (the scheduler requires ≥ 2 executors when set).
+    pub executor: usize,
+    /// How many map tasks it completes first.
+    pub after_map_tasks: usize,
+}
+
+/// Where a map task's sealed runs for one reduce partition live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct RunLocation {
+    pub map_task: usize,
+    /// Executor currently holding the runs.
+    pub executor: usize,
+    /// How many runs are registered for this (map, partition) pair; the
+    /// fetcher verifies the reply length against it.
+    pub runs: u32,
+}
+
+/// Scheduler → executor control frames.
+pub(crate) enum ToExecutor<KI, VI> {
+    LaunchMap {
+        task: usize,
+        attempt: u32,
+        split: Arc<Vec<(KI, VI)>>,
+    },
+    /// Open (or restart, on a higher attempt) a reduce task. `sealed`
+    /// means the source list is complete and the body runs immediately.
+    LaunchReduce {
+        task: usize,
+        attempt: u32,
+        sources: Vec<RunLocation>,
+        sealed: bool,
+    },
+    /// Stream newly registered sources into a pending reduce.
+    AddSources { task: usize, sources: Vec<RunLocation> },
+    /// The source list is complete; merge and run the reduce body.
+    SealReduce { task: usize },
+    /// Retract a speculation loser's registered runs.
+    DropRuns { task: usize, attempt: u32 },
+    /// Liveness probe; a failed send is how the scheduler detects loss.
+    Ping,
+    Shutdown,
+}
+
+/// Executor → scheduler control frames. Task outputs travel with their
+/// runs stripped ([`MapTaskOutput::take_runs`]) — only byte/record
+/// accounting crosses the control plane; the runs stay in the store.
+pub(crate) enum FromExecutor<KT, VT, KO, VO> {
+    Registered {
+        executor: usize,
+    },
+    MapDone {
+        executor: usize,
+        task: usize,
+        attempt: u32,
+        out: MapTaskOutput<KT, VT>,
+        run_counts: Vec<u32>,
+        run_ids: Vec<Vec<u64>>,
+        counters: Counters,
+    },
+    ReduceDone {
+        executor: usize,
+        task: usize,
+        attempt: u32,
+        out: ReduceTaskOutput<KO, VO>,
+        counters: Counters,
+        /// When this reduce attempt opened, seconds since job start —
+        /// feeds `reduce_first_start_secs`/overlap stats.
+        started_secs: f64,
+    },
+    TaskFailed {
+        executor: usize,
+        phase: TaskPhase,
+        task: usize,
+        attempt: u32,
+        message: String,
+    },
+    /// A fetch from `source` failed terminally (peer gone or retries
+    /// exhausted); the reduce attempt aborted and needs a relaunch once
+    /// the map is re-registered.
+    FetchFailed {
+        executor: usize,
+        task: usize,
+        attempt: u32,
+        source: RunLocation,
+    },
+}
+
+/// Data-plane request: "send me map task `map_task`'s runs for reduce
+/// partition `partition`". The reply travels over a per-request link so
+/// concurrent fetches never interleave.
+pub(crate) struct FetchRequest<T> {
+    pub map_task: usize,
+    pub partition: usize,
+    pub reply: TxLink<FetchReply<T>>,
+}
+
+pub(crate) enum FetchReply<T> {
+    /// The registered runs with their ids, in seal order.
+    Runs(Vec<(u64, Run<T>)>),
+    /// This executor no longer holds them (lost, retracted, or unknown).
+    Gone,
+}
+
+/// Sealed map runs held by one executor, keyed by map task, with one
+/// id-stamped run list per reduce partition. Shared between the control
+/// loop (inserts) and the data-server thread (lookups).
+pub(crate) struct RunStore<T> {
+    tasks: HashMap<usize, Vec<Vec<(u64, Run<T>)>>>,
+    /// Set when this executor "dies" under a [`KillPlan`]: the data
+    /// server answers `Gone` from then on, like a crashed peer would.
+    lost: bool,
+}
+
+impl<T> RunStore<T> {
+    fn new() -> Self {
+        RunStore { tasks: HashMap::new(), lost: false }
+    }
+
+    /// Register a map task's runs, assigning each a process-unique id.
+    /// Returns per-partition (run count, run ids) for the registry.
+    fn insert(&mut self, task: usize, buckets: Vec<Vec<Run<T>>>) -> (Vec<u32>, Vec<Vec<u64>>) {
+        let with_ids: Vec<Vec<(u64, Run<T>)>> = buckets
+            .into_iter()
+            .map(|runs| runs.into_iter().map(|r| (next_run_id(), r)).collect())
+            .collect();
+        let counts = with_ids.iter().map(|runs| runs.len() as u32).collect();
+        let ids = with_ids
+            .iter()
+            .map(|runs| runs.iter().map(|(id, _)| *id).collect())
+            .collect();
+        self.tasks.insert(task, with_ids);
+        (counts, ids)
+    }
+}
+
+/// Everything one executor worker needs; built by the scheduler, moved
+/// into the executor thread.
+pub(crate) struct ExecutorSpec<KI, VI, KT, VT, KO, VO>
+where
+    KT: SizeEstimate,
+    VT: SizeEstimate,
+    KO: SizeEstimate,
+    VO: SizeEstimate,
+{
+    pub id: usize,
+    pub num_reducers: usize,
+    pub rx_ctl: RxLink<ToExecutor<KI, VI>>,
+    pub tx_out: TxLink<FromExecutor<KT, VT, KO, VO>>,
+    pub rx_data: RxLink<FetchRequest<(KT, VT)>>,
+    /// Data-plane senders to every executor's run server, by executor id.
+    pub peers: Vec<TxLink<FetchRequest<(KT, VT)>>>,
+    pub mapper: Arc<dyn MapTaskFactory<KI, VI, KT, VT>>,
+    pub partitioner: Arc<dyn Partitioner<KT>>,
+    pub combine_fn: Option<CombineFn<KT, VT>>,
+    pub reducer: Arc<dyn ReduceTaskFactory<KT, VT, KO, VO>>,
+    pub grouping: GroupFn<KT>,
+    pub spill: Option<ResolvedSpill<(KT, VT)>>,
+    pub sort_budget: Option<usize>,
+    pub injector: Arc<FaultInjector>,
+    pub kill: Option<KillPlan>,
+    /// Restore-only checkpoint view: committed map tasks short-circuit to
+    /// their manifest files instead of re-executing.
+    pub manifest: Option<(Arc<Manifest>, Arc<dyn Codec<(KT, VT)>>)>,
+    pub jctx: Option<JobTraceCtx>,
+    /// Job start instant — `started_secs` stamps are relative to it.
+    pub t0: Instant,
+    pub fetch_attempts: u32,
+    pub fetch_timeout: Duration,
+}
+
+/// One reduce task accumulating fetched sources until sealed. The
+/// `BTreeMap` keeps map-task-ascending order, which is exactly the
+/// canonical `transpose_runs` merge order the serial path uses — that
+/// ordering is what keeps dist output byte-identical.
+struct PendingReduce<T> {
+    attempt: u32,
+    started_secs: f64,
+    counters: Counters,
+    fetched: BTreeMap<usize, Vec<Run<T>>>,
+}
+
+fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked".to_string()
+    }
+}
+
+/// The executor control loop. Returns when told to `Shutdown`, when the
+/// scheduler's control link closes, or when its [`KillPlan`] fires.
+pub(crate) fn run_executor<KI, VI, KT, VT, KO, VO, TP>(
+    spec: ExecutorSpec<KI, VI, KT, VT, KO, VO>,
+    transport: TP,
+) where
+    KI: Clone + Send + Sync + 'static,
+    VI: Clone + Send + Sync + 'static,
+    KT: Ord + Clone + Send + Sync + SizeEstimate + 'static,
+    VT: Clone + Send + Sync + SizeEstimate + 'static,
+    KO: Send + SizeEstimate + 'static,
+    VO: Send + SizeEstimate + 'static,
+    TP: Transport,
+{
+    let ExecutorSpec {
+        id,
+        num_reducers: r,
+        rx_ctl,
+        tx_out,
+        rx_data,
+        peers,
+        mapper,
+        partitioner,
+        combine_fn,
+        reducer,
+        grouping,
+        spill,
+        sort_budget,
+        injector,
+        kill,
+        manifest,
+        jctx,
+        t0,
+        fetch_attempts,
+        fetch_timeout,
+    } = spec;
+
+    let store: Arc<Mutex<RunStore<(KT, VT)>>> = Arc::new(Mutex::new(RunStore::new()));
+
+    // Data server: answers peers' fetch requests independently of the
+    // control loop, so an executor busy in a task body still serves
+    // shuffle data. Exits when the last peer sender is dropped.
+    {
+        let store = Arc::clone(&store);
+        thread::Builder::new()
+            .name(format!("snmr-exec{id}-data"))
+            .spawn(move || {
+                while let Ok(req) = rx_data.recv() {
+                    let reply = {
+                        let s = store.lock().expect("run store poisoned");
+                        if s.lost {
+                            FetchReply::Gone
+                        } else {
+                            match s.tasks.get(&req.map_task) {
+                                Some(buckets) if req.partition < buckets.len() => {
+                                    FetchReply::Runs(
+                                        buckets[req.partition]
+                                            .iter()
+                                            .map(|(rid, run)| (*rid, run.clone()))
+                                            .collect(),
+                                    )
+                                }
+                                _ => FetchReply::Gone,
+                            }
+                        }
+                    };
+                    let _ = req.reply.send(reply);
+                }
+            })
+            .expect("spawn executor data server");
+    }
+
+    let _ = tx_out.send(FromExecutor::Registered { executor: id });
+
+    // Fetch every not-yet-held source into `p`; on terminal failure
+    // reports `FetchFailed` and returns false (caller drops the pending).
+    let fetch_sources = |p: &mut PendingReduce<(KT, VT)>,
+                         task: usize,
+                         sources: &[RunLocation]|
+     -> bool {
+        for source in sources {
+            if p.fetched.contains_key(&source.map_task) {
+                continue;
+            }
+            if source.runs == 0 {
+                // Nothing to move; record the source as satisfied.
+                p.fetched.insert(source.map_task, Vec::new());
+                continue;
+            }
+            if source.executor == id {
+                let runs = {
+                    let s = store.lock().expect("run store poisoned");
+                    if s.lost {
+                        None
+                    } else {
+                        s.tasks.get(&source.map_task).and_then(|buckets| {
+                            buckets
+                                .get(task)
+                                .map(|rs| rs.iter().map(|(_, run)| run.clone()).collect::<Vec<_>>())
+                        })
+                    }
+                };
+                match runs {
+                    Some(runs) if runs.len() as u32 == source.runs => {
+                        p.counters.inc(names::DIST_LOCAL_FETCHES);
+                        p.fetched.insert(source.map_task, runs);
+                        continue;
+                    }
+                    _ => {
+                        let _ = tx_out.send(FromExecutor::FetchFailed {
+                            executor: id,
+                            task,
+                            attempt: p.attempt,
+                            source: *source,
+                        });
+                        return false;
+                    }
+                }
+            }
+            // Remote: request/reply over the data plane, retrying with a
+            // fresh reply link on timeout or a torn (dropped-frame) link.
+            let mut attempts_left = fetch_attempts.max(1);
+            let fetched = loop {
+                let (reply_tx, reply_rx) =
+                    transport.link::<FetchReply<(KT, VT)>>(LinkClass::Data);
+                let sent = peers[source.executor]
+                    .send(FetchRequest {
+                        map_task: source.map_task,
+                        partition: task,
+                        reply: reply_tx,
+                    })
+                    .is_ok();
+                if sent {
+                    match reply_rx.recv_timeout(fetch_timeout) {
+                        Ok(Some(FetchReply::Runs(runs)))
+                            if runs.len() as u32 == source.runs =>
+                        {
+                            break Some(runs.into_iter().map(|(_, run)| run).collect::<Vec<_>>());
+                        }
+                        Ok(Some(_)) => break None, // Gone or short reply: the peer lost the runs
+                        Ok(None) | Err(_) => {}    // timeout / torn link: retry below
+                    }
+                } else {
+                    break None; // peer's data server is gone
+                }
+                attempts_left -= 1;
+                if attempts_left == 0 {
+                    break None;
+                }
+                p.counters.inc(names::DIST_FETCH_RETRIES);
+            };
+            match fetched {
+                Some(runs) => {
+                    p.counters.inc(names::DIST_REMOTE_FETCHES);
+                    if let Some(j) = &jctx {
+                        j.task(TracePhase::Reduce, task, p.attempt).emit(TraceEvent::RunFetched {
+                            executor: source.executor as u64,
+                            records: runs.iter().map(|run| run.len() as u64).sum(),
+                        });
+                    }
+                    p.fetched.insert(source.map_task, runs);
+                }
+                None => {
+                    let _ = tx_out.send(FromExecutor::FetchFailed {
+                        executor: id,
+                        task,
+                        attempt: p.attempt,
+                        source: *source,
+                    });
+                    return false;
+                }
+            }
+        }
+        true
+    };
+
+    // Merge the fetched sources in map-task order and run the reduce body.
+    let finish_reduce = |task: usize, p: PendingReduce<(KT, VT)>| {
+        let PendingReduce { attempt, started_secs, counters, fetched } = p;
+        let runs: Vec<Run<(KT, VT)>> = fetched.into_values().flatten().collect();
+        let tctx = jctx.as_ref().map(|j| j.task(TracePhase::Reduce, task, attempt));
+        if let Some(t) = &tctx {
+            t.emit(TraceEvent::AttemptStarted);
+        }
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            injector.fire_attempt(TaskPhase::Reduce, task, attempt, tctx.as_ref());
+            exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &counters, tctx.as_ref())
+        }));
+        match result {
+            Ok(out) => {
+                if let Some(t) = &tctx {
+                    t.emit(TraceEvent::AttemptFinished);
+                }
+                let _ = tx_out.send(FromExecutor::ReduceDone {
+                    executor: id,
+                    task,
+                    attempt,
+                    out,
+                    counters,
+                    started_secs,
+                });
+            }
+            Err(payload) => {
+                let message = panic_text(payload);
+                if let Some(t) = &tctx {
+                    t.emit(TraceEvent::AttemptPanicked { message: message.clone() });
+                }
+                let _ = tx_out.send(FromExecutor::TaskFailed {
+                    executor: id,
+                    phase: TaskPhase::Reduce,
+                    task,
+                    attempt,
+                    message,
+                });
+            }
+        }
+    };
+
+    let mut maps_done = 0usize;
+    let mut pending: HashMap<usize, PendingReduce<(KT, VT)>> = HashMap::new();
+
+    loop {
+        let msg = match rx_ctl.recv() {
+            Ok(m) => m,
+            Err(_) => return, // scheduler gone
+        };
+        match msg {
+            ToExecutor::Ping => {}
+            ToExecutor::Shutdown => return,
+            ToExecutor::DropRuns { task, attempt } => {
+                let removed = store.lock().expect("run store poisoned").tasks.remove(&task);
+                if let (Some(j), Some(buckets)) = (&jctx, removed) {
+                    for (partition, runs) in buckets.iter().enumerate() {
+                        if !runs.is_empty() {
+                            j.task(TracePhase::Map, task, attempt)
+                                .emit(TraceEvent::RunRetracted { partition });
+                        }
+                    }
+                }
+            }
+            ToExecutor::LaunchMap { task, attempt, split } => {
+                let counters = Counters::new();
+                let mut restored = None;
+                if let Some((man, codec)) = &manifest {
+                    restored = man.restore_map(task, r, codec);
+                }
+                let completed = if let Some(mut out) = restored {
+                    counters.inc(names::TASKS_RESUMED);
+                    if let Some(j) = &jctx {
+                        j.task(TracePhase::Map, task, attempt).emit(TraceEvent::CheckpointRestore);
+                    }
+                    let (run_counts, run_ids) =
+                        store.lock().expect("run store poisoned").insert(task, out.take_runs());
+                    let _ = tx_out.send(FromExecutor::MapDone {
+                        executor: id,
+                        task,
+                        attempt,
+                        out,
+                        run_counts,
+                        run_ids,
+                        counters,
+                    });
+                    true
+                } else {
+                    let tctx = jctx.as_ref().map(|j| j.task(TracePhase::Map, task, attempt));
+                    if let Some(t) = &tctx {
+                        t.emit(TraceEvent::AttemptStarted);
+                    }
+                    let split_data = (*split).clone();
+                    let result = catch_unwind(AssertUnwindSafe(|| {
+                        injector.fire_attempt(TaskPhase::Map, task, attempt, tctx.as_ref());
+                        exec_map_task(
+                            split_data,
+                            r,
+                            sort_budget,
+                            spill.as_ref(),
+                            mapper.as_ref(),
+                            partitioner.as_ref(),
+                            combine_fn.as_ref(),
+                            &counters,
+                            None,
+                            tctx.as_ref(),
+                        )
+                    }));
+                    match result {
+                        Ok(mut out) => {
+                            if let Some(t) = &tctx {
+                                t.emit(TraceEvent::AttemptFinished);
+                            }
+                            let (run_counts, run_ids) = store
+                                .lock()
+                                .expect("run store poisoned")
+                                .insert(task, out.take_runs());
+                            let _ = tx_out.send(FromExecutor::MapDone {
+                                executor: id,
+                                task,
+                                attempt,
+                                out,
+                                run_counts,
+                                run_ids,
+                                counters,
+                            });
+                            true
+                        }
+                        Err(payload) => {
+                            let message = panic_text(payload);
+                            if let Some(t) = &tctx {
+                                t.emit(TraceEvent::AttemptPanicked { message: message.clone() });
+                            }
+                            let _ = tx_out.send(FromExecutor::TaskFailed {
+                                executor: id,
+                                phase: TaskPhase::Map,
+                                task,
+                                attempt,
+                                message,
+                            });
+                            false
+                        }
+                    }
+                };
+                if completed {
+                    maps_done += 1;
+                    if let Some(k) = kill {
+                        if k.executor == id && maps_done >= k.after_map_tasks {
+                            // Die: registered runs become unreachable and
+                            // the dropped control link is the scheduler's
+                            // loss signal.
+                            store.lock().expect("run store poisoned").lost = true;
+                            return;
+                        }
+                    }
+                }
+            }
+            ToExecutor::LaunchReduce { task, attempt, sources, sealed } => {
+                // A relaunch (higher attempt) replaces any stale pending.
+                pending.remove(&task);
+                let mut p = PendingReduce {
+                    attempt,
+                    started_secs: t0.elapsed().as_secs_f64(),
+                    counters: Counters::new(),
+                    fetched: BTreeMap::new(),
+                };
+                if !fetch_sources(&mut p, task, &sources) {
+                    continue;
+                }
+                if sealed {
+                    finish_reduce(task, p);
+                } else {
+                    pending.insert(task, p);
+                }
+            }
+            ToExecutor::AddSources { task, sources } => {
+                if let Some(mut p) = pending.remove(&task) {
+                    if fetch_sources(&mut p, task, &sources) {
+                        pending.insert(task, p);
+                    }
+                }
+            }
+            ToExecutor::SealReduce { task } => {
+                if let Some(p) = pending.remove(&task) {
+                    finish_reduce(task, p);
+                }
+            }
+        }
+    }
+}

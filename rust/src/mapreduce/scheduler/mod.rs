@@ -60,10 +60,31 @@
 //! reference baseline; see the [`push`](super::push) module docs for the
 //! ordering and speculation-retraction rules, and
 //! [`JobStats::overlap_secs`] for the measured effect.
+//!
+//! ## Scheduler/executor split
+//!
+//! [`DistScheduler`] is the message-passing sibling of this in-process
+//! scheduler: an event loop owning the job/task state machines
+//! ([`dist`]-module `ControlState`), N executor workers
+//! ([`executor`](self::executor)) running the same shared task bodies,
+//! and a [`transport`](self::transport) layer carrying every control and
+//! data frame between them. Intermediates are addressed by *location* —
+//! executors register sealed runs as `(executor, run ids)` and reduce
+//! tasks fetch them over the data plane — so push dispatch, speculation
+//! retraction, bounded retry, dead-lettering, and executor-loss
+//! resubmission all ride the same typed message protocol. The in-process
+//! paths here remain the byte-identical reference (`tests/prop_exec.rs`
+//! pins dist against serial the same way `prop_sched.rs` pins this one).
 
+mod dist;
+pub(crate) mod executor;
 mod speculate;
+pub mod transport;
 
+pub use dist::{DistConfig, DistScheduler};
+pub use executor::KillPlan;
 pub use speculate::{SpecMode, SpecPolicy};
+pub use transport::{ChannelTransport, LinkClass, LinkClosed, Transport, TransportFaults};
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
@@ -1293,6 +1314,9 @@ pub enum Exec<'a> {
     Serial,
     /// Tasks on the scheduler's shared slots (inline on this thread).
     Scheduler(&'a JobScheduler),
+    /// Tasks on a message-passing executor cluster ([`DistScheduler`]):
+    /// the scheduler/executor split with location-addressed shuffle.
+    Dist(&'a DistScheduler),
 }
 
 impl Exec<'_> {
@@ -1317,6 +1341,7 @@ impl Exec<'_> {
         match self {
             Exec::Serial => run_job(config, input, mapper, partitioner, grouping, reducer),
             Exec::Scheduler(s) => s.run(config, input, mapper, partitioner, grouping, reducer),
+            Exec::Dist(d) => d.run(config, input, mapper, partitioner, grouping, reducer),
         }
     }
 
@@ -1351,6 +1376,15 @@ impl Exec<'_> {
                 combiner,
             ),
             Exec::Scheduler(s) => s.run_with_combiner(
+                config,
+                input,
+                mapper,
+                partitioner,
+                grouping,
+                reducer,
+                combiner,
+            ),
+            Exec::Dist(d) => d.run_with_combiner(
                 config,
                 input,
                 mapper,

@@ -1,0 +1,251 @@
+//! Typed message transport between the scheduler and its executors.
+//!
+//! The distributed control plane ([`super::dist`]) never shares mutable
+//! state with its workers: every interaction is a typed message sent over
+//! a *link* obtained from a [`Transport`]. The only backend today is
+//! [`ChannelTransport`] (std `mpsc` channels inside one process), but the
+//! trait boundary is the seam where a socket backend drops in later — the
+//! scheduler and executor loops are written against [`TxLink`]/[`RxLink`]
+//! and never see the channel types.
+//!
+//! Links come in two classes:
+//!
+//! - [`LinkClass::Control`] — scheduler↔executor task protocol
+//!   (launch/complete/fail/ping). Control frames are never dropped by the
+//!   fault hooks; losing them would wedge the state machine rather than
+//!   exercise a recovery path.
+//! - [`LinkClass::Data`] — the shuffle plane (fetch requests and run
+//!   replies). [`TransportFaults::drop_data_sends`] silently discards the
+//!   first N data-class frames, which is how `tests/prop_exec.rs` forces a
+//!   reduce task to time out mid-fetch and retry from the registry.
+//!
+//! A send can fail with [`LinkClosed`] when the peer is gone (its receiver
+//! was dropped). The scheduler uses exactly this signal — a failed
+//! `Ping` — to detect a dead executor and resubmit its tasks.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Which plane a link belongs to; see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Scheduler↔executor task protocol; never fault-dropped.
+    Control,
+    /// Shuffle fetch requests/replies; subject to [`TransportFaults`].
+    Data,
+}
+
+/// The peer's end of a link is gone; the message was not delivered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkClosed;
+
+impl std::fmt::Display for LinkClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transport link closed")
+    }
+}
+
+impl std::error::Error for LinkClosed {}
+
+/// Sending half of a typed link. Cheap to clone; clones share the
+/// underlying connection.
+pub struct TxLink<M> {
+    send: Arc<dyn Fn(M) -> Result<(), LinkClosed> + Send + Sync>,
+}
+
+impl<M> Clone for TxLink<M> {
+    fn clone(&self) -> Self {
+        TxLink { send: Arc::clone(&self.send) }
+    }
+}
+
+impl<M> TxLink<M> {
+    /// Deliver one frame, or report the peer gone.
+    pub fn send(&self, msg: M) -> Result<(), LinkClosed> {
+        (self.send)(msg)
+    }
+}
+
+/// Backend hook behind [`RxLink`]; one impl per transport backend.
+pub trait LinkReceiver<M>: Send {
+    /// Block until a frame arrives or the sending side is fully dropped.
+    fn recv(&self) -> Result<M, LinkClosed>;
+    /// Wait up to `timeout`; `Ok(None)` means no frame yet (link still up).
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<M>, LinkClosed>;
+}
+
+/// Receiving half of a typed link.
+pub struct RxLink<M> {
+    inner: Box<dyn LinkReceiver<M>>,
+}
+
+impl<M> RxLink<M> {
+    /// Block until a frame arrives or every sender is gone.
+    pub fn recv(&self) -> Result<M, LinkClosed> {
+        self.inner.recv()
+    }
+
+    /// Wait up to `timeout` for a frame; `Ok(None)` on timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<Option<M>, LinkClosed> {
+        self.inner.recv_timeout(timeout)
+    }
+}
+
+/// Factory for typed links. Not object-safe (the link method is generic
+/// over the message type), so the control plane is generic over `T:
+/// Transport` rather than holding a `dyn Transport`.
+pub trait Transport: Send + Sync {
+    /// Open a fresh one-directional link carrying messages of type `M`.
+    fn link<M: Send + 'static>(&self, class: LinkClass) -> (TxLink<M>, RxLink<M>);
+}
+
+/// Deterministic fault hooks applied by a transport.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportFaults {
+    /// Silently discard the first N [`LinkClass::Data`] sends across the
+    /// whole transport (the send still returns `Ok` — the frame is "lost
+    /// in flight", exactly like a dropped packet).
+    pub drop_data_sends: u32,
+}
+
+/// In-process transport backed by std `mpsc` channels. Clones share the
+/// fault budget, so the scheduler and every executor see one global
+/// drop counter.
+#[derive(Clone)]
+pub struct ChannelTransport {
+    drops_left: Arc<AtomicU64>,
+}
+
+impl ChannelTransport {
+    pub fn new() -> Self {
+        Self::with_faults(TransportFaults::default())
+    }
+
+    pub fn with_faults(faults: TransportFaults) -> Self {
+        ChannelTransport { drops_left: Arc::new(AtomicU64::new(u64::from(faults.drop_data_sends))) }
+    }
+}
+
+impl Default for ChannelTransport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Consume one drop token if any remain; `true` means "lose this frame".
+fn take_drop(budget: &AtomicU64) -> bool {
+    let mut cur = budget.load(Ordering::Relaxed);
+    while cur > 0 {
+        match budget.compare_exchange_weak(cur, cur - 1, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(seen) => cur = seen,
+        }
+    }
+    false
+}
+
+struct ChannelReceiver<M> {
+    rx: mpsc::Receiver<M>,
+}
+
+impl<M: Send> LinkReceiver<M> for ChannelReceiver<M> {
+    fn recv(&self) -> Result<M, LinkClosed> {
+        self.rx.recv().map_err(|_| LinkClosed)
+    }
+
+    fn recv_timeout(&self, timeout: Duration) -> Result<Option<M>, LinkClosed> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(m) => Ok(Some(m)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(LinkClosed),
+        }
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn link<M: Send + 'static>(&self, class: LinkClass) -> (TxLink<M>, RxLink<M>) {
+        let (tx, rx) = mpsc::channel::<M>();
+        // `mpsc::Sender` is only `Sync` on newer toolchains; the mutex
+        // keeps the closure `Send + Sync` everywhere without cloning
+        // senders per call site.
+        let tx = Mutex::new(tx);
+        let drops = match class {
+            LinkClass::Data => Some(Arc::clone(&self.drops_left)),
+            LinkClass::Control => None,
+        };
+        let send = Arc::new(move |msg: M| {
+            if let Some(budget) = &drops {
+                if take_drop(budget) {
+                    // Frame lost in flight: the sender cannot tell.
+                    return Ok(());
+                }
+            }
+            tx.lock().expect("transport sender poisoned").send(msg).map_err(|_| LinkClosed)
+        });
+        (TxLink { send }, RxLink { inner: Box::new(ChannelReceiver { rx }) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_clone_share_one_link() {
+        let t = ChannelTransport::new();
+        let (tx, rx) = t.link::<u32>(LinkClass::Control);
+        let tx2 = tx.clone();
+        tx.send(1).unwrap();
+        tx2.send(2).unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+    }
+
+    #[test]
+    fn closed_link_reports_on_send_and_recv() {
+        let t = ChannelTransport::new();
+        let (tx, rx) = t.link::<u32>(LinkClass::Control);
+        drop(rx);
+        assert_eq!(tx.send(7), Err(LinkClosed));
+
+        let (tx, rx) = t.link::<u32>(LinkClass::Control);
+        drop(tx);
+        assert_eq!(rx.recv(), Err(LinkClosed));
+    }
+
+    #[test]
+    fn recv_timeout_distinguishes_empty_from_closed() {
+        let t = ChannelTransport::new();
+        let (tx, rx) = t.link::<u32>(LinkClass::Control);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(1)).unwrap(), None);
+        tx.send(9).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(1)).unwrap(), Some(9));
+        drop(tx);
+        assert_eq!(rx.recv_timeout(Duration::from_millis(1)), Err(LinkClosed));
+    }
+
+    #[test]
+    fn fault_budget_drops_first_data_sends_only() {
+        let t = ChannelTransport::with_faults(TransportFaults { drop_data_sends: 2 });
+        let (ctl_tx, ctl_rx) = t.link::<u32>(LinkClass::Control);
+        let (data_tx, data_rx) = t.link::<u32>(LinkClass::Data);
+
+        // Control frames are never dropped.
+        ctl_tx.send(1).unwrap();
+        assert_eq!(ctl_rx.recv().unwrap(), 1);
+
+        // First two data frames vanish silently; the third arrives.
+        data_tx.send(10).unwrap();
+        data_tx.send(11).unwrap();
+        data_tx.send(12).unwrap();
+        assert_eq!(data_rx.recv().unwrap(), 12);
+        assert_eq!(data_rx.recv_timeout(Duration::from_millis(1)).unwrap(), None);
+
+        // The budget is shared across links of the same transport.
+        let (d2_tx, d2_rx) = t.link::<u32>(LinkClass::Data);
+        d2_tx.send(20).unwrap();
+        assert_eq!(d2_rx.recv().unwrap(), 20);
+    }
+}

@@ -75,6 +75,14 @@ pub struct ClusterSpec {
     /// the same factor — one observable per job cannot separate them, so
     /// the fit preserves the row's CPU-vs-bytes mix.  `1.0` by default.
     pub shuffle_cpu_scale: f64,
+    /// Per-executor network links for the distributed control plane
+    /// ([`DistScheduler`](crate::mapreduce::scheduler::DistScheduler)):
+    /// when > 0, reducer `j`'s shuffle bytes flow over link `j % links`
+    /// (matching the dist scheduler's round-robin reduce placement) and
+    /// the shuffle bottleneck is the most-loaded *link* rather than the
+    /// most-loaded node NIC.  `0` keeps the legacy per-node model so
+    /// existing calibrations stay bit-identical.
+    pub executor_links: usize,
 }
 
 impl ClusterSpec {
@@ -98,7 +106,16 @@ impl ClusterSpec {
             map_secs_scale: 1.0,
             reduce_secs_scale: 1.0,
             shuffle_cpu_scale: 1.0,
+            executor_links: 0,
         }
+    }
+
+    /// Model `n` distributed executors, each with its own network link
+    /// (see [`ClusterSpec::executor_links`]); `0` restores the legacy
+    /// per-node shuffle model.
+    pub fn with_executor_links(mut self, n: usize) -> Self {
+        self.executor_links = n;
+        self
     }
 
     /// Toggle speculative execution.
@@ -597,16 +614,31 @@ pub fn simulate_job_mode(
     let compress_s = raw_mb * profile.compress_secs_per_mb * spec.shuffle_cpu_scale
         / spec.map_slots().max(1) as f64;
     // shuffle: every reducer pulls its bytes over its node's NIC; reducers
-    // run spread over nodes, so the bottleneck is the max per-node inflow
+    // run spread over nodes, so the bottleneck is the max per-node inflow.
+    // With executor_links > 0 the topology is the dist scheduler's
+    // instead: reducer j lands on executor j % links (its round-robin
+    // placement) and the bottleneck is the most-loaded executor link.
     let reduce_slots = spec.reduce_slots().max(1);
-    let mut per_node_bytes = vec![0u64; spec.nodes];
-    for (j, &b) in profile.shuffle_bytes_per_reducer.iter().enumerate() {
-        per_node_bytes[(j % reduce_slots) % spec.nodes] += b;
-    }
-    let shuffle_s = per_node_bytes
-        .iter()
-        .map(|&b| b as f64 / spec.net_bytes_per_s)
-        .fold(0.0, f64::max);
+    let shuffle_s = if spec.executor_links > 0 {
+        let links = spec.executor_links;
+        let mut per_link_bytes = vec![0u64; links];
+        for (j, &b) in profile.shuffle_bytes_per_reducer.iter().enumerate() {
+            per_link_bytes[j % links] += b;
+        }
+        per_link_bytes
+            .iter()
+            .map(|&b| b as f64 / spec.net_bytes_per_s)
+            .fold(0.0, f64::max)
+    } else {
+        let mut per_node_bytes = vec![0u64; spec.nodes];
+        for (j, &b) in profile.shuffle_bytes_per_reducer.iter().enumerate() {
+            per_node_bytes[(j % reduce_slots) % spec.nodes] += b;
+        }
+        per_node_bytes
+            .iter()
+            .map(|&b| b as f64 / spec.net_bytes_per_s)
+            .fold(0.0, f64::max)
+    };
     let decompress_s =
         raw_mb * profile.decompress_secs_per_mb * spec.shuffle_cpu_scale / reduce_slots as f64;
     let reduce_secs = scaled_secs(&profile.reduce_task_secs, spec.reduce_secs_scale);

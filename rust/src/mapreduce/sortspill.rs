@@ -684,6 +684,16 @@ pub enum Run<T> {
     Spilled(RunFile<T>),
 }
 
+/// Process-unique id for a sealed run.  The distributed shuffle registry
+/// addresses map outputs by *location* — `(executor_id, run_id)` — so a
+/// reduce task can fetch a specific run from whichever executor holds it
+/// instead of receiving an in-memory handle.
+pub(crate) fn next_run_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
 impl<T> Run<T> {
     pub fn len(&self) -> usize {
         match self {

@@ -51,7 +51,8 @@
 //! | `event`    | string          | snake-case [`TraceEvent`] kind                |
 //!
 //! Payload-carrying events add their fields flat on the same object:
-//! `partition`, `records`, `file_bytes`, `late_runs`, `message`, `kind`.
+//! `partition`, `records`, `file_bytes`, `late_runs`, `message`, `kind`,
+//! `executor`.
 
 use std::fmt;
 use std::hash::{Hash, Hasher};
@@ -138,6 +139,16 @@ pub enum TraceEvent {
     /// The deterministic fault injector fired on this attempt
     /// (`kind` is `"panic"` or `"stall"`).
     FaultInjected { kind: &'static str },
+    /// An executor worker joined the distributed control plane
+    /// (job-scoped, like the wave stamps).
+    ExecutorRegistered { executor: u64 },
+    /// The distributed scheduler declared an executor dead (failed
+    /// control send or terminal fetch failure) and resubmitted its tasks
+    /// (job-scoped).
+    ExecutorLost { executor: u64 },
+    /// A reduce task fetched one map source's runs from peer `executor`
+    /// over the data plane.
+    RunFetched { executor: u64, records: u64 },
 }
 
 impl TraceEvent {
@@ -166,6 +177,9 @@ impl TraceEvent {
             TraceEvent::CheckpointRestore => "checkpoint_restore",
             TraceEvent::DeadLettered { .. } => "dead_lettered",
             TraceEvent::FaultInjected { .. } => "fault_injected",
+            TraceEvent::ExecutorRegistered { .. } => "executor_registered",
+            TraceEvent::ExecutorLost { .. } => "executor_lost",
+            TraceEvent::RunFetched { .. } => "run_fetched",
         }
     }
 }
@@ -248,6 +262,14 @@ impl TraceRecord {
             }
             TraceEvent::FaultInjected { kind } => {
                 fields.push(("kind", Json::str(*kind)));
+            }
+            TraceEvent::ExecutorRegistered { executor }
+            | TraceEvent::ExecutorLost { executor } => {
+                fields.push(("executor", Json::num(*executor as f64)));
+            }
+            TraceEvent::RunFetched { executor, records } => {
+                fields.push(("executor", Json::num(*executor as f64)));
+                fields.push(("records", Json::num(*records as f64)));
             }
             _ => {}
         }
@@ -603,6 +625,15 @@ mod tests {
                 "dead_lettered",
             ),
             (TraceEvent::FaultInjected { kind: "panic" }, "fault_injected"),
+            (
+                TraceEvent::ExecutorRegistered { executor: 3 },
+                "executor_registered",
+            ),
+            (TraceEvent::ExecutorLost { executor: 3 }, "executor_lost"),
+            (
+                TraceEvent::RunFetched { executor: 3, records: 17 },
+                "run_fetched",
+            ),
         ];
         for (ev, want) in cases {
             assert_eq!(ev.kind(), want);

@@ -420,6 +420,19 @@ impl MetricsSpec {
         jm
     }
 
+    /// Open the per-executor handle lane the distributed scheduler
+    /// updates in-line (`executor.<id>.*` names).  Lanes are plain
+    /// registered metrics, so they flow into [`EngineSnapshot`] samples
+    /// and the dashboard without any schema change.
+    pub fn executor_lane(&self, id: usize) -> ExecutorLane {
+        ExecutorLane {
+            in_flight: self.gauge(&format!("executor.{id}.tasks_in_flight")),
+            tasks_done: self.counter(&format!("executor.{id}.tasks_done")),
+            runs_held: self.gauge(&format!("executor.{id}.runs_held")),
+            lost: self.counter(&format!("executor.{id}.lost")),
+        }
+    }
+
     /// Fold a finished job's final [`Counters`](crate::mapreduce::Counters)
     /// and task-duration histograms into the registry, so registry
     /// counters agree with the job's `Counters` snapshot and the
@@ -604,6 +617,20 @@ impl fmt::Debug for MetricsSpec {
             .field("samples", &self.inner.ring.lock().unwrap().len())
             .finish()
     }
+}
+
+/// Per-executor handle lane for the distributed control plane: task
+/// throughput, in-flight load, shuffle-registry footprint, and loss
+/// events, one set of `executor.<id>.*` metrics per worker.
+pub struct ExecutorLane {
+    /// Tasks currently dispatched to this executor and not yet resolved.
+    pub in_flight: Gauge,
+    /// Map + reduce completions this executor reported.
+    pub tasks_done: Counter,
+    /// Sealed runs currently registered at this executor's location.
+    pub runs_held: Gauge,
+    /// Times the scheduler declared this executor dead.
+    pub lost: Counter,
 }
 
 /// Per-job handle bundle the scheduler updates in-line.  Creating one

@@ -1,0 +1,236 @@
+//! Distributed-executor equivalence (ISSUE 9 acceptance).
+//!
+//! Every SN variant runs on the message-passing control plane — a
+//! [`DistScheduler`] event loop driving 4 channel-transport executors
+//! with a location-addressed shuffle — and must reproduce the serial
+//! engine's output byte-identically: barrier and push, in-memory and
+//! disk-backed runs, under injected task panics, a seeded executor kill
+//! mid-wave, and dropped data-plane frames that force reduce tasks to
+//! re-fetch their sources from the shuffle registry.
+
+use std::sync::Arc;
+
+use snmr::data::skew::zipf_skew_block_keys;
+use snmr::er::blockkey::TitlePrefixKey;
+use snmr::er::entity::Entity;
+use snmr::mapreduce::counters::names;
+use snmr::mapreduce::scheduler::{DistConfig, DistScheduler, Exec, KillPlan};
+use snmr::mapreduce::{FaultPlan, TempSpillDir};
+use snmr::sn::balance::pair_balanced_min_size;
+use snmr::sn::loadbalance::BalanceStrategy;
+use snmr::sn::types::{SnConfig, SnMode, SnResult, SnSpill};
+use snmr::sn::{jobsn, repsn, srp, standard_blocking};
+use snmr::util::prop::Cases;
+use snmr::util::rng::Rng;
+use snmr::{prop_assert, prop_assert_eq};
+
+/// Zipf block-key corpus (same shape as `prop_fault`): skewed blocks so
+/// map tasks finish at staggered times and partitions fill unevenly.
+fn corpus(rng: &mut Rng, n: usize) -> Vec<Entity> {
+    let mut ids: Vec<u64> = (0..(2 * n) as u64).collect();
+    rng.shuffle(&mut ids);
+    let mut entities: Vec<Entity> = (0..n)
+        .map(|i| {
+            Entity::new(
+                ids[i],
+                &format!("xx parallel sorted neighborhood {i}"),
+                &"entity resolution with mapreduce ".repeat(2),
+            )
+        })
+        .collect();
+    zipf_skew_block_keys(&mut entities, rng.range(8, 40), 1.3, rng.next_u64());
+    entities
+}
+
+fn base_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConfig {
+    let bk = TitlePrefixKey::new(2);
+    let partitioner = pair_balanced_min_size(entities, &bk, r, w);
+    SnConfig {
+        window: w,
+        num_map_tasks: rng.range(2, 7),
+        workers: rng.range(1, 4),
+        partitioner: Arc::new(partitioner),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+        sort_buffer_records: Some(rng.range(8, 64)),
+        balance: BalanceStrategy::None,
+        spill: None,
+        push: false,
+        faults: None,
+        max_task_retries: None,
+        trace: None,
+    }
+}
+
+type VariantFn = fn(&[Entity], &SnConfig, Exec<'_>) -> anyhow::Result<SnResult>;
+
+/// Every SN variant behind one `(entities, cfg, exec)` signature.  The
+/// balanced strategies ride on `repsn::run_on`, which dispatches to the
+/// BDM two-job pipeline when `cfg.balance` is set — on the distributed
+/// path each chained job spins up its own executor fleet.
+fn variants() -> Vec<(&'static str, VariantFn, BalanceStrategy)> {
+    vec![
+        ("standard_blocking", standard_blocking::run_on, BalanceStrategy::None),
+        ("srp", srp::run_on, BalanceStrategy::None),
+        ("jobsn", jobsn::run_on, BalanceStrategy::None),
+        ("repsn", repsn::run_on, BalanceStrategy::None),
+        ("blocksplit", repsn::run_on, BalanceStrategy::BlockSplit),
+        ("pairrange", repsn::run_on, BalanceStrategy::PairRange),
+    ]
+}
+
+/// The headline property: every SN variant on a 4-executor channel
+/// control plane — barrier and push, in-memory and spilled runs —
+/// produces the serial reference's bytes, and the reduce side consumed
+/// exactly the same record volume (the location-addressed fetch neither
+/// drops nor duplicates runs).
+#[test]
+fn prop_dist_matches_serial_on_every_variant() {
+    Cases::new("dist(4) == serial, every SN variant, barrier + push, mem + disk", 3).run(|rng| {
+        let n = rng.range(120, 300);
+        let w = rng.range(2, 7);
+        let entities = corpus(rng, n);
+        let base = base_config(rng, &entities, w, rng.range(4, 8));
+        let dist = DistScheduler::new(DistConfig::executors(4));
+        for (name, run, strategy) in variants() {
+            let clean_cfg = SnConfig {
+                balance: strategy,
+                ..base.clone()
+            };
+            let reference = run(&entities, &clean_cfg, Exec::Serial).map_err(|e| e.to_string())?;
+            for push in [false, true] {
+                let cfg = SnConfig {
+                    push,
+                    ..clean_cfg.clone()
+                };
+                let mem = run(&entities, &cfg, Exec::Dist(&dist)).map_err(|e| e.to_string())?;
+                prop_assert_eq!(mem.pairs, reference.pairs);
+                prop_assert_eq!(
+                    mem.counters.get(names::REDUCE_INPUT_RECORDS),
+                    reference.counters.get(names::REDUCE_INPUT_RECORDS)
+                );
+                prop_assert!(
+                    mem.counters.get(names::TASKS_FAILED) == 0,
+                    "{name}: a clean distributed run failed a task (push={push})"
+                );
+            }
+            // disk-backed push: spilled run files are fetched through the
+            // transport and decoded reducer-side
+            let dir = TempSpillDir::new(&format!("dist-{name}")).map_err(|e| e.to_string())?;
+            let disk_cfg = SnConfig {
+                spill: Some(SnSpill::new(dir.path())),
+                push: true,
+                ..clean_cfg.clone()
+            };
+            let disk = run(&entities, &disk_cfg, Exec::Dist(&dist)).map_err(|e| e.to_string())?;
+            prop_assert_eq!(disk.pairs, reference.pairs);
+            prop_assert!(
+                disk.counters.get(names::SPILLED_RUNS) > 0,
+                "{name}: disk-backed distributed run wrote no run files"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Executor loss composes with injected task panics: executor 1 is
+/// killed after its first completed map task, a seeded `FaultPlan`
+/// panics a random attempt on top, and the control plane's resubmission
+/// (loss reruns are free; panic retries charge the budget) still lands
+/// on the serial reference's bytes — barrier and push.
+#[test]
+fn prop_killed_executor_and_injected_faults_recover() {
+    Cases::new("dist kill + injected faults == serial", 3).run(|rng| {
+        let n = rng.range(120, 300);
+        let w = rng.range(2, 7);
+        let entities = corpus(rng, n);
+        let mut base = base_config(rng, &entities, w, rng.range(4, 8));
+        // every executor sees ≥ 2 map tasks under round-robin, so the
+        // doomed executor completes a map (and registers runs that will
+        // be lost) even if the injected panic lands on its first attempt
+        base.num_map_tasks = rng.range(8, 13);
+        let dist = DistScheduler::new(
+            DistConfig::executors(4)
+                .with_kill(KillPlan {
+                    executor: 1,
+                    after_map_tasks: 1,
+                })
+                .with_retries(2),
+        );
+        for (name, run, strategy) in variants() {
+            let clean_cfg = SnConfig {
+                balance: strategy,
+                ..base.clone()
+            };
+            let reference = run(&entities, &clean_cfg, Exec::Serial).map_err(|e| e.to_string())?;
+            for push in [false, true] {
+                let cfg = SnConfig {
+                    push,
+                    faults: Some(FaultPlan::seeded(
+                        rng.next_u64(),
+                        clean_cfg.num_map_tasks,
+                        clean_cfg.partitioner.num_partitions(),
+                    )),
+                    max_task_retries: Some(2),
+                    ..clean_cfg.clone()
+                };
+                let res = run(&entities, &cfg, Exec::Dist(&dist)).map_err(|e| e.to_string())?;
+                prop_assert_eq!(res.pairs, reference.pairs);
+                prop_assert_eq!(
+                    res.counters.get(names::REDUCE_INPUT_RECORDS),
+                    reference.counters.get(names::REDUCE_INPUT_RECORDS)
+                );
+                prop_assert!(
+                    res.counters.get(names::EXECUTORS_LOST) >= 1,
+                    "{name}: the kill plan never fired (push={push})"
+                );
+                prop_assert!(
+                    res.counters.get(names::TASK_RETRIES) >= 1,
+                    "{name}: loss recovery resubmitted nothing (push={push})"
+                );
+                prop_assert!(
+                    res.counters.get(names::TASKS_FAILED) == 0,
+                    "{name}: a task exhausted its retry budget (push={push})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The transport drops fetch frames mid-stream: the reduce task's fetch
+/// loop observes the torn link, re-resolves the run's location from the
+/// shuffle registry, and retries — no run is lost, no retry budget is
+/// charged, and the output stays byte-identical.
+#[test]
+fn prop_dropped_fetch_frames_retry_from_the_registry() {
+    Cases::new("dropped fetch frames retry from the registry", 3).run(|rng| {
+        let n = rng.range(120, 300);
+        let w = rng.range(2, 7);
+        let entities = corpus(rng, n);
+        let base = base_config(rng, &entities, w, rng.range(4, 8));
+        let dist = DistScheduler::new(DistConfig::executors(4).with_fetch_drops(2));
+        for (name, run, strategy) in variants() {
+            let clean_cfg = SnConfig {
+                balance: strategy,
+                ..base.clone()
+            };
+            let reference = run(&entities, &clean_cfg, Exec::Serial).map_err(|e| e.to_string())?;
+            let res = run(&entities, &clean_cfg, Exec::Dist(&dist)).map_err(|e| e.to_string())?;
+            prop_assert_eq!(res.pairs, reference.pairs);
+            prop_assert_eq!(
+                res.counters.get(names::REDUCE_INPUT_RECORDS),
+                reference.counters.get(names::REDUCE_INPUT_RECORDS)
+            );
+            prop_assert!(
+                res.counters.get(names::DIST_FETCH_RETRIES) >= 1,
+                "{name}: two dropped data frames caused no fetch retries"
+            );
+            prop_assert!(
+                res.counters.get(names::TASKS_FAILED) == 0,
+                "{name}: a dropped fetch frame failed a task outright"
+            );
+        }
+        Ok(())
+    });
+}

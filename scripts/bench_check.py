@@ -53,6 +53,10 @@ GATES = {
         # measured profile, must stay <= 1 (asserted in-bench) and must
         # not drift up (losing overlap) beyond tolerance
         ("push_overlap.makespan_ratio", "lower", TOLERANCE),
+        # simulated 4-link/1-link distributed makespan ratio: deterministic
+        # given the measured profile, <= 1 asserted in-bench, and must not
+        # drift up (losing shuffle parallelism) beyond tolerance
+        ("dist_scaleout.makespan_ratio", "lower", TOLERANCE),
         # same-machine ratio, but still timing-derived: wider band
         ("shuffle_reduce[workers=8].speedup", "higher", 0.5),
     ],
@@ -71,6 +75,9 @@ GATES = {
 INVARIANTS = {
     "BENCH_engine.json": [
         "push_overlap.identical_output",
+        # every real 1/2/4-executor control-plane run reproduced the
+        # in-process barrier bytes
+        "dist_scaleout.identical_output",
     ],
     "BENCH_skew.json": [
         "multipass_measured[mode=scheduler].identical_output",
@@ -246,6 +253,16 @@ SELFTEST_SAMPLES = {
             "makespan_ratio": 0.85,
             "measured_overlap_secs": 0.02,
             "identical_output": True,
+        },
+        "dist_scaleout": {
+            "links1_sim_s": 42.0,
+            "links4_sim_s": 36.0,
+            "makespan_ratio": 0.857,
+            "identical_output": True,
+            "executors": [
+                {"executors": 1.0, "wall_s": 0.2, "remote_fetches": 0.0, "local_fetches": 64.0},
+                {"executors": 4.0, "wall_s": 0.1, "remote_fetches": 48.0, "local_fetches": 16.0},
+            ],
         },
         "sim_drift": {
             "complete": True,

@@ -66,6 +66,9 @@ KINDS = {
     "checkpoint_restore",
     "dead_lettered",
     "fault_injected",
+    "executor_registered",
+    "executor_lost",
+    "run_fetched",
 }
 
 CORE_FIELDS = {"seq", "job", "phase", "task", "attempt", "at_secs", "event"}
@@ -81,9 +84,22 @@ PAYLOAD = {
     "attempt_panicked": {"message"},
     "dead_lettered": {"message"},
     "fault_injected": {"kind"},
+    "executor_registered": {"executor"},
+    "executor_lost": {"executor"},
+    "run_fetched": {"executor", "records"},
 }
 
-JOB_LEVEL = {"job_started", "job_finished", "map_wave_done", "reduce_first_start"}
+# Job-scoped events (phase=job, task=null).  The executor lifecycle
+# events are job-scoped like the wave stamps but may repeat (one per
+# executor); only the four stamps below carry per-job count limits.
+JOB_LEVEL = {
+    "job_started",
+    "job_finished",
+    "map_wave_done",
+    "reduce_first_start",
+    "executor_registered",
+    "executor_lost",
+}
 
 PHASES = {"map", "reduce", "job"}
 
@@ -307,12 +323,15 @@ def gather(paths):
 GOOD_SAMPLE = "\n".join(
     [
         '{"seq": 0, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.0, "event": "job_started"}',
-        '{"seq": 1, "job": "j", "phase": "map", "task": 0, "attempt": 0, "at_secs": 0.001, "event": "attempt_started"}',
-        '{"seq": 2, "job": "j", "phase": "map", "task": 0, "attempt": 0, "at_secs": 0.002, "event": "run_pushed", "partition": 1, "records": 10}',
-        '{"seq": 3, "job": "j", "phase": "map", "task": 0, "attempt": 0, "at_secs": 0.003, "event": "attempt_won"}',
-        '{"seq": 4, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.003, "event": "map_wave_done"}',
-        '{"seq": 5, "job": "j", "phase": "reduce", "task": 0, "attempt": 0, "at_secs": 0.004, "event": "fault_injected", "kind": "panic"}',
-        '{"seq": 6, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.01, "event": "job_finished"}',
+        '{"seq": 1, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.0005, "event": "executor_registered", "executor": 0}',
+        '{"seq": 2, "job": "j", "phase": "map", "task": 0, "attempt": 0, "at_secs": 0.001, "event": "attempt_started"}',
+        '{"seq": 3, "job": "j", "phase": "map", "task": 0, "attempt": 0, "at_secs": 0.002, "event": "run_pushed", "partition": 1, "records": 10}',
+        '{"seq": 4, "job": "j", "phase": "map", "task": 0, "attempt": 0, "at_secs": 0.003, "event": "attempt_won"}',
+        '{"seq": 5, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.003, "event": "map_wave_done"}',
+        '{"seq": 6, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.0035, "event": "executor_lost", "executor": 1}',
+        '{"seq": 7, "job": "j", "phase": "reduce", "task": 0, "attempt": 0, "at_secs": 0.0038, "event": "run_fetched", "executor": 0, "records": 25}',
+        '{"seq": 8, "job": "j", "phase": "reduce", "task": 0, "attempt": 0, "at_secs": 0.004, "event": "fault_injected", "kind": "panic"}',
+        '{"seq": 9, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.01, "event": "job_finished"}',
     ]
 )
 
@@ -378,6 +397,13 @@ def selftest():
         GOOD_SAMPLE.replace(
             '"phase": "job", "task": null, "attempt": 0, "at_secs": 0.003',
             '"phase": "job", "task": 4, "attempt": 0, "at_secs": 0.003',
+        ),
+        # run_fetched payload missing its record count
+        GOOD_SAMPLE.replace(', "records": 25', ""),
+        # executor lifecycle event carrying a task id
+        GOOD_SAMPLE.replace(
+            '"task": null, "attempt": 0, "at_secs": 0.0035',
+            '"task": 2, "attempt": 0, "at_secs": 0.0035',
         ),
     ]
     for i, text in enumerate(bad_cases):
