@@ -102,6 +102,7 @@ fn main() -> anyhow::Result<()> {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
     let truth = corpus.truth_pairs();
     let mut table = Table::new(

@@ -64,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
     let keys: Vec<Arc<dyn BlockingKey>> = vec![
         Arc::new(TitlePrefixKey::new(2)),

@@ -53,6 +53,7 @@ fn main() -> anyhow::Result<()> {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
     let t0 = std::time::Instant::now();
     let result = repsn::run(&corpus.entities, &cfg)?;

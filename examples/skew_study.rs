@@ -97,7 +97,7 @@ use snmr::mapreduce::scheduler::{
 use snmr::mapreduce::sim::{
     drift_report, simulate_job, simulate_job_chain, simulate_job_overlap, ClusterSpec,
 };
-use snmr::mapreduce::{FaultPlan, TempSpillDir, TraceSpec};
+use snmr::mapreduce::{FaultPlan, MemoryPool, TempSpillDir, TraceSpec};
 use snmr::metrics::registry::MetricsSpec;
 use snmr::metrics::report::{write_report, Table};
 use snmr::metrics::timeline::JobTimeline;
@@ -166,6 +166,11 @@ fn main() -> anyhow::Result<()> {
                 "re-run the ladder on a 4-slot push scheduler with the health sampler \
                  attached: write <row>.snapshots.jsonl and dashboard.txt into this directory",
             ),
+            flag(
+                "pool-bytes",
+                "re-run the ladder with every job accounting against one shared memory \
+                 pool of this many bytes (composes with --push/--executors)",
+            ),
         ],
         false,
     )
@@ -191,6 +196,10 @@ fn main() -> anyhow::Result<()> {
     if let Some(dir) = &metrics_dir {
         std::fs::create_dir_all(dir)?;
     }
+    let pool_bytes = match args.get("pool-bytes") {
+        None => None,
+        Some(_) => Some(args.get_usize("pool-bytes", 1 << 20).map_err(anyhow::Error::msg)?.max(1)),
+    };
     let balance = match args.get("balance") {
         None => None,
         Some(s) => Some(
@@ -256,6 +265,7 @@ fn main() -> anyhow::Result<()> {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
 
     let mut table = Table::new(
@@ -685,6 +695,93 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    if let Some(pb) = pool_bytes {
+        // Pooled re-run: every ladder configuration accounting against ONE
+        // shared memory pool — map sort buffers seal early under pressure,
+        // staged push runs feel backpressure, reduce merges reserve their
+        // windows.  Pair digests must match the unpooled runs exactly (the
+        // pool may move bytes to disk or stall a push, never change them)
+        // and no task may fail.  This is the CI pool-smoke leg.
+        let mode = if let Some(nx) = executors {
+            format!("{nx} executors{}", if push { ", push" } else { "" })
+        } else if push {
+            "4-slot push scheduler".into()
+        } else {
+            "serial".into()
+        };
+        println!("\n--- pooled re-run: one shared {pb}-byte pool across the ladder ({mode}) ---");
+        let pool = MemoryPool::new(pb as u64);
+        let mut t9 = Table::new(
+            "Pooled ladder (one shared byte budget)",
+            &["p", "identical", "denied_grows", "spill_requests", "backpressure_waits", "failed"],
+        );
+        let (mut total_denied, mut total_spills, mut total_waits) = (0u64, 0u64, 0u64);
+        for ((name, p, entities), digest) in configs.iter().zip(&digests) {
+            let mut cfg = sn_cfg(p);
+            // several map waves per row keep the pool contended throughout
+            cfg.num_map_tasks = 32;
+            cfg.push = push;
+            cfg.memory = Some(pool.clone());
+            let res = if let Some(nx) = executors {
+                let mut dist_cfg = DistConfig::executors(nx).with_retries(2);
+                if push {
+                    dist_cfg = dist_cfg.with_push(PushMode::Push);
+                }
+                let dist = DistScheduler::new(dist_cfg);
+                repsn::run_on(entities, &cfg, Exec::Dist(&dist))?
+            } else if push {
+                let sched =
+                    JobScheduler::new(SchedulerConfig::slots(4).with_push(PushMode::Push));
+                repsn::run_on(entities, &cfg, Exec::Scheduler(&sched))?
+            } else {
+                repsn::run(entities, &cfg)?
+            };
+            let identical = pair_digest(&res) == *digest;
+            assert!(identical, "{name}: pooled output diverged from the unpooled run");
+            let failed = res.counters.get(names::TASKS_FAILED);
+            assert_eq!(failed, 0, "{name}: a pooled task failed");
+            let denied = res.counters.get(names::POOL_DENIED_GROWS);
+            let spills = res.counters.get(names::POOL_SPILL_REQUESTS);
+            let waits = res.counters.get(names::POOL_BACKPRESSURE_WAITS);
+            total_denied += denied;
+            total_spills += spills;
+            total_waits += waits;
+            t9.row(vec![
+                name.clone(),
+                identical.to_string(),
+                denied.to_string(),
+                spills.to_string(),
+                waits.to_string(),
+                failed.to_string(),
+            ]);
+        }
+        assert!(pool.peak_bytes() > 0, "the pool never accounted a byte");
+        // a budget tight enough to deny grows must also have produced
+        // relief — early seals (spill requests) or push backpressure
+        if total_denied > 0 {
+            assert!(
+                total_spills + total_waits > 0,
+                "grows were denied but nothing sealed early or waited"
+            );
+        }
+        // overdraft past the budget proves real pressure; with elastic
+        // (push/spill) tasks that pressure must have triggered early seals
+        if push && pool.peak_bytes() > pb as u64 {
+            assert!(
+                total_spills > 0,
+                "pool peaked {} over the {pb}-byte budget without a single early seal",
+                pool.peak_bytes()
+            );
+        }
+        println!("{}", t9.render());
+        println!(
+            "pooled ladder: outputs identical, no failures; peak accounted {} of {pb} budget; \
+             POOL_DENIED_GROWS={total_denied} POOL_SPILL_REQUESTS={total_spills} \
+             POOL_BACKPRESSURE_WAITS={total_waits}",
+            pool.peak_bytes(),
+        );
+    }
+
     if let Some(strategy) = balance {
         // Load-balancing study: a Zipf block-key corpus (a few giant
         // blocks) through unbalanced RepSN vs the chosen two-job pipeline.
@@ -707,6 +804,7 @@ fn main() -> anyhow::Result<()> {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         };
         let unbalanced = repsn::run(&bal_entities, &cfg(BalanceStrategy::None))?;
         let (unb_max, unb_total) = reduce_pair_skew(&unbalanced.stats[0]);

@@ -22,7 +22,7 @@ use snmr::mapreduce::sim::{
 use snmr::mapreduce::sortspill::{Codec, SpillSpec, StringPairCodec, TempSpillDir};
 use snmr::mapreduce::{
     run_job, run_job_with_combiner, Counters, Emitter, FnCombiner, FnMapTask, FnReduceTask,
-    HashPartitioner, JobConfig, ValuesIter,
+    HashPartitioner, JobConfig, MemoryPool, ValuesIter,
 };
 use snmr::metrics::report::{write_report, Table};
 use snmr::util::cli::{flag, switch, Args};
@@ -452,29 +452,79 @@ fn main() -> anyhow::Result<()> {
         format!("{:.3}", drift.max_drift_frac()),
     );
 
-    // calibration loop: fit map/reduce/shuffle rates from the workers=1
-    // run's measured histograms and phase stamps, then replay the same
-    // stats through the default and the fitted spec — the calibrated spec
-    // must yield strictly lower mean |per-wave drift|.
+    // calibration loop (PR 8 follow-up): fit map/reduce/shuffle rates
+    // over a whole *skew ladder* of workers=1 runs — the uniform prefix
+    // job plus two rungs that funnel 30% / 60% of the records onto one
+    // hot key — instead of a single run.  The pooled (volume-weighted)
+    // fit must beat the default spec on the ladder's summed mean
+    // |per-wave drift|; per-rung fits are published alongside so the
+    // trajectory file shows how stable the rates are across skew.
     let serial_bytes = serial1.counters.get(names::MAP_OUTPUT_BYTES);
-    let cal_spec = ClusterSpec::fit_from_stats(std::slice::from_ref(&serial1.stats));
-    let drift_default = drift_report(&serial1.stats, serial_bytes, &ClusterSpec::paper_like(1));
-    let drift_cal = drift_report(&serial1.stats, serial_bytes, &cal_spec);
+    let skewed_mapper = |hot_pct: u64| {
+        Arc::new(FnMapTask::new(
+            move |_k: (), title: String, out: &mut Emitter<String, String>, _c: &Counters| {
+                let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+                for b in title.bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x100_0000_01b3);
+                }
+                let prefix: String = if h % 100 < hot_pct {
+                    "zz".to_string()
+                } else {
+                    title.chars().take(2).collect::<String>().to_lowercase()
+                };
+                out.emit(prefix, title);
+            },
+        ))
+    };
+    let mut ladder_runs = vec![("uniform", serial1)];
+    for (label, hot) in [("hot30", 30u64), ("hot60", 60u64)] {
+        let res = run_job(
+            &push_cfg.clone().with_workers(1),
+            push_input.clone(),
+            skewed_mapper(hot),
+            Arc::new(HashPartitioner::new(hash)),
+            push_grouping.clone(),
+            push_reducer.clone(),
+        );
+        ladder_runs.push((label, res));
+    }
+    let ladder_stats: Vec<_> = ladder_runs.iter().map(|(_, r)| r.stats.clone()).collect();
+    let cal_spec = ClusterSpec::fit_from_stats(&ladder_stats);
+    let mut ladder_rows = Vec::new();
+    let (mut ladder_default_s, mut ladder_cal_s) = (0.0f64, 0.0f64);
+    for ((label, res), stats) in ladder_runs.iter().zip(&ladder_stats) {
+        let bytes = res.counters.get(names::MAP_OUTPUT_BYTES);
+        let rung_fit = ClusterSpec::fit_from_stats(std::slice::from_ref(stats));
+        let d_def = drift_report(stats, bytes, &ClusterSpec::paper_like(1));
+        let d_cal = drift_report(stats, bytes, &cal_spec);
+        ladder_default_s += d_def.mean_abs_delta_s();
+        ladder_cal_s += d_cal.mean_abs_delta_s();
+        ladder_rows.push(Json::obj(vec![
+            ("rung", Json::str(*label)),
+            ("map_output_bytes", Json::num(bytes as f64)),
+            ("map_secs_scale", Json::num(rung_fit.map_secs_scale)),
+            ("reduce_secs_scale", Json::num(rung_fit.reduce_secs_scale)),
+            ("shuffle_cpu_scale", Json::num(rung_fit.shuffle_cpu_scale)),
+            ("mean_abs_delta_default_s", Json::num(d_def.mean_abs_delta_s())),
+            ("mean_abs_delta_ladder_fit_s", Json::num(d_cal.mean_abs_delta_s())),
+        ]));
+    }
     assert!(
-        drift_cal.mean_abs_delta_s() < drift_default.mean_abs_delta_s(),
-        "calibrated spec must beat the default: {:.6}s vs {:.6}s mean |drift|",
-        drift_cal.mean_abs_delta_s(),
-        drift_default.mean_abs_delta_s()
+        ladder_cal_s < ladder_default_s,
+        "ladder-fitted spec must beat the default over the skew ladder: \
+         {ladder_cal_s:.6}s vs {ladder_default_s:.6}s summed mean |drift|"
     );
+    let drift_default =
+        drift_report(&ladder_stats[0], serial_bytes, &ClusterSpec::paper_like(1));
+    let drift_cal = drift_report(&ladder_stats[0], serial_bytes, &cal_spec);
     push(
         &mut table,
         &mut rows,
         "sim-drift",
-        "mean |drift| default / calibrated (w=1 run)",
+        "mean |drift| default / ladder-fit (3-rung skew ladder)",
         format!(
-            "{:.4}s / {:.4}s (scales m={:.2} r={:.2} s={:.3})",
-            drift_default.mean_abs_delta_s(),
-            drift_cal.mean_abs_delta_s(),
+            "{ladder_default_s:.4}s / {ladder_cal_s:.4}s (scales m={:.2} r={:.2} s={:.3})",
             cal_spec.map_secs_scale,
             cal_spec.reduce_secs_scale,
             cal_spec.shuffle_cpu_scale
@@ -544,6 +594,88 @@ fn main() -> anyhow::Result<()> {
         dist_identical.to_string(),
     );
 
+    // --- global memory pool -------------------------------------------------
+    // Real: the titles push job again with every task accounting against a
+    // pool an eighth of the map-output volume — backpressure and overdrafts
+    // may fire, but the bytes that come out must be the barrier bytes.
+    // Simulated: the same workers=1 profile with the pool budget swept from
+    // unlimited down to an eighth of the working set; the extra spill
+    // traffic the model charges must grow monotonically as the pool
+    // shrinks (graceful degradation, the gated trajectory invariant).
+    let tight_budget = (serial_bytes / 8).max(1);
+    let pool = MemoryPool::new(tight_budget);
+    let pooled_run = JobScheduler::new(
+        SchedulerConfig::slots(4)
+            .with_push(PushMode::Push)
+            .with_memory_pool(pool.clone()),
+    )
+    .run(
+        &push_cfg,
+        push_input.clone(),
+        push_mapper.clone(),
+        Arc::new(HashPartitioner::new(hash)),
+        push_grouping.clone(),
+        push_reducer.clone(),
+    );
+    let pool_identical = pooled_run.outputs == barrier_run.outputs;
+    assert!(
+        pool_identical,
+        "tight-pool push run must reproduce the barrier output"
+    );
+    assert!(
+        pool.peak_bytes() > 0,
+        "pooled run must account at least one reservation"
+    );
+    let pool_denied = pooled_run.counters.get(names::POOL_DENIED_GROWS);
+    let pool_spills = pooled_run.counters.get(names::POOL_SPILL_REQUESTS);
+    let pool_waits = pooled_run.counters.get(names::POOL_BACKPRESSURE_WAITS);
+    let unlimited_sim = simulate_job(&profile, &spec8).total();
+    let pool_points = [0u64, serial_bytes, serial_bytes / 2, serial_bytes / 4, tight_budget];
+    let mut pool_sweep = Vec::new();
+    let mut pool_ratios = Vec::new();
+    let mut pool_monotone = true;
+    let mut prev_total = 0.0f64;
+    for pb in pool_points {
+        let total = simulate_job(&profile, &spec8.clone().with_memory_pool_bytes(pb)).total();
+        let ratio = total / unlimited_sim.max(1e-12);
+        assert!(ratio.is_finite(), "pool sweep produced a non-finite ratio");
+        pool_monotone &= total + 1e-9 >= prev_total;
+        prev_total = total;
+        pool_ratios.push(format!("{ratio:.3}"));
+        pool_sweep.push(Json::obj(vec![
+            ("pool_bytes", Json::num(pb as f64)),
+            ("sim_total_s", Json::num(total)),
+            ("ratio_vs_unlimited", Json::num(ratio)),
+        ]));
+    }
+    assert!(
+        pool_monotone,
+        "simulated makespan must degrade monotonically as the pool shrinks"
+    );
+    assert!(
+        prev_total > unlimited_sim,
+        "an eighth-of-working-set pool must cost simulated makespan: \
+         {prev_total:.3}s vs {unlimited_sim:.3}s unlimited"
+    );
+    push(
+        &mut table,
+        &mut rows,
+        "memory-pool",
+        "tight pool (1/8 map bytes) push run",
+        format!(
+            "identical={pool_identical}, denied={pool_denied}, spills={pool_spills}, \
+             waits={pool_waits}, peak={}",
+            humanize::bytes(pool.peak_bytes())
+        ),
+    );
+    push(
+        &mut table,
+        &mut rows,
+        "memory-pool",
+        "sim8 makespan x pool [off, 1, 1/2, 1/4, 1/8]",
+        format!("{} (monotone={pool_monotone})", pool_ratios.join(" / ")),
+    );
+
     println!("{}", table.render());
     let path = write_report("engine_ablation", &Json::Arr(rows))?;
     eprintln!("report written to {}", path.display());
@@ -601,6 +733,50 @@ fn main() -> anyhow::Result<()> {
                 // invariant: every real dist run reproduced the barrier bytes
                 ("identical_output", Json::Bool(dist_identical)),
                 ("executors", Json::Arr(dist_sweep)),
+            ]),
+        ),
+        (
+            "calibration_ladder",
+            Json::obj(vec![
+                ("complete", Json::Bool(true)),
+                // per-rung fits show how stable the rates are across skew;
+                // the pooled fit is what `sim_drift.calibrated` uses
+                ("rungs", Json::Arr(ladder_rows)),
+                ("pooled_map_secs_scale", Json::num(cal_spec.map_secs_scale)),
+                (
+                    "pooled_reduce_secs_scale",
+                    Json::num(cal_spec.reduce_secs_scale),
+                ),
+                (
+                    "pooled_shuffle_cpu_scale",
+                    Json::num(cal_spec.shuffle_cpu_scale),
+                ),
+                (
+                    "ladder_mean_abs_delta_default_s",
+                    Json::num(ladder_default_s),
+                ),
+                (
+                    "ladder_mean_abs_delta_calibrated_s",
+                    Json::num(ladder_cal_s),
+                ),
+                ("improved", Json::Bool(ladder_cal_s < ladder_default_s)),
+            ]),
+        ),
+        (
+            "memory_pool",
+            Json::obj(vec![
+                ("complete", Json::Bool(true)),
+                ("pool_bytes_real_run", Json::num(tight_budget as f64)),
+                // invariant: the tight-pool push run reproduced the
+                // barrier bytes while the pool pushed back
+                ("identical_output", Json::Bool(pool_identical)),
+                ("pool_denied_grows", Json::num(pool_denied as f64)),
+                ("pool_spill_requests", Json::num(pool_spills as f64)),
+                ("pool_backpressure_waits", Json::num(pool_waits as f64)),
+                ("peak_reserved_bytes", Json::num(pool.peak_bytes() as f64)),
+                // gated: simulated makespan must only grow as the pool shrinks
+                ("monotone_degradation", Json::Bool(pool_monotone)),
+                ("makespan_vs_pool", Json::Arr(pool_sweep)),
             ]),
         ),
         (

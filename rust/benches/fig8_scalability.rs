@@ -82,6 +82,7 @@ fn main() -> anyhow::Result<()> {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         };
         eprintln!("w={w}: running RepSN...");
         let t0 = std::time::Instant::now();

@@ -137,6 +137,7 @@ fn main() -> anyhow::Result<()> {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         };
         eprintln!("running RepSN with {name} (g={g:.2})...");
         let res = repsn::run(entities, &cfg)?;
@@ -192,6 +193,7 @@ fn main() -> anyhow::Result<()> {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
     let zipf_res = repsn::run(&zipf_entities, &zipf_cfg)?;
     let mut t_spec = Table::new(
@@ -263,6 +265,7 @@ fn main() -> anyhow::Result<()> {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
     eprintln!("running multipass: serial baseline...");
     let t0 = Instant::now();
@@ -350,6 +353,7 @@ fn main() -> anyhow::Result<()> {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
     let cluster8 = ClusterSpec::paper_like(8);
     let mut t_bal = Table::new(

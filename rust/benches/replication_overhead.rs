@@ -69,6 +69,7 @@ fn main() -> anyhow::Result<()> {
                 faults: None,
                 max_task_retries: None,
                 trace: None,
+                memory: None,
             };
             let srp_res = srp::run(&corpus.entities, &cfg)?;
             let rep_res = repsn::run(&corpus.entities, &cfg)?;

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
                 faults: None,
                 max_task_retries: None,
                 trace: None,
+                memory: None,
             };
             let seq_pairs = seq::run_blocking(&corpus.entities, &bk, w).len();
             let srp_pairs = srp::run(&corpus.entities, &cfg)?.pair_set().len();

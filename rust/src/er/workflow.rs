@@ -175,6 +175,7 @@ mod tests {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         }
     }
 

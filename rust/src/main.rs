@@ -212,6 +212,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {
@@ -271,6 +272,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
     let mut cfg = WorkflowConfig::new(strategy, sn);
     if !args.get_bool("blocking-only") {

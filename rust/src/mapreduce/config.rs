@@ -2,6 +2,7 @@
 
 use super::checkpoint::CheckpointSpec;
 use super::fault::FaultPlan;
+use super::memory::MemoryPool;
 use super::sortspill::SpillSpec;
 use super::trace::TraceSpec;
 
@@ -93,6 +94,15 @@ pub struct JobConfig {
     /// ([`crate::metrics::timeline`]) or a JSONL artifact.  `None`
     /// (default) records nothing and allocates nothing.
     pub trace: Option<TraceSpec>,
+    /// Shared memory pool (see [`crate::mapreduce::memory`]).  When set,
+    /// this job's sorters, push mailboxes and reduce merge windows
+    /// account their bytes against the pool's budget, sealing/diverting
+    /// runs early (or backpressuring pushers) when it is tight.  `None`
+    /// (default) defers to the scheduler-wide pool
+    /// ([`SchedulerConfig::with_memory_pool`]
+    /// (crate::mapreduce::scheduler::SchedulerConfig::with_memory_pool))
+    /// or, absent both, accounts nothing.
+    pub memory: Option<MemoryPool>,
 }
 
 impl Default for JobConfig {
@@ -114,6 +124,7 @@ impl Default for JobConfig {
             dead_letter: false,
             checkpoint: None,
             trace: None,
+            memory: None,
         }
     }
 }
@@ -192,6 +203,12 @@ impl JobConfig {
         self.trace = trace;
         self
     }
+
+    /// Attach (or clear) a shared memory pool (see [`JobConfig::memory`]).
+    pub fn with_memory(mut self, pool: Option<MemoryPool>) -> Self {
+        self.memory = pool;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -258,6 +275,16 @@ mod tests {
         assert!(c.dead_letter);
         let c = c.with_faults(Some(FaultPlan::new()));
         assert!(c.faults.is_none(), "empty plans normalize to None");
+    }
+
+    #[test]
+    fn memory_builder_round_trips() {
+        let c = JobConfig::default();
+        assert!(c.memory.is_none(), "memory pool defaults off");
+        let pool = MemoryPool::new(1 << 20);
+        let c = c.with_memory(Some(pool.clone()));
+        assert!(c.memory.as_ref().unwrap().same_pool(&pool));
+        assert!(c.with_memory(None).memory.is_none());
     }
 
     #[test]

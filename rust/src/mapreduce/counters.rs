@@ -107,6 +107,15 @@ pub mod names {
     /// Executors the distributed scheduler declared dead (failed control
     /// send or terminal fetch failure) and drained via resubmission.
     pub const EXECUTORS_LOST: &str = "engine.executors_lost";
+    /// Memory-pool `try_grow` denials observed by this job's tasks (only
+    /// present on pool-configured jobs under pressure).
+    pub const POOL_DENIED_GROWS: &str = "engine.pool_denied_grows";
+    /// Runs this job sealed or diverted to disk because the memory pool
+    /// denied a grow or flagged a fair-spill request.
+    pub const POOL_SPILL_REQUESTS: &str = "engine.pool_spill_requests";
+    /// Pushes that parked (backpressure) waiting for pool bytes to come
+    /// back from reducers draining the mailboxes.
+    pub const POOL_BACKPRESSURE_WAITS: &str = "engine.pool_backpressure_waits";
 }
 
 /// FNV-1a — the crate's standard cheap string hash; picks the shard.

@@ -21,6 +21,7 @@
 //! [`OnceSlots`](crate::util::threadpool::OnceSlots) (via [`run_owned`]),
 //! so workers never contend on a shared lock for the handoff.
 
+use std::cell::RefCell;
 use std::sync::atomic::AtomicU64;
 use std::sync::Arc;
 use std::time::Instant;
@@ -28,9 +29,10 @@ use std::time::Instant;
 use super::combiner::{combine_sorted_bucket, Combiner};
 use super::config::JobConfig;
 use super::counters::{names, Counters};
+use super::memory::{MemoryConsumer, MemoryPool, MemoryReservation};
 use super::push::PushAttempt;
 use super::shuffle::MergeIter;
-use super::sortspill::{ResolvedSpill, Run, RunRecords, RunSorter};
+use super::sortspill::{ResolvedSpill, Run, RunRecords, RunSorter, SPILL_READ_CHUNK};
 use super::splits::even_splits;
 use super::trace::{TaskTraceCtx, TraceEvent, TracePhase};
 use super::types::{
@@ -177,13 +179,80 @@ fn key_cmp<K: Ord, V>(a: &(K, V), b: &(K, V)) -> std::cmp::Ordering {
     a.0.cmp(&b.0)
 }
 
+/// One task's window on the process-wide [`MemoryPool`]: a single
+/// reservation covering every intermediate byte the task currently pins
+/// (sorter buffers plus sealed-but-unrouted runs), sized by the same
+/// [`SizeEstimate`] unit the shuffle accounting uses.
+///
+/// Charges are *truthful*: a denied [`MemoryReservation::try_grow`] is
+/// counted and traced, then taken anyway via the unconditional grow —
+/// the bytes exist whether or not the pool likes it, and relief comes
+/// from sealing runs at the next drain point (see
+/// [`seal_on_pressure`]), not from under-reporting residency.
+pub(crate) struct TaskMemory {
+    res: MemoryReservation,
+    /// Whether pressure has an answer: sealed runs leave the task
+    /// through a spill file or the push shuffle.  Barrier-mode
+    /// in-memory tasks retain their runs to the end regardless, so
+    /// sealing early would shed nothing — they overdraft instead.
+    elastic: bool,
+    /// A grow was denied since the last [`Self::pressured`] check.
+    denied: bool,
+}
+
+impl TaskMemory {
+    fn new(pool: &MemoryPool, name: &str, elastic: bool) -> Self {
+        Self {
+            res: MemoryConsumer::new(name).with_can_spill(elastic).register(pool),
+            elastic,
+            denied: false,
+        }
+    }
+
+    /// Charge `bytes` against the pool, recording (and overdrafting
+    /// past) a denial.
+    fn charge(&mut self, bytes: u64, counters: &Counters, trace: Option<&TaskTraceCtx>) {
+        if bytes == 0 {
+            return;
+        }
+        if !self.res.try_grow(bytes) {
+            counters.inc(names::POOL_DENIED_GROWS);
+            if let Some(t) = trace {
+                t.emit(TraceEvent::ReservationDenied { requested: bytes });
+            }
+            self.denied = true;
+            self.res.grow(bytes);
+        }
+    }
+
+    /// Return `bytes` to the pool (a run left the task).
+    fn release(&mut self, bytes: u64) {
+        self.res.shrink(bytes);
+    }
+
+    /// True when the task should seal its buffered records now: a grow
+    /// was denied since the last check, or the pool's fair-spill policy
+    /// picked this consumer as its victim.  Always false for inelastic
+    /// tasks — sealing would free nothing.
+    fn pressured(&mut self) -> bool {
+        let denied = std::mem::take(&mut self.denied);
+        let asked = self.res.take_spill_request();
+        (denied || asked) && self.elastic
+    }
+}
+
 /// Drain every pair buffered in `out` into the per-partition sorters;
-/// returns the number of records drained.
+/// returns the number of records drained.  With `mem` set, the drained
+/// bytes are charged against the task's pool reservation first — the
+/// caller answers any resulting pressure via [`seal_on_pressure`].
 fn drain_emitter<KT, VT, C>(
     out: &mut Emitter<KT, VT>,
     partitioner: &dyn Partitioner<KT>,
     r: usize,
     sorters: &mut [RunSorter<(KT, VT), C>],
+    mem: Option<&RefCell<TaskMemory>>,
+    counters: &Counters,
+    trace: Option<&TaskTraceCtx>,
 ) -> u64
 where
     KT: SizeEstimate,
@@ -192,12 +261,48 @@ where
 {
     let pairs = out.take_pairs();
     let n = pairs.len() as u64;
+    if let Some(m) = mem {
+        let bytes: u64 = pairs
+            .iter()
+            .map(|(k, v)| (k.size_bytes() + v.size_bytes()) as u64)
+            .sum();
+        m.borrow_mut().charge(bytes, counters, trace);
+    }
     for (k, v) in pairs {
         let p = partitioner.partition(&k, r);
         assert!(p < r, "partitioner returned {p} for r={r}");
         sorters[p].push((k, v));
     }
     n
+}
+
+/// Answer pool pressure at a drain point: seal every partially-filled
+/// sorter buffer early and route the sealed runs immediately, so their
+/// bytes leave the task (to disk or the push mailboxes) and return to
+/// the pool.  A no-op without pressure — run boundaries then fall only
+/// at the usual sort-budget seals, which is what keeps the pool-off and
+/// unlimited-pool paths byte-identical.
+fn seal_on_pressure<KT, VT, C>(
+    mem: Option<&RefCell<TaskMemory>>,
+    sorters: &mut [RunSorter<(KT, VT), C>],
+    router: &mut RunRouter<'_, KT, VT>,
+    counters: &Counters,
+) where
+    KT: SizeEstimate,
+    VT: SizeEstimate,
+    C: Fn(&(KT, VT), &(KT, VT)) -> std::cmp::Ordering,
+{
+    let Some(m) = mem else { return };
+    if !m.borrow_mut().pressured() {
+        return;
+    }
+    counters.inc(names::POOL_SPILL_REQUESTS);
+    for sorter in sorters.iter_mut() {
+        if sorter.buffered_len() > 0 {
+            sorter.seal_now();
+        }
+    }
+    router.drain_sealed(sorters, counters);
 }
 
 // ---------------------------------------------------------------------------
@@ -278,6 +383,7 @@ where
     combine_fn: Option<&'a CombineFn<KT, VT>>,
     push: Option<&'a PushAttempt<(KT, VT)>>,
     trace: Option<&'a TaskTraceCtx>,
+    mem: Option<&'a RefCell<TaskMemory>>,
     bucket_runs: Vec<Vec<Run<(KT, VT)>>>,
     bucket_bytes: Vec<u64>,
     bucket_raw_bytes: Vec<u64>,
@@ -300,12 +406,14 @@ where
         combine_fn: Option<&'a CombineFn<KT, VT>>,
         push: Option<&'a PushAttempt<(KT, VT)>>,
         trace: Option<&'a TaskTraceCtx>,
+        mem: Option<&'a RefCell<TaskMemory>>,
     ) -> Self {
         Self {
             spill,
             combine_fn,
             push,
             trace,
+            mem,
             bucket_runs: (0..r).map(|_| Vec::new()).collect(),
             bucket_bytes: vec![0; r],
             bucket_raw_bytes: vec![0; r],
@@ -336,6 +444,16 @@ where
         if run.is_empty() {
             return;
         }
+        // bytes this run holds of the task's reservation (charged at
+        // drain_emitter, pre-combine) — released below as the run leaves
+        // task memory, or shrunk to the post-combine size if retained
+        let charged: u64 = match self.mem {
+            Some(_) => run
+                .iter()
+                .map(|(k, v)| (k.size_bytes() + v.size_bytes()) as u64)
+                .sum(),
+            None => 0,
+        };
         self.spill_runs += 1;
         if let Some(cf) = self.combine_fn {
             let (ci, co) = cf(&mut run, counters);
@@ -376,6 +494,16 @@ where
                 Run::Spilled(rf)
             }
         };
+        if let Some(m) = self.mem {
+            // pushed runs are re-charged under the mailbox reservation
+            // (see push::ShuffleService); spilled runs cost ~0 resident;
+            // retained Mem runs keep their (post-combine) resident cost
+            let keep = match (&sealed, self.push) {
+                (Run::Mem(_), None) => sealed.pool_bytes(),
+                _ => 0,
+            };
+            m.borrow_mut().release(charged.saturating_sub(keep));
+        }
         match self.push {
             Some(attempt) => attempt.push(b, sealed),
             None => self.bucket_runs[b].push(sealed),
@@ -419,6 +547,7 @@ pub(crate) fn exec_map_task<KI, VI, KT, VT>(
     counters: &Counters,
     push: Option<&PushAttempt<(KT, VT)>>,
     trace: Option<&TaskTraceCtx>,
+    pool: Option<&MemoryPool>,
 ) -> MapTaskOutput<KT, VT>
 where
     KT: Ord + SizeEstimate,
@@ -426,27 +555,34 @@ where
 {
     let t0 = Instant::now();
     let budget = sort_budget.unwrap_or(usize::MAX);
+    // a map task can shed memory under pressure only when sealed runs
+    // actually leave it — through a spill file or the push shuffle
+    let elastic = spill.is_some() || push.is_some();
+    let tmem = pool.map(|p| RefCell::new(TaskMemory::new(p, "map-task", elastic)));
+    let mem = tmem.as_ref();
     let mut sorters: Vec<_> = (0..r)
         .map(|_| RunSorter::new(budget, key_cmp::<KT, VT>))
         .collect();
-    let mut router = RunRouter::new(r, spill, combine_fn, push, trace);
+    let mut router = RunRouter::new(r, spill, combine_fn, push, trace, mem);
     let mut task = mapper.create_task();
     let mut out = Emitter::new();
     let mut records: u64 = 0;
     task.configure(&mut out, counters);
     if out.len() >= budget {
-        records += drain_emitter(&mut out, partitioner, r, &mut sorters);
+        records += drain_emitter(&mut out, partitioner, r, &mut sorters, mem, counters, trace);
+        seal_on_pressure(mem, &mut sorters, &mut router, counters);
         router.drain_sealed(&mut sorters, counters);
     }
     for (k, v) in split {
         task.map(k, v, &mut out, counters);
         if out.len() >= budget {
-            records += drain_emitter(&mut out, partitioner, r, &mut sorters);
+            records += drain_emitter(&mut out, partitioner, r, &mut sorters, mem, counters, trace);
+            seal_on_pressure(mem, &mut sorters, &mut router, counters);
             router.drain_sealed(&mut sorters, counters);
         }
     }
     task.close(&mut out, counters);
-    records += drain_emitter(&mut out, partitioner, r, &mut sorters);
+    records += drain_emitter(&mut out, partitioner, r, &mut sorters, mem, counters, trace);
     let bytes = out.bytes();
     for (b, sorter) in sorters.into_iter().enumerate() {
         for run in sorter.into_runs() {
@@ -486,13 +622,40 @@ pub(crate) fn exec_reduce_task<KT, VT, KO, VO>(
     grouping: &(dyn Fn(&KT, &KT) -> bool + Send + Sync),
     counters: &Counters,
     trace: Option<&TaskTraceCtx>,
+    pool: Option<&MemoryPool>,
 ) -> ReduceTaskOutput<KO, VO>
 where
-    KT: Ord,
+    KT: Ord + SizeEstimate,
+    VT: SizeEstimate,
     KO: SizeEstimate,
     VO: SizeEstimate,
 {
     let t0 = Instant::now();
+    // Reserve the merge's working set up front: in-memory runs at their
+    // resident size, spilled runs at their bounded streaming window
+    // ([`SPILL_READ_CHUNK`] per run — the k-way merge holds one window
+    // per source, never a whole file).  The merge cannot shed memory
+    // mid-stream, so a denial is counted and overdrafted rather than
+    // parked — admission control (scheduler-side) is what keeps jobs
+    // whose floors can't fit from reaching this point.
+    let _tmem = pool.map(|p| {
+        let bytes: u64 = runs
+            .iter()
+            .map(|run| match run {
+                Run::Mem(_) => run.pool_bytes(),
+                Run::Spilled(_) => SPILL_READ_CHUNK as u64,
+            })
+            .sum();
+        let mut res = MemoryConsumer::new("reduce-task").register(p);
+        if bytes > 0 && !res.try_grow(bytes) {
+            counters.inc(names::POOL_DENIED_GROWS);
+            if let Some(t) = trace {
+                t.emit(TraceEvent::ReservationDenied { requested: bytes });
+            }
+            res.grow(bytes);
+        }
+        res
+    });
     if let Some(t) = trace {
         for run in &runs {
             if let Run::Spilled(rf) = run {
@@ -735,6 +898,10 @@ where
     // One trace context per job: stamps `JobStarted` and anchors every
     // record's `at_secs` to this job's start.
     let jctx = config.trace.as_ref().map(|t| t.job_ctx(&config.name));
+    // the serial driver accounts task memory under the job's pool, if
+    // any — there is no scheduler here to admit jobs, so tasks charge
+    // (and overdraft) directly
+    let pool = config.memory.clone();
 
     // Each map task: configure → map* → close; emitted records drain into
     // per-partition RunSorters (Hadoop's map-side "sort & spill": every
@@ -746,7 +913,9 @@ where
         let counters = Arc::clone(&counters);
         let injector = Arc::clone(&injector);
         let jctx = jctx.clone();
+        let pool = pool.clone();
         move |splits: Vec<Vec<(KI, VI)>>| {
+            let pool = pool.clone();
             run_owned(workers, splits, move |i, split: Vec<(KI, VI)>| {
                 // the serial path runs exactly one attempt per task
                 let tctx = jctx.as_ref().map(|j| j.task(TracePhase::Map, i, 0));
@@ -765,6 +934,7 @@ where
                     &counters,
                     None,
                     tctx.as_ref(),
+                    pool.as_ref(),
                 );
                 if let Some(t) = &tctx {
                     t.emit(TraceEvent::AttemptFinished);
@@ -784,7 +954,9 @@ where
         let counters = Arc::clone(&counters);
         let injector = Arc::clone(&injector);
         let jctx = jctx.clone();
+        let pool = pool.clone();
         move |per_reducer_runs: Vec<Vec<Run<(KT, VT)>>>| {
+            let pool = pool.clone();
             run_owned(
                 workers,
                 per_reducer_runs,
@@ -800,6 +972,7 @@ where
                         grouping.as_ref(),
                         &counters,
                         tctx.as_ref(),
+                        pool.as_ref(),
                     );
                     if let Some(t) = &tctx {
                         t.emit(TraceEvent::AttemptFinished);

@@ -1,0 +1,716 @@
+//! Process-wide memory pool: one byte budget shared by every job on a
+//! scheduler, with per-consumer reservations, a fair spill policy, and
+//! backpressure for the push shuffle.
+//!
+//! `JobConfig::sort_buffer_records` bounds one sorter's *record count*;
+//! nothing bounds what N concurrent jobs collectively hold.  The
+//! [`MemoryPool`] closes that gap the way datafusion's memory manager
+//! does: consumers register, reserve bytes before holding them, and the
+//! pool arbitrates when the sum would exceed the budget.
+//!
+//! ## Reservation lifecycle
+//!
+//! A [`MemoryConsumer`] registers with the pool and receives a
+//! [`MemoryReservation`] — the RAII handle that owns the consumer's
+//! accounted bytes.  Growth comes in three strengths:
+//!
+//! * [`MemoryReservation::try_grow`] — the elastic decision point.  A
+//!   denial means "find somewhere cheaper for these bytes": seal the
+//!   sorted run early, divert the pushed run to disk.  Denials are
+//!   counted and trigger the fair-spill policy.
+//! * [`MemoryReservation::grow`] — unconditional, for bytes that are
+//!   held regardless of the answer (a record already emitted into a
+//!   buffer with nowhere else to go).  Keeps the accounting truthful
+//!   even when the pool is over budget.
+//! * [`MemoryReservation::park_grow`] — backpressure.  The caller
+//!   blocks in bounded slices until the bytes fit, an abort is
+//!   observed, or the wait budget expires (then the grow is granted as
+//!   a counted *overdraft* so no configuration can deadlock).
+//!
+//! [`MemoryReservation::shrink`]/[`free`](MemoryReservation::free)
+//! return bytes and wake every parked grower and queued admission.
+//! Dropping a reservation frees whatever it still holds.
+//!
+//! ## Fairness rule
+//!
+//! When a `try_grow` is denied, the pool flags the **largest spillable
+//! consumer** (preferring consumers other than the requester) with a
+//! spill request.  Elastic consumers poll
+//! [`MemoryReservation::take_spill_request`] at their next decision
+//! point and respond by sealing/spilling, which shrinks their
+//! reservation and unparks waiters — so the consumer holding the most
+//! elastic memory pays first, not whoever asked last.
+//!
+//! ## Admission control
+//!
+//! [`MemoryPool::admit`] reserves a job's minimum working set in one
+//! atomic step, blocking (queueing) while the pool is too full to
+//! grant it — a job never starts tasks it cannot feed.  The admission
+//! reservation is held for the job's lifetime as its floor.
+//!
+//! The pool is `Option`-threaded like trace/metrics/faults: `None`
+//! means no accounting at all, and an unlimited pool never denies, so
+//! both are behaviorally identical to the unpooled engine.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Wait slice between re-checks while parked on a full pool; each slice
+/// re-examines the abort flag, so aborts are observed promptly.
+pub(crate) const PARK_SLICE: Duration = Duration::from_millis(2);
+
+/// Bytes the scheduler reserves per concurrently-runnable task when
+/// admitting a job — a deliberately small floor: admission exists to
+/// keep a swarm of queued jobs from all starting at once on a saturated
+/// pool, while the real working set is charged (and shed) dynamically by
+/// the tasks themselves.
+pub const ADMISSION_FLOOR_PER_TASK: u64 = 1024;
+
+/// Default total wait before a parked grow is granted as an overdraft.
+pub const DEFAULT_PARK_WAIT: Duration = Duration::from_secs(2);
+
+/// Default wait before a queued admission is granted as an overdraft.
+pub const DEFAULT_ADMIT_WAIT: Duration = Duration::from_secs(10);
+
+#[derive(Default)]
+struct Entry {
+    name: String,
+    spillable: bool,
+    reserved: u64,
+    spill_requested: bool,
+}
+
+#[derive(Default)]
+struct PoolState {
+    reserved: u64,
+    next_id: u64,
+    consumers: BTreeMap<u64, Entry>,
+}
+
+struct PoolShared {
+    budget: u64,
+    state: Mutex<PoolState>,
+    cv: Condvar,
+    // lock-free mirrors for gauges and post-run assertions
+    reserved: AtomicU64,
+    peak: AtomicU64,
+    denied_grows: AtomicU64,
+    spill_requests: AtomicU64,
+    backpressure_waits: AtomicU64,
+    overdrafts: AtomicU64,
+    admission_waits: AtomicU64,
+}
+
+/// Shared handle to one byte-budgeted pool.  Cheap to clone; every
+/// clone addresses the same budget and consumer table.
+#[derive(Clone)]
+pub struct MemoryPool {
+    shared: Arc<PoolShared>,
+}
+
+impl fmt::Debug for MemoryPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MemoryPool")
+            .field("budget", &self.shared.budget)
+            .field("reserved", &self.reserved_bytes())
+            .finish()
+    }
+}
+
+impl MemoryPool {
+    /// A pool with a hard byte budget.
+    pub fn new(budget_bytes: u64) -> Self {
+        Self {
+            shared: Arc::new(PoolShared {
+                budget: budget_bytes,
+                state: Mutex::new(PoolState::default()),
+                cv: Condvar::new(),
+                reserved: AtomicU64::new(0),
+                peak: AtomicU64::new(0),
+                denied_grows: AtomicU64::new(0),
+                spill_requests: AtomicU64::new(0),
+                backpressure_waits: AtomicU64::new(0),
+                overdrafts: AtomicU64::new(0),
+                admission_waits: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// A pool that accounts but never denies (`budget = u64::MAX`):
+    /// behaviorally a strict no-op against the unpooled engine.
+    pub fn unlimited() -> Self {
+        Self::new(u64::MAX)
+    }
+
+    /// The configured budget in bytes.
+    pub fn budget_bytes(&self) -> u64 {
+        self.shared.budget
+    }
+
+    /// Bytes currently reserved across all consumers.
+    pub fn reserved_bytes(&self) -> u64 {
+        self.shared.reserved.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of reserved bytes over the pool's lifetime.
+    pub fn peak_bytes(&self) -> u64 {
+        self.shared.peak.load(Ordering::Relaxed)
+    }
+
+    /// Total `try_grow` denials.
+    pub fn denied_grows(&self) -> u64 {
+        self.shared.denied_grows.load(Ordering::Relaxed)
+    }
+
+    /// Times the fair-spill policy asked a consumer to spill (including
+    /// denials answered by diverting a pushed run to disk).
+    pub fn spill_requests(&self) -> u64 {
+        self.shared.spill_requests.load(Ordering::Relaxed)
+    }
+
+    /// Times a grower parked waiting for bytes to come back.
+    pub fn backpressure_waits(&self) -> u64 {
+        self.shared.backpressure_waits.load(Ordering::Relaxed)
+    }
+
+    /// Grows granted past the budget after a bounded wait expired — the
+    /// anti-deadlock escape hatch.  Zero in healthy configurations.
+    pub fn overdrafts(&self) -> u64 {
+        self.shared.overdrafts.load(Ordering::Relaxed)
+    }
+
+    /// Jobs that had to queue at admission before their floor fit.
+    pub fn admission_waits(&self) -> u64 {
+        self.shared.admission_waits.load(Ordering::Relaxed)
+    }
+
+    /// Live registered consumers.
+    pub fn consumer_count(&self) -> usize {
+        self.shared.state.lock().unwrap().consumers.len()
+    }
+
+    /// Two handles to the same underlying pool?
+    pub fn same_pool(&self, other: &MemoryPool) -> bool {
+        Arc::ptr_eq(&self.shared, &other.shared)
+    }
+
+    /// A non-owning handle for observers (the metrics sampler's pool
+    /// probe): upgrading fails once every strong handle is gone, which
+    /// is how a registered probe learns to prune itself.
+    pub fn downgrade(&self) -> WeakMemoryPool {
+        WeakMemoryPool {
+            shared: Arc::downgrade(&self.shared),
+        }
+    }
+
+    /// Reserve a job's minimum working set, queueing until it fits.
+    ///
+    /// The returned reservation is the job's admission floor: hold it
+    /// for the job's lifetime, drop it when the job completes.  After
+    /// `max_wait` of queueing the floor is granted as an overdraft so a
+    /// mis-sized pool degrades instead of wedging.
+    pub fn admit(&self, name: &str, min_bytes: u64, max_wait: Duration) -> MemoryReservation {
+        let mut res = MemoryConsumer::new(name).register(self);
+        if min_bytes == 0 {
+            return res;
+        }
+        let mut state = self.shared.state.lock().unwrap();
+        if min_bytes > self.shared.budget {
+            // a floor larger than the whole pool can never fit — waiting
+            // is pointless, so grant it as an immediate overdraft
+            self.shared.overdrafts.fetch_add(1, Ordering::Relaxed);
+            self.grant(&mut state, res.id, min_bytes);
+            drop(state);
+            res.size += min_bytes;
+            return res;
+        }
+        if !self.fits(&state, min_bytes) {
+            self.shared.admission_waits.fetch_add(1, Ordering::Relaxed);
+            let t0 = Instant::now();
+            while !self.fits(&state, min_bytes) {
+                if t0.elapsed() >= max_wait {
+                    self.shared.overdrafts.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+                let (s, _) = self.shared.cv.wait_timeout(state, PARK_SLICE).unwrap();
+                state = s;
+            }
+        }
+        self.grant(&mut state, res.id, min_bytes);
+        drop(state);
+        res.size += min_bytes;
+        res
+    }
+
+    /// Park the calling thread until some reservation releases bytes or
+    /// `timeout` passes — the push shuffle's backpressure loop waits in
+    /// bounded slices between `try_grow` retries, holding no other lock
+    /// across the wait (a parked pusher must never block the reducers
+    /// whose drains free the bytes it is waiting for).
+    pub(crate) fn wait_for_release(&self, timeout: Duration) {
+        let state = self.shared.state.lock().unwrap();
+        let _ = self.shared.cv.wait_timeout(state, timeout).unwrap();
+    }
+
+    /// Record one backpressure episode initiated outside
+    /// [`MemoryReservation::park_grow`] (the push shuffle runs its own
+    /// slice loop), so [`Self::backpressure_waits`] stays truthful.
+    pub(crate) fn note_backpressure_wait(&self) {
+        self.shared.backpressure_waits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn fits(&self, state: &PoolState, additional: u64) -> bool {
+        state.reserved.saturating_add(additional) <= self.shared.budget
+    }
+
+    /// Record a grant under the lock and refresh the gauge mirrors.
+    fn grant(&self, state: &mut PoolState, id: u64, bytes: u64) {
+        state.reserved += bytes;
+        if let Some(e) = state.consumers.get_mut(&id) {
+            e.reserved += bytes;
+        }
+        self.shared.reserved.store(state.reserved, Ordering::Relaxed);
+        self.shared.peak.fetch_max(state.reserved, Ordering::Relaxed);
+    }
+
+    fn release(&self, state: &mut PoolState, id: u64, bytes: u64) {
+        state.reserved = state.reserved.saturating_sub(bytes);
+        if let Some(e) = state.consumers.get_mut(&id) {
+            e.reserved = e.reserved.saturating_sub(bytes);
+        }
+        self.shared.reserved.store(state.reserved, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+    }
+
+    /// Fairness rule: on a denial, flag the largest spillable consumer
+    /// (preferring one other than the requester) to spill.
+    fn request_fair_spill(&self, state: &mut PoolState, requester: u64) {
+        let victim = state
+            .consumers
+            .iter()
+            .filter(|(id, e)| e.spillable && e.reserved > 0 && **id != requester)
+            .max_by_key(|(id, e)| (e.reserved, std::cmp::Reverse(**id)))
+            .map(|(id, _)| *id)
+            .or_else(|| {
+                state
+                    .consumers
+                    .get(&requester)
+                    .filter(|e| e.spillable && e.reserved > 0)
+                    .map(|_| requester)
+            });
+        if let Some(v) = victim {
+            let e = state.consumers.get_mut(&v).unwrap();
+            if !e.spill_requested {
+                e.spill_requested = true;
+                self.shared.spill_requests.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Non-owning counterpart of [`MemoryPool`] (see
+/// [`MemoryPool::downgrade`]).
+#[derive(Clone)]
+pub struct WeakMemoryPool {
+    shared: std::sync::Weak<PoolShared>,
+}
+
+impl WeakMemoryPool {
+    /// The pool, if any strong handle is still alive.
+    pub fn upgrade(&self) -> Option<MemoryPool> {
+        self.shared.upgrade().map(|shared| MemoryPool { shared })
+    }
+}
+
+/// A named party that wants accounted memory.  Mark it spillable if it
+/// can shed bytes on request (sealing runs to disk, diverting pushes);
+/// only spillable consumers are asked to by the fairness rule.
+pub struct MemoryConsumer {
+    name: String,
+    spillable: bool,
+}
+
+impl MemoryConsumer {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            spillable: false,
+        }
+    }
+
+    /// Declare that this consumer can release memory when asked.
+    pub fn with_can_spill(mut self, can: bool) -> Self {
+        self.spillable = can;
+        self
+    }
+
+    /// Register with a pool, producing the reservation handle.
+    pub fn register(self, pool: &MemoryPool) -> MemoryReservation {
+        let mut state = pool.shared.state.lock().unwrap();
+        let id = state.next_id;
+        state.next_id += 1;
+        state.consumers.insert(
+            id,
+            Entry {
+                name: self.name,
+                spillable: self.spillable,
+                reserved: 0,
+                spill_requested: false,
+            },
+        );
+        drop(state);
+        MemoryReservation {
+            pool: pool.clone(),
+            id,
+            size: 0,
+        }
+    }
+}
+
+/// Outcome of a [`MemoryReservation::park_grow`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParkOutcome {
+    /// The bytes fit (immediately or after waiting).
+    Granted,
+    /// The wait budget expired; the grow was granted past the budget.
+    Overdraft,
+    /// The abort probe fired while parked; nothing was reserved.
+    Aborted,
+}
+
+/// RAII handle to one consumer's accounted bytes.  Dropping it frees
+/// whatever it still holds and deregisters the consumer.
+pub struct MemoryReservation {
+    pool: MemoryPool,
+    id: u64,
+    size: u64,
+}
+
+impl fmt::Debug for MemoryReservation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MemoryReservation")
+            .field("id", &self.id)
+            .field("size", &self.size)
+            .finish()
+    }
+}
+
+impl MemoryReservation {
+    /// Bytes this reservation currently holds.
+    pub fn size(&self) -> u64 {
+        self.size
+    }
+
+    /// The pool this reservation draws from.
+    pub fn pool(&self) -> &MemoryPool {
+        &self.pool
+    }
+
+    /// Try to reserve `bytes` more.  On denial the fair-spill policy
+    /// flags the largest spillable consumer and `false` is returned —
+    /// the caller should shed bytes (seal/spill/divert) and retry, or
+    /// fall back to [`grow`](Self::grow)/[`park_grow`](Self::park_grow).
+    pub fn try_grow(&mut self, bytes: u64) -> bool {
+        if bytes == 0 {
+            return true;
+        }
+        let shared = &self.pool.shared;
+        let mut state = shared.state.lock().unwrap();
+        if self.pool.fits(&state, bytes) {
+            self.pool.grant(&mut state, self.id, bytes);
+            drop(state);
+            self.size += bytes;
+            true
+        } else {
+            shared.denied_grows.fetch_add(1, Ordering::Relaxed);
+            self.pool.request_fair_spill(&mut state, self.id);
+            false
+        }
+    }
+
+    /// Reserve unconditionally — for bytes held regardless of budget.
+    /// Never denies, never blocks; keeps the accounting truthful.
+    pub fn grow(&mut self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let mut state = self.pool.shared.state.lock().unwrap();
+        self.pool.grant(&mut state, self.id, bytes);
+        drop(state);
+        self.size += bytes;
+    }
+
+    /// Backpressure: block in bounded slices until `bytes` fit, the
+    /// `aborted` probe fires, or `max_wait` expires (then the grow is
+    /// granted as a counted overdraft so no configuration deadlocks).
+    pub fn park_grow(
+        &mut self,
+        bytes: u64,
+        max_wait: Duration,
+        aborted: &dyn Fn() -> bool,
+    ) -> ParkOutcome {
+        if bytes == 0 {
+            return ParkOutcome::Granted;
+        }
+        let shared = &self.pool.shared;
+        let mut state = shared.state.lock().unwrap();
+        if self.pool.fits(&state, bytes) {
+            self.pool.grant(&mut state, self.id, bytes);
+            drop(state);
+            self.size += bytes;
+            return ParkOutcome::Granted;
+        }
+        shared.denied_grows.fetch_add(1, Ordering::Relaxed);
+        shared.backpressure_waits.fetch_add(1, Ordering::Relaxed);
+        self.pool.request_fair_spill(&mut state, self.id);
+        let t0 = Instant::now();
+        loop {
+            if aborted() {
+                return ParkOutcome::Aborted;
+            }
+            if self.pool.fits(&state, bytes) {
+                self.pool.grant(&mut state, self.id, bytes);
+                drop(state);
+                self.size += bytes;
+                return ParkOutcome::Granted;
+            }
+            if t0.elapsed() >= max_wait {
+                shared.overdrafts.fetch_add(1, Ordering::Relaxed);
+                self.pool.grant(&mut state, self.id, bytes);
+                drop(state);
+                self.size += bytes;
+                return ParkOutcome::Overdraft;
+            }
+            let (s, _) = shared.cv.wait_timeout(state, PARK_SLICE).unwrap();
+            state = s;
+        }
+    }
+
+    /// Return `bytes` to the pool (clamped to the held size) and wake
+    /// parked growers and queued admissions.
+    pub fn shrink(&mut self, bytes: u64) {
+        let bytes = bytes.min(self.size);
+        if bytes == 0 {
+            return;
+        }
+        let mut state = self.pool.shared.state.lock().unwrap();
+        self.pool.release(&mut state, self.id, bytes);
+        drop(state);
+        self.size -= bytes;
+    }
+
+    /// Return everything.
+    pub fn free(&mut self) {
+        let held = self.size;
+        self.shrink(held);
+    }
+
+    /// Resize to exactly `bytes` (grow unconditionally or shrink).
+    pub fn resize(&mut self, bytes: u64) {
+        if bytes > self.size {
+            self.grow(bytes - self.size);
+        } else {
+            self.shrink(self.size - bytes);
+        }
+    }
+
+    /// Consume a pending fair-spill request, if one was flagged for
+    /// this consumer.  Returns `true` at most once per request; the
+    /// caller responds by shedding bytes.
+    pub fn take_spill_request(&mut self) -> bool {
+        let mut state = self.pool.shared.state.lock().unwrap();
+        match state.consumers.get_mut(&self.id) {
+            Some(e) if e.spill_requested => {
+                e.spill_requested = false;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// The registered consumer name (for diagnostics).
+    pub fn consumer_name(&self) -> String {
+        let state = self.pool.shared.state.lock().unwrap();
+        state
+            .consumers
+            .get(&self.id)
+            .map(|e| e.name.clone())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for MemoryReservation {
+    fn drop(&mut self) {
+        let mut state = self.pool.shared.state.lock().unwrap();
+        let held = self.size;
+        if held > 0 {
+            self.pool.release(&mut state, self.id, held);
+        }
+        state.consumers.remove(&self.id);
+        drop(state);
+        self.pool.shared.cv.notify_all();
+        self.size = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::thread;
+
+    #[test]
+    fn grow_shrink_free_roundtrip() {
+        let pool = MemoryPool::new(1000);
+        let mut r = MemoryConsumer::new("a").register(&pool);
+        assert!(r.try_grow(400));
+        assert_eq!(pool.reserved_bytes(), 400);
+        r.shrink(150);
+        assert_eq!(pool.reserved_bytes(), 250);
+        assert_eq!(r.size(), 250);
+        r.free();
+        assert_eq!(pool.reserved_bytes(), 0);
+        assert_eq!(pool.peak_bytes(), 400);
+        assert_eq!(pool.denied_grows(), 0);
+    }
+
+    #[test]
+    fn try_grow_denies_past_budget_and_flags_largest_spillable() {
+        let pool = MemoryPool::new(1000);
+        let mut big = MemoryConsumer::new("big").with_can_spill(true).register(&pool);
+        let mut small = MemoryConsumer::new("small")
+            .with_can_spill(true)
+            .register(&pool);
+        assert!(big.try_grow(700));
+        assert!(small.try_grow(200));
+        let mut asker = MemoryConsumer::new("asker").register(&pool);
+        assert!(!asker.try_grow(200));
+        assert_eq!(pool.denied_grows(), 1);
+        assert_eq!(pool.spill_requests(), 1);
+        // the *largest* spillable consumer got the request
+        assert!(big.take_spill_request());
+        assert!(!small.take_spill_request());
+        // the flag is one-shot
+        assert!(!big.take_spill_request());
+    }
+
+    #[test]
+    fn unlimited_pool_never_denies() {
+        let pool = MemoryPool::unlimited();
+        let mut r = MemoryConsumer::new("x").register(&pool);
+        assert!(r.try_grow(u64::MAX / 2));
+        assert_eq!(pool.denied_grows(), 0);
+    }
+
+    #[test]
+    fn drop_frees_and_deregisters() {
+        let pool = MemoryPool::new(100);
+        {
+            let mut r = MemoryConsumer::new("t").register(&pool);
+            r.grow(80);
+            assert_eq!(pool.consumer_count(), 1);
+        }
+        assert_eq!(pool.reserved_bytes(), 0);
+        assert_eq!(pool.consumer_count(), 0);
+    }
+
+    #[test]
+    fn park_grow_unblocks_on_shrink() {
+        let pool = MemoryPool::new(100);
+        let mut holder = MemoryConsumer::new("holder").register(&pool);
+        holder.grow(90);
+        let pool2 = pool.clone();
+        let t = thread::spawn(move || {
+            let mut waiter = MemoryConsumer::new("waiter").register(&pool2);
+            let out = waiter.park_grow(50, Duration::from_secs(10), &|| false);
+            (out, waiter.size())
+        });
+        thread::sleep(Duration::from_millis(20));
+        holder.shrink(60);
+        let (out, size) = t.join().unwrap();
+        assert_eq!(out, ParkOutcome::Granted);
+        assert_eq!(size, 50);
+        assert_eq!(pool.backpressure_waits(), 1);
+        assert_eq!(pool.overdrafts(), 0);
+    }
+
+    #[test]
+    fn park_grow_observes_abort() {
+        let pool = MemoryPool::new(10);
+        let mut holder = MemoryConsumer::new("holder").register(&pool);
+        holder.grow(10);
+        let aborted = Arc::new(AtomicBool::new(false));
+        let a2 = Arc::clone(&aborted);
+        let pool2 = pool.clone();
+        let t = thread::spawn(move || {
+            let mut w = MemoryConsumer::new("w").register(&pool2);
+            w.park_grow(5, Duration::from_secs(30), &|| a2.load(Ordering::Relaxed))
+        });
+        thread::sleep(Duration::from_millis(10));
+        aborted.store(true, Ordering::Relaxed);
+        assert_eq!(t.join().unwrap(), ParkOutcome::Aborted);
+    }
+
+    #[test]
+    fn park_grow_overdrafts_after_wait_budget() {
+        let pool = MemoryPool::new(10);
+        let mut holder = MemoryConsumer::new("holder").register(&pool);
+        holder.grow(10);
+        let mut w = MemoryConsumer::new("w").register(&pool);
+        let out = w.park_grow(5, Duration::from_millis(10), &|| false);
+        assert_eq!(out, ParkOutcome::Overdraft);
+        assert_eq!(pool.overdrafts(), 1);
+        assert!(pool.reserved_bytes() > pool.budget_bytes());
+    }
+
+    #[test]
+    fn admission_queues_until_floor_fits() {
+        let pool = MemoryPool::new(100);
+        let mut holder = MemoryConsumer::new("job-a").register(&pool);
+        holder.grow(80);
+        let pool2 = pool.clone();
+        let t = thread::spawn(move || {
+            let res = pool2.admit("job-b", 50, Duration::from_secs(10));
+            res.size()
+        });
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(pool.admission_waits(), 1);
+        holder.shrink(50);
+        assert_eq!(t.join().unwrap(), 50);
+    }
+
+    #[test]
+    fn admission_is_immediate_when_it_fits() {
+        let pool = MemoryPool::new(100);
+        let res = pool.admit("job", 40, Duration::from_secs(1));
+        assert_eq!(res.size(), 40);
+        assert_eq!(pool.admission_waits(), 0);
+    }
+
+    #[test]
+    fn concurrent_growers_never_exceed_budget_without_overdraft() {
+        let pool = MemoryPool::new(10_000);
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let p = pool.clone();
+            handles.push(thread::spawn(move || {
+                let mut r = MemoryConsumer::new(format!("c{i}")).register(&p);
+                for _ in 0..200 {
+                    if r.try_grow(64) {
+                        assert!(p.reserved_bytes() <= p.budget_bytes());
+                        r.shrink(64);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.reserved_bytes(), 0);
+        assert!(pool.peak_bytes() <= pool.budget_bytes());
+        assert_eq!(pool.overdrafts(), 0);
+    }
+}

@@ -245,6 +245,53 @@
 //! Rule of thumb: counters for volumes, stats for phase durations and
 //! skew summaries, trace for per-attempt forensics and timelines.
 //!
+//! ## Memory management
+//!
+//! Concurrent jobs on one scheduler share a single byte budget through
+//! the [`memory::MemoryPool`] (attach with
+//! [`SchedulerConfig::with_memory_pool`](scheduler::SchedulerConfig::with_memory_pool)
+//! or per-job via [`JobConfig::memory`]).  Three layers account under
+//! it:
+//!
+//! * **Map-side sorters** — each map task registers a spillable
+//!   consumer and `try_grow`s per emitted record.  A denied grow (or a
+//!   fair-spill request) seals the current run *early* — before the
+//!   record budget — and routes it through the normal seal path, so
+//!   the bytes leave as a spill file or a pushed run.  Early sealing
+//!   only changes run boundaries, never record order, so outputs stay
+//!   byte-identical to the unpooled engine.
+//! * **Push mailboxes** — [`push::ShuffleService`] reserves each
+//!   committed/staged in-memory run's bytes.  A denied reservation
+//!   either **diverts the run to disk** (when the job has a
+//!   [`SpillSpec`] — the run enters the mailbox as a file, costing ~0
+//!   pool bytes) or **backpressures the pusher**: the map thread parks
+//!   in bounded slices until reducers drain the mailbox
+//!   ([`MemoryReservation::park_grow`](memory::MemoryReservation::park_grow)),
+//!   re-checking the service's abort flag each slice so a dying wave
+//!   still unwinds.  Hand-outs and partition releases shrink the
+//!   reservation and wake parked pushers.
+//! * **Reduce merge windows** — each reduce task reserves its held
+//!   in-memory run bytes plus the bounded streaming-read window
+//!   (`max_buffer_bytes`) of every spilled run it merges.
+//!
+//! **Reservation lifecycle**: register a
+//! [`memory::MemoryConsumer`] → receive a
+//! [`memory::MemoryReservation`] → `try_grow`/`grow`/`park_grow` to
+//! take bytes, `shrink`/`free` to return them; dropping the
+//! reservation returns the remainder.  **Fairness rule**: a denial
+//! flags the *largest spillable* consumer (preferring one other than
+//! the requester) to spill first, so the heaviest elastic holder pays,
+//! not whoever asked last.  **Backpressure vs divert-to-disk**: a
+//! pusher with a spill codec diverts (cheap, latency-free for the map
+//! thread); one without parks until memory returns, with a bounded
+//! overdraft escape so no configuration can deadlock.  The scheduler
+//! additionally **admission-controls** jobs: a job whose minimum
+//! working-set floor cannot be reserved queues before starting tasks
+//! ([`memory::MemoryPool::admit`]), and the distributed executors'
+//! run stores account their held runs under the same pool.  A `None`
+//! pool costs nothing; an unlimited pool never denies — both are
+//! byte-identical (output *and* counters) to the unpooled engine.
+//!
 //! A fourth layer watches the engine itself, *while it runs*: the
 //! **metrics registry** ([`crate::metrics::registry`]).  Attach a
 //! [`MetricsSpec`](crate::metrics::registry::MetricsSpec) with
@@ -274,6 +321,7 @@ pub mod dfs;
 mod driver;
 pub mod engine;
 pub mod fault;
+pub mod memory;
 pub mod push;
 pub mod scheduler;
 pub mod seqfile;
@@ -290,6 +338,7 @@ pub use config::JobConfig;
 pub use counters::Counters;
 pub use engine::{run_job, run_job_with_combiner, DeadLetter, JobOutcome, JobResult, JobStats};
 pub use fault::{FaultKind, FaultPlan, FaultSpec, TaskPhase};
+pub use memory::{MemoryConsumer, MemoryPool, MemoryReservation, ParkOutcome};
 pub use push::{PushAttempt, ShuffleService};
 pub use scheduler::{
     ChannelTransport, DistConfig, DistScheduler, Exec, JobHandle, JobScheduler, KillPlan,

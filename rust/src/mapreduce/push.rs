@@ -68,8 +68,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use super::counters::{names, Counters};
+use super::memory::{MemoryConsumer, MemoryPool, MemoryReservation, DEFAULT_PARK_WAIT, PARK_SLICE};
 use super::shuffle::MergeIter;
-use super::sortspill::Run;
+use super::sortspill::{ResolvedSpill, Run};
 use super::trace::{JobTraceCtx, TraceEvent, TracePhase};
 use super::types::SizeEstimate;
 use crate::metrics::registry::MailboxStats;
@@ -128,7 +129,25 @@ pub struct ShuffleService<T> {
     /// [`TraceEvent::RunRetracted`] stamped with the pushing map task's
     /// coordinates.
     trace: Option<JobTraceCtx>,
+    /// Pool accounting for mailbox residency, when a memory pool is
+    /// configured ([`Self::with_memory`]); `None` keeps the service
+    /// entirely accounting-free.
+    memory: Option<MailboxMemory>,
+    /// Where a denied push diverts its run to disk instead of parking.
+    /// Dormant when the job already spills map runs (they arrive as
+    /// [`Run::Spilled`] with zero resident cost and are never denied).
+    divert: Option<ResolvedSpill<T>>,
     num_partitions: usize,
+}
+
+/// The mailbox reservation: one pool consumer covering every resident
+/// byte parked in the service (committed and staged in-memory runs).
+/// The reservation sits behind its own mutex — acquired only for quick
+/// grow/shrink calls, never held across a wait — and the pool handle
+/// drives the bounded-slice backpressure waits.
+struct MailboxMemory {
+    res: Mutex<MemoryReservation>,
+    pool: MemoryPool,
 }
 
 impl<T> ShuffleService<T> {
@@ -159,8 +178,30 @@ impl<T> ShuffleService<T> {
             retain_runs: false,
             counters,
             trace: None,
+            memory: None,
+            divert: None,
             num_partitions,
         }
+    }
+
+    /// Account mailbox residency under `pool` (registering a
+    /// non-spillable "mailboxes" consumer — the mailboxes cannot shed
+    /// bytes themselves; relief comes from reducers draining or from
+    /// pushers diverting).  With a `divert` spec, a denied push writes
+    /// its run to disk instead of parking; without one it backpressures
+    /// (see [`Self::push_run`]).  `None` pool keeps the service free of
+    /// any accounting work.
+    pub(crate) fn with_memory(
+        mut self,
+        pool: Option<&MemoryPool>,
+        divert: Option<ResolvedSpill<T>>,
+    ) -> Self {
+        self.memory = pool.map(|p| MailboxMemory {
+            res: Mutex::new(MemoryConsumer::new("mailboxes").register(p)),
+            pool: p.clone(),
+        });
+        self.divert = divert;
+        self
     }
 
     /// Keep committed runs in the mailboxes after they are handed to a
@@ -230,13 +271,109 @@ impl<T> ShuffleService<T> {
         }
     }
 
-    fn push_run(&self, attempt: u64, task: usize, wave_attempt: u32, partition: usize, run: Run<T>) {
+    /// Charge `run`'s resident bytes to the mailbox reservation *before*
+    /// the state lock is taken — a pusher waiting for pool space must
+    /// never hold it, because the reducers draining the mailboxes (and
+    /// thereby freeing those bytes) need it.  On a denied grow, the run
+    /// is diverted to disk when a divert spec exists (resident cost
+    /// drops to ~0, no reservation needed); otherwise the push
+    /// backpressures: bounded-slice waits between retries, an
+    /// unconditional grow after [`DEFAULT_PARK_WAIT`] so a mis-sized
+    /// pool degrades instead of wedging, and the run is dropped
+    /// (returning `None`) if the wave aborts while parked.  Returns the
+    /// possibly-diverted run plus the bytes now charged for it.
+    fn charge_for(
+        &self,
+        task: usize,
+        wave_attempt: u32,
+        partition: usize,
+        run: Run<T>,
+    ) -> Option<(Run<T>, u64)>
+    where
+        T: SizeEstimate,
+    {
+        let Some(mem) = &self.memory else {
+            return Some((run, 0));
+        };
+        let bytes = run.pool_bytes();
+        if bytes == 0 {
+            return Some((run, 0));
+        }
+        if mem.res.lock().unwrap().try_grow(bytes) {
+            return Some((run, bytes));
+        }
+        self.counters.inc(names::POOL_DENIED_GROWS);
+        self.emit(
+            task,
+            wave_attempt,
+            TraceEvent::ReservationDenied { requested: bytes },
+        );
+        if let Some(sp) = &self.divert {
+            let Run::Mem(v) = run else {
+                unreachable!("spilled runs have zero pool cost")
+            };
+            let rf = sp
+                .write_run(&v)
+                .unwrap_or_else(|e| panic!("divert push run: {e:#}"));
+            self.counters.inc(names::POOL_SPILL_REQUESTS);
+            self.emit(
+                task,
+                wave_attempt,
+                TraceEvent::SpillWritten {
+                    partition,
+                    records: rf.records(),
+                    file_bytes: rf.file_bytes(),
+                },
+            );
+            return Some((Run::Spilled(rf), 0));
+        }
+        self.counters.inc(names::POOL_BACKPRESSURE_WAITS);
+        mem.pool.note_backpressure_wait();
+        self.emit(task, wave_attempt, TraceEvent::BackpressureApplied { bytes });
+        let deadline = Instant::now() + DEFAULT_PARK_WAIT;
+        loop {
+            if self.state.lock().unwrap().aborted {
+                // the wave is unwinding: drop the run instead of feeding
+                // mailboxes nobody will drain
+                return None;
+            }
+            if mem.res.lock().unwrap().try_grow(bytes) {
+                return Some((run, bytes));
+            }
+            if Instant::now() >= deadline {
+                // bounded wait expired — take the bytes unconditionally
+                mem.res.lock().unwrap().grow(bytes);
+                return Some((run, bytes));
+            }
+            mem.pool.wait_for_release(PARK_SLICE);
+        }
+    }
+
+    /// Return `bytes` of mailbox residency to the pool (runs handed out,
+    /// retracted, or released).  Callers must not hold the state lock.
+    fn uncharge(&self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        if let Some(mem) = &self.memory {
+            mem.res.lock().unwrap().shrink(bytes);
+        }
+    }
+
+    fn push_run(&self, attempt: u64, task: usize, wave_attempt: u32, partition: usize, run: Run<T>)
+    where
+        T: SizeEstimate,
+    {
         assert!(partition < self.num_partitions, "partition out of range");
+        let Some((run, charged)) = self.charge_for(task, wave_attempt, partition, run) else {
+            return;
+        };
         let mut st = self.state.lock().unwrap();
         if st.task_done[task] {
             // a loser still running after its task was decided: drop the
             // run (spill files are deleted when the handle drops)
             drop(st);
+            self.uncharge(charged);
             self.emit(task, wave_attempt, TraceEvent::RunRetracted { partition });
             return;
         }
@@ -270,14 +407,24 @@ impl<T> ShuffleService<T> {
     /// staged mode the winner's staged runs move into the mailboxes and
     /// every other staged attempt of the task is retracted.  Returns
     /// whether this attempt won.
-    fn commit_task(&self, task: usize, attempt: u64) -> bool {
+    fn commit_task(&self, task: usize, attempt: u64) -> bool
+    where
+        T: SizeEstimate,
+    {
         // (wave_attempt, event) pairs emitted after the state lock drops
         let mut emits: Vec<(u32, TraceEvent)> = Vec::new();
+        // resident bytes of retracted staged runs, uncharged after the
+        // state lock drops (never call into the pool while holding it)
+        let track = self.memory.is_some();
+        let mut retracted: u64 = 0;
         let mut st = self.state.lock().unwrap();
         if st.task_done[task] {
             // lost the commit race: retract this attempt's staged runs
             if let Some(staged) = st.staged.remove(&attempt) {
-                for (partition, _) in &staged.runs {
+                for (partition, run) in &staged.runs {
+                    if track {
+                        retracted += run.pool_bytes();
+                    }
                     emits.push((
                         staged.wave_attempt,
                         TraceEvent::RunRetracted { partition: *partition },
@@ -285,6 +432,7 @@ impl<T> ShuffleService<T> {
                 }
             }
             drop(st);
+            self.uncharge(retracted);
             for (wa, ev) in emits {
                 self.emit(task, wa, ev);
             }
@@ -313,7 +461,10 @@ impl<T> ShuffleService<T> {
             // retract any other attempt of this task that already staged
             for s in st.staged.values() {
                 if s.task == task {
-                    for (partition, _) in &s.runs {
+                    for (partition, run) in &s.runs {
+                        if track {
+                            retracted += run.pool_bytes();
+                        }
                         emits.push((
                             s.wave_attempt,
                             TraceEvent::RunRetracted { partition: *partition },
@@ -329,6 +480,7 @@ impl<T> ShuffleService<T> {
         }
         self.cv.notify_all();
         drop(st);
+        self.uncharge(retracted);
         for (wa, ev) in emits {
             self.emit(task, wa, ev);
         }
@@ -341,15 +493,23 @@ impl<T> ShuffleService<T> {
     /// the task is marked decided with **zero committed runs**, and the
     /// committed-prefix frontier advances past it — so reducers stop
     /// waiting on a task that will never push.
-    pub(crate) fn fail_task(&self, task: usize) {
+    pub(crate) fn fail_task(&self, task: usize)
+    where
+        T: SizeEstimate,
+    {
         let mut emits: Vec<(u32, TraceEvent)> = Vec::new();
+        let track = self.memory.is_some();
+        let mut retracted: u64 = 0;
         let mut st = self.state.lock().unwrap();
         if st.task_done[task] {
             return;
         }
         for s in st.staged.values() {
             if s.task == task {
-                for (partition, _) in &s.runs {
+                for (partition, run) in &s.runs {
+                    if track {
+                        retracted += run.pool_bytes();
+                    }
                     emits.push((
                         s.wave_attempt,
                         TraceEvent::RunRetracted { partition: *partition },
@@ -364,6 +524,7 @@ impl<T> ShuffleService<T> {
         }
         self.cv.notify_all();
         drop(st);
+        self.uncharge(retracted);
         for (wa, ev) in emits {
             self.emit(task, wa, ev);
         }
@@ -429,25 +590,34 @@ impl<T> ShuffleService<T> {
     /// restart from `taken == 0` against the intact mailbox.
     pub fn wait_more(&self, j: usize, taken: usize) -> (Vec<Run<T>>, bool)
     where
-        T: Clone,
+        T: Clone + SizeEstimate,
     {
         let mut st = self.state.lock().unwrap();
-        loop {
+        let (runs, sealed) = loop {
             let limit = run_key(st.done_prefix + 1, 0);
             let eligible = st.committed[j].partition_point(|(k, _)| *k < limit);
             if eligible > taken {
                 let runs = Self::hand_out(&mut st.committed[j][taken..eligible], self.retain_runs);
                 // post-seal every run is eligible, so a sealed flag here
                 // means this batch is already the final one
-                return (runs, st.sealed);
+                break (runs, st.sealed);
             }
             if st.sealed {
                 let total = st.committed[j].len();
                 let runs = Self::hand_out(&mut st.committed[j][taken..total], self.retain_runs);
-                return (runs, true);
+                break (runs, true);
             }
             st = self.cv.wait(st).unwrap();
+        };
+        drop(st);
+        // in moving mode the handed-out runs left the mailbox: their
+        // bytes return to the pool (this shrink is what unparks a
+        // backpressured pusher).  In retained mode the mailbox keeps its
+        // copy — release_partition settles the account at task commit.
+        if !self.retain_runs && self.memory.is_some() {
+            self.uncharge(runs.iter().map(Run::pool_bytes).sum());
         }
+        (runs, sealed)
     }
 
     fn hand_out(slots: &mut [(u64, Option<Run<T>>)], retain: bool) -> Vec<Run<T>>
@@ -471,9 +641,23 @@ impl<T> ShuffleService<T> {
     /// the mailbox's spill-file handles must release so run files are
     /// deleted with the job.  No-op in the default (moving) mode, where
     /// the hand-out already emptied the slots.
-    pub(crate) fn release_partition(&self, j: usize) {
+    pub(crate) fn release_partition(&self, j: usize)
+    where
+        T: SizeEstimate,
+    {
         let mut st = self.state.lock().unwrap();
+        let bytes = if self.memory.is_some() {
+            st.committed[j]
+                .iter()
+                .filter_map(|(_, r)| r.as_ref())
+                .map(Run::pool_bytes)
+                .sum()
+        } else {
+            0
+        };
         st.committed[j].clear();
+        drop(st);
+        self.uncharge(bytes);
     }
 
     /// How many runs have been committed into partition `j` so far — the
@@ -524,8 +708,13 @@ pub struct PushAttempt<T> {
 impl<T> PushAttempt<T> {
     /// Push one sealed (and combined, and possibly spilled) run for
     /// `partition`.  Visible to reducers immediately in single-attempt
-    /// mode, on [`PushAttempt::finish`] in staged mode.
-    pub fn push(&self, partition: usize, run: Run<T>) {
+    /// mode, on [`PushAttempt::finish`] in staged mode.  With a memory
+    /// pool attached this may block (bounded) or divert the run to disk
+    /// — see [`ShuffleService::with_memory`].
+    pub fn push(&self, partition: usize, run: Run<T>)
+    where
+        T: SizeEstimate,
+    {
         self.svc
             .push_run(self.id, self.task, self.wave_attempt, partition, run);
     }
@@ -533,7 +722,10 @@ impl<T> PushAttempt<T> {
     /// Close the attempt: first finisher wins the task, committing its
     /// staged runs; a loser's are retracted.  Returns whether this
     /// attempt won.
-    pub fn finish(self) -> bool {
+    pub fn finish(self) -> bool
+    where
+        T: SizeEstimate,
+    {
         self.svc.commit_task(self.task, self.id)
     }
 }
@@ -566,8 +758,8 @@ pub(crate) fn collect_reduce_sources<K, V>(
     j: usize,
 ) -> (Vec<Run<(K, V)>>, u64, f64)
 where
-    K: Ord + Clone,
-    V: Clone,
+    K: Ord + Clone + SizeEstimate,
+    V: Clone + SizeEstimate,
 {
     let mut taken = 0usize;
     // pre-merged prefix segments, in run-position order
@@ -818,5 +1010,74 @@ mod tests {
             vec![1, 2, 3, 4, 5]
         );
         assert!(late <= 1, "only task 2's run can be late, got {late}");
+    }
+
+    #[test]
+    fn backpressured_push_unblocks_when_reducer_drains() {
+        let counters = Arc::new(Counters::new());
+        // each (u32, u32) record estimates 8 bytes: two 1-record runs
+        // fill the pool exactly
+        let pool = MemoryPool::new(16);
+        let svc = Arc::new(
+            ShuffleService::new(1, 1, false, Arc::clone(&counters)).with_memory(Some(&pool), None),
+        );
+        let a0 = ShuffleService::begin_attempt(&svc, 0);
+        a0.push(0, mem(&[(1, 0)]));
+        a0.push(0, mem(&[(2, 0)]));
+        assert_eq!(pool.reserved_bytes(), 16);
+        let pusher = std::thread::spawn(move || {
+            // pool full: this push parks until the reducer drains
+            a0.push(0, mem(&[(3, 0)]));
+            assert!(a0.finish());
+        });
+        // wait until the pusher is provably parked before draining, so
+        // the backpressure path (not a lucky early grant) is what this
+        // test exercises
+        while counters.get(names::POOL_BACKPRESSURE_WAITS) == 0 {
+            std::thread::yield_now();
+        }
+        let (batch, _) = svc.wait_more(0, 0);
+        assert_eq!(batch.len(), 2, "both committed runs drain");
+        pusher.join().unwrap();
+        svc.seal();
+        let (rest, sealed) = svc.wait_more(0, 2);
+        assert!(sealed);
+        assert_eq!(rest.len(), 1, "the parked push landed after the drain");
+        assert_eq!(pool.reserved_bytes(), 0, "drained mailboxes hold no bytes");
+        assert!(pool.backpressure_waits() >= 1);
+    }
+
+    #[test]
+    fn denied_push_diverts_run_to_disk_under_divert_spec() {
+        use super::super::sortspill::{KeyValueCodec, TempSpillDir, U32Codec};
+        let counters = Arc::new(Counters::new());
+        let pool = MemoryPool::new(8);
+        let tmp = TempSpillDir::new("push-divert").unwrap();
+        let divert = ResolvedSpill {
+            dir: tmp.path().to_path_buf(),
+            compress: false,
+            codec: Arc::new(KeyValueCodec::new(U32Codec, U32Codec)),
+        };
+        let svc = Arc::new(
+            ShuffleService::new(1, 1, false, Arc::clone(&counters))
+                .with_memory(Some(&pool), Some(divert)),
+        );
+        let a0 = ShuffleService::begin_attempt(&svc, 0);
+        a0.push(0, mem(&[(1, 0)])); // fills the pool
+        a0.push(0, mem(&[(2, 0), (3, 0)])); // denied → written to disk
+        assert!(a0.finish());
+        assert_eq!(counters.get(names::POOL_SPILL_REQUESTS), 1);
+        assert_eq!(counters.get(names::POOL_DENIED_GROWS), 1);
+        assert_eq!(pool.reserved_bytes(), 8, "a diverted run costs no pool bytes");
+        svc.seal();
+        let (batch, sealed) = svc.wait_more(0, 0);
+        assert!(sealed);
+        assert_eq!(batch.len(), 2);
+        assert!(
+            matches!(batch[1], Run::Spilled(_)),
+            "the denied run must arrive as a run file"
+        );
+        let merged: Vec<(u32, u32)> = batch.into_iter().flat_map(Run::into_records).collect();
+        assert_eq!(merged, vec![(1, 0), (2, 0), (3, 0)]);
     }
 }

@@ -48,6 +48,7 @@ use crate::mapreduce::engine::{
     ReduceTaskOutput,
 };
 use crate::mapreduce::fault::{FaultInjector, FaultPlan, TaskPhase};
+use crate::mapreduce::memory::{MemoryPool, ADMISSION_FLOOR_PER_TASK, DEFAULT_ADMIT_WAIT};
 use crate::mapreduce::trace::{TraceEvent, TracePhase};
 use crate::mapreduce::types::{MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate};
 use crate::metrics::registry::{ExecutorLane, MetricsSpec};
@@ -88,6 +89,11 @@ pub struct DistConfig {
     /// torn-link path `prop_exec.rs` pins.
     pub fetch_drops: u32,
     pub metrics: Option<MetricsSpec>,
+    /// Shared memory pool every executor's [`RunStore`](super::executor)
+    /// and task bodies account against (per-job
+    /// [`JobConfig::memory`](crate::mapreduce::config::JobConfig) wins
+    /// where both are set). `None` is a strict no-op.
+    pub memory: Option<MemoryPool>,
 }
 
 impl DistConfig {
@@ -101,6 +107,7 @@ impl DistConfig {
             kill: None,
             fetch_drops: 0,
             metrics: None,
+            memory: None,
         }
     }
 
@@ -136,6 +143,11 @@ impl DistConfig {
 
     pub fn with_metrics(mut self, metrics: MetricsSpec) -> Self {
         self.metrics = Some(metrics);
+        self
+    }
+
+    pub fn with_memory_pool(mut self, pool: MemoryPool) -> Self {
+        self.memory = Some(pool);
         self
     }
 }
@@ -267,6 +279,15 @@ impl DistScheduler {
         });
         let injector = FaultInjector::from_plan(faults);
 
+        // ---- memory pool: job override wins, then admission control -----
+        // (same protocol as the in-process scheduler; held until this
+        // driver returns)
+        let pool = config.memory.clone().or_else(|| self.cfg.memory.clone());
+        let _admission = pool.as_ref().map(|p| {
+            let tasks = m.min(n).max(1) as u64;
+            p.admit(&config.name, tasks * ADMISSION_FLOOR_PER_TASK, DEFAULT_ADMIT_WAIT)
+        });
+
         // ---- wire the transport and spawn the executors -----------------
         let transport = ChannelTransport::with_faults(TransportFaults {
             drop_data_sends: self.cfg.fetch_drops,
@@ -307,6 +328,7 @@ impl DistScheduler {
                 t0: t_start,
                 fetch_attempts: FETCH_ATTEMPTS,
                 fetch_timeout: FETCH_TIMEOUT,
+                memory: pool.clone(),
             };
             let tp = transport.clone();
             handles.push(

@@ -27,6 +27,7 @@
 //!   N-th completed map — the scheduler observes the dead link on its
 //!   next send and resubmits everything this executor held.
 
+use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
@@ -39,8 +40,9 @@ use crate::mapreduce::engine::{
     exec_map_task, exec_reduce_task, CombineFn, GroupFn, MapTaskOutput, ReduceTaskOutput,
 };
 use crate::mapreduce::fault::{FaultInjector, TaskPhase};
+use crate::mapreduce::memory::{MemoryConsumer, MemoryPool, MemoryReservation};
 use crate::mapreduce::sortspill::{next_run_id, Codec, ResolvedSpill, Run};
-use crate::mapreduce::trace::{JobTraceCtx, TraceEvent, TracePhase};
+use crate::mapreduce::trace::{JobTraceCtx, TaskTraceCtx, TraceEvent, TracePhase};
 use crate::mapreduce::types::{MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate};
 
 use super::transport::{LinkClass, RxLink, Transport, TxLink};
@@ -171,8 +173,17 @@ impl<T> RunStore<T> {
     }
 
     /// Register a map task's runs, assigning each a process-unique id.
-    /// Returns per-partition (run count, run ids) for the registry.
-    fn insert(&mut self, task: usize, buckets: Vec<Vec<Run<T>>>) -> (Vec<u32>, Vec<Vec<u64>>) {
+    /// Returns per-partition (run count, run ids) for the registry, plus
+    /// the pool bytes of any entry this insert replaced (a speculation
+    /// loser's stale registration) so the store's reservation can shrink.
+    fn insert(
+        &mut self,
+        task: usize,
+        buckets: Vec<Vec<Run<T>>>,
+    ) -> (Vec<u32>, Vec<Vec<u64>>, u64)
+    where
+        T: SizeEstimate,
+    {
         let with_ids: Vec<Vec<(u64, Run<T>)>> = buckets
             .into_iter()
             .map(|runs| runs.into_iter().map(|r| (next_run_id(), r)).collect())
@@ -182,8 +193,12 @@ impl<T> RunStore<T> {
             .iter()
             .map(|runs| runs.iter().map(|(id, _)| *id).collect())
             .collect();
-        self.tasks.insert(task, with_ids);
-        (counts, ids)
+        let replaced = self
+            .tasks
+            .insert(task, with_ids)
+            .map(|old| old.iter().flatten().map(|(_, run)| run.pool_bytes()).sum())
+            .unwrap_or(0);
+        (counts, ids, replaced)
     }
 }
 
@@ -220,6 +235,9 @@ where
     pub t0: Instant,
     pub fetch_attempts: u32,
     pub fetch_timeout: Duration,
+    /// Shared memory pool: the executor's [`RunStore`] accounts its
+    /// resident run bytes here and task bodies reserve through it.
+    pub memory: Option<MemoryPool>,
 }
 
 /// One reduce task accumulating fetched sources until sealed. The
@@ -278,9 +296,36 @@ pub(crate) fn run_executor<KI, VI, KT, VT, KO, VO, TP>(
         t0,
         fetch_attempts,
         fetch_timeout,
+        memory,
     } = spec;
 
     let store: Arc<Mutex<RunStore<(KT, VT)>>> = Arc::new(Mutex::new(RunStore::new()));
+
+    // The store's resident run bytes, accounted against the shared pool.
+    // The store cannot shed runs on demand (its relief is `DropRuns`),
+    // so it registers non-spillable and a denied grow overdrafts
+    // truthfully: counted, traced, and charged anyway.  Only the control
+    // loop touches the reservation — reservation ops never run under the
+    // store mutex.
+    let store_mem: Option<RefCell<MemoryReservation>> = memory
+        .as_ref()
+        .map(|p| RefCell::new(MemoryConsumer::new("run-store").register(p)));
+    let charge_store =
+        |bytes: u64, replaced: u64, counters: &Counters, tctx: Option<&TaskTraceCtx>| {
+            if let Some(mem) = &store_mem {
+                let mut res = mem.borrow_mut();
+                if replaced > 0 {
+                    res.shrink(replaced);
+                }
+                if bytes > 0 && !res.try_grow(bytes) {
+                    counters.inc(names::POOL_DENIED_GROWS);
+                    if let Some(t) = tctx {
+                        t.emit(TraceEvent::ReservationDenied { requested: bytes });
+                    }
+                    res.grow(bytes);
+                }
+            }
+        };
 
     // Data server: answers peers' fetch requests independently of the
     // control loop, so an executor busy in a task body still serves
@@ -429,7 +474,14 @@ pub(crate) fn run_executor<KI, VI, KT, VT, KO, VO, TP>(
         }
         let result = catch_unwind(AssertUnwindSafe(|| {
             injector.fire_attempt(TaskPhase::Reduce, task, attempt, tctx.as_ref());
-            exec_reduce_task(runs, reducer.as_ref(), grouping.as_ref(), &counters, tctx.as_ref())
+            exec_reduce_task(
+                runs,
+                reducer.as_ref(),
+                grouping.as_ref(),
+                &counters,
+                tctx.as_ref(),
+                memory.as_ref(),
+            )
         }));
         match result {
             Ok(out) => {
@@ -474,6 +526,11 @@ pub(crate) fn run_executor<KI, VI, KT, VT, KO, VO, TP>(
             ToExecutor::Shutdown => return,
             ToExecutor::DropRuns { task, attempt } => {
                 let removed = store.lock().expect("run store poisoned").tasks.remove(&task);
+                if let (Some(mem), Some(buckets)) = (&store_mem, &removed) {
+                    let bytes: u64 =
+                        buckets.iter().flatten().map(|(_, run)| run.pool_bytes()).sum();
+                    mem.borrow_mut().shrink(bytes);
+                }
                 if let (Some(j), Some(buckets)) = (&jctx, removed) {
                     for (partition, runs) in buckets.iter().enumerate() {
                         if !runs.is_empty() {
@@ -494,8 +551,12 @@ pub(crate) fn run_executor<KI, VI, KT, VT, KO, VO, TP>(
                     if let Some(j) = &jctx {
                         j.task(TracePhase::Map, task, attempt).emit(TraceEvent::CheckpointRestore);
                     }
-                    let (run_counts, run_ids) =
-                        store.lock().expect("run store poisoned").insert(task, out.take_runs());
+                    let runs = out.take_runs();
+                    let bytes: u64 = runs.iter().flatten().map(Run::pool_bytes).sum();
+                    let (run_counts, run_ids, replaced) =
+                        store.lock().expect("run store poisoned").insert(task, runs);
+                    let tctx = jctx.as_ref().map(|j| j.task(TracePhase::Map, task, attempt));
+                    charge_store(bytes, replaced, &counters, tctx.as_ref());
                     let _ = tx_out.send(FromExecutor::MapDone {
                         executor: id,
                         task,
@@ -525,6 +586,7 @@ pub(crate) fn run_executor<KI, VI, KT, VT, KO, VO, TP>(
                             &counters,
                             None,
                             tctx.as_ref(),
+                            memory.as_ref(),
                         )
                     }));
                     match result {
@@ -532,10 +594,14 @@ pub(crate) fn run_executor<KI, VI, KT, VT, KO, VO, TP>(
                             if let Some(t) = &tctx {
                                 t.emit(TraceEvent::AttemptFinished);
                             }
-                            let (run_counts, run_ids) = store
+                            let runs = out.take_runs();
+                            let bytes: u64 =
+                                runs.iter().flatten().map(Run::pool_bytes).sum();
+                            let (run_counts, run_ids, replaced) = store
                                 .lock()
                                 .expect("run store poisoned")
-                                .insert(task, out.take_runs());
+                                .insert(task, runs);
+                            charge_store(bytes, replaced, &counters, tctx.as_ref());
                             let _ = tx_out.send(FromExecutor::MapDone {
                                 executor: id,
                                 task,

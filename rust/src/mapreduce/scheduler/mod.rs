@@ -101,12 +101,15 @@ use super::engine::{
     DeadLetter, GroupFn, JobOutcome, JobResult, JobStats, MapTaskOutput, ReduceTaskOutput,
 };
 use super::fault::{FaultInjector, FaultPlan, TaskPhase};
+use super::memory::{MemoryPool, ADMISSION_FLOOR_PER_TASK, DEFAULT_ADMIT_WAIT};
 use super::push::{self, ShuffleService};
 use super::sim::ClusterSpec;
 use super::sortspill::{ResolvedSpill, Run};
 use super::trace::{TraceEvent, TracePhase};
 use super::types::{MapTaskFactory, Partitioner, ReduceTaskFactory, SizeEstimate};
-use crate::metrics::registry::{EngineSnapshot, HealthSampler, MetricsSpec, PoolOccupancy};
+use crate::metrics::registry::{
+    EngineSnapshot, HealthSampler, MetricsSpec, PoolGaugeStats, PoolOccupancy,
+};
 use crate::util::threadpool::{OnceSlots, ThreadPool};
 
 /// Whether jobs on this scheduler ship intermediates through the barrier
@@ -155,6 +158,18 @@ pub struct SchedulerConfig {
     /// default) keeps the engine metric-free — no thread, no atomics on
     /// the task path.
     pub metrics: Option<MetricsSpec>,
+    /// Process-wide memory pool shared by every job on this scheduler:
+    /// map tasks charge their sorter buffers (sealing early when the
+    /// pool denies a grow), push mailboxes charge staged-run residency
+    /// (backpressuring or diverting denied pushes), reduce merges
+    /// reserve their streaming working set, and jobs pass admission
+    /// control before their first wave starts.  `None` (the default)
+    /// keeps the engine entirely accounting-free, and an
+    /// [`MemoryPool::unlimited`] pool never denies — both are strict
+    /// no-ops against the unpooled engine (byte-identical outputs *and*
+    /// counters).  A job can override with
+    /// [`JobConfig::with_memory`](crate::mapreduce::JobConfig::with_memory).
+    pub memory: Option<MemoryPool>,
 }
 
 impl SchedulerConfig {
@@ -170,6 +185,7 @@ impl SchedulerConfig {
             max_task_retries: 0,
             faults: None,
             metrics: None,
+            memory: None,
         }
     }
 
@@ -213,6 +229,15 @@ impl SchedulerConfig {
         self
     }
 
+    /// Budget every job's intermediate memory against `pool` (see
+    /// [`SchedulerConfig::memory`]).  Pass the same pool to several
+    /// schedulers (or [`DistConfig`](crate::mapreduce::scheduler::DistConfig)s)
+    /// to share one process-wide budget.
+    pub fn with_memory_pool(mut self, pool: MemoryPool) -> Self {
+        self.memory = Some(pool);
+        self
+    }
+
     /// Mirror a simulated cluster's slot counts and speculation knob, so
     /// measured and simulated makespans stay comparable.
     pub fn from_cluster(spec: &ClusterSpec) -> Self {
@@ -225,6 +250,7 @@ impl SchedulerConfig {
             max_task_retries: 0,
             faults: None,
             metrics: None,
+            memory: None,
         }
     }
 }
@@ -271,6 +297,18 @@ impl JobScheduler {
         let map_pool = ThreadPool::new(cfg.map_slots);
         let reduce_pool = ThreadPool::new(cfg.reduce_slots);
         let metrics = cfg.metrics.clone();
+        // pool gauges ride the same sampler: the probe holds a weak pool
+        // handle, so it prunes itself once every strong handle is gone
+        if let (Some(spec), Some(pool)) = (&metrics, &cfg.memory) {
+            let weak = pool.downgrade();
+            spec.register_pool_probe(Box::new(move || {
+                weak.upgrade().map(|p| PoolGaugeStats {
+                    reserved_bytes: p.reserved_bytes(),
+                    denied_grows: p.denied_grows(),
+                    spill_requests: p.spill_requests(),
+                })
+            }));
+        }
         let inner = Arc::new(SchedInner {
             cfg,
             map_pool,
@@ -516,6 +554,15 @@ impl JobScheduler {
         let counters = Arc::new(Counters::new());
         let r = config.num_reduce_tasks;
         let sort_budget = config.sort_buffer_records;
+        // ---- memory pool: job override, then admission control ------------
+        // Reserve a small per-runnable-task floor before the first wave
+        // starts, so a saturated pool queues whole jobs instead of
+        // thrashing every running task; held until this driver returns.
+        let pool = config.memory.clone().or_else(|| self.inner.cfg.memory.clone());
+        let _admission = pool.as_ref().map(|p| {
+            let tasks = config.num_map_tasks.min(self.inner.cfg.map_slots).max(1) as u64;
+            p.admit(&config.name, tasks * ADMISSION_FLOOR_PER_TASK, DEFAULT_ADMIT_WAIT)
+        });
         // same spill plumbing as the serial driver: resolve the codec
         // once, hand it to every map attempt (speculative clones write
         // their own run files; only the winner's reach the shuffle)
@@ -574,12 +621,14 @@ impl JobScheduler {
             let ckpt = ckpt.clone();
             let dead_letters = Arc::clone(&dead_letters);
             let jctx = jctx.clone();
+            let pool = pool.clone();
             move |splits: Vec<Vec<(KI, VI)>>| {
                 let split_lens: Vec<u64> = splits.iter().map(|s| s.len() as u64).collect();
                 let map_attempt = {
                     let injector = Arc::clone(&injector);
                     let ckpt = ckpt.clone();
                     let jctx = jctx.clone();
+                    let pool = pool.clone();
                     move |i: usize, attempt: u32, split: Arc<Vec<(KI, VI)>>| {
                         let tctx = jctx.as_ref().map(|j| j.task(TracePhase::Map, i, attempt));
                         let local = Counters::new();
@@ -609,6 +658,7 @@ impl JobScheduler {
                             &local,
                             None,
                             tctx.as_ref(),
+                            pool.as_ref(),
                         );
                         (out, local)
                     }
@@ -685,6 +735,7 @@ impl JobScheduler {
             let ckpt = ckpt.clone();
             let dead_letters = Arc::clone(&dead_letters);
             let jctx = jctx.clone();
+            let pool = pool.clone();
             move |per_reducer_runs: Vec<Vec<Run<(KT, VT)>>>| {
                 let run_counts: Vec<u64> =
                     per_reducer_runs.iter().map(|rs| rs.len() as u64).collect();
@@ -692,6 +743,7 @@ impl JobScheduler {
                     let injector = Arc::clone(&injector);
                     let ckpt = ckpt.clone();
                     let jctx = jctx.clone();
+                    let pool = pool.clone();
                     move |j: usize, attempt: u32, runs: Arc<Vec<Run<(KT, VT)>>>| {
                         let tctx =
                             jctx.as_ref().map(|jc| jc.task(TracePhase::Reduce, j, attempt));
@@ -714,6 +766,7 @@ impl JobScheduler {
                             grouping.as_ref(),
                             &local,
                             tctx.as_ref(),
+                            pool.as_ref(),
                         );
                         (out, local)
                     }
@@ -887,17 +940,31 @@ impl JobScheduler {
         let split_lens: Vec<u64> = splits.iter().map(|s| s.len() as u64).collect();
         let m = splits.len();
 
+        // ---- memory pool: job override, then admission control ------------
+        // (same protocol as the barrier path; held until this driver
+        // returns)
+        let pool = config.memory.clone().or_else(|| inner.cfg.memory.clone());
+        let _admission = pool.as_ref().map(|p| {
+            let tasks = m.min(inner.cfg.map_slots).max(1) as u64;
+            p.admit(&config.name, tasks * ADMISSION_FLOOR_PER_TASK, DEFAULT_ADMIT_WAIT)
+        });
+
         // one mailbox per reduce partition; staged (retractable) pushes
         // exactly when more than one attempt per task can exist — a retry
         // or an injected panic mid-task must not leave half a task's runs
         // committed.  Retained (clone-on-read) mailboxes exactly when a
-        // panicked reduce attempt may re-read its partition.
+        // panicked reduce attempt may re-read its partition.  With a
+        // memory pool the mailboxes account their resident bytes and a
+        // denied push backpressures — or diverts to the job's spill dir
+        // when one is configured (then runs arrive spilled anyway, and
+        // the divert is dormant).
         let staged = spec.is_some() || retries > 0 || dead_letter || faults_active;
         let retain = retries > 0;
         let service: Arc<ShuffleService<(KT, VT)>> = Arc::new(
             ShuffleService::new(m, r, staged, Arc::clone(&counters))
                 .with_retained_runs(retain)
-                .with_trace(jctx.clone()),
+                .with_trace(jctx.clone())
+                .with_memory(pool.as_ref(), spill.clone()),
         );
         if let Some(mspec) = &inner.cfg.metrics {
             // Mailbox-depth probe for the sampler: a Weak reference, so
@@ -936,6 +1003,7 @@ impl JobScheduler {
             let injector = Arc::clone(&injector);
             let dead_letters = Arc::clone(&dead_letters);
             let jctx = jctx.clone();
+            let pool = pool.clone();
             std::thread::Builder::new()
                 .name(format!("snmr-push-{}", config.name))
                 .spawn(move || {
@@ -960,6 +1028,7 @@ impl JobScheduler {
                             let injector = Arc::clone(&injector);
                             let dead_letters = Arc::clone(&dead_letters);
                             let jctx = jctx.clone();
+                            let pool = pool.clone();
                             if let Some(m) = &reduce_wm {
                                 m.on_submit();
                             }
@@ -1016,6 +1085,7 @@ impl JobScheduler {
                                             grouping.as_ref(),
                                             &local,
                                             tctx.as_ref(),
+                                            pool.as_ref(),
                                         );
                                         // the pre-merge folding is reduce work
                                         // too (the waits are not measured)
@@ -1120,6 +1190,7 @@ impl JobScheduler {
             let service = Arc::clone(&service);
             let injector = Arc::clone(&injector);
             let jctx = jctx.clone();
+            let pool = pool.clone();
             move |i: usize, attempt_no: u32, split: Arc<Vec<(KI, VI)>>| {
                 let tctx = jctx.as_ref().map(|j| j.task(TracePhase::Map, i, attempt_no));
                 // fire before opening the attempt: an injected panic here
@@ -1139,6 +1210,7 @@ impl JobScheduler {
                     &local,
                     Some(&attempt),
                     tctx.as_ref(),
+                    pool.as_ref(),
                 );
                 // first finisher wins the task; a loser's pushes are
                 // retracted before reducers could ever fold them

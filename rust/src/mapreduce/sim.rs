@@ -83,6 +83,17 @@ pub struct ClusterSpec {
     /// most-loaded node NIC.  `0` keeps the legacy per-node model so
     /// existing calibrations stay bit-identical.
     pub executor_links: usize,
+    /// Memory-pool byte budget per job, the simulator counterpart of
+    /// [`MemoryPool`](crate::mapreduce::memory::MemoryPool): when the
+    /// job's in-memory working set (its map-output bytes) exceeds this
+    /// budget, the overflow is forced through disk — written once when a
+    /// reservation is denied and read back at reduce — and charged as
+    /// extra spill volume on the materialize row.  Runs that already
+    /// spill everything ([`JobProfile::spill_bytes_written`] > 0) pay
+    /// nothing extra: their intermediates are on disk regardless of the
+    /// pool.  `0` (the default) models an unlimited pool and is strictly
+    /// zero-cost — every breakdown stays bit-identical.
+    pub memory_pool_bytes: u64,
 }
 
 impl ClusterSpec {
@@ -107,6 +118,7 @@ impl ClusterSpec {
             reduce_secs_scale: 1.0,
             shuffle_cpu_scale: 1.0,
             executor_links: 0,
+            memory_pool_bytes: 0,
         }
     }
 
@@ -115,6 +127,14 @@ impl ClusterSpec {
     /// per-node shuffle model.
     pub fn with_executor_links(mut self, n: usize) -> Self {
         self.executor_links = n;
+        self
+    }
+
+    /// Cap the modeled in-memory working set at `bytes` (see
+    /// [`ClusterSpec::memory_pool_bytes`]); `0` restores the unlimited
+    /// (zero-cost) model.
+    pub fn with_memory_pool_bytes(mut self, bytes: u64) -> Self {
+        self.memory_pool_bytes = bytes;
         self
     }
 
@@ -607,7 +627,17 @@ pub fn simulate_job_mode(
     } else {
         profile.map_output_bytes
     };
-    let materialize_s = 2.0 * materialized_bytes as f64 / disk_agg;
+    // A finite memory pool forces the working-set overflow through disk:
+    // denied reservations divert runs that would otherwise stay resident
+    // (one write when denied, one read-back at reduce).  Fully spilled
+    // runs already pay the materialize row for every byte; pool = 0 is
+    // the unlimited model and charges nothing.
+    let pool_overflow_bytes = if spec.memory_pool_bytes > 0 && profile.spill_bytes_written == 0 {
+        profile.map_output_bytes.saturating_sub(spec.memory_pool_bytes)
+    } else {
+        0
+    };
+    let materialize_s = 2.0 * (materialized_bytes + pool_overflow_bytes) as f64 / disk_agg;
     // (de)compression CPU: DEFLATE runs on the same cores as the tasks,
     // parallel across slots, so the wall charge is volume / slots
     let raw_mb = profile.shuffle_bytes_raw as f64 / 1e6;
@@ -1421,5 +1451,41 @@ mod tests {
         };
         assert_eq!(w.drift_frac(), 0.0);
         assert!((w.delta_s() - 0.5).abs() < 1e-12);
+    }
+
+    /// The memory-pool knob: 0 is bit-identical to the legacy model, a
+    /// pool below the working set charges the overflow as extra spill
+    /// volume, and an already-spilled profile pays nothing extra.
+    #[test]
+    fn memory_pool_charges_only_the_overflow() {
+        let profile = JobProfile {
+            map_task_secs: vec![10.0; 8],
+            reduce_task_secs: vec![5.0; 8],
+            shuffle_bytes_per_reducer: vec![1_000_000; 8],
+            map_output_bytes: 8_000_000,
+            ..Default::default()
+        };
+        let base = ClusterSpec::paper_like(8);
+        let unlimited = simulate_job(&profile, &base.clone().with_memory_pool_bytes(0));
+        let plain = simulate_job(&profile, &base);
+        assert_eq!(unlimited, plain, "pool = 0 must be strictly zero-cost");
+
+        // pool at half the working set: 4 MB overflow, 2 disk passes
+        let tight = simulate_job(&profile, &base.clone().with_memory_pool_bytes(4_000_000));
+        let disk_agg = base.disk_bytes_per_s * base.nodes as f64;
+        let expect = 2.0 * 4_000_000.0 / disk_agg;
+        assert!((tight.materialize_s - plain.materialize_s - expect).abs() < 1e-9);
+        assert!(tight.total() > plain.total());
+
+        // a pool above the working set never charges
+        let roomy = simulate_job(&profile, &base.clone().with_memory_pool_bytes(64_000_000));
+        assert_eq!(roomy, plain);
+
+        // a fully spilled profile already pays disk for every byte; the
+        // pool adds nothing on top
+        let spilled = JobProfile { spill_bytes_written: 8_000_000, ..profile };
+        let sp_plain = simulate_job(&spilled, &base);
+        let sp_tight = simulate_job(&spilled, &base.clone().with_memory_pool_bytes(1));
+        assert_eq!(sp_tight, sp_plain);
     }
 }

@@ -123,6 +123,20 @@ where
         self.runs.push(run);
     }
 
+    /// Seal the buffered remainder *now*, before the record budget is
+    /// reached — the memory pool's lever: a denied reservation grow
+    /// seals early so the run can leave through the normal route
+    /// (spill/push) and its bytes return to the pool.  Seal order and
+    /// record order are unchanged, so downstream merges are unaffected.
+    pub fn seal_now(&mut self) {
+        self.seal();
+    }
+
+    /// Records currently buffered unsealed.
+    pub fn buffered_len(&self) -> usize {
+        self.buffer.len()
+    }
+
     /// Runs produced so far, counting the unsealed remainder.
     pub fn run_count(&self) -> usize {
         self.runs.len() + usize::from(!self.buffer.is_empty())
@@ -717,6 +731,21 @@ impl<T> Run<T> {
         match self {
             Run::Mem(v) => v.iter().map(|t| t.size_bytes() as u64).sum(),
             Run::Spilled(f) => f.file_bytes(),
+        }
+    }
+
+    /// Resident bytes this run pins in RAM — the memory pool's
+    /// accounting unit.  In-memory runs cost their [`SizeEstimate`]
+    /// sum; spilled runs cost ~0 (their payload lives on disk and reads
+    /// back through a bounded streaming window), which is exactly why
+    /// diverting a run to disk answers a denied reservation.
+    pub fn pool_bytes(&self) -> u64
+    where
+        T: SizeEstimate,
+    {
+        match self {
+            Run::Mem(v) => v.iter().map(|t| t.size_bytes() as u64).sum(),
+            Run::Spilled(_) => 0,
         }
     }
 

@@ -149,6 +149,12 @@ pub enum TraceEvent {
     /// A reduce task fetched one map source's runs from peer `executor`
     /// over the data plane.
     RunFetched { executor: u64, records: u64 },
+    /// The memory pool denied a `try_grow` of `requested` bytes for
+    /// this task; the consumer responds by sealing/diverting a run.
+    ReservationDenied { requested: u64 },
+    /// A push of `bytes` parked (backpressure) until reducers drained
+    /// mailbox memory back to the pool.
+    BackpressureApplied { bytes: u64 },
 }
 
 impl TraceEvent {
@@ -180,6 +186,8 @@ impl TraceEvent {
             TraceEvent::ExecutorRegistered { .. } => "executor_registered",
             TraceEvent::ExecutorLost { .. } => "executor_lost",
             TraceEvent::RunFetched { .. } => "run_fetched",
+            TraceEvent::ReservationDenied { .. } => "reservation_denied",
+            TraceEvent::BackpressureApplied { .. } => "backpressure_applied",
         }
     }
 }
@@ -270,6 +278,12 @@ impl TraceRecord {
             TraceEvent::RunFetched { executor, records } => {
                 fields.push(("executor", Json::num(*executor as f64)));
                 fields.push(("records", Json::num(*records as f64)));
+            }
+            TraceEvent::ReservationDenied { requested } => {
+                fields.push(("requested", Json::num(*requested as f64)));
+            }
+            TraceEvent::BackpressureApplied { bytes } => {
+                fields.push(("bytes", Json::num(*bytes as f64)));
             }
             _ => {}
         }
@@ -633,6 +647,14 @@ mod tests {
             (
                 TraceEvent::RunFetched { executor: 3, records: 17 },
                 "run_fetched",
+            ),
+            (
+                TraceEvent::ReservationDenied { requested: 64 },
+                "reservation_denied",
+            ),
+            (
+                TraceEvent::BackpressureApplied { bytes: 64 },
+                "backpressure_applied",
             ),
         ];
         for (ev, want) in cases {

@@ -48,6 +48,9 @@
 //! | `staged_bytes`    | estimated bytes of staged (uncommitted) push runs    |
 //! | `spill_dir_bytes` | on-disk bytes under registered spill directories     |
 //! | `dead_letters`    | cumulative dead-lettered tasks                       |
+//! | `pool_reserved_bytes`  | bytes reserved from the shared memory pool      |
+//! | `pool_denied_grows`    | cumulative memory-pool `try_grow` denials       |
+//! | `pool_spill_requests`  | cumulative fair-spill requests / disk diverts   |
 //!
 //! Occupancy (`map_running`/`reduce_running`) reports the pools'
 //! `in_flight()` — queued plus running — so a burst of submissions can
@@ -223,6 +226,20 @@ pub struct PoolOccupancy {
 
 type MailboxProbe = Box<dyn Fn() -> Option<MailboxStats> + Send + Sync>;
 
+/// Memory-pool pressure as reported by a pool probe (see
+/// [`crate::mapreduce::memory::MemoryPool`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolGaugeStats {
+    /// Bytes currently reserved across all consumers.
+    pub reserved_bytes: u64,
+    /// Cumulative `try_grow` denials.
+    pub denied_grows: u64,
+    /// Cumulative fair-spill requests (including disk diverts).
+    pub spill_requests: u64,
+}
+
+type PoolProbe = Box<dyn Fn() -> Option<PoolGaugeStats> + Send + Sync>;
+
 /// One sampled view of the engine, per the module-level schema table.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct EngineSnapshot {
@@ -240,6 +257,9 @@ pub struct EngineSnapshot {
     pub staged_bytes: u64,
     pub spill_dir_bytes: u64,
     pub dead_letters: u64,
+    pub pool_reserved_bytes: u64,
+    pub pool_denied_grows: u64,
+    pub pool_spill_requests: u64,
 }
 
 impl EngineSnapshot {
@@ -261,6 +281,18 @@ impl EngineSnapshot {
             ("staged_bytes", Json::num(self.staged_bytes as f64)),
             ("spill_dir_bytes", Json::num(self.spill_dir_bytes as f64)),
             ("dead_letters", Json::num(self.dead_letters as f64)),
+            (
+                "pool_reserved_bytes",
+                Json::num(self.pool_reserved_bytes as f64),
+            ),
+            (
+                "pool_denied_grows",
+                Json::num(self.pool_denied_grows as f64),
+            ),
+            (
+                "pool_spill_requests",
+                Json::num(self.pool_spill_requests as f64),
+            ),
         ])
     }
 }
@@ -273,6 +305,7 @@ struct MetricsInner {
     seq: AtomicU64,
     epoch: Instant,
     mailbox_probes: Mutex<Vec<MailboxProbe>>,
+    pool_probes: Mutex<Vec<PoolProbe>>,
     spill_dirs: Mutex<Vec<PathBuf>>,
 }
 
@@ -302,6 +335,7 @@ impl MetricsSpec {
                 seq: AtomicU64::new(0),
                 epoch: Instant::now(),
                 mailbox_probes: Mutex::new(Vec::new()),
+                pool_probes: Mutex::new(Vec::new()),
                 spill_dirs: Mutex::new(Vec::new()),
             }),
         }
@@ -339,6 +373,7 @@ impl MetricsSpec {
             seq: AtomicU64::new(arc.seq.load(Ordering::Relaxed)),
             epoch: arc.epoch,
             mailbox_probes: Mutex::new(Vec::new()),
+            pool_probes: Mutex::new(Vec::new()),
             spill_dirs: Mutex::new(arc.spill_dirs.lock().unwrap().clone()),
         })
     }
@@ -397,6 +432,13 @@ impl MetricsSpec {
     /// sample.
     pub(crate) fn register_mailbox_probe(&self, probe: MailboxProbe) {
         self.inner.mailbox_probes.lock().unwrap().push(probe);
+    }
+
+    /// Register a memory-pool probe.  Like mailbox probes, a probe
+    /// returning `None` is pruned at the next sample; multiple pools'
+    /// figures sum (reserved bytes) or accumulate (denials/spills).
+    pub(crate) fn register_pool_probe(&self, probe: PoolProbe) {
+        self.inner.pool_probes.lock().unwrap().push(probe);
     }
 
     /// Register a spill directory whose on-disk bytes each sample sums.
@@ -502,6 +544,18 @@ impl MetricsSpec {
                 None => false,
             });
         }
+        {
+            let mut probes = self.inner.pool_probes.lock().unwrap();
+            probes.retain(|probe| match probe() {
+                Some(stats) => {
+                    snap.pool_reserved_bytes += stats.reserved_bytes;
+                    snap.pool_denied_grows += stats.denied_grows;
+                    snap.pool_spill_requests += stats.spill_requests;
+                    true
+                }
+                None => false,
+            });
+        }
         for dir in self.inner.spill_dirs.lock().unwrap().iter() {
             snap.spill_dir_bytes += dir_bytes(dir);
         }
@@ -575,6 +629,18 @@ impl MetricsSpec {
             s.push_str(&format!(
                 "spill   dir bytes {} (peak {})\n",
                 last.spill_dir_bytes, peak_spill
+            ));
+            let peak_pool = snaps
+                .iter()
+                .map(|x| x.pool_reserved_bytes)
+                .max()
+                .unwrap_or(0);
+            s.push_str(&format!(
+                "memory  pool reserved {} (peak {})  denied grows {}  spill requests {}\n",
+                last.pool_reserved_bytes,
+                peak_pool,
+                last.pool_denied_grows,
+                last.pool_spill_requests
             ));
         }
         let metrics = self.inner.metrics.lock().unwrap();
@@ -886,6 +952,9 @@ mod tests {
             "staged_bytes",
             "spill_dir_bytes",
             "dead_letters",
+            "pool_reserved_bytes",
+            "pool_denied_grows",
+            "pool_spill_requests",
         ] {
             assert!(v.get(field).is_some(), "snapshot JSONL missing {field}");
         }
@@ -916,6 +985,37 @@ mod tests {
             spec.inner.mailbox_probes.lock().unwrap().len(),
             0,
             "dead probe pruned"
+        );
+    }
+
+    #[test]
+    fn pool_probe_feeds_snapshot_and_prunes_when_gone() {
+        let spec = MetricsSpec::new();
+        let alive = Arc::new(AtomicU64::new(1));
+        let alive2 = Arc::clone(&alive);
+        spec.register_pool_probe(Box::new(move || {
+            if alive2.load(Ordering::Relaxed) == 1 {
+                Some(PoolGaugeStats {
+                    reserved_bytes: 4096,
+                    denied_grows: 3,
+                    spill_requests: 2,
+                })
+            } else {
+                None
+            }
+        }));
+        let snap = spec.sample(None);
+        assert_eq!(snap.pool_reserved_bytes, 4096);
+        assert_eq!(snap.pool_denied_grows, 3);
+        assert_eq!(snap.pool_spill_requests, 2);
+        assert!(spec.render_dashboard().contains("memory  pool reserved 4096"));
+        alive.store(0, Ordering::Relaxed);
+        let snap = spec.sample(None);
+        assert_eq!(snap.pool_reserved_bytes, 0);
+        assert_eq!(
+            spec.inner.pool_probes.lock().unwrap().len(),
+            0,
+            "dead pool probe pruned"
         );
     }
 

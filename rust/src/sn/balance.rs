@@ -475,6 +475,7 @@ mod tests {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         };
         let res = crate::sn::repsn::run(&entities, &cfg).unwrap();
         let mut expect = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), w);

@@ -141,7 +141,8 @@ pub fn run_with_options(
             .with_push(cfg.push)
             .with_faults(cfg.faults.clone())
             .with_retries(cfg.max_task_retries)
-            .with_trace(cfg.trace.clone());
+            .with_trace(cfg.trace.clone())
+            .with_memory(cfg.memory.clone());
         // boundary index spreads over the phase-2 reduce tasks
         struct BoundaryPartitioner;
         impl crate::mapreduce::types::Partitioner<SnKey> for BoundaryPartitioner {
@@ -217,6 +218,7 @@ mod tests {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         }
     }
 
@@ -256,6 +258,7 @@ mod tests {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 4);

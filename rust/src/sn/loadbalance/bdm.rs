@@ -295,6 +295,7 @@ pub fn bdm_job(
     faults: Option<crate::mapreduce::fault::FaultPlan>,
     max_task_retries: Option<u32>,
     trace: Option<crate::mapreduce::trace::TraceSpec>,
+    memory: Option<crate::mapreduce::memory::MemoryPool>,
     exec: Exec<'_>,
 ) -> BdmJobResult {
     let m = m.max(1);
@@ -320,7 +321,8 @@ pub fn bdm_job(
         .with_push(push)
         .with_faults(faults)
         .with_retries(max_task_retries)
-        .with_trace(trace);
+        .with_trace(trace)
+        .with_memory(memory);
     let res = exec.run_job_with_combiner(
         &cfg,
         input,

@@ -352,7 +352,8 @@ pub(super) fn run_job(
         .with_push(cfg.push)
         .with_faults(cfg.faults.clone())
         .with_retries(cfg.max_task_retries)
-        .with_trace(cfg.trace.clone());
+        .with_trace(cfg.trace.clone())
+        .with_memory(cfg.memory.clone());
     let mapper: Arc<dyn MapTaskFactory<u32, Arc<Entity>, SnKey, Ranked>> =
         Arc::new(BlockSplitMapFactory {
             w: cfg.window,

@@ -252,6 +252,7 @@ fn run_pipeline(
         cfg.faults.clone(),
         cfg.max_task_retries,
         cfg.trace.clone(),
+        cfg.memory.clone(),
         exec,
     );
     let matrix = Arc::new(analysis.bdm);

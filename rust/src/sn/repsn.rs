@@ -223,7 +223,8 @@ fn job_parts(
         .with_push(cfg.push)
         .with_faults(cfg.faults.clone())
         .with_retries(cfg.max_task_retries)
-        .with_trace(cfg.trace.clone());
+        .with_trace(cfg.trace.clone())
+        .with_memory(cfg.memory.clone());
     let mapper: Arc<dyn MapTaskFactory<(), Arc<Entity>, SnKey, Arc<Entity>>> =
         Arc::new(RepSnMapFactory {
             w: cfg.window,
@@ -365,6 +366,7 @@ mod tests {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         }
     }
 
@@ -406,6 +408,7 @@ mod tests {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let replicated = res.counters.get(counter_names::REPLICATED_ENTITIES);
@@ -443,6 +446,7 @@ mod tests {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 6);

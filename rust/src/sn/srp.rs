@@ -167,7 +167,8 @@ pub(crate) fn run_srp_job(
         .with_push(cfg.push)
         .with_faults(cfg.faults.clone())
         .with_retries(cfg.max_task_retries)
-        .with_trace(cfg.trace.clone());
+        .with_trace(cfg.trace.clone())
+        .with_memory(cfg.memory.clone());
     exec.run_job(
         &job_cfg,
         input,
@@ -262,6 +263,7 @@ mod tests {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         };
         let res = run(&entities, &cfg).unwrap();
         assert_eq!(res.pairs.len(), 12);
@@ -296,6 +298,7 @@ mod tests {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         };
         let res = run(&entities, &cfg).unwrap();
         let mut seq = crate::sn::seq::run_blocking(&entities, &TitlePrefixKey::new(2), 5);

@@ -92,7 +92,8 @@ pub fn run_on(entities: &[Entity], cfg: &SnConfig, exec: Exec<'_>) -> anyhow::Re
         .with_push(cfg.push)
         .with_faults(cfg.faults.clone())
         .with_retries(cfg.max_task_retries)
-        .with_trace(cfg.trace.clone());
+        .with_trace(cfg.trace.clone())
+        .with_memory(cfg.memory.clone());
     let res = exec.run_job(
         &job_cfg,
         input,

@@ -9,6 +9,7 @@ use crate::er::strategy::MatchStrategyConfig;
 use crate::mapreduce::counters::Counters;
 use crate::mapreduce::engine::JobStats;
 use crate::mapreduce::fault::FaultPlan;
+use crate::mapreduce::memory::MemoryPool;
 use crate::mapreduce::sim::JobProfile;
 use crate::mapreduce::trace::TraceSpec;
 use crate::mapreduce::types::SizeEstimate;
@@ -183,6 +184,13 @@ pub struct SnConfig {
     /// distinguished by the `job` field of each record.  `None` (default)
     /// records nothing and allocates nothing.
     pub trace: Option<TraceSpec>,
+    /// Shared memory pool forwarded to every job the variant runs
+    /// ([`crate::mapreduce::JobConfig::memory`]) — all jobs of a variant
+    /// (and all concurrently running variants handed the same pool)
+    /// account map sort buffers, staged shuffle runs, and reduce merge
+    /// windows against one byte budget.  `None` (default) accounts
+    /// nothing and is a strict no-op.
+    pub memory: Option<MemoryPool>,
 }
 
 impl Default for SnConfig {
@@ -201,6 +209,7 @@ impl Default for SnConfig {
             faults: None,
             max_task_retries: None,
             trace: None,
+            memory: None,
         }
     }
 }
@@ -219,6 +228,7 @@ impl std::fmt::Debug for SnConfig {
             .field("faults", &self.faults)
             .field("max_task_retries", &self.max_task_retries)
             .field("trace", &self.trace.is_some())
+            .field("memory", &self.memory.is_some())
             .finish()
     }
 }

@@ -59,6 +59,7 @@ fn fig_cfg(w: usize, m: usize) -> SnConfig {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     }
 }
 

@@ -42,6 +42,7 @@ fn sn_config(entities: &[Entity], w: usize) -> SnConfig {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     }
 }
 

@@ -55,6 +55,7 @@ fn unbalanced_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> 
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     }
 }
 

@@ -65,6 +65,7 @@ fn base_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConf
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     }
 }
 

@@ -1,0 +1,330 @@
+//! Global memory pool equivalence and liveness (PR 10 acceptance).
+//!
+//! A [`MemoryPool`] may move bytes to disk earlier, stall a push, or
+//! overdraft past its budget — but it must never change a byte of
+//! output.  These tests pin that contract across every SN variant and
+//! every execution path (serial barrier reference, 4-slot barrier and
+//! push schedulers, the distributed control plane), in-memory and
+//! disk-backed, plus the concurrency properties the pool exists for:
+//! N jobs sharing one tight budget stay correct, a generous budget is
+//! never denied and bounds the accounted peak, the unlimited pool is a
+//! strict no-op (identical counters, not just identical pairs), and two
+//! jobs that each want half the pool both make progress instead of
+//! deadlocking.  The deterministic "backpressured push unblocks when
+//! the reducer drains" interleaving is unit-tested next to the mailbox
+//! code in `mapreduce::push`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use snmr::data::skew::zipf_skew_block_keys;
+use snmr::er::blockkey::TitlePrefixKey;
+use snmr::er::entity::Entity;
+use snmr::mapreduce::counters::names;
+use snmr::mapreduce::scheduler::{
+    DistConfig, DistScheduler, Exec, JobScheduler, PushMode, SchedulerConfig,
+};
+use snmr::mapreduce::{MemoryPool, TempSpillDir};
+use snmr::sn::balance::pair_balanced_min_size;
+use snmr::sn::loadbalance::BalanceStrategy;
+use snmr::sn::repsn;
+use snmr::sn::types::{SnConfig, SnMode, SnResult, SnSpill};
+use snmr::sn::{jobsn, srp, standard_blocking};
+use snmr::util::prop::Cases;
+use snmr::util::rng::Rng;
+use snmr::{prop_assert, prop_assert_eq};
+
+/// Zipf block-key corpus (same shape as `prop_push`): skewed blocks so
+/// partitions fill unevenly and the pool sees bursty demand.
+fn corpus(rng: &mut Rng, n: usize) -> Vec<Entity> {
+    let mut ids: Vec<u64> = (0..(2 * n) as u64).collect();
+    rng.shuffle(&mut ids);
+    let mut entities: Vec<Entity> = (0..n)
+        .map(|i| {
+            Entity::new(
+                ids[i],
+                &format!("xx parallel sorted neighborhood {i}"),
+                &"entity resolution with mapreduce ".repeat(2),
+            )
+        })
+        .collect();
+    zipf_skew_block_keys(&mut entities, rng.range(8, 40), 1.3, rng.next_u64());
+    entities
+}
+
+fn base_config(rng: &mut Rng, entities: &[Entity], w: usize, r: usize) -> SnConfig {
+    let bk = TitlePrefixKey::new(2);
+    let partitioner = pair_balanced_min_size(entities, &bk, r, w);
+    SnConfig {
+        window: w,
+        num_map_tasks: rng.range(2, 7),
+        workers: rng.range(1, 4),
+        partitioner: Arc::new(partitioner),
+        blocking_key: Arc::new(TitlePrefixKey::new(2)),
+        mode: SnMode::Blocking,
+        sort_buffer_records: Some(rng.range(8, 64)),
+        balance: BalanceStrategy::None,
+        spill: None,
+        push: false,
+        faults: None,
+        max_task_retries: None,
+        trace: None,
+        memory: None,
+    }
+}
+
+type VariantFn = fn(&[Entity], &SnConfig, Exec<'_>) -> anyhow::Result<SnResult>;
+
+/// Every SN variant behind one `(entities, cfg, exec)` signature; the
+/// balanced strategies ride on `repsn::run_on`, which dispatches to the
+/// BDM two-job pipeline when `cfg.balance` is set.
+fn variants() -> Vec<(&'static str, VariantFn, BalanceStrategy)> {
+    vec![
+        ("standard_blocking", standard_blocking::run_on, BalanceStrategy::None),
+        ("srp", srp::run_on, BalanceStrategy::None),
+        ("jobsn", jobsn::run_on, BalanceStrategy::None),
+        ("repsn", repsn::run_on, BalanceStrategy::None),
+        ("blocksplit", repsn::run_on, BalanceStrategy::BlockSplit),
+        ("pairrange", repsn::run_on, BalanceStrategy::PairRange),
+    ]
+}
+
+/// A pool an eighth of the variant's measured map-output volume may
+/// deny, stall, and force early seals on every path — in memory and
+/// disk-backed, barrier and push and distributed — without changing a
+/// single pair, and must end every run fully released.
+#[test]
+fn prop_tight_pool_output_identical_across_variants_and_paths() {
+    Cases::new("tight pool never changes bytes, every SN variant", 3).run(|rng| {
+        let n = rng.range(100, 220);
+        let w = rng.range(2, 6);
+        let entities = corpus(rng, n);
+        let base = base_config(rng, &entities, w, rng.range(4, 8));
+        let barrier_sched = JobScheduler::with_slots(4);
+        let push_sched = JobScheduler::new(SchedulerConfig::slots(4).with_push(PushMode::Push));
+        let dist = DistScheduler::new(DistConfig::executors(2));
+        for (name, run, strategy) in variants() {
+            let cfg = SnConfig {
+                balance: strategy,
+                ..base.clone()
+            };
+            let baseline = run(&entities, &cfg, Exec::Serial).map_err(|e| e.to_string())?;
+            let tight = (baseline.counters.get(names::MAP_OUTPUT_BYTES) / 8).max(4096);
+            let pool = MemoryPool::new(tight);
+            let pooled_cfg = SnConfig {
+                memory: Some(pool.clone()),
+                ..cfg.clone()
+            };
+            let dir = TempSpillDir::new(&format!("pool-{name}")).map_err(|e| e.to_string())?;
+            let disk_cfg = SnConfig {
+                spill: Some(SnSpill::new(dir.path())),
+                ..pooled_cfg.clone()
+            };
+            let runs = [
+                ("serial/mem", run(&entities, &pooled_cfg, Exec::Serial)),
+                ("barrier/mem", run(&entities, &pooled_cfg, Exec::Scheduler(&barrier_sched))),
+                ("push/mem", run(&entities, &pooled_cfg, Exec::Scheduler(&push_sched))),
+                ("push/disk", run(&entities, &disk_cfg, Exec::Scheduler(&push_sched))),
+                ("dist/mem", run(&entities, &pooled_cfg, Exec::Dist(&dist))),
+                ("dist/disk", run(&entities, &disk_cfg, Exec::Dist(&dist))),
+            ];
+            for (path, res) in runs {
+                let res = res.map_err(|e| e.to_string())?;
+                prop_assert!(
+                    res.pairs == baseline.pairs,
+                    "{name} [{path}]: pooled output diverged from the unpooled serial run"
+                );
+                prop_assert!(
+                    res.counters.get(names::TASKS_FAILED) == 0,
+                    "{name} [{path}]: a task failed under the pool"
+                );
+            }
+            prop_assert!(
+                pool.reserved_bytes() == 0,
+                "{name}: {} bytes still reserved after every run finished",
+                pool.reserved_bytes()
+            );
+            prop_assert!(pool.peak_bytes() > 0, "{name}: the pool never accounted a byte");
+            // a denial must always have been answered with relief —
+            // an early seal, a parked pusher, or a truthful overdraft
+            if pool.denied_grows() > 0 {
+                prop_assert!(
+                    pool.spill_requests() + pool.backpressure_waits() + pool.overdrafts() > 0,
+                    "{name}: grows were denied with no spill request, wait, or overdraft"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Four jobs racing on one push scheduler under one tight shared pool:
+/// every output matches its own serial baseline, and the pool drains to
+/// zero when the last job completes.
+#[test]
+fn four_concurrent_jobs_under_one_tight_pool_match_serial() {
+    let mut rng = Rng::new(0x4C04C2);
+    let jobs: Vec<(Vec<Entity>, SnConfig, SnResult)> = (0..4)
+        .map(|i| {
+            let entities = corpus(&mut rng, 150 + 25 * i);
+            let cfg = base_config(&mut rng, &entities, 4, 6);
+            let serial = repsn::run(&entities, &cfg).unwrap();
+            (entities, cfg, serial)
+        })
+        .collect();
+    let total_bytes: u64 = jobs
+        .iter()
+        .map(|(_, _, s)| s.counters.get(names::MAP_OUTPUT_BYTES))
+        .sum();
+    let pool = MemoryPool::new((total_bytes / 8).max(4096));
+    let sched = JobScheduler::new(SchedulerConfig::slots(4).with_push(PushMode::Push));
+    let pooled: Vec<SnConfig> = jobs
+        .iter()
+        .map(|(_, cfg, _)| SnConfig {
+            memory: Some(pool.clone()),
+            ..cfg.clone()
+        })
+        .collect();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = jobs
+            .iter()
+            .zip(&pooled)
+            .map(|((entities, _, serial), cfg)| {
+                let sched = &sched;
+                scope.spawn(move || {
+                    let res = repsn::run_on(entities, cfg, Exec::Scheduler(sched)).unwrap();
+                    assert_eq!(res.pairs, serial.pairs, "concurrent pooled job diverged");
+                    assert_eq!(res.counters.get(names::TASKS_FAILED), 0);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    assert_eq!(pool.reserved_bytes(), 0, "pool did not drain after all jobs finished");
+    assert!(pool.peak_bytes() > 0);
+    if pool.denied_grows() > 0 {
+        assert!(
+            pool.spill_requests() + pool.backpressure_waits() + pool.overdrafts() > 0,
+            "denied grows produced no relief"
+        );
+    }
+}
+
+/// A budget comfortably above the working set is never denied, never
+/// overdrafts, and bounds the accounted peak — the "accounted peak <=
+/// pool bytes" half of the acceptance criterion (a *tight* pool instead
+/// relieves pressure through seals/backpressure and, as a last resort,
+/// truthfully records an overdraft rather than under-reporting).
+#[test]
+fn generous_budget_is_never_denied_and_bounds_the_peak() {
+    let mut rng = Rng::new(0x6E9E05);
+    let entities = corpus(&mut rng, 200);
+    let cfg = base_config(&mut rng, &entities, 4, 6);
+    let serial = repsn::run(&entities, &cfg).unwrap();
+    let pool = MemoryPool::new(64 << 20);
+    let pooled = SnConfig {
+        memory: Some(pool.clone()),
+        ..cfg.clone()
+    };
+    let sched = JobScheduler::new(SchedulerConfig::slots(4).with_push(PushMode::Push));
+    let res = repsn::run_on(&entities, &pooled, Exec::Scheduler(&sched)).unwrap();
+    assert_eq!(res.pairs, serial.pairs);
+    assert_eq!(pool.denied_grows(), 0, "a generous budget must never deny");
+    assert_eq!(pool.overdrafts(), 0);
+    assert!(pool.peak_bytes() > 0);
+    assert!(
+        pool.peak_bytes() <= pool.budget_bytes(),
+        "accounted peak {} exceeded the {} budget without a recorded denial",
+        pool.peak_bytes(),
+        pool.budget_bytes()
+    );
+    assert_eq!(pool.reserved_bytes(), 0);
+}
+
+/// The unlimited pool is a strict no-op — byte-identical output AND a
+/// byte-identical counter snapshot — and a pool that is never attached
+/// to a job sees no accounting at all.
+#[test]
+fn unlimited_pool_is_a_strict_noop_and_off_means_no_accounting() {
+    let mut rng = Rng::new(0x0FF5E7);
+    let entities = corpus(&mut rng, 180);
+    let cfg = base_config(&mut rng, &entities, 3, 5);
+    let off = repsn::run(&entities, &cfg).unwrap();
+    let pool = MemoryPool::unlimited();
+    let on_cfg = SnConfig {
+        memory: Some(pool.clone()),
+        ..cfg.clone()
+    };
+    let on = repsn::run(&entities, &on_cfg).unwrap();
+    assert_eq!(on.pairs, off.pairs);
+    assert_eq!(
+        on.counters.snapshot(),
+        off.counters.snapshot(),
+        "an unlimited pool must not move a single counter"
+    );
+    assert_eq!(pool.denied_grows(), 0);
+    assert!(pool.peak_bytes() > 0, "the unlimited pool still accounts");
+    assert_eq!(pool.reserved_bytes(), 0);
+    assert_eq!(
+        pool.consumer_count(),
+        0,
+        "every consumer must unregister when its job completes"
+    );
+    // pool-off: a pool nobody passes to a job spawns no accounting
+    let idle = MemoryPool::new(1);
+    let again = repsn::run(&entities, &cfg).unwrap();
+    assert_eq!(again.pairs, off.pairs);
+    assert_eq!(idle.peak_bytes(), 0);
+    assert_eq!(idle.denied_grows(), 0);
+    assert_eq!(idle.consumer_count(), 0);
+}
+
+/// Deadlock regression: two disk-backed push jobs sized so that each
+/// can hold roughly half the pool and still want more.  Progress must
+/// come from fair spill requests, early seals, and bounded-wait
+/// overdrafts — never from one job waiting forever on bytes the other
+/// will only release when *it* finishes.  A watchdog converts a wedge
+/// into a test failure instead of a CI timeout.
+#[test]
+fn two_jobs_each_holding_half_the_pool_both_progress() {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        let mut rng = Rng::new(0xDEAD10);
+        let e1 = corpus(&mut rng, 180);
+        let e2 = corpus(&mut rng, 180);
+        let c1 = base_config(&mut rng, &e1, 4, 6);
+        let c2 = base_config(&mut rng, &e2, 4, 6);
+        let s1 = repsn::run(&e1, &c1).unwrap();
+        let s2 = repsn::run(&e2, &c2).unwrap();
+        let ws = s1.counters.get(names::MAP_OUTPUT_BYTES)
+            + s2.counters.get(names::MAP_OUTPUT_BYTES);
+        let pool = MemoryPool::new((ws / 2).max(4096));
+        let sched = JobScheduler::new(SchedulerConfig::slots(4).with_push(PushMode::Push));
+        let dir1 = TempSpillDir::new("pool-deadlock-1").unwrap();
+        let dir2 = TempSpillDir::new("pool-deadlock-2").unwrap();
+        let cfg1 = SnConfig {
+            memory: Some(pool.clone()),
+            spill: Some(SnSpill::new(dir1.path())),
+            ..c1.clone()
+        };
+        let cfg2 = SnConfig {
+            memory: Some(pool.clone()),
+            spill: Some(SnSpill::new(dir2.path())),
+            ..c2.clone()
+        };
+        std::thread::scope(|sc| {
+            let a = sc.spawn(|| repsn::run_on(&e1, &cfg1, Exec::Scheduler(&sched)).unwrap());
+            let b = sc.spawn(|| repsn::run_on(&e2, &cfg2, Exec::Scheduler(&sched)).unwrap());
+            let (ra, rb) = (a.join().unwrap(), b.join().unwrap());
+            assert_eq!(ra.pairs, s1.pairs);
+            assert_eq!(rb.pairs, s2.pairs);
+        });
+        assert_eq!(pool.reserved_bytes(), 0);
+        tx.send(()).unwrap();
+    });
+    rx.recv_timeout(Duration::from_secs(120))
+        .expect("deadlock: the two pooled jobs did not both complete");
+    worker.join().unwrap();
+}

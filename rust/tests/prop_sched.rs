@@ -52,6 +52,7 @@ fn random_config(rng: &mut Rng, entities: &[Entity]) -> SnConfig {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     }
 }
 

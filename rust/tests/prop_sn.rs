@@ -52,6 +52,7 @@ fn config(
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     }
 }
 

@@ -158,6 +158,7 @@ fn end_to_end_repsn_with_xla_matcher_matches_native_decisions() {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
     let res_native = snmr::sn::repsn::run(
         &corpus.entities,

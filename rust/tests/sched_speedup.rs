@@ -56,6 +56,7 @@ fn multipass_concurrency_speedup_over_serial() {
         faults: None,
         max_task_retries: None,
         trace: None,
+        memory: None,
     };
     let keys: Vec<Arc<dyn BlockingKey>> = vec![
         Arc::new(TitlePrefixKey::new(1)),

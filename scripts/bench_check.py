@@ -35,6 +35,7 @@ from __future__ import annotations
 import argparse
 import copy
 import json
+import math
 import os
 import sys
 
@@ -57,6 +58,10 @@ GATES = {
         # given the measured profile, <= 1 asserted in-bench, and must not
         # drift up (losing shuffle parallelism) beyond tolerance
         ("dist_scaleout.makespan_ratio", "lower", TOLERANCE),
+        # tightest-pool simulated degradation ratio: deterministic given
+        # the measured profile; a blow-up means the pool model started
+        # charging far more spill traffic for the same working set
+        ("memory_pool.makespan_vs_pool[-1].ratio_vs_unlimited", "lower", TOLERANCE),
         # same-machine ratio, but still timing-derived: wider band
         ("shuffle_reduce[workers=8].speedup", "higher", 0.5),
     ],
@@ -78,6 +83,15 @@ INVARIANTS = {
         # every real 1/2/4-executor control-plane run reproduced the
         # in-process barrier bytes
         "dist_scaleout.identical_output",
+        # the real push run under a pool an eighth of the map-output
+        # volume still reproduced the barrier bytes
+        "memory_pool.identical_output",
+        # simulated makespan only grows as the pool shrinks
+        "memory_pool.monotone_degradation",
+        "memory_pool.complete",
+        # the skew-ladder fit beat the default spec on the ladder sum
+        "calibration_ladder.improved",
+        "calibration_ladder.complete",
     ],
     "BENCH_skew.json": [
         "multipass_measured[mode=scheduler].identical_output",
@@ -98,6 +112,34 @@ WITHIN_RUN = {
         # default spec on mean |per-wave drift| (also asserted strictly
         # in-bench; this gate catches a silently dropped assertion)
         ("sim_drift.calibrated.mean_abs_delta_s", "sim_drift.default.mean_abs_delta_s"),
+        # the pooled skew-ladder fit must not lose to the default spec on
+        # the ladder-summed mean |drift| (also asserted in-bench)
+        (
+            "calibration_ladder.ladder_mean_abs_delta_calibrated_s",
+            "calibration_ladder.ladder_mean_abs_delta_default_s",
+        ),
+    ],
+}
+
+# Array sections that must be present, non-empty, and numerically sane
+# (every listed field present and finite in every entry) in the current
+# run — the shape guarantee behind the gated/indexed metrics above.
+ARRAY_SECTIONS = {
+    "BENCH_engine.json": [
+        (
+            "memory_pool.makespan_vs_pool",
+            ["pool_bytes", "sim_total_s", "ratio_vs_unlimited"],
+        ),
+        (
+            "calibration_ladder.rungs",
+            [
+                "map_secs_scale",
+                "reduce_secs_scale",
+                "shuffle_cpu_scale",
+                "mean_abs_delta_default_s",
+                "mean_abs_delta_ladder_fit_s",
+            ],
+        ),
     ],
 }
 
@@ -105,17 +147,24 @@ BASELINE_DIR = "BENCH_baseline"
 
 
 def lookup(doc, path):
-    """Resolve `a.b[k=v].c` against nested dicts/lists; None if absent."""
+    """Resolve `a.b[k=v].c` (key match) or `a.b[i].c` (integer index,
+    negatives allowed) against nested dicts/lists; None if absent."""
     cur = doc
     for part in path.split("."):
         if cur is None:
             return None
         if "[" in part:
             name, selector = part[:-1].split("[", 1)
-            key, _, want = selector.partition("=")
             cur = cur.get(name) if isinstance(cur, dict) else None
             if not isinstance(cur, list):
                 return None
+            if "=" not in selector:
+                try:
+                    cur = cur[int(selector)]
+                except (IndexError, ValueError):
+                    return None
+                continue
+            key, _, want = selector.partition("=")
             match = None
             for item in cur:
                 if isinstance(item, dict) and str(item.get(key)) == want:
@@ -143,6 +192,26 @@ def check_file(name, current, baseline):
             failures.append(f"{name}: invariant {path} missing from current run")
         elif val is not True:
             failures.append(f"{name}: invariant {path} is {val!r}, expected true")
+    for path, fields in ARRAY_SECTIONS.get(name, []):
+        arr = lookup(current, path)
+        if not isinstance(arr, list) or not arr:
+            failures.append(f"{name}: section {path} missing or empty")
+            continue
+        bad_entries = 0
+        for i, entry in enumerate(arr):
+            for field in fields:
+                val = entry.get(field) if isinstance(entry, dict) else None
+                try:
+                    ok = val is not None and math.isfinite(float(val))
+                except (TypeError, ValueError):
+                    ok = False
+                if not ok:
+                    failures.append(
+                        f"{name}: {path}[{i}].{field} missing or non-finite"
+                    )
+                    bad_entries += 1
+        if not bad_entries:
+            print(f"{'ok':>10}  {name}: section {path} ({len(arr)} entries, all finite)")
     for lhs, rhs in WITHIN_RUN.get(name, []):
         a, b = lookup(current, lhs), lookup(current, rhs)
         if a is None or b is None:
@@ -264,6 +333,50 @@ SELFTEST_SAMPLES = {
                 {"executors": 4.0, "wall_s": 0.1, "remote_fetches": 48.0, "local_fetches": 16.0},
             ],
         },
+        "calibration_ladder": {
+            "complete": True,
+            "rungs": [
+                {
+                    "rung": "uniform",
+                    "map_output_bytes": 1_000_000.0,
+                    "map_secs_scale": 1.2,
+                    "reduce_secs_scale": 1.1,
+                    "shuffle_cpu_scale": 0.01,
+                    "mean_abs_delta_default_s": 0.02,
+                    "mean_abs_delta_ladder_fit_s": 0.002,
+                },
+                {
+                    "rung": "hot60",
+                    "map_output_bytes": 1_000_000.0,
+                    "map_secs_scale": 1.3,
+                    "reduce_secs_scale": 1.2,
+                    "shuffle_cpu_scale": 0.012,
+                    "mean_abs_delta_default_s": 0.03,
+                    "mean_abs_delta_ladder_fit_s": 0.004,
+                },
+            ],
+            "pooled_map_secs_scale": 1.25,
+            "pooled_reduce_secs_scale": 1.15,
+            "pooled_shuffle_cpu_scale": 0.011,
+            "ladder_mean_abs_delta_default_s": 0.05,
+            "ladder_mean_abs_delta_calibrated_s": 0.006,
+            "improved": True,
+        },
+        "memory_pool": {
+            "complete": True,
+            "pool_bytes_real_run": 125_000.0,
+            "identical_output": True,
+            "pool_denied_grows": 12.0,
+            "pool_spill_requests": 0.0,
+            "pool_backpressure_waits": 3.0,
+            "peak_reserved_bytes": 140_000.0,
+            "monotone_degradation": True,
+            "makespan_vs_pool": [
+                {"pool_bytes": 0.0, "sim_total_s": 40.0, "ratio_vs_unlimited": 1.0},
+                {"pool_bytes": 1_000_000.0, "sim_total_s": 40.0, "ratio_vs_unlimited": 1.0},
+                {"pool_bytes": 125_000.0, "sim_total_s": 52.0, "ratio_vs_unlimited": 1.3},
+            ],
+        },
         "sim_drift": {
             "complete": True,
             "mode": "two_wave",
@@ -357,6 +470,14 @@ def selftest():
             lookup(broken, parent_path)[leaf] = False
             if not check_file(name, broken, copy.deepcopy(sample)):
                 print(f"SELFTEST FAIL: {name} missed broken invariant {path}")
+                bad += 1
+        # an emptied array section must be flagged
+        for path, _fields in ARRAY_SECTIONS.get(name, []):
+            broken = copy.deepcopy(sample)
+            parent_path, _, leaf = path.rpartition(".")
+            lookup(broken, parent_path)[leaf] = []
+            if not any(path in f for f in check_file(name, broken, copy.deepcopy(sample))):
+                print(f"SELFTEST FAIL: {name} missed emptied section {path}")
                 bad += 1
         # a violated within-run ordering must be flagged
         for lhs, rhs in WITHIN_RUN.get(name, []):

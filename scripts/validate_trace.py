@@ -69,6 +69,8 @@ KINDS = {
     "executor_registered",
     "executor_lost",
     "run_fetched",
+    "reservation_denied",
+    "backpressure_applied",
 }
 
 CORE_FIELDS = {"seq", "job", "phase", "task", "attempt", "at_secs", "event"}
@@ -87,6 +89,8 @@ PAYLOAD = {
     "executor_registered": {"executor"},
     "executor_lost": {"executor"},
     "run_fetched": {"executor", "records"},
+    "reservation_denied": {"requested"},
+    "backpressure_applied": {"bytes"},
 }
 
 # Job-scoped events (phase=job, task=null).  The executor lifecycle
@@ -120,6 +124,9 @@ SNAPSHOT_FIELDS = {
     "staged_bytes",
     "spill_dir_bytes",
     "dead_letters",
+    "pool_reserved_bytes",
+    "pool_denied_grows",
+    "pool_spill_requests",
 }
 
 
@@ -331,7 +338,9 @@ GOOD_SAMPLE = "\n".join(
         '{"seq": 6, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.0035, "event": "executor_lost", "executor": 1}',
         '{"seq": 7, "job": "j", "phase": "reduce", "task": 0, "attempt": 0, "at_secs": 0.0038, "event": "run_fetched", "executor": 0, "records": 25}',
         '{"seq": 8, "job": "j", "phase": "reduce", "task": 0, "attempt": 0, "at_secs": 0.004, "event": "fault_injected", "kind": "panic"}',
-        '{"seq": 9, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.01, "event": "job_finished"}',
+        '{"seq": 9, "job": "j", "phase": "map", "task": 1, "attempt": 0, "at_secs": 0.005, "event": "reservation_denied", "requested": 4096}',
+        '{"seq": 10, "job": "j", "phase": "map", "task": 1, "attempt": 0, "at_secs": 0.006, "event": "backpressure_applied", "bytes": 4096}',
+        '{"seq": 11, "job": "j", "phase": "job", "task": null, "attempt": 0, "at_secs": 0.01, "event": "job_finished"}',
     ]
 )
 
@@ -366,6 +375,9 @@ def _snapshot_line(seq, at_secs, running):
             "staged_bytes": 4096,
             "spill_dir_bytes": 0,
             "dead_letters": 0,
+            "pool_reserved_bytes": 8192,
+            "pool_denied_grows": 1,
+            "pool_spill_requests": 1,
         }
     )
 
@@ -400,6 +412,8 @@ def selftest():
         ),
         # run_fetched payload missing its record count
         GOOD_SAMPLE.replace(', "records": 25', ""),
+        # reservation_denied payload missing the requested byte count
+        GOOD_SAMPLE.replace(', "requested": 4096', ""),
         # executor lifecycle event carrying a task id
         GOOD_SAMPLE.replace(
             '"task": null, "attempt": 0, "at_secs": 0.0035',
